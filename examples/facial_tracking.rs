@@ -1,0 +1,93 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): facial-marker tracking on a
+//! synthetic high-speed clip, through the full three-layer stack.
+//!
+//! Mirrors the paper's application (Ross et al. facial-action HSDV): a
+//! 256×256 clip at 600 fps with 4 bright markers moving on smooth
+//! trajectories. The coordinator cuts it into the planner's 32×32×8 boxes,
+//! executes the FUSED pipeline artifact per box on PJRT workers,
+//! reassembles binarized frames, and Kalman-tracks every marker. Repeats
+//! with the no-fusion arm for the speedup, and reports tracking RMSE
+//! against the synthetic ground truth.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example facial_tracking
+//! ```
+
+use kfuse::config::{FusionMode, RunConfig};
+use kfuse::coordinator::run_batch_synth;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::Result;
+
+fn main() -> Result<()> {
+    let base = RunConfig {
+        frame_size: 256,
+        frames: 96, // 12 temporal boxes of t=8 at 600 fps = 160 ms of video
+        fps: 600.0,
+        box_dims: BoxDims::new(32, 32, 8),
+        workers: 1,
+        markers: 4,
+        ..RunConfig::default()
+    };
+    println!(
+        "clip: {0}x{0}, {1} frames @ {2} fps, {3} markers",
+        base.frame_size, base.frames, base.fps, base.markers
+    );
+
+    // Warm every arm first (PJRT compilation), then interleave the
+    // measured rounds so host noise and XLA-pool drift hit all arms
+    // equally; keep each arm's best round.
+    let modes = [FusionMode::Full, FusionMode::Two, FusionMode::None];
+    for mode in modes {
+        let cfg = RunConfig { mode, ..base.clone() };
+        let _ = run_batch_synth(&cfg, 4242)?;
+    }
+    let mut best: Vec<Option<kfuse::coordinator::RunReport>> =
+        modes.iter().map(|_| None).collect();
+    for _round in 0..2 {
+        for (i, mode) in modes.iter().enumerate() {
+            let cfg = RunConfig { mode: *mode, ..base.clone() };
+            let rep = run_batch_synth(&cfg, 4242)?;
+            if best[i]
+                .as_ref()
+                .map_or(true, |b| rep.metrics.fps > b.metrics.fps)
+            {
+                best[i] = Some(rep);
+            }
+        }
+    }
+    let mut results = Vec::new();
+    for (mode, rep) in modes.iter().zip(best) {
+        let rep = rep.unwrap();
+        println!("\n== {} ==", mode.name());
+        println!("{}", rep.metrics);
+        println!(
+            "tracks: {}/{} | RMSE px: {:?}",
+            rep.tracks,
+            base.markers,
+            rep.rmse
+                .iter()
+                .map(|r| (r * 100.0).round() / 100.0)
+                .collect::<Vec<_>>()
+        );
+        results.push((mode.name(), rep.metrics.fps, rep.rmse.clone(), rep.tracks));
+    }
+
+    println!("\n== summary ==");
+    for (name, f, _, _) in &results {
+        println!("{name:>12}: {f:>8.1} frames/s");
+    }
+    let speedup = results[0].1 / results[2].1;
+    println!(
+        "\nfull-fusion vs no-fusion speedup: {speedup:.2}x (paper claims 2-3x)"
+    );
+    let worst_rmse = results
+        .iter()
+        .flat_map(|(_, _, r, _)| r.iter().copied())
+        .fold(0.0f64, f64::max);
+    println!("worst tracking RMSE across arms: {worst_rmse:.2} px");
+    assert!(
+        results.iter().all(|(_, _, _, t)| *t == base.markers),
+        "lost a marker track"
+    );
+    Ok(())
+}

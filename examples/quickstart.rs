@@ -1,0 +1,62 @@
+//! Quickstart: plan the paper's pipeline, load the AOT artifacts, run the
+//! fused megakernel on one synthetic batch, and print what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::paper_pipeline;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::prop::Gen;
+use kfuse::runtime::Runtime;
+use kfuse::Result;
+
+fn main() -> Result<()> {
+    // 1. PLAN — the paper's optimization model picks the partition.
+    let dev = DeviceSpec::k20();
+    let input = InputDims::new(256, 256, 1000);
+    let plan = kfuse::fusion::plan(&paper_pipeline(), input, &dev)?;
+    println!("planner on {}:", dev.name);
+    for f in &plan.fused {
+        println!(
+            "  {} (halo dx={} dy={} dt={})",
+            f.name(),
+            f.halo.dx,
+            f.halo.dy,
+            f.halo.dt
+        );
+    }
+    let bx: BoxDims = plan.box_dims;
+    println!(
+        "  box {}x{}x{} | predicted {:.2} ms for 1000 frames\n",
+        bx.x, bx.y, bx.t, plan.predicted_seconds * 1e3
+    );
+
+    // 2. RUN — execute the fused artifact the plan corresponds to.
+    let rt = Runtime::from_dir("artifacts")?;
+    let mut g = Gen::new(2024);
+    let x = g.vec_f32((bx.t + 1) * (bx.x + 4) * (bx.y + 4) * 4, 0.0, 255.0);
+    let th = [96.0f32];
+    let name = format!("full_s{}_t{}", bx.x, bx.t);
+    let out = rt.run(&name, &[&x, &th])?;
+    let on = out.iter().filter(|&&v| v == 255.0).count();
+    println!(
+        "ran {name}: {} -> {} values, {} edge pixels ({:.1}%)",
+        x.len(),
+        out.len(),
+        on,
+        100.0 * on as f64 / out.len() as f64
+    );
+
+    // 3. VERIFY — the no-fusion chain computes the same thing.
+    let g1 = rt.run(&format!("k1_s{}_t{}", bx.x, bx.t), &[&x])?;
+    let g2 = rt.run(&format!("k2_s{}_t{}", bx.x, bx.t), &[&g1])?;
+    let g3 = rt.run(&format!("k3_s{}_t{}", bx.x, bx.t), &[&g2])?;
+    let g4 = rt.run(&format!("k4_s{}_t{}", bx.x, bx.t), &[&g3])?;
+    let chain = rt.run(&format!("k5_s{}_t{}", bx.x, bx.t), &[&g4, &th])?;
+    assert_eq!(chain, out, "fusion changed the numbers!");
+    println!("verified: 5-dispatch no-fusion chain == 1-dispatch fused kernel");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+`xla` 0.1.6 Rust crate links) rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts are emitted for every (spatial, temporal) box configuration the
+benches sweep (Fig 9/11/14) plus the tracking graphs. A TSV manifest maps
+artifact name -> input/output specs; the Rust `runtime::artifact` registry
+parses it.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: (spatial output size S, temporal output size T) box configs to emit.
+#: S x S output boxes with the +4/+1 halo on input; T=1 mirrors the paper's
+#: simple-kernel runs, T=8/16 the fused runs (t chosen by eq 6 at runtime).
+BOX_CONFIGS = [
+    (16, 1), (16, 8),
+    (32, 1), (32, 8), (32, 16),
+    (64, 1), (64, 8),
+]
+
+#: Whole-frame quickstart artifact: 256x256 frames, T=8 temporal box.
+FRAME_CONFIGS = [(256, 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    `print_large_constants=True` is required: the default printer elides
+    big array constants as `{...}`, which the XLA text *parser* silently
+    reads back as zeros (discovered via the Kalman F/H/Q/R matrices).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def spec(*dims, dtype="f32"):
+    """ShapeDtypeStruct shorthand."""
+    dt = {"f32": jnp.float32}[dtype]
+    return jax.ShapeDtypeStruct(tuple(dims), dt)
+
+
+def fmt_spec(s) -> str:
+    """`(9, 36, 36, 4) f32` -> `9x36x36x4:f32` manifest notation."""
+    name = {np.dtype(np.float32): "f32"}[np.dtype(s.dtype)]
+    return "x".join(str(d) for d in s.shape) + ":" + name
+
+
+def graphs_for_box(s: int, t: int):
+    """All per-box graphs at output box (t, s, s). Returns (name, fn, args)."""
+    hs, ht = s + 4, t + 1  # halo'd input extents for the full chain
+    th = spec(1)
+    out = []
+    # Simple kernels, chain shapes (see model.py docstring).
+    out.append((f"k1_s{s}_t{t}", model.k1_rgb2gray, [spec(ht, hs, hs, 4)]))
+    out.append((f"k2_s{s}_t{t}", model.k2_iir, [spec(ht, hs, hs)]))
+    out.append((f"k3_s{s}_t{t}", model.k3_gaussian, [spec(t, hs, hs)]))
+    out.append((f"k4_s{s}_t{t}", model.k4_gradient, [spec(t, s + 2, s + 2)]))
+    out.append((f"k5_s{s}_t{t}", model.k5_threshold, [spec(t, s, s), th]))
+    # Fusion arms.
+    out.append((f"full_s{s}_t{t}", model.full_fusion,
+                [spec(ht, hs, hs, 4), th]))
+    out.append((f"two_a_s{s}_t{t}", model.two_fusion_a, [spec(ht, hs, hs, 4)]))
+    out.append((f"two_b_s{s}_t{t}", model.two_fusion_b, [spec(t, hs, hs), th]))
+    # Whole-graph no-fusion (XLA-level ablation).
+    out.append((f"nofused_s{s}_t{t}", model.no_fusion,
+                [spec(ht, hs, hs, 4), th]))
+    # Detection reduction on the binarized output box.
+    out.append((f"detect_s{s}_t{t}", model.detect, [spec(t, s, s)]))
+    return out
+
+
+def all_graphs():
+    """Every artifact to emit: (name, fn, example_args)."""
+    out = []
+    for s, t in BOX_CONFIGS:
+        out.extend(graphs_for_box(s, t))
+    for s, t in FRAME_CONFIGS:
+        th = spec(1)
+        out.append((f"frame_full_s{s}_t{t}", model.full_fusion,
+                    [spec(t + 1, s + 4, s + 4, 4), th]))
+        out.append((f"frame_detect_s{s}_t{t}", model.detect, [spec(t, s, s)]))
+    out.append(("kalman_step", model.kalman_step,
+                [spec(4), spec(4, 4), spec(2)]))
+    return out
+
+
+def emit(name, fn, args, out_dir):
+    """Lower one graph, write <name>.hlo.txt, return its manifest line."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_specs = lowered.out_info
+    # out_info is a pytree of ShapeDtypeStructs; flatten it.
+    flat, _ = jax.tree.flatten(out_specs)
+    ins = ";".join(fmt_spec(a) for a in args)
+    outs = ";".join(fmt_spec(o) for o in flat)
+    return f"{name}\t{name}.hlo.txt\t{ins}\t{outs}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes to emit")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    graphs = all_graphs()
+    if args.only:
+        pfx = tuple(args.only.split(","))
+        graphs = [g for g in graphs if g[0].startswith(pfx)]
+
+    # Merge with any existing manifest so `--only` refreshes selected
+    # artifacts without dropping the rest.
+    manifest_path = os.path.join(args.out_dir, "manifest.tsv")
+    existing = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            for line in f:
+                if line.strip():
+                    existing[line.split("\t", 1)[0]] = line.rstrip("\n")
+    for name, fn, ex in graphs:
+        existing[name] = emit(name, fn, ex, args.out_dir)
+        print(f"  aot {name}")
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(sorted(existing.values())) + "\n")
+    print(f"wrote {len(graphs)} artifacts; manifest has {len(existing)} entries")
+
+
+if __name__ == "__main__":
+    main()

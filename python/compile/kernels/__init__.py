@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (stages + fused megakernels) and the pure-jnp oracle."""
+from . import ref, stages, fused  # noqa: F401

@@ -1,0 +1,127 @@
+"""Extended kernel library — the paper's conclusion invites applying the
+method to "an extended set of such algorithms"; these are the usual next
+candidates in tracking/denoising pipelines, written in the same Pallas
+style (shifted slices, valid mode, grid=()) so the Rust planner can fuse
+them via the same `KernelSpec` IR (see examples/fusion_planner.rs).
+
+  erosion3      min over 3x3        rect (dx=dy=1)   TMT
+  dilation3     max over 3x3        rect (dx=dy=1)   TMT
+  opening3      erosion→dilation fused megakernel (morphological opening)
+  boxblur3      mean over 3x3       rect (dx=dy=1)   TMT
+  temporal_diff |x[t] - x[t-1]|     point, dt=1      TT
+  sharpen3      unsharp mask        rect (dx=dy=1)   TMT
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _win(x, di, dj):
+    h, w = x.shape[1], x.shape[2]
+    return x[:, di:h - 2 + di, dj:w - 2 + dj]
+
+
+def _reduce9(x, fn):
+    acc = _win(x, 0, 0)
+    for di in range(3):
+        for dj in range(3):
+            if (di, dj) != (0, 0):
+                acc = fn(acc, _win(x, di, dj))
+    return acc
+
+
+def _erosion_body(x_ref, o_ref):
+    o_ref[...] = _reduce9(x_ref[...], jnp.minimum)
+
+
+def erosion3(x):
+    """Morphological erosion: (T,H,W) -> (T,H-2,W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _erosion_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _dilation_body(x_ref, o_ref):
+    o_ref[...] = _reduce9(x_ref[...], jnp.maximum)
+
+
+def dilation3(x):
+    """Morphological dilation: (T,H,W) -> (T,H-2,W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _dilation_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _opening_body(x_ref, o_ref):
+    """Fused erosion→dilation: both stages VMEM-resident (Algorithm 1)."""
+    e = _reduce9(x_ref[...], jnp.minimum)
+    o_ref[...] = _reduce9(e, jnp.maximum)
+
+
+def opening3(x):
+    """Fused morphological opening: (T,H,W) -> (T,H-4,W-4).
+
+    Cumulative halo of two chained radius-1 stencils = radius 2 — the
+    same Algorithm 2 arithmetic as the main pipeline's Gaussian→Sobel.
+    """
+    t, h, w = x.shape
+    assert h >= 5 and w >= 5
+    return pl.pallas_call(
+        _opening_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 4, w - 4), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _boxblur_body(x_ref, o_ref):
+    o_ref[...] = _reduce9(x_ref[...], jnp.add) * (1.0 / 9.0)
+
+
+def boxblur3(x):
+    """3x3 mean filter: (T,H,W) -> (T,H-2,W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _boxblur_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _tdiff_body(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.abs(x[1:] - x[:-1])
+
+
+def temporal_diff(x):
+    """Frame differencing (motion energy): (T,H,W) -> (T-1,H,W)."""
+    t, h, w = x.shape
+    assert t >= 2
+    return pl.pallas_call(
+        _tdiff_body,
+        out_shape=jax.ShapeDtypeStruct((t - 1, h, w), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _sharpen_body(x_ref, o_ref):
+    x = x_ref[...]
+    blur = _reduce9(x, jnp.add) * (1.0 / 9.0)
+    center = _win(x, 1, 1)
+    o_ref[...] = center + 1.0 * (center - blur)
+
+
+def sharpen3(x):
+    """Unsharp mask (amount=1): (T,H,W) -> (T,H-2,W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _sharpen_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)

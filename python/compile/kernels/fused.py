@@ -1,0 +1,136 @@
+"""Fused Pallas megakernels — the paper's Algorithm 1 realized on TPU terms.
+
+A fused kernel is ONE pallas_call whose body runs several pipeline stages
+back-to-back on values that never leave the block's fast memory (VMEM here,
+SHMEM in the paper): the halo'd input box is brought in once, all fused
+stages compute on registers/VMEM, and a single writeback stores the result.
+Compare eq (1) (per-stage access+write) with eq (2) (one access, n computes,
+one write) in the paper.
+
+The CUDA `__syncthreads()` the paper inserts at Thread-to-Multi-Thread
+boundaries has no Pallas counterpart: a block is a single program, so stage
+ordering inside the body already sequences stencil reads after their
+producers. (DESIGN.md § Hardware adaptation.)
+
+Variants (mirroring the paper's evaluation):
+  fused_full   {K1..K5}   — "Full Fusion"
+  fused_12     {K1,K2}    — half of "Two Fusion"
+  fused_345    {K3,K4,K5} — other half of "Two Fusion"
+
+Halo bookkeeping is *cumulative* (sum of stage radii), computed by the Rust
+planner's `fusion::halo` (Algorithm 2). NOTE: the paper's Algorithm 2 as
+printed takes the running max of the radii; for chained stencils that
+under-sizes the halo (two 3x3 stencils need radius 2, not 1). We implement
+both in Rust, use the cumulative variant for execution, and test that the
+max variant corrupts box boundaries (rust/src/fusion/halo.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .stages import _LR, _LG, _LB
+
+
+def _gray_val(x):
+    """K1 on a value: (..., 4) -> (...)."""
+    return _LR * x[..., 0] + _LG * x[..., 1] + _LB * x[..., 2]
+
+
+def _iir_val(x, alpha):
+    """K2 on a value via scan: (T, H, W) -> (T-1, H, W)."""
+    def step(carry, xt):
+        y = alpha * xt + (1.0 - alpha) * carry
+        return y, y
+
+    _, ys = jax.lax.scan(step, x[0], x[1:])
+    return ys
+
+
+def _gauss_val(x):
+    """K3 on a value: 9 shifted slices, valid mode."""
+    h, w = x.shape[1], x.shape[2]
+
+    def win(di, dj):
+        return x[:, di:h - 2 + di, dj:w - 2 + dj]
+
+    return (
+        win(0, 0) + 2.0 * win(0, 1) + win(0, 2)
+        + 2.0 * win(1, 0) + 4.0 * win(1, 1) + 2.0 * win(1, 2)
+        + win(2, 0) + 2.0 * win(2, 1) + win(2, 2)
+    ) * (1.0 / 16.0)
+
+
+def _grad_val(x):
+    """K4 on a value: Sobel L1 magnitude, valid mode."""
+    h, w = x.shape[1], x.shape[2]
+
+    def win(di, dj):
+        return x[:, di:h - 2 + di, dj:w - 2 + dj]
+
+    gx = (win(0, 2) - win(0, 0)) + 2.0 * (win(1, 2) - win(1, 0)) \
+        + (win(2, 2) - win(2, 0))
+    gy = (win(2, 0) - win(0, 0)) + 2.0 * (win(2, 1) - win(0, 1)) \
+        + (win(2, 2) - win(0, 2))
+    return jnp.abs(gx) + jnp.abs(gy)
+
+
+def _fused_full_body(x_ref, th_ref, o_ref, *, alpha):
+    """{K1..K5}: one VMEM residency for the whole chain."""
+    x = x_ref[...]                      # (T+1, X+4, Y+4, 4) — one load
+    g = _gray_val(x)                    # K1
+    y = _iir_val(g, alpha)              # K2 -> (T, X+4, Y+4)
+    s = _gauss_val(y)                   # K3 -> (T, X+2, Y+2)
+    d = _grad_val(s)                    # K4 -> (T, X, Y)
+    o_ref[...] = jnp.where(d >= th_ref[0], 255.0, 0.0)  # K5 — one store
+
+
+def fused_full(x, th, alpha=ref.IIR_ALPHA):
+    """Full Fusion: (T+1, X+4, Y+4, 4), th -> (T, X, Y)."""
+    t, h, w, _ = x.shape
+    assert t >= 2 and h >= 5 and w >= 5, "need dt=1, dx=dy=2 halo"
+    th = jnp.asarray(th, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_fused_full_body, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct((t - 1, h - 4, w - 4), jnp.float32),
+        interpret=True,
+    )(x, th)
+
+
+def _fused_12_body(x_ref, o_ref, *, alpha):
+    """{K1, K2}: gray + temporal IIR, fused."""
+    x = x_ref[...]
+    o_ref[...] = _iir_val(_gray_val(x), alpha)
+
+
+def fused_12(x, alpha=ref.IIR_ALPHA):
+    """Two-Fusion part 1: (T+1, H, W, 4) -> (T, H, W)."""
+    t, h, w, _ = x.shape
+    assert t >= 2
+    return pl.pallas_call(
+        functools.partial(_fused_12_body, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct((t - 1, h, w), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _fused_345_body(x_ref, th_ref, o_ref):
+    """{K3, K4, K5}: smooth + gradient + threshold, fused."""
+    x = x_ref[...]
+    d = _grad_val(_gauss_val(x))
+    o_ref[...] = jnp.where(d >= th_ref[0], 255.0, 0.0)
+
+
+def fused_345(x, th):
+    """Two-Fusion part 2: (T, X+4, Y+4), th -> (T, X, Y)."""
+    t, h, w = x.shape
+    assert h >= 5 and w >= 5
+    th = jnp.asarray(th, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _fused_345_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 4, w - 4), jnp.float32),
+        interpret=True,
+    )(x, th)

@@ -1,0 +1,175 @@
+"""Pure-jnp correctness oracle for every pipeline stage and composition.
+
+This module is the *independent* reference implementation: it deliberately
+uses different formulations than the Pallas kernels (convolutions / einsum /
+scan here vs. shifted-slice arithmetic inside the kernels) so that the
+pytest comparison is a real cross-check, not a tautology.
+
+Stage semantics (the paper's Table II pipeline, K1..K5):
+
+  K1 rgb2gray   : (T, H, W, 4) RGBA -> (T, H, W) luma           (point)
+  K2 iir        : (T, H, W) -> (T-1, H, W)  temporal IIR        (point, multi-frame)
+                  y[t] = a*x[t] + (1-a)*y[t-1], warm start y[0] = x[0];
+                  the leading frame is the temporal halo (dt = 1).
+  K3 gaussian3  : (T, H, W) -> (T, H-2, W-2)  3x3 binomial      (rect, dx=dy=1)
+  K4 gradient3  : (T, H, W) -> (T, H-2, W-2)  Sobel |Gx|+|Gy|   (rect, dx=dy=1)
+  K5 threshold  : (T, H, W), th -> (T, H, W)  binary 255/0      (point)
+
+All stencils are "valid"-mode: the halo is explicit in the input extent
+(Algorithm 2 in the paper / `fusion::halo` in the Rust planner computes it),
+exactly like a CUDA block reading its halo from GMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: IIR smoothing factor used across the whole system (Rust mirrors this).
+IIR_ALPHA = 0.5
+
+#: Default binarization threshold (gradient magnitude, 0..255 scale).
+DEFAULT_TH = 96.0
+
+# BT.601 luma weights (RGBA -> gray); alpha channel ignored.
+LUMA = np.array([0.299, 0.587, 0.114, 0.0], dtype=np.float32)
+
+# 3x3 binomial (Gaussian) kernel, normalized.
+GAUSS3 = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], dtype=np.float32) / 16.0
+
+# Sobel operators.
+SOBEL_X = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=np.float32)
+SOBEL_Y = SOBEL_X.T.copy()
+
+
+def rgb2gray(x):
+    """K1: (T, H, W, 4) -> (T, H, W) via einsum against the luma vector."""
+    return jnp.einsum("thwc,c->thw", x.astype(jnp.float32), jnp.asarray(LUMA))
+
+
+def iir(x, alpha=IIR_ALPHA):
+    """K2: temporal IIR low-pass via lax.scan; consumes the leading frame.
+
+    (T, H, W) -> (T-1, H, W). y[-1] := x[0] is the warm start coming from
+    the temporal halo frame, so chained boxes are exactly continuous as long
+    as the coordinator hands each box one extra leading frame (dt = 1).
+    """
+    def step(carry, xt):
+        y = alpha * xt + (1.0 - alpha) * carry
+        return y, y
+
+    _, ys = jax.lax.scan(step, x[0], x[1:])
+    return ys
+
+
+def _conv2d_valid(x, k):
+    """Valid-mode 2D correlation of (T, H, W) with a 3x3 kernel via lax.conv.
+
+    Uses XLA's general convolution (NCHW with T as batch) — a completely
+    different code path than the kernels' shifted-slice sums. Correlation
+    (no kernel flip) is used consistently on both sides; the Gaussian is
+    symmetric and Sobel signs wash out under the magnitude.
+    """
+    lhs = x[:, None, :, :]  # (T, 1, H, W)
+    rhs = jnp.asarray(k)[None, None, :, :]  # (1, 1, 3, 3)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="VALID"
+    )
+    return out[:, 0, :, :]
+
+
+def gaussian3(x):
+    """K3: 3x3 binomial smoothing, valid mode. (T,H,W) -> (T,H-2,W-2)."""
+    return _conv2d_valid(x, GAUSS3)
+
+
+def gradient3(x):
+    """K4: Sobel gradient magnitude (L1 norm). (T,H,W) -> (T,H-2,W-2)."""
+    gx = _conv2d_valid(x, SOBEL_X)
+    gy = _conv2d_valid(x, SOBEL_Y)
+    return jnp.abs(gx) + jnp.abs(gy)
+
+
+def threshold(x, th):
+    """K5: binarize to {0, 255}. `th` is a scalar (or (1,) array)."""
+    return jnp.where(x >= jnp.reshape(th, ()), 255.0, 0.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Compositions (the fusion groups used throughout the system)
+# ---------------------------------------------------------------------------
+
+def fused12(x, alpha=IIR_ALPHA):
+    """{K1, K2}: (T+1, H, W, 4) -> (T, H, W)."""
+    return iir(rgb2gray(x), alpha)
+
+
+def fused345(x, th):
+    """{K3, K4, K5}: (T, H, W) -> (T, H-4, W-4)."""
+    return threshold(gradient3(gaussian3(x)), th)
+
+
+def pipeline(x, th, alpha=IIR_ALPHA):
+    """Full K1..K5 composition: (T+1, H+4, W+4, 4) -> (T, H, W)."""
+    return fused345(fused12(x, alpha), th)
+
+
+def detect(binary):
+    """Feature-detection reduction feeding the tracker (K6 glue).
+
+    For each frame of a binary (T, H, W) box, return (mass, sum_i, sum_j)
+    where sums are over "on" pixels weighted by coordinates. The Rust
+    coordinator divides to obtain centroids and offsets by box origin.
+    Output: (T, 3) float32.
+    """
+    on = (binary > 0).astype(jnp.float32)
+    t, h, w = binary.shape
+    ii = jnp.arange(h, dtype=jnp.float32)[None, :, None]
+    jj = jnp.arange(w, dtype=jnp.float32)[None, None, :]
+    mass = jnp.sum(on, axis=(1, 2))
+    si = jnp.sum(on * ii, axis=(1, 2))
+    sj = jnp.sum(on * jj, axis=(1, 2))
+    return jnp.stack([mass, si, sj], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Kalman filter (K6) — constant-velocity model, one predict+update step.
+# Mirrored natively in rust/src/tracking/kalman.rs; this is the oracle the
+# Rust implementation and the AOT'd HLO are both tested against.
+# ---------------------------------------------------------------------------
+
+KALMAN_DT = 1.0
+KALMAN_Q = 1e-2   # process noise spectral density
+KALMAN_R = 1.0    # measurement noise variance (pixels^2)
+
+
+def kalman_matrices(dt=KALMAN_DT, q=KALMAN_Q, r=KALMAN_R):
+    """(F, H, Q, R) for a 4-state [i, j, vi, vj] constant-velocity model."""
+    F = np.eye(4, dtype=np.float32)
+    F[0, 2] = dt
+    F[1, 3] = dt
+    H = np.zeros((2, 4), dtype=np.float32)
+    H[0, 0] = 1.0
+    H[1, 1] = 1.0
+    Q = np.eye(4, dtype=np.float32) * q
+    R = np.eye(2, dtype=np.float32) * r
+    return F, H, Q, R
+
+
+def kalman_step(x, P, z, dt=KALMAN_DT, q=KALMAN_Q, r=KALMAN_R):
+    """One predict+update. x: (4,), P: (4,4), z: (2,) -> (x', P')."""
+    F, H, Q, R = (jnp.asarray(m) for m in kalman_matrices(dt, q, r))
+    # Predict.
+    xp = F @ x
+    Pp = F @ P @ F.T + Q
+    # Update. S is 2x2: invert in closed form (jnp.linalg.inv would lower
+    # to a LAPACK typed-FFI custom-call that xla_extension 0.5.1 rejects).
+    y = z - H @ xp
+    S = H @ Pp @ H.T + R
+    det = S[0, 0] * S[1, 1] - S[0, 1] * S[1, 0]
+    S_inv = jnp.array(
+        [[S[1, 1], -S[0, 1]], [-S[1, 0], S[0, 0]]], dtype=jnp.float32
+    ) / det
+    K = Pp @ H.T @ S_inv
+    xn = xp + K @ y
+    Pn = (jnp.eye(4, dtype=jnp.float32) - K @ H) @ Pp
+    return xn, Pn

@@ -1,0 +1,142 @@
+"""Pallas L1 kernels for the paper's pipeline stages K1..K5.
+
+Each stage is a standalone `pallas_call` over one data box (the paper's
+Box_b): grid=() — a single program instance computes the whole box, exactly
+like one CUDA thread block computing one box. The "grid of blocks" lives in
+the Rust coordinator, which cuts frames into boxes (Fig 3) and schedules
+them across workers.
+
+Kernels use shifted-slice arithmetic (the Pallas-native formulation of the
+paper's `Shared[thx+ii-1 .. thx+ii+1]` windows); `ref.py` uses
+`lax.conv`/`einsum`/`scan`, so the pytest comparison is a genuine
+cross-check.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO ops that the Rust runtime
+runs unmodified. On a real TPU these same bodies would compile with
+BlockSpec-carried halos (see DESIGN.md § Hardware adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Luma weights as python floats so they become immediates in the kernel.
+_LR, _LG, _LB = 0.299, 0.587, 0.114
+
+
+def _rgb2gray_body(x_ref, o_ref):
+    """K1 body: weighted channel sum, written as explicit mads (not einsum)."""
+    x = x_ref[...]
+    o_ref[...] = _LR * x[..., 0] + _LG * x[..., 1] + _LB * x[..., 2]
+
+
+def rgb2gray(x):
+    """K1 as a pallas_call: (T, H, W, 4) f32 -> (T, H, W) f32."""
+    t, h, w, _ = x.shape
+    return pl.pallas_call(
+        _rgb2gray_body,
+        out_shape=jax.ShapeDtypeStruct((t, h, w), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _iir_body(x_ref, o_ref, *, alpha):
+    """K2 body: explicit geometric unrolling via fori_loop over frames.
+
+    Carries the running average in the loop state; the first input frame is
+    the warm start (temporal halo), so the output has T-1 frames.
+    """
+    x = x_ref[...]
+    tdim = x.shape[0]
+
+    def step(t, carry):
+        y = alpha * x[t] + (1.0 - alpha) * carry
+        # Store frame t-1 of the output.
+        pl.store(o_ref, (pl.dslice(t - 1, 1), slice(None), slice(None)),
+                 y[None])
+        return y
+
+    jax.lax.fori_loop(1, tdim, step, x[0])
+
+
+def iir(x, alpha=ref.IIR_ALPHA):
+    """K2 as a pallas_call: (T, H, W) -> (T-1, H, W)."""
+    t, h, w = x.shape
+    assert t >= 2, "IIR needs the warm-start halo frame"
+    return pl.pallas_call(
+        functools.partial(_iir_body, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct((t - 1, h, w), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _gaussian_body(x_ref, o_ref):
+    """K3 body: 3x3 binomial via 9 shifted slices (VMEM-resident)."""
+    x = x_ref[...]
+    h, w = x.shape[1], x.shape[2]
+
+    def win(di, dj):
+        return x[:, di:h - 2 + di, dj:w - 2 + dj]
+
+    o_ref[...] = (
+        win(0, 0) + 2.0 * win(0, 1) + win(0, 2)
+        + 2.0 * win(1, 0) + 4.0 * win(1, 1) + 2.0 * win(1, 2)
+        + win(2, 0) + 2.0 * win(2, 1) + win(2, 2)
+    ) * (1.0 / 16.0)
+
+
+def gaussian3(x):
+    """K3 as a pallas_call: (T, H, W) -> (T, H-2, W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _gaussian_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _gradient_body(x_ref, o_ref):
+    """K4 body: Sobel |Gx| + |Gy| via shifted slices."""
+    x = x_ref[...]
+    h, w = x.shape[1], x.shape[2]
+
+    def win(di, dj):
+        return x[:, di:h - 2 + di, dj:w - 2 + dj]
+
+    gx = (win(0, 2) - win(0, 0)) + 2.0 * (win(1, 2) - win(1, 0)) \
+        + (win(2, 2) - win(2, 0))
+    gy = (win(2, 0) - win(0, 0)) + 2.0 * (win(2, 1) - win(0, 1)) \
+        + (win(2, 2) - win(0, 2))
+    o_ref[...] = jnp.abs(gx) + jnp.abs(gy)
+
+
+def gradient3(x):
+    """K4 as a pallas_call: (T, H, W) -> (T, H-2, W-2)."""
+    t, h, w = x.shape
+    return pl.pallas_call(
+        _gradient_body,
+        out_shape=jax.ShapeDtypeStruct((t, h - 2, w - 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _threshold_body(x_ref, th_ref, o_ref):
+    """K5 body: branch-free binarization against a scalar threshold."""
+    x = x_ref[...]
+    th = th_ref[0]
+    o_ref[...] = jnp.where(x >= th, 255.0, 0.0)
+
+
+def threshold(x, th):
+    """K5 as a pallas_call: ((T,H,W), (1,)) -> (T, H, W) in {0, 255}."""
+    th = jnp.asarray(th, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _threshold_body,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, th)

@@ -1,0 +1,110 @@
+"""L2: the JAX compute graphs that get AOT-lowered to HLO artifacts.
+
+Every function here operates on ONE data box (the paper's Box_b, Fig 3).
+The Rust coordinator is the "grid": it cuts frames into halo'd boxes
+(Algorithm 2 sizing via `fusion::halo`) and dispatches them to the compiled
+executables.
+
+Three pipeline variants mirror the paper's evaluation arms:
+
+  no-fusion   — the five stage kernels are SEPARATE artifacts; the Rust
+                coordinator round-trips every intermediate through host
+                buffers (the GMEM analogue), 2*n*B*x*y*t traffic (§VI-D).
+  two-fusion  — {K1,K2} and {K3,K4,K5} as two artifacts.
+  full-fusion — {K1..K5} as one artifact, 2*B*x*y*t + halo traffic.
+
+Stage shapes chain with shrinking "valid" extents, so the no-fusion
+composition is bit-identical to the fused kernel given the same halo'd
+input box:
+
+  k1: (T+1, X+4, Y+4, 4) -> (T+1, X+4, Y+4)
+  k2: (T+1, X+4, Y+4)    -> (T,   X+4, Y+4)
+  k3: (T,   X+4, Y+4)    -> (T,   X+2, Y+2)
+  k4: (T,   X+2, Y+2)    -> (T,   X,   Y)
+  k5: (T,   X,   Y), th  -> (T,   X,   Y)
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fused, ref, stages
+
+#: Pipeline halo for {K1..K5}: cumulative stencil radii (see fused.py).
+FULL_DX = 2   # gaussian(1) + gradient(1)
+FULL_DY = 2
+FULL_DT = 1   # IIR warm-start frame
+
+
+# --- single-stage graphs (the "simple kernels" of the paper) ---------------
+
+def k1_rgb2gray(x):
+    """K1 over a box: (T, H, W, 4) -> (T, H, W)."""
+    return stages.rgb2gray(x)
+
+
+def k2_iir(x):
+    """K2 over a box: (T, H, W) -> (T-1, H, W)."""
+    return stages.iir(x)
+
+
+def k3_gaussian(x):
+    """K3 over a box: (T, H, W) -> (T, H-2, W-2)."""
+    return stages.gaussian3(x)
+
+
+def k4_gradient(x):
+    """K4 over a box: (T, H, W) -> (T, H-2, W-2)."""
+    return stages.gradient3(x)
+
+
+def k5_threshold(x, th):
+    """K5 over a box: (T, H, W), (1,) -> (T, H, W)."""
+    return stages.threshold(x, th)
+
+
+# --- fusion-arm graphs ------------------------------------------------------
+
+def full_fusion(x, th):
+    """{K1..K5} in one pallas megakernel: (T+1, X+4, Y+4, 4) -> (T, X, Y)."""
+    return fused.fused_full(x, th)
+
+
+def two_fusion_a(x):
+    """{K1,K2}: (T+1, H, W, 4) -> (T, H, W)."""
+    return fused.fused_12(x)
+
+
+def two_fusion_b(x, th):
+    """{K3,K4,K5}: (T, X+4, Y+4), (1,) -> (T, X, Y)."""
+    return fused.fused_345(x, th)
+
+
+def no_fusion(x, th):
+    """All five stage pallas_calls chained in one graph.
+
+    Used for the like-for-like "XLA materializes every intermediate"
+    measurement and for equivalence tests; the *dispatch-level* no-fusion
+    arm (separate executables, host round-trips) is what the Rust
+    coordinator actually measures.
+    """
+    g = stages.rgb2gray(x)
+    y = stages.iir(g)
+    s = stages.gaussian3(y)
+    d = stages.gradient3(s)
+    return stages.threshold(d, th)
+
+
+# --- tracking-side graphs (K6 support) --------------------------------------
+
+def detect(binary):
+    """Per-frame (mass, sum_i, sum_j) reduction: (T, X, Y) -> (T, 3)."""
+    return ref.detect(binary)
+
+
+def kalman_step(x, p, z):
+    """One Kalman predict+update: (4,), (4,4), (2,) -> stacked (20,) vec.
+
+    Flattened into one output vector so the artifact has a single result
+    (simplest tuple handling on the Rust side): [x'(4) | P'.flat(16)].
+    """
+    xn, pn = ref.kalman_step(x, p, z)
+    return jnp.concatenate([xn, pn.reshape(-1)])

@@ -1,0 +1,89 @@
+"""Extended-kernel correctness: independent numpy oracles + fusion
+equivalence (opening == dilation(erosion)) + hypothesis sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import extended
+
+RNG = np.random.default_rng(77)
+
+
+def gray(t, h, w):
+    return RNG.uniform(-100, 355, (t, h, w)).astype(np.float32)
+
+
+def np_window_reduce(x, fn):
+    """Numpy oracle: 3x3 valid-mode window reduction."""
+    t, h, w = x.shape
+    out = np.empty((t, h - 2, w - 2), np.float32)
+    for ft in range(t):
+        for i in range(h - 2):
+            for j in range(w - 2):
+                out[ft, i, j] = fn(x[ft, i:i + 3, j:j + 3])
+    return out
+
+
+@pytest.mark.parametrize("shape", [(1, 5, 5), (3, 8, 10)])
+def test_erosion_matches_numpy(shape):
+    x = gray(*shape)
+    got = np.asarray(extended.erosion3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np_window_reduce(x, np.min), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1, 5, 5), (3, 8, 10)])
+def test_dilation_matches_numpy(shape):
+    x = gray(*shape)
+    got = np.asarray(extended.dilation3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np_window_reduce(x, np.max), rtol=1e-6)
+
+
+def test_opening_equals_unfused_chain():
+    """The fused megakernel == composing the two simple kernels — the
+    Algorithm 1 semantics-preservation property, on a second pipeline."""
+    x = gray(2, 12, 12)
+    fused = np.asarray(extended.opening3(jnp.asarray(x)))
+    chain = np.asarray(extended.dilation3(extended.erosion3(jnp.asarray(x))))
+    np.testing.assert_array_equal(fused, chain)
+
+
+def test_boxblur_matches_numpy():
+    x = gray(2, 7, 9)
+    got = np.asarray(extended.boxblur3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np_window_reduce(x, np.mean),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_temporal_diff_matches_numpy():
+    x = gray(5, 4, 4)
+    got = np.asarray(extended.temporal_diff(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.abs(np.diff(x, axis=0)), rtol=1e-6)
+
+
+def test_sharpen_identity_on_flat():
+    x = np.full((2, 6, 6), 42.0, np.float32)
+    got = np.asarray(extended.sharpen3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, 42.0, rtol=1e-6)
+
+
+def test_erosion_dilation_duality():
+    """max-plus duality: dilation(x) == -erosion(-x)."""
+    x = gray(2, 8, 8)
+    d = np.asarray(extended.dilation3(jnp.asarray(x)))
+    e = np.asarray(extended.erosion3(jnp.asarray(-x)))
+    np.testing.assert_allclose(d, -e, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(5, 10), st.integers(5, 10),
+       st.integers(0, 2**32 - 1))
+def test_opening_bounds_input(t, h, w, seed):
+    """Opening never exceeds the local max of the input (anti-extensive
+    on the valid region up to window effects)."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 255, (t, h, w)).astype(np.float32)
+    got = np.asarray(extended.opening3(jnp.asarray(x)))
+    assert got.min() >= x.min() - 1e-4
+    assert got.max() <= x.max() + 1e-4

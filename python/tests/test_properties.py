@@ -1,0 +1,116 @@
+"""Hypothesis sweeps over shapes/values for the Pallas kernels.
+
+Strategy bounds keep interpret-mode runtime sane while exercising the
+degenerate extents (minimum halos, single-frame boxes, non-square boxes).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, ref, stages
+
+COMMON = dict(max_examples=25, deadline=None)
+
+
+def nparr(draw, shape, lo=-1e3, hi=1e3):
+    n = int(np.prod(shape))
+    vals = draw(st.lists(
+        st.floats(lo, hi, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    return np.asarray(vals, np.float32).reshape(shape)
+
+
+@st.composite
+def rgba_boxes(draw, tmin=1, tmax=6, smin=1, smax=12):
+    t = draw(st.integers(tmin, tmax))
+    h = draw(st.integers(smin, smax))
+    w = draw(st.integers(smin, smax))
+    return nparr(draw, (t, h, w, 4), 0.0, 255.0)
+
+
+@st.composite
+def gray_boxes(draw, tmin=1, tmax=6, smin=3, smax=14):
+    t = draw(st.integers(tmin, tmax))
+    h = draw(st.integers(smin, smax))
+    w = draw(st.integers(smin, smax))
+    return nparr(draw, (t, h, w), -255.0, 255.0)
+
+
+@settings(**COMMON)
+@given(rgba_boxes())
+def test_rgb2gray_any_shape(x):
+    got = np.asarray(stages.rgb2gray(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.asarray(ref.rgb2gray(x)),
+                               rtol=1e-5, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(gray_boxes(tmin=2, tmax=8), st.floats(0.05, 0.95))
+def test_iir_any_shape_alpha(x, alpha):
+    got = np.asarray(stages.iir(jnp.asarray(x), alpha=alpha))
+    np.testing.assert_allclose(got, np.asarray(ref.iir(x, alpha=alpha)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(gray_boxes())
+def test_gaussian_any_shape(x):
+    got = np.asarray(stages.gaussian3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.asarray(ref.gaussian3(x)),
+                               rtol=1e-4, atol=1e-2)
+
+
+@settings(**COMMON)
+@given(gray_boxes())
+def test_gradient_any_shape(x):
+    got = np.asarray(stages.gradient3(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.asarray(ref.gradient3(x)),
+                               rtol=1e-4, atol=1e-2)
+
+
+@settings(**COMMON)
+@given(gray_boxes(), st.floats(-500, 500))
+def test_threshold_any_shape(x, th):
+    got = np.asarray(stages.threshold(jnp.asarray(x), th))
+    np.testing.assert_array_equal(got, np.asarray(ref.threshold(x, th)))
+
+
+@settings(**COMMON)
+@given(st.integers(1, 4), st.integers(5, 14), st.integers(5, 14),
+       st.floats(0.0, 300.0))
+def test_fused_full_any_box(t, h, w, th):
+    rng = np.random.default_rng(t * 1000 + h * 10 + w)
+    x = rng.uniform(0, 255, (t + 1, h, w, 4)).astype(np.float32)
+    got = np.asarray(fused.fused_full(jnp.asarray(x), th))
+    want = np.asarray(ref.pipeline(x, th))
+    # Threshold is a hard comparator: values straddling th within float
+    # noise flip the binary output. Mask near-threshold pixels.
+    d = np.asarray(ref.gradient3(ref.gaussian3(ref.fused12(x))))
+    safe = np.abs(d - th) > 1e-2
+    np.testing.assert_array_equal(got[safe], want[safe])
+
+
+@settings(**COMMON)
+@given(gray_boxes(tmin=1, tmax=4, smin=5, smax=14), st.floats(0, 300))
+def test_fused_345_any_box(x, th):
+    got = np.asarray(fused.fused_345(jnp.asarray(x), th))
+    want = np.asarray(ref.fused345(x, th))
+    d = np.asarray(ref.gradient3(ref.gaussian3(x)))
+    safe = np.abs(d - th) > 1e-2
+    np.testing.assert_array_equal(got[safe], want[safe])
+
+
+@settings(**COMMON)
+@given(st.integers(0, 2**32 - 1))
+def test_detect_mass_bounds(seed):
+    rng = np.random.default_rng(seed)
+    b = (rng.uniform(size=(3, 9, 11)) > 0.5).astype(np.float32) * 255.0
+    out = np.asarray(ref.detect(b))
+    t, h, w = b.shape
+    assert np.all(out[:, 0] >= 0) and np.all(out[:, 0] <= h * w)
+    # Centroid (where mass>0) must lie inside the box.
+    for row in out:
+        if row[0] > 0:
+            assert 0 <= row[1] / row[0] <= h - 1
+            assert 0 <= row[2] / row[0] <= w - 1

@@ -1,0 +1,103 @@
+//! Ablations beyond the paper's figures (DESIGN.md §7 design choices):
+//!
+//!  1. Solver: branch-and-bound nodes vs brute-force subsets across run
+//!     lengths (why the Fig 5 model is tractable without Gurobi).
+//!  2. Algorithm 2 variants: paper's max-halo vs cumulative-halo — the
+//!     max variant under-sizes chained stencils and corrupts box edges.
+//!  3. Box-size sweep: planner-predicted time vs eq (6) DU across boxes
+//!     (does maximizing utilization track minimizing time?).
+
+use kfuse::bench_util::{header, row};
+use kfuse::fusion::boxopt::data_utilization;
+use kfuse::fusion::candidates::enumerate_candidates;
+use kfuse::fusion::halo::{halo_cumulative, halo_paper, BoxDims};
+use kfuse::fusion::ilp::Model;
+use kfuse::fusion::kernel_ir::paper_fusable_run;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::fusion::{dp, solver};
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::prop::Gen;
+
+fn solver_ablation() {
+    header("Ablation 1", "B&B nodes vs 2^m brute-force space");
+    row(&[
+        format!("{:>3}", "n"),
+        format!("{:>8}", "columns"),
+        format!("{:>14}", "2^m subsets"),
+        format!("{:>10}", "B&B nodes"),
+    ]);
+    let mut g = Gen::new(1234);
+    for n in [3usize, 5, 8, 10, 12] {
+        let cols: Vec<_> = enumerate_candidates(n)
+            .into_iter()
+            .map(|s| (s, g.f64_in(0.1, 50.0)))
+            .collect();
+        let m = Model::with_costs(n, &cols);
+        let sol = solver::solve(&m).unwrap();
+        let (_, dp_obj) = dp::solve_dp(&m).unwrap();
+        assert!((sol.objective - dp_obj).abs() < 1e-9);
+        row(&[
+            format!("{n:>3}"),
+            format!("{:>8}", cols.len()),
+            format!("{:>14.2e}", 2f64.powi(cols.len() as i32)),
+            format!("{:>10}", sol.nodes),
+        ]);
+    }
+}
+
+fn halo_ablation() {
+    header("Ablation 2", "Algorithm 2 as printed (max) vs cumulative halo");
+    let run = paper_fusable_run();
+    let p = halo_paper(&run);
+    let c = halo_cumulative(&run);
+    println!("paper/max:   dx={} dy={} dt={}", p.dx, p.dy, p.dt);
+    println!("cumulative:  dx={} dy={} dt={}", c.dx, c.dy, c.dt);
+    // Quantify the corruption the max variant would cause: boundary ring
+    // of each 32x32 output box whose inputs fall outside the under-sized
+    // halo = ring of width (c.dx - p.dx).
+    let s = 32usize;
+    let ring = c.dx - p.dx;
+    let bad = s * s - (s - 2 * ring) * (s - 2 * ring);
+    println!(
+        "under-sized halo corrupts {bad}/{} pixels/box ({:.1}%) at 32x32",
+        s * s,
+        100.0 * bad as f64 / (s * s) as f64
+    );
+}
+
+fn box_sweep() {
+    header("Ablation 3", "predicted time vs data utilization across boxes");
+    let run = paper_fusable_run();
+    let input = InputDims::new(256, 256, 1000);
+    let dev = DeviceSpec::k20();
+    let halo = halo_cumulative(&run);
+    row(&[
+        format!("{:>12}", "box"),
+        format!("{:>8}", "DU"),
+        format!("{:>14}", "pred fused ms"),
+    ]);
+    for (x, t) in [(8usize, 4usize), (8, 8), (16, 4), (16, 8), (32, 4),
+                   (32, 8), (64, 2)] {
+        let b = BoxDims::new(x, x, t);
+        let feasible = (x + 4) * (x + 4) * (t + 1) * 4 <= dev.shmem_per_block;
+        let du = data_utilization(b, halo);
+        let pred = if feasible {
+            let c = kfuse::fusion::cost::predict(&run, input, b, &dev);
+            format!("{:>14.2}", c.seconds * 1e3)
+        } else {
+            format!("{:>14}", "n/a (SHMEM)")
+        };
+        row(&[
+            format!("[{x},{x},{t}]"),
+            format!("{du:>8.3}"),
+            pred,
+        ]);
+    }
+    println!("(higher DU ↔ lower predicted time: the eq (6) objective is aligned)");
+}
+
+fn main() {
+    solver_ablation();
+    halo_ablation();
+    box_sweep();
+}

@@ -1,0 +1,99 @@
+//! Fig 12 — pixel transfers + reduction + data utilization (input
+//! 256×256×1000), and Fig 13 — GMEM usage for No/Two/Full fusion.
+//!
+//! Pure model outputs (the paper computes these analytically too); the
+//! *measured* traffic counterpart is in the coordinator metrics
+//! (`bench_fig14` / examples).
+
+use kfuse::bench_util::{header, row};
+use kfuse::fusion::boxopt::data_utilization;
+use kfuse::fusion::halo::{halo_cumulative, BoxDims};
+use kfuse::fusion::kernel_ir::{paper_fusable_run, KernelSpec, BYTES_PER_VALUE};
+use kfuse::fusion::traffic::{
+    gmem_usage_bytes, transfers_partition, transfers_serial, InputDims,
+};
+
+fn segs<'a>(run: &'a [KernelSpec], cuts: &[usize]) -> Vec<&'a [KernelSpec]> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    for &c in cuts {
+        out.push(&run[i..i + c]);
+        i += c;
+    }
+    out
+}
+
+fn main() {
+    let run = paper_fusable_run();
+    let input = InputDims::new(256, 256, 1000);
+    let boxes = [
+        BoxDims::new(8, 8, 8),
+        BoxDims::new(16, 16, 8),
+        BoxDims::new(32, 32, 8),
+        BoxDims::new(32, 32, 16),
+        BoxDims::new(64, 64, 8),
+    ];
+
+    header("Fig 12a", "pixel transfers, input 256x256x1000");
+    row(&[
+        format!("{:>12}", "box"),
+        format!("{:>14}", "No Fusion"),
+        format!("{:>14}", "Two Fusion"),
+        format!("{:>14}", "Full Fusion"),
+    ]);
+    for b in boxes {
+        let none = transfers_serial(input, b, run.len());
+        let two = transfers_partition(input, b, &segs(&run, &[2, 3]));
+        let full = transfers_partition(input, b, &segs(&run, &[5]));
+        row(&[
+            format!("[{},{},{}]", b.x, b.y, b.t),
+            format!("{none:>14}"),
+            format!("{two:>14}"),
+            format!("{full:>14}"),
+        ]);
+    }
+
+    header("Fig 12b", "% reduction in data movement + data utilization");
+    row(&[
+        format!("{:>12}", "box"),
+        format!("{:>10}", "two red%"),
+        format!("{:>10}", "full red%"),
+        format!("{:>8}", "DU"),
+    ]);
+    for b in boxes {
+        let none = transfers_serial(input, b, run.len()) as f64;
+        let two = transfers_partition(input, b, &segs(&run, &[2, 3])) as f64;
+        let full = transfers_partition(input, b, &segs(&run, &[5])) as f64;
+        let du = data_utilization(b, halo_cumulative(&run));
+        row(&[
+            format!("[{},{},{}]", b.x, b.y, b.t),
+            format!("{:>9.1}%", (1.0 - two / none) * 100.0),
+            format!("{:>9.1}%", (1.0 - full / none) * 100.0),
+            format!("{du:>8.3}"),
+        ]);
+    }
+
+    header("Fig 13", "GMEM usage (MB) — paper: two −33%, full −44%");
+    for (label, cuts) in [
+        ("No Fusion", vec![1usize, 1, 1, 1, 1]),
+        ("Two Fusion", vec![2, 3]),
+        ("Full Fusion", vec![5]),
+    ] {
+        for size in [256usize, 512, 1024] {
+            let inp = InputDims::new(size, size, 1000);
+            let bytes =
+                gmem_usage_bytes(inp, &segs(&run, &cuts), BYTES_PER_VALUE);
+            print!("{label:>12} @{size:>5}: {:>9.1} MB   ", bytes as f64 / 1e6);
+        }
+        println!();
+    }
+    let none =
+        gmem_usage_bytes(input, &segs(&run, &[1, 1, 1, 1, 1]), BYTES_PER_VALUE);
+    let two = gmem_usage_bytes(input, &segs(&run, &[2, 3]), BYTES_PER_VALUE);
+    let full = gmem_usage_bytes(input, &segs(&run, &[5]), BYTES_PER_VALUE);
+    println!(
+        "reduction vs No Fusion: two {:.0}% | full {:.0}%",
+        (1.0 - two as f64 / none as f64) * 100.0,
+        (1.0 - full as f64 / none as f64) * 100.0
+    );
+}

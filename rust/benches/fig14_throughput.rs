@@ -1,0 +1,122 @@
+//! Fig 14 — throughput (frames/second) per device and input size, for
+//! simple vs fused execution; plus the MEASURED end-to-end coordinator
+//! throughput on this host for all three fusion arms.
+
+use std::sync::Arc;
+
+use kfuse::bench_util::{header, row};
+use kfuse::config::{FusionMode, RunConfig};
+use kfuse::coordinator::{run_batch, synth_clip};
+use kfuse::fusion::candidates::Segment;
+use kfuse::fusion::fuse::build_plans;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::paper_fusable_run;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::gpusim::model::simulate;
+
+fn simulated() {
+    let run = paper_fusable_run();
+    let full = build_plans(&[Segment { start: 0, len: 5 }], &run);
+    let none = build_plans(
+        &(0..5).map(|i| Segment { start: i, len: 1 }).collect::<Vec<_>>(),
+        &run,
+    );
+    header("Fig 14 (simulated)", "frames/second per device & input size");
+    row(&[
+        format!("{:>12}", "device"),
+        format!("{:>6}", "N"),
+        format!("{:>12}", "simple fps"),
+        format!("{:>12}", "fused fps"),
+    ]);
+    for dev in DeviceSpec::paper_devices() {
+        let bx = if dev.shmem_per_block < 20 * 1024 {
+            BoxDims::new(16, 16, 8)
+        } else {
+            BoxDims::new(32, 32, 8)
+        };
+        for n in [256usize, 512, 1024] {
+            let input = InputDims::new(n, n, 1000);
+            let f = simulate(&full, input, bx, &dev);
+            let s = simulate(&none, input, BoxDims::new(bx.x, bx.y, 1), &dev);
+            row(&[
+                format!("{:>12}", dev.name),
+                format!("{n:>6}"),
+                format!("{:>12.0}", s.fps),
+                format!("{:>12.0}", f.fps),
+            ]);
+        }
+    }
+    println!(
+        "(HSDV target: 600-1000 fps ingest — fused K20/750Ti sustain it at 256²)"
+    );
+}
+
+fn measured() {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("(measured part skipped: no artifacts/)");
+        return;
+    }
+    header(
+        "Fig 14 (measured, this host)",
+        "end-to-end coordinator fps, 256² x 96 frames, 1 worker (tuned)",
+    );
+    let base = RunConfig {
+        frame_size: 256,
+        frames: 96,
+        box_dims: BoxDims::new(32, 32, 8),
+        workers: 1,
+        markers: 4,
+        ..RunConfig::default()
+    };
+    let (clip, _) = synth_clip(&base, 77);
+    let clip = Arc::new(clip);
+    row(&[
+        format!("{:>12}", "arm"),
+        format!("{:>10}", "fps"),
+        format!("{:>12}", "p50 box us"),
+        format!("{:>12}", "dispatches"),
+    ]);
+    // The shared XLA CPU pool drifts over a process's lifetime and the
+    // host is noisy: interleave the arms round-robin (so drift hits all
+    // arms equally) and keep each arm's best sample.
+    let modes = [FusionMode::None, FusionMode::Two, FusionMode::Full];
+    for mode in modes {
+        let cfg = RunConfig { mode, ..base.clone() };
+        let _ = run_batch(&cfg, clip.clone()).unwrap(); // warm-up
+    }
+    let mut best: Vec<Option<kfuse::coordinator::RunReport>> =
+        (0..3).map(|_| None).collect();
+    for _round in 0..3 {
+        for (i, mode) in modes.iter().enumerate() {
+            let cfg = RunConfig { mode: *mode, ..base.clone() };
+            let rep = run_batch(&cfg, clip.clone()).unwrap();
+            if best[i]
+                .as_ref()
+                .map_or(true, |b| rep.metrics.fps > b.metrics.fps)
+            {
+                best[i] = Some(rep);
+            }
+        }
+    }
+    let mut fps = Vec::new();
+    for (mode, rep) in modes.iter().zip(&best) {
+        let rep = rep.as_ref().unwrap();
+        fps.push(rep.metrics.fps);
+        row(&[
+            format!("{:>12}", mode.name()),
+            format!("{:>10.1}", rep.metrics.fps),
+            format!("{:>12}", rep.metrics.p50_us),
+            format!("{:>12}", rep.metrics.dispatches),
+        ]);
+    }
+    println!(
+        "fused-vs-simple throughput gain: {:.2}x (paper: 2-3x)",
+        fps[2] / fps[0]
+    );
+}
+
+fn main() {
+    simulated();
+    measured();
+}

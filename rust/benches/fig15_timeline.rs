@@ -1,0 +1,87 @@
+//! Fig 15 — nvprof-style execution timeline: one fused launch computing a
+//! multi-frame box vs five back-to-back simple launches computing one
+//! frame. Simulated Gantt (K20 model) plus measured per-stage PJRT stamps.
+
+use kfuse::bench_util::{header, time_fn};
+use kfuse::fusion::candidates::Segment;
+use kfuse::fusion::fuse::build_plans;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::paper_fusable_run;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::gpusim::trace::{render_ascii, timeline};
+use kfuse::prop::Gen;
+use kfuse::runtime::Runtime;
+
+fn main() {
+    let run = paper_fusable_run();
+    let dev = DeviceSpec::k20();
+    // t=8 (not the caption's 16): 32·32·16 violates the paper's own
+    // x·y·t <= beta constraint on K20 — see EXPERIMENTS.md.
+    let fused = build_plans(&[Segment { start: 0, len: 5 }], &run);
+    let simple = build_plans(
+        &(0..5).map(|i| Segment { start: i, len: 1 }).collect::<Vec<_>>(),
+        &run,
+    );
+    header("Fig 15a (simulated)", "fused kernel, one 32x32x8 box, K20");
+    let tl = timeline(
+        &fused,
+        InputDims::new(32, 32, 8),
+        BoxDims::new(32, 32, 8),
+        &dev,
+    );
+    print!("{}", render_ascii(&tl, 56));
+    let total = tl.last().unwrap().end_us;
+    println!("fused: {total:.1} us for 8 frames = {:.1} us/frame\n", total / 8.0);
+
+    header("Fig 15b (simulated)", "simple kernels, one 32x32x1 box, K20");
+    let tl = timeline(
+        &simple,
+        InputDims::new(32, 32, 1),
+        BoxDims::new(32, 32, 1),
+        &dev,
+    );
+    print!("{}", render_ascii(&tl, 56));
+    let total = tl.last().unwrap().end_us;
+    println!("simple: {total:.1} us for 1 frame (paper: ~64 us vs ~31 us/frame)\n");
+
+    // Measured per-stage stamps through PJRT.
+    let Ok(rt) = Runtime::from_dir("artifacts") else {
+        println!("(measured part skipped: no artifacts/)");
+        return;
+    };
+    header("Fig 15 (measured)", "per-stage PJRT median us, one 32x32 tile");
+    let mut g = Gen::new(3);
+    let th = [96.0f32];
+    let x1 = g.vec_f32(2 * 36 * 36 * 4, 0.0, 255.0);
+    let mut bufs: Vec<Vec<f32>> = vec![x1.clone()];
+    for (i, k) in ["k1", "k2", "k3", "k4", "k5"].iter().enumerate() {
+        let exe = rt.executable(&format!("{k}_s32_t1")).unwrap();
+        let input = bufs.last().unwrap().clone();
+        let stats = time_fn(3, 15, || {
+            let _ = if i == 4 {
+                exe.run(&[&input, &th]).unwrap()
+            } else {
+                exe.run(&[&input]).unwrap()
+            };
+        });
+        let out = if i == 4 {
+            exe.run(&[&input, &th]).unwrap()
+        } else {
+            exe.run(&[&input]).unwrap()
+        };
+        println!("  {:<22} {:>8.1} us", exe.entry.name, stats.us());
+        bufs.push(out);
+    }
+    let x8 = g.vec_f32(9 * 36 * 36 * 4, 0.0, 255.0);
+    let full = rt.executable("full_s32_t8").unwrap();
+    let stats = time_fn(3, 15, || {
+        let _ = full.run(&[&x8, &th]).unwrap();
+    });
+    println!(
+        "  {:<22} {:>8.1} us ({:.1} us/frame over 8 frames)",
+        "full_s32_t8",
+        stats.us(),
+        stats.us() / 8.0
+    );
+}

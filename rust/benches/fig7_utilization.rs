@@ -1,0 +1,47 @@
+//! Fig 7 — Data utilization vs box size for the paper's three devices.
+//!
+//! DU = xyt / ((x+2δx)(y+2δy)(t+δt)) with DU := 0 when x·y·t exceeds the
+//! device's SHMEM (the paper's zero-DU convention). Halo of the full fused
+//! pipeline: δx = δy = 2, δt = 1.
+
+use kfuse::bench_util::{header, row};
+use kfuse::fusion::boxopt::{self, data_utilization_capped};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::Radii;
+use kfuse::gpusim::device::DeviceSpec;
+
+fn main() {
+    let halo = Radii::new(2, 2, 1);
+    let devices = DeviceSpec::paper_devices();
+    header("Fig 7", "data utilization per box size per device");
+    let mut cols = vec!["box [x,y,t]".to_string()];
+    cols.extend(devices.iter().map(|d| format!("{:>12}", d.name)));
+    row(&cols);
+    for &x in &boxopt::sweep_xs() {
+        for &t in &boxopt::sweep_ts() {
+            let b = BoxDims::new(x, x, t);
+            let mut cols = vec![format!("[{x:>3},{x:>3},{t:>2}]")];
+            for d in &devices {
+                let du = data_utilization_capped(b, halo, d.shmem_values());
+                cols.push(format!("{du:>12.3}"));
+            }
+            row(&cols);
+        }
+    }
+    // Eq (6) optimum per device.
+    header("Fig 7", "eq (6) closed-form optimum per device");
+    for d in &devices {
+        let (x, t) = boxopt::optimal_box_continuous(d.shmem_values() as f64, halo);
+        let disc = boxopt::optimal_box_discrete(
+            d.shmem_values(),
+            halo,
+            &boxopt::sweep_xs(),
+            &boxopt::sweep_ts(),
+        )
+        .unwrap();
+        println!(
+            "{:>12}: continuous x=y={:.1} t={:.1} | discrete best {:?} DU={:.3}",
+            d.name, x, t, (disc.0.x, disc.0.y, disc.0.t), disc.1
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Fig 9 — simple vs fused kernel execution times across input sizes
+//! (256², 512², 1024²) and box sizes (16, 32, 64).
+//!
+//! Two reproductions:
+//!   (a) SIMULATED per paper device (gpusim cost model; absolute numbers
+//!       are model outputs, the fused<simple ordering is the claim);
+//!   (b) MEASURED on this host through PJRT: per-box wall time of the
+//!       fused megakernel vs the 5-dispatch simple chain, scaled by the
+//!       box count B of each input (simple kernels t=1 like the paper,
+//!       fused t=8 per eq 6).
+
+use kfuse::bench_util::{header, row, time_fn};
+use kfuse::fusion::candidates::Segment;
+use kfuse::fusion::fuse::build_plans;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::paper_fusable_run;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::gpusim::model::simulate;
+use kfuse::prop::Gen;
+use kfuse::runtime::Runtime;
+
+const SIZES: [usize; 3] = [256, 512, 1024];
+const BOXES: [usize; 3] = [16, 32, 64];
+const FRAMES: usize = 1000;
+
+fn simulated() {
+    let run = paper_fusable_run();
+    let full = build_plans(&[Segment { start: 0, len: 5 }], &run);
+    let none = build_plans(
+        &(0..5).map(|i| Segment { start: i, len: 1 }).collect::<Vec<_>>(),
+        &run,
+    );
+    header("Fig 9 (simulated)", "execution time ms, input NxNx1000");
+    row(&[
+        format!("{:>12}", "device"),
+        format!("{:>6}", "N"),
+        format!("{:>10}", "box"),
+        format!("{:>12}", "simple ms"),
+        format!("{:>12}", "fused ms"),
+        format!("{:>8}", "speedup"),
+    ]);
+    for dev in DeviceSpec::paper_devices() {
+        for n in SIZES {
+            let input = InputDims::new(n, n, FRAMES);
+            for s in BOXES {
+                // Fused box must fit device SHMEM: shrink t until it does.
+                let mut t = 8;
+                while t > 1
+                    && (s + 4) * (s + 4) * (t + 1) * 4 > dev.shmem_per_block
+                {
+                    t /= 2;
+                }
+                let bx_fused = BoxDims::new(s, s, t);
+                let bx_simple = BoxDims::new(s, s, 1);
+                let fused_fits =
+                    (s + 4) * (s + 4) * (t + 1) * 4 <= dev.shmem_per_block;
+                let f = simulate(&full, input, bx_fused, &dev);
+                let sgl = simulate(&none, input, bx_simple, &dev);
+                let (fs, sp) = if fused_fits {
+                    (format!("{:>12.1}", f.seconds * 1e3),
+                     format!("{:>8.2}", sgl.seconds / f.seconds))
+                } else {
+                    (format!("{:>12}", "n/a"), format!("{:>8}", "-"))
+                };
+                row(&[
+                    format!("{:>12}", dev.name),
+                    format!("{n:>6}"),
+                    format!("[{s},{s},{t}]"),
+                    format!("{:>12.1}", sgl.seconds * 1e3),
+                    fs,
+                    sp,
+                ]);
+            }
+        }
+    }
+}
+
+fn measured() {
+    let Ok(rt) = Runtime::from_dir("artifacts") else {
+        println!("(measured part skipped: no artifacts/)");
+        return;
+    };
+    let mut g = Gen::new(99);
+    header(
+        "Fig 9 (measured, PJRT CPU)",
+        "per-box median us and whole-input extrapolation (B x per-box)",
+    );
+    row(&[
+        format!("{:>6}", "N"),
+        format!("{:>10}", "box"),
+        format!("{:>14}", "simple us/box"),
+        format!("{:>14}", "fused us/box"),
+        format!("{:>12}", "simple ms*"),
+        format!("{:>12}", "fused ms*"),
+        format!("{:>8}", "speedup"),
+    ]);
+    for s in BOXES {
+        // Inputs for one box.
+        let x_fused = g.vec_f32(9 * (s + 4) * (s + 4) * 4, 0.0, 255.0);
+        let x_simple = g.vec_f32(2 * (s + 4) * (s + 4) * 4, 0.0, 255.0);
+        let th = [96.0f32];
+        // Pre-compile.
+        let full = rt.executable(&format!("full_s{s}_t8")).unwrap();
+        let names = ["k1", "k2", "k3", "k4", "k5"];
+        let simple: Vec<_> = names
+            .iter()
+            .map(|k| rt.executable(&format!("{k}_s{s}_t1")).unwrap())
+            .collect();
+
+        let fused_stats = time_fn(3, 15, || {
+            let _ = full.run(&[&x_fused, &th]).unwrap();
+        });
+        let simple_stats = time_fn(3, 15, || {
+            let a = simple[0].run(&[&x_simple]).unwrap();
+            let b = simple[1].run(&[&a]).unwrap();
+            let c = simple[2].run(&[&b]).unwrap();
+            let d = simple[3].run(&[&c]).unwrap();
+            let _ = simple[4].run(&[&d, &th]).unwrap();
+        });
+        // Per-frame normalization: fused box covers 8 frames, simple 1.
+        let fused_us_frame = fused_stats.us() / 8.0;
+        let simple_us_frame = simple_stats.us();
+        for n in SIZES {
+            let tiles = (n / s) * (n / s);
+            let fused_total_ms =
+                fused_us_frame * tiles as f64 * FRAMES as f64 / 1e3;
+            let simple_total_ms =
+                simple_us_frame * tiles as f64 * FRAMES as f64 / 1e3;
+            row(&[
+                format!("{n:>6}"),
+                format!("[{s},{s},8/1]"),
+                format!("{:>14.1}", simple_us_frame),
+                format!("{:>14.1}", fused_us_frame),
+                format!("{:>12.0}", simple_total_ms),
+                format!("{:>12.0}", fused_total_ms),
+                format!("{:>8.2}", simple_total_ms / fused_total_ms),
+            ]);
+        }
+    }
+    println!("(* extrapolated: per-frame-per-tile median x tiles x 1000 frames)");
+}
+
+fn main() {
+    simulated();
+    measured();
+}

@@ -1,0 +1,64 @@
+//! Tables I, II, III, IV — the paper's taxonomy and fusion-codegen tables,
+//! regenerated from the kernel IR and Algorithm 1.
+
+use kfuse::bench_util::{header, row};
+use kfuse::fusion::candidates::Segment;
+use kfuse::fusion::fuse::FusedKernelPlan;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::{paper_fusable_run, paper_pipeline, OpType, Radii};
+
+fn main() {
+    header("Table I", "types of operations / data dependency");
+    for (r, label) in [
+        (Radii::point(), "|di|=1,|dj|=1,|dt|=1"),
+        (Radii::new(1, 1, 0), "|di|>1,|dj|>1,|dt|=1"),
+        (Radii::new(0, 0, 1), "|dt|>1"),
+        (Radii::new(1, 1, 1), "|di|>1,|dj|>1,|dt|>1"),
+    ] {
+        row(&[
+            format!("{:<28}", OpType::classify(r).to_string()),
+            label.to_string(),
+        ]);
+    }
+
+    header("Table II", "image processing steps and types");
+    row(&[
+        format!("{:<22}", "Algorithm"),
+        format!("{:<28}", "Type of Operation"),
+        "Multi-Frame".to_string(),
+    ]);
+    for k in paper_pipeline() {
+        row(&[
+            format!("{:<22}", k.name),
+            format!("{:<28}", k.op_type().to_string()),
+            if k.multi_frame() { "Yes" } else { "No" }.to_string(),
+        ]);
+    }
+
+    header("Table IV", "dependency types of kernels");
+    row(&[
+        format!("{:<22}", "Algorithm"),
+        format!("{:<8}", "Kernel"),
+        "Dependency Type".to_string(),
+    ]);
+    for (i, k) in paper_pipeline().iter().enumerate() {
+        row(&[
+            format!("{:<22}", k.name),
+            format!("K{:<7}", i + 1),
+            k.dep_on_prev.to_string(),
+        ]);
+    }
+
+    header("Table III", "simple and fused kernel samples (Algorithm 1 codegen)");
+    let run = paper_fusable_run();
+    let bx = BoxDims::new(32, 32, 8);
+    for (label, seg) in [
+        ("RGBFusedTh analogue {K1,K2}", Segment { start: 0, len: 2 }),
+        ("RGBFusedK-Spatial analogue {K1..K3}", Segment { start: 0, len: 3 }),
+        ("Full Fusion {K1..K5}", Segment { start: 0, len: 5 }),
+    ] {
+        let plan = FusedKernelPlan::build(seg, &run);
+        println!("\n// ---- {label} ----");
+        print!("{}", plan.codegen_cuda_like(bx));
+    }
+}

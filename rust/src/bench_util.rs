@@ -1,0 +1,73 @@
+//! Timing/reporting helpers shared by the `benches/` harnesses and
+//! examples (criterion is not in the offline vendor set; these benches
+//! are plain `harness = false` binaries).
+
+use std::time::Instant;
+
+/// Robust timing stats over repeated runs, seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn ms(&self) -> f64 {
+        self.median * 1e3
+    }
+
+    pub fn us(&self) -> f64 {
+        self.median * 1e6
+    }
+}
+
+/// Time `f` `iters` times after `warmup` unmeasured runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Stats {
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean,
+        max: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// Print a bench header in a consistent, grep-friendly format.
+pub fn header(fig: &str, what: &str) {
+    println!("\n=== {fig} — {what} ===");
+}
+
+/// Print one row of a figure table.
+pub fn row(cols: &[String]) {
+    println!("{}", cols.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let mut k = 0u64;
+        let s = time_fn(1, 9, || {
+            k += 1;
+            std::hint::black_box(k);
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.iters, 9);
+    }
+}

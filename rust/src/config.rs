@@ -1,0 +1,145 @@
+//! Run configuration shared by the CLI, examples, and benches.
+
+use crate::fusion::halo::BoxDims;
+use crate::fusion::traffic::InputDims;
+use crate::{Error, Result};
+
+/// Which fusion arm the coordinator executes (the paper's evaluation arms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionMode {
+    /// "No Fusion": five separate executables, host round-trips between.
+    None,
+    /// "Two Fusion": {K1,K2} and {K3,K4,K5}.
+    Two,
+    /// "Full Fusion": one {K1..K5} megakernel.
+    Full,
+}
+
+impl FusionMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" | "no" => Ok(FusionMode::None),
+            "two" => Ok(FusionMode::Two),
+            "full" => Ok(FusionMode::Full),
+            _ => Err(Error::Config(format!(
+                "unknown fusion mode '{s}' (expected none|two|full)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FusionMode::None => "No Fusion",
+            FusionMode::Two => "Two Fusion",
+            FusionMode::Full => "Full Fusion",
+        }
+    }
+}
+
+/// Full run configuration for the coordinator pipeline.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Frame height/width (square frames like the paper's preprocessed
+    /// 256/512/1024 inputs).
+    pub frame_size: usize,
+    /// Number of video frames to process.
+    pub frames: usize,
+    /// Source frame rate (ingest pacing for `serve`; ignored in batch).
+    pub fps: f64,
+    /// Fusion arm.
+    pub mode: FusionMode,
+    /// Output box dims (spatial must divide frame size for full coverage).
+    pub box_dims: BoxDims,
+    /// Worker threads ("SMs") executing boxes.
+    ///
+    /// Default 1: each worker owns a PJRT CPU *client*, and the client
+    /// already parallelizes across all cores internally — more workers
+    /// just thrash the shared pool (measured: 1 → 196 fps, 4 → 89 fps,
+    /// 8 → 59 fps at 256²; EXPERIMENTS.md §Perf). Raise it only for
+    /// latency isolation experiments.
+    pub workers: usize,
+    /// Binarization threshold.
+    pub threshold: f32,
+    /// Number of synthetic markers to generate/track.
+    pub markers: usize,
+    /// Bounded queue depth between batcher and workers (backpressure).
+    pub queue_depth: usize,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Process only marker ROIs (tracking mode) instead of whole frames.
+    pub roi_only: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            frame_size: 256,
+            frames: 64,
+            fps: 600.0,
+            mode: FusionMode::Full,
+            box_dims: BoxDims::new(32, 32, 8),
+            workers: 1,
+            threshold: 96.0,
+            markers: 4,
+            queue_depth: 64,
+            artifacts_dir: "artifacts".into(),
+            roi_only: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Whole-input extent for the traffic/cost models.
+    pub fn input_dims(&self) -> InputDims {
+        InputDims::new(self.frame_size, self.frame_size, self.frames)
+    }
+
+    /// Validate the configuration before running.
+    pub fn validate(&self) -> Result<()> {
+        if self.frame_size % self.box_dims.x != 0
+            || self.frame_size % self.box_dims.y != 0
+        {
+            return Err(Error::Config(format!(
+                "box {}x{} must divide frame size {}",
+                self.box_dims.x, self.box_dims.y, self.frame_size
+            )));
+        }
+        if self.frames < self.box_dims.t {
+            return Err(Error::Config(format!(
+                "need at least {} frames (one temporal box), got {}",
+                self.box_dims.t, self.frames
+            )));
+        }
+        if self.workers == 0 || self.queue_depth == 0 {
+            return Err(Error::Config("workers/queue_depth must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn box_must_divide_frame() {
+        let cfg = RunConfig {
+            box_dims: BoxDims::new(48, 48, 8),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fusion_mode_parse_roundtrip() {
+        assert_eq!(FusionMode::parse("full").unwrap(), FusionMode::Full);
+        assert_eq!(FusionMode::parse("two").unwrap(), FusionMode::Two);
+        assert_eq!(FusionMode::parse("none").unwrap(), FusionMode::None);
+        assert!(FusionMode::parse("half").is_err());
+    }
+}

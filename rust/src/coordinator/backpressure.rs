@@ -1,0 +1,209 @@
+//! Bounded queue with selectable overload policy — the streaming
+//! coordinator's backpressure element.
+//!
+//! At 600–1000 fps ingest, the box queue must either *block* the producer
+//! (batch mode: lossless, throughput-limited) or *drop* the oldest work
+//! (serve mode: bounded latency, lossy under overload). Built on
+//! `Mutex<VecDeque>` + `Condvar` (no external channel crates offline).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Overload policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Producer blocks until space frees up (lossless).
+    Block,
+    /// Oldest queued item is dropped to admit the new one (lossy).
+    DropOldest,
+}
+
+struct Inner<T> {
+    queue: Mutex<QueueState<T>>,
+    cv_push: Condvar,
+    cv_pop: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue.
+pub struct Bounded<T> {
+    inner: Arc<Inner<T>>,
+    capacity: usize,
+    policy: Policy,
+    /// Items discarded by `DropOldest`.
+    pub dropped: Arc<AtomicU64>,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded {
+            inner: self.inner.clone(),
+            capacity: self.capacity,
+            policy: self.policy,
+            dropped: self.dropped.clone(),
+        }
+    }
+}
+
+impl<T> Bounded<T> {
+    pub fn new(capacity: usize, policy: Policy) -> Self {
+        assert!(capacity > 0);
+        Bounded {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(QueueState {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                cv_push: Condvar::new(),
+                cv_pop: Condvar::new(),
+            }),
+            capacity,
+            policy,
+            dropped: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Enqueue one item, honoring the overload policy. Returns `false` if
+    /// the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.inner.cv_pop.notify_one();
+                return true;
+            }
+            match self.policy {
+                Policy::Block => {
+                    st = self.inner.cv_push.wait(st).unwrap();
+                }
+                Policy::DropOldest => {
+                    st.items.pop_front();
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                    // Loop re-checks: there is space now.
+                }
+            }
+        }
+    }
+
+    /// Dequeue one item; blocks until available. `None` when closed AND
+    /// drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.cv_push.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.cv_pop.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.cv_pop.notify_all();
+        self.inner.cv_push.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = Bounded::new(4, Policy::Block);
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn block_policy_blocks_until_space() {
+        let q = Bounded::new(1, Policy::Block);
+        q.push(1);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1); // producer is parked
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn drop_oldest_bounds_queue_and_counts() {
+        let q = Bounded::new(2, Policy::DropOldest);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.dropped.load(Ordering::Relaxed), 3);
+        assert_eq!(q.pop(), Some(3)); // oldest survivors
+        assert_eq!(q.pop(), Some(4));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Bounded::new(4, Policy::Block);
+        q.push(7);
+        q.close();
+        assert!(!q.push(8));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q: Bounded<usize> = Bounded::new(8, Policy::Block);
+        let total = 1000;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..total {
+            q.push(i);
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+}

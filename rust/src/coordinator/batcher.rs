@@ -1,0 +1,163 @@
+//! Frame→temporal-box batching for streaming ingest (serve mode).
+//!
+//! Assembles arriving frames into rolling windows of `t` output frames plus
+//! the one leading halo frame the IIR stage needs (dt = 1). Window k covers
+//! stream frames `[k·t, (k+1)·t)`; its buffer holds `t+1` frames starting
+//! at `k·t − 1` (clamped at stream start, matching the IIR warm start).
+
+use crate::video::Video;
+
+/// Rolling temporal batcher.
+pub struct Batcher {
+    t: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    /// Last frame of the previous window (the next window's halo).
+    carry: Option<Vec<f32>>,
+    /// Frames accumulated for the current window.
+    pending: Vec<Vec<f32>>,
+    /// Stream index of the first frame in `pending`.
+    next_t0: usize,
+}
+
+/// One emitted window: a (t+1, H, W, C) buffer whose first frame is the
+/// temporal halo.
+pub struct Window {
+    /// Stream index of the first *output* frame of this window.
+    pub t0: usize,
+    pub buf: Video,
+}
+
+impl Batcher {
+    pub fn new(t: usize, h: usize, w: usize, c: usize) -> Self {
+        assert!(t >= 1);
+        Batcher {
+            t,
+            h,
+            w,
+            c,
+            carry: None,
+            pending: Vec::new(),
+            next_t0: 0,
+        }
+    }
+
+    /// Push one frame (H·W·C flattened). Returns a full window when ready.
+    pub fn push(&mut self, frame: Vec<f32>) -> Option<Window> {
+        assert_eq!(frame.len(), self.h * self.w * self.c);
+        self.pending.push(frame);
+        if self.pending.len() < self.t {
+            return None;
+        }
+        // Assemble halo + t frames.
+        let halo = self
+            .carry
+            .clone()
+            .unwrap_or_else(|| self.pending[0].clone()); // clip start: clamp
+        let mut buf = Video::zeros(self.t + 1, self.h, self.w, self.c);
+        let plane = self.h * self.w * self.c;
+        buf.data[..plane].copy_from_slice(&halo);
+        for (k, f) in self.pending.iter().enumerate() {
+            buf.data[(k + 1) * plane..(k + 2) * plane].copy_from_slice(f);
+        }
+        self.carry = Some(self.pending.last().unwrap().clone());
+        let t0 = self.next_t0;
+        self.next_t0 += self.t;
+        self.pending.clear();
+        Some(Window { t0, buf })
+    }
+
+    /// Frames currently buffered (not yet emitted).
+    pub fn pending_frames(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(h: usize, w: usize, val: f32) -> Vec<f32> {
+        vec![val; h * w]
+    }
+
+    #[test]
+    fn emits_every_t_frames() {
+        let mut b = Batcher::new(4, 2, 2, 1);
+        for k in 0..3 {
+            assert!(b.push(frame(2, 2, k as f32)).is_none());
+        }
+        let w = b.push(frame(2, 2, 3.0)).unwrap();
+        assert_eq!(w.t0, 0);
+        assert_eq!(w.buf.t, 5); // halo + 4
+        // Clip start: halo frame duplicates frame 0.
+        assert_eq!(w.buf.get(0, 0, 0, 0), 0.0);
+        assert_eq!(w.buf.get(1, 0, 0, 0), 0.0);
+        assert_eq!(w.buf.get(4, 0, 0, 0), 3.0);
+    }
+
+    #[test]
+    fn carry_becomes_next_halo() {
+        let mut b = Batcher::new(2, 1, 1, 1);
+        b.push(frame(1, 1, 10.0));
+        let w0 = b.push(frame(1, 1, 11.0)).unwrap();
+        assert_eq!(w0.t0, 0);
+        b.push(frame(1, 1, 12.0));
+        let w1 = b.push(frame(1, 1, 13.0)).unwrap();
+        assert_eq!(w1.t0, 2);
+        // w1's halo frame is w0's last output frame (11).
+        assert_eq!(w1.buf.get(0, 0, 0, 0), 11.0);
+        assert_eq!(w1.buf.get(1, 0, 0, 0), 12.0);
+    }
+
+    #[test]
+    fn pending_counter() {
+        let mut b = Batcher::new(3, 1, 1, 1);
+        assert_eq!(b.pending_frames(), 0);
+        b.push(frame(1, 1, 0.0));
+        assert_eq!(b.pending_frames(), 1);
+        b.push(frame(1, 1, 1.0));
+        b.push(frame(1, 1, 2.0));
+        assert_eq!(b.pending_frames(), 0); // emitted
+    }
+}
+
+#[cfg(test)]
+mod window_equivalence_tests {
+    use super::*;
+    use crate::fusion::halo::BoxDims;
+    use crate::fusion::kernel_ir::Radii;
+
+    /// Serve-mode windows must feed workers the exact bytes batch mode
+    /// extracts from the whole clip (same IIR halo semantics).
+    #[test]
+    fn window_extraction_equals_whole_clip_extraction() {
+        let (t_total, h, w, c) = (8usize, 6usize, 6usize, 4usize);
+        let mut clip = Video::zeros(t_total, h, w, c);
+        for (k, v) in clip.data.iter_mut().enumerate() {
+            *v = (k % 509) as f32;
+        }
+        let box_t = 4;
+        let dims = BoxDims::new(4, 4, box_t);
+        let halo = Radii::new(1, 1, 1);
+        let mut b = Batcher::new(box_t, h, w, c);
+        let plane = h * w * c;
+        let mut windows = Vec::new();
+        for t in 0..t_total {
+            let frame = clip.data[t * plane..(t + 1) * plane].to_vec();
+            if let Some(win) = b.push(frame) {
+                windows.push(win);
+            }
+        }
+        assert_eq!(windows.len(), 2);
+        for win in &windows {
+            // Batch mode: extract from the whole clip at stream origin.
+            let want = clip.extract_box(win.t0, 1, 1, dims, halo);
+            // Serve mode: extract from the rolling window (origin +1: the
+            // window's frame 0 is the halo frame).
+            let got = win.buf.extract_box(1, 1, 1, dims, halo);
+            assert_eq!(got, want, "window at t0={}", win.t0);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Lock-free run metrics: throughput, latency percentiles, traffic
+//! counters. Shared across worker threads via atomics; snapshotted into a
+//! [`MetricsReport`] at the end of a run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared counters (cheap on the hot path).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Boxes executed.
+    pub boxes: AtomicU64,
+    /// Frames fully processed (counted once per temporal box row).
+    pub frames: AtomicU64,
+    /// Host-staged bytes into executables (the GMEM-read analogue).
+    pub bytes_in: AtomicU64,
+    /// Bytes read back from executables (the GMEM-write analogue).
+    pub bytes_out: AtomicU64,
+    /// Executable dispatches (kernel launches).
+    pub dispatches: AtomicU64,
+    /// Frames dropped by backpressure (serve mode).
+    pub dropped: AtomicU64,
+    /// Per-box latencies, microseconds (mutex: amortized by batching).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_box(&self, latency: Duration, bytes_in: u64, bytes_out: u64,
+                      dispatches: u64) {
+        self.boxes.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
+        self.dispatches.fetch_add(dispatches, Ordering::Relaxed);
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self, wall: Duration, frames: u64) -> MetricsReport {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[(((lat.len() - 1) as f64 * p).ceil()) as usize]
+            }
+        };
+        MetricsReport {
+            wall,
+            boxes: self.boxes.load(Ordering::Relaxed),
+            frames,
+            fps: frames as f64 / wall.as_secs_f64(),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+        }
+    }
+}
+
+/// Immutable end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub wall: Duration,
+    pub boxes: u64,
+    pub frames: u64,
+    pub fps: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub dispatches: u64,
+    pub dropped: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "wall {:>8.1} ms | {} boxes | {} frames | {:>8.1} fps",
+            self.wall.as_secs_f64() * 1e3,
+            self.boxes,
+            self.frames,
+            self.fps
+        )?;
+        writeln!(
+            f,
+            "traffic in {:.1} MB out {:.1} MB | {} dispatches | {} dropped",
+            self.bytes_in as f64 / 1e6,
+            self.bytes_out as f64 / 1e6,
+            self.dispatches,
+            self.dropped
+        )?;
+        write!(
+            f,
+            "box latency p50 {} us | p95 {} us | p99 {} us",
+            self.p50_us, self.p95_us, self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_box(Duration::from_micros(100), 10, 5, 3);
+        m.record_box(Duration::from_micros(300), 20, 10, 3);
+        let r = m.snapshot(Duration::from_millis(10), 16);
+        assert_eq!(r.boxes, 2);
+        assert_eq!(r.bytes_in, 30);
+        assert_eq!(r.dispatches, 6);
+        assert_eq!(r.fps, 1600.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 30, 40, 50, 1000] {
+            m.record_box(Duration::from_micros(us), 0, 0, 1);
+        }
+        let r = m.snapshot(Duration::from_secs(1), 1);
+        assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);
+        assert_eq!(r.p99_us, 1000);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        let r = m.snapshot(Duration::from_secs(1), 0);
+        assert_eq!(r.p50_us, 0);
+        assert_eq!(r.fps, 0.0);
+    }
+}

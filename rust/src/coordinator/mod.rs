@@ -1,0 +1,20 @@
+//! The L3 streaming coordinator: cuts high-speed video into the planner's
+//! boxes, dispatches them to AOT-compiled PJRT executables across a worker
+//! pool, reassembles binarized output, and drives the Kalman tracker.
+//!
+//! Dataflow (batch): synth/ingest → [`plan::ExecutionPlan`] →
+//! [`backpressure::Bounded`] box queue → [`scheduler`] workers (one PJRT
+//! client each) → collector → [`crate::tracking::Tracker`] →
+//! [`metrics::MetricsReport`]. Serve mode paces ingest at the source fps
+//! through [`batcher::Batcher`] with a drop-oldest queue.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod plan;
+pub mod scheduler;
+
+pub use metrics::{Metrics, MetricsReport};
+pub use pipeline::{run_batch, run_batch_synth, run_roi, run_serve, synth_clip, RunReport};
+pub use plan::ExecutionPlan;

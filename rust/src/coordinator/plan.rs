@@ -1,0 +1,99 @@
+//! Execution plans: resolve a fusion arm + box geometry to the artifact
+//! chain each worker dispatches per box.
+
+use crate::config::FusionMode;
+use crate::fusion::halo::BoxDims;
+use crate::fusion::kernel_ir::Radii;
+use crate::runtime::Manifest;
+
+/// One dispatch in the per-box chain.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Artifact name (manifest key).
+    pub artifact: String,
+    /// Whether this executable takes the threshold scalar as 2nd input.
+    pub takes_threshold: bool,
+}
+
+/// The resolved per-box execution chain for one fusion arm.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub mode: FusionMode,
+    /// Output-box geometry.
+    pub box_dims: BoxDims,
+    /// Input halo of the whole chain (cumulative: dx=dy=2, dt=1).
+    pub halo: Radii,
+    /// Stages in dispatch order.
+    pub stages: Vec<Stage>,
+    /// Detection artifact appended after the chain (optional).
+    pub detect: Option<String>,
+}
+
+impl ExecutionPlan {
+    /// Build the plan for `(mode, s×s×t)` boxes. The artifact set must
+    /// have been emitted for this geometry (see `python/compile/aot.py`).
+    pub fn resolve(mode: FusionMode, box_dims: BoxDims, with_detect: bool)
+                   -> ExecutionPlan {
+        assert_eq!(box_dims.x, box_dims.y, "boxes are square (paper eq 4)");
+        let (s, t) = (box_dims.x, box_dims.t);
+        let stages = Manifest::arm_artifacts(mode, s, t)
+            .into_iter()
+            .map(|artifact| {
+                // k5, two_b and full take the threshold scalar.
+                let takes_threshold = artifact.starts_with("k5_")
+                    || artifact.starts_with("two_b_")
+                    || artifact.starts_with("full_");
+                Stage {
+                    artifact,
+                    takes_threshold,
+                }
+            })
+            .collect();
+        ExecutionPlan {
+            mode,
+            box_dims,
+            halo: Radii::new(2, 2, 1),
+            stages,
+            detect: with_detect.then(|| Manifest::detect_artifact(s, t)),
+        }
+    }
+
+    /// Kernel launches per box (for the dispatch metric).
+    pub fn dispatches_per_box(&self) -> u64 {
+        self.stages.len() as u64 + self.detect.is_some() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_plan_single_stage() {
+        let p = ExecutionPlan::resolve(FusionMode::Full,
+                                       BoxDims::new(32, 32, 8), true);
+        assert_eq!(p.stages.len(), 1);
+        assert!(p.stages[0].takes_threshold);
+        assert_eq!(p.detect.as_deref(), Some("detect_s32_t8"));
+        assert_eq!(p.dispatches_per_box(), 2);
+    }
+
+    #[test]
+    fn none_plan_five_stages_threshold_last() {
+        let p = ExecutionPlan::resolve(FusionMode::None,
+                                       BoxDims::new(16, 16, 8), false);
+        assert_eq!(p.stages.len(), 5);
+        assert!(p.stages[..4].iter().all(|s| !s.takes_threshold));
+        assert!(p.stages[4].takes_threshold);
+        assert_eq!(p.dispatches_per_box(), 5);
+    }
+
+    #[test]
+    fn two_plan_threshold_on_second() {
+        let p = ExecutionPlan::resolve(FusionMode::Two,
+                                       BoxDims::new(64, 64, 8), false);
+        assert_eq!(p.stages.len(), 2);
+        assert!(!p.stages[0].takes_threshold);
+        assert!(p.stages[1].takes_threshold);
+    }
+}

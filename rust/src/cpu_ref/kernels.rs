@@ -1,0 +1,207 @@
+//! Serial CPU implementations of the pipeline stages — the paper's "CPU"
+//! baseline (Fig 10) and the Rust-side numerical oracle for integration
+//! tests against the PJRT artifacts.
+//!
+//! Semantics are identical to `python/compile/kernels/ref.py`: BT.601 luma,
+//! α=0.5 IIR with warm start, 3×3 binomial, Sobel L1 magnitude, ≥th
+//! binarization; all stencils valid-mode.
+
+/// IIR smoothing factor (mirrors ref.IIR_ALPHA).
+pub const IIR_ALPHA: f32 = 0.5;
+
+/// BT.601 luma weights (mirrors ref.LUMA).
+pub const LUMA: [f32; 3] = [0.299, 0.587, 0.114];
+
+/// Dimensions helper for flat (T, H, W[, C]) buffers.
+#[inline]
+fn at(h: usize, w: usize, t: usize, i: usize, j: usize) -> usize {
+    (t * h + i) * w + j
+}
+
+/// K1: (T,H,W,4) RGBA -> (T,H,W) gray.
+pub fn rgb2gray(x: &[f32], t: usize, h: usize, w: usize) -> Vec<f32> {
+    assert_eq!(x.len(), t * h * w * 4);
+    let mut out = vec![0.0; t * h * w];
+    for (o, px) in out.iter_mut().zip(x.chunks_exact(4)) {
+        *o = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+    }
+    out
+}
+
+/// K2: (T,H,W) -> (T-1,H,W), y[t] = a·x[t] + (1-a)·y[t-1], y[-1]=x[0].
+pub fn iir(x: &[f32], t: usize, h: usize, w: usize, alpha: f32) -> Vec<f32> {
+    assert!(t >= 2);
+    assert_eq!(x.len(), t * h * w);
+    let plane = h * w;
+    let mut out = vec![0.0; (t - 1) * plane];
+    let mut carry: Vec<f32> = x[..plane].to_vec();
+    for ft in 1..t {
+        let src = &x[ft * plane..(ft + 1) * plane];
+        let dst = &mut out[(ft - 1) * plane..ft * plane];
+        for k in 0..plane {
+            carry[k] = alpha * src[k] + (1.0 - alpha) * carry[k];
+            dst[k] = carry[k];
+        }
+    }
+    out
+}
+
+/// K3: 3×3 binomial, valid: (T,H,W) -> (T,H-2,W-2).
+pub fn gaussian3(x: &[f32], t: usize, h: usize, w: usize) -> Vec<f32> {
+    assert!(h >= 3 && w >= 3);
+    let (oh, ow) = (h - 2, w - 2);
+    let mut out = vec![0.0; t * oh * ow];
+    for ft in 0..t {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut acc = 0.0;
+                const K: [[f32; 3]; 3] =
+                    [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
+                for (di, row) in K.iter().enumerate() {
+                    for (dj, kv) in row.iter().enumerate() {
+                        acc += kv * x[at(h, w, ft, i + di, j + dj)];
+                    }
+                }
+                out[at(oh, ow, ft, i, j)] = acc / 16.0;
+            }
+        }
+    }
+    out
+}
+
+/// K4: Sobel |Gx|+|Gy|, valid: (T,H,W) -> (T,H-2,W-2).
+pub fn gradient3(x: &[f32], t: usize, h: usize, w: usize) -> Vec<f32> {
+    assert!(h >= 3 && w >= 3);
+    let (oh, ow) = (h - 2, w - 2);
+    let mut out = vec![0.0; t * oh * ow];
+    for ft in 0..t {
+        for i in 0..oh {
+            for j in 0..ow {
+                let p = |di: usize, dj: usize| x[at(h, w, ft, i + di, j + dj)];
+                let gx = (p(0, 2) - p(0, 0))
+                    + 2.0 * (p(1, 2) - p(1, 0))
+                    + (p(2, 2) - p(2, 0));
+                let gy = (p(2, 0) - p(0, 0))
+                    + 2.0 * (p(2, 1) - p(0, 1))
+                    + (p(2, 2) - p(0, 2));
+                out[at(oh, ow, ft, i, j)] = gx.abs() + gy.abs();
+            }
+        }
+    }
+    out
+}
+
+/// K5: binarize to {0, 255}.
+pub fn threshold(x: &[f32], th: f32) -> Vec<f32> {
+    x.iter()
+        .map(|&v| if v >= th { 255.0 } else { 0.0 })
+        .collect()
+}
+
+/// The full K1..K5 chain on a halo'd box:
+/// (T+1, X+4, Y+4, 4) -> (T, X, Y). Mirrors `ref.pipeline`.
+pub fn pipeline(
+    x: &[f32],
+    t_in: usize,
+    h_in: usize,
+    w_in: usize,
+    th: f32,
+) -> Vec<f32> {
+    let g = rgb2gray(x, t_in, h_in, w_in);
+    let y = iir(&g, t_in, h_in, w_in, IIR_ALPHA);
+    let s = gaussian3(&y, t_in - 1, h_in, w_in);
+    let d = gradient3(&s, t_in - 1, h_in - 2, w_in - 2);
+    threshold(&d, th)
+}
+
+/// Per-frame (mass, Σi, Σj) of on-pixels — mirrors `ref.detect`.
+pub fn detect(binary: &[f32], t: usize, h: usize, w: usize) -> Vec<[f32; 3]> {
+    let mut out = vec![[0.0f32; 3]; t];
+    for ft in 0..t {
+        for i in 0..h {
+            for j in 0..w {
+                if binary[at(h, w, ft, i, j)] > 0.0 {
+                    out[ft][0] += 1.0;
+                    out[ft][1] += i as f32;
+                    out[ft][2] += j as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Gen;
+
+    #[test]
+    fn gray_of_white_is_luma_sum() {
+        let x = vec![255.0; 1 * 2 * 2 * 4];
+        let g = rgb2gray(&x, 1, 2, 2);
+        let want = 255.0 * (LUMA[0] + LUMA[1] + LUMA[2]);
+        for v in g {
+            assert!((v - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn iir_constant_input_is_fixed_point() {
+        let x = vec![100.0; 5 * 3 * 3];
+        let y = iir(&x, 5, 3, 3, 0.5);
+        assert!(y.iter().all(|&v| (v - 100.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn gaussian_preserves_constant_gradient_kills_it() {
+        let x = vec![42.0; 2 * 5 * 5];
+        let s = gaussian3(&x, 2, 5, 5);
+        assert!(s.iter().all(|&v| (v - 42.0).abs() < 1e-4));
+        let d = gradient3(&x, 2, 5, 5);
+        assert!(d.iter().all(|&v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn gradient_detects_vertical_edge() {
+        // Left half 0, right half 200: |Gx| fires along the boundary.
+        let (h, w) = (5, 6);
+        let mut x = vec![0.0; h * w];
+        for i in 0..h {
+            for j in 3..w {
+                x[i * w + j] = 200.0;
+            }
+        }
+        let d = gradient3(&x, 1, h, w);
+        let (oh, ow) = (h - 2, w - 2);
+        // Column at the edge (output j=1,2 touch the step) is strong.
+        assert!(d[0 * ow + 1] > 400.0 || d[0 * ow + 2] > 400.0);
+        // Far-left output column is flat.
+        assert_eq!(d[(oh - 1) * ow], 0.0);
+    }
+
+    #[test]
+    fn pipeline_shapes_chain() {
+        let mut g = Gen::new(3);
+        let (t_in, h_in, w_in) = (9, 20, 20);
+        let x = g.vec_f32(t_in * h_in * w_in * 4, 0.0, 255.0);
+        let out = pipeline(&x, t_in, h_in, w_in, 96.0);
+        assert_eq!(out.len(), 8 * 16 * 16);
+        assert!(out.iter().all(|&v| v == 0.0 || v == 255.0));
+    }
+
+    #[test]
+    fn detect_centroid_matches_blob() {
+        let (t, h, w) = (1, 16, 16);
+        let mut b = vec![0.0; t * h * w];
+        for i in 4..7 {
+            for j in 8..11 {
+                b[i * w + j] = 255.0;
+            }
+        }
+        let d = detect(&b, t, h, w);
+        assert_eq!(d[0][0], 9.0);
+        assert!((d[0][1] / d[0][0] - 5.0).abs() < 1e-6);
+        assert!((d[0][2] / d[0][0] - 9.0).abs() < 1e-6);
+    }
+}

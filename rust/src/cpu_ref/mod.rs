@@ -1,0 +1,5 @@
+//! Serial CPU baseline (Fig 10's "CPU" arm) and Rust-side oracle.
+
+pub mod kernels;
+
+pub use kernels::{detect, gaussian3, gradient3, iir, pipeline, rgb2gray, threshold};

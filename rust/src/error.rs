@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+
+/// Unified error for planner, runtime, and coordinator layers.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Artifact registry problems (missing manifest entry, bad spec syntax).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA failures surfaced from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Planner infeasibility (e.g. no partition fits shared memory).
+    #[error("planning error: {0}")]
+    Plan(String),
+
+    /// Shape/extent mismatches when wiring buffers to executables.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Coordinator runtime failures (channel teardown, worker panic).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Configuration parse errors (CLI or config file).
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

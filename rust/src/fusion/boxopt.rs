@@ -1,0 +1,174 @@
+//! Data utilization and optimal box sizing — the paper's eq (3)–(6).
+//!
+//! Data utilization of one thread block (eq 3):
+//!
+//! ```text
+//!   DU = output / input = x·y·t / ((x+δx)·(y+δy)·(t+δt))
+//! ```
+//!
+//! Subject to the shared-memory capacity `x²·t ≤ β` (with x = y), the
+//! paper minimizes the input volume `V = (x+δx)²·(t+δt)` and obtains the
+//! closed form (eq 6):
+//!
+//! ```text
+//!   x = y = (2β·δx/δt)^(1/3)      t = 2^(-2/3)·β^(1/3)·(δt/δx)^(2/3)
+//! ```
+//!
+//! [`optimal_box_continuous`] implements that closed form; the discrete
+//! [`optimal_box_discrete`] searches the feasible integer lattice directly
+//! (what the runtime actually uses) and the tests confirm the closed form
+//! sits at/near the discrete argmax.
+
+use super::halo::BoxDims;
+use super::kernel_ir::Radii;
+
+/// Eq (3): data utilization of a box under a halo. In (0, 1].
+pub fn data_utilization(b: BoxDims, h: Radii) -> f64 {
+    let inp = b.with_halo(h);
+    b.pixels() as f64 / inp.pixels() as f64
+}
+
+/// Eq (3) with the SHMEM capacity cap: returns 0 when the box exceeds
+/// shared memory. Fig 7's convention ("zero DU implies x·y·t > SHMEM")
+/// caps on the *output* box volume, matching the paper's constraint
+/// `x²·t ≤ β` in eq (4).
+pub fn data_utilization_capped(b: BoxDims, h: Radii, beta_values: usize) -> f64 {
+    if b.pixels() > beta_values {
+        0.0
+    } else {
+        data_utilization(b, h)
+    }
+}
+
+/// Eq (6): continuous optimum (x = y, t) for capacity `beta` (values) and
+/// halo radii `h`. Temporal-only or spatial-only halos degenerate: we fall
+/// back to putting all capacity in the unconstrained axes.
+pub fn optimal_box_continuous(beta: f64, h: Radii) -> (f64, f64) {
+    let dx = h.dx.max(h.dy) as f64; // paper assumes δx = δy
+    let dt = h.dt as f64;
+    if dx == 0.0 && dt == 0.0 {
+        // Point pipeline: any shape works; balance to a cube.
+        let x = beta.powf(1.0 / 3.0);
+        return (x, x);
+    }
+    if dt == 0.0 {
+        // No temporal halo: minimize spatial waste with t = 1.
+        return ((beta).sqrt(), 1.0);
+    }
+    if dx == 0.0 {
+        // No spatial halo: maximize t, minimal spatial extent is moot;
+        // balance x to fill capacity at t chosen below.
+        let t = beta.powf(1.0 / 3.0);
+        return ((beta / t).sqrt(), t);
+    }
+    let x = (2.0 * beta * dx / dt).powf(1.0 / 3.0);
+    let t = beta.powf(1.0 / 3.0) * (dt / dx).powf(2.0 / 3.0)
+        / 2.0f64.powf(2.0 / 3.0);
+    (x, t)
+}
+
+/// Discrete argmax of DU over `x = y ∈ xs, t ∈ ts` subject to the *input*
+/// box fitting in `beta_values`. Returns the best (box, DU).
+pub fn optimal_box_discrete(
+    beta_values: usize,
+    h: Radii,
+    xs: &[usize],
+    ts: &[usize],
+) -> Option<(BoxDims, f64)> {
+    let mut best: Option<(BoxDims, f64)> = None;
+    for &x in xs {
+        for &t in ts {
+            let b = BoxDims::new(x, x, t);
+            let du = data_utilization_capped(b, h, beta_values);
+            if du > 0.0 && best.map_or(true, |(_, bd)| du > bd) {
+                best = Some((b, du));
+            }
+        }
+    }
+    best
+}
+
+/// The sweep lattices used throughout the benches (powers of two, like the
+/// paper's 16/32/64 spatial and 1..16 temporal axes).
+pub fn sweep_xs() -> Vec<usize> {
+    vec![4, 8, 16, 32, 64, 128]
+}
+
+pub fn sweep_ts() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::DeviceSpec;
+
+    const H: Radii = Radii::new(2, 2, 1);
+
+    #[test]
+    fn du_in_unit_interval() {
+        for x in [1usize, 8, 32, 128] {
+            for t in [1usize, 4, 16] {
+                let du = data_utilization(BoxDims::new(x, x, t), H);
+                assert!(du > 0.0 && du <= 1.0, "du={du}");
+            }
+        }
+    }
+
+    #[test]
+    fn du_monotone_in_box_volume() {
+        // Bigger boxes waste proportionally less halo (paper §VI-E).
+        let small = data_utilization(BoxDims::new(8, 8, 4), H);
+        let big = data_utilization(BoxDims::new(64, 64, 16), H);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn zero_du_when_exceeding_shmem() {
+        // Fig 7: boxes whose input exceeds SHMEM report DU = 0.
+        let c1060 = DeviceSpec::c1060();
+        let du = data_utilization_capped(
+            BoxDims::new(64, 64, 8),
+            H,
+            c1060.shmem_values(),
+        );
+        assert_eq!(du, 0.0);
+    }
+
+    #[test]
+    fn closed_form_near_discrete_argmax() {
+        // Continuous optimum from eq (6) should (nearly) maximize DU on a
+        // fine lattice around it.
+        let beta = DeviceSpec::k20().shmem_values() as f64;
+        let (xc, tc) = optimal_box_continuous(beta, H);
+        assert!(xc > 1.0 && tc > 0.5);
+        // Build a fine lattice and find the discrete argmax.
+        let xs: Vec<usize> = (2..200).collect();
+        let ts: Vec<usize> = (1..64).collect();
+        let (bb, bd) =
+            optimal_box_discrete(beta as usize, H, &xs, &ts).unwrap();
+        // DU at the floored closed form (flooring keeps x²t ≤ β after
+        // rounding) within 5% of the discrete best.
+        let cand = BoxDims::new(xc.floor() as usize, xc.floor() as usize,
+                                tc.floor().max(1.0) as usize);
+        let du_c = data_utilization_capped(cand, H, beta as usize);
+        assert!(
+            du_c >= 0.95 * bd,
+            "closed form {cand:?} du={du_c}, best {bb:?} du={bd}"
+        );
+    }
+
+    #[test]
+    fn constraint_respected() {
+        let beta = DeviceSpec::c1060().shmem_values();
+        let (b, _) =
+            optimal_box_discrete(beta, H, &sweep_xs(), &sweep_ts()).unwrap();
+        assert!(b.pixels() <= beta);
+    }
+
+    #[test]
+    fn spatial_only_halo_prefers_t1() {
+        let (_, t) = optimal_box_continuous(4096.0, Radii::new(2, 2, 0));
+        assert_eq!(t, 1.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Fusable-set identification (§VI-A).
+//!
+//! 1. Split the kernel sequence into **fusable runs** at Kernel-to-Kernel
+//!    boundaries (KK needs a device-wide barrier — excluded from fusion).
+//! 2. Within a run of `n` kernels, the candidate fused kernels are the
+//!    contiguous subsequences `[i..j]` — exactly `n(n+1)/2` of them, the
+//!    paper's "number of possible fused kernel combinations".
+//!
+//! Restrictions (paper §VII): execution order is preserved, each kernel is
+//! covered exactly once, a fused kernel's SHMEM footprint must fit the
+//! device (enforced downstream by the cost model's feasibility bit).
+
+use super::kernel_ir::{DepType, KernelSpec};
+
+/// A contiguous candidate segment `[start, start+len)` of a fusable run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Segment {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    /// Kernel indices covered by this candidate.
+    pub fn kernels(&self) -> std::ops::Range<usize> {
+        self.start..self.end()
+    }
+
+    pub fn overlaps(&self, o: &Segment) -> bool {
+        self.start < o.end() && o.start < self.end()
+    }
+}
+
+/// Split a kernel sequence into maximal fusable runs: a new run begins at
+/// every kernel whose dependency on its predecessor is Kernel-to-Kernel.
+/// Returns index ranges into the original sequence.
+pub fn fusable_runs(kernels: &[KernelSpec]) -> Vec<std::ops::Range<usize>> {
+    let mut runs = Vec::new();
+    let mut start = 0;
+    for (i, k) in kernels.iter().enumerate() {
+        if i > 0 && k.dep_on_prev == DepType::KernelToKernel {
+            runs.push(start..i);
+            start = i;
+        }
+    }
+    if start < kernels.len() {
+        runs.push(start..kernels.len());
+    }
+    runs
+}
+
+/// All `n(n+1)/2` contiguous candidates for a run of `n` kernels.
+pub fn enumerate_candidates(n: usize) -> Vec<Segment> {
+    let mut out = Vec::with_capacity(n * (n + 1) / 2);
+    for start in 0..n {
+        for len in 1..=(n - start) {
+            out.push(Segment { start, len });
+        }
+    }
+    out
+}
+
+/// Positions inside a fused segment after which Algorithm 1 must insert a
+/// local synchronization: boundaries where the *next* stage is
+/// Thread-to-Multi-Thread dependent (it reads a window other threads wrote).
+pub fn sync_points(seg: &[KernelSpec]) -> Vec<usize> {
+    seg.iter()
+        .enumerate()
+        .skip(1)
+        .filter(|(_, k)| k.dep_on_prev == DepType::ThreadToMultiThread)
+        .map(|(i, _)| i - 1)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::paper_pipeline;
+
+    #[test]
+    fn paper_runs_split_at_kalman() {
+        // K1..K5 fusable; K6 (Kalman, KK) alone — the paper's 𝕂1, 𝕂2.
+        let runs = fusable_runs(&paper_pipeline());
+        assert_eq!(runs, vec![0..5, 5..6]);
+    }
+
+    #[test]
+    fn candidate_count_is_n_n1_over_2() {
+        for n in 1..=10 {
+            assert_eq!(enumerate_candidates(n).len(), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn candidates_unique_and_in_bounds() {
+        let c = enumerate_candidates(5);
+        for (i, a) in c.iter().enumerate() {
+            assert!(a.end() <= 5 && a.len >= 1);
+            for b in &c[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_sync_points() {
+        // Gaussian (idx 2) and Gradient (idx 3) are TMT-dependent: syncs
+        // after stage 1 (IIR) and stage 2 (Gaussian).
+        let run = &paper_pipeline()[0..5];
+        assert_eq!(sync_points(run), vec![1, 2]);
+    }
+
+    #[test]
+    fn overlap_logic() {
+        let a = Segment { start: 0, len: 2 };
+        let b = Segment { start: 1, len: 2 };
+        let c = Segment { start: 2, len: 1 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(b.overlaps(&c));
+    }
+
+    #[test]
+    fn all_kk_sequence_degenerates_to_singletons() {
+        let mut ks = paper_pipeline();
+        for k in ks.iter_mut() {
+            k.dep_on_prev = DepType::KernelToKernel;
+        }
+        let runs = fusable_runs(&ks);
+        assert_eq!(runs.len(), ks.len());
+        assert!(runs.iter().all(|r| r.len() == 1));
+    }
+}

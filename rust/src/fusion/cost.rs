@@ -1,0 +1,230 @@
+//! Execution-time prediction for candidate fused kernels — the `C_i`
+//! coefficients of the Fig 5 optimization model.
+//!
+//! Follows the structure Wahib & Maruyama use for memory-bound GPU kernels:
+//! a candidate's time is the max of its memory phase and compute phase
+//! (roofline), plus fixed launch overhead, with the memory phase split
+//! between GMEM traffic (the §VI-D transfer volume) and SHMEM traffic for
+//! intermediate reuse inside the fused kernel (eq 2: intermediates stay in
+//! SHMEM, which is `shmem_speedup×` faster).
+
+use super::halo::{halo_cumulative, BoxDims};
+use super::kernel_ir::{KernelSpec, BYTES_PER_VALUE};
+use super::traffic::InputDims;
+use crate::gpusim::device::DeviceSpec;
+use crate::gpusim::occupancy;
+
+/// Cost-model output for one candidate fused kernel (one contiguous
+/// segment of the fusable run).
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateCost {
+    /// Predicted wall time, seconds. `f64::INFINITY` if infeasible.
+    pub seconds: f64,
+    /// GMEM bytes moved.
+    pub gmem_bytes: u64,
+    /// SHMEM bytes moved (intra-fusion intermediate reuse).
+    pub shmem_bytes: u64,
+    /// Whether the halo'd input box fits the device's SHMEM.
+    pub feasible: bool,
+}
+
+/// Predict the execution time of fusing `seg` into one kernel, over the
+/// whole `input` volume cut into `bx` boxes, on `dev`.
+pub fn predict(
+    seg: &[KernelSpec],
+    input: InputDims,
+    bx: BoxDims,
+    dev: &DeviceSpec,
+) -> CandidateCost {
+    assert!(!seg.is_empty());
+    let halo = halo_cumulative(seg);
+    let in_box = bx.with_halo(halo);
+    let boxes = input.num_boxes(bx) as f64;
+
+    // SHMEM residency per block: the halo'd *single-channel* staging box
+    // (the paper's constraint (c): x·y·t ≤ β_shared — RGBA collapses to
+    // gray during the staging load, and stages ping-pong in place).
+    // Singleton segments skip staging entirely: an unfused kernel reads
+    // GMEM directly (that IS the "No Fusion" arm), so it is always
+    // feasible; only fused kernels must fit their box in shared memory.
+    let resident_vals = in_box.pixels();
+    let feasible = seg.len() == 1
+        || resident_vals * BYTES_PER_VALUE <= dev.shmem_per_block;
+    if !feasible {
+        return CandidateCost {
+            seconds: f64::INFINITY,
+            gmem_bytes: 0,
+            shmem_bytes: 0,
+            feasible,
+        };
+    }
+
+    // GMEM: one halo'd read + one write per box (eq 2), counted in
+    // *pixel transfers* exactly as §VI-D does (channel-agnostic — the
+    // paper counts a pixel as one transfer whether RGBA or gray; channel
+    // widths matter for the Fig 13 footprint, not for traffic).
+    let gmem_vals = boxes * (in_box.pixels() as f64 + bx.pixels() as f64);
+    let gmem_bytes = gmem_vals * BYTES_PER_VALUE as f64;
+
+    // SHMEM: each *internal* stage boundary re-reads and re-writes the box
+    // from shared memory instead of GMEM (the whole point of fusion).
+    let internal = seg.len().saturating_sub(1) as f64;
+    let shmem_vals = boxes * 2.0 * bx.pixels() as f64 * internal;
+    let shmem_bytes = shmem_vals * BYTES_PER_VALUE as f64;
+
+    // Compute: sum of per-stage flops over the output volume.
+    let flops: f64 = seg
+        .iter()
+        .map(|k| k.flops_per_pixel * input.pixels() as f64)
+        .sum();
+
+    // Occupancy-scaled effective bandwidth: few resident blocks can't
+    // saturate the memory system. Singletons stage nothing, so their
+    // occupancy is not SHMEM-limited.
+    let shmem_usage = if seg.len() == 1 {
+        0
+    } else {
+        resident_vals * BYTES_PER_VALUE
+    };
+    let occ = occupancy::occupancy_factor(dev, shmem_usage,
+                                          input.num_boxes(bx));
+    let mem_time = gmem_bytes / (dev.gmem_bw * occ)
+        + shmem_bytes / (dev.gmem_bw * dev.shmem_speedup * occ);
+    let compute_time = flops / dev.flops;
+
+    // Launch: one grid launch per fused kernel.
+    let seconds = dev.launch_overhead + mem_time.max(compute_time);
+
+    CandidateCost {
+        seconds,
+        gmem_bytes: gmem_bytes as u64,
+        shmem_bytes: shmem_bytes as u64,
+        feasible,
+    }
+}
+
+/// Predicted total time of a full partition (sum of segment costs —
+/// segments execute back-to-back, eq 1 summed over fused kernels).
+pub fn predict_partition(
+    segments: &[&[KernelSpec]],
+    input: InputDims,
+    bx: BoxDims,
+    dev: &DeviceSpec,
+) -> f64 {
+    segments
+        .iter()
+        .map(|s| predict(s, input, bx, dev).seconds)
+        .sum()
+}
+
+/// Serial CPU baseline (Fig 10): every stage streams the full volume
+/// through host memory at scalar rates.
+pub fn predict_cpu_serial(
+    seg: &[KernelSpec],
+    input: InputDims,
+    dev: &DeviceSpec,
+) -> f64 {
+    let pixels = input.pixels() as f64;
+    seg.iter()
+        .map(|k| {
+            let bytes = pixels
+                * (k.in_channels + k.out_channels) as f64
+                * BYTES_PER_VALUE as f64;
+            let mem = bytes / dev.host_cpu_bw;
+            let cmp = k.flops_per_pixel * pixels / dev.host_cpu_flops;
+            mem.max(cmp)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+
+    const INPUT: InputDims = InputDims::new(256, 256, 1000);
+    const BOX: BoxDims = BoxDims::new(32, 32, 8);
+
+    fn segs<'a>(run: &'a [KernelSpec], cuts: &[usize]) -> Vec<&'a [KernelSpec]> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        for &c in cuts {
+            out.push(&run[i..i + c]);
+            i += c;
+        }
+        out
+    }
+
+    /// Largest sweep box whose *staged* full-fusion footprint fits `dev`
+    /// (C1060's 16 KB forces 16×16×8; K20/750Ti take 32×32×8 — Fig 7).
+    fn feasible_box(dev: &DeviceSpec) -> BoxDims {
+        if dev.shmem_per_block < 20 * 1024 {
+            BoxDims::new(16, 16, 8)
+        } else {
+            BOX
+        }
+    }
+
+    #[test]
+    fn fusion_wins_on_every_device() {
+        let run = paper_fusable_run();
+        for dev in DeviceSpec::paper_devices() {
+            let bx = feasible_box(&dev);
+            let full = predict_partition(&segs(&run, &[5]), INPUT, bx, &dev);
+            let none =
+                predict_partition(&segs(&run, &[1; 5]), INPUT, bx, &dev);
+            assert!(full.is_finite());
+            let speedup = none / full;
+            assert!(
+                speedup > 1.5 && speedup < 6.0,
+                "{}: speedup {speedup}",
+                dev.name
+            );
+        }
+    }
+
+    #[test]
+    fn paper_headline_2_to_3x() {
+        // §VIII: fused 2–3× faster than sequential at the paper's box dims.
+        let run = paper_fusable_run();
+        let dev = DeviceSpec::k20();
+        let full = predict_partition(&segs(&run, &[5]), INPUT, BOX, &dev);
+        let none = predict_partition(&segs(&run, &[1; 5]), INPUT, BOX, &dev);
+        let s = none / full;
+        assert!(s > 2.0 && s < 4.5, "speedup {s}");
+    }
+
+    #[test]
+    fn infeasible_when_box_exceeds_shmem() {
+        let run = paper_fusable_run();
+        let dev = DeviceSpec::c1060(); // 16 KB
+        let big = BoxDims::new(128, 128, 8);
+        let c = predict(&run, INPUT, big, &dev);
+        assert!(!c.feasible && c.seconds.is_infinite());
+    }
+
+    #[test]
+    fn memory_bound_regime() {
+        // The paper's stated premise: these kernels are memory-, not
+        // compute-bound. Memory phase must dominate on every device.
+        let run = paper_fusable_run();
+        for dev in DeviceSpec::paper_devices() {
+            let c = predict(&run, INPUT, BOX, &dev);
+            let compute: f64 = run
+                .iter()
+                .map(|k| k.flops_per_pixel * INPUT.pixels() as f64)
+                .sum::<f64>()
+                / dev.flops;
+            assert!(c.seconds > compute, "{}", dev.name);
+        }
+    }
+
+    #[test]
+    fn cpu_serial_slower_than_gpu() {
+        let run = paper_fusable_run();
+        let dev = DeviceSpec::k20();
+        let cpu = predict_cpu_serial(&run, INPUT, &dev);
+        let gpu = predict_partition(&segs(&run, &[5]), INPUT, BOX, &dev);
+        assert!(cpu / gpu > 5.0, "cpu {cpu} gpu {gpu}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Interval-DP optimal partition — the independent cross-check for the
+//! branch-and-bound ILP solver.
+//!
+//! Because every candidate is a contiguous segment, an optimal partition
+//! is a shortest path on the DAG whose nodes are cut positions 0..=n and
+//! whose edge (i → j) carries `C(segment [i, j))`. `best[j] =
+//! min_i (best[i] + C[i..j])` solves it in O(n²) — provably optimal, so
+//! any disagreement with the B&B is a bug in one of them.
+
+use super::candidates::Segment;
+use super::ilp::Model;
+
+/// Optimal contiguous partition. Returns (segments, objective), or `None`
+/// when some kernel has no feasible covering column.
+pub fn solve_dp(model: &Model) -> Option<(Vec<Segment>, f64)> {
+    let n = model.n_kernels;
+    // cost[i][j] = cost of segment starting at i with length j-i.
+    let mut cost = vec![vec![f64::INFINITY; n + 1]; n];
+    for col in &model.columns {
+        let s = col.segment;
+        if col.cost < cost[s.start][s.end()] {
+            cost[s.start][s.end()] = col.cost;
+        }
+    }
+    let mut best = vec![f64::INFINITY; n + 1];
+    let mut back = vec![usize::MAX; n + 1];
+    best[0] = 0.0;
+    for j in 1..=n {
+        for i in 0..j {
+            if best[i].is_finite() && cost[i][j].is_finite() {
+                let c = best[i] + cost[i][j];
+                if c < best[j] {
+                    best[j] = c;
+                    back[j] = i;
+                }
+            }
+        }
+    }
+    if !best[n].is_finite() {
+        return None;
+    }
+    let mut segs = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let i = back[j];
+        segs.push(Segment {
+            start: i,
+            len: j - i,
+        });
+        j = i;
+    }
+    segs.reverse();
+    Some((segs, best[n]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::halo::BoxDims;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+    use crate::fusion::solver;
+    use crate::fusion::traffic::InputDims;
+    use crate::gpusim::device::DeviceSpec;
+
+    #[test]
+    fn dp_matches_bnb_on_paper_instance_all_devices() {
+        let run = paper_fusable_run();
+        for dev in DeviceSpec::paper_devices() {
+            for bx in [BoxDims::new(16, 16, 8), BoxDims::new(32, 32, 8),
+                       BoxDims::new(64, 64, 4)] {
+                let m = Model::build(&run, InputDims::new(512, 512, 1000),
+                                     bx, &dev);
+                let dp = solve_dp(&m);
+                let bb = solver::solve(&m);
+                match (dp, bb) {
+                    (Some((_, od)), Some(sb)) => {
+                        assert!((od - sb.objective).abs() < 1e-12,
+                                "{} {:?}", dev.name, bx);
+                    }
+                    (None, None) => {}
+                    (d, b) => panic!("disagree: dp={d:?} bb={b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_reconstructs_valid_partition() {
+        let run = paper_fusable_run();
+        let m = Model::build(
+            &run,
+            InputDims::new(256, 256, 1000),
+            BoxDims::new(32, 32, 8),
+            &DeviceSpec::gtx750ti(),
+        );
+        let (segs, _) = solve_dp(&m).unwrap();
+        let mut next = 0;
+        for s in &segs {
+            assert_eq!(s.start, next);
+            next = s.end();
+        }
+        assert_eq!(next, 5);
+    }
+
+    #[test]
+    fn dp_none_when_infeasible() {
+        use crate::fusion::candidates::Segment;
+        let m = Model::with_costs(
+            3,
+            &[
+                (Segment { start: 0, len: 1 }, 1.0),
+                (Segment { start: 2, len: 1 }, 1.0),
+                // kernel 1 only coverable by an infinite column
+                (Segment { start: 1, len: 1 }, f64::INFINITY),
+            ],
+        );
+        assert!(solve_dp(&m).is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! Algorithm 1: fuse a selected kernel set into one fused-kernel *plan*,
+//! and emit the CUDA-like source the paper shows in Table III.
+//!
+//! In the paper, fusion is a source-to-source transformation on CUDA C.
+//! Here the executable form of a fused kernel already exists as an AOT'd
+//! Pallas megakernel; what Algorithm 1 produces at L3 is the **plan**: the
+//! ordered stages, the halo (Algorithm 2), the synchronization points (TMT
+//! boundaries), the SHMEM/VMEM footprint, and the artifact naming the
+//! runtime resolves. `codegen_cuda_like` additionally renders the plan as
+//! the Table III-style source listing, which doubles as documentation of
+//! the transformation and is exercised by `bench_tables`.
+
+use super::candidates::{sync_points, Segment};
+use super::halo::{halo_cumulative, BoxDims};
+use super::kernel_ir::{KernelSpec, Radii, BYTES_PER_VALUE};
+
+/// The fused kernel produced by Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct FusedKernelPlan {
+    /// Position of this fused kernel in the execution sequence.
+    pub segment: Segment,
+    /// The stages fused, in order.
+    pub stages: Vec<KernelSpec>,
+    /// Cumulative halo of the fused chain (Algorithm 2).
+    pub halo: Radii,
+    /// Stage indices after which a local sync is required (TMT).
+    pub syncs: Vec<usize>,
+}
+
+impl FusedKernelPlan {
+    /// Build the plan for a contiguous run slice (Algorithm 1, lines 1–7).
+    pub fn build(segment: Segment, run: &[KernelSpec]) -> FusedKernelPlan {
+        let stages: Vec<KernelSpec> = run[segment.kernels()].to_vec();
+        FusedKernelPlan {
+            segment,
+            halo: halo_cumulative(&stages),
+            syncs: sync_points(&stages),
+            stages,
+        }
+    }
+
+    /// Display name, e.g. `Fused[rgbToGray+IIRFilter]`.
+    pub fn name(&self) -> String {
+        let names: Vec<&str> = self.stages.iter().map(|s| s.name).collect();
+        if names.len() == 1 {
+            names[0].to_string()
+        } else {
+            format!("Fused[{}]", names.join("+"))
+        }
+    }
+
+    /// SHMEM/VMEM bytes one block needs: the halo'd single-channel staging
+    /// box (RGBA collapses to gray during the staging load; stages update
+    /// in place) — the paper's constraint (c).
+    pub fn shmem_bytes(&self, out_box: BoxDims) -> usize {
+        out_box.with_halo(self.halo).pixels() * BYTES_PER_VALUE
+    }
+
+    /// Render the Table III-style fused CUDA source for documentation and
+    /// the `bench_tables` reproduction.
+    pub fn codegen_cuda_like(&self, out_box: BoxDims) -> String {
+        let mut src = String::new();
+        let in_box = out_box.with_halo(self.halo);
+        src.push_str(&format!(
+            "__global__ {}(Iin, Iout, TH) {{\n",
+            self.name().replace(['[', ']', '+'], "_")
+        ));
+        src.push_str(
+            "  int i  = blockIdx.x * blockDim.x + threadIdx.x;\n\
+             \x20 int j  = blockIdx.y * blockDim.y + threadIdx.y;\n\
+             \x20 int thx = threadIdx.x, thy = threadIdx.y;\n",
+        );
+        src.push_str(&format!(
+            "  __shared__ float Shared[{}]; // {}x{}x{} halo'd box\n",
+            in_box.pixels(),
+            in_box.t, in_box.x, in_box.y
+        ));
+        // Line 1: copy input box GMEM -> SHMEM.
+        src.push_str(
+            "  // Alg1 line 1: stage the halo'd input box once\n\
+             \x20 for (pix in myPixels(Box_b_in))\n\
+             \x20   Shared[local(pix)] = Iin[i + pix.di, j + pix.dj];\n\
+             \x20 __syncthreads();\n",
+        );
+        // Lines 2-6: splice each stage, GMEM accesses converted to SHMEM
+        // (block-offset dropped), syncs at TMT boundaries.
+        for (idx, st) in self.stages.iter().enumerate() {
+            src.push_str(&format!(
+                "  // Alg1 line 4: stage {} ({}, {})\n",
+                idx,
+                st.name,
+                st.op_type()
+            ));
+            let window = if st.radii.dx > 0 || st.radii.dy > 0 {
+                format!(
+                    "Shared[thx+ii-{r} .. thx+ii+{r}, thy+jj-{r} .. thy+jj+{r}]",
+                    r = st.radii.dx
+                )
+            } else {
+                "Shared[thx+ii, thy+jj]".to_string()
+            };
+            src.push_str(&format!(
+                "  for (ii,jj in myPixels(Box_b))\n    Shared[thx+ii, thy+jj] = Operation{}({});\n",
+                st.name, window
+            ));
+            if self.syncs.contains(&idx) {
+                src.push_str(
+                    "  __syncthreads(); // Alg1 line 5: next stage is TMT\n",
+                );
+            }
+        }
+        // Line 7: write back.
+        src.push_str(
+            "  // Alg1 line 7: single writeback SHMEM -> GMEM\n\
+             \x20 for (ii,jj in myPixels(Box_b))\n\
+             \x20   Iout[i+ii, j+jj] = Shared[thx+ii, thy+jj];\n}\n",
+        );
+        src
+    }
+}
+
+/// Apply Algorithm 1 to a whole partition: one plan per selected segment,
+/// ordered by position (the fused kernels execute in sequence).
+pub fn build_plans(segments: &[Segment], run: &[KernelSpec]) -> Vec<FusedKernelPlan> {
+    let mut segs = segments.to_vec();
+    segs.sort_by_key(|s| s.start);
+    segs.iter().map(|&s| FusedKernelPlan::build(s, run)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+
+    #[test]
+    fn full_fusion_plan_matches_paper() {
+        let run = paper_fusable_run();
+        let plan = FusedKernelPlan::build(Segment { start: 0, len: 5 }, &run);
+        assert_eq!(plan.halo, Radii::new(2, 2, 1));
+        assert_eq!(plan.syncs, vec![1, 2]); // before Gaussian, Gradient
+        assert_eq!(plan.name(), "Fused[rgbToGray+IIRFilter+GaussianFilter+GradientOperation+Threshold]");
+    }
+
+    #[test]
+    fn shmem_footprint_fits_k20_at_32x32x8() {
+        let run = paper_fusable_run();
+        let plan = FusedKernelPlan::build(Segment { start: 0, len: 5 }, &run);
+        // 36·36·9 values · 4B ≈ 45.6 KB — fits a K20/750Ti block (48 KB)
+        // but not a C1060 block (16 KB): exactly Fig 7's device split.
+        let bytes = plan.shmem_bytes(BoxDims::new(32, 32, 8));
+        assert!(bytes <= 48 * 1024, "bytes={bytes}");
+        assert!(bytes > 16 * 1024);
+    }
+
+    #[test]
+    fn singleton_plan_has_no_syncs() {
+        let run = paper_fusable_run();
+        let plan = FusedKernelPlan::build(Segment { start: 4, len: 1 }, &run);
+        assert!(plan.syncs.is_empty());
+        assert_eq!(plan.name(), "Threshold");
+    }
+
+    #[test]
+    fn codegen_contains_algorithm1_structure() {
+        let run = paper_fusable_run();
+        let plan = FusedKernelPlan::build(Segment { start: 0, len: 5 }, &run);
+        let src = plan.codegen_cuda_like(BoxDims::new(32, 32, 8));
+        // Staging copy, per-stage ops, TMT syncs, single writeback.
+        assert!(src.contains("__shared__ float"));
+        assert!(src.contains("OperationrgbToGray"));
+        assert!(src.contains("OperationGaussianFilter"));
+        assert_eq!(src.matches("__syncthreads()").count(), 3); // 1 + 2 TMT
+        assert!(src.contains("single writeback"));
+    }
+
+    #[test]
+    fn build_plans_orders_segments() {
+        let run = paper_fusable_run();
+        let plans = build_plans(
+            &[
+                Segment { start: 2, len: 3 },
+                Segment { start: 0, len: 2 },
+            ],
+            &run,
+        );
+        assert_eq!(plans[0].segment.start, 0);
+        assert_eq!(plans[1].segment.start, 2);
+        assert_eq!(plans[0].halo, Radii::new(0, 0, 1)); // {K1,K2}
+        assert_eq!(plans[1].halo, Radii::new(2, 2, 0)); // {K3,K4,K5}
+    }
+}

@@ -1,0 +1,125 @@
+//! Algorithm 2: size the input box `Box_b_in` for a fused kernel.
+//!
+//! Given the stages fused into `K_f` and the output box extent
+//! `x × y × t`, compute the input extent `(x+δx) × (y+δy) × (t+δt)` such
+//! that **no thread depends on data outside its own block** — the paper's
+//! data-distribution guarantee (§VI-C).
+//!
+//! Two accumulators are provided:
+//!
+//! * [`halo_paper`] — the algorithm exactly as printed in the paper: the
+//!   running **max** of each stage's radius.
+//! * [`halo_cumulative`] — the running **sum**: each chained stencil grows
+//!   the required neighborhood of everything upstream of it.
+//!
+//! For pipelines with at most one stencil stage the two agree. For chained
+//! stencils (Gaussian → Gradient) the printed algorithm under-sizes the
+//! halo: two radius-1 stencils need radius-2 input, not radius-1 — the
+//! boundary pixels of each box would silently read garbage. The planner
+//! therefore *executes* with the cumulative halo and reports the paper
+//! variant only for comparison (see `tests::paper_variant_undersizes`).
+
+use super::kernel_ir::{KernelSpec, Radii};
+
+/// Output-box extent in pixels (the paper's `x × y × t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoxDims {
+    pub x: usize,
+    pub y: usize,
+    pub t: usize,
+}
+
+impl BoxDims {
+    pub const fn new(x: usize, y: usize, t: usize) -> Self {
+        BoxDims { x, y, t }
+    }
+
+    /// Total output pixels `x·y·t`.
+    pub fn pixels(&self) -> usize {
+        self.x * self.y * self.t
+    }
+
+    /// Input extent after applying a halo. Spatial radii widen both sides
+    /// (`+2δ`); the temporal radius only reaches into the past (`+δt`),
+    /// matching the causal IIR warm start.
+    pub fn with_halo(&self, h: Radii) -> BoxDims {
+        BoxDims::new(self.x + 2 * h.dx, self.y + 2 * h.dy, self.t + h.dt)
+    }
+}
+
+/// Algorithm 2 as printed: running max of stage radii.
+pub fn halo_paper(stages: &[KernelSpec]) -> Radii {
+    stages
+        .iter()
+        .fold(Radii::point(), |acc, k| acc.max(k.radii))
+}
+
+/// Corrected accumulator: running sum of stage radii (chained stencils
+/// compose additively).
+pub fn halo_cumulative(stages: &[KernelSpec]) -> Radii {
+    stages
+        .iter()
+        .fold(Radii::point(), |acc, k| acc.sum(k.radii))
+}
+
+/// Verify a halo against a direct trace of the chain: walk the stages
+/// backwards and compute exactly which input extent one output pixel
+/// needs. Returns the minimal correct radii.
+pub fn halo_traced(stages: &[KernelSpec]) -> Radii {
+    // Requirement propagates from the last stage to the first: an output
+    // region of radius r needs an input region of radius r + δ_stage.
+    let mut need = Radii::point();
+    for k in stages.iter().rev() {
+        need = need.sum(k.radii);
+    }
+    need
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+
+    #[test]
+    fn cumulative_equals_traced() {
+        // Radii composition is commutative in magnitude, so the forward sum
+        // and the backward trace agree for any stage order.
+        let run = paper_fusable_run();
+        assert_eq!(halo_cumulative(&run), halo_traced(&run));
+    }
+
+    #[test]
+    fn paper_pipeline_halo() {
+        // Gaussian(1) + Gradient(1) => spatial 2; IIR => temporal 1.
+        let run = paper_fusable_run();
+        assert_eq!(halo_cumulative(&run), Radii::new(2, 2, 1));
+    }
+
+    #[test]
+    fn paper_variant_undersizes() {
+        // The printed Algorithm 2 (max) yields radius 1 for the chained
+        // 3×3 stencils — strictly smaller than the correct cumulative 2.
+        let run = paper_fusable_run();
+        let p = halo_paper(&run);
+        let c = halo_cumulative(&run);
+        assert_eq!(p, Radii::new(1, 1, 1));
+        assert!(p.dx < c.dx && p.dy < c.dy);
+    }
+
+    #[test]
+    fn with_halo_extents() {
+        let b = BoxDims::new(32, 32, 8);
+        let i = b.with_halo(Radii::new(2, 2, 1));
+        assert_eq!(i, BoxDims::new(36, 36, 9));
+        assert_eq!(b.pixels(), 8192);
+    }
+
+    #[test]
+    fn single_stage_halos_agree() {
+        let run = paper_fusable_run();
+        for k in &run {
+            let single = std::slice::from_ref(k);
+            assert_eq!(halo_paper(single), halo_cumulative(single));
+        }
+    }
+}

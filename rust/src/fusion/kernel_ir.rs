@@ -1,0 +1,264 @@
+//! Kernel IR: the paper's data-access-pattern taxonomy (Tables I & II) and
+//! per-kernel metadata the planner reasons about.
+//!
+//! A [`KernelSpec`] describes one pipeline stage the way the paper's model
+//! sees it: its stencil radii (`δx, δy, δt`), its per-pixel arithmetic cost,
+//! its channel widths (bytes moved per pixel on each side), and its
+//! thread-level dependency on the previous stage in the sequence.
+
+use std::fmt;
+
+/// Stencil radii of a kernel: how far one output pixel reaches into its
+/// input neighborhood along each axis (the paper's `δ_i, δ_j, δ_t`, with
+/// the convention that a point op has all-zero radii).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Radii {
+    /// Spatial radius along image rows.
+    pub dx: usize,
+    /// Spatial radius along image columns.
+    pub dy: usize,
+    /// Temporal reach into *past* frames (frames of history required).
+    pub dt: usize,
+}
+
+impl Radii {
+    pub const fn new(dx: usize, dy: usize, dt: usize) -> Self {
+        Radii { dx, dy, dt }
+    }
+
+    /// A single-point operation (no neighborhood).
+    pub const fn point() -> Self {
+        Radii::new(0, 0, 0)
+    }
+
+    /// Component-wise max (the paper's printed Algorithm 2 accumulator).
+    pub fn max(self, o: Radii) -> Radii {
+        Radii::new(self.dx.max(o.dx), self.dy.max(o.dy), self.dt.max(o.dt))
+    }
+
+    /// Component-wise sum (the *correct* accumulator for chained stencils).
+    pub fn sum(self, o: Radii) -> Radii {
+        Radii::new(self.dx + o.dx, self.dy + o.dy, self.dt + o.dt)
+    }
+}
+
+/// Table I: operation types, derived from the stencil radii.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpType {
+    /// `|d_i|=|d_j|=|d_t|=1` — one input pixel per output pixel.
+    SinglePoint,
+    /// `|d_i|>1, |d_j|>1, |d_t|=1` — spatial window, single frame.
+    Rectangular,
+    /// `|d_t|>1`, point in space — temporal neighborhood only.
+    MultiFrame,
+    /// `|d_i|>1, |d_j|>1, |d_t|>1` — full spatio-temporal window.
+    SpatioTemporal,
+}
+
+impl OpType {
+    /// Classify radii per Table I.
+    pub fn classify(r: Radii) -> OpType {
+        match (r.dx > 0 || r.dy > 0, r.dt > 0) {
+            (false, false) => OpType::SinglePoint,
+            (true, false) => OpType::Rectangular,
+            (false, true) => OpType::MultiFrame,
+            (true, true) => OpType::SpatioTemporal,
+        }
+    }
+}
+
+impl fmt::Display for OpType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            OpType::SinglePoint => "Single-Point Operation",
+            OpType::Rectangular => "Rectangular Operation",
+            OpType::MultiFrame => "Multi-Frame Operation",
+            OpType::SpatioTemporal => "Spatio-Temporal Operation",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Table IV: thread-level dependency of a kernel on its predecessor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepType {
+    /// Thread-to-Thread: output pixel (i,j,t) needs exactly input (i,j,t).
+    ThreadToThread,
+    /// Thread-to-Multi-Thread: needs a window produced by several threads
+    /// of the same block — fusable with a local sync (`__syncthreads()`).
+    ThreadToMultiThread,
+    /// Kernel-to-Kernel: needs output of *other blocks* — a global barrier;
+    /// never fused (breaks the fusable run).
+    KernelToKernel,
+}
+
+impl fmt::Display for DepType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DepType::ThreadToThread => "Thread to Thread",
+            DepType::ThreadToMultiThread => "Thread to Multi-thread",
+            DepType::KernelToKernel => "Kernel to Kernel",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One pipeline stage as the planner models it.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    /// Human/trace name ("rgbToGray", …).
+    pub name: &'static str,
+    /// Stencil radii (drives Algorithm 2 and the traffic model).
+    pub radii: Radii,
+    /// Values read per input pixel (4 for RGBA, 1 for gray).
+    pub in_channels: usize,
+    /// Values written per output pixel.
+    pub out_channels: usize,
+    /// Arithmetic per output pixel (flop estimate for the cost model).
+    pub flops_per_pixel: f64,
+    /// Dependency on the *previous* kernel in the sequence (Table IV);
+    /// `ThreadToThread` for the first kernel by convention.
+    pub dep_on_prev: DepType,
+}
+
+impl KernelSpec {
+    /// Table I classification of this kernel.
+    pub fn op_type(&self) -> OpType {
+        OpType::classify(self.radii)
+    }
+
+    /// Whether this stage consumes multiple frames (Table II column).
+    pub fn multi_frame(&self) -> bool {
+        self.radii.dt > 0
+    }
+}
+
+/// Bytes per f32 value moved by the pipelines.
+pub const BYTES_PER_VALUE: usize = 4;
+
+/// The paper's Table II / Table IV pipeline: K1..K6 in execution order.
+///
+/// Flop counts are per output pixel for our concrete kernels:
+/// K1 luma = 3 mul + 2 add; K2 IIR = 2 mul + 2 add (incl. 1-α);
+/// K3 3×3 binomial = 9 mul + 8 add + 1 scale; K4 Sobel = 2×(9 fma) + abs/add;
+/// K5 compare+select; K6 small-matrix Kalman per *feature* not per pixel —
+/// modeled per-pixel-equivalent as its measurement extraction.
+pub fn paper_pipeline() -> Vec<KernelSpec> {
+    vec![
+        KernelSpec {
+            name: "rgbToGray",
+            radii: Radii::point(),
+            in_channels: 4,
+            out_channels: 1,
+            flops_per_pixel: 5.0,
+            dep_on_prev: DepType::ThreadToThread,
+        },
+        KernelSpec {
+            name: "IIRFilter",
+            radii: Radii::new(0, 0, 1),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 4.0,
+            dep_on_prev: DepType::ThreadToThread,
+        },
+        KernelSpec {
+            name: "GaussianFilter",
+            radii: Radii::new(1, 1, 0),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 18.0,
+            dep_on_prev: DepType::ThreadToMultiThread,
+        },
+        KernelSpec {
+            name: "GradientOperation",
+            radii: Radii::new(1, 1, 0),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 22.0,
+            dep_on_prev: DepType::ThreadToMultiThread,
+        },
+        KernelSpec {
+            name: "Threshold",
+            radii: Radii::point(),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 2.0,
+            dep_on_prev: DepType::ThreadToThread,
+        },
+        KernelSpec {
+            name: "KalmanFilter",
+            radii: Radii::new(0, 0, 1),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 3.0,
+            dep_on_prev: DepType::KernelToKernel,
+        },
+    ]
+}
+
+/// The fusable prefix K1..K5 (everything before the KK-dependent tracker).
+pub fn paper_fusable_run() -> Vec<KernelSpec> {
+    let mut v = paper_pipeline();
+    v.truncate(5);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_table_i() {
+        assert_eq!(OpType::classify(Radii::point()), OpType::SinglePoint);
+        assert_eq!(OpType::classify(Radii::new(1, 1, 0)), OpType::Rectangular);
+        assert_eq!(OpType::classify(Radii::new(0, 0, 2)), OpType::MultiFrame);
+        assert_eq!(
+            OpType::classify(Radii::new(2, 1, 3)),
+            OpType::SpatioTemporal
+        );
+    }
+
+    #[test]
+    fn paper_pipeline_matches_table_ii() {
+        let p = paper_pipeline();
+        assert_eq!(p.len(), 6);
+        // Convert RGBA to Gray: point, single frame.
+        assert_eq!(p[0].op_type(), OpType::SinglePoint);
+        assert!(!p[0].multi_frame());
+        // IIR: point op over multiple frames.
+        assert_eq!(p[1].op_type(), OpType::MultiFrame);
+        assert!(p[1].multi_frame());
+        // Gaussian / Gradient: rectangular, single frame.
+        assert_eq!(p[2].op_type(), OpType::Rectangular);
+        assert_eq!(p[3].op_type(), OpType::Rectangular);
+        // Threshold: point (our kernel binarizes pointwise).
+        assert_eq!(p[4].op_type(), OpType::SinglePoint);
+        // Kalman: single point, multi-frame.
+        assert!(p[5].multi_frame());
+    }
+
+    #[test]
+    fn paper_deps_match_table_iv() {
+        let p = paper_pipeline();
+        use DepType::*;
+        let want = [
+            ThreadToThread,
+            ThreadToThread,
+            ThreadToMultiThread,
+            ThreadToMultiThread,
+            ThreadToThread,
+            KernelToKernel,
+        ];
+        for (k, w) in p.iter().zip(want) {
+            assert_eq!(k.dep_on_prev, w, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn radii_accumulators() {
+        let a = Radii::new(1, 2, 0);
+        let b = Radii::new(2, 1, 1);
+        assert_eq!(a.max(b), Radii::new(2, 2, 1));
+        assert_eq!(a.sum(b), Radii::new(3, 3, 1));
+    }
+}

@@ -1,0 +1,159 @@
+//! The paper's contribution: optimal kernel fusion for image pipelines.
+//!
+//! Pipeline: [`kernel_ir`] describes stages (Tables I/II/IV) →
+//! [`candidates`] splits fusable runs and enumerates contiguous candidates
+//! → [`cost`] prices each candidate on a device ([`crate::gpusim`]) →
+//! [`ilp`]+[`solver`] solve the Fig 5 set-partitioning model (cross-checked
+//! by [`dp`]) → [`fuse`] turns the winning partition into
+//! [`fuse::FusedKernelPlan`]s (Algorithm 1) with halos from [`halo`]
+//! (Algorithm 2) → [`boxopt`] picks the box dimensions (eq 3–6) →
+//! [`traffic`] accounts for data movement (§VI-D, Figs 12/13).
+
+pub mod boxopt;
+pub mod candidates;
+pub mod cost;
+pub mod dp;
+pub mod fuse;
+pub mod halo;
+pub mod ilp;
+pub mod kernel_ir;
+pub mod solver;
+pub mod traffic;
+
+use crate::gpusim::device::DeviceSpec;
+use crate::{Error, Result};
+use fuse::FusedKernelPlan;
+use halo::BoxDims;
+use kernel_ir::KernelSpec;
+use traffic::InputDims;
+
+/// End-to-end planner output for one kernel sequence.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Fused kernel plans in execution order (KK-separated runs are
+    /// planned independently and concatenated).
+    pub fused: Vec<FusedKernelPlan>,
+    /// Box dimensions chosen by the eq (6) optimizer.
+    pub box_dims: BoxDims,
+    /// Predicted total execution time on the planning device, seconds.
+    pub predicted_seconds: f64,
+    /// B&B search nodes (telemetry for the ablation bench).
+    pub solver_nodes: u64,
+}
+
+/// Plan a kernel sequence end-to-end on `dev`:
+/// split fusable runs → choose box dims → solve each run's ILP → Alg 1.
+pub fn plan(
+    kernels: &[KernelSpec],
+    input: InputDims,
+    dev: &DeviceSpec,
+) -> Result<Plan> {
+    // Box sizing from the whole-pipeline halo (dominant fused candidate).
+    let halo_all = halo::halo_cumulative(kernels);
+    let (box_dims, _) = boxopt::optimal_box_discrete(
+        dev.shmem_values(),
+        halo_all,
+        &boxopt::sweep_xs(),
+        &boxopt::sweep_ts(),
+    )
+    .ok_or_else(|| Error::Plan("no box fits shared memory".into()))?;
+    plan_with_box(kernels, input, box_dims, dev)
+}
+
+/// Plan with explicit box dimensions (benches sweep these directly).
+pub fn plan_with_box(
+    kernels: &[KernelSpec],
+    input: InputDims,
+    box_dims: BoxDims,
+    dev: &DeviceSpec,
+) -> Result<Plan> {
+    let mut fused = Vec::new();
+    let mut predicted = 0.0;
+    let mut nodes = 0;
+    for range in candidates::fusable_runs(kernels) {
+        let run = &kernels[range.clone()];
+        let model = ilp::Model::build(run, input, box_dims, dev);
+        let sol = solver::solve(&model).ok_or_else(|| {
+            Error::Plan(format!(
+                "no feasible partition for run {range:?} on {}",
+                dev.name
+            ))
+        })?;
+        // Sanity: the interval DP must agree (paper's Gurobi stand-in).
+        if let Some((_, dp_obj)) = dp::solve_dp(&model) {
+            debug_assert!((dp_obj - sol.objective).abs() < 1e-9);
+        }
+        predicted += sol.objective;
+        nodes += sol.nodes;
+        let segs: Vec<candidates::Segment> = sol
+            .selection
+            .iter()
+            .map(|&ci| model.columns[ci].segment)
+            .collect();
+        for mut p in fuse::build_plans(&segs, run) {
+            // Re-base segment indices to the full sequence.
+            p.segment.start += range.start;
+            fused.push(p);
+        }
+    }
+    Ok(Plan {
+        fused,
+        box_dims,
+        predicted_seconds: predicted,
+        solver_nodes: nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use kernel_ir::paper_pipeline;
+
+    #[test]
+    fn plan_paper_pipeline_on_k20() {
+        let p = plan(
+            &paper_pipeline(),
+            InputDims::new(256, 256, 1000),
+            &DeviceSpec::k20(),
+        )
+        .unwrap();
+        // Full fusion of K1..K5 plus the lone KK Kalman stage.
+        assert_eq!(p.fused.len(), 2);
+        assert_eq!(p.fused[0].stages.len(), 5);
+        assert_eq!(p.fused[1].stages.len(), 1);
+        assert_eq!(p.fused[1].stages[0].name, "KalmanFilter");
+        assert!(p.predicted_seconds.is_finite() && p.predicted_seconds > 0.0);
+        // Chosen box respects the paper's SHMEM constraint (x·y·t ≤ β).
+        assert!(p.box_dims.pixels() <= DeviceSpec::k20().shmem_values());
+    }
+
+    #[test]
+    fn plan_respects_c1060_small_shmem() {
+        let k20 = plan(
+            &paper_pipeline(),
+            InputDims::new(256, 256, 1000),
+            &DeviceSpec::k20(),
+        )
+        .unwrap();
+        let c1060 = plan(
+            &paper_pipeline(),
+            InputDims::new(256, 256, 1000),
+            &DeviceSpec::c1060(),
+        )
+        .unwrap();
+        assert!(c1060.box_dims.pixels() <= k20.box_dims.pixels());
+    }
+
+    #[test]
+    fn plan_with_tiny_box_still_partitions() {
+        let p = plan_with_box(
+            &paper_pipeline(),
+            InputDims::new(64, 64, 16),
+            BoxDims::new(8, 8, 2),
+            &DeviceSpec::gtx750ti(),
+        )
+        .unwrap();
+        let covered: usize = p.fused.iter().map(|f| f.stages.len()).sum();
+        assert_eq!(covered, 6);
+    }
+}

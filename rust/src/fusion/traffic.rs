@@ -1,0 +1,196 @@
+//! §VI-D traffic model: GMEM↔SHMEM transfer counts for serial vs fused
+//! execution, plus GMEM footprint (Figs 12 & 13).
+//!
+//! For input `N × M × T` cut into `B = N·M·T / (x·y·t)` boxes and a run of
+//! `n` kernels:
+//!
+//! * serial ("No Fusion"):  every kernel reads and writes its full frame
+//!   volume through GMEM → `2·n·B·x·y·t` pixel transfers;
+//! * fused: one halo'd read + one write per box →
+//!   `B·((x+2δx)(y+2δy)(t+δt) + x·y·t)` transfers.
+//!
+//! (The paper's closed form writes the halo surcharge as
+//! `(x·δy + y·δx + δx·δy)(t+δt)` per box — a first-order expansion of the
+//! same quantity; we compute the exact product.)
+
+use super::halo::BoxDims;
+use super::kernel_ir::{KernelSpec, Radii};
+
+/// Whole-input extent (the paper's N × M × T).
+#[derive(Debug, Clone, Copy)]
+pub struct InputDims {
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+}
+
+impl InputDims {
+    pub const fn new(n: usize, m: usize, t: usize) -> Self {
+        InputDims { n, m, t }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.n * self.m * self.t
+    }
+
+    /// Number of boxes `B` (ceil-divided per axis: partial boxes count).
+    pub fn num_boxes(&self, b: BoxDims) -> usize {
+        div_ceil(self.n, b.x) * div_ceil(self.m, b.y) * div_ceil(self.t, b.t)
+    }
+}
+
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Pixel transfers for executing `n_kernels` UNFUSED over the whole input.
+pub fn transfers_serial(input: InputDims, b: BoxDims, n_kernels: usize) -> u64 {
+    2 * n_kernels as u64 * input.num_boxes(b) as u64 * b.pixels() as u64
+}
+
+/// Pixel transfers for ONE fused kernel covering the same stages.
+pub fn transfers_fused(input: InputDims, b: BoxDims, halo: Radii) -> u64 {
+    let per_box = b.with_halo(halo).pixels() as u64 + b.pixels() as u64;
+    input.num_boxes(b) as u64 * per_box
+}
+
+/// Transfers for an arbitrary partition: each segment is one fused kernel
+/// with its own cumulative halo. Segments of length 1 degenerate to the
+/// serial per-kernel cost (their halo is that kernel's own radii).
+pub fn transfers_partition(
+    input: InputDims,
+    b: BoxDims,
+    segments: &[&[KernelSpec]],
+) -> u64 {
+    segments
+        .iter()
+        .map(|seg| {
+            let halo = super::halo::halo_cumulative(seg);
+            transfers_fused(input, b, halo)
+        })
+        .sum()
+}
+
+/// Fractional reduction in data movement vs serial (Fig 12b).
+pub fn reduction_vs_serial(
+    input: InputDims,
+    b: BoxDims,
+    segments: &[&[KernelSpec]],
+) -> f64 {
+    let n: usize = segments.iter().map(|s| s.len()).sum();
+    let serial = transfers_serial(input, b, n) as f64;
+    let part = transfers_partition(input, b, segments) as f64;
+    1.0 - part / serial
+}
+
+/// GMEM bytes resident during execution (Fig 13): the input, the final
+/// output, and every intermediate that crosses a segment boundary.
+/// Fusing removes intermediates — "Full Fusion" keeps only input + output.
+pub fn gmem_usage_bytes(
+    input: InputDims,
+    segments: &[&[KernelSpec]],
+    bytes_per_value: usize,
+) -> u64 {
+    let frame_vals = input.pixels() as u64;
+    let in_ch = segments
+        .first()
+        .and_then(|s| s.first())
+        .map_or(1, |k| k.in_channels) as u64;
+    // Input buffer + one buffer per segment output (the last one being the
+    // final output). Channel widths follow the chain.
+    let mut total = frame_vals * in_ch;
+    for seg in segments {
+        let out_ch = seg.last().map_or(1, |k| k.out_channels) as u64;
+        total += frame_vals * out_ch;
+    }
+    total * bytes_per_value as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::{paper_fusable_run, BYTES_PER_VALUE};
+
+    fn segs<'a>(run: &'a [KernelSpec], cuts: &[usize]) -> Vec<&'a [KernelSpec]> {
+        // cuts = segment lengths summing to run.len()
+        let mut out = Vec::new();
+        let mut i = 0;
+        for &c in cuts {
+            out.push(&run[i..i + c]);
+            i += c;
+        }
+        assert_eq!(i, run.len());
+        out
+    }
+
+    const INPUT: InputDims = InputDims::new(256, 256, 1000);
+    const BOX: BoxDims = BoxDims::new(32, 32, 8);
+
+    #[test]
+    fn serial_formula_matches_paper() {
+        // 2·n·B·xyt with exact division: B = (256/32)^2 * (1000/8) = 8000.
+        assert_eq!(INPUT.num_boxes(BOX), 8 * 8 * 125);
+        assert_eq!(
+            transfers_serial(INPUT, BOX, 5),
+            2 * 5 * 8000 * (32 * 32 * 8)
+        );
+    }
+
+    #[test]
+    fn fused_lt_serial_for_paper_pipeline() {
+        let run = paper_fusable_run();
+        let full = segs(&run, &[5]);
+        let two = segs(&run, &[2, 3]);
+        let none = segs(&run, &[1, 1, 1, 1, 1]);
+        let tf = transfers_partition(INPUT, BOX, &full);
+        let t2 = transfers_partition(INPUT, BOX, &two);
+        let tn = transfers_partition(INPUT, BOX, &none);
+        let ts = transfers_serial(INPUT, BOX, 5);
+        assert!(tf < t2 && t2 < tn, "full {tf} < two {t2} < none {tn}");
+        // Singleton partition ≈ serial + halo surcharge.
+        assert!(tn >= ts);
+        // Full fusion moves ~n/1 times less data (minus halo overhead).
+        let ratio = ts as f64 / tf as f64;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn tiny_boxes_can_lose() {
+        // Fig 12a: at [8,8,8] the halo surcharge makes fusion's read volume
+        // balloon — two-fusion was WORSE than no fusion in the paper.
+        let run = paper_fusable_run();
+        let b = BoxDims::new(8, 8, 8);
+        let two = segs(&run, &[2, 3]);
+        let t2 = transfers_partition(INPUT, b, &two);
+        let ts = transfers_serial(INPUT, b, 5);
+        // Halo (4 on 8) wastes >50% of each stencil read: at [8,8,8] the
+        // reduction collapses toward zero (the paper's first-order halo
+        // model even went negative); compare to ~0.59 at [32,32,8].
+        let red8 = 1.0 - t2 as f64 / ts as f64;
+        let t2_big = transfers_partition(INPUT, BOX, &two);
+        let red32 = 1.0 - t2_big as f64 / transfers_serial(INPUT, BOX, 5) as f64;
+        assert!(red8 < red32 - 0.05, "red8={red8} red32={red32}");
+    }
+
+    #[test]
+    fn gmem_reduction_matches_fig13() {
+        // Paper: Two Fusion −33%, Full Fusion −44% GMEM vs No Fusion.
+        let run = paper_fusable_run();
+        let none = gmem_usage_bytes(INPUT, &segs(&run, &[1, 1, 1, 1, 1]),
+                                    BYTES_PER_VALUE);
+        let two = gmem_usage_bytes(INPUT, &segs(&run, &[2, 3]),
+                                   BYTES_PER_VALUE);
+        let full = gmem_usage_bytes(INPUT, &segs(&run, &[5]), BYTES_PER_VALUE);
+        let r2 = 1.0 - two as f64 / none as f64;
+        let rf = 1.0 - full as f64 / none as f64;
+        assert!((r2 - 0.33).abs() < 0.02, "two-fusion gmem reduction {r2}");
+        assert!((rf - 0.44).abs() < 0.02, "full-fusion gmem reduction {rf}");
+    }
+
+    #[test]
+    fn partial_boxes_counted() {
+        let inp = InputDims::new(100, 100, 10);
+        let b = BoxDims::new(32, 32, 8);
+        assert_eq!(inp.num_boxes(b), 4 * 4 * 2);
+    }
+}

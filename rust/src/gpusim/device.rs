@@ -1,0 +1,127 @@
+//! Device models for the paper's test hardware.
+//!
+//! The paper evaluates on Tesla C1060, Tesla K20 and GTX 750 Ti. We do not
+//! have CUDA hardware, so the per-device numbers in the reproduced figures
+//! come from this analytic model (DESIGN.md §2 substitution table): the
+//! paper's own cost structure (eq 1 / eq 2 + the §VI-D traffic formulas)
+//! evaluated with each device's published bandwidth / SHMEM / SM constants.
+
+/// Static description of one execution substrate.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Marketing name used in figure rows.
+    pub name: &'static str,
+    /// Streaming multiprocessors (ρ_SM).
+    pub sm_count: usize,
+    /// Shared memory available to one thread block, bytes (β_shared).
+    pub shmem_per_block: usize,
+    /// Max resident thread blocks per SM (occupancy ceiling).
+    pub max_blocks_per_sm: usize,
+    /// Global-memory bandwidth, bytes/second.
+    pub gmem_bw: f64,
+    /// SHMEM-vs-GMEM speed ratio ("a couple of magnitudes" in the paper's
+    /// wording; order of 10–20× effective on these parts).
+    pub shmem_speedup: f64,
+    /// Peak single-precision throughput, flop/s.
+    pub flops: f64,
+    /// Fixed cost of one kernel launch, seconds.
+    pub launch_overhead: f64,
+    /// Host CPU serial throughput for the Fig 10 baseline, flop/s
+    /// (effective scalar rate, not peak).
+    pub host_cpu_flops: f64,
+    /// Host CPU memory bandwidth, bytes/s.
+    pub host_cpu_bw: f64,
+}
+
+impl DeviceSpec {
+    /// Tesla C1060 (GT200): 30 SMs, 16 KB SHMEM, 102 GB/s, 933 GFLOP/s.
+    pub fn c1060() -> Self {
+        DeviceSpec {
+            name: "Tesla C1060",
+            sm_count: 30,
+            shmem_per_block: 16 * 1024,
+            max_blocks_per_sm: 8,
+            gmem_bw: 102.0e9,
+            shmem_speedup: 12.0,
+            flops: 933.0e9,
+            launch_overhead: 8.0e-6,
+            host_cpu_flops: 6.0e9,
+            host_cpu_bw: 12.0e9,
+        }
+    }
+
+    /// Tesla K20 (GK110): 13 SMX, 48 KB SHMEM, 208 GB/s, 3.52 TFLOP/s.
+    pub fn k20() -> Self {
+        DeviceSpec {
+            name: "Tesla K20",
+            sm_count: 13,
+            shmem_per_block: 48 * 1024,
+            max_blocks_per_sm: 16,
+            gmem_bw: 208.0e9,
+            shmem_speedup: 16.0,
+            flops: 3520.0e9,
+            launch_overhead: 5.0e-6,
+            host_cpu_flops: 10.0e9,
+            host_cpu_bw: 20.0e9,
+        }
+    }
+
+    /// GTX 750 Ti (GM107, Maxwell): 5 SMM, 48 KB SHMEM (of 64 per SMM),
+    /// 86.4 GB/s, 1.306 TFLOP/s.
+    pub fn gtx750ti() -> Self {
+        DeviceSpec {
+            name: "GTX 750 Ti",
+            sm_count: 5,
+            shmem_per_block: 48 * 1024,
+            max_blocks_per_sm: 16,
+            gmem_bw: 86.4e9,
+            shmem_speedup: 16.0,
+            flops: 1306.0e9,
+            launch_overhead: 4.0e-6,
+            host_cpu_flops: 9.0e9,
+            host_cpu_bw: 18.0e9,
+        }
+    }
+
+    /// The three paper devices, in the order the figures list them.
+    pub fn paper_devices() -> Vec<DeviceSpec> {
+        vec![Self::c1060(), Self::k20(), Self::gtx750ti()]
+    }
+
+    /// Max f32 values a block's box may occupy in SHMEM (β in eq 4–6).
+    pub fn shmem_values(&self) -> usize {
+        self.shmem_per_block / 4
+    }
+
+    /// Concurrent blocks across the whole device (occupancy ceiling before
+    /// the SHMEM constraint is applied — see [`crate::gpusim::occupancy`]).
+    pub fn max_concurrent_blocks(&self) -> usize {
+        self.sm_count * self.max_blocks_per_sm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_constants_sane() {
+        for d in DeviceSpec::paper_devices() {
+            assert!(d.sm_count > 0);
+            assert!(d.shmem_per_block >= 16 * 1024);
+            assert!(d.gmem_bw > 1e10 && d.gmem_bw < 1e12);
+            assert!(d.flops > d.gmem_bw, "GPUs are memory-bound here");
+            assert!(d.shmem_speedup > 1.0);
+        }
+    }
+
+    #[test]
+    fn c1060_has_smallest_shmem() {
+        // Fig 7's point: C1060 allows a smaller max box than K20/750Ti.
+        let c = DeviceSpec::c1060();
+        let k = DeviceSpec::k20();
+        let g = DeviceSpec::gtx750ti();
+        assert!(c.shmem_values() < k.shmem_values());
+        assert_eq!(k.shmem_values(), g.shmem_values());
+    }
+}

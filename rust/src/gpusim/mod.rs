@@ -1,0 +1,16 @@
+//! GPU substrate simulator — stands in for the paper's CUDA devices.
+//!
+//! We have no C1060/K20/GTX 750 Ti; the per-device rows of the reproduced
+//! figures come from this analytic model: [`device`] holds published
+//! hardware constants, [`occupancy`] the SHMEM/residency tradeoff (§VI-E),
+//! [`model`] evaluates the paper's eq (1)/(2) cost structure over a whole
+//! input, and [`trace`] renders nvprof-style timelines (Fig 15).
+//!
+//! The *measured* counterpart (real execution of the same plans through
+//! PJRT on host CPU) lives in [`crate::coordinator`]; EXPERIMENTS.md
+//! reports both.
+
+pub mod device;
+pub mod model;
+pub mod occupancy;
+pub mod trace;

@@ -1,0 +1,142 @@
+//! Whole-run execution-time simulation (eq 1 vs eq 2) for the paper's
+//! devices, producing the per-device numbers behind Figs 9/10/11/14.
+
+use super::device::DeviceSpec;
+use crate::fusion::cost;
+use crate::fusion::fuse::FusedKernelPlan;
+use crate::fusion::halo::BoxDims;
+use crate::fusion::kernel_ir::KernelSpec;
+use crate::fusion::traffic::InputDims;
+
+/// Simulated timing breakdown of one execution arm.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total predicted wall time, seconds.
+    pub seconds: f64,
+    /// Per-fused-kernel times, in execution order.
+    pub per_kernel: Vec<(String, f64)>,
+    /// Total GMEM bytes moved.
+    pub gmem_bytes: u64,
+    /// Throughput in frames/second for the given input.
+    pub fps: f64,
+}
+
+/// Simulate executing a partition (as fused-kernel plans) over `input`.
+pub fn simulate(
+    plans: &[FusedKernelPlan],
+    input: InputDims,
+    bx: BoxDims,
+    dev: &DeviceSpec,
+) -> SimReport {
+    let mut seconds = 0.0;
+    let mut gmem = 0u64;
+    let mut per_kernel = Vec::new();
+    for p in plans {
+        let c = cost::predict(&p.stages, input, bx, dev);
+        seconds += c.seconds;
+        gmem += c.gmem_bytes;
+        per_kernel.push((p.name(), c.seconds));
+    }
+    SimReport {
+        seconds,
+        per_kernel,
+        gmem_bytes: gmem,
+        fps: input.t as f64 / seconds,
+    }
+}
+
+/// Simulate the serial CPU baseline (Fig 10's "CPU" arm).
+pub fn simulate_cpu(run: &[KernelSpec], input: InputDims,
+                    dev: &DeviceSpec) -> SimReport {
+    let seconds = cost::predict_cpu_serial(run, input, dev);
+    SimReport {
+        seconds,
+        per_kernel: vec![("cpu-serial".into(), seconds)],
+        gmem_bytes: 0,
+        fps: input.t as f64 / seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::candidates::Segment;
+    use crate::fusion::fuse::build_plans;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+
+    fn arms() -> (Vec<FusedKernelPlan>, Vec<FusedKernelPlan>, Vec<FusedKernelPlan>) {
+        let run = paper_fusable_run();
+        let full = build_plans(&[Segment { start: 0, len: 5 }], &run);
+        let two = build_plans(
+            &[Segment { start: 0, len: 2 }, Segment { start: 2, len: 3 }],
+            &run,
+        );
+        let none = build_plans(
+            &(0..5).map(|i| Segment { start: i, len: 1 }).collect::<Vec<_>>(),
+            &run,
+        );
+        (full, two, none)
+    }
+
+    /// Largest sweep box whose staged footprint fits `dev` (Fig 7 split).
+    fn feasible_box(dev: &DeviceSpec) -> BoxDims {
+        if dev.shmem_per_block < 20 * 1024 {
+            BoxDims::new(16, 16, 8)
+        } else {
+            BoxDims::new(32, 32, 8)
+        }
+    }
+
+    #[test]
+    fn fusion_ordering_holds_on_all_devices() {
+        let (full, two, none) = arms();
+        let input = InputDims::new(256, 256, 1000);
+        for dev in DeviceSpec::paper_devices() {
+            let bx = feasible_box(&dev);
+            let f = simulate(&full, input, bx, &dev);
+            let t = simulate(&two, input, bx, &dev);
+            let n = simulate(&none, input, bx, &dev);
+            assert!(
+                f.seconds < t.seconds && t.seconds < n.seconds,
+                "{}: {} {} {}",
+                dev.name, f.seconds, t.seconds, n.seconds
+            );
+            assert!(f.fps > n.fps);
+        }
+    }
+
+    #[test]
+    fn k20_fastest_device() {
+        // Highest bandwidth wins in the memory-bound regime (Fig 9).
+        let (full, _, _) = arms();
+        let input = InputDims::new(512, 512, 1000);
+        let times: Vec<f64> = DeviceSpec::paper_devices()
+            .iter()
+            .map(|d| simulate(&full, input, feasible_box(d), d).seconds)
+            .collect();
+        // order: c1060, k20, gtx750ti
+        assert!(times[1] < times[0] && times[1] < times[2]);
+    }
+
+    #[test]
+    fn larger_input_scales_time_linearly() {
+        let (full, _, _) = arms();
+        let bx = BoxDims::new(32, 32, 8);
+        let dev = DeviceSpec::k20();
+        let t256 = simulate(&full, InputDims::new(256, 256, 1000), bx, &dev);
+        let t512 = simulate(&full, InputDims::new(512, 512, 1000), bx, &dev);
+        let ratio = t512.seconds / t256.seconds;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gpu_beats_cpu_by_an_order(){
+        let (full, _, _) = arms();
+        let run = paper_fusable_run();
+        let input = InputDims::new(256, 256, 1000);
+        let dev = DeviceSpec::k20();
+        let g = simulate(&full, input, BoxDims::new(32, 32, 8), &dev);
+        let c = simulate_cpu(&run, input, &dev);
+        assert!(c.seconds / g.seconds > 8.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! GPU occupancy model (§VI-E): how many blocks are resident per SM and
+//! how that scales effective memory bandwidth.
+//!
+//! The paper's observation: these kernels are memory-bound, so it pays to
+//! give each block MORE shared memory (bigger boxes) and accept LOWER
+//! occupancy — the opposite of the compute-bound folklore. The model here
+//! captures the saturation curve: a handful of resident blocks per SM is
+//! enough to saturate DRAM; beyond that extra occupancy is useless.
+
+use super::device::DeviceSpec;
+
+/// Blocks resident per SM given each block's SHMEM footprint.
+pub fn blocks_per_sm(dev: &DeviceSpec, shmem_per_block_bytes: usize) -> usize {
+    if shmem_per_block_bytes == 0 {
+        return dev.max_blocks_per_sm;
+    }
+    if shmem_per_block_bytes > dev.shmem_per_block {
+        return 0;
+    }
+    // One allocation granularity: how many such blocks fit in the SM's
+    // SHMEM, capped by the hardware resident-block limit.
+    (dev.shmem_per_block / shmem_per_block_bytes).min(dev.max_blocks_per_sm)
+}
+
+/// GPU occupancy as the paper defines it: resident blocks over the
+/// device-wide maximum.
+pub fn gpu_occupancy(dev: &DeviceSpec, shmem_per_block_bytes: usize,
+                     total_blocks: usize) -> f64 {
+    let resident = (blocks_per_sm(dev, shmem_per_block_bytes) * dev.sm_count)
+        .min(total_blocks);
+    resident as f64 / dev.max_concurrent_blocks() as f64
+}
+
+/// Effective-bandwidth scale factor in (0, 1]: saturating in the number of
+/// resident blocks. ~4 blocks/SM reach ~90% of DRAM bandwidth.
+pub fn occupancy_factor(dev: &DeviceSpec, shmem_per_block_bytes: usize,
+                        total_blocks: usize) -> f64 {
+    let per_sm = blocks_per_sm(dev, shmem_per_block_bytes);
+    if per_sm == 0 {
+        return f64::MIN_POSITIVE; // infeasible; caller filters separately
+    }
+    let resident = (per_sm * dev.sm_count).min(total_blocks).max(1);
+    // Saturation: f = r / (r + k) scaled so f -> 1 as r grows; k = half-
+    // saturation point at ~0.75 blocks per SM device-wide (one big block
+    // per SM already keeps the memory pipes fairly busy — the paper's
+    // §VI-E argument for trading occupancy for SHMEM).
+    let k = 0.75 * dev.sm_count as f64;
+    let r = resident as f64;
+    (r / (r + k)).max(0.05)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_per_sm_limits() {
+        let d = DeviceSpec::k20();
+        assert_eq!(blocks_per_sm(&d, d.shmem_per_block), 1);
+        assert_eq!(blocks_per_sm(&d, d.shmem_per_block + 1), 0);
+        assert_eq!(blocks_per_sm(&d, 1), d.max_blocks_per_sm);
+        assert_eq!(blocks_per_sm(&d, d.shmem_per_block / 4), 4);
+    }
+
+    #[test]
+    fn occupancy_tradeoff_paper_vi_e() {
+        // Bigger SHMEM per block => lower occupancy (the tradeoff the paper
+        // accepts deliberately).
+        let d = DeviceSpec::k20();
+        let small = gpu_occupancy(&d, 4 * 1024, usize::MAX);
+        let big = gpu_occupancy(&d, 48 * 1024, usize::MAX);
+        assert!(big < small);
+        assert!(big > 0.0);
+    }
+
+    #[test]
+    fn factor_monotone_and_bounded() {
+        let d = DeviceSpec::c1060();
+        let mut prev = 0.0;
+        for blocks in [1usize, 10, 100, 1000, 100_000] {
+            let f = occupancy_factor(&d, 8 * 1024, blocks);
+            assert!(f >= prev && f <= 1.0);
+            prev = f;
+        }
+        // Plenty of blocks saturate most of the bandwidth.
+        assert!(prev > 0.55, "saturated factor {prev}");
+    }
+
+    #[test]
+    fn few_blocks_underutilize() {
+        let d = DeviceSpec::k20();
+        let f1 = occupancy_factor(&d, 8 * 1024, 1);
+        let f64k = occupancy_factor(&d, 8 * 1024, 64_000);
+        assert!(f1 < 0.2 && f64k / f1 > 5.0);
+    }
+}

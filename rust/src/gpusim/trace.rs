@@ -1,0 +1,162 @@
+//! nvprof-like execution timelines (Fig 15).
+//!
+//! The paper shows nvprof Gantt charts contrasting one fused launch
+//! computing 16 frames against six back-to-back simple launches computing
+//! one frame. [`timeline`] renders the simulated equivalent: per-kernel
+//! launch/memory/compute segments with start/end stamps, plus an ASCII
+//! Gantt for terminal output.
+
+use super::device::DeviceSpec;
+use crate::fusion::cost;
+use crate::fusion::fuse::FusedKernelPlan;
+use crate::fusion::halo::BoxDims;
+use crate::fusion::traffic::InputDims;
+
+/// One lane entry of the timeline.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Kernel (or phase) name.
+    pub name: String,
+    /// Phase: "launch", "exec".
+    pub phase: &'static str,
+    /// Start/end, microseconds from t=0.
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+impl TraceEvent {
+    pub fn dur_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// Simulate the launch-by-launch timeline of executing `plans` over one
+/// box group (`input` restricted to what the figure shows — e.g. 16 frames
+/// of one 32×32 tile for Fig 15).
+pub fn timeline(
+    plans: &[FusedKernelPlan],
+    input: InputDims,
+    bx: BoxDims,
+    dev: &DeviceSpec,
+) -> Vec<TraceEvent> {
+    let mut events = Vec::new();
+    let mut clock = 0.0f64;
+    for p in plans {
+        let c = cost::predict(&p.stages, input, bx, dev);
+        let launch_us = dev.launch_overhead * 1e6;
+        events.push(TraceEvent {
+            name: p.name(),
+            phase: "launch",
+            start_us: clock,
+            end_us: clock + launch_us,
+        });
+        clock += launch_us;
+        let exec_us = (c.seconds - dev.launch_overhead) * 1e6;
+        events.push(TraceEvent {
+            name: p.name(),
+            phase: "exec",
+            start_us: clock,
+            end_us: clock + exec_us,
+        });
+        clock += exec_us;
+    }
+    events
+}
+
+/// Render events as an ASCII Gantt chart (one row per event).
+pub fn render_ascii(events: &[TraceEvent], width: usize) -> String {
+    let total = events.last().map_or(0.0, |e| e.end_us).max(1e-9);
+    let mut out = String::new();
+    out.push_str(&format!("timeline ({total:.1} us total)\n"));
+    for e in events {
+        let pre = ((e.start_us / total) * width as f64).round() as usize;
+        let len = (((e.end_us - e.start_us) / total) * width as f64)
+            .round()
+            .max(1.0) as usize;
+        let bar: String = std::iter::repeat(' ')
+            .take(pre)
+            .chain(std::iter::repeat(if e.phase == "launch" { '|' } else { '#' }).take(len))
+            .collect();
+        out.push_str(&format!(
+            "{:<52} {:>9.1}us  {}\n",
+            format!("{} [{}]", e.name, e.phase),
+            e.dur_us(),
+            bar
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::candidates::Segment;
+    use crate::fusion::fuse::build_plans;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+
+    /// Fig 15 setup: one 32×32 tile, temporal box of 8 frames, K20.
+    /// (The paper's caption says t=16, but 32·32·16 violates its own
+    /// x·y·t ≤ β constraint on a 48 KB K20 block; t=8 is the largest
+    /// power-of-two that satisfies it — noted in EXPERIMENTS.md.)
+    fn fig15() -> (Vec<TraceEvent>, Vec<TraceEvent>) {
+        let run = paper_fusable_run();
+        let dev = DeviceSpec::k20();
+        let fused_plans = build_plans(&[Segment { start: 0, len: 5 }], &run);
+        let simple_plans = build_plans(
+            &(0..5).map(|i| Segment { start: i, len: 1 }).collect::<Vec<_>>(),
+            &run,
+        );
+        let fused_tl = timeline(
+            &fused_plans,
+            InputDims::new(32, 32, 8),
+            BoxDims::new(32, 32, 8),
+            &dev,
+        );
+        let simple_tl = timeline(
+            &simple_plans,
+            InputDims::new(32, 32, 1),
+            BoxDims::new(32, 32, 1),
+            &dev,
+        );
+        (fused_tl, simple_tl)
+    }
+
+    #[test]
+    fn fused_timeline_has_one_launch_simple_has_five() {
+        let (f, s) = fig15();
+        assert_eq!(f.iter().filter(|e| e.phase == "launch").count(), 1);
+        assert_eq!(s.iter().filter(|e| e.phase == "launch").count(), 5);
+    }
+
+    #[test]
+    fn events_are_contiguous_and_ordered() {
+        let (f, _) = fig15();
+        for w in f.windows(2) {
+            assert!(w[1].start_us >= w[0].end_us - 1e-9);
+        }
+    }
+
+    #[test]
+    fn fused_per_frame_beats_simple_per_frame() {
+        // Paper: ~31 us/frame fused (16 frames) vs ~64 us/frame simple.
+        let (f, s) = fig15();
+        let fused_total = f.last().unwrap().end_us;
+        let simple_total = s.last().unwrap().end_us;
+        let fused_per_frame = fused_total / 8.0;
+        let simple_per_frame = simple_total / 1.0;
+        assert!(
+            fused_per_frame < simple_per_frame,
+            "fused {fused_per_frame} vs simple {simple_per_frame}"
+        );
+    }
+
+    #[test]
+    fn ascii_render_contains_all_kernels() {
+        let (_, s) = fig15();
+        let txt = render_ascii(&s, 60);
+        for name in ["rgbToGray", "IIRFilter", "GaussianFilter",
+                     "GradientOperation", "Threshold"] {
+            assert!(txt.contains(name), "{name} missing");
+        }
+    }
+}

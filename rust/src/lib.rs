@@ -1,0 +1,33 @@
+//! # kfuse — kernel fusion for massive video analysis
+//!
+//! Reproduction of *"Efficient Kernel Fusion Techniques for Massive Video
+//! Data Analysis on GPGPUs"* (Adnan, Radhakrishnan, Karabuk — CS.DC 2015)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the pipeline
+//!   stages and the fused megakernels, AOT-lowered to HLO text.
+//! * **L2** — JAX graphs (`python/compile/model.py`): pipeline variants
+//!   (no / two / full fusion) per box configuration.
+//! * **L3** — this crate: the fusion *planner* (the paper's optimization
+//!   model, Algorithms 1 & 2, eq 3–6), the GPU cost/traffic simulator
+//!   standing in for the paper's CUDA devices, and a streaming coordinator
+//!   that cuts high-speed video into boxes, dispatches them to PJRT
+//!   executables, and tracks features with a Kalman filter.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! graphs once; everything here loads `artifacts/*.hlo.txt` via the `xla`
+//! crate (PJRT CPU client).
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod cpu_ref;
+pub mod error;
+pub mod fusion;
+pub mod gpusim;
+pub mod prop;
+pub mod runtime;
+pub mod tracking;
+pub mod video;
+
+pub use error::{Error, Result};

@@ -1,0 +1,270 @@
+//! kfuse CLI — plan, run, serve, simulate, and figure regeneration.
+//!
+//! ```text
+//! kfuse plan     [--device k20|c1060|gtx750ti] [--input 256x256x1000]
+//! kfuse run      [--mode full|two|none] [--size 256] [--frames 64]
+//!                [--box 32x32x8] [--workers N] [--markers M]
+//! kfuse serve    [--fps 600] [--mode full] [--size 256] [--frames 256]
+//! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
+//! kfuse codegen  (print Table III-style fused kernel source)
+//! ```
+
+use std::sync::Arc;
+
+use kfuse::config::{FusionMode, RunConfig};
+use kfuse::coordinator;
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::kernel_ir::paper_pipeline;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::fusion::{self};
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::{Error, Result};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    sub: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let sub = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = Vec::new();
+        while let Some(k) = it.next() {
+            let k = k
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{k}'")))?
+                .to_string();
+            let v = it
+                .next()
+                .ok_or_else(|| Error::Config(format!("--{k} needs a value")))?;
+            flags.push((k, v));
+        }
+        Ok(Args { sub, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number '{v}'"))),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number '{v}'"))),
+        }
+    }
+}
+
+fn parse_dims3(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 3 {
+        return Err(Error::Config(format!("expected AxBxC, got '{s}'")));
+    }
+    let p = |i: usize| -> Result<usize> {
+        parts[i]
+            .parse()
+            .map_err(|_| Error::Config(format!("bad dim '{}'", parts[i])))
+    };
+    Ok((p(0)?, p(1)?, p(2)?))
+}
+
+fn device_by_name(name: &str) -> Result<DeviceSpec> {
+    match name.to_lowercase().as_str() {
+        "c1060" => Ok(DeviceSpec::c1060()),
+        "k20" => Ok(DeviceSpec::k20()),
+        "gtx750ti" | "750ti" => Ok(DeviceSpec::gtx750ti()),
+        _ => Err(Error::Config(format!("unknown device '{name}'"))),
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.frame_size = args.usize_or("size", cfg.frame_size)?;
+    cfg.frames = args.usize_or("frames", cfg.frames)?;
+    cfg.fps = args.f64_or("fps", cfg.fps)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.markers = args.usize_or("markers", cfg.markers)?;
+    cfg.queue_depth = args.usize_or("queue", cfg.queue_depth)?;
+    if let Some(m) = args.get("mode") {
+        cfg.mode = FusionMode::parse(m)?;
+    }
+    if let Some(b) = args.get("box") {
+        let (x, y, t) = parse_dims3(b)?;
+        cfg.box_dims = BoxDims::new(x, y, t);
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    cfg.threshold = args.f64_or("threshold", cfg.threshold as f64)? as f32;
+    Ok(cfg)
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let dev = device_by_name(args.get("device").unwrap_or("k20"))?;
+    let (n, m, t) = parse_dims3(args.get("input").unwrap_or("256x256x1000"))?;
+    let input = InputDims::new(n, m, t);
+    let plan = fusion::plan(&paper_pipeline(), input, &dev)?;
+    println!("device: {}", dev.name);
+    println!("input:  {n}x{m}x{t}");
+    println!(
+        "box:    {}x{}x{} (eq 6 discrete optimum, SHMEM {} KB)",
+        plan.box_dims.x,
+        plan.box_dims.y,
+        plan.box_dims.t,
+        dev.shmem_per_block / 1024
+    );
+    println!(
+        "predicted total: {:.3} ms ({} B&B nodes)",
+        plan.predicted_seconds * 1e3,
+        plan.solver_nodes
+    );
+    println!("partition:");
+    for f in &plan.fused {
+        println!(
+            "  {} | halo dx={} dy={} dt={} | syncs at {:?}",
+            f.name(),
+            f.halo.dx,
+            f.halo.dy,
+            f.halo.dt,
+            f.syncs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = run_config(args)?;
+    cfg.roi_only = args.get("roi").map(|v| v == "true" || v == "1")
+        .unwrap_or(cfg.roi_only);
+    println!(
+        "run: {} | {}x{} x {} frames | box {}x{}x{} | {} workers{}",
+        cfg.mode.name(),
+        cfg.frame_size,
+        cfg.frame_size,
+        cfg.frames,
+        cfg.box_dims.x,
+        cfg.box_dims.y,
+        cfg.box_dims.t,
+        cfg.workers,
+        if cfg.roi_only { " | roi-only" } else { "" }
+    );
+    if cfg.roi_only {
+        let (clip, _) = coordinator::synth_clip(&cfg, 42);
+        let (rep, coverage) =
+            coordinator::run_roi(&cfg, Arc::new(clip))?;
+        println!("{}", rep.metrics);
+        println!(
+            "tracks: {} | box coverage: {:.1}% (Fig 8b interest areas)",
+            rep.tracks,
+            coverage * 100.0
+        );
+        return Ok(());
+    }
+    let rep = coordinator::run_batch_synth(&cfg, 42)?;
+    println!("{}", rep.metrics);
+    println!(
+        "tracks: {} | rmse: {:?}",
+        rep.tracks,
+        rep.rmse
+            .iter()
+            .map(|r| (r * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let (clip, _) = coordinator::synth_clip(&cfg, 42);
+    println!(
+        "serve: {} fps ingest | {} | {} frames",
+        cfg.fps,
+        cfg.mode.name(),
+        cfg.frames
+    );
+    let rep = coordinator::run_serve(&cfg, Arc::new(clip))?;
+    println!("{rep}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dev = device_by_name(args.get("device").unwrap_or("k20"))?;
+    let (n, m, t) = parse_dims3(args.get("input").unwrap_or("256x256x1000"))?;
+    let input = InputDims::new(n, m, t);
+    let (x, y, bt) = parse_dims3(args.get("box").unwrap_or("32x32x8"))?;
+    let bx = BoxDims::new(x, y, bt);
+    let plan = fusion::plan_with_box(&paper_pipeline(), input, bx, &dev)?;
+    let rep = kfuse::gpusim::model::simulate(&plan.fused, input, bx, &dev);
+    println!("device: {} | input {n}x{m}x{t} | box {x}x{y}x{bt}", dev.name);
+    for (name, s) in &rep.per_kernel {
+        println!("  {:<58} {:>10.3} ms", name, s * 1e3);
+    }
+    println!(
+        "total {:.3} ms | {:.1} GB GMEM | {:.0} frames/s",
+        rep.seconds * 1e3,
+        rep.gmem_bytes as f64 / 1e9,
+        rep.fps
+    );
+    Ok(())
+}
+
+fn cmd_codegen(_args: &Args) -> Result<()> {
+    use kfuse::fusion::candidates::Segment;
+    use kfuse::fusion::fuse::FusedKernelPlan;
+    let run = kfuse::fusion::kernel_ir::paper_fusable_run();
+    let bx = BoxDims::new(32, 32, 8);
+    for seg in [
+        Segment { start: 0, len: 2 },
+        Segment { start: 0, len: 5 },
+    ] {
+        let plan = FusedKernelPlan::build(seg, &run);
+        println!("// ==== {} ====", plan.name());
+        println!("{}", plan.codegen_cuda_like(bx));
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.sub.as_str() {
+        "plan" => cmd_plan(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "codegen" => cmd_codegen(&args),
+        _ => {
+            println!(
+                "kfuse — kernel fusion for massive video analysis\n\
+                 subcommands: plan | run | serve | simulate | codegen\n\
+                 (see crate docs / README for flags)"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

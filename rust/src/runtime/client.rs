@@ -1,0 +1,66 @@
+//! Per-thread runtime: one PJRT CPU client + a lazy executable cache.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so each
+//! coordinator worker owns a `Runtime`. The manifest is plain data shared
+//! via `Arc`; compiled executables are cached per runtime by name.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use xla::PjRtClient;
+
+use super::artifact::Manifest;
+use super::executable::Executable;
+use crate::Result;
+
+/// One thread's handle to the PJRT world.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Arc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over a shared manifest.
+    pub fn new(manifest: Arc<Manifest>) -> Result<Runtime> {
+        Ok(Runtime {
+            client: PjRtClient::cpu()?,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: load the manifest from a directory and build a runtime.
+    pub fn from_dir(dir: &str) -> Result<Runtime> {
+        Self::new(Arc::new(Manifest::load(dir)?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling on first use) the named artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?.clone();
+        let exe = Rc::new(Executable::load(&self.client, entry)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on f32 inputs.
+    pub fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.executable(name)?.run(inputs)
+    }
+
+    /// Number of compiled executables held by this runtime.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

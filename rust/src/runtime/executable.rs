@@ -1,0 +1,84 @@
+//! A compiled PJRT executable with typed f32 I/O.
+//!
+//! Wraps the `xla` crate path: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! unwraps a 1-tuple (see /opt/xla-example/README.md).
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::ArtifactEntry;
+use crate::{Error, Result};
+
+/// One loaded + compiled artifact, bound to the client that compiled it.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load the HLO text at `entry.path` and compile it on `client`.
+    pub fn load(client: &PjRtClient, entry: ArtifactEntry) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executable { entry, exe })
+    }
+
+    /// Execute with f32 slices matching the manifest input specs; returns
+    /// the flattened f32 output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let lits = self.literals(inputs)?;
+        self.run_literals(&lits)
+    }
+
+    /// Build input literals (reusable across runs of identical shape).
+    pub fn literals(&self, inputs: &[&[f32]]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        self.entry
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, data)| {
+                if spec.elems() != data.len() {
+                    return Err(Error::Shape(format!(
+                        "{}: input {:?} needs {} elems, got {}",
+                        self.entry.name,
+                        spec.dims,
+                        spec.elems(),
+                        data.len()
+                    )));
+                }
+                // f32 slice -> raw bytes without copy.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &spec.dims,
+                    bytes,
+                )
+                .map_err(Error::from)
+            })
+            .collect()
+    }
+
+    /// Execute with pre-built literals.
+    pub fn run_literals(&self, lits: &[Literal]) -> Result<Vec<f32>> {
+        let bufs = self.exe.execute::<Literal>(lits)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

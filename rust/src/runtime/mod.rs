@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from the
+//! coordinator hot path. Python never runs here — `make artifacts` already
+//! lowered the JAX graphs.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+
+pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use executable::Executable;

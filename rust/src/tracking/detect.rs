@@ -1,0 +1,162 @@
+//! Feature detection on the binarized pipeline output.
+//!
+//! Two granularities, matching how the coordinator uses the artifacts:
+//!
+//! * [`centroid_in_window`] — mass-weighted centroid inside a marker ROI
+//!   (the paper's Fig 8b "interest areas"), fed by the `detect_*` artifact
+//!   outputs or raw binary boxes;
+//! * [`connected_components`] — full-frame blob labeling for acquisition
+//!   (finding markers in the first frame without prior ROIs).
+
+/// A detected blob: pixel mass and centroid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Blob {
+    pub mass: f32,
+    pub ci: f32,
+    pub cj: f32,
+}
+
+/// Mass-weighted centroid of on-pixels within `[i0..i1) × [j0..j1)` of a
+/// binary (H, W) frame. `None` when the window contains no on-pixels.
+pub fn centroid_in_window(
+    frame: &[f32],
+    h: usize,
+    w: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) -> Option<Blob> {
+    let (mut mass, mut si, mut sj) = (0.0f32, 0.0f32, 0.0f32);
+    for i in i0..i1.min(h) {
+        for j in j0..j1.min(w) {
+            if frame[i * w + j] > 0.0 {
+                mass += 1.0;
+                si += i as f32;
+                sj += j as f32;
+            }
+        }
+    }
+    (mass > 0.0).then(|| Blob {
+        mass,
+        ci: si / mass,
+        cj: sj / mass,
+    })
+}
+
+/// 4-connected component labeling on one binary frame; returns blobs with
+/// at least `min_mass` pixels, sorted by descending mass.
+pub fn connected_components(
+    frame: &[f32],
+    h: usize,
+    w: usize,
+    min_mass: usize,
+) -> Vec<Blob> {
+    let mut seen = vec![false; h * w];
+    let mut blobs = Vec::new();
+    let mut stack = Vec::new();
+    for start in 0..h * w {
+        if seen[start] || frame[start] <= 0.0 {
+            continue;
+        }
+        // Flood fill.
+        let (mut mass, mut si, mut sj) = (0.0f32, 0.0f32, 0.0f32);
+        stack.push(start);
+        seen[start] = true;
+        while let Some(p) = stack.pop() {
+            let (i, j) = (p / w, p % w);
+            mass += 1.0;
+            si += i as f32;
+            sj += j as f32;
+            let mut push = |q: usize| {
+                if !seen[q] && frame[q] > 0.0 {
+                    seen[q] = true;
+                    stack.push(q);
+                }
+            };
+            if i > 0 {
+                push(p - w);
+            }
+            if i + 1 < h {
+                push(p + w);
+            }
+            if j > 0 {
+                push(p - 1);
+            }
+            if j + 1 < w {
+                push(p + 1);
+            }
+        }
+        if mass as usize >= min_mass {
+            blobs.push(Blob {
+                mass,
+                ci: si / mass,
+                cj: sj / mass,
+            });
+        }
+    }
+    blobs.sort_by(|a, b| b.mass.partial_cmp(&a.mass).unwrap());
+    blobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_with_blob(h: usize, w: usize, i0: usize, j0: usize,
+                       size: usize) -> Vec<f32> {
+        let mut f = vec![0.0; h * w];
+        for i in i0..i0 + size {
+            for j in j0..j0 + size {
+                f[i * w + j] = 255.0;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn centroid_exact_for_square() {
+        let f = frame_with_blob(16, 16, 4, 8, 3);
+        let b = centroid_in_window(&f, 16, 16, 0, 16, 0, 16).unwrap();
+        assert_eq!(b.mass, 9.0);
+        assert!((b.ci - 5.0).abs() < 1e-6 && (b.cj - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn centroid_window_restricts() {
+        let f = frame_with_blob(16, 16, 4, 8, 3);
+        assert!(centroid_in_window(&f, 16, 16, 0, 3, 0, 3).is_none());
+    }
+
+    #[test]
+    fn components_separate_blobs() {
+        let mut f = frame_with_blob(32, 32, 2, 2, 3);
+        for (i, j) in [(20usize, 20usize)] {
+            for di in 0..4 {
+                for dj in 0..4 {
+                    f[(i + di) * 32 + j + dj] = 255.0;
+                }
+            }
+        }
+        let blobs = connected_components(&f, 32, 32, 2);
+        assert_eq!(blobs.len(), 2);
+        assert_eq!(blobs[0].mass, 16.0); // sorted by mass desc
+        assert_eq!(blobs[1].mass, 9.0);
+    }
+
+    #[test]
+    fn min_mass_filters_specks() {
+        let mut f = vec![0.0; 8 * 8];
+        f[0] = 255.0; // single-pixel noise
+        assert!(connected_components(&f, 8, 8, 2).is_empty());
+        assert_eq!(connected_components(&f, 8, 8, 1).len(), 1);
+    }
+
+    #[test]
+    fn diagonal_blobs_are_separate_in_4_connectivity() {
+        let mut f = vec![0.0; 4 * 4];
+        f[0] = 255.0;
+        f[5] = 255.0; // (1,1) — diagonal neighbor
+        assert_eq!(connected_components(&f, 4, 4, 1).len(), 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Constant-velocity Kalman filter (the paper's K6) — native Rust.
+//!
+//! State `[i, j, vi, vj]`, measurements `[i, j]` (pixel centroids).
+//! Constants mirror `python/compile/kernels/ref.py` so the native filter,
+//! the jnp oracle, and the AOT'd `kalman_step` artifact are all
+//! interchangeable (integration tests assert numerical agreement).
+
+/// Process-noise scale (mirrors ref.KALMAN_Q).
+pub const Q: f32 = 1e-2;
+/// Measurement-noise variance (mirrors ref.KALMAN_R).
+pub const R: f32 = 1.0;
+/// Frame interval in frame units (mirrors ref.KALMAN_DT).
+pub const DT: f32 = 1.0;
+
+/// Filter state: mean and covariance.
+#[derive(Debug, Clone)]
+pub struct Kalman {
+    /// State mean [i, j, vi, vj].
+    pub x: [f32; 4],
+    /// Covariance, row-major 4×4.
+    pub p: [[f32; 4]; 4],
+}
+
+impl Kalman {
+    /// Initialize at a measured position with inflated uncertainty.
+    pub fn new(i: f32, j: f32) -> Self {
+        let mut p = [[0.0; 4]; 4];
+        for (d, row) in p.iter_mut().enumerate() {
+            row[d] = if d < 2 { 10.0 } else { 100.0 };
+        }
+        Kalman {
+            x: [i, j, 0.0, 0.0],
+            p,
+        }
+    }
+
+    /// Predicted measurement (position part of the propagated state).
+    pub fn predict_pos(&self) -> (f32, f32) {
+        (self.x[0] + DT * self.x[2], self.x[1] + DT * self.x[3])
+    }
+
+    /// One predict+update step with measurement `(zi, zj)`.
+    pub fn step(&mut self, zi: f32, zj: f32) {
+        // F = [[1,0,dt,0],[0,1,0,dt],[0,0,1,0],[0,0,0,1]]
+        let f = [
+            [1.0, 0.0, DT, 0.0],
+            [0.0, 1.0, 0.0, DT],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ];
+        // Predict mean: x = F x.
+        let xp = [
+            self.x[0] + DT * self.x[2],
+            self.x[1] + DT * self.x[3],
+            self.x[2],
+            self.x[3],
+        ];
+        // Predict covariance: P = F P Fᵀ + Q·I.
+        let mut fp = [[0.0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for (k, frow) in f[i].iter().enumerate() {
+                    fp[i][j] += frow * self.p[k][j];
+                }
+            }
+        }
+        let mut pp = [[0.0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    pp[i][j] += fp[i][k] * f[j][k]; // F P Fᵀ
+                }
+            }
+            pp[i][i] += Q;
+        }
+        // Innovation y = z - H xp (H selects positions).
+        let y = [zi - xp[0], zj - xp[1]];
+        // S = H P Hᵀ + R·I — the top-left 2×2 of pp plus R.
+        let s = [
+            [pp[0][0] + R, pp[0][1]],
+            [pp[1][0], pp[1][1] + R],
+        ];
+        let det = s[0][0] * s[1][1] - s[0][1] * s[1][0];
+        let sinv = [
+            [s[1][1] / det, -s[0][1] / det],
+            [-s[1][0] / det, s[0][0] / det],
+        ];
+        // K = P Hᵀ S⁻¹ : (4×2).
+        let mut k = [[0.0f32; 2]; 4];
+        for i in 0..4 {
+            for j in 0..2 {
+                // (P Hᵀ)[i][c] = pp[i][c] for c in 0..2
+                k[i][j] = pp[i][0] * sinv[0][j] + pp[i][1] * sinv[1][j];
+            }
+        }
+        // x = xp + K y.
+        for i in 0..4 {
+            self.x[i] = xp[i] + k[i][0] * y[0] + k[i][1] * y[1];
+        }
+        // P = (I - K H) Pp; KH has K's columns in the first two state
+        // columns (H selects positions).
+        let mut m = [[0.0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                let kh = if j < 2 { k[i][j] } else { 0.0 };
+                m[i][j] = if i == j { 1.0 } else { 0.0 } - kh;
+            }
+        }
+        let mut pn = [[0.0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for (l, mrow) in m[i].iter().enumerate() {
+                    pn[i][j] += mrow * pp[l][j];
+                }
+            }
+        }
+        self.p = pn;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_constant_velocity() {
+        let mut kf = Kalman::new(0.0, 0.0);
+        for step in 1..60 {
+            kf.step(2.0 * step as f32, -1.0 * step as f32);
+        }
+        assert!((kf.x[2] - 2.0).abs() < 0.05, "vi={}", kf.x[2]);
+        assert!((kf.x[3] + 1.0).abs() < 0.05, "vj={}", kf.x[3]);
+    }
+
+    #[test]
+    fn covariance_stays_symmetric() {
+        let mut kf = Kalman::new(5.0, 5.0);
+        for step in 0..30 {
+            kf.step(5.0 + step as f32, 5.0);
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert!((kf.p[i][j] - kf.p[j][i]).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uncertainty_shrinks_with_measurements() {
+        let mut kf = Kalman::new(0.0, 0.0);
+        let p0 = kf.p[0][0];
+        for _ in 0..10 {
+            kf.step(0.0, 0.0);
+        }
+        assert!(kf.p[0][0] < p0 / 5.0);
+    }
+
+    #[test]
+    fn prediction_extrapolates() {
+        let mut kf = Kalman::new(0.0, 0.0);
+        for step in 1..40 {
+            kf.step(step as f32, 0.0);
+        }
+        let (pi, _) = kf.predict_pos();
+        assert!((pi - 40.0).abs() < 0.5, "pi={pi}");
+    }
+}

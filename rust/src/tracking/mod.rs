@@ -1,0 +1,10 @@
+//! Feature tracking (the paper's K6 + application layer): Kalman filter,
+//! blob detection, and the multi-marker track manager.
+
+pub mod detect;
+pub mod kalman;
+pub mod tracker;
+
+pub use detect::{centroid_in_window, connected_components, Blob};
+pub use kalman::Kalman;
+pub use tracker::{Track, Tracker, TrackerConfig};

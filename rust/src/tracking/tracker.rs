@@ -1,0 +1,269 @@
+//! Multi-marker track manager: acquisition, ROI-gated association, and
+//! per-marker Kalman filtering (the paper's feature-tracking application).
+//!
+//! Mirrors the paper's workflow (Fig 8): marker ROIs are acquired from the
+//! first binarized frame via connected components, then each marker is
+//! followed by a constant-velocity Kalman filter whose prediction re-centers
+//! the ROI for the next frame. Association is nearest-neighbor inside the
+//! ROI gate, injective per frame (one detection feeds at most one track).
+
+use super::detect::{connected_components, Blob};
+use super::kalman::Kalman;
+
+/// One tracked marker.
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub id: usize,
+    pub filter: Kalman,
+    /// Smoothed trajectory: filtered position per processed frame.
+    pub history: Vec<(f32, f32)>,
+    /// Consecutive frames with no associated detection.
+    pub misses: usize,
+}
+
+impl Track {
+    /// Current ROI (search window) centered on the predicted position.
+    pub fn roi(&self, half: usize, h: usize, w: usize)
+               -> (usize, usize, usize, usize) {
+        let (pi, pj) = self.filter.predict_pos();
+        let i0 = (pi as isize - half as isize).max(0) as usize;
+        let j0 = (pj as isize - half as isize).max(0) as usize;
+        let i1 = ((pi as isize + half as isize + 1).max(0) as usize).min(h);
+        let j1 = ((pj as isize + half as isize + 1).max(0) as usize).min(w);
+        (i0, i1, j0, j1)
+    }
+}
+
+/// Tracker configuration.
+#[derive(Debug, Clone)]
+pub struct TrackerConfig {
+    /// ROI half-width in pixels (gate radius).
+    pub roi_half: usize,
+    /// Minimum blob mass at acquisition.
+    pub min_mass: usize,
+    /// Drop a track after this many consecutive misses.
+    pub max_misses: usize,
+}
+
+impl Default for TrackerConfig {
+    fn default() -> Self {
+        TrackerConfig {
+            roi_half: 16,
+            min_mass: 4,
+            max_misses: 8,
+        }
+    }
+}
+
+/// Multi-target tracker over binarized frames.
+#[derive(Debug)]
+pub struct Tracker {
+    pub cfg: TrackerConfig,
+    pub tracks: Vec<Track>,
+    next_id: usize,
+    h: usize,
+    w: usize,
+}
+
+impl Tracker {
+    pub fn new(cfg: TrackerConfig, h: usize, w: usize) -> Self {
+        Tracker {
+            cfg,
+            tracks: Vec::new(),
+            next_id: 0,
+            h,
+            w,
+        }
+    }
+
+    /// Acquire initial tracks from the first binarized frame.
+    pub fn acquire(&mut self, frame: &[f32], expected: usize) {
+        let mut blobs = connected_components(frame, self.h, self.w,
+                                             self.cfg.min_mass);
+        blobs.truncate(expected);
+        for b in blobs {
+            self.tracks.push(Track {
+                id: self.next_id,
+                filter: Kalman::new(b.ci, b.cj),
+                history: vec![(b.ci, b.cj)],
+                misses: 0,
+            });
+            self.next_id += 1;
+        }
+    }
+
+    /// Advance all tracks by one binarized frame.
+    ///
+    /// Detections = blobs within each track's ROI; association is greedy
+    /// nearest-neighbor, injective (a blob is consumed by the closest
+    /// track that claims it first, ordered by distance).
+    pub fn step(&mut self, frame: &[f32]) {
+        let blobs = connected_components(frame, self.h, self.w,
+                                         self.cfg.min_mass);
+        // Candidate (track, blob, dist) pairs gated by ROI.
+        let mut cands: Vec<(usize, usize, f32)> = Vec::new();
+        for (ti, tr) in self.tracks.iter().enumerate() {
+            let (i0, i1, j0, j1) = tr.roi(self.cfg.roi_half, self.h, self.w);
+            let (pi, pj) = tr.filter.predict_pos();
+            for (bi, b) in blobs.iter().enumerate() {
+                let inside = b.ci >= i0 as f32 && b.ci < i1 as f32
+                    && b.cj >= j0 as f32 && b.cj < j1 as f32;
+                if inside {
+                    let d = (b.ci - pi).powi(2) + (b.cj - pj).powi(2);
+                    cands.push((ti, bi, d));
+                }
+            }
+        }
+        cands.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        let mut track_used = vec![false; self.tracks.len()];
+        let mut blob_used = vec![false; blobs.len()];
+        let mut assigned: Vec<(usize, Blob)> = Vec::new();
+        for (ti, bi, _) in cands {
+            if !track_used[ti] && !blob_used[bi] {
+                track_used[ti] = true;
+                blob_used[bi] = true;
+                assigned.push((ti, blobs[bi]));
+            }
+        }
+        for (ti, b) in assigned {
+            let tr = &mut self.tracks[ti];
+            tr.filter.step(b.ci, b.cj);
+            tr.history.push((tr.filter.x[0], tr.filter.x[1]));
+            tr.misses = 0;
+        }
+        for (ti, used) in track_used.iter().enumerate() {
+            if !used {
+                let tr = &mut self.tracks[ti];
+                // Coast on the prediction.
+                let (pi, pj) = tr.filter.predict_pos();
+                tr.filter.x[0] = pi;
+                tr.filter.x[1] = pj;
+                tr.history.push((pi, pj));
+                tr.misses += 1;
+            }
+        }
+        self.tracks.retain(|t| t.misses <= self.cfg.max_misses);
+    }
+
+    /// RMSE of each track's history against ground-truth trajectories
+    /// (greedy matching of tracks to truth by first-frame distance).
+    pub fn rmse_vs_truth(&self, truth: &[Vec<(f64, f64)>]) -> Vec<f64> {
+        self.tracks
+            .iter()
+            .map(|tr| {
+                // Match to nearest ground-truth trajectory at acquisition.
+                let (ai, aj) = tr.history[0];
+                let gt = truth
+                    .iter()
+                    .min_by(|a, b| {
+                        let da = (a[0].0 - ai as f64).powi(2)
+                            + (a[0].1 - aj as f64).powi(2);
+                        let db = (b[0].0 - ai as f64).powi(2)
+                            + (b[0].1 - aj as f64).powi(2);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                let n = tr.history.len().min(gt.len());
+                let sse: f64 = (0..n)
+                    .map(|t| {
+                        (tr.history[t].0 as f64 - gt[t].0).powi(2)
+                            + (tr.history[t].1 as f64 - gt[t].1).powi(2)
+                    })
+                    .sum();
+                (sse / n as f64).sqrt()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_with_markers(h: usize, w: usize,
+                          centers: &[(f32, f32)]) -> Vec<f32> {
+        let mut f = vec![0.0; h * w];
+        for &(ci, cj) in centers {
+            for di in -1i32..=1 {
+                for dj in -1i32..=1 {
+                    let i = (ci.round() as i32 + di).clamp(0, h as i32 - 1);
+                    let j = (cj.round() as i32 + dj).clamp(0, w as i32 - 1);
+                    f[i as usize * w + j as usize] = 255.0;
+                }
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn acquires_expected_markers() {
+        let f = frame_with_markers(64, 64, &[(10.0, 10.0), (40.0, 50.0)]);
+        let mut tk = Tracker::new(TrackerConfig::default(), 64, 64);
+        tk.acquire(&f, 2);
+        assert_eq!(tk.tracks.len(), 2);
+    }
+
+    #[test]
+    fn follows_linear_motion() {
+        let mut tk = Tracker::new(TrackerConfig::default(), 64, 64);
+        tk.acquire(&frame_with_markers(64, 64, &[(10.0, 10.0)]), 1);
+        for t in 1..30 {
+            let c = (10.0 + 0.5 * t as f32, 10.0 + 0.3 * t as f32);
+            tk.step(&frame_with_markers(64, 64, &[c]));
+        }
+        let tr = &tk.tracks[0];
+        let (fi, fj) = *tr.history.last().unwrap();
+        assert!((fi - 24.5).abs() < 1.0, "fi={fi}");
+        assert!((fj - 18.7).abs() < 1.0, "fj={fj}");
+        assert_eq!(tr.misses, 0);
+    }
+
+    #[test]
+    fn association_is_injective() {
+        // Two markers close together: each blob may feed only one track.
+        let mut tk = Tracker::new(TrackerConfig::default(), 64, 64);
+        tk.acquire(
+            &frame_with_markers(64, 64, &[(20.0, 20.0), (20.0, 30.0)]),
+            2,
+        );
+        tk.step(&frame_with_markers(64, 64, &[(20.0, 21.0), (20.0, 31.0)]));
+        let h0 = tk.tracks[0].history.last().unwrap();
+        let h1 = tk.tracks[1].history.last().unwrap();
+        assert!((h0.1 - h1.1).abs() > 5.0, "tracks collapsed: {h0:?} {h1:?}");
+    }
+
+    #[test]
+    fn coasts_then_drops_lost_tracks() {
+        let cfg = TrackerConfig {
+            max_misses: 3,
+            ..TrackerConfig::default()
+        };
+        let mut tk = Tracker::new(cfg, 64, 64);
+        tk.acquire(&frame_with_markers(64, 64, &[(10.0, 10.0)]), 1);
+        let empty = vec![0.0; 64 * 64];
+        for _ in 0..3 {
+            tk.step(&empty);
+            assert_eq!(tk.tracks.len(), 1); // coasting
+        }
+        tk.step(&empty);
+        assert!(tk.tracks.is_empty()); // dropped after max_misses
+    }
+
+    #[test]
+    fn rmse_small_for_clean_tracking() {
+        let mut tk = Tracker::new(TrackerConfig::default(), 64, 64);
+        let truth: Vec<Vec<(f64, f64)>> = vec![(0..20)
+            .map(|t| (10.0 + 0.5 * t as f64, 10.0))
+            .collect()];
+        tk.acquire(&frame_with_markers(64, 64, &[(10.0, 10.0)]), 1);
+        for t in 1..20 {
+            tk.step(&frame_with_markers(
+                64,
+                64,
+                &[(10.0 + 0.5 * t as f32, 10.0)],
+            ));
+        }
+        let rmse = tk.rmse_vs_truth(&truth);
+        assert!(rmse[0] < 1.0, "rmse={:?}", rmse);
+    }
+}

@@ -1,0 +1,309 @@
+//! Video buffers and the box partitioner (the paper's Fig 3).
+//!
+//! A [`Video`] is a dense `(T, H, W, C)` f32 tensor in row-major order.
+//! [`BoxCutter`] cuts it into halo'd boxes for the coordinator: each output
+//! box `Box_b` of extent `t×x×y` gets an input box `Box_b_in` of extent
+//! `(t+δt)×(x+2δx)×(y+2δy)`, clamped (edge-replicated) at frame borders —
+//! the same data distribution that lets no thread block depend on another.
+
+use crate::fusion::halo::BoxDims;
+use crate::fusion::kernel_ir::Radii;
+
+/// Dense (T, H, W, C) f32 video tensor.
+#[derive(Debug, Clone)]
+pub struct Video {
+    pub t: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Video {
+    /// Allocate a zeroed video.
+    pub fn zeros(t: usize, h: usize, w: usize, c: usize) -> Self {
+        Video {
+            t,
+            h,
+            w,
+            c,
+            data: vec![0.0; t * h * w * c],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, t: usize, i: usize, j: usize, ch: usize) -> usize {
+        ((t * self.h + i) * self.w + j) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, t: usize, i: usize, j: usize, ch: usize) -> f32 {
+        self.data[self.idx(t, i, j, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, t: usize, i: usize, j: usize, ch: usize, v: f32) {
+        let ix = self.idx(t, i, j, ch);
+        self.data[ix] = v;
+    }
+
+    /// Clamped read: out-of-range spatial/temporal coordinates replicate
+    /// the nearest edge (frame-border halo policy).
+    #[inline]
+    pub fn get_clamped(&self, t: isize, i: isize, j: isize, ch: usize) -> f32 {
+        let tc = t.clamp(0, self.t as isize - 1) as usize;
+        let ic = i.clamp(0, self.h as isize - 1) as usize;
+        let jc = j.clamp(0, self.w as isize - 1) as usize;
+        self.get(tc, ic, jc, ch)
+    }
+
+    /// Extract a halo'd input box as a flat (bt, bh, bw, c) buffer.
+    ///
+    /// `(t0, i0, j0)` is the origin of the *output* box; the extracted
+    /// region starts `δt` frames and `δx/δy` pixels earlier, clamped.
+    /// Hot path: the in-bounds span of every row is one contiguous
+    /// `copy_from_slice`; only the clamped edge pixels go through the
+    /// scalar path (§Perf: ~3.8× faster than the per-pixel loop).
+    pub fn extract_box(
+        &self,
+        t0: usize,
+        i0: usize,
+        j0: usize,
+        out_box: BoxDims,
+        halo: Radii,
+    ) -> Vec<f32> {
+        let bt = out_box.t + halo.dt;
+        let bh = out_box.x + 2 * halo.dx;
+        let bw = out_box.y + 2 * halo.dy;
+        let c = self.c;
+        let mut out = Vec::with_capacity(bt * bh * bw * c);
+        let j_start = j0 as isize - halo.dy as isize;
+        for dt in 0..bt {
+            let t = (t0 as isize - halo.dt as isize + dt as isize)
+                .clamp(0, self.t as isize - 1) as usize;
+            for di in 0..bh {
+                let i = (i0 as isize - halo.dx as isize + di as isize)
+                    .clamp(0, self.h as isize - 1) as usize;
+                // Leading clamped columns (j < 0).
+                let lead = (-j_start).clamp(0, bw as isize) as usize;
+                // In-bounds contiguous span.
+                let span_start = (j_start + lead as isize) as usize;
+                let span = (self.w - span_start.min(self.w))
+                    .min(bw - lead);
+                let row_base = self.idx(t, i, 0, 0);
+                for _ in 0..lead {
+                    let px = row_base; // j = 0 (clamped)
+                    out.extend_from_slice(&self.data[px..px + c]);
+                }
+                if span > 0 {
+                    let px = row_base + span_start * c;
+                    out.extend_from_slice(&self.data[px..px + span * c]);
+                }
+                // Trailing clamped columns (j >= w).
+                let px = row_base + (self.w - 1) * c;
+                for _ in lead + span..bw {
+                    out.extend_from_slice(&self.data[px..px + c]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Write an output box (t×x×y single-channel) back at its origin.
+    pub fn write_box(
+        &mut self,
+        t0: usize,
+        i0: usize,
+        j0: usize,
+        out_box: BoxDims,
+        vals: &[f32],
+    ) {
+        assert_eq!(self.c, 1);
+        assert_eq!(vals.len(), out_box.pixels());
+        let mut k = 0;
+        for dt in 0..out_box.t {
+            for di in 0..out_box.x {
+                for dj in 0..out_box.y {
+                    self.set(t0 + dt, i0 + di, j0 + dj, 0, vals[k]);
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// One scheduled box: output origin + geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoxTask {
+    /// Monotone task id (for tracing and ordered reassembly).
+    pub id: usize,
+    /// Output-box origin (frame, row, col).
+    pub t0: usize,
+    pub i0: usize,
+    pub j0: usize,
+    /// Output-box extent.
+    pub dims: BoxDims,
+}
+
+/// Enumerate the grid of output boxes covering `h×w` frames over `frames`
+/// frames (Fig 3's `B = N·M·T / (x·y·t)` boxes). Temporal remainder boxes
+/// are dropped (callers size inputs to multiples; the coordinator's
+/// batcher only emits full temporal boxes).
+pub fn cut_boxes(
+    h: usize,
+    w: usize,
+    frames: usize,
+    dims: BoxDims,
+) -> Vec<BoxTask> {
+    let mut tasks = Vec::new();
+    let mut id = 0;
+    let mut t0 = 0;
+    while t0 + dims.t <= frames {
+        let mut i0 = 0;
+        while i0 + dims.x <= h {
+            let mut j0 = 0;
+            while j0 + dims.y <= w {
+                tasks.push(BoxTask {
+                    id,
+                    t0,
+                    i0,
+                    j0,
+                    dims,
+                });
+                id += 1;
+                j0 += dims.y;
+            }
+            i0 += dims.x;
+        }
+        t0 += dims.t;
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut v = Video::zeros(2, 3, 4, 2);
+        v.set(1, 2, 3, 1, 7.5);
+        assert_eq!(v.get(1, 2, 3, 1), 7.5);
+        assert_eq!(v.data.len(), 2 * 3 * 4 * 2);
+    }
+
+    #[test]
+    fn clamped_reads_replicate_edges() {
+        let mut v = Video::zeros(2, 2, 2, 1);
+        v.set(0, 0, 0, 0, 1.0);
+        v.set(1, 1, 1, 0, 9.0);
+        assert_eq!(v.get_clamped(-5, -5, -5, 0), 1.0);
+        assert_eq!(v.get_clamped(99, 99, 99, 0), 9.0);
+    }
+
+    #[test]
+    fn extract_box_shape_and_content() {
+        // 1 frame + dt halo, 4x4 frame, 2x2 box at (1,1) with dx=dy=1.
+        let mut v = Video::zeros(2, 4, 4, 1);
+        for t in 0..2 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    v.set(t, i, j, 0, (t * 100 + i * 10 + j) as f32);
+                }
+            }
+        }
+        let out = v.extract_box(
+            1,
+            1,
+            1,
+            BoxDims::new(2, 2, 1),
+            Radii::new(1, 1, 1),
+        );
+        // (1+1) x (2+2) x (2+2) x 1
+        assert_eq!(out.len(), 2 * 4 * 4);
+        // First element: frame 0, pixel (0,0).
+        assert_eq!(out[0], 0.0);
+        // Last element: frame 1, pixel (3,3).
+        assert_eq!(*out.last().unwrap(), 133.0);
+    }
+
+    #[test]
+    fn write_box_roundtrip() {
+        let mut v = Video::zeros(4, 8, 8, 1);
+        let dims = BoxDims::new(2, 2, 2);
+        let vals: Vec<f32> = (0..dims.pixels()).map(|k| k as f32).collect();
+        v.write_box(2, 4, 6, dims, &vals);
+        assert_eq!(v.get(2, 4, 6, 0), 0.0);
+        assert_eq!(v.get(3, 5, 7, 0), 7.0);
+    }
+
+    #[test]
+    fn cut_boxes_covers_grid_exactly() {
+        let tasks = cut_boxes(64, 64, 16, BoxDims::new(32, 32, 8));
+        assert_eq!(tasks.len(), 2 * 2 * 2);
+        // Disjoint and in-bounds.
+        for t in &tasks {
+            assert!(t.i0 + 32 <= 64 && t.j0 + 32 <= 64 && t.t0 + 8 <= 16);
+        }
+        let ids: Vec<usize> = tasks.iter().map(|t| t.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cut_boxes_drops_partial_temporal_tail() {
+        let tasks = cut_boxes(32, 32, 10, BoxDims::new(32, 32, 8));
+        assert_eq!(tasks.len(), 1); // frames 8..10 are an incomplete box
+    }
+}
+
+#[cfg(test)]
+mod extract_prop_tests {
+    use super::*;
+    use crate::prop::{run_prop, Gen};
+
+    /// Naive per-pixel reference for extract_box.
+    fn extract_naive(v: &Video, t0: usize, i0: usize, j0: usize,
+                     out_box: BoxDims, halo: Radii) -> Vec<f32> {
+        let bt = out_box.t + halo.dt;
+        let bh = out_box.x + 2 * halo.dx;
+        let bw = out_box.y + 2 * halo.dy;
+        let mut out = Vec::with_capacity(bt * bh * bw * v.c);
+        for dt in 0..bt {
+            let t = t0 as isize - halo.dt as isize + dt as isize;
+            for di in 0..bh {
+                let i = i0 as isize - halo.dx as isize + di as isize;
+                for dj in 0..bw {
+                    let j = j0 as isize - halo.dy as isize + dj as isize;
+                    for ch in 0..v.c {
+                        out.push(v.get_clamped(t, i, j, ch));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_fast_extract_matches_naive() {
+        // The row-sliced hot path (§Perf iteration 2) must agree with the
+        // scalar reference everywhere, including clamped frame borders.
+        run_prop("extract_box==naive", 120, |g: &mut Gen| {
+            let (t, h, w) = (g.usize_in(1, 4), g.usize_in(2, 12), g.usize_in(2, 12));
+            let c = *g.choose(&[1usize, 4]);
+            let mut v = Video::zeros(t, h, w, c);
+            for (k, x) in v.data.iter_mut().enumerate() {
+                *x = (k % 251) as f32;
+            }
+            let (bx, bt) = (g.usize_in(1, h.min(w)), g.usize_in(1, t));
+            let dims = BoxDims::new(bx, bx.min(w), bt);
+            let (hdx, hdt) = (g.usize_in(0, 3), g.usize_in(0, 2));
+            let halo = Radii::new(hdx, hdx, hdt);
+            let t0 = g.usize_in(0, t - bt);
+            let i0 = g.usize_in(0, h - dims.x);
+            let j0 = g.usize_in(0, w - dims.y);
+            let fast = v.extract_box(t0, i0, j0, dims, halo);
+            let slow = extract_naive(&v, t0, i0, j0, dims, halo);
+            assert_eq!(fast, slow, "t0={t0} i0={i0} j0={j0} {dims:?} {halo:?}");
+        });
+    }
+}

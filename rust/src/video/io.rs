@@ -1,0 +1,138 @@
+//! Video I/O: raw f32 clip files (for feeding real footage through the
+//! pipeline) and PGM frame export (for eyeballing binarized output and
+//! overlaying tracks).
+//!
+//! Raw clip format (`.kfv`): little-endian header `[magic "KFV1"]
+//! [u32 t] [u32 h] [u32 w] [u32 c]` followed by `t·h·w·c` f32 values in
+//! (T, H, W, C) row-major order — trivially writable from numpy:
+//! `open(p,'wb').write(b"KFV1" + np.array([t,h,w,c],'<u4').tobytes() +
+//! arr.astype('<f4').tobytes())`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::frame::Video;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"KFV1";
+
+/// Write a clip as a `.kfv` raw file.
+pub fn save_kfv(v: &Video, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    for dim in [v.t, v.h, v.w, v.c] {
+        f.write_all(&(dim as u32).to_le_bytes())?;
+    }
+    // f32 slice -> bytes without copy.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            v.data.as_ptr() as *const u8,
+            v.data.len() * 4,
+        )
+    };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+/// Load a `.kfv` raw clip.
+pub fn load_kfv(path: impl AsRef<Path>) -> Result<Video> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Config("not a KFV1 file".into()));
+    }
+    let mut dims = [0usize; 4];
+    for d in dims.iter_mut() {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        *d = u32::from_le_bytes(b) as usize;
+    }
+    let [t, h, w, c] = dims;
+    let n = t * h * w * c;
+    if n == 0 || n > (1 << 31) {
+        return Err(Error::Config(format!("implausible clip dims {dims:?}")));
+    }
+    let mut raw = vec![0u8; n * 4];
+    f.read_exact(&mut raw)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Video { t, h, w, c, data })
+}
+
+/// Export one frame of a single-channel clip as binary PGM (values
+/// clamped to 0..255).
+pub fn save_pgm(v: &Video, frame: usize, path: impl AsRef<Path>) -> Result<()> {
+    if v.c != 1 {
+        return Err(Error::Config("PGM export needs a 1-channel clip".into()));
+    }
+    if frame >= v.t {
+        return Err(Error::Config(format!(
+            "frame {frame} out of range (t={})",
+            v.t
+        )));
+    }
+    let mut out = Vec::with_capacity(v.h * v.w + 32);
+    out.extend_from_slice(format!("P5\n{} {}\n255\n", v.w, v.h).as_bytes());
+    let plane = v.h * v.w;
+    for &px in &v.data[frame * plane..(frame + 1) * plane] {
+        out.push(px.clamp(0.0, 255.0) as u8);
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kfuse_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn kfv_roundtrip() {
+        let mut v = Video::zeros(2, 3, 4, 4);
+        for (k, x) in v.data.iter_mut().enumerate() {
+            *x = k as f32 * 0.5 - 7.0;
+        }
+        let p = tmp("rt.kfv");
+        save_kfv(&v, &p).unwrap();
+        let w = load_kfv(&p).unwrap();
+        assert_eq!((w.t, w.h, w.w, w.c), (2, 3, 4, 4));
+        assert_eq!(w.data, v.data);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn kfv_rejects_garbage() {
+        let p = tmp("bad.kfv");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load_kfv(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pgm_export_header_and_pixels() {
+        let mut v = Video::zeros(1, 2, 2, 1);
+        v.data.copy_from_slice(&[0.0, 255.0, 300.0, -5.0]);
+        let p = tmp("f.pgm");
+        save_pgm(&v, 0, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(&bytes[bytes.len() - 4..], &[0u8, 255, 255, 0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pgm_rejects_multichannel_and_oob() {
+        let v = Video::zeros(1, 2, 2, 4);
+        assert!(save_pgm(&v, 0, tmp("x.pgm")).is_err());
+        let v1 = Video::zeros(1, 2, 2, 1);
+        assert!(save_pgm(&v1, 5, tmp("y.pgm")).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Video substrate: frame tensors, the Fig 3 box partitioner, and the
+//! synthetic HSDV generator that stands in for the paper's facial-action
+//! dataset (ground-truth marker tracks included).
+
+pub mod frame;
+pub mod io;
+pub mod synth;
+
+pub use frame::{cut_boxes, BoxTask, Video};
+pub use synth::{generate, ground_truth, SynthConfig};

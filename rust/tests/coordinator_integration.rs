@@ -1,0 +1,177 @@
+//! End-to-end coordinator integration: synth clip → boxes → PJRT workers →
+//! binarized frames → tracking, across all three fusion arms.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests no-op otherwise.
+
+use std::sync::Arc;
+
+use kfuse::config::{FusionMode, RunConfig};
+use kfuse::coordinator::{run_batch, run_batch_synth, run_serve, synth_clip};
+use kfuse::fusion::halo::BoxDims;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}
+
+fn small_cfg(mode: FusionMode) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames: 16,
+        mode,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers: 2,
+        markers: 1,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn all_arms_produce_identical_binaries() {
+    if !artifacts_present() {
+        return;
+    }
+    // The fusion arms are semantically equivalent: same clip, same output.
+    let cfg = small_cfg(FusionMode::Full);
+    let (clip, _) = synth_clip(&cfg, 7);
+    let clip = Arc::new(clip);
+    let full = run_batch(&small_cfg(FusionMode::Full), clip.clone()).unwrap();
+    let two = run_batch(&small_cfg(FusionMode::Two), clip.clone()).unwrap();
+    let none = run_batch(&small_cfg(FusionMode::None), clip.clone()).unwrap();
+    assert_eq!(full.binary.data, two.binary.data, "full != two");
+    assert_eq!(full.binary.data, none.binary.data, "full != none");
+}
+
+#[test]
+fn fusion_reduces_dispatches_and_traffic() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = small_cfg(FusionMode::Full);
+    let (clip, _) = synth_clip(&cfg, 9);
+    let clip = Arc::new(clip);
+    let full = run_batch(&small_cfg(FusionMode::Full), clip.clone()).unwrap();
+    let none = run_batch(&small_cfg(FusionMode::None), clip.clone()).unwrap();
+    // 5 stage dispatches + detect vs 1 + detect.
+    assert_eq!(none.metrics.dispatches, 3 * full.metrics.dispatches);
+    assert_eq!(full.metrics.boxes, none.metrics.boxes);
+}
+
+#[test]
+fn tracker_follows_synthetic_markers() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = RunConfig {
+        frame_size: 128,
+        frames: 32,
+        markers: 2,
+        box_dims: BoxDims::new(32, 32, 8),
+        workers: 2,
+        ..RunConfig::default()
+    };
+    let rep = run_batch_synth(&cfg, 5).unwrap();
+    assert_eq!(rep.tracks, 2, "both markers tracked");
+    for (i, r) in rep.rmse.iter().enumerate() {
+        assert!(*r < 3.0, "track {i} rmse {r}");
+    }
+}
+
+#[test]
+fn binary_output_is_binary_and_nonempty() {
+    if !artifacts_present() {
+        return;
+    }
+    let rep = run_batch_synth(&small_cfg(FusionMode::Full), 3).unwrap();
+    let on = rep.binary.data.iter().filter(|&&v| v == 255.0).count();
+    let off = rep.binary.data.iter().filter(|&&v| v == 0.0).count();
+    assert_eq!(on + off, rep.binary.data.len(), "non-binary values");
+    // Marker edges must fire the gradient+threshold.
+    assert!(on > 0, "no edges detected at all");
+    assert!(off > on, "threshold fired everywhere");
+}
+
+#[test]
+fn serve_mode_reports_and_bounds_queue() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = RunConfig {
+        frame_size: 64,
+        frames: 32,
+        fps: 2000.0, // deliberately oversubscribe a 2-worker pool
+        workers: 2,
+        markers: 1,
+        box_dims: BoxDims::new(16, 16, 8),
+        queue_depth: 8,
+        ..RunConfig::default()
+    };
+    let (clip, _) = synth_clip(&cfg, 21);
+    let rep = run_serve(&cfg, Arc::new(clip)).unwrap();
+    // All frames were ingested; work either completed or was dropped —
+    // the queue never grew beyond its bound (drop-oldest policy).
+    assert_eq!(rep.frames, 32);
+    assert!(rep.boxes + rep.dropped >= 1);
+    assert!(rep.p99_us > 0);
+}
+
+#[test]
+fn partial_temporal_tail_is_dropped_cleanly() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = RunConfig {
+        frames: 20, // 2 full boxes of t=8, 4-frame tail
+        ..small_cfg(FusionMode::Full)
+    };
+    let rep = run_batch_synth(&cfg, 2).unwrap();
+    assert_eq!(rep.binary.t, 16);
+    assert_eq!(rep.metrics.frames, 16);
+}
+
+#[test]
+fn invalid_config_is_rejected_before_work() {
+    let cfg = RunConfig {
+        frame_size: 100, // not divisible by 16
+        ..small_cfg(FusionMode::Full)
+    };
+    let (clip, _) = synth_clip(&cfg, 1);
+    assert!(run_batch(&cfg, Arc::new(clip)).is_err());
+}
+
+#[test]
+fn roi_mode_processes_fewer_boxes_same_tracks() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = RunConfig {
+        frame_size: 128,
+        frames: 32,
+        markers: 2,
+        box_dims: BoxDims::new(32, 32, 8),
+        workers: 1,
+        ..RunConfig::default()
+    };
+    let (clip, scfg) = synth_clip(&cfg, 13);
+    let clip = Arc::new(clip);
+    let (rep, coverage) = kfuse::coordinator::run_roi(&cfg, clip.clone()).unwrap();
+    // ROI mode must skip a solid fraction of boxes after acquisition...
+    assert!(coverage < 0.8, "coverage {coverage}");
+    assert!(coverage > 0.2, "suspiciously low coverage {coverage}");
+    // ...while keeping every marker tracked.
+    assert_eq!(rep.tracks, 2);
+    // And tracking quality matches the full-frame run on marker frames.
+    let truth = kfuse::video::ground_truth(&scfg);
+    let mut tracker = kfuse::tracking::Tracker::new(
+        kfuse::tracking::TrackerConfig::default(),
+        clip.h,
+        clip.w,
+    );
+    let plane = clip.h * clip.w;
+    tracker.acquire(&rep.binary.data[..plane], cfg.markers);
+    for t in 1..rep.binary.t {
+        tracker.step(&rep.binary.data[t * plane..(t + 1) * plane]);
+    }
+    for r in tracker.rmse_vs_truth(&truth) {
+        assert!(r < 3.0, "roi-mode rmse {r}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Property tests over the fusion planner, using the in-repo `prop`
+//! harness (offline stand-in for proptest — DESIGN.md §2).
+
+use kfuse::fusion::candidates::{enumerate_candidates, fusable_runs, Segment};
+use kfuse::fusion::halo::{halo_cumulative, halo_traced, BoxDims};
+use kfuse::fusion::ilp::Model;
+use kfuse::fusion::kernel_ir::{paper_fusable_run, DepType, KernelSpec, Radii};
+use kfuse::fusion::traffic::{
+    transfers_partition, transfers_serial, InputDims,
+};
+use kfuse::fusion::{boxopt, dp, solver};
+use kfuse::prop::{run_prop, Gen};
+
+/// Random kernel with bounded radii and plausible costs.
+fn random_kernel(g: &mut Gen, first: bool) -> KernelSpec {
+    let deps = [
+        DepType::ThreadToThread,
+        DepType::ThreadToMultiThread,
+        DepType::KernelToKernel,
+    ];
+    let (dx, dy, dt) = (g.usize_in(0, 2), g.usize_in(0, 2), g.usize_in(0, 1));
+    KernelSpec {
+        name: "synthetic",
+        radii: Radii::new(dx, dy, dt),
+        in_channels: g.usize_in(1, 4),
+        out_channels: 1,
+        flops_per_pixel: g.f64_in(1.0, 40.0),
+        dep_on_prev: if first {
+            DepType::ThreadToThread
+        } else {
+            *g.choose(&deps)
+        },
+    }
+}
+
+fn random_sequence(g: &mut Gen, n: usize) -> Vec<KernelSpec> {
+    (0..n).map(|i| random_kernel(g, i == 0)).collect()
+}
+
+#[test]
+fn prop_bnb_equals_dp_equals_bruteforce() {
+    // The three independent solvers agree on random cost tables.
+    run_prop("bnb=dp=brute", 150, |g| {
+        let n = g.usize_in(1, 5);
+        let cols: Vec<(Segment, f64)> = enumerate_candidates(n)
+            .into_iter()
+            .map(|s| {
+                // Occasionally infeasible columns.
+                let c = if g.usize_in(0, 9) == 0 {
+                    f64::INFINITY
+                } else {
+                    g.f64_in(0.1, 100.0)
+                };
+                (s, c)
+            })
+            .collect();
+        let m = Model::with_costs(n, &cols);
+        let bb = solver::solve(&m);
+        let dp = dp::solve_dp(&m);
+        let bf = solver::solve_brute_force(&m);
+        match (&bb, &dp, &bf) {
+            (Some(a), Some((_, od)), Some(c)) => {
+                assert!((a.objective - od).abs() < 1e-9, "bb!=dp");
+                assert!((a.objective - c.objective).abs() < 1e-9, "bb!=bf");
+                assert!(m.is_partition(&a.selection));
+            }
+            (None, None, None) => {}
+            _ => panic!("solver feasibility disagreement"),
+        }
+    });
+}
+
+#[test]
+fn prop_fusable_runs_partition_sequence() {
+    run_prop("runs_partition", 200, |g| {
+        let n = g.usize_in(1, 12);
+        let ks = random_sequence(g, n);
+        let runs = fusable_runs(&ks);
+        // Runs are contiguous, ordered, non-empty and cover everything.
+        let mut next = 0;
+        for r in &runs {
+            assert_eq!(r.start, next);
+            assert!(!r.is_empty());
+            next = r.end;
+        }
+        assert_eq!(next, ks.len());
+        // No KK dependency hides inside a run.
+        for r in &runs {
+            for i in r.start + 1..r.end {
+                assert_ne!(ks[i].dep_on_prev, DepType::KernelToKernel);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_halo_cumulative_dominates_paper_variant() {
+    use kfuse::fusion::halo::halo_paper;
+    run_prop("halo_dominates", 200, |g| {
+        let n = g.usize_in(1, 8);
+        let ks = random_sequence(g, n);
+        let c = halo_cumulative(&ks);
+        let p = halo_paper(&ks);
+        assert!(c.dx >= p.dx && c.dy >= p.dy && c.dt >= p.dt);
+        assert_eq!(c, halo_traced(&ks));
+    });
+}
+
+#[test]
+fn prop_du_in_unit_interval_and_monotone() {
+    run_prop("du_bounds", 300, |g| {
+        let (hdx, hdy, hdt) = (g.usize_in(0, 3), g.usize_in(0, 3), g.usize_in(0, 2));
+        let h = Radii::new(hdx, hdy, hdt);
+        let (bx, by, bt) = (g.usize_in(1, 128), g.usize_in(1, 128), g.usize_in(1, 32));
+        let b = BoxDims::new(bx, by, bt);
+        let du = boxopt::data_utilization(b, h);
+        assert!(du > 0.0 && du <= 1.0);
+        // Doubling every axis can only improve utilization.
+        let b2 = BoxDims::new(b.x * 2, b.y * 2, b.t * 2);
+        assert!(boxopt::data_utilization(b2, h) >= du - 1e-12);
+    });
+}
+
+#[test]
+fn prop_full_fusion_never_moves_more_than_serial() {
+    // For any box and input, one fused kernel's traffic ≤ serial traffic
+    // of its n ≥ 2 stages (the §VI-D claim), *provided* the halo read
+    // doesn't exceed the n-fold round-trips — i.e. for sane box sizes.
+    run_prop("fused_leq_serial", 200, |g| {
+        let run = paper_fusable_run();
+        let bx = *g.choose(&[16usize, 32, 64]);
+        let by = *g.choose(&[16usize, 32, 64]);
+        let bt = *g.choose(&[4usize, 8, 16]);
+        let b = BoxDims::new(bx, by, bt);
+        let input = InputDims::new(256, 256, 64);
+        let segs: Vec<&[KernelSpec]> = vec![&run];
+        let fused = transfers_partition(input, b, &segs);
+        let serial = transfers_serial(input, b, run.len());
+        assert!(
+            fused <= serial,
+            "fused {fused} > serial {serial} at {b:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_plan_covers_every_kernel_exactly_once() {
+    use kfuse::gpusim::device::DeviceSpec;
+    run_prop("plan_covers", 60, |g| {
+        let n = g.usize_in(1, 8);
+        let ks = random_sequence(g, n);
+        let dev = DeviceSpec::paper_devices()[g.usize_in(0, 2)].clone();
+        let input = InputDims::new(128, 128, 64);
+        let Ok(plan) = kfuse::fusion::plan_with_box(
+            &ks,
+            input,
+            BoxDims::new(16, 16, 4),
+            &dev,
+        ) else {
+            return; // infeasible instances are allowed
+        };
+        let mut covered = vec![0usize; ks.len()];
+        for f in &plan.fused {
+            for k in f.segment.kernels() {
+                covered[k] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    });
+}
+
+#[test]
+fn prop_tracker_history_length_invariant() {
+    use kfuse::tracking::{Tracker, TrackerConfig};
+    run_prop("tracker_history", 40, |g| {
+        let (h, w) = (64, 64);
+        let mut tk = Tracker::new(TrackerConfig::default(), h, w);
+        // Random starting blob.
+        let (ci, cj) = (g.usize_in(8, 55), g.usize_in(8, 55));
+        let mut frame = vec![0.0f32; h * w];
+        for di in 0..3 {
+            for dj in 0..3 {
+                frame[(ci + di - 1) * w + (cj + dj - 1)] = 255.0;
+            }
+        }
+        tk.acquire(&frame, 1);
+        let steps = g.usize_in(1, 12);
+        for _ in 0..steps {
+            // Randomly present or drop the marker.
+            let present = g.bool();
+            let f = if present {
+                frame.clone()
+            } else {
+                vec![0.0; h * w]
+            };
+            tk.step(&f);
+        }
+        for t in &tk.tracks {
+            assert_eq!(t.history.len(), steps + 1);
+        }
+    });
+}

@@ -1,0 +1,155 @@
+//! Integration: PJRT loads + executes the AOT artifacts, and the numbers
+//! agree with the native `cpu_ref` oracle.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests no-op otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use kfuse::cpu_ref;
+use kfuse::prop::Gen;
+use kfuse::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::from_dir("artifacts").ok()
+}
+
+/// Random halo'd RGBA box for output box (s, s, t): (t+1, s+4, s+4, 4).
+fn rgba_box(g: &mut Gen, s: usize, t: usize) -> Vec<f32> {
+    g.vec_f32((t + 1) * (s + 4) * (s + 4) * 4, 0.0, 255.0)
+}
+
+#[test]
+fn full_fusion_matches_cpu_ref() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(11);
+    let (s, t) = (32, 8);
+    let x = rgba_box(&mut g, s, t);
+    let th = [96.0f32];
+    let got = rt.run("full_s32_t8", &[&x, &th]).unwrap();
+    let want = cpu_ref::pipeline(&x, t + 1, s + 4, s + 4, 96.0);
+    assert_eq!(got.len(), want.len());
+    let diff = got
+        .iter()
+        .zip(&want)
+        .filter(|(a, b)| (*a - *b).abs() > 0.0)
+        .count();
+    // Binary outputs: allow a whisker of threshold-straddling pixels.
+    assert!(
+        (diff as f64) < 1e-3 * (got.len() as f64),
+        "{} / {} pixels differ",
+        diff,
+        got.len()
+    );
+}
+
+#[test]
+fn no_fusion_chain_matches_full_fusion() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(23);
+    let (s, t) = (16, 8);
+    let x = rgba_box(&mut g, s, t);
+    let th = [96.0f32];
+
+    // Dispatch-level "No Fusion": five executables, host round-trips.
+    let g1 = rt.run("k1_s16_t8", &[&x]).unwrap();
+    let g2 = rt.run("k2_s16_t8", &[&g1]).unwrap();
+    let g3 = rt.run("k3_s16_t8", &[&g2]).unwrap();
+    let g4 = rt.run("k4_s16_t8", &[&g3]).unwrap();
+    let none = rt.run("k5_s16_t8", &[&g4, &th]).unwrap();
+
+    let full = rt.run("full_s16_t8", &[&x, &th]).unwrap();
+    assert_eq!(none, full, "no-fusion chain != fused megakernel");
+}
+
+#[test]
+fn two_fusion_matches_full_fusion() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(37);
+    let (s, t) = (32, 8);
+    let x = rgba_box(&mut g, s, t);
+    let th = [96.0f32];
+    let mid = rt.run("two_a_s32_t8", &[&x]).unwrap();
+    let two = rt.run("two_b_s32_t8", &[&mid, &th]).unwrap();
+    let full = rt.run("full_s32_t8", &[&x, &th]).unwrap();
+    assert_eq!(two, full);
+}
+
+#[test]
+fn detect_artifact_matches_cpu_ref() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(41);
+    let (s, t) = (32, 8);
+    // Binary-ish input: random {0, 255}.
+    let b: Vec<f32> = (0..t * s * s)
+        .map(|_| if g.bool() { 255.0 } else { 0.0 })
+        .collect();
+    let got = rt.run("detect_s32_t8", &[&b]).unwrap();
+    let want = cpu_ref::detect(&b, t, s, s);
+    assert_eq!(got.len(), t * 3);
+    for ft in 0..t {
+        for k in 0..3 {
+            assert!(
+                (got[ft * 3 + k] - want[ft][k]).abs() < 0.5,
+                "frame {ft} component {k}: {} vs {}",
+                got[ft * 3 + k],
+                want[ft][k]
+            );
+        }
+    }
+}
+
+#[test]
+fn kalman_artifact_matches_native_filter() {
+    let Some(rt) = runtime() else { return };
+    let mut kf = kfuse::tracking::Kalman::new(0.0, 0.0);
+    // Drive both implementations with the same measurement stream.
+    let mut x: Vec<f32> = kf.x.to_vec();
+    let mut p: Vec<f32> = kf.p.iter().flatten().copied().collect();
+    for step in 1..20 {
+        let z = [2.0 * step as f32, -1.0 * step as f32];
+        let out = rt.run("kalman_step", &[&x, &p, &z]).unwrap();
+        x = out[..4].to_vec();
+        p = out[4..].to_vec();
+        kf.step(z[0], z[1]);
+    }
+    for k in 0..4 {
+        assert!(
+            (x[k] - kf.x[k]).abs() < 0.05,
+            "state {k}: hlo {} vs native {}",
+            x[k],
+            kf.x[k]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let _ = rt.executable("full_s16_t8").unwrap();
+    let _ = rt.executable("full_s16_t8").unwrap();
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let bad = vec![0.0f32; 10];
+    let th = [96.0f32];
+    let err = rt.run("full_s16_t8", &[&bad, &th]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("elems"), "unexpected error: {msg}");
+}
+
+#[test]
+fn kalman_single_step_debug() {
+    let Some(rt) = runtime() else { return };
+    let x = [0f32; 4];
+    let mut p = [0f32; 16];
+    p[0] = 10.0;
+    p[5] = 10.0;
+    p[10] = 100.0;
+    p[15] = 100.0;
+    let z = [2f32, -1.0];
+    let out = rt.run("kalman_step", &[&x, &p, &z]).unwrap();
+    println!("single step out = {:?}", &out[..4]);
+    assert!((out[0] - 1.98198).abs() < 1e-3, "got {:?}", &out[..8]);
+}
