@@ -4,7 +4,11 @@
 //!
 //! Demonstrates the planner as a library for pipelines beyond the paper's
 //! (here: a denoise→opticalflow-ish sequence with a mid-pipeline KK
-//! barrier, which forces two independent fusable runs).
+//! barrier, which forces two independent fusable runs). Once such a
+//! pipeline's artifacts are AOT-lowered, execution goes through a
+//! persistent `kfuse::engine::Engine` session (see the `quickstart` and
+//! `streaming_serve` examples) rather than the deprecated one-shot
+//! `run_*` drivers.
 //!
 //! ```bash
 //! cargo run --release --example fusion_planner

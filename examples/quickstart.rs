@@ -1,10 +1,14 @@
 //! Quickstart: plan the paper's pipeline, load the AOT artifacts, run the
-//! fused megakernel on one synthetic batch, and print what happened.
+//! fused megakernel on one synthetic batch, verify it against the
+//! unfused chain, and finish with a warm `Engine` session streaming a
+//! whole synthetic clip.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use kfuse::config::FusionMode;
+use kfuse::engine::Engine;
 use kfuse::fusion::halo::BoxDims;
 use kfuse::fusion::kernel_ir::paper_pipeline;
 use kfuse::fusion::traffic::InputDims;
@@ -58,5 +62,23 @@ fn main() -> Result<()> {
     let chain = rt.run(&format!("k5_s{}_t{}", bx.x, bx.t), &[&g4, &th])?;
     assert_eq!(chain, out, "fusion changed the numbers!");
     println!("verified: 5-dispatch no-fusion chain == 1-dispatch fused kernel");
-    Ok(())
+
+    // 4. SESSION — the production path: one persistent engine, compiled
+    // once at build, streaming whole clips as jobs.
+    let mut engine = Engine::builder()
+        .artifacts("artifacts")
+        .mode(FusionMode::Full)
+        .box_dims(BoxDims::new(32, 32, 8))
+        .frame_size(64)
+        .frames(16)
+        .markers(1)
+        .workers(1)
+        .build()?;
+    let rep = engine.batch_synth(7)?;
+    println!(
+        "\nengine batch: {:.0} fps over {} boxes | tracks {}",
+        rep.metrics.fps, rep.metrics.boxes, rep.tracks
+    );
+    println!("session: {}", engine.stats());
+    engine.shutdown()
 }

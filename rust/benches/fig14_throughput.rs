@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use kfuse::bench_util::{header, row};
 use kfuse::config::{FusionMode, RunConfig};
-use kfuse::coordinator::{run_batch, synth_clip};
+use kfuse::coordinator::synth_clip;
+use kfuse::engine::Engine;
 use kfuse::fusion::candidates::Segment;
 use kfuse::fusion::fuse::build_plans;
 use kfuse::fusion::halo::BoxDims;
@@ -79,18 +80,22 @@ fn measured() {
     ]);
     // The shared XLA CPU pool drifts over a process's lifetime and the
     // host is noisy: interleave the arms round-robin (so drift hits all
-    // arms equally) and keep each arm's best sample.
+    // arms equally) and keep each arm's best sample. One warm engine per
+    // arm replaces the old throwaway warm-up pass — build() compiles
+    // everything, so every measured round below runs warm.
     let modes = [FusionMode::None, FusionMode::Two, FusionMode::Full];
-    for mode in modes {
-        let cfg = RunConfig { mode, ..base.clone() };
-        let _ = run_batch(&cfg, clip.clone()).unwrap(); // warm-up
-    }
+    let mut engines: Vec<Engine> = modes
+        .iter()
+        .map(|&mode| {
+            let cfg = RunConfig { mode, ..base.clone() };
+            Engine::from_config(cfg).unwrap()
+        })
+        .collect();
     let mut best: Vec<Option<kfuse::coordinator::RunReport>> =
         (0..3).map(|_| None).collect();
     for _round in 0..3 {
-        for (i, mode) in modes.iter().enumerate() {
-            let cfg = RunConfig { mode: *mode, ..base.clone() };
-            let rep = run_batch(&cfg, clip.clone()).unwrap();
+        for (i, engine) in engines.iter_mut().enumerate() {
+            let rep = engine.batch(clip.clone()).unwrap();
             if best[i]
                 .as_ref()
                 .map_or(true, |b| rep.metrics.fps > b.metrics.fps)

@@ -68,25 +68,48 @@ impl<T> Bounded<T> {
         }
     }
 
-    /// Enqueue one item, honoring the overload policy. Returns `false` if
-    /// the queue is closed.
+    /// Enqueue one item, honoring the queue's default overload policy.
+    /// Returns `false` if the queue is closed.
     pub fn push(&self, item: T) -> bool {
+        self.push_with(item, self.policy)
+    }
+
+    /// Enqueue one item under an explicit overload policy. A persistent
+    /// engine keeps one queue alive across jobs but needs lossless (batch)
+    /// and lossy (serve) admission on a per-job basis.
+    pub fn push_with(&self, item: T, policy: Policy) -> bool {
+        self.push_with_evicted(item, policy).0
+    }
+
+    /// Like [`Bounded::push_with`], but hands back whatever `DropOldest`
+    /// evicted so callers can attribute drops (the engine's serve job
+    /// must not count another job's stale boxes against itself). The
+    /// `Vec` is empty on the common no-eviction path and holds more than
+    /// one item only if racing producers refill the queue mid-push.
+    pub fn push_with_evicted(
+        &self,
+        item: T,
+        policy: Policy,
+    ) -> (bool, Vec<T>) {
+        let mut evicted = Vec::new();
         let mut st = self.inner.queue.lock().unwrap();
         loop {
             if st.closed {
-                return false;
+                return (false, evicted);
             }
             if st.items.len() < self.capacity {
                 st.items.push_back(item);
                 self.inner.cv_pop.notify_one();
-                return true;
+                return (true, evicted);
             }
-            match self.policy {
+            match policy {
                 Policy::Block => {
                     st = self.inner.cv_push.wait(st).unwrap();
                 }
                 Policy::DropOldest => {
-                    st.items.pop_front();
+                    if let Some(old) = st.items.pop_front() {
+                        evicted.push(old);
+                    }
                     self.dropped.fetch_add(1, Ordering::Relaxed);
                     // Loop re-checks: there is space now.
                 }
@@ -167,6 +190,32 @@ mod tests {
         assert_eq!(q.dropped.load(Ordering::Relaxed), 3);
         assert_eq!(q.pop(), Some(3)); // oldest survivors
         assert_eq!(q.pop(), Some(4));
+    }
+
+    #[test]
+    fn per_push_policy_overrides_queue_default() {
+        // A Block-policy queue (the engine's persistent queue) admits
+        // serve-job pushes losslessly-bounded via DropOldest.
+        let q = Bounded::new(2, Policy::Block);
+        assert!(q.push_with(0, Policy::DropOldest));
+        assert!(q.push_with(1, Policy::DropOldest));
+        assert!(q.push_with(2, Policy::DropOldest)); // drops 0, admits 2
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn eviction_hands_back_the_dropped_item() {
+        let q = Bounded::new(1, Policy::Block);
+        let (ok, evicted) = q.push_with_evicted(7, Policy::DropOldest);
+        assert!(ok);
+        assert!(evicted.is_empty());
+        let (ok, evicted) = q.push_with_evicted(8, Policy::DropOldest);
+        assert!(ok);
+        assert_eq!(evicted, vec![7]);
+        assert_eq!(q.pop(), Some(8));
     }
 
     #[test]

@@ -4,9 +4,15 @@
 //!
 //! Dataflow (batch): synth/ingest → [`plan::ExecutionPlan`] →
 //! [`backpressure::Bounded`] box queue → [`scheduler`] workers (one PJRT
-//! client each) → collector → [`crate::tracking::Tracker`] →
+//! client each) → job-id result router → [`crate::tracking::Tracker`] →
 //! [`metrics::MetricsReport`]. Serve mode paces ingest at the source fps
-//! through [`batcher::Batcher`] with a drop-oldest queue.
+//! through [`batcher::Batcher`] with drop-oldest admission.
+//!
+//! Lifecycle lives in [`crate::engine`]: a persistent
+//! [`Engine`](crate::engine::Engine) owns the queue and the warm worker
+//! pool, and batch/serve/ROI are jobs submitted against it. The `run_*`
+//! functions re-exported here are deprecated one-shot shims over a
+//! throwaway engine.
 
 pub mod backpressure;
 pub mod batcher;
@@ -16,5 +22,7 @@ pub mod plan;
 pub mod scheduler;
 
 pub use metrics::{Metrics, MetricsReport};
-pub use pipeline::{run_batch, run_batch_synth, run_roi, run_serve, synth_clip, RunReport};
+#[allow(deprecated)]
+pub use pipeline::{run_batch, run_batch_synth, run_roi, run_serve};
+pub use pipeline::{synth_clip, RunReport};
 pub use plan::ExecutionPlan;

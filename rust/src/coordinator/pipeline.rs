@@ -1,37 +1,22 @@
-//! End-to-end drivers: batch analysis of a clip and paced streaming serve.
+//! DEPRECATED one-shot drivers, kept as thin shims over
+//! [`crate::engine`] so existing callers keep compiling.
 //!
-//! `run_batch` is the measured counterpart of the paper's evaluation: it
-//! executes one fusion arm over a clip through PJRT, reassembles the
-//! binarized frames, tracks the markers, and reports throughput + latency
-//! + traffic (+ RMSE vs ground truth for synthetic clips).
+//! Every function here builds a throwaway [`Engine`] — which means it
+//! re-loads the manifest, re-spawns workers, and re-compiles every PJRT
+//! executable on each call. That is exactly the overhead the engine API
+//! exists to amortize: long-lived callers should build one engine and
+//! submit jobs against it. These shims are slated for removal (see
+//! ROADMAP.md "Open items").
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use super::backpressure::{Bounded, Policy};
-use super::batcher::Batcher;
-use super::metrics::{Metrics, MetricsReport};
-use super::plan::ExecutionPlan;
-use super::scheduler::{spawn_workers, BoxJob, BoxResult};
+use super::metrics::MetricsReport;
 use crate::config::RunConfig;
-use crate::runtime::Manifest;
-use crate::tracking::{Tracker, TrackerConfig};
-use crate::video::{cut_boxes, SynthConfig, Video};
-use crate::{Error, Result};
+use crate::engine::{Engine, ServeOpts};
+use crate::video::{SynthConfig, Video};
+use crate::Result;
 
-/// End-of-run summary.
-#[derive(Debug)]
-pub struct RunReport {
-    pub metrics: MetricsReport,
-    /// Live tracks at end of clip.
-    pub tracks: usize,
-    /// Per-track RMSE vs ground truth (synthetic clips only).
-    pub rmse: Vec<f64>,
-    /// Reassembled binary output (for inspection/testing).
-    pub binary: Video,
-}
+pub use crate::engine::RunReport;
 
 /// Synthetic clip matching a run config.
 pub fn synth_clip(cfg: &RunConfig, seed: u64) -> (Video, SynthConfig) {
@@ -47,287 +32,42 @@ pub fn synth_clip(cfg: &RunConfig, seed: u64) -> (Video, SynthConfig) {
 }
 
 /// Run one fusion arm over `clip` (batch mode: lossless Block policy).
+#[deprecated(
+    note = "build a persistent `kfuse::engine::Engine` and call `.batch()`; \
+            a throwaway engine per call re-compiles every executable"
+)]
 pub fn run_batch(cfg: &RunConfig, clip: Arc<Video>) -> Result<RunReport> {
-    cfg.validate()?;
-    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-    let plan = Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
-    let metrics = Arc::new(Metrics::new());
-    let queue: Bounded<BoxJob> = Bounded::new(cfg.queue_depth, Policy::Block);
-    let (tx, rx) = mpsc::channel::<BoxResult>();
-
-    let tasks = cut_boxes(clip.h, clip.w, clip.t, cfg.box_dims);
-    if tasks.is_empty() {
-        return Err(Error::Coordinator("no boxes to process".into()));
-    }
-    let n_tasks = tasks.len();
-    let frames_covered = (clip.t / cfg.box_dims.t) * cfg.box_dims.t;
-
-    // spawn_workers blocks until every worker has compiled the plan's
-    // executables, so the clock below measures steady-state execution
-    // only (§Perf: compilation used to pollute the wall time).
-    let workers = spawn_workers(
-        cfg.workers,
-        manifest,
-        plan,
-        cfg.threshold,
-        queue.clone(),
-        tx,
-        metrics.clone(),
-    );
-    let started = Instant::now();
-    // Producer: enqueue every box (Block policy → lossless backpressure).
-    {
-        let queue = queue.clone();
-        let clip = clip.clone();
-        std::thread::spawn(move || {
-            for task in tasks {
-                if !queue.push(BoxJob {
-                    task,
-                    clip: clip.clone(),
-                    clip_t0: 0,
-                    enqueued: Instant::now(),
-                }) {
-                    break;
-                }
-            }
-            queue.close();
-        });
-    }
-    // Collector: reassemble the binarized video.
-    let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
-    for _ in 0..n_tasks {
-        let r = rx.recv().map_err(|_| {
-            Error::Coordinator("workers died before finishing".into())
-        })?;
-        binary.write_box(
-            r.clip_t0 + r.task.t0,
-            r.task.i0,
-            r.task.j0,
-            r.task.dims,
-            &r.binary,
-        );
-    }
-    for h in workers {
-        h.join()
-            .map_err(|_| Error::Coordinator("worker panicked".into()))??;
-    }
-    let wall = started.elapsed();
-
-    // Tracking pass (K6): acquisition on frame 0, Kalman per frame.
-    let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
-    let plane = clip.h * clip.w;
-    tracker.acquire(&binary.data[..plane], cfg.markers);
-    for t in 1..frames_covered {
-        tracker.step(&binary.data[t * plane..(t + 1) * plane]);
-    }
-
-    let metrics = metrics.snapshot(wall, frames_covered as u64);
-    Ok(RunReport {
-        tracks: tracker.tracks.len(),
-        rmse: Vec::new(), // filled by `run_batch_synth`, which owns truth
-        metrics,
-        binary,
-    })
+    let mut engine = Engine::from_config(cfg.clone())?;
+    engine.batch(clip)
 }
 
 /// Batch run over a freshly generated synthetic clip; reports RMSE vs the
 /// analytic ground truth.
+#[deprecated(
+    note = "build a persistent `kfuse::engine::Engine` and call \
+            `.batch_synth()`"
+)]
 pub fn run_batch_synth(cfg: &RunConfig, seed: u64) -> Result<RunReport> {
-    let (clip, scfg) = synth_clip(cfg, seed);
-    let clip = Arc::new(clip);
-    let mut rep = run_batch(cfg, clip.clone())?;
-    // Re-run the tracker on the reassembled binary to score against truth.
-    let truth = crate::video::ground_truth(&scfg);
-    let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
-    let plane = clip.h * clip.w;
-    tracker.acquire(&rep.binary.data[..plane], cfg.markers);
-    for t in 1..rep.binary.t {
-        tracker.step(&rep.binary.data[t * plane..(t + 1) * plane]);
-    }
-    rep.tracks = tracker.tracks.len();
-    rep.rmse = tracker.rmse_vs_truth(&truth);
-    Ok(rep)
+    let mut engine = Engine::from_config(cfg.clone())?;
+    engine.batch_synth(seed)
 }
 
 /// Streaming serve: frames arrive at `cfg.fps`; overload drops oldest
 /// boxes (bounded latency). Returns the metrics snapshot.
+#[deprecated(
+    note = "build a persistent `kfuse::engine::Engine` and call `.serve()`"
+)]
 pub fn run_serve(cfg: &RunConfig, clip: Arc<Video>) -> Result<MetricsReport> {
-    cfg.validate()?;
-    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-    let plan = Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
-    let metrics = Arc::new(Metrics::new());
-    let queue: Bounded<BoxJob> =
-        Bounded::new(cfg.queue_depth, Policy::DropOldest);
-    let (tx, rx) = mpsc::channel::<BoxResult>();
-
-    // Blocks until workers have compiled; ingest pacing starts after.
-    let workers = spawn_workers(
-        cfg.workers,
-        manifest,
-        plan,
-        cfg.threshold,
-        queue.clone(),
-        tx,
-        metrics.clone(),
-    );
-    // Sink: drain results (serve mode cares about latency/drops).
-    let sink = std::thread::spawn(move || {
-        let mut n = 0u64;
-        while rx.recv().is_ok() {
-            n += 1;
-        }
-        n
-    });
-
-    let started = Instant::now();
-    let frame_interval = Duration::from_secs_f64(1.0 / cfg.fps);
-    let mut batcher = Batcher::new(cfg.box_dims.t, clip.h, clip.w, 4);
-    let plane = clip.h * clip.w * 4;
-    let mut next_deadline = started;
-    for t in 0..clip.t {
-        // Pace ingest to the source frame rate.
-        next_deadline += frame_interval;
-        if let Some(wait) = next_deadline.checked_duration_since(Instant::now())
-        {
-            std::thread::sleep(wait);
-        }
-        let frame = clip.data[t * plane..(t + 1) * plane].to_vec();
-        if let Some(window) = batcher.push(frame) {
-            let win = Arc::new(window.buf);
-            for task in
-                cut_boxes(clip.h, clip.w, cfg.box_dims.t, cfg.box_dims)
-            {
-                // Window frames are 1-offset (halo first): shift origin.
-                let mut task = task;
-                task.t0 += 1;
-                queue.push(BoxJob {
-                    task,
-                    clip: win.clone(),
-                    clip_t0: window.t0,
-                    enqueued: Instant::now(),
-                });
-            }
-        }
-    }
-    queue.close();
-    for h in workers {
-        h.join()
-            .map_err(|_| Error::Coordinator("worker panicked".into()))??;
-    }
-    drop(sink);
-    let wall = started.elapsed();
-    metrics
-        .dropped
-        .fetch_add(queue.dropped.load(Ordering::Relaxed), Ordering::Relaxed);
-    Ok(metrics.snapshot(wall, clip.t as u64))
+    let mut engine = Engine::from_config(cfg.clone())?;
+    engine.serve(clip, ServeOpts::from_config(cfg))
 }
 
-/// ROI-driven batch run (the paper's Fig 8b workflow): the first temporal
-/// window is processed in full to ACQUIRE marker ROIs; every subsequent
-/// window only dispatches the boxes intersecting a tracked marker's
-/// predicted search window. Returns the report plus the fraction of boxes
-/// actually processed — the paper's "selected rectangles containing the
-/// target objects" optimization, made adaptive by the Kalman predictions.
+/// ROI-driven batch run (the paper's Fig 8b workflow). Returns the report
+/// plus the fraction of boxes actually processed.
+#[deprecated(
+    note = "build a persistent `kfuse::engine::Engine` and call `.roi()`"
+)]
 pub fn run_roi(cfg: &RunConfig, clip: Arc<Video>) -> Result<(RunReport, f64)> {
-    cfg.validate()?;
-    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-    let plan = Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
-    let metrics = Arc::new(Metrics::new());
-    let queue: Bounded<BoxJob> = Bounded::new(cfg.queue_depth, Policy::Block);
-    let (tx, rx) = mpsc::channel::<BoxResult>();
-
-    let windows = clip.t / cfg.box_dims.t;
-    if windows == 0 {
-        return Err(Error::Coordinator("clip shorter than one box".into()));
-    }
-    let frames_covered = windows * cfg.box_dims.t;
-    let spatial = cut_boxes(clip.h, clip.w, cfg.box_dims.t, cfg.box_dims);
-    let total_boxes = spatial.len() * windows;
-
-    let workers = spawn_workers(
-        cfg.workers,
-        manifest,
-        plan,
-        cfg.threshold,
-        queue.clone(),
-        tx,
-        metrics.clone(),
-    );
-    let started = Instant::now();
-
-    let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
-    let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
-    let plane = clip.h * clip.w;
-    let mut processed = 0usize;
-
-    for win in 0..windows {
-        let t0 = win * cfg.box_dims.t;
-        // Select boxes: window 0 = all (acquisition); later windows = only
-        // boxes intersecting a track's ROI around the predicted position.
-        let selected: Vec<_> = if win == 0 {
-            spatial.clone()
-        } else {
-            let half = tracker.cfg.roi_half + cfg.box_dims.x / 2;
-            spatial
-                .iter()
-                .filter(|task| {
-                    tracker.tracks.iter().any(|tr| {
-                        let (pi, pj) = tr.filter.predict_pos();
-                        let (ci, cj) = (
-                            task.i0 as f32 + cfg.box_dims.x as f32 / 2.0,
-                            task.j0 as f32 + cfg.box_dims.y as f32 / 2.0,
-                        );
-                        (pi - ci).abs() <= half as f32
-                            && (pj - cj).abs() <= half as f32
-                    })
-                })
-                .copied()
-                .collect()
-        };
-        processed += selected.len();
-        let n_sel = selected.len();
-        for mut task in selected {
-            task.t0 = t0; // temporal origin of this window in the clip
-            queue.push(BoxJob {
-                task,
-                clip: clip.clone(),
-                clip_t0: 0,
-                enqueued: Instant::now(),
-            });
-        }
-        for _ in 0..n_sel {
-            let r = rx.recv().map_err(|_| {
-                Error::Coordinator("workers died mid-window".into())
-            })?;
-            binary.write_box(r.task.t0, r.task.i0, r.task.j0, r.task.dims,
-                             &r.binary);
-        }
-        // Advance the tracker through this window's frames.
-        for dt in 0..cfg.box_dims.t {
-            let t = t0 + dt;
-            let frame = &binary.data[t * plane..(t + 1) * plane];
-            if t == 0 {
-                tracker.acquire(frame, cfg.markers);
-            } else {
-                tracker.step(frame);
-            }
-        }
-    }
-    queue.close();
-    for h in workers {
-        h.join()
-            .map_err(|_| Error::Coordinator("worker panicked".into()))??;
-    }
-    let wall = started.elapsed();
-    let coverage = processed as f64 / total_boxes as f64;
-    let tracks = tracker.tracks.len();
-    Ok((
-        RunReport {
-            metrics: metrics.snapshot(wall, frames_covered as u64),
-            tracks,
-            rmse: Vec::new(),
-            binary,
-        },
-        coverage,
-    ))
+    let mut engine = Engine::from_config(cfg.clone())?;
+    engine.roi(clip)
 }

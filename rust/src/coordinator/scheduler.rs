@@ -5,22 +5,32 @@
 //! plan's artifact chain with host round-trips between stages (those
 //! round-trips ARE the GMEM traffic the paper eliminates by fusing — one
 //! stage chain = one fused kernel = one round-trip), and emits
-//! [`BoxResult`]s to the collector.
+//! [`WorkerEvent`]s to the engine's result router.
+//!
+//! Workers are PERSISTENT: they compile the plan's executables once at
+//! spawn and then service jobs until the queue closes at engine shutdown.
+//! Compiled executables therefore survive across jobs — the amortization
+//! the paper's 600–1000 fps streaming scenario depends on. A box that
+//! fails mid-job is reported as an `Err` event; the worker itself stays
+//! alive for the next job.
 
+use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backpressure::Bounded;
-use super::metrics::Metrics;
 use super::plan::ExecutionPlan;
 use crate::runtime::{Manifest, Runtime};
 use crate::video::{BoxTask, Video};
 use crate::Result;
 
-/// One unit of work: a box of a specific clip window.
+/// One unit of work: a box of a specific clip window, tagged with the
+/// engine job that submitted it.
 pub struct BoxJob {
+    /// Engine job this box belongs to (results are routed by this id).
+    pub job_id: u64,
     pub task: BoxTask,
     /// The clip (or rolling window) the box is cut from.
     pub clip: Arc<Video>,
@@ -38,6 +48,17 @@ pub struct BoxResult {
     pub binary: Vec<f32>,
     /// Optional per-frame (mass, Σi, Σj) rows from the detect artifact.
     pub detect: Option<Vec<f32>>,
+    /// Queue wait + service time, stamped by the worker at completion.
+    pub latency: Duration,
+}
+
+/// One routed event from a worker: which job it belongs to and how the
+/// box turned out. The engine discards events whose `job_id` doesn't
+/// match the job it is currently draining (stale work from a job that
+/// failed mid-drain).
+pub struct WorkerEvent {
+    pub job_id: u64,
+    pub result: Result<BoxResult>,
 }
 
 /// Execute one job on a worker's runtime. Public so benches can call the
@@ -76,23 +97,31 @@ pub fn execute_box(
         clip_t0: job.clip_t0,
         binary: buf,
         detect,
+        latency: job.enqueued.elapsed(),
     })
 }
 
-/// Spawn `n` workers consuming `queue` and sending results to `out`.
+/// Spawn `n` persistent workers consuming `queue` and routing results to
+/// `out`.
 ///
 /// Each worker PRECOMPILES the plan's artifacts before touching the queue
 /// and the call blocks until every worker is ready: PJRT compilation
-/// happens outside the measured steady state (§Perf in EXPERIMENTS.md —
-/// this moved p95 box latency from ~0.44 s to the worker service time).
+/// happens once, at engine build, outside every job's measured wall time
+/// (§Perf in EXPERIMENTS.md — this moved p95 box latency from ~0.44 s to
+/// the worker service time). Each compilation bumps `compiles` so the
+/// engine can prove executables are reused across jobs. Init failures are
+/// pushed into `init_errors` BEFORE the barrier releases, so the spawner
+/// observes them deterministically on return.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_workers(
     n: usize,
     manifest: Arc<Manifest>,
     plan: Arc<ExecutionPlan>,
     threshold: f32,
     queue: Bounded<BoxJob>,
-    out: Sender<BoxResult>,
-    metrics: Arc<Metrics>,
+    out: Sender<WorkerEvent>,
+    compiles: Arc<AtomicU64>,
+    init_errors: Arc<Mutex<Vec<String>>>,
 ) -> Vec<JoinHandle<Result<()>>> {
     let ready = Arc::new(std::sync::Barrier::new(n + 1));
     let handles = (0..n)
@@ -101,13 +130,15 @@ pub fn spawn_workers(
             let plan = plan.clone();
             let queue = queue.clone();
             let out = out.clone();
-            let metrics = metrics.clone();
+            let compiles = compiles.clone();
+            let init_errors = init_errors.clone();
             let ready = ready.clone();
             std::thread::spawn(move || -> Result<()> {
                 // Compile everything this plan needs up front; on failure
                 // still release the barrier so spawn_workers can't hang.
                 let init = (|| -> Result<Runtime> {
-                    let rt = Runtime::new(manifest)?;
+                    let rt =
+                        Runtime::with_compile_counter(manifest, compiles)?;
                     for stage in &plan.stages {
                         rt.executable(&stage.artifact)?;
                     }
@@ -116,22 +147,32 @@ pub fn spawn_workers(
                     }
                     Ok(rt)
                 })();
+                if let Err(e) = &init {
+                    init_errors.lock().unwrap().push(e.to_string());
+                }
                 ready.wait();
                 let rt = init?;
+                // Persistent service loop: jobs come and go, the runtime
+                // (and its compiled executables) lives until the queue
+                // closes at engine shutdown. Every popped job MUST produce
+                // an event — the engine's drain counts on it — so a panic
+                // inside the hot path is caught and reported instead of
+                // silently killing this worker's results (which would hang
+                // the submitting job's collector forever).
                 while let Some(job) = queue.pop() {
-                    let res = execute_box(&rt, &plan, threshold, &job)?;
-                    let latency = job.enqueued.elapsed();
-                    let in_bytes = (job.task.dims.with_halo(plan.halo).pixels()
-                        * 4 * 4) as u64; // RGBA f32 staged in
-                    let out_bytes = (res.binary.len() * 4) as u64;
-                    metrics.record_box(
-                        latency,
-                        in_bytes,
-                        out_bytes,
-                        plan.dispatches_per_box(),
-                    );
-                    if out.send(res).is_err() {
-                        break; // collector gone; drain quietly
+                    let job_id = job.job_id;
+                    let result = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            execute_box(&rt, &plan, threshold, &job)
+                        }),
+                    )
+                    .unwrap_or_else(|_| {
+                        Err(crate::Error::Coordinator(
+                            "worker panicked executing box".into(),
+                        ))
+                    });
+                    if out.send(WorkerEvent { job_id, result }).is_err() {
+                        break; // engine gone; drain quietly
                     }
                 }
                 Ok(())
@@ -146,6 +187,7 @@ pub fn spawn_workers(
 mod tests {
     use super::*;
     use crate::config::FusionMode;
+    use std::sync::atomic::Ordering;
     use crate::coordinator::backpressure::Policy;
     use crate::fusion::halo::BoxDims;
     use crate::video::SynthConfig;
@@ -154,6 +196,10 @@ mod tests {
     #[test]
     fn workers_process_all_boxes() {
         let Ok(manifest) = Manifest::load("artifacts") else {
+            eprintln!(
+                "skipping workers_process_all_boxes: artifacts/ not \
+                 present (run `make artifacts`)"
+            );
             return;
         };
         let manifest = Arc::new(manifest);
@@ -172,7 +218,8 @@ mod tests {
         ));
         let queue = Bounded::new(16, Policy::Block);
         let (tx, rx) = std::sync::mpsc::channel();
-        let metrics = Arc::new(Metrics::new());
+        let compiles = Arc::new(AtomicU64::new(0));
+        let init_errors = Arc::new(Mutex::new(Vec::new()));
         let handles = spawn_workers(
             2,
             manifest,
@@ -180,12 +227,17 @@ mod tests {
             96.0,
             queue.clone(),
             tx,
-            metrics.clone(),
+            compiles.clone(),
+            init_errors.clone(),
         );
+        assert!(init_errors.lock().unwrap().is_empty());
+        // Both workers compiled the full chain (fused stage + detect).
+        assert_eq!(compiles.load(Ordering::Relaxed), 2 * 2);
         let tasks = crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
         assert_eq!(tasks.len(), 4); // frames 0..8 = one temporal box
         for task in &tasks {
             queue.push(BoxJob {
+                job_id: 1,
                 task: *task,
                 clip: clip.clone(),
                 clip_t0: 0,
@@ -193,16 +245,19 @@ mod tests {
             });
         }
         queue.close();
-        let results: Vec<BoxResult> = rx.iter().take(tasks.len()).collect();
-        assert_eq!(results.len(), 4);
-        for r in &results {
+        let events: Vec<WorkerEvent> = rx.iter().take(tasks.len()).collect();
+        assert_eq!(events.len(), 4);
+        for ev in &events {
+            assert_eq!(ev.job_id, 1);
+            let r = ev.result.as_ref().unwrap();
             assert_eq!(r.binary.len(), 8 * 16 * 16);
             assert_eq!(r.detect.as_ref().unwrap().len(), 8 * 3);
+            assert!(r.latency > Duration::ZERO);
         }
         for h in handles {
             h.join().unwrap().unwrap();
         }
-        use std::sync::atomic::Ordering;
-        assert_eq!(metrics.boxes.load(Ordering::Relaxed), 4);
+        // Executables were compiled exactly once per worker, not per box.
+        assert_eq!(compiles.load(Ordering::Relaxed), 2 * 2);
     }
 }

@@ -1,0 +1,151 @@
+//! Fluent construction of a persistent [`Engine`].
+//!
+//! The builder is a thin veneer over [`RunConfig`] (so the CLI, examples,
+//! and benches can hand a fully-parsed config straight to
+//! [`EngineBuilder::config`]); `build()` is where all the one-time cost
+//! lives — manifest load, plan resolution, worker spawn, and PJRT
+//! compilation on every worker.
+
+use super::session::Engine;
+use crate::config::{FusionMode, RunConfig};
+use crate::fusion::halo::BoxDims;
+use crate::Result;
+
+/// Builder for [`Engine`]. Obtain one via [`Engine::builder`].
+#[derive(Debug, Clone, Default)]
+pub struct EngineBuilder {
+    cfg: RunConfig,
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Replace the whole backing config (CLI path: parse flags into a
+    /// `RunConfig`, then hand it over wholesale).
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Directory holding `manifest.tsv` and the AOT'd HLO artifacts.
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Fusion arm the session executes (fixed for the engine's lifetime —
+    /// the compiled executables are arm-specific).
+    pub fn mode(mut self, mode: FusionMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    /// Output-box geometry (must match an emitted artifact set).
+    pub fn box_dims(mut self, dims: BoxDims) -> Self {
+        self.cfg.box_dims = dims;
+        self
+    }
+
+    /// Worker threads ("SMs") executing boxes. See
+    /// [`RunConfig::workers`] for why 1 is usually right on CPU PJRT.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Binarization threshold.
+    pub fn threshold(mut self, th: f32) -> Self {
+        self.cfg.threshold = th;
+        self
+    }
+
+    /// Markers to acquire/track per clip.
+    pub fn markers(mut self, m: usize) -> Self {
+        self.cfg.markers = m;
+        self
+    }
+
+    /// Bounded box-queue depth (backpressure element).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    /// Frame height/width for synthetic clips ([`Engine::batch_synth`]).
+    pub fn frame_size(mut self, size: usize) -> Self {
+        self.cfg.frame_size = size;
+        self
+    }
+
+    /// Frame count for synthetic clips ([`Engine::batch_synth`]).
+    pub fn frames(mut self, n: usize) -> Self {
+        self.cfg.frames = n;
+        self
+    }
+
+    /// Source frame rate recorded in the config. [`Engine::serve`] takes
+    /// its ingest rate explicitly per job — pass
+    /// `ServeOpts::from_config(engine.config())` (see
+    /// [`ServeOpts`](super::ServeOpts)) to serve at this rate.
+    pub fn fps(mut self, fps: f64) -> Self {
+        self.cfg.fps = fps;
+        self
+    }
+
+    /// The config as currently accumulated (inspection/testing).
+    pub fn run_config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Validate the config, load the manifest, resolve the plan, spawn
+    /// the worker pool, and compile every executable the plan needs on
+    /// every worker. The returned engine is WARM: the first job pays no
+    /// compilation cost.
+    pub fn build(self) -> Result<Engine> {
+        Engine::from_config(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setters_reach_the_config() {
+        let b = EngineBuilder::new()
+            .artifacts("elsewhere")
+            .mode(FusionMode::Two)
+            .box_dims(BoxDims::new(16, 16, 8))
+            .workers(3)
+            .threshold(42.0)
+            .markers(7)
+            .queue_depth(9)
+            .frame_size(64)
+            .frames(24)
+            .fps(750.0);
+        let cfg = b.run_config();
+        assert_eq!(cfg.artifacts_dir, "elsewhere");
+        assert_eq!(cfg.mode, FusionMode::Two);
+        assert_eq!(cfg.box_dims, BoxDims::new(16, 16, 8));
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.threshold, 42.0);
+        assert_eq!(cfg.markers, 7);
+        assert_eq!(cfg.queue_depth, 9);
+        assert_eq!(cfg.frame_size, 64);
+        assert_eq!(cfg.frames, 24);
+        assert_eq!(cfg.fps, 750.0);
+    }
+
+    #[test]
+    fn build_rejects_invalid_config_before_loading_artifacts() {
+        // 48 does not divide 100: validation fails before any artifact
+        // I/O, so this test needs no artifacts/ directory.
+        let err = EngineBuilder::new()
+            .frame_size(100)
+            .box_dims(BoxDims::new(48, 48, 8))
+            .build();
+        assert!(err.is_err());
+    }
+}

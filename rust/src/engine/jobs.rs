@@ -1,0 +1,386 @@
+//! Job submission against a warm [`Engine`]: batch, paced serve, and
+//! ROI-driven batch.
+//!
+//! Every job reuses the engine's queue and worker pool — no manifest
+//! reload, no plan re-resolution, no worker respawn, and (the big one) no
+//! PJRT recompilation. Per-job isolation comes from job ids: each
+//! submission tags its boxes, and the drain loop ignores events from any
+//! other job.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::session::Engine;
+use crate::coordinator::backpressure::Policy;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::{Metrics, MetricsReport};
+use crate::coordinator::scheduler::BoxJob;
+use crate::tracking::{Tracker, TrackerConfig};
+use crate::video::{cut_boxes, ground_truth, Video};
+use crate::{Error, Result};
+
+/// End-of-job summary for batch and ROI jobs.
+#[derive(Debug)]
+pub struct RunReport {
+    pub metrics: MetricsReport,
+    /// Live tracks at end of clip.
+    pub tracks: usize,
+    /// Per-track RMSE vs ground truth (synthetic clips only).
+    pub rmse: Vec<f64>,
+    /// Reassembled binary output (for inspection/testing).
+    pub binary: Video,
+}
+
+/// Per-job options for [`Engine::serve`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Source frame rate: ingest is paced to it.
+    pub fps: f64,
+    /// Overload policy for this job's boxes. [`Policy::DropOldest`]
+    /// bounds latency under overload (the streaming default);
+    /// [`Policy::Block`] makes serve lossless but throughput-limited.
+    pub policy: Policy,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            fps: 600.0,
+            policy: Policy::DropOldest,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// Streaming defaults taken from a run config: ingest at `cfg.fps`
+    /// with drop-oldest admission. The CLI and the deprecated
+    /// `run_serve` shim route through this.
+    pub fn from_config(cfg: &crate::config::RunConfig) -> Self {
+        ServeOpts {
+            fps: cfg.fps,
+            policy: Policy::DropOldest,
+        }
+    }
+}
+
+impl Engine {
+    /// A clip must match the engine's box geometry (the compiled
+    /// executables are shape-specific).
+    fn check_clip(&self, clip: &Video) -> Result<()> {
+        let bx = self.cfg.box_dims;
+        if clip.h % bx.x != 0 || clip.w % bx.y != 0 {
+            return Err(Error::Config(format!(
+                "box {}x{} must divide clip {}x{}",
+                bx.x, bx.y, clip.h, clip.w
+            )));
+        }
+        if clip.t < bx.t {
+            return Err(Error::Config(format!(
+                "clip has {} frames, shorter than one temporal box ({})",
+                clip.t, bx.t
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run one lossless batch job over `clip` (Block backpressure), then
+    /// track markers on the reassembled binary output.
+    pub fn batch(&mut self, clip: Arc<Video>) -> Result<RunReport> {
+        self.batch_inner(clip, None)
+    }
+
+    /// Batch over a freshly generated synthetic clip; scores tracking
+    /// RMSE against the analytic ground truth from the SAME tracking pass
+    /// that counts live tracks (the tracker runs exactly once).
+    pub fn batch_synth(&mut self, seed: u64) -> Result<RunReport> {
+        let (clip, scfg) = crate::coordinator::synth_clip(&self.cfg, seed);
+        let truth = ground_truth(&scfg);
+        self.batch_inner(Arc::new(clip), Some(&truth))
+    }
+
+    fn batch_inner(
+        &mut self,
+        clip: Arc<Video>,
+        truth: Option<&[Vec<(f64, f64)>]>,
+    ) -> Result<RunReport> {
+        self.check_clip(&clip)?;
+        let bx = self.cfg.box_dims;
+        let tasks = cut_boxes(clip.h, clip.w, clip.t, bx);
+        if tasks.is_empty() {
+            return Err(Error::Coordinator("no boxes to process".into()));
+        }
+        let n_tasks = tasks.len();
+        let frames_covered = (clip.t / bx.t) * bx.t;
+        let job_id = self.begin_job();
+        let metrics = Metrics::new();
+        let started = Instant::now();
+        // Producer off-thread: the bounded queue backpressures it while
+        // the collector below drains (pushing inline would deadlock once
+        // the queue fills).
+        let producer = {
+            let queue = self.queue.clone();
+            let clip = clip.clone();
+            std::thread::spawn(move || {
+                for task in tasks {
+                    if !queue.push(BoxJob {
+                        job_id,
+                        task,
+                        clip: clip.clone(),
+                        clip_t0: 0,
+                        enqueued: Instant::now(),
+                    }) {
+                        break;
+                    }
+                }
+            })
+        };
+        // Collector: reassemble the binarized video.
+        let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
+        let mut outcome: Result<()> = Ok(());
+        for _ in 0..n_tasks {
+            match self.next_result(job_id) {
+                Ok(r) => {
+                    self.record(&metrics, &r);
+                    binary.write_box(
+                        r.clip_t0 + r.task.t0,
+                        r.task.i0,
+                        r.task.j0,
+                        r.task.dims,
+                        &r.binary,
+                    );
+                }
+                Err(e) => {
+                    outcome = Err(e);
+                    break;
+                }
+            }
+        }
+        // Workers keep consuming even on the error path, so the producer
+        // always finishes; its leftover results are stale-discarded by
+        // the next job's drain.
+        let _ = producer.join();
+        outcome?;
+        let wall = started.elapsed();
+
+        // Tracking pass (K6): acquisition on frame 0, Kalman per frame.
+        // One pass serves both the live-track count and (when ground
+        // truth is known) the RMSE score.
+        let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
+        let plane = clip.h * clip.w;
+        tracker.acquire(&binary.data[..plane], self.cfg.markers);
+        for t in 1..frames_covered {
+            tracker.step(&binary.data[t * plane..(t + 1) * plane]);
+        }
+        let rmse = truth.map(|tr| tracker.rmse_vs_truth(tr)).unwrap_or_default();
+
+        let report = metrics.snapshot(wall, frames_covered as u64);
+        self.finish_job(&report);
+        Ok(RunReport {
+            tracks: tracker.tracks.len(),
+            rmse,
+            metrics: report,
+            binary,
+        })
+    }
+
+    /// Streaming serve: frames arrive at `opts.fps`; overload handling
+    /// follows `opts.policy`. Every executed box is drained and counted —
+    /// late results can't race teardown because the pool never tears
+    /// down between jobs.
+    pub fn serve(
+        &mut self,
+        clip: Arc<Video>,
+        opts: ServeOpts,
+    ) -> Result<MetricsReport> {
+        self.check_clip(&clip)?;
+        if !opts.fps.is_finite() || opts.fps <= 0.0 {
+            return Err(Error::Config(format!(
+                "serve fps must be positive and finite, got {}",
+                opts.fps
+            )));
+        }
+        let bx = self.cfg.box_dims;
+        let job_id = self.begin_job();
+        let metrics = Metrics::new();
+        // Spatial box template per emitted window (t0 shifts below).
+        let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
+
+        let started = Instant::now();
+        let frame_interval = Duration::from_secs_f64(1.0 / opts.fps);
+        let mut batcher = Batcher::new(bx.t, clip.h, clip.w, 4);
+        let plane = clip.h * clip.w * 4;
+        let mut pushed = 0u64;
+        let mut job_dropped = 0u64;
+        let mut completed = 0u64;
+        let mut first_err: Option<Error> = None;
+        let mut next_deadline = started;
+        for t in 0..clip.t {
+            // Pace ingest to the source frame rate.
+            next_deadline += frame_interval;
+            if let Some(wait) =
+                next_deadline.checked_duration_since(Instant::now())
+            {
+                std::thread::sleep(wait);
+            }
+            let frame = clip.data[t * plane..(t + 1) * plane].to_vec();
+            if let Some(window) = batcher.push(frame) {
+                let win = Arc::new(window.buf);
+                for mut task in spatial.iter().copied() {
+                    // Window frames are 1-offset (halo first): shift origin.
+                    task.t0 += 1;
+                    let (accepted, evicted) = self.queue.push_with_evicted(
+                        BoxJob {
+                            job_id,
+                            task,
+                            clip: win.clone(),
+                            clip_t0: window.t0,
+                            enqueued: Instant::now(),
+                        },
+                        opts.policy,
+                    );
+                    if accepted {
+                        pushed += 1;
+                    }
+                    // Attribute drops per job: a stale box left queued by
+                    // an aborted earlier job must not skew this job's
+                    // completion count or drop metric.
+                    job_dropped += evicted
+                        .iter()
+                        .filter(|j| j.job_id == job_id)
+                        .count()
+                        as u64;
+                }
+            }
+            // Opportunistic drain between frames keeps the result channel
+            // flat without a separate sink thread.
+            while let Some(res) = self.try_next_result(job_id) {
+                completed += 1;
+                match res {
+                    Ok(r) => self.record(&metrics, &r),
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+        }
+        // Ingest done: drops only happen during pushes, so the drop count
+        // is final and the outstanding box count is exact. Drain them all
+        // — no processed result is ever silently discarded.
+        let expected = pushed - job_dropped;
+        while completed < expected {
+            completed += 1;
+            match self.next_result(job_id) {
+                Ok(r) => self.record(&metrics, &r),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let wall = started.elapsed();
+        metrics
+            .dropped
+            .fetch_add(job_dropped, std::sync::atomic::Ordering::Relaxed);
+        let report = metrics.snapshot(wall, clip.t as u64);
+        self.finish_job(&report);
+        Ok(report)
+    }
+
+    /// ROI-driven batch (the paper's Fig 8b workflow): the first temporal
+    /// window is processed in full to ACQUIRE marker ROIs; every
+    /// subsequent window only dispatches boxes intersecting a tracked
+    /// marker's predicted search window. Returns the report plus the
+    /// fraction of boxes actually processed.
+    pub fn roi(&mut self, clip: Arc<Video>) -> Result<(RunReport, f64)> {
+        self.check_clip(&clip)?;
+        let bx = self.cfg.box_dims;
+        let windows = clip.t / bx.t;
+        let frames_covered = windows * bx.t;
+        let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
+        let total_boxes = spatial.len() * windows;
+        let job_id = self.begin_job();
+        let metrics = Metrics::new();
+        let started = Instant::now();
+
+        let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
+        let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
+        let plane = clip.h * clip.w;
+        let mut processed = 0usize;
+
+        for win in 0..windows {
+            let t0 = win * bx.t;
+            // Select boxes: window 0 = all (acquisition); later windows =
+            // only boxes intersecting a track's ROI around the predicted
+            // position.
+            let selected: Vec<_> = if win == 0 {
+                spatial.clone()
+            } else {
+                let half = tracker.cfg.roi_half + bx.x / 2;
+                spatial
+                    .iter()
+                    .filter(|task| {
+                        tracker.tracks.iter().any(|tr| {
+                            let (pi, pj) = tr.filter.predict_pos();
+                            let (ci, cj) = (
+                                task.i0 as f32 + bx.x as f32 / 2.0,
+                                task.j0 as f32 + bx.y as f32 / 2.0,
+                            );
+                            (pi - ci).abs() <= half as f32
+                                && (pj - cj).abs() <= half as f32
+                        })
+                    })
+                    .copied()
+                    .collect()
+            };
+            processed += selected.len();
+            let n_sel = selected.len();
+            for mut task in selected {
+                task.t0 = t0; // temporal origin of this window in the clip
+                self.queue.push(BoxJob {
+                    job_id,
+                    task,
+                    clip: clip.clone(),
+                    clip_t0: 0,
+                    enqueued: Instant::now(),
+                });
+            }
+            for _ in 0..n_sel {
+                let r = self.next_result(job_id)?;
+                self.record(&metrics, &r);
+                binary.write_box(
+                    r.task.t0,
+                    r.task.i0,
+                    r.task.j0,
+                    r.task.dims,
+                    &r.binary,
+                );
+            }
+            // Advance the tracker through this window's frames.
+            for dt in 0..bx.t {
+                let t = t0 + dt;
+                let frame = &binary.data[t * plane..(t + 1) * plane];
+                if t == 0 {
+                    tracker.acquire(frame, self.cfg.markers);
+                } else {
+                    tracker.step(frame);
+                }
+            }
+        }
+        let wall = started.elapsed();
+        let coverage = processed as f64 / total_boxes as f64;
+        let report = metrics.snapshot(wall, frames_covered as u64);
+        self.finish_job(&report);
+        let tracks = tracker.tracks.len();
+        Ok((
+            RunReport {
+                metrics: report,
+                tracks,
+                rmse: Vec::new(),
+                binary,
+            },
+            coverage,
+        ))
+    }
+}

@@ -1,0 +1,50 @@
+//! `kfuse::engine` — persistent execution sessions for streaming video
+//! analysis.
+//!
+//! The paper's whole argument is amortization: fuse kernels ONCE, then
+//! stream 600–1000 fps of video through the fused plan with minimal data
+//! traffic. The deprecated one-shot `run_*` entrypoints fought that —
+//! every call re-loaded the manifest, re-resolved the execution plan,
+//! re-spawned workers, and re-compiled every PJRT executable. An
+//! [`Engine`] pays all of that exactly once at [`EngineBuilder::build`]:
+//!
+//! * it owns the loaded [`Manifest`](crate::runtime::Manifest) and the
+//!   resolved [`ExecutionPlan`](crate::coordinator::ExecutionPlan);
+//! * it keeps a **persistent warm worker pool** — each worker's PJRT
+//!   client and compiled executables survive across jobs;
+//! * batch / serve / ROI are thin [`jobs`] submitted against it, routed
+//!   by job id through one long-lived bounded queue;
+//! * [`Engine::stats`] exposes cumulative session metrics, including the
+//!   pool-wide compile count (which must not grow after build — that is
+//!   the warm-pool contract, and `tests/engine_reuse.rs` enforces it).
+//!
+//! ```no_run
+//! use kfuse::config::FusionMode;
+//! use kfuse::engine::{Engine, ServeOpts};
+//! use kfuse::fusion::halo::BoxDims;
+//!
+//! fn main() -> kfuse::Result<()> {
+//!     let mut engine = Engine::builder()
+//!         .artifacts("artifacts")
+//!         .mode(FusionMode::Full)
+//!         .box_dims(BoxDims::new(32, 32, 8))
+//!         .workers(1)
+//!         .build()?; // manifest + plan + pool + PJRT compiles, once
+//!     let first = engine.batch_synth(42)?; // already warm
+//!     let second = engine.batch_synth(43)?; // zero recompiles
+//!     println!("{}\n{}", first.metrics, second.metrics);
+//!     println!("session: {}", engine.stats());
+//!     engine.shutdown()
+//! }
+//! ```
+
+pub mod builder;
+pub mod jobs;
+pub mod session;
+pub mod stats;
+
+pub use crate::coordinator::backpressure::Policy;
+pub use builder::EngineBuilder;
+pub use jobs::{RunReport, ServeOpts};
+pub use session::Engine;
+pub use stats::EngineStats;

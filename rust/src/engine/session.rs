@@ -1,0 +1,213 @@
+//! Engine lifecycle: build the warm pool once, route job results, tear
+//! down on drop.
+//!
+//! The engine owns the four long-lived pieces the one-shot `run_*`
+//! entrypoints used to rebuild per call: the loaded [`Manifest`], the
+//! resolved [`ExecutionPlan`], the bounded box queue, and the persistent
+//! worker pool (each worker holding a PJRT client with its compiled
+//! executables). Jobs (`batch` / `serve` / `roi`, in
+//! [`jobs`](super::jobs)) are thin submissions against this state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
+
+use super::stats::EngineStats;
+use super::EngineBuilder;
+use crate::config::RunConfig;
+use crate::coordinator::backpressure::{Bounded, Policy};
+use crate::coordinator::metrics::{Metrics, MetricsReport};
+use crate::coordinator::plan::ExecutionPlan;
+use crate::coordinator::scheduler::{
+    spawn_workers, BoxJob, BoxResult, WorkerEvent,
+};
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+/// A persistent execution session: manifest + plan + warm worker pool.
+///
+/// Construct via [`Engine::builder`] (or [`Engine::from_config`]); submit
+/// jobs with [`Engine::batch`], [`Engine::serve`], [`Engine::roi`]; read
+/// lifetime counters with [`Engine::stats`]. Workers — and the PJRT
+/// executables they compiled at build time — survive across jobs, so
+/// every job after `build()` runs warm.
+pub struct Engine {
+    pub(crate) cfg: RunConfig,
+    pub(crate) plan: Arc<ExecutionPlan>,
+    manifest: Arc<Manifest>,
+    pub(crate) queue: Bounded<BoxJob>,
+    events: Receiver<WorkerEvent>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    compiles: Arc<AtomicU64>,
+    next_job: u64,
+    totals: EngineStats,
+}
+
+impl Engine {
+    /// Start building an engine with default config.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Build an engine straight from a [`RunConfig`]. All one-time cost
+    /// happens here: validation, manifest load, plan resolution, worker
+    /// spawn, and PJRT compilation on every worker (the call returns only
+    /// once every worker is warm).
+    pub fn from_config(cfg: RunConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let plan =
+            Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
+        let queue: Bounded<BoxJob> =
+            Bounded::new(cfg.queue_depth, Policy::Block);
+        let (tx, rx) = mpsc::channel::<WorkerEvent>();
+        let compiles = Arc::new(AtomicU64::new(0));
+        let init_errors: Arc<Mutex<Vec<String>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let workers = spawn_workers(
+            cfg.workers,
+            manifest.clone(),
+            plan.clone(),
+            cfg.threshold,
+            queue.clone(),
+            tx,
+            compiles.clone(),
+            init_errors.clone(),
+        );
+        // spawn_workers released the ready barrier, so init errors (if
+        // any) are already recorded: fail the build instead of handing
+        // out an engine with a crippled pool.
+        let first_err = init_errors.lock().unwrap().first().cloned();
+        if let Some(msg) = first_err {
+            queue.close();
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(Error::Coordinator(format!(
+                "engine build: worker init failed: {msg}"
+            )));
+        }
+        Ok(Engine {
+            cfg,
+            plan,
+            manifest,
+            queue,
+            events: rx,
+            workers,
+            compiles,
+            next_job: 0,
+            totals: EngineStats::default(),
+        })
+    }
+
+    /// The session's configuration (fixed at build).
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// The resolved per-box execution chain this session dispatches.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// The loaded artifact registry.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Lifetime counters across every job served so far, including the
+    /// pool-wide PJRT compile count (which settles at build time and must
+    /// not grow afterwards).
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            ..self.totals.clone()
+        }
+    }
+
+    /// Allocate the next job id (ids route results back to their job).
+    pub(crate) fn begin_job(&mut self) -> u64 {
+        self.next_job += 1;
+        self.next_job
+    }
+
+    /// Fold a completed job's report into the lifetime totals.
+    pub(crate) fn finish_job(&mut self, rep: &MetricsReport) {
+        self.totals.jobs += 1;
+        self.totals.boxes += rep.boxes;
+        self.totals.frames += rep.frames;
+        self.totals.bytes_in += rep.bytes_in;
+        self.totals.bytes_out += rep.bytes_out;
+        self.totals.dispatches += rep.dispatches;
+        self.totals.dropped += rep.dropped;
+    }
+
+    /// Receive the next result for `job_id`, discarding stale events left
+    /// in the channel by an earlier job that failed mid-drain. Blocks
+    /// until a matching event arrives.
+    pub(crate) fn next_result(&mut self, job_id: u64) -> Result<BoxResult> {
+        loop {
+            let ev = self.events.recv().map_err(|_| {
+                Error::Coordinator(
+                    "worker pool died (event channel closed)".into(),
+                )
+            })?;
+            if ev.job_id != job_id {
+                continue;
+            }
+            return ev.result;
+        }
+    }
+
+    /// Non-blocking [`Engine::next_result`] for opportunistic draining
+    /// while a serve job paces ingest.
+    pub(crate) fn try_next_result(
+        &mut self,
+        job_id: u64,
+    ) -> Option<Result<BoxResult>> {
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) if ev.job_id == job_id => return Some(ev.result),
+                Ok(_) => continue, // stale event from an aborted job
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Record one completed box into a job's metrics (byte accounting
+    /// derives from the plan, latency was stamped by the worker).
+    pub(crate) fn record(&self, metrics: &Metrics, r: &BoxResult) {
+        // RGBA f32 staged in, with the chain's halo.
+        let in_bytes =
+            (r.task.dims.with_halo(self.plan.halo).pixels() * 4 * 4) as u64;
+        let out_bytes = (r.binary.len() * 4) as u64;
+        metrics.record_box(
+            r.latency,
+            in_bytes,
+            out_bytes,
+            self.plan.dispatches_per_box(),
+        );
+    }
+
+    /// Orderly teardown: close the queue, join every worker, surface the
+    /// first worker error. `Drop` does the same minus error reporting, so
+    /// calling this is optional but recommended in tests.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.queue.close();
+        let workers = std::mem::take(&mut self.workers);
+        for h in workers {
+            h.join()
+                .map_err(|_| Error::Coordinator("worker panicked".into()))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

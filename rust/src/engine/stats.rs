@@ -1,0 +1,71 @@
+//! Cumulative, engine-lifetime statistics.
+
+/// Counters accumulated across every job a persistent [`Engine`] has
+/// served. Per-job numbers live in each job's
+/// [`MetricsReport`](crate::coordinator::MetricsReport); these totals are
+/// the session-level view (the "millions of users" accounting the
+/// one-shot `run_*` entrypoints could never provide).
+///
+/// [`Engine`]: crate::engine::Engine
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Jobs completed (batch, serve, and ROI all count once).
+    pub jobs: u64,
+    /// Boxes executed across all jobs.
+    pub boxes: u64,
+    /// Frames fully processed across all jobs.
+    pub frames: u64,
+    /// Host-staged bytes into executables (GMEM-read analogue).
+    pub bytes_in: u64,
+    /// Bytes read back from executables (GMEM-write analogue).
+    pub bytes_out: u64,
+    /// Executable dispatches (kernel launches).
+    pub dispatches: u64,
+    /// Boxes dropped by backpressure (serve jobs).
+    pub dropped: u64,
+    /// PJRT executable compilations across the worker pool. Settles at
+    /// `workers × plan artifacts` during `build()` and MUST NOT grow on
+    /// later jobs — compiled executables outliving jobs is the entire
+    /// point of the warm pool.
+    pub compiles: u64,
+}
+
+impl std::fmt::Display for EngineStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} jobs | {} boxes | {} frames | {} dispatches | \
+             {} dropped | {} compiles (warm after build)",
+            self.jobs,
+            self.boxes,
+            self.frames,
+            self.dispatches,
+            self.dropped,
+            self.compiles
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_zeroed() {
+        let s = EngineStats::default();
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.compiles, 0);
+    }
+
+    #[test]
+    fn display_mentions_compiles() {
+        let s = EngineStats {
+            jobs: 2,
+            compiles: 4,
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("2 jobs"));
+        assert!(text.contains("4 compiles"));
+    }
+}

@@ -1,34 +1,57 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the build must
+//! stay dependency-light enough to compile fully offline.
 
-/// Unified error for planner, runtime, and coordinator layers.
-#[derive(Debug, thiserror::Error)]
+use std::fmt;
+
+/// Unified error for planner, runtime, engine, and coordinator layers.
+#[derive(Debug)]
 pub enum Error {
     /// Artifact registry problems (missing manifest entry, bad spec syntax).
-    #[error("artifact error: {0}")]
     Artifact(String),
-
     /// PJRT / XLA failures surfaced from the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
-
     /// Planner infeasibility (e.g. no partition fits shared memory).
-    #[error("planning error: {0}")]
     Plan(String),
-
     /// Shape/extent mismatches when wiring buffers to executables.
-    #[error("shape error: {0}")]
     Shape(String),
-
-    /// Coordinator runtime failures (channel teardown, worker panic).
-    #[error("coordinator error: {0}")]
+    /// Coordinator/engine runtime failures (channel teardown, worker
+    /// panic, dead pool).
     Coordinator(String),
-
     /// Configuration parse errors (CLI or config file).
-    #[error("config error: {0}")]
     Config(String),
+    /// Filesystem errors (manifest / HLO text loading).
+    Io(std::io::Error),
+}
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Plan(m) => write!(f, "planning error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -39,3 +62,31 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_layer() {
+        assert_eq!(
+            format!("{}", Error::Config("bad flag".into())),
+            "config error: bad flag"
+        );
+        assert_eq!(
+            format!("{}", Error::Coordinator("pool died".into())),
+            "coordinator error: pool died"
+        );
+    }
+
+    #[test]
+    fn io_errors_pass_through() {
+        let e: Error = std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "manifest.tsv",
+        )
+        .into();
+        assert!(format!("{e}").contains("manifest.tsv"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -8,11 +8,20 @@
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
+//!
+//! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
+//! the parsed flags and submit the clip as a job against it: manifest
+//! load, plan resolution, worker spawn, and PJRT compilation all happen
+//! once at engine build, so the reported wall time is warm steady-state
+//! execution. Each command prints the session's cumulative
+//! `engine.stats()` line at the end (including the compile count that
+//! settles at build and must not grow per job).
 
 use std::sync::Arc;
 
 use kfuse::config::{FusionMode, RunConfig};
 use kfuse::coordinator;
+use kfuse::engine::{Engine, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
 use kfuse::fusion::kernel_ir::paper_pipeline;
 use kfuse::fusion::traffic::InputDims;
@@ -93,6 +102,7 @@ fn device_by_name(name: &str) -> Result<DeviceSpec> {
     }
 }
 
+#[allow(clippy::field_reassign_with_default)]
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     cfg.frame_size = args.usize_or("size", cfg.frame_size)?;
@@ -164,19 +174,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.workers,
         if cfg.roi_only { " | roi-only" } else { "" }
     );
+    let mut engine = Engine::builder().config(cfg.clone()).build()?;
     if cfg.roi_only {
         let (clip, _) = coordinator::synth_clip(&cfg, 42);
-        let (rep, coverage) =
-            coordinator::run_roi(&cfg, Arc::new(clip))?;
+        let (rep, coverage) = engine.roi(Arc::new(clip))?;
         println!("{}", rep.metrics);
         println!(
             "tracks: {} | box coverage: {:.1}% (Fig 8b interest areas)",
             rep.tracks,
             coverage * 100.0
         );
-        return Ok(());
+        println!("session: {}", engine.stats());
+        return engine.shutdown();
     }
-    let rep = coordinator::run_batch_synth(&cfg, 42)?;
+    let rep = engine.batch_synth(42)?;
     println!("{}", rep.metrics);
     println!(
         "tracks: {} | rmse: {:?}",
@@ -186,7 +197,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             .map(|r| (r * 100.0).round() / 100.0)
             .collect::<Vec<_>>()
     );
-    Ok(())
+    println!("session: {}", engine.stats());
+    engine.shutdown()
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -198,9 +210,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.mode.name(),
         cfg.frames
     );
-    let rep = coordinator::run_serve(&cfg, Arc::new(clip))?;
+    let mut engine = Engine::builder().config(cfg.clone()).build()?;
+    let rep = engine.serve(Arc::new(clip), ServeOpts::from_config(&cfg))?;
     println!("{rep}");
-    Ok(())
+    println!("session: {}", engine.stats());
+    engine.shutdown()
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

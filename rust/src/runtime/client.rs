@@ -2,11 +2,14 @@
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so each
 //! coordinator worker owns a `Runtime`. The manifest is plain data shared
-//! via `Arc`; compiled executables are cached per runtime by name.
+//! via `Arc`; compiled executables are cached per runtime by name. An
+//! optional shared compile counter lets the engine prove that a warm
+//! worker pool never recompiles across jobs.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use xla::PjRtClient;
@@ -20,6 +23,8 @@ pub struct Runtime {
     client: PjRtClient,
     manifest: Arc<Manifest>,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Bumped once per cache-miss compilation when attached.
+    compiles: Option<Arc<AtomicU64>>,
 }
 
 impl Runtime {
@@ -29,7 +34,20 @@ impl Runtime {
             client: PjRtClient::cpu()?,
             manifest,
             cache: RefCell::new(HashMap::new()),
+            compiles: None,
         })
+    }
+
+    /// Like [`Runtime::new`], but every fresh compilation bumps `counter`.
+    /// The engine attaches one counter across its worker pool so
+    /// `engine.stats().compiles` can assert executable reuse.
+    pub fn with_compile_counter(
+        manifest: Arc<Manifest>,
+        counter: Arc<AtomicU64>,
+    ) -> Result<Runtime> {
+        let mut rt = Self::new(manifest)?;
+        rt.compiles = Some(counter);
+        Ok(rt)
     }
 
     /// Convenience: load the manifest from a directory and build a runtime.
@@ -48,6 +66,9 @@ impl Runtime {
         }
         let entry = self.manifest.get(name)?.clone();
         let exe = Rc::new(Executable::load(&self.client, entry)?);
+        if let Some(c) = &self.compiles {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
         self.cache
             .borrow_mut()
             .insert(name.to_string(), exe.clone());

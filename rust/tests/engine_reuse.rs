@@ -1,0 +1,102 @@
+//! Engine reuse contract: compiled PJRT executables survive across jobs.
+//!
+//! The whole point of the persistent session API is that `build()` pays
+//! the compilation cost exactly once; every later job runs warm. These
+//! tests pin that down via the pool-wide compile counter in
+//! `engine.stats().compiles`.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests SKIP with a
+//! message otherwise.
+
+use std::sync::Arc;
+
+use kfuse::config::{FusionMode, RunConfig};
+use kfuse::coordinator::synth_clip;
+use kfuse::engine::{Engine, Policy, ServeOpts};
+use kfuse::fusion::halo::BoxDims;
+
+fn artifacts_present() -> bool {
+    let present = std::path::Path::new("artifacts/manifest.tsv").exists();
+    if !present {
+        eprintln!(
+            "skipping: artifacts/manifest.tsv not present \
+             (run `make artifacts` to enable this test)"
+        );
+    }
+    present
+}
+
+fn cfg(workers: usize) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames: 16,
+        mode: FusionMode::Full,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers,
+        markers: 1,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn second_batch_on_warm_engine_compiles_nothing_and_matches() {
+    if !artifacts_present() {
+        return;
+    }
+    let workers = 2;
+    let mut engine = Engine::from_config(cfg(workers)).unwrap();
+    // build() compiled the plan on every worker: Full fusion = 1 fused
+    // stage + 1 detect artifact per worker.
+    let per_worker = engine.plan().stages.len() + 1;
+    let after_build = engine.stats().compiles;
+    assert_eq!(after_build, (workers * per_worker) as u64);
+
+    let (clip, _) = synth_clip(engine.config(), 31);
+    let clip = Arc::new(clip);
+    let first = engine.batch(clip.clone()).unwrap();
+    let second = engine.batch(clip.clone()).unwrap();
+
+    // Zero PJRT recompiles across consecutive jobs — the warm pool
+    // served both from the executables compiled at build.
+    assert_eq!(engine.stats().compiles, after_build);
+    // And the jobs are bit-identical.
+    assert_eq!(first.binary.data, second.binary.data);
+    assert_eq!(first.metrics.boxes, second.metrics.boxes);
+
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.boxes, first.metrics.boxes + second.metrics.boxes);
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn mixed_job_kinds_share_the_warm_pool() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut engine = Engine::from_config(cfg(1)).unwrap();
+    let after_build = engine.stats().compiles;
+    let (clip, _) = synth_clip(engine.config(), 57);
+    let clip = Arc::new(clip);
+
+    engine.batch(clip.clone()).unwrap();
+    engine
+        .serve(
+            clip.clone(),
+            ServeOpts {
+                fps: 5000.0,
+                policy: Policy::Block, // lossless: every box executes
+            },
+        )
+        .unwrap();
+    engine.roi(clip).unwrap();
+
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 3);
+    assert_eq!(
+        stats.compiles, after_build,
+        "batch/serve/roi jobs must all reuse the build-time executables"
+    );
+    assert_eq!(stats.dropped, 0, "Block-policy serve is lossless");
+    engine.shutdown().unwrap();
+}
