@@ -76,8 +76,7 @@ fn box_sweep() {
         format!("{:>8}", "DU"),
         format!("{:>14}", "pred fused ms"),
     ]);
-    for (x, t) in [(8usize, 4usize), (8, 8), (16, 4), (16, 8), (32, 4),
-                   (32, 8), (64, 2)] {
+    for (x, t) in [(8usize, 4usize), (8, 8), (16, 4), (16, 8), (32, 4), (32, 8), (64, 2)] {
         let b = BoxDims::new(x, x, t);
         let feasible = (x + 4) * (x + 4) * (t + 1) * 4 <= dev.shmem_per_block;
         let du = data_utilization(b, halo);

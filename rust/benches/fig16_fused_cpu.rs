@@ -1,0 +1,125 @@
+//! Fig 16 (ours) — fused single-pass CPU execution vs the staged
+//! kernel-by-kernel baseline, on the exact per-box hot path the engine's
+//! workers run (`scheduler::execute_box`).
+//!
+//! Workload: 64×64×16 synthetic clip cut into 16×16×8 boxes (32 boxes).
+//! `StagedCpu` materializes every intermediate at full box size — the
+//! unfused global-memory traffic pattern; `FusedCpu` keeps everything in
+//! an IIR carry plane plus three rolling stencil lines. The paper's
+//! claim (Figs 10/11/16) is that removing those round-trips buys 2–3×;
+//! this bench reproduces it on the host CPU and seeds the repo's perf
+//! trajectory by emitting `BENCH_fused_cpu.json`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use kfuse::bench_util::{header, row, time_fn};
+use kfuse::config::FusionMode;
+use kfuse::coordinator::scheduler::{execute_box, BoxJob};
+use kfuse::coordinator::ExecutionPlan;
+use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::video::{cut_boxes, generate, SynthConfig};
+
+const FRAME: usize = 64;
+const FRAMES: usize = 16;
+const BOX: BoxDims = BoxDims::new(16, 16, 8);
+
+fn sweep(
+    exec: &dyn Executor,
+    plan: &ExecutionPlan,
+    jobs: &[BoxJob],
+    staging: &mut Vec<f32>,
+) {
+    for job in jobs {
+        let r = execute_box(exec, plan, 96.0, job, staging).unwrap();
+        std::hint::black_box(r.binary.len());
+    }
+}
+
+fn main() {
+    let clip = Arc::new(generate(&SynthConfig {
+        frames: FRAMES,
+        height: FRAME,
+        width: FRAME,
+        markers: 2,
+        seed: 16,
+        ..SynthConfig::default()
+    }));
+    let plan = ExecutionPlan::resolve(FusionMode::Full, BOX, true);
+    let jobs: Vec<BoxJob> = cut_boxes(FRAME, FRAME, FRAMES, BOX)
+        .into_iter()
+        .map(|task| BoxJob {
+            job_id: 1,
+            task,
+            clip: clip.clone(),
+            clip_t0: 0,
+            enqueued: Instant::now(),
+        })
+        .collect();
+    let n = jobs.len() as f64;
+
+    let pool = BufferPool::shared();
+    let fused = FusedCpu::new(pool.clone());
+    fused.prepare(&plan).unwrap();
+    let staged = StagedCpu::new();
+    let mut staging = Vec::new();
+
+    let ts = time_fn(3, 25, || sweep(&staged, &plan, &jobs, &mut staging));
+    let warm_allocs = pool.allocations();
+    let tf = time_fn(3, 25, || sweep(&fused, &plan, &jobs, &mut staging));
+    let steady_allocs = pool.allocations() - warm_allocs;
+
+    let din = BOX.with_halo(plan.halo);
+    let staged_bytes = StagedCpu::intermediate_bytes(din.t, din.x, din.y);
+    let fused_bytes = FusedCpu::scratch_bytes(din.x, din.y);
+    let staged_ns = ts.median * 1e9 / n;
+    let fused_ns = tf.median * 1e9 / n;
+    let speedup = staged_ns / fused_ns;
+
+    header(
+        "Fig 16 (measured, this host)",
+        "staged vs fused CPU box execution, 64x64x16 clip, 16x16x8 boxes",
+    );
+    row(&[
+        format!("{:>12}", "executor"),
+        format!("{:>12}", "ns/box"),
+        format!("{:>18}", "intermediates B/box"),
+        format!("{:>12}", "pool allocs"),
+    ]);
+    row(&[
+        format!("{:>12}", staged.name()),
+        format!("{staged_ns:>12.0}"),
+        format!("{staged_bytes:>18}"),
+        format!("{:>12}", "n/a"),
+    ]);
+    row(&[
+        format!("{:>12}", fused.name()),
+        format!("{fused_ns:>12.0}"),
+        format!("{fused_bytes:>18}"),
+        format!("{steady_allocs:>12}"),
+    ]);
+    println!(
+        "fused vs staged speedup: {speedup:.2}x (paper fusion claim: 2-3x)"
+    );
+    if speedup < 2.0 {
+        println!("WARNING: speedup below the paper's 2x floor on this host");
+    }
+
+    let json = format!(
+        "{{\n  \"workload\": {{\"frame\": {FRAME}, \"frames\": {FRAMES}, \
+         \"box\": [{}, {}, {}], \"boxes\": {}}},\n  \
+         \"staged\": {{\"ns_per_box\": {staged_ns:.0}, \
+         \"intermediate_bytes_per_box\": {staged_bytes}}},\n  \
+         \"fused\": {{\"ns_per_box\": {fused_ns:.0}, \
+         \"scratch_bytes_per_box\": {fused_bytes}, \
+         \"steady_state_pool_allocs\": {steady_allocs}}},\n  \
+         \"speedup\": {speedup:.3}\n}}\n",
+        BOX.x,
+        BOX.y,
+        BOX.t,
+        jobs.len(),
+    );
+    std::fs::write("BENCH_fused_cpu.json", &json).unwrap();
+    println!("wrote BENCH_fused_cpu.json");
+}

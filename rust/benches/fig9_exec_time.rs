@@ -58,8 +58,10 @@ fn simulated() {
                 let f = simulate(&full, input, bx_fused, &dev);
                 let sgl = simulate(&none, input, bx_simple, &dev);
                 let (fs, sp) = if fused_fits {
-                    (format!("{:>12.1}", f.seconds * 1e3),
-                     format!("{:>8.2}", sgl.seconds / f.seconds))
+                    (
+                        format!("{:>12.1}", f.seconds * 1e3),
+                        format!("{:>8.2}", sgl.seconds / f.seconds),
+                    )
                 } else {
                     (format!("{:>12}", "n/a"), format!("{:>8}", "-"))
                 };

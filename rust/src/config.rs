@@ -36,6 +36,39 @@ impl FusionMode {
     }
 }
 
+/// Which execution backend the engine's workers run boxes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT PJRT artifacts (the measured "GPU" stand-in). Needs
+    /// `artifacts/` from `make artifacts`.
+    Pjrt,
+    /// Native CPU executors from [`crate::exec`]: `FusionMode::Full`
+    /// lowers to the fused single-pass `FusedCpu`, other arms run the
+    /// kernel-by-kernel `StagedCpu` baseline (so `Two` executes unfused
+    /// here; its dispatch/traffic metrics follow the plan model). Always
+    /// available — no artifacts, no compilation.
+    Cpu,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            "cpu" => Ok(Backend::Cpu),
+            _ => Err(Error::Config(format!(
+                "unknown backend '{s}' (expected pjrt|cpu)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Cpu => "cpu",
+        }
+    }
+}
+
 /// Full run configuration for the coordinator pipeline.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -68,6 +101,10 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Process only marker ROIs (tracking mode) instead of whole frames.
     pub roi_only: bool,
+    /// Execution backend. `Pjrt` is the measured artifact path; `Cpu`
+    /// runs the same engine end to end with the native executors (no
+    /// artifacts required).
+    pub backend: Backend,
 }
 
 impl Default for RunConfig {
@@ -84,6 +121,7 @@ impl Default for RunConfig {
             queue_depth: 64,
             artifacts_dir: "artifacts".into(),
             roi_only: false,
+            backend: Backend::Pjrt,
         }
     }
 }
@@ -133,6 +171,14 @@ mod tests {
             ..RunConfig::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert_eq!(Backend::parse("cpu").unwrap(), Backend::Cpu);
+        assert!(Backend::parse("gpu").is_err());
+        assert_eq!(Backend::Cpu.name(), "cpu");
     }
 
     #[test]

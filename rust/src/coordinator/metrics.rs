@@ -31,8 +31,7 @@ impl Metrics {
     }
 
     #[inline]
-    pub fn record_box(&self, latency: Duration, bytes_in: u64, bytes_out: u64,
-                      dispatches: u64) {
+    pub fn record_box(&self, latency: Duration, bytes_in: u64, bytes_out: u64, dispatches: u64) {
         self.boxes.fetch_add(1, Ordering::Relaxed);
         self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
         self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);

@@ -1,28 +1,42 @@
 //! The L3 streaming coordinator: cuts high-speed video into the planner's
-//! boxes, dispatches them to AOT-compiled PJRT executables across a worker
-//! pool, reassembles binarized output, and drives the Kalman tracker.
+//! boxes, dispatches them to a backend-pluggable worker pool, reassembles
+//! binarized output, and drives the Kalman tracker.
 //!
 //! Dataflow (batch): synth/ingest → [`plan::ExecutionPlan`] →
-//! [`backpressure::Bounded`] box queue → [`scheduler`] workers (one PJRT
-//! client each) → job-id result router → [`crate::tracking::Tracker`] →
+//! [`backpressure::Bounded`] box queue → [`scheduler`] workers (one
+//! [`Executor`](crate::exec::Executor) each — the PJRT artifact chain or
+//! a native CPU pass, per [`Backend`](crate::config::Backend)) → job-id
+//! result router → [`crate::tracking::Tracker`] →
 //! [`metrics::MetricsReport`]. Serve mode paces ingest at the source fps
 //! through [`batcher::Batcher`] with drop-oldest admission.
 //!
 //! Lifecycle lives in [`crate::engine`]: a persistent
 //! [`Engine`](crate::engine::Engine) owns the queue and the warm worker
-//! pool, and batch/serve/ROI are jobs submitted against it. The `run_*`
-//! functions re-exported here are deprecated one-shot shims over a
-//! throwaway engine.
+//! pool, and batch/serve/ROI are jobs submitted against it. (The old
+//! one-shot `run_*` shims are gone — build an engine.)
 
 pub mod backpressure;
 pub mod batcher;
 pub mod metrics;
-pub mod pipeline;
 pub mod plan;
 pub mod scheduler;
 
+pub use crate::engine::RunReport;
 pub use metrics::{Metrics, MetricsReport};
-#[allow(deprecated)]
-pub use pipeline::{run_batch, run_batch_synth, run_roi, run_serve};
-pub use pipeline::{synth_clip, RunReport};
 pub use plan::ExecutionPlan;
+
+use crate::config::RunConfig;
+use crate::video::{SynthConfig, Video};
+
+/// Synthetic clip matching a run config.
+pub fn synth_clip(cfg: &RunConfig, seed: u64) -> (Video, SynthConfig) {
+    let scfg = SynthConfig {
+        frames: cfg.frames,
+        height: cfg.frame_size,
+        width: cfg.frame_size,
+        markers: cfg.markers,
+        seed,
+        ..SynthConfig::default()
+    };
+    (crate::video::generate(&scfg), scfg)
+}

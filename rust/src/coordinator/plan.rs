@@ -32,8 +32,7 @@ pub struct ExecutionPlan {
 impl ExecutionPlan {
     /// Build the plan for `(mode, s×s×t)` boxes. The artifact set must
     /// have been emitted for this geometry (see `python/compile/aot.py`).
-    pub fn resolve(mode: FusionMode, box_dims: BoxDims, with_detect: bool)
-                   -> ExecutionPlan {
+    pub fn resolve(mode: FusionMode, box_dims: BoxDims, with_detect: bool) -> ExecutionPlan {
         assert_eq!(box_dims.x, box_dims.y, "boxes are square (paper eq 4)");
         let (s, t) = (box_dims.x, box_dims.t);
         let stages = Manifest::arm_artifacts(mode, s, t)
@@ -70,8 +69,7 @@ mod tests {
 
     #[test]
     fn full_plan_single_stage() {
-        let p = ExecutionPlan::resolve(FusionMode::Full,
-                                       BoxDims::new(32, 32, 8), true);
+        let p = ExecutionPlan::resolve(FusionMode::Full, BoxDims::new(32, 32, 8), true);
         assert_eq!(p.stages.len(), 1);
         assert!(p.stages[0].takes_threshold);
         assert_eq!(p.detect.as_deref(), Some("detect_s32_t8"));
@@ -80,8 +78,7 @@ mod tests {
 
     #[test]
     fn none_plan_five_stages_threshold_last() {
-        let p = ExecutionPlan::resolve(FusionMode::None,
-                                       BoxDims::new(16, 16, 8), false);
+        let p = ExecutionPlan::resolve(FusionMode::None, BoxDims::new(16, 16, 8), false);
         assert_eq!(p.stages.len(), 5);
         assert!(p.stages[..4].iter().all(|s| !s.takes_threshold));
         assert!(p.stages[4].takes_threshold);
@@ -90,8 +87,7 @@ mod tests {
 
     #[test]
     fn two_plan_threshold_on_second() {
-        let p = ExecutionPlan::resolve(FusionMode::Two,
-                                       BoxDims::new(64, 64, 8), false);
+        let p = ExecutionPlan::resolve(FusionMode::Two, BoxDims::new(64, 64, 8), false);
         assert_eq!(p.stages.len(), 2);
         assert!(!p.stages[0].takes_threshold);
         assert!(p.stages[1].takes_threshold);

@@ -1,18 +1,17 @@
 //! Worker pool: the coordinator's "grid of SMs".
 //!
-//! Each worker owns its own PJRT client (`xla`'s client is `Rc`-backed and
-//! not `Send`), pulls [`BoxJob`]s from the shared bounded queue, runs the
-//! plan's artifact chain with host round-trips between stages (those
-//! round-trips ARE the GMEM traffic the paper eliminates by fusing — one
-//! stage chain = one fused kernel = one round-trip), and emits
-//! [`WorkerEvent`]s to the engine's result router.
+//! Each worker constructs its own [`Executor`] in-thread (the PJRT client
+//! is `Rc`-backed and not `Send`), pulls [`BoxJob`]s from the shared
+//! bounded queue, runs the plan's chain on the selected
+//! [`Backend`], and emits [`WorkerEvent`]s to the engine's result router.
 //!
-//! Workers are PERSISTENT: they compile the plan's executables once at
-//! spawn and then service jobs until the queue closes at engine shutdown.
-//! Compiled executables therefore survive across jobs — the amortization
-//! the paper's 600–1000 fps streaming scenario depends on. A box that
-//! fails mid-job is reported as an `Err` event; the worker itself stays
-//! alive for the next job.
+//! Workers are PERSISTENT: they run `Executor::prepare` once at spawn —
+//! PJRT compilation for `Backend::Pjrt`, scratch-pool prewarm for
+//! `Backend::Cpu` — and then service jobs until the queue closes at
+//! engine shutdown. Prepared state therefore survives across jobs — the
+//! amortization the paper's 600–1000 fps streaming scenario depends on.
+//! A box that fails mid-job is reported as an `Err` event; the worker
+//! itself stays alive for the next job.
 
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::Sender;
@@ -22,6 +21,8 @@ use std::time::{Duration, Instant};
 
 use super::backpressure::Bounded;
 use super::plan::ExecutionPlan;
+use crate::config::Backend;
+use crate::exec::{BufferPool, Executor, PjrtExec};
 use crate::runtime::{Manifest, Runtime};
 use crate::video::{BoxTask, Video};
 use crate::Result;
@@ -46,7 +47,7 @@ pub struct BoxResult {
     pub clip_t0: usize,
     /// Binarized output box, (t, x, y) flattened.
     pub binary: Vec<f32>,
-    /// Optional per-frame (mass, Σi, Σj) rows from the detect artifact.
+    /// Optional per-frame (mass, Σi, Σj) rows from the detect stage.
     pub detect: Option<Vec<f32>>,
     /// Queue wait + service time, stamped by the worker at completion.
     pub latency: Duration,
@@ -61,109 +62,136 @@ pub struct WorkerEvent {
     pub result: Result<BoxResult>,
 }
 
-/// Execute one job on a worker's runtime. Public so benches can call the
-/// exact hot path without threads.
+/// Everything a worker pool needs besides its channels: pool size,
+/// backend selection, and the shared plan/manifest/scratch state.
+#[derive(Clone)]
+pub struct WorkerSpec {
+    /// Worker threads ("SMs").
+    pub workers: usize,
+    /// Execution backend each worker constructs in-thread.
+    pub backend: Backend,
+    /// Artifact registry (only consulted by `Backend::Pjrt`).
+    pub manifest: Arc<Manifest>,
+    /// The resolved per-box chain.
+    pub plan: Arc<ExecutionPlan>,
+    /// Binarization threshold.
+    pub threshold: f32,
+    /// Shared scratch pool for the CPU backends.
+    pub pool: Arc<BufferPool>,
+}
+
+/// Execute one job on a worker's executor. Public so benches can call the
+/// exact hot path without threads. `staging` is the reusable input buffer
+/// the halo'd box is extracted into (pass a fresh `Vec` if you don't care
+/// about reuse).
 pub fn execute_box(
-    rt: &Runtime,
+    exec: &dyn Executor,
     plan: &ExecutionPlan,
     threshold: f32,
     job: &BoxJob,
+    staging: &mut Vec<f32>,
 ) -> Result<BoxResult> {
-    let th = [threshold];
-    // Stage the halo'd input box once (the GMEM→SHMEM copy analogue).
-    let mut buf = job.clip.extract_box(
+    // Stage the halo'd input box once (the GMEM→SHMEM copy analogue);
+    // the staging buffer is worker-owned and reused across boxes.
+    job.clip.extract_box_into(
         job.task.t0,
         job.task.i0,
         job.task.j0,
         job.task.dims,
         plan.halo,
+        staging,
     );
-    // Run the chain; every intermediate crosses the host boundary — this
-    // is exactly the round-trip fusion removes (1 stage for Full Fusion).
-    for stage in &plan.stages {
-        let exe = rt.executable(&stage.artifact)?;
-        buf = if stage.takes_threshold {
-            exe.run(&[&buf, &th])?
-        } else {
-            exe.run(&[&buf])?
-        };
-    }
-    let detect = match &plan.detect {
-        Some(name) => Some(rt.run(name, &[&buf])?),
-        None => None,
-    };
+    let out = exec.execute(plan, threshold, staging)?;
     Ok(BoxResult {
         task: job.task,
         clip_t0: job.clip_t0,
-        binary: buf,
-        detect,
+        binary: out.binary,
+        detect: out.detect,
         latency: job.enqueued.elapsed(),
     })
 }
 
-/// Spawn `n` persistent workers consuming `queue` and routing results to
-/// `out`.
+/// Build one worker's executor for the spec'd backend. In-thread only:
+/// the PJRT runtime is not `Send`.
+fn build_executor(
+    spec: &WorkerSpec,
+    compiles: &Arc<AtomicU64>,
+) -> Result<Box<dyn Executor>> {
+    let exec: Box<dyn Executor> = match spec.backend {
+        Backend::Pjrt => {
+            let rt = Runtime::with_compile_counter(
+                spec.manifest.clone(),
+                compiles.clone(),
+            )?;
+            Box::new(PjrtExec::new(rt))
+        }
+        Backend::Cpu => {
+            crate::exec::cpu_executor(spec.plan.mode, spec.pool.clone())
+        }
+    };
+    exec.prepare(&spec.plan)?;
+    Ok(exec)
+}
+
+/// Spawn the spec's persistent workers consuming `queue` and routing
+/// results to `out`.
 ///
-/// Each worker PRECOMPILES the plan's artifacts before touching the queue
-/// and the call blocks until every worker is ready: PJRT compilation
-/// happens once, at engine build, outside every job's measured wall time
-/// (§Perf in EXPERIMENTS.md — this moved p95 box latency from ~0.44 s to
-/// the worker service time). Each compilation bumps `compiles` so the
-/// engine can prove executables are reused across jobs. Init failures are
+/// Each worker runs `Executor::prepare` before touching the queue and the
+/// call blocks until every worker is ready: PJRT compilation (and CPU
+/// scratch prewarm) happen once, at engine build, outside every job's
+/// measured wall time (§Perf in EXPERIMENTS.md — this moved p95 box
+/// latency from ~0.44 s to the worker service time). Each PJRT
+/// compilation bumps `compiles` so the engine can prove executables are
+/// reused across jobs; the CPU backends never touch it. Init failures are
 /// pushed into `init_errors` BEFORE the barrier releases, so the spawner
 /// observes them deterministically on return.
-#[allow(clippy::too_many_arguments)]
 pub fn spawn_workers(
-    n: usize,
-    manifest: Arc<Manifest>,
-    plan: Arc<ExecutionPlan>,
-    threshold: f32,
+    spec: WorkerSpec,
     queue: Bounded<BoxJob>,
     out: Sender<WorkerEvent>,
     compiles: Arc<AtomicU64>,
     init_errors: Arc<Mutex<Vec<String>>>,
 ) -> Vec<JoinHandle<Result<()>>> {
-    let ready = Arc::new(std::sync::Barrier::new(n + 1));
-    let handles = (0..n)
+    let ready = Arc::new(std::sync::Barrier::new(spec.workers + 1));
+    let handles = (0..spec.workers)
         .map(|_| {
-            let manifest = manifest.clone();
-            let plan = plan.clone();
+            let spec = spec.clone();
             let queue = queue.clone();
             let out = out.clone();
             let compiles = compiles.clone();
             let init_errors = init_errors.clone();
             let ready = ready.clone();
             std::thread::spawn(move || -> Result<()> {
-                // Compile everything this plan needs up front; on failure
-                // still release the barrier so spawn_workers can't hang.
-                let init = (|| -> Result<Runtime> {
-                    let rt =
-                        Runtime::with_compile_counter(manifest, compiles)?;
-                    for stage in &plan.stages {
-                        rt.executable(&stage.artifact)?;
-                    }
-                    if let Some(d) = &plan.detect {
-                        rt.executable(d)?;
-                    }
-                    Ok(rt)
-                })();
+                // Prepare the backend up front; on failure still release
+                // the barrier so spawn_workers can't hang.
+                let init = build_executor(&spec, &compiles);
                 if let Err(e) = &init {
                     init_errors.lock().unwrap().push(e.to_string());
                 }
                 ready.wait();
-                let rt = init?;
-                // Persistent service loop: jobs come and go, the runtime
-                // (and its compiled executables) lives until the queue
-                // closes at engine shutdown. Every popped job MUST produce
-                // an event — the engine's drain counts on it — so a panic
-                // inside the hot path is caught and reported instead of
-                // silently killing this worker's results (which would hang
-                // the submitting job's collector forever).
+                let exec = init?;
+                let plan = spec.plan.clone();
+                let threshold = spec.threshold;
+                let mut staging: Vec<f32> = Vec::new();
+                // Persistent service loop: jobs come and go, the executor
+                // (compiled executables / pooled scratch) lives until the
+                // queue closes at engine shutdown. Every popped job MUST
+                // produce an event — the engine's drain counts on it — so
+                // a panic inside the hot path is caught and reported
+                // instead of silently killing this worker's results
+                // (which would hang the submitting job's collector
+                // forever).
                 while let Some(job) = queue.pop() {
                     let job_id = job.job_id;
                     let result = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            execute_box(&rt, &plan, threshold, &job)
+                            execute_box(
+                                exec.as_ref(),
+                                &plan,
+                                threshold,
+                                &job,
+                                &mut staging,
+                            )
                         }),
                     )
                     .unwrap_or_else(|_| {
@@ -179,7 +207,7 @@ pub fn spawn_workers(
             })
         })
         .collect();
-    ready.wait(); // compilation done on every worker before we return
+    ready.wait(); // preparation done on every worker before we return
     handles
 }
 
@@ -187,22 +215,16 @@ pub fn spawn_workers(
 mod tests {
     use super::*;
     use crate::config::FusionMode;
-    use std::sync::atomic::Ordering;
     use crate::coordinator::backpressure::Policy;
     use crate::fusion::halo::BoxDims;
     use crate::video::SynthConfig;
+    use std::sync::atomic::Ordering;
 
-    /// End-to-end worker smoke test (needs artifacts; skips otherwise).
-    #[test]
-    fn workers_process_all_boxes() {
-        let Ok(manifest) = Manifest::load("artifacts") else {
-            eprintln!(
-                "skipping workers_process_all_boxes: artifacts/ not \
-                 present (run `make artifacts`)"
-            );
-            return;
-        };
-        let manifest = Arc::new(manifest);
+    fn run_pool(
+        backend: Backend,
+        manifest: Arc<Manifest>,
+        compiles: &Arc<AtomicU64>,
+    ) -> Vec<WorkerEvent> {
         let cfg = SynthConfig {
             frames: 9,
             height: 32,
@@ -218,22 +240,25 @@ mod tests {
         ));
         let queue = Bounded::new(16, Policy::Block);
         let (tx, rx) = std::sync::mpsc::channel();
-        let compiles = Arc::new(AtomicU64::new(0));
         let init_errors = Arc::new(Mutex::new(Vec::new()));
-        let handles = spawn_workers(
-            2,
+        let spec = WorkerSpec {
+            workers: 2,
+            backend,
             manifest,
             plan,
-            96.0,
+            threshold: 96.0,
+            pool: BufferPool::shared(),
+        };
+        let handles = spawn_workers(
+            spec,
             queue.clone(),
             tx,
             compiles.clone(),
             init_errors.clone(),
         );
         assert!(init_errors.lock().unwrap().is_empty());
-        // Both workers compiled the full chain (fused stage + detect).
-        assert_eq!(compiles.load(Ordering::Relaxed), 2 * 2);
-        let tasks = crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
+        let tasks =
+            crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
         assert_eq!(tasks.len(), 4); // frames 0..8 = one temporal box
         for task in &tasks {
             queue.push(BoxJob {
@@ -246,18 +271,50 @@ mod tests {
         }
         queue.close();
         let events: Vec<WorkerEvent> = rx.iter().take(tasks.len()).collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        events
+    }
+
+    fn check_events(events: &[WorkerEvent]) {
         assert_eq!(events.len(), 4);
-        for ev in &events {
+        for ev in events {
             assert_eq!(ev.job_id, 1);
             let r = ev.result.as_ref().unwrap();
             assert_eq!(r.binary.len(), 8 * 16 * 16);
             assert_eq!(r.detect.as_ref().unwrap().len(), 8 * 3);
             assert!(r.latency > Duration::ZERO);
         }
-        for h in handles {
-            h.join().unwrap().unwrap();
-        }
-        // Executables were compiled exactly once per worker, not per box.
+    }
+
+    /// CPU-backend workers run the full pool path with no artifacts.
+    #[test]
+    fn cpu_workers_process_all_boxes_offline() {
+        let compiles = Arc::new(AtomicU64::new(0));
+        let events =
+            run_pool(Backend::Cpu, Arc::new(Manifest::default()), &compiles);
+        check_events(&events);
+        // The CPU backend never compiles anything.
+        assert_eq!(compiles.load(Ordering::Relaxed), 0);
+    }
+
+    /// End-to-end PJRT worker smoke test (needs artifacts; skips
+    /// otherwise).
+    #[test]
+    fn pjrt_workers_process_all_boxes() {
+        let Ok(manifest) = Manifest::load("artifacts") else {
+            eprintln!(
+                "skipping pjrt_workers_process_all_boxes: artifacts/ not \
+                 present (run `make artifacts`)"
+            );
+            return;
+        };
+        let compiles = Arc::new(AtomicU64::new(0));
+        let events = run_pool(Backend::Pjrt, Arc::new(manifest), &compiles);
+        check_events(&events);
+        // Both workers compiled the full chain (fused stage + detect)
+        // exactly once each, at spawn, not per box.
         assert_eq!(compiles.load(Ordering::Relaxed), 2 * 2);
     }
 }

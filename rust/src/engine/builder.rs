@@ -7,7 +7,7 @@
 //! compilation on every worker.
 
 use super::session::Engine;
-use crate::config::{FusionMode, RunConfig};
+use crate::config::{Backend, FusionMode, RunConfig};
 use crate::fusion::halo::BoxDims;
 use crate::Result;
 
@@ -39,6 +39,15 @@ impl EngineBuilder {
     /// the compiled executables are arm-specific).
     pub fn mode(mut self, mode: FusionMode) -> Self {
         self.cfg.mode = mode;
+        self
+    }
+
+    /// Execution backend: `Backend::Pjrt` dispatches the AOT artifact
+    /// chain (needs `artifacts/`); `Backend::Cpu` runs the native
+    /// executors — fused single-pass for `FusionMode::Full` — with no
+    /// artifacts and zero compilation, so the whole engine works offline.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
         self
     }
 
@@ -116,6 +125,7 @@ mod tests {
     fn setters_reach_the_config() {
         let b = EngineBuilder::new()
             .artifacts("elsewhere")
+            .backend(Backend::Cpu)
             .mode(FusionMode::Two)
             .box_dims(BoxDims::new(16, 16, 8))
             .workers(3)
@@ -127,6 +137,7 @@ mod tests {
             .fps(750.0);
         let cfg = b.run_config();
         assert_eq!(cfg.artifacts_dir, "elsewhere");
+        assert_eq!(cfg.backend, Backend::Cpu);
         assert_eq!(cfg.mode, FusionMode::Two);
         assert_eq!(cfg.box_dims, BoxDims::new(16, 16, 8));
         assert_eq!(cfg.workers, 3);

@@ -53,8 +53,7 @@ impl Default for ServeOpts {
 
 impl ServeOpts {
     /// Streaming defaults taken from a run config: ingest at `cfg.fps`
-    /// with drop-oldest admission. The CLI and the deprecated
-    /// `run_serve` shim route through this.
+    /// with drop-oldest admission. The CLI routes through this.
     pub fn from_config(cfg: &crate::config::RunConfig) -> Self {
         ServeOpts {
             fps: cfg.fps,

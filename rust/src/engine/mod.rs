@@ -3,10 +3,11 @@
 //!
 //! The paper's whole argument is amortization: fuse kernels ONCE, then
 //! stream 600–1000 fps of video through the fused plan with minimal data
-//! traffic. The deprecated one-shot `run_*` entrypoints fought that —
-//! every call re-loaded the manifest, re-resolved the execution plan,
-//! re-spawned workers, and re-compiled every PJRT executable. An
-//! [`Engine`] pays all of that exactly once at [`EngineBuilder::build`]:
+//! traffic. The old one-shot `run_*` entrypoints (removed in favor of
+//! this API) fought that — every call re-loaded the manifest, re-resolved
+//! the execution plan, re-spawned workers, and re-compiled every PJRT
+//! executable. An [`Engine`] pays all of that exactly once at
+//! [`EngineBuilder::build`]:
 //!
 //! * it owns the loaded [`Manifest`](crate::runtime::Manifest) and the
 //!   resolved [`ExecutionPlan`](crate::coordinator::ExecutionPlan);
@@ -16,7 +17,13 @@
 //!   by job id through one long-lived bounded queue;
 //! * [`Engine::stats`] exposes cumulative session metrics, including the
 //!   pool-wide compile count (which must not grow after build — that is
-//!   the warm-pool contract, and `tests/engine_reuse.rs` enforces it).
+//!   the warm-pool contract, and `tests/engine_reuse.rs` enforces it)
+//!   and the scratch-pool allocation count (flat across jobs on the
+//!   fused CPU backend — the zero-allocation steady-state contract);
+//! * execution is backend-pluggable
+//!   ([`Backend`](crate::config::Backend)): `Pjrt` dispatches the AOT
+//!   artifact chain, `Cpu` runs the native [`exec`](crate::exec)
+//!   executors so the whole engine builds and serves jobs offline.
 //!
 //! ```no_run
 //! use kfuse::config::FusionMode;

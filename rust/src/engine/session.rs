@@ -14,13 +14,14 @@ use std::sync::{Arc, Mutex};
 
 use super::stats::EngineStats;
 use super::EngineBuilder;
-use crate::config::RunConfig;
+use crate::config::{Backend, RunConfig};
 use crate::coordinator::backpressure::{Bounded, Policy};
 use crate::coordinator::metrics::{Metrics, MetricsReport};
 use crate::coordinator::plan::ExecutionPlan;
 use crate::coordinator::scheduler::{
-    spawn_workers, BoxJob, BoxResult, WorkerEvent,
+    spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
 };
+use crate::exec::BufferPool;
 use crate::runtime::Manifest;
 use crate::{Error, Result};
 
@@ -39,6 +40,7 @@ pub struct Engine {
     events: Receiver<WorkerEvent>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
     compiles: Arc<AtomicU64>,
+    pool: Arc<BufferPool>,
     next_job: u64,
     totals: EngineStats,
 }
@@ -55,9 +57,15 @@ impl Engine {
     /// once every worker is warm).
     pub fn from_config(cfg: RunConfig) -> Result<Engine> {
         cfg.validate()?;
-        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        // The CPU backend needs no artifact registry: the engine builds
+        // (and every job runs) fully offline.
+        let manifest = match cfg.backend {
+            Backend::Pjrt => Arc::new(Manifest::load(&cfg.artifacts_dir)?),
+            Backend::Cpu => Arc::new(Manifest::default()),
+        };
         let plan =
             Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
+        let pool = BufferPool::shared();
         let queue: Bounded<BoxJob> =
             Bounded::new(cfg.queue_depth, Policy::Block);
         let (tx, rx) = mpsc::channel::<WorkerEvent>();
@@ -65,10 +73,14 @@ impl Engine {
         let init_errors: Arc<Mutex<Vec<String>>> =
             Arc::new(Mutex::new(Vec::new()));
         let workers = spawn_workers(
-            cfg.workers,
-            manifest.clone(),
-            plan.clone(),
-            cfg.threshold,
+            WorkerSpec {
+                workers: cfg.workers,
+                backend: cfg.backend,
+                manifest: manifest.clone(),
+                plan: plan.clone(),
+                threshold: cfg.threshold,
+                pool: pool.clone(),
+            },
             queue.clone(),
             tx,
             compiles.clone(),
@@ -95,6 +107,7 @@ impl Engine {
             events: rx,
             workers,
             compiles,
+            pool,
             next_job: 0,
             totals: EngineStats::default(),
         })
@@ -116,11 +129,13 @@ impl Engine {
     }
 
     /// Lifetime counters across every job served so far, including the
-    /// pool-wide PJRT compile count (which settles at build time and must
-    /// not grow afterwards).
+    /// pool-wide PJRT compile count and the scratch-pool allocation count
+    /// (both settle at build time and must not grow afterwards — the
+    /// warm-pool and zero-allocation steady-state contracts).
     pub fn stats(&self) -> EngineStats {
         EngineStats {
             compiles: self.compiles.load(Ordering::Relaxed),
+            pool_allocs: self.pool.allocations(),
             ..self.totals.clone()
         }
     }

@@ -24,10 +24,15 @@ pub struct EngineStats {
     /// Boxes dropped by backpressure (serve jobs).
     pub dropped: u64,
     /// PJRT executable compilations across the worker pool. Settles at
-    /// `workers × plan artifacts` during `build()` and MUST NOT grow on
-    /// later jobs — compiled executables outliving jobs is the entire
-    /// point of the warm pool.
+    /// `workers × plan artifacts` during `build()` (stays 0 on
+    /// `Backend::Cpu`) and MUST NOT grow on later jobs — compiled
+    /// executables outliving jobs is the entire point of the warm pool.
     pub compiles: u64,
+    /// Scratch-buffer allocations performed by the engine's
+    /// [`BufferPool`](crate::exec::BufferPool). Settles at build (the
+    /// fused CPU workers prewarm their scratch) and MUST stay flat across
+    /// jobs — steady-state streaming does zero pool allocations per box.
+    pub pool_allocs: u64,
 }
 
 impl std::fmt::Display for EngineStats {
@@ -35,13 +40,14 @@ impl std::fmt::Display for EngineStats {
         write!(
             f,
             "{} jobs | {} boxes | {} frames | {} dispatches | \
-             {} dropped | {} compiles (warm after build)",
+             {} dropped | {} compiles | {} pool allocs (warm after build)",
             self.jobs,
             self.boxes,
             self.frames,
             self.dispatches,
             self.dropped,
-            self.compiles
+            self.compiles,
+            self.pool_allocs
         )
     }
 }

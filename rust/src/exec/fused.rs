@@ -1,0 +1,318 @@
+//! Fused single-pass CPU execution of the K1..K5 chain.
+//!
+//! This is the paper's fusion transformation (§VI, Table III) reproduced
+//! on the host: one pass over the halo'd input box with every
+//! intermediate held in rolling on-chip-sized scratch instead of
+//! full-size buffers:
+//!
+//! * **K1 luma** is computed inline from the RGBA input — the gray plane
+//!   never exists.
+//! * **K2 IIR** keeps its state in one `(h, w)` carry plane (the recurrence
+//!   needs exactly one frame of history, nothing more).
+//! * **K3 binomial** writes into three rolling line buffers of width
+//!   `w-2` — the 3-row window the Sobel stencil needs, the CPU analogue
+//!   of the fused kernel's shared-memory tile.
+//! * **K4 Sobel + K5 threshold** are folded into one loop that emits the
+//!   final binarized value directly; the per-frame detect reduction
+//!   (mass, Σi, Σj) accumulates in the same loop when requested.
+//!
+//! Scratch (carry plane + line buffers) is checked out of the shared
+//! [`BufferPool`] once per worker — at `Executor::prepare`, i.e. at
+//! engine build — held for the executor's lifetime, and returned to the
+//! pool when the worker completes. Steady-state streaming therefore
+//! performs zero scratch allocations (and zero pool round-trips) per box
+//! — the only per-box allocations left are the output buffers handed
+//! across the result channel; the pool's allocation counter settles at
+//! build and stays flat, which `tests/engine_reuse.rs` enforces. Every arithmetic expression matches
+//! `cpu_ref` operation for operation, in the same order — the output is
+//! bit-identical to the staged oracle (property-tested below and in
+//! `tests/exec_backend.rs`).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
+use crate::Result;
+
+use super::pool::{BufferPool, PoolBuf};
+use super::{check_cpu_input, BoxOutput, Executor};
+
+/// Per-worker rolling storage: the IIR carry plane and the 3-row stencil
+/// window. Lives for the executor's lifetime; contents are fully
+/// rewritten every box, so nothing leaks between boxes.
+#[derive(Debug)]
+struct Scratch {
+    carry: PoolBuf,
+    srows: PoolBuf,
+}
+
+/// The fused CPU backend: one tiled pass per box, pooled scratch.
+/// Single-threaded by construction (one executor per worker thread), so
+/// the scratch slot is a plain `RefCell`.
+#[derive(Debug)]
+pub struct FusedCpu {
+    pool: Arc<BufferPool>,
+    scratch: RefCell<Option<Scratch>>,
+}
+
+impl FusedCpu {
+    pub fn new(pool: Arc<BufferPool>) -> FusedCpu {
+        FusedCpu {
+            pool,
+            scratch: RefCell::new(None),
+        }
+    }
+
+    /// Make sure the held scratch matches the requested geometry; checks
+    /// out (allocating at most once per worker per geometry) on first
+    /// use or shape change.
+    fn ensure_scratch(&self, plane: usize, lines: usize) {
+        let mut slot = self.scratch.borrow_mut();
+        let fits = slot
+            .as_ref()
+            .map(|s| s.carry.len() == plane && s.srows.len() == lines)
+            .unwrap_or(false);
+        if !fits {
+            // Drop the old scratch (returning it to the pool) BEFORE the
+            // new checkout so a resize can recycle the old buffers.
+            *slot = None;
+            *slot = Some(Scratch {
+                carry: self.pool.checkout(plane),
+                srows: self.pool.checkout(lines),
+            });
+        }
+    }
+
+    /// Scratch bytes live at any point during the pass (carry plane +
+    /// three stencil lines) — the fused counterpart of
+    /// [`StagedCpu::intermediate_bytes`](super::StagedCpu::intermediate_bytes).
+    pub fn scratch_bytes(h_in: usize, w_in: usize) -> u64 {
+        (4 * (h_in * w_in + 3 * (w_in - 2))) as u64
+    }
+
+    /// The fused pass on a raw halo'd buffer:
+    /// `(t_in, h_in, w_in, 4)` RGBA → `(t_in-1, h_in-4, w_in-4)` binary,
+    /// plus per-frame `(mass, Σi, Σj)` detect rows when `with_detect`.
+    /// Semantics (and bit pattern) identical to
+    /// `cpu_ref::pipeline` + `cpu_ref::detect`.
+    pub fn run_box(
+        &self,
+        x: &[f32],
+        t_in: usize,
+        h_in: usize,
+        w_in: usize,
+        th: f32,
+        with_detect: bool,
+    ) -> BoxOutput {
+        assert!(t_in >= 2 && h_in >= 5 && w_in >= 5);
+        assert_eq!(x.len(), t_in * h_in * w_in * 4);
+        let (t_out, oh, ow) = (t_in - 1, h_in - 4, w_in - 4);
+        let sw = w_in - 2; // smoothed-row width (and 3-row window width)
+        let plane = h_in * w_in;
+
+        self.ensure_scratch(plane, 3 * sw);
+        let mut guard = self.scratch.borrow_mut();
+        let scratch = guard.as_mut().unwrap();
+        let carry: &mut [f32] = &mut scratch.carry;
+        let srows: &mut [f32] = &mut scratch.srows;
+        let mut out = vec![0.0f32; t_out * oh * ow];
+        let mut detect = with_detect.then(|| vec![0.0f32; t_out * 3]);
+
+        // K2 warm start: the carry is the luma of frame 0 (y[-1] = x[0]).
+        for (c, px) in carry.iter_mut().zip(x.chunks_exact(4)) {
+            *c = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+        }
+
+        for ft in 1..t_in {
+            // K1+K2 fused: luma inline, carry plane updated in place.
+            let frame = &x[ft * plane * 4..(ft + 1) * plane * 4];
+            for (c, px) in carry.iter_mut().zip(frame.chunks_exact(4)) {
+                let g = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+                *c = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * *c;
+            }
+
+            let of = ft - 1;
+            // Prime the first two smoothed rows of this frame.
+            smooth_row(carry, w_in, 0, &mut srows[..sw]);
+            smooth_row(carry, w_in, 1, &mut srows[sw..2 * sw]);
+            let (mut mass, mut si, mut sj) = (0.0f32, 0.0f32, 0.0f32);
+            for i in 0..oh {
+                // K3 rolling: compute smoothed row i+2 into the slot the
+                // Sobel window no longer needs.
+                let slot = (i + 2) % 3;
+                {
+                    let row = &mut srows[slot * sw..(slot + 1) * sw];
+                    smooth_row(carry, w_in, i + 2, row);
+                }
+                let sr: &[f32] = &*srows;
+                let r0 = &sr[(i % 3) * sw..][..sw];
+                let r1 = &sr[((i + 1) % 3) * sw..][..sw];
+                let r2 = &sr[((i + 2) % 3) * sw..][..sw];
+                let dst = &mut out[(of * oh + i) * ow..(of * oh + i + 1) * ow];
+                // K4+K5 fused: Sobel L1 magnitude, thresholded in place,
+                // detect reduction accumulated in the same loop. The
+                // expressions mirror cpu_ref::gradient3's p(di, dj) reads
+                // term for term.
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let gx = (r0[j + 2] - r0[j])
+                        + 2.0 * (r1[j + 2] - r1[j])
+                        + (r2[j + 2] - r2[j]);
+                    let gy = (r2[j] - r0[j])
+                        + 2.0 * (r2[j + 1] - r0[j + 1])
+                        + (r2[j + 2] - r0[j + 2]);
+                    let mag = gx.abs() + gy.abs();
+                    let bin = if mag >= th { 255.0 } else { 0.0 };
+                    *d = bin;
+                    if bin > 0.0 {
+                        mass += 1.0;
+                        si += i as f32;
+                        sj += j as f32;
+                    }
+                }
+            }
+            if let Some(rows) = detect.as_mut() {
+                rows[of * 3] = mass;
+                rows[of * 3 + 1] = si;
+                rows[of * 3 + 2] = sj;
+            }
+        }
+        BoxOutput {
+            binary: out,
+            detect,
+        }
+    }
+}
+
+/// One 3×3 binomial output row: smoothed row `r` (of `h-2` valid rows)
+/// from carry rows `r..r+3`. Accumulation order matches
+/// `cpu_ref::gaussian3` exactly so results are bit-identical.
+#[inline]
+fn smooth_row(carry: &[f32], w: usize, r: usize, dst: &mut [f32]) {
+    const K: [[f32; 3]; 3] = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
+    let row0 = &carry[r * w..r * w + w];
+    let row1 = &carry[(r + 1) * w..(r + 1) * w + w];
+    let row2 = &carry[(r + 2) * w..(r + 2) * w + w];
+    for (j, d) in dst.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (dj, kv) in K[0].iter().enumerate() {
+            acc += kv * row0[j + dj];
+        }
+        for (dj, kv) in K[1].iter().enumerate() {
+            acc += kv * row1[j + dj];
+        }
+        for (dj, kv) in K[2].iter().enumerate() {
+            acc += kv * row2[j + dj];
+        }
+        *d = acc / 16.0;
+    }
+}
+
+impl Executor for FusedCpu {
+    fn name(&self) -> &'static str {
+        "fused_cpu"
+    }
+
+    /// Check out this worker's scratch set up front so the pool's
+    /// allocation counter settles at engine build. The scratch is held
+    /// (not parked) for the executor's lifetime, so concurrent workers
+    /// can never contend for — or re-allocate — each other's buffers.
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
+        let din = plan.box_dims.with_halo(plan.halo);
+        self.ensure_scratch(din.x * din.y, 3 * (din.y - 2));
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let (t_in, h_in, w_in) = check_cpu_input(plan, input)?;
+        Ok(self.run_box(
+            input,
+            t_in,
+            h_in,
+            w_in,
+            threshold,
+            plan.detect.is_some(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::cpu_ref;
+    use crate::fusion::halo::BoxDims;
+    use crate::prop::{run_prop, Gen};
+
+    fn oracle(x: &[f32], t: usize, h: usize, w: usize, th: f32) -> BoxOutput {
+        let binary = cpu_ref::pipeline(x, t, h, w, th);
+        let detect = cpu_ref::detect(&binary, t - 1, h - 4, w - 4)
+            .into_iter()
+            .flatten()
+            .collect();
+        BoxOutput {
+            binary,
+            detect: Some(detect),
+        }
+    }
+
+    #[test]
+    fn fused_matches_oracle_on_fixed_shape() {
+        let mut g = Gen::new(5);
+        let (t, h, w) = (9, 20, 20);
+        let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        let fused = FusedCpu::new(BufferPool::shared());
+        let got = fused.run_box(&x, t, h, w, 96.0, true);
+        assert_eq!(got, oracle(&x, t, h, w, 96.0));
+    }
+
+    #[test]
+    fn prop_fused_equals_pipeline_oracle() {
+        // Satellite contract: FusedCpu == cpu_ref::pipeline over random
+        // shapes and thresholds, bit for bit (same FP operation order).
+        let fused = FusedCpu::new(BufferPool::shared());
+        run_prop("fused_cpu==cpu_ref::pipeline", 60, |g: &mut Gen| {
+            let t = g.usize_in(2, 6);
+            let h = g.usize_in(5, 17);
+            let w = g.usize_in(5, 17);
+            let th = g.f32_in(0.0, 400.0);
+            let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+            let got = fused.run_box(&x, t, h, w, th, true);
+            assert_eq!(got, oracle(&x, t, h, w, th), "t={t} h={h} w={w} th={th}");
+        });
+    }
+
+    #[test]
+    fn executor_path_steady_state_allocates_nothing() {
+        let pool = BufferPool::shared();
+        let fused = FusedCpu::new(pool.clone());
+        let plan = ExecutionPlan::resolve(
+            FusionMode::Full,
+            BoxDims::new(16, 16, 8),
+            true,
+        );
+        fused.prepare(&plan).unwrap();
+        let warm = pool.allocations();
+        assert_eq!(warm, 2, "carry plane + line buffers");
+        let mut g = Gen::new(3);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        for _ in 0..8 {
+            let out = fused.execute(&plan, 96.0, &x).unwrap();
+            assert_eq!(out.binary.len(), 8 * 16 * 16);
+            assert_eq!(out.detect.unwrap().len(), 8 * 3);
+        }
+        assert_eq!(pool.allocations(), warm, "per-box pool allocations");
+    }
+
+    #[test]
+    fn scratch_is_a_tiny_fraction_of_staged_traffic() {
+        let scratch = FusedCpu::scratch_bytes(20, 20);
+        let staged = super::super::StagedCpu::intermediate_bytes(9, 20, 20);
+        assert!(scratch * 4 < staged, "{scratch} vs {staged}");
+    }
+}

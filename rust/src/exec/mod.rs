@@ -1,0 +1,157 @@
+//! Pluggable per-box execution backends.
+//!
+//! The paper's core claim (§VII, Figs 10/16) is that fusing the K1..K5
+//! chain into one kernel removes the intermediate global-memory
+//! round-trips and yields a 2–3× speedup. This module reproduces that
+//! transformation where it can always run — on the host CPU — and makes
+//! the whole engine backend-pluggable so the same
+//! Engine → queue → worker → result-router path executes either against
+//! PJRT artifacts or natively:
+//!
+//! * [`Executor`] — one box in, binarized box (plus optional per-frame
+//!   detect rows) out. Workers construct their executor on their own
+//!   thread (the PJRT client is not `Send`) and call it per popped job.
+//! * [`PjrtExec`] — the artifact chain: each stage is one compiled HLO
+//!   executable, every intermediate crosses the host boundary. This is
+//!   the measured "GPU" arm when `artifacts/` is present.
+//! * [`StagedCpu`] — the kernel-by-kernel `cpu_ref` chain. It
+//!   deliberately materializes every intermediate (gray, IIR, smoothed,
+//!   gradient) at full box size — the traffic baseline, i.e. the "No
+//!   Fusion" memory behavior on a CPU.
+//! * [`FusedCpu`] — the fused single pass: BT.601 luma is computed
+//!   inline, the IIR carry lives in one reusable plane, and the 3×3
+//!   binomial + Sobel stencils run over three rolling line buffers with
+//!   the threshold (and detect accumulation) folded into the gradient
+//!   loop. No full-frame intermediate ever exists — the CPU analogue of
+//!   keeping fused intermediates in shared memory.
+//! * [`BufferPool`] — checked-out scratch per worker, returned on box
+//!   completion, so steady-state streaming does zero allocations per box
+//!   (counter-enforced, see [`pool`]).
+//!
+//! Backend selection is [`Backend`](crate::config::Backend) in the run
+//! config: `Backend::Pjrt` needs `artifacts/`; `Backend::Cpu` runs
+//! everywhere, mapping `FusionMode::Full` to [`FusedCpu`] and the other
+//! arms to [`StagedCpu`] (see [`cpu_executor`]).
+
+pub mod fused;
+pub mod pjrt;
+pub mod pool;
+pub mod staged;
+
+use std::sync::Arc;
+
+use crate::config::FusionMode;
+use crate::coordinator::plan::ExecutionPlan;
+use crate::Result;
+
+pub use fused::FusedCpu;
+pub use pjrt::PjrtExec;
+pub use pool::{BufferPool, PoolBuf};
+pub use staged::StagedCpu;
+
+/// Output of one box execution: the binarized (t, x, y) box and, when the
+/// plan requests detection, per-frame `(mass, Σi, Σj)` rows flattened to
+/// `t × 3`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxOutput {
+    pub binary: Vec<f32>,
+    pub detect: Option<Vec<f32>>,
+}
+
+/// One execution backend servicing boxes on a worker thread.
+///
+/// Implementations are constructed on the worker's own thread and are not
+/// required to be `Send` (the PJRT client is `Rc`-backed).
+pub trait Executor {
+    /// Short name for traces and benches.
+    fn name(&self) -> &'static str;
+
+    /// One-time warm-up at worker spawn, before the first job: PJRT
+    /// compiles the plan's executables here, the fused CPU pass prewarms
+    /// its pool scratch. Part of engine build cost, never of job cost.
+    fn prepare(&self, _plan: &ExecutionPlan) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute the plan's chain on one halo'd input box: `input` is the
+    /// staged `(t+δt, x+2δx, y+2δy, 4)` RGBA buffer for an output box of
+    /// `plan.box_dims`.
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput>;
+}
+
+/// Build the CPU executor for a fusion arm: `Full` lowers the whole chain
+/// into the single-pass [`FusedCpu`]; `None` and `Two` run the
+/// materializing [`StagedCpu`] baseline. The CPU reference has no partial
+/// two-way grouping yet (ROADMAP open item), so on `Backend::Cpu` the
+/// `Two` arm EXECUTES the unfused 5-stage chain while its dispatch and
+/// traffic metrics still reflect the 2-stage plan model — compare only
+/// `None` vs `Full` for measured CPU fusion effects.
+pub fn cpu_executor(
+    mode: FusionMode,
+    pool: Arc<BufferPool>,
+) -> Box<dyn Executor> {
+    match mode {
+        FusionMode::Full => Box::new(FusedCpu::new(pool)),
+        FusionMode::None | FusionMode::Two => Box::new(StagedCpu::new()),
+    }
+}
+
+/// Shape guard shared by the CPU executors: the cpu_ref chain is only
+/// defined for the pipeline's cumulative halo (δx=δy=2, δt=1).
+pub(crate) fn check_cpu_input(
+    plan: &ExecutionPlan,
+    input: &[f32],
+) -> Result<(usize, usize, usize)> {
+    let halo = crate::fusion::kernel_ir::Radii::new(2, 2, 1);
+    if plan.halo != halo {
+        return Err(crate::Error::Shape(format!(
+            "CPU backend supports the K1..K5 chain halo {halo:?} only, \
+             plan has {:?}",
+            plan.halo
+        )));
+    }
+    let din = plan.box_dims.with_halo(plan.halo);
+    let (t_in, h_in, w_in) = (din.t, din.x, din.y);
+    if input.len() != t_in * h_in * w_in * 4 {
+        return Err(crate::Error::Shape(format!(
+            "input box has {} values, expected {}x{}x{}x4 = {}",
+            input.len(),
+            t_in,
+            h_in,
+            w_in,
+            t_in * h_in * w_in * 4
+        )));
+    }
+    Ok((t_in, h_in, w_in))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::halo::BoxDims;
+
+    #[test]
+    fn cpu_executor_maps_arms() {
+        let pool = BufferPool::shared();
+        assert_eq!(cpu_executor(FusionMode::Full, pool.clone()).name(), "fused_cpu");
+        assert_eq!(cpu_executor(FusionMode::None, pool.clone()).name(), "staged_cpu");
+        assert_eq!(cpu_executor(FusionMode::Two, pool).name(), "staged_cpu");
+    }
+
+    #[test]
+    fn cpu_input_shape_is_checked() {
+        let plan = ExecutionPlan::resolve(
+            FusionMode::Full,
+            BoxDims::new(16, 16, 8),
+            false,
+        );
+        let ok = vec![0.0; 9 * 20 * 20 * 4];
+        assert_eq!(check_cpu_input(&plan, &ok).unwrap(), (9, 20, 20));
+        assert!(check_cpu_input(&plan, &ok[1..]).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! PJRT-backed execution: the plan's AOT artifact chain.
+//!
+//! One compiled HLO executable per stage; every intermediate crosses the
+//! host boundary between stages. Those round-trips ARE the GMEM traffic
+//! the paper eliminates by fusing — one fused artifact = one dispatch =
+//! one round-trip. Requires `artifacts/` (run `make artifacts`); offline
+//! hosts use the CPU backends instead.
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::runtime::Runtime;
+use crate::Result;
+
+use super::{BoxOutput, Executor};
+
+/// The artifact-chain backend: wraps one worker's [`Runtime`] (PJRT
+/// client + compiled-executable cache).
+pub struct PjrtExec {
+    rt: Runtime,
+}
+
+impl PjrtExec {
+    pub fn new(rt: Runtime) -> PjrtExec {
+        PjrtExec { rt }
+    }
+
+    /// The wrapped runtime (benches poke at the executable cache).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Executor for PjrtExec {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Compile everything the plan needs up front, so compilation is part
+    /// of engine build and never of a job's measured wall time.
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
+        for stage in &plan.stages {
+            self.rt.executable(&stage.artifact)?;
+        }
+        if let Some(d) = &plan.detect {
+            self.rt.executable(d)?;
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let th = [threshold];
+        // Run the chain; every stage output is read back to the host —
+        // exactly the round-trip fusion removes (1 stage for Full).
+        let mut buf: Option<Vec<f32>> = None;
+        for stage in &plan.stages {
+            let exe = self.rt.executable(&stage.artifact)?;
+            let cur: &[f32] = buf.as_deref().unwrap_or(input);
+            buf = Some(if stage.takes_threshold {
+                exe.run(&[cur, &th])?
+            } else {
+                exe.run(&[cur])?
+            });
+        }
+        let binary = buf.unwrap_or_else(|| input.to_vec());
+        let detect = match &plan.detect {
+            Some(name) => Some(self.rt.run(name, &[&binary])?),
+            None => None,
+        };
+        Ok(BoxOutput { binary, detect })
+    }
+}

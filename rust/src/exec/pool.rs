@@ -1,0 +1,174 @@
+//! Reusable scratch-buffer pool for the CPU execution backends.
+//!
+//! The fused single-pass executor needs a small amount of per-box scratch
+//! (an IIR carry plane and three rolling stencil line buffers — the CPU
+//! analogue of the fused kernel's shared-memory tile). Allocating that
+//! scratch per box would put an allocator round-trip on the 600–1000 fps
+//! hot path, so workers check buffers out of a shared [`BufferPool`] and
+//! return them (via [`PoolBuf`]'s `Drop`) when the box completes.
+//!
+//! The pool is best-fit: a checkout reuses the smallest free buffer whose
+//! capacity already covers the request and only allocates on a true miss,
+//! bumping the pool-wide [`BufferPool::allocations`] counter. Workers
+//! prewarm their scratch set at spawn (see `Executor::prepare`), so the
+//! counter settles at engine build and MUST stay flat across jobs — that
+//! is the zero-allocation steady-state contract `tests/engine_reuse.rs`
+//! enforces, mirroring the warm pool's zero-recompile contract.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared pool of `Vec<f32>` scratch buffers.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<f32>>>,
+    allocations: AtomicU64,
+}
+
+impl BufferPool {
+    /// New empty pool behind an `Arc` (checkouts need the handle back).
+    pub fn shared() -> Arc<BufferPool> {
+        Arc::new(BufferPool::default())
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements. Reuses the
+    /// smallest free buffer with sufficient capacity; allocates (and
+    /// counts) only on a miss. The buffer returns to the pool when the
+    /// [`PoolBuf`] drops.
+    pub fn checkout(self: &Arc<Self>, len: usize) -> PoolBuf {
+        let mut buf = {
+            let mut free = self.free.lock().unwrap();
+            let fit = free
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.capacity() >= len)
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i);
+            match fit {
+                Some(i) => free.swap_remove(i),
+                None => {
+                    self.allocations.fetch_add(1, Ordering::Relaxed);
+                    Vec::with_capacity(len)
+                }
+            }
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        PoolBuf {
+            buf,
+            pool: self.clone(),
+        }
+    }
+
+    /// Fresh allocations performed by the pool so far. Settles once every
+    /// worker has prewarmed its scratch set; steady-state streaming keeps
+    /// it flat.
+    pub fn allocations(&self) -> u64 {
+        self.allocations.load(Ordering::Relaxed)
+    }
+
+    /// Number of buffers currently parked in the pool.
+    pub fn available(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// A checked-out scratch buffer; derefs to `[f32]` and returns itself to
+/// the pool on drop.
+#[derive(Debug)]
+pub struct PoolBuf {
+    buf: Vec<f32>,
+    pool: Arc<BufferPool>,
+}
+
+impl Deref for PoolBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        self.pool.free.lock().unwrap().push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_allocates_once_then_reuses() {
+        let pool = BufferPool::shared();
+        {
+            let b = pool.checkout(64);
+            assert_eq!(b.len(), 64);
+            assert!(b.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(pool.allocations(), 1);
+        assert_eq!(pool.available(), 1);
+        for _ in 0..10 {
+            let b = pool.checkout(64);
+            assert_eq!(b.len(), 64);
+        }
+        assert_eq!(pool.allocations(), 1, "steady state must not allocate");
+    }
+
+    #[test]
+    fn best_fit_keeps_mixed_sizes_stable() {
+        let pool = BufferPool::shared();
+        // Warm with the two scratch sizes the fused pass uses.
+        {
+            let _a = pool.checkout(400);
+            let _b = pool.checkout(54);
+        }
+        assert_eq!(pool.allocations(), 2);
+        // Re-checking out in either order must hit the right buffers.
+        for _ in 0..5 {
+            let _b = pool.checkout(54);
+            let _a = pool.checkout(400);
+        }
+        assert_eq!(pool.allocations(), 2);
+    }
+
+    #[test]
+    fn checkout_zeroes_recycled_buffers() {
+        let pool = BufferPool::shared();
+        {
+            let mut b = pool.checkout(8);
+            b.iter_mut().for_each(|v| *v = 9.0);
+        }
+        let b = pool.checkout(8);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn undersized_buffer_forces_a_counted_growth() {
+        let pool = BufferPool::shared();
+        drop(pool.checkout(8));
+        let b = pool.checkout(1024); // no fit: fresh allocation
+        assert_eq!(b.len(), 1024);
+        assert_eq!(pool.allocations(), 2);
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_distinct() {
+        let pool = BufferPool::shared();
+        let a = pool.checkout(16);
+        let b = pool.checkout(16);
+        assert_eq!(pool.allocations(), 2);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.available(), 2);
+    }
+}

@@ -1,0 +1,101 @@
+//! Kernel-by-kernel CPU execution — the traffic baseline.
+//!
+//! Runs the `cpu_ref` chain exactly as `run_*` always has: each stage
+//! reads its predecessor's full-size output and materializes its own.
+//! For a `(t+1, x+4, y+4, 4)` input box that is five heap intermediates
+//! per box (gray, IIR, smoothed, gradient, binary) — the exact
+//! global-memory round-trips the paper's fusion removes and the
+//! [`FusedCpu`](super::FusedCpu) pass eliminates. Kept deliberately
+//! allocation-heavy so `fig16_fused_cpu` measures the real unfused
+//! memory behavior.
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::cpu_ref;
+use crate::Result;
+
+use super::{check_cpu_input, BoxOutput, Executor};
+
+/// The unfused CPU backend: one materialized buffer per stage.
+#[derive(Debug, Default)]
+pub struct StagedCpu;
+
+impl StagedCpu {
+    pub fn new() -> StagedCpu {
+        StagedCpu
+    }
+
+    /// Bytes written to and re-read from intermediate buffers for one box
+    /// of `(t_in, h_in, w_in)` halo'd input — the traffic the fused pass
+    /// deletes (reported by the fig16 bench).
+    pub fn intermediate_bytes(t_in: usize, h_in: usize, w_in: usize) -> u64 {
+        let gray = t_in * h_in * w_in;
+        let iir = (t_in - 1) * h_in * w_in;
+        let smooth = (t_in - 1) * (h_in - 2) * (w_in - 2);
+        let grad = (t_in - 1) * (h_in - 4) * (w_in - 4);
+        // Each intermediate is written once and read once by the next
+        // stage, 4 bytes per f32.
+        (2 * 4 * (gray + iir + smooth + grad)) as u64
+    }
+}
+
+impl Executor for StagedCpu {
+    fn name(&self) -> &'static str {
+        "staged_cpu"
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let (t_in, h_in, w_in) = check_cpu_input(plan, input)?;
+        let g = cpu_ref::rgb2gray(input, t_in, h_in, w_in);
+        let y = cpu_ref::iir(&g, t_in, h_in, w_in, cpu_ref::kernels::IIR_ALPHA);
+        let s = cpu_ref::gaussian3(&y, t_in - 1, h_in, w_in);
+        let d = cpu_ref::gradient3(&s, t_in - 1, h_in - 2, w_in - 2);
+        let binary = cpu_ref::threshold(&d, threshold);
+        let bx = plan.box_dims;
+        let detect = plan.detect.as_ref().map(|_| {
+            cpu_ref::detect(&binary, bx.t, bx.x, bx.y)
+                .into_iter()
+                .flatten()
+                .collect()
+        });
+        Ok(BoxOutput { binary, detect })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::fusion::halo::BoxDims;
+    use crate::prop::Gen;
+
+    #[test]
+    fn staged_matches_pipeline_oracle() {
+        let plan = ExecutionPlan::resolve(
+            FusionMode::None,
+            BoxDims::new(16, 16, 8),
+            true,
+        );
+        let mut g = Gen::new(11);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let out = StagedCpu::new().execute(&plan, 96.0, &x).unwrap();
+        assert_eq!(out.binary, cpu_ref::pipeline(&x, 9, 20, 20, 96.0));
+        let rows = out.detect.unwrap();
+        assert_eq!(rows.len(), 8 * 3);
+        let want: Vec<f32> = cpu_ref::detect(&out.binary, 8, 16, 16)
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(rows, want);
+    }
+
+    #[test]
+    fn intermediate_bytes_counts_four_buffers() {
+        // t_in=2, h_in=5, w_in=5: gray 50 + iir 25 + smooth 9 + grad 1.
+        assert_eq!(StagedCpu::intermediate_bytes(2, 5, 5), 2 * 4 * 85);
+    }
+}

@@ -86,8 +86,7 @@ pub fn predict(
     } else {
         resident_vals * BYTES_PER_VALUE
     };
-    let occ = occupancy::occupancy_factor(dev, shmem_usage,
-                                          input.num_boxes(bx));
+    let occ = occupancy::occupancy_factor(dev, shmem_usage, input.num_boxes(bx));
     let mem_time = gmem_bytes / (dev.gmem_bw * occ)
         + shmem_bytes / (dev.gmem_bw * dev.shmem_speedup * occ);
     let compute_time = flops / dev.flops;

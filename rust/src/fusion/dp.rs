@@ -66,10 +66,12 @@ mod tests {
     fn dp_matches_bnb_on_paper_instance_all_devices() {
         let run = paper_fusable_run();
         for dev in DeviceSpec::paper_devices() {
-            for bx in [BoxDims::new(16, 16, 8), BoxDims::new(32, 32, 8),
-                       BoxDims::new(64, 64, 4)] {
-                let m = Model::build(&run, InputDims::new(512, 512, 1000),
-                                     bx, &dev);
+            for bx in [
+                BoxDims::new(16, 16, 8),
+                BoxDims::new(32, 32, 8),
+                BoxDims::new(64, 64, 4),
+            ] {
+                let m = Model::build(&run, InputDims::new(512, 512, 1000), bx, &dev);
                 let dp = solve_dp(&m);
                 let bb = solver::solve(&m);
                 match (dp, bb) {

@@ -176,10 +176,8 @@ mod tests {
     fn gmem_reduction_matches_fig13() {
         // Paper: Two Fusion −33%, Full Fusion −44% GMEM vs No Fusion.
         let run = paper_fusable_run();
-        let none = gmem_usage_bytes(INPUT, &segs(&run, &[1, 1, 1, 1, 1]),
-                                    BYTES_PER_VALUE);
-        let two = gmem_usage_bytes(INPUT, &segs(&run, &[2, 3]),
-                                   BYTES_PER_VALUE);
+        let none = gmem_usage_bytes(INPUT, &segs(&run, &[1, 1, 1, 1, 1]), BYTES_PER_VALUE);
+        let two = gmem_usage_bytes(INPUT, &segs(&run, &[2, 3]), BYTES_PER_VALUE);
         let full = gmem_usage_bytes(INPUT, &segs(&run, &[5]), BYTES_PER_VALUE);
         let r2 = 1.0 - two as f64 / none as f64;
         let rf = 1.0 - full as f64 / none as f64;

@@ -24,8 +24,11 @@ pub fn blocks_per_sm(dev: &DeviceSpec, shmem_per_block_bytes: usize) -> usize {
 
 /// GPU occupancy as the paper defines it: resident blocks over the
 /// device-wide maximum.
-pub fn gpu_occupancy(dev: &DeviceSpec, shmem_per_block_bytes: usize,
-                     total_blocks: usize) -> f64 {
+pub fn gpu_occupancy(
+    dev: &DeviceSpec,
+    shmem_per_block_bytes: usize,
+    total_blocks: usize,
+) -> f64 {
     let resident = (blocks_per_sm(dev, shmem_per_block_bytes) * dev.sm_count)
         .min(total_blocks);
     resident as f64 / dev.max_concurrent_blocks() as f64

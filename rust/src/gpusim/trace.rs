@@ -154,8 +154,13 @@ mod tests {
     fn ascii_render_contains_all_kernels() {
         let (_, s) = fig15();
         let txt = render_ascii(&s, 60);
-        for name in ["rgbToGray", "IIRFilter", "GaussianFilter",
-                     "GradientOperation", "Threshold"] {
+        for name in [
+            "rgbToGray",
+            "IIRFilter",
+            "GaussianFilter",
+            "GradientOperation",
+            "Threshold",
+        ] {
             assert!(txt.contains(name), "{name} missing");
         }
     }

@@ -17,12 +17,18 @@
 //!   compilation exactly once at build; batch, paced-serve, and
 //!   ROI-driven jobs then stream through it with zero recompilation —
 //!   the amortization that turns the paper's fusion win into sustained
-//!   600–1000 fps throughput. (The old one-shot `run_*` entrypoints
-//!   survive as deprecated shims over a throwaway engine.)
+//!   600–1000 fps throughput.
+//!
+//! Execution is backend-pluggable ([`exec`]): `Backend::Pjrt` dispatches
+//! the AOT artifact chain; `Backend::Cpu` runs the same engine against
+//! native executors — the fused single-pass `FusedCpu` (the paper's
+//! fusion transformation reproduced on the host, rolling scratch from a
+//! zero-steady-state-allocation buffer pool) or the materializing
+//! `StagedCpu` baseline — so the full path runs and is tested offline.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
-//! graphs once; everything here loads `artifacts/*.hlo.txt` via the `xla`
-//! crate (PJRT CPU client).
+//! graphs once; the PJRT backend loads `artifacts/*.hlo.txt` via the
+//! `xla` crate (PJRT CPU client).
 
 pub mod bench_util;
 pub mod config;
@@ -30,6 +36,7 @@ pub mod coordinator;
 pub mod cpu_ref;
 pub mod engine;
 pub mod error;
+pub mod exec;
 pub mod fusion;
 pub mod gpusim;
 pub mod prop;

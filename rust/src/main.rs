@@ -2,12 +2,17 @@
 //!
 //! ```text
 //! kfuse plan     [--device k20|c1060|gtx750ti] [--input 256x256x1000]
-//! kfuse run      [--mode full|two|none] [--size 256] [--frames 64]
-//!                [--box 32x32x8] [--workers N] [--markers M]
-//! kfuse serve    [--fps 600] [--mode full] [--size 256] [--frames 256]
+//! kfuse run      [--mode full|two|none] [--backend pjrt|cpu] [--size 256]
+//!                [--frames 64] [--box 32x32x8] [--workers N] [--markers M]
+//! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
+//!                [--size 256] [--frames 256]
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
+//!
+//! `--backend cpu` swaps the PJRT artifact chain for the native CPU
+//! executors (fused single pass under `--mode full`), so `run`/`serve`
+//! work on hosts without `artifacts/`.
 //!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
@@ -19,7 +24,7 @@
 
 use std::sync::Arc;
 
-use kfuse::config::{FusionMode, RunConfig};
+use kfuse::config::{Backend, FusionMode, RunConfig};
 use kfuse::coordinator;
 use kfuse::engine::{Engine, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -114,6 +119,9 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(m) = args.get("mode") {
         cfg.mode = FusionMode::parse(m)?;
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
     if let Some(b) = args.get("box") {
         let (x, y, t) = parse_dims3(b)?;
         cfg.box_dims = BoxDims::new(x, y, t);
@@ -163,8 +171,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.roi_only = args.get("roi").map(|v| v == "true" || v == "1")
         .unwrap_or(cfg.roi_only);
     println!(
-        "run: {} | {}x{} x {} frames | box {}x{}x{} | {} workers{}",
+        "run: {} on {} | {}x{} x {} frames | box {}x{}x{} | {} workers{}",
         cfg.mode.name(),
+        cfg.backend.name(),
         cfg.frame_size,
         cfg.frame_size,
         cfg.frames,
@@ -205,9 +214,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let (clip, _) = coordinator::synth_clip(&cfg, 42);
     println!(
-        "serve: {} fps ingest | {} | {} frames",
+        "serve: {} fps ingest | {} on {} | {} frames",
         cfg.fps,
         cfg.mode.name(),
+        cfg.backend.name(),
         cfg.frames
     );
     let mut engine = Engine::builder().config(cfg.clone()).build()?;

@@ -103,8 +103,7 @@ pub fn connected_components(
 mod tests {
     use super::*;
 
-    fn frame_with_blob(h: usize, w: usize, i0: usize, j0: usize,
-                       size: usize) -> Vec<f32> {
+    fn frame_with_blob(h: usize, w: usize, i0: usize, j0: usize, size: usize) -> Vec<f32> {
         let mut f = vec![0.0; h * w];
         for i in i0..i0 + size {
             for j in j0..j0 + size {

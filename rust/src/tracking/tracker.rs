@@ -23,8 +23,7 @@ pub struct Track {
 
 impl Track {
     /// Current ROI (search window) centered on the predicted position.
-    pub fn roi(&self, half: usize, h: usize, w: usize)
-               -> (usize, usize, usize, usize) {
+    pub fn roi(&self, half: usize, h: usize, w: usize) -> (usize, usize, usize, usize) {
         let (pi, pj) = self.filter.predict_pos();
         let i0 = (pi as isize - half as isize).max(0) as usize;
         let j0 = (pj as isize - half as isize).max(0) as usize;
@@ -78,8 +77,7 @@ impl Tracker {
 
     /// Acquire initial tracks from the first binarized frame.
     pub fn acquire(&mut self, frame: &[f32], expected: usize) {
-        let mut blobs = connected_components(frame, self.h, self.w,
-                                             self.cfg.min_mass);
+        let mut blobs = connected_components(frame, self.h, self.w, self.cfg.min_mass);
         blobs.truncate(expected);
         for b in blobs {
             self.tracks.push(Track {
@@ -98,8 +96,7 @@ impl Tracker {
     /// nearest-neighbor, injective (a blob is consumed by the closest
     /// track that claims it first, ordered by distance).
     pub fn step(&mut self, frame: &[f32]) {
-        let blobs = connected_components(frame, self.h, self.w,
-                                         self.cfg.min_mass);
+        let blobs = connected_components(frame, self.h, self.w, self.cfg.min_mass);
         // Candidate (track, blob, dist) pairs gated by ROI.
         let mut cands: Vec<(usize, usize, f32)> = Vec::new();
         for (ti, tr) in self.tracks.iter().enumerate() {
@@ -180,8 +177,7 @@ impl Tracker {
 mod tests {
     use super::*;
 
-    fn frame_with_markers(h: usize, w: usize,
-                          centers: &[(f32, f32)]) -> Vec<f32> {
+    fn frame_with_markers(h: usize, w: usize, centers: &[(f32, f32)]) -> Vec<f32> {
         let mut f = vec![0.0; h * w];
         for &(ci, cj) in centers {
             for di in -1i32..=1 {

@@ -72,11 +72,29 @@ impl Video {
         out_box: BoxDims,
         halo: Radii,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.extract_box_into(t0, i0, j0, out_box, halo, &mut out);
+        out
+    }
+
+    /// [`Video::extract_box`] into a caller-owned buffer, so a worker's
+    /// staging buffer is reused across boxes (zero staging allocations in
+    /// steady state). The buffer is cleared first.
+    pub fn extract_box_into(
+        &self,
+        t0: usize,
+        i0: usize,
+        j0: usize,
+        out_box: BoxDims,
+        halo: Radii,
+        out: &mut Vec<f32>,
+    ) {
         let bt = out_box.t + halo.dt;
         let bh = out_box.x + 2 * halo.dx;
         let bw = out_box.y + 2 * halo.dy;
         let c = self.c;
-        let mut out = Vec::with_capacity(bt * bh * bw * c);
+        out.clear();
+        out.reserve(bt * bh * bw * c);
         let j_start = j0 as isize - halo.dy as isize;
         for dt in 0..bt {
             let t = (t0 as isize - halo.dt as isize + dt as isize)
@@ -106,10 +124,12 @@ impl Video {
                 }
             }
         }
-        out
     }
 
     /// Write an output box (t×x×y single-channel) back at its origin.
+    /// Hot path: boxes are always fully in-bounds, so each `(dt, di)` row
+    /// is one contiguous `copy_from_slice`, mirroring the `extract_box`
+    /// fast path.
     pub fn write_box(
         &mut self,
         t0: usize,
@@ -120,13 +140,12 @@ impl Video {
     ) {
         assert_eq!(self.c, 1);
         assert_eq!(vals.len(), out_box.pixels());
-        let mut k = 0;
         for dt in 0..out_box.t {
             for di in 0..out_box.x {
-                for dj in 0..out_box.y {
-                    self.set(t0 + dt, i0 + di, j0 + dj, 0, vals[k]);
-                    k += 1;
-                }
+                let k = (dt * out_box.x + di) * out_box.y;
+                let base = self.idx(t0 + dt, i0 + di, j0, 0);
+                self.data[base..base + out_box.y]
+                    .copy_from_slice(&vals[k..k + out_box.y]);
             }
         }
     }
@@ -238,6 +257,56 @@ mod tests {
     }
 
     #[test]
+    fn write_box_nontrivial_pattern_exact_and_contained() {
+        // Row-wise fast path: a distinct value per cell must land exactly
+        // at its (dt, di, dj) target, and nothing outside the box may be
+        // touched (the surrounding canvas keeps its sentinel).
+        let mut v = Video::zeros(5, 9, 7, 1);
+        v.data.fill(-1.0);
+        let dims = BoxDims::new(3, 4, 2);
+        let (t0, i0, j0) = (2, 3, 1);
+        let vals: Vec<f32> =
+            (0..dims.pixels()).map(|k| (k * 7 % 251) as f32).collect();
+        v.write_box(t0, i0, j0, dims, &vals);
+        let mut k = 0;
+        for dt in 0..dims.t {
+            for di in 0..dims.x {
+                for dj in 0..dims.y {
+                    assert_eq!(
+                        v.get(t0 + dt, i0 + di, j0 + dj, 0),
+                        vals[k],
+                        "({dt},{di},{dj})"
+                    );
+                    k += 1;
+                }
+            }
+        }
+        let inside = |t: usize, i: usize, j: usize| {
+            (t0..t0 + dims.t).contains(&t)
+                && (i0..i0 + dims.x).contains(&i)
+                && (j0..j0 + dims.y).contains(&j)
+        };
+        for t in 0..v.t {
+            for i in 0..v.h {
+                for j in 0..v.w {
+                    if !inside(t, i, j) {
+                        assert_eq!(v.get(t, i, j, 0), -1.0, "({t},{i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extract_box_into_reuses_the_buffer() {
+        let v = Video::zeros(2, 4, 4, 1);
+        let mut buf = vec![9.0; 3];
+        v.extract_box_into(1, 1, 1, BoxDims::new(2, 2, 1), Radii::new(1, 1, 1), &mut buf);
+        assert_eq!(buf.len(), 2 * 4 * 4);
+        assert!(buf.iter().all(|&x| x == 0.0), "buffer was cleared first");
+    }
+
+    #[test]
     fn cut_boxes_covers_grid_exactly() {
         let tasks = cut_boxes(64, 64, 16, BoxDims::new(32, 32, 8));
         assert_eq!(tasks.len(), 2 * 2 * 2);
@@ -262,8 +331,14 @@ mod extract_prop_tests {
     use crate::prop::{run_prop, Gen};
 
     /// Naive per-pixel reference for extract_box.
-    fn extract_naive(v: &Video, t0: usize, i0: usize, j0: usize,
-                     out_box: BoxDims, halo: Radii) -> Vec<f32> {
+    fn extract_naive(
+        v: &Video,
+        t0: usize,
+        i0: usize,
+        j0: usize,
+        out_box: BoxDims,
+        halo: Radii,
+    ) -> Vec<f32> {
         let bt = out_box.t + halo.dt;
         let bh = out_box.x + 2 * halo.dx;
         let bw = out_box.y + 2 * halo.dy;

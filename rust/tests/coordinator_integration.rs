@@ -1,25 +1,26 @@
 //! End-to-end coordinator integration: synth clip → boxes → warm engine
 //! workers → binarized frames → tracking, across all three fusion arms.
 //!
-//! Requires `artifacts/` (run `make artifacts`); tests SKIP with a
-//! message otherwise so the suite stays green on a fresh checkout.
+//! Runs against the PJRT artifact backend when `artifacts/` is present
+//! (run `make artifacts`), and falls back to `Backend::Cpu` otherwise —
+//! the full Engine → queue → worker → result-router path is exercised
+//! either way, never skipped.
 
 use std::sync::Arc;
 
-use kfuse::config::{FusionMode, RunConfig};
+use kfuse::config::{Backend, FusionMode, RunConfig};
 use kfuse::coordinator::synth_clip;
 use kfuse::engine::{Engine, Policy, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
 
-fn artifacts_present() -> bool {
-    let present = std::path::Path::new("artifacts/manifest.tsv").exists();
-    if !present {
-        eprintln!(
-            "skipping: artifacts/manifest.tsv not present \
-             (run `make artifacts` to enable this test)"
-        );
+/// PJRT when the artifacts exist, native CPU executors otherwise.
+fn backend() -> Backend {
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        Backend::Pjrt
+    } else {
+        eprintln!("artifacts/ not present: running on Backend::Cpu");
+        Backend::Cpu
     }
-    present
 }
 
 fn small_cfg(mode: FusionMode) -> RunConfig {
@@ -30,6 +31,7 @@ fn small_cfg(mode: FusionMode) -> RunConfig {
         box_dims: BoxDims::new(16, 16, 8),
         workers: 2,
         markers: 1,
+        backend: backend(),
         ..RunConfig::default()
     }
 }
@@ -40,9 +42,6 @@ fn engine(mode: FusionMode) -> Engine {
 
 #[test]
 fn all_arms_produce_identical_binaries() {
-    if !artifacts_present() {
-        return;
-    }
     // The fusion arms are semantically equivalent: same clip, same output.
     let cfg = small_cfg(FusionMode::Full);
     let (clip, _) = synth_clip(&cfg, 7);
@@ -56,9 +55,6 @@ fn all_arms_produce_identical_binaries() {
 
 #[test]
 fn fusion_reduces_dispatches_and_traffic() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = small_cfg(FusionMode::Full);
     let (clip, _) = synth_clip(&cfg, 9);
     let clip = Arc::new(clip);
@@ -71,15 +67,13 @@ fn fusion_reduces_dispatches_and_traffic() {
 
 #[test]
 fn tracker_follows_synthetic_markers() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = RunConfig {
         frame_size: 128,
         frames: 32,
         markers: 2,
         box_dims: BoxDims::new(32, 32, 8),
         workers: 2,
+        backend: backend(),
         ..RunConfig::default()
     };
     let mut engine = Engine::from_config(cfg).unwrap();
@@ -93,9 +87,6 @@ fn tracker_follows_synthetic_markers() {
 
 #[test]
 fn binary_output_is_binary_and_nonempty() {
-    if !artifacts_present() {
-        return;
-    }
     let mut engine = engine(FusionMode::Full);
     let rep = engine.batch_synth(3).unwrap();
     let on = rep.binary.data.iter().filter(|&&v| v == 255.0).count();
@@ -108,9 +99,6 @@ fn binary_output_is_binary_and_nonempty() {
 
 #[test]
 fn serve_mode_reports_and_bounds_queue() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = RunConfig {
         frame_size: 64,
         frames: 32,
@@ -119,6 +107,7 @@ fn serve_mode_reports_and_bounds_queue() {
         markers: 1,
         box_dims: BoxDims::new(16, 16, 8),
         queue_depth: 8,
+        backend: backend(),
         ..RunConfig::default()
     };
     let (clip, _) = synth_clip(&cfg, 21);
@@ -146,9 +135,6 @@ fn serve_mode_reports_and_bounds_queue() {
 
 #[test]
 fn partial_temporal_tail_is_dropped_cleanly() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = RunConfig {
         frames: 20, // 2 full boxes of t=8, 4-frame tail
         ..small_cfg(FusionMode::Full)
@@ -172,9 +158,6 @@ fn invalid_config_is_rejected_before_work() {
 
 #[test]
 fn mismatched_clip_geometry_is_rejected_per_job() {
-    if !artifacts_present() {
-        return;
-    }
     // The engine is built for 16x16 boxes; a 24x24 clip can't be tiled.
     let mut engine = engine(FusionMode::Full);
     let clip = Arc::new(kfuse::video::Video::zeros(16, 24, 24, 4));
@@ -183,15 +166,13 @@ fn mismatched_clip_geometry_is_rejected_per_job() {
 
 #[test]
 fn roi_mode_processes_fewer_boxes_same_tracks() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = RunConfig {
         frame_size: 128,
         frames: 32,
         markers: 2,
         box_dims: BoxDims::new(32, 32, 8),
         workers: 1,
+        backend: backend(),
         ..RunConfig::default()
     };
     let (clip, scfg) = synth_clip(&cfg, 13);

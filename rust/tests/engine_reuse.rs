@@ -1,16 +1,18 @@
-//! Engine reuse contract: compiled PJRT executables survive across jobs.
+//! Engine reuse contract: build-time state survives across jobs.
 //!
 //! The whole point of the persistent session API is that `build()` pays
-//! the compilation cost exactly once; every later job runs warm. These
-//! tests pin that down via the pool-wide compile counter in
-//! `engine.stats().compiles`.
+//! the one-time cost exactly once; every later job runs warm. Two
+//! counters in `engine.stats()` pin that down: `compiles` (PJRT
+//! executables, settles at build) and `pool_allocs` (the CPU backends'
+//! scratch pool, settles at build thanks to worker prewarm).
 //!
-//! Requires `artifacts/` (run `make artifacts`); tests SKIP with a
-//! message otherwise.
+//! The PJRT tests require `artifacts/` (run `make artifacts`) and SKIP
+//! with a message otherwise; the `Backend::Cpu` tests always run — that
+//! is the point of the CPU backend.
 
 use std::sync::Arc;
 
-use kfuse::config::{FusionMode, RunConfig};
+use kfuse::config::{Backend, FusionMode, RunConfig};
 use kfuse::coordinator::synth_clip;
 use kfuse::engine::{Engine, Policy, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -99,4 +101,104 @@ fn mixed_job_kinds_share_the_warm_pool() {
     );
     assert_eq!(stats.dropped, 0, "Block-policy serve is lossless");
     engine.shutdown().unwrap();
+}
+
+fn cpu_cfg(workers: usize, mode: FusionMode) -> RunConfig {
+    RunConfig {
+        backend: Backend::Cpu,
+        mode,
+        ..cfg(workers)
+    }
+}
+
+/// The engine-reuse contract on `Backend::Cpu`, un-skipped offline: the
+/// full Engine → queue → worker → result-router path with zero PJRT
+/// compiles and a scratch pool that warms at build and stays FLAT across
+/// jobs (zero steady-state allocations per box).
+#[test]
+fn cpu_backend_warm_engine_reuses_pool_across_jobs() {
+    let workers = 2;
+    let mut engine = Engine::from_config(cpu_cfg(workers, FusionMode::Full))
+        .unwrap();
+    // No artifacts, no PJRT, no compilation — ever.
+    assert_eq!(engine.stats().compiles, 0);
+    // Each fused worker prewarmed its scratch (carry plane + line
+    // buffers) at spawn.
+    let warm = engine.stats().pool_allocs;
+    assert_eq!(warm, (workers * 2) as u64);
+
+    let (clip, _) = synth_clip(engine.config(), 31);
+    let clip = Arc::new(clip);
+    let first = engine.batch(clip.clone()).unwrap();
+    let second = engine.batch(clip.clone()).unwrap();
+
+    // Warm-pool contracts: zero recompiles AND zero new scratch
+    // allocations across consecutive jobs.
+    assert_eq!(engine.stats().compiles, 0);
+    assert_eq!(
+        engine.stats().pool_allocs,
+        warm,
+        "steady-state jobs must not allocate pool scratch"
+    );
+    // And the jobs are bit-identical.
+    assert_eq!(first.binary.data, second.binary.data);
+    assert_eq!(first.metrics.boxes, second.metrics.boxes);
+
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.boxes, first.metrics.boxes + second.metrics.boxes);
+    engine.shutdown().unwrap();
+}
+
+/// batch / lossless serve / ROI all share the CPU warm pool, offline.
+#[test]
+fn cpu_backend_mixed_job_kinds_share_the_warm_pool() {
+    let mut engine =
+        Engine::from_config(cpu_cfg(1, FusionMode::Full)).unwrap();
+    let warm = engine.stats().pool_allocs;
+    let (clip, _) = synth_clip(engine.config(), 57);
+    let clip = Arc::new(clip);
+
+    engine.batch(clip.clone()).unwrap();
+    engine
+        .serve(
+            clip.clone(),
+            ServeOpts {
+                fps: 5000.0,
+                policy: Policy::Block, // lossless: every box executes
+            },
+        )
+        .unwrap();
+    engine.roi(clip).unwrap();
+
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 3);
+    assert_eq!(stats.compiles, 0);
+    assert_eq!(
+        stats.pool_allocs, warm,
+        "batch/serve/roi jobs must all reuse the build-time scratch"
+    );
+    assert_eq!(stats.dropped, 0, "Block-policy serve is lossless");
+    engine.shutdown().unwrap();
+}
+
+/// The staged CPU arm exercises the same engine path (it allocates its
+/// materialized intermediates outside the pool — that is its role as the
+/// unfused traffic baseline).
+#[test]
+fn cpu_backend_staged_arm_matches_fused_arm() {
+    let (clip, _) = synth_clip(&cpu_cfg(1, FusionMode::Full), 7);
+    let clip = Arc::new(clip);
+    let mut fused =
+        Engine::from_config(cpu_cfg(1, FusionMode::Full)).unwrap();
+    let mut staged =
+        Engine::from_config(cpu_cfg(1, FusionMode::None)).unwrap();
+    let a = fused.batch(clip.clone()).unwrap();
+    let b = staged.batch(clip).unwrap();
+    // Fusion changes execution, never results: bit-identical output.
+    assert_eq!(a.binary.data, b.binary.data);
+    // The unfused plan pays 5 stage dispatches + detect per box vs 1 + 1.
+    assert_eq!(b.metrics.dispatches, 3 * a.metrics.dispatches);
+    fused.shutdown().unwrap();
+    staged.shutdown().unwrap();
 }

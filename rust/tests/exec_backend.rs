@@ -1,0 +1,110 @@
+//! CPU execution backends vs the `cpu_ref` oracle, through the same
+//! staging path the scheduler uses (`extract_box_into` → `Executor`).
+//!
+//! The contract: `FusedCpu` (single tiled pass, rolling scratch) is
+//! bit-identical to `StagedCpu` (materializing kernel-by-kernel chain) —
+//! which is itself pinned to `cpu_ref::pipeline` — over randomized clip
+//! shapes, box geometries, thresholds, and box origins, INCLUDING boxes
+//! whose halos hang over the frame border and read edge-replicated
+//! (clamped) pixels.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use kfuse::config::FusionMode;
+use kfuse::coordinator::scheduler::{execute_box, BoxJob};
+use kfuse::coordinator::ExecutionPlan;
+use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::prop::{run_prop, Gen};
+use kfuse::video::{BoxTask, Video};
+
+fn random_clip(g: &mut Gen, t: usize, h: usize, w: usize) -> Video {
+    let mut v = Video::zeros(t, h, w, 4);
+    for x in v.data.iter_mut() {
+        *x = g.f32_in(0.0, 255.0);
+    }
+    v
+}
+
+#[test]
+fn prop_fused_equals_staged_including_clamped_borders() {
+    let fused = FusedCpu::new(BufferPool::shared());
+    let staged = StagedCpu::new();
+    run_prop("FusedCpu==StagedCpu (borders)", 50, |g: &mut Gen| {
+        let bx = g.usize_in(2, 10); // output box is square (paper eq 4)
+        let bt = g.usize_in(1, 4);
+        // Frames can be as small as one box, so corner boxes clamp on
+        // BOTH spatial sides and the first temporal box clamps its
+        // dt-halo into frame 0.
+        let h = bx + g.usize_in(0, 6);
+        let w = bx + g.usize_in(0, 6);
+        let t = bt + g.usize_in(1, 3);
+        let clip = Arc::new(random_clip(g, t, h, w));
+        let plan = ExecutionPlan::resolve(
+            FusionMode::Full,
+            BoxDims::new(bx, bx, bt),
+            g.bool(),
+        );
+        let threshold = g.f32_in(0.0, 400.0);
+        let job = BoxJob {
+            job_id: 1,
+            task: BoxTask {
+                id: 0,
+                // Bias origins toward the borders (0 and the max) so the
+                // clamped paths are exercised constantly.
+                t0: *g.choose(&[0, t - bt]),
+                i0: *g.choose(&[0, h - bx]),
+                j0: *g.choose(&[0, w - bx]),
+                dims: plan.box_dims,
+            },
+            clip,
+            clip_t0: 0,
+            enqueued: Instant::now(),
+        };
+        let mut staging = Vec::new();
+        let a = execute_box(&fused, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        let b = execute_box(&staged, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        assert_eq!(
+            a.binary, b.binary,
+            "box t0={} i0={} j0={} dims={:?} th={threshold}",
+            job.task.t0, job.task.i0, job.task.j0, plan.box_dims
+        );
+        assert_eq!(a.detect, b.detect);
+        assert_eq!(a.binary.len(), plan.box_dims.pixels());
+        assert!(a.binary.iter().all(|&v| v == 0.0 || v == 255.0));
+    });
+}
+
+#[test]
+fn executor_names_and_detect_gating() {
+    let plan_no_detect = ExecutionPlan::resolve(
+        FusionMode::Full,
+        BoxDims::new(8, 8, 2),
+        false,
+    );
+    let fused = FusedCpu::new(BufferPool::shared());
+    assert_eq!(fused.name(), "fused_cpu");
+    assert_eq!(StagedCpu::new().name(), "staged_cpu");
+    let mut g = Gen::new(9);
+    let clip = Arc::new(random_clip(&mut g, 4, 8, 8));
+    let job = BoxJob {
+        job_id: 1,
+        task: BoxTask {
+            id: 0,
+            t0: 0,
+            i0: 0,
+            j0: 0,
+            dims: plan_no_detect.box_dims,
+        },
+        clip,
+        clip_t0: 0,
+        enqueued: Instant::now(),
+    };
+    let mut staging = Vec::new();
+    let r = execute_box(&fused, &plan_no_detect, 96.0, &job, &mut staging)
+        .unwrap();
+    assert!(r.detect.is_none(), "plan without detect stage");
+}
