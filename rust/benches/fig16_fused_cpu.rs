@@ -1,14 +1,25 @@
-//! Fig 16 (ours) — fused single-pass CPU execution vs the staged
-//! kernel-by-kernel baseline, on the exact per-box hot path the engine's
-//! workers run (`scheduler::execute_box`).
+//! Fig 16 (ours) — the CPU executor matrix on the exact per-box hot path
+//! the engine's workers run (`scheduler::execute_box`): staged
+//! kernel-by-kernel baseline vs Two-Fusion (one materialized
+//! intermediate) vs the fused single pass, the fused executors swept
+//! over intra-box band thread counts.
 //!
-//! Workload: 64×64×16 synthetic clip cut into 16×16×8 boxes (32 boxes).
-//! `StagedCpu` materializes every intermediate at full box size — the
-//! unfused global-memory traffic pattern; `FusedCpu` keeps everything in
-//! an IIR carry plane plus three rolling stencil lines. The paper's
-//! claim (Figs 10/11/16) is that removing those round-trips buys 2–3×;
-//! this bench reproduces it on the host CPU and seeds the repo's perf
-//! trajectory by emitting `BENCH_fused_cpu.json`.
+//! Default workload: 128×128×16 synthetic clip cut into 32×32×8 boxes
+//! (32 boxes). `StagedCpu` materializes every intermediate at full box
+//! size — the unfused global-memory traffic pattern; `TwoFusedCpu`
+//! spills exactly one intermediate ({K1,K2} → {K3..K5}); `FusedCpu`
+//! keeps everything in an IIR carry slab plus three rolling stencil
+//! lines, optionally split into row bands across threads. The paper's
+//! claim (Figs 10/11/16) is that removing the round-trips buys 2–3×;
+//! this bench reproduces it on the host and emits one JSON record per
+//! (executor, threads) cell to `BENCH_fused_cpu.json` — the entry point
+//! shared by local runs and the CI `bench-smoke` regression gate.
+//!
+//! ```text
+//! cargo bench --bench fig16_fused_cpu -- \
+//!     [--frame 128] [--frames 16] [--box 32x32x8] \
+//!     [--threads 1,2,4] [--partition staged,two,fused]
+//! ```
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -17,13 +28,20 @@ use kfuse::bench_util::{header, row, time_fn};
 use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::ExecutionPlan;
-use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu};
+use kfuse::exec::{
+    BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu,
+};
 use kfuse::fusion::halo::BoxDims;
 use kfuse::video::{cut_boxes, generate, SynthConfig};
 
-const FRAME: usize = 64;
-const FRAMES: usize = 16;
-const BOX: BoxDims = BoxDims::new(16, 16, 8);
+/// One measured (executor, threads) cell.
+struct Cell {
+    executor: &'static str,
+    threads: usize,
+    ns_per_box: f64,
+    /// Intermediate/scratch bytes touched per box (the traffic story).
+    bytes_per_box: u64,
+}
 
 fn sweep(
     exec: &dyn Executor,
@@ -37,17 +55,54 @@ fn sweep(
     }
 }
 
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn parse_box(s: &str) -> BoxDims {
+    let p: Vec<usize> = s
+        .split('x')
+        .map(|v| v.parse().expect("--box AxBxC"))
+        .collect();
+    assert_eq!(p.len(), 3, "--box AxBxC");
+    BoxDims::new(p[0], p[1], p[2])
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let frame: usize = flag(&args, "--frame")
+        .map_or(128, |v| v.parse().expect("--frame N"));
+    let frames: usize = flag(&args, "--frames")
+        .map_or(16, |v| v.parse().expect("--frames N"));
+    let bx = flag(&args, "--box")
+        .map_or_else(|| BoxDims::new(32, 32, 8), |v| parse_box(&v));
+    let threads: Vec<usize> = flag(&args, "--threads")
+        .map_or_else(
+            || vec![1, 2],
+            |v| {
+                v.split(',')
+                    .map(|t| t.parse().expect("--threads N,N,..."))
+                    .collect()
+            },
+        );
+    let partitions: Vec<String> = flag(&args, "--partition")
+        .map_or_else(
+            || vec!["staged".into(), "two".into(), "fused".into()],
+            |v| v.split(',').map(str::to_string).collect(),
+        );
+
     let clip = Arc::new(generate(&SynthConfig {
-        frames: FRAMES,
-        height: FRAME,
-        width: FRAME,
+        frames,
+        height: frame,
+        width: frame,
         markers: 2,
         seed: 16,
         ..SynthConfig::default()
     }));
-    let plan = ExecutionPlan::resolve(FusionMode::Full, BOX, true);
-    let jobs: Vec<BoxJob> = cut_boxes(FRAME, FRAME, FRAMES, BOX)
+    let jobs: Vec<BoxJob> = cut_boxes(frame, frame, frames, bx)
         .into_iter()
         .map(|task| BoxJob {
             job_id: 1,
@@ -58,67 +113,159 @@ fn main() {
         })
         .collect();
     let n = jobs.len() as f64;
-
-    let pool = BufferPool::shared();
-    let fused = FusedCpu::new(pool.clone());
-    fused.prepare(&plan).unwrap();
-    let staged = StagedCpu::new();
+    let full = ExecutionPlan::resolve(FusionMode::Full, bx, true);
+    let two = ExecutionPlan::resolve(FusionMode::Two, bx, true);
+    let none = ExecutionPlan::resolve(FusionMode::None, bx, true);
+    let din = bx.with_halo(full.halo);
     let mut staging = Vec::new();
+    let pool = BufferPool::shared();
+    let mut cells: Vec<Cell> = Vec::new();
 
-    let ts = time_fn(3, 25, || sweep(&staged, &plan, &jobs, &mut staging));
-    let warm_allocs = pool.allocations();
-    let tf = time_fn(3, 25, || sweep(&fused, &plan, &jobs, &mut staging));
-    let steady_allocs = pool.allocations() - warm_allocs;
-
-    let din = BOX.with_halo(plan.halo);
-    let staged_bytes = StagedCpu::intermediate_bytes(din.t, din.x, din.y);
-    let fused_bytes = FusedCpu::scratch_bytes(din.x, din.y);
-    let staged_ns = ts.median * 1e9 / n;
-    let fused_ns = tf.median * 1e9 / n;
-    let speedup = staged_ns / fused_ns;
+    for part in &partitions {
+        match part.as_str() {
+            "staged" => {
+                let exec = StagedCpu::new();
+                let t = time_fn(3, 25, || {
+                    sweep(&exec, &none, &jobs, &mut staging)
+                });
+                cells.push(Cell {
+                    executor: "staged_cpu",
+                    threads: 1,
+                    ns_per_box: t.median * 1e9 / n,
+                    bytes_per_box: StagedCpu::intermediate_bytes(
+                        din.t, din.x, din.y,
+                    ),
+                });
+            }
+            "two" => {
+                for &th in &threads {
+                    let exec = TwoFusedCpu::with_threads(pool.clone(), th);
+                    exec.prepare(&two).unwrap();
+                    let t = time_fn(3, 25, || {
+                        sweep(&exec, &two, &jobs, &mut staging)
+                    });
+                    cells.push(Cell {
+                        executor: "two_fused_cpu",
+                        threads: th,
+                        ns_per_box: t.median * 1e9 / n,
+                        bytes_per_box: TwoFusedCpu::intermediate_bytes(
+                            din.t, din.x, din.y,
+                        ),
+                    });
+                }
+            }
+            "fused" => {
+                for &th in &threads {
+                    let exec = FusedCpu::with_threads(pool.clone(), th);
+                    exec.prepare(&full).unwrap();
+                    let t = time_fn(3, 25, || {
+                        sweep(&exec, &full, &jobs, &mut staging)
+                    });
+                    cells.push(Cell {
+                        executor: "fused_cpu",
+                        threads: th,
+                        ns_per_box: t.median * 1e9 / n,
+                        bytes_per_box: FusedCpu::scratch_bytes_banded(
+                            din.x, din.y, th,
+                        ),
+                    });
+                }
+            }
+            other => panic!(
+                "unknown --partition '{other}' (expected staged|two|fused)"
+            ),
+        }
+    }
 
     header(
         "Fig 16 (measured, this host)",
-        "staged vs fused CPU box execution, 64x64x16 clip, 16x16x8 boxes",
+        "CPU executor matrix: staged vs two-fused vs fused x band threads",
     );
     row(&[
-        format!("{:>12}", "executor"),
+        format!("{:>14}", "executor"),
+        format!("{:>8}", "threads"),
         format!("{:>12}", "ns/box"),
-        format!("{:>18}", "intermediates B/box"),
-        format!("{:>12}", "pool allocs"),
+        format!("{:>18}", "intermediates B"),
     ]);
-    row(&[
-        format!("{:>12}", staged.name()),
-        format!("{staged_ns:>12.0}"),
-        format!("{staged_bytes:>18}"),
-        format!("{:>12}", "n/a"),
-    ]);
-    row(&[
-        format!("{:>12}", fused.name()),
-        format!("{fused_ns:>12.0}"),
-        format!("{fused_bytes:>18}"),
-        format!("{steady_allocs:>12}"),
-    ]);
-    println!(
-        "fused vs staged speedup: {speedup:.2}x (paper fusion claim: 2-3x)"
-    );
-    if speedup < 2.0 {
-        println!("WARNING: speedup below the paper's 2x floor on this host");
+    for c in &cells {
+        row(&[
+            format!("{:>14}", c.executor),
+            format!("{:>8}", c.threads),
+            format!("{:>12.0}", c.ns_per_box),
+            format!("{:>18}", c.bytes_per_box),
+        ]);
     }
 
+    let find = |name: &str, th: usize| {
+        cells
+            .iter()
+            .find(|c| c.executor == name && c.threads == th)
+            .map(|c| c.ns_per_box)
+    };
+    let staged_ns = find("staged_cpu", 1);
+    let fused1_ns = find("fused_cpu", 1);
+    // Fused-vs-staged: the paper's fusion claim, and the CI tripwire.
+    let speedup = match (staged_ns, fused1_ns) {
+        (Some(s), Some(f)) => s / f,
+        _ => 0.0,
+    };
+    // Best parallel fused vs serial fused: the band-threading win.
+    let best_parallel = cells
+        .iter()
+        .filter(|c| c.executor == "fused_cpu" && c.threads > 1)
+        .map(|c| c.ns_per_box)
+        .fold(f64::INFINITY, f64::min);
+    let speedup_parallel = match fused1_ns {
+        Some(f) if best_parallel.is_finite() => f / best_parallel,
+        _ => 0.0,
+    };
+    let speedup_two = match (staged_ns, find("two_fused_cpu", 1)) {
+        (Some(s), Some(t)) => s / t,
+        _ => 0.0,
+    };
+    if speedup > 0.0 {
+        println!(
+            "fused(1T) vs staged speedup: {speedup:.2}x \
+             (paper fusion claim: 2-3x)"
+        );
+        if speedup < 2.0 {
+            println!(
+                "WARNING: speedup below the paper's 2x floor on this host"
+            );
+        }
+    }
+    if speedup_two > 0.0 {
+        println!("two-fused(1T) vs staged speedup: {speedup_two:.2}x");
+    }
+    if speedup_parallel > 0.0 {
+        println!(
+            "fused parallel vs serial speedup: {speedup_parallel:.2}x \
+             (best of threads>1)"
+        );
+    }
+
+    let cell_json: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "    {{\"executor\": \"{}\", \"threads\": {}, \
+                 \"ns_per_box\": {:.0}, \"intermediate_bytes_per_box\": {}}}",
+                c.executor, c.threads, c.ns_per_box, c.bytes_per_box
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\n  \"workload\": {{\"frame\": {FRAME}, \"frames\": {FRAMES}, \
+        "{{\n  \"workload\": {{\"frame\": {frame}, \"frames\": {frames}, \
          \"box\": [{}, {}, {}], \"boxes\": {}}},\n  \
-         \"staged\": {{\"ns_per_box\": {staged_ns:.0}, \
-         \"intermediate_bytes_per_box\": {staged_bytes}}},\n  \
-         \"fused\": {{\"ns_per_box\": {fused_ns:.0}, \
-         \"scratch_bytes_per_box\": {fused_bytes}, \
-         \"steady_state_pool_allocs\": {steady_allocs}}},\n  \
-         \"speedup\": {speedup:.3}\n}}\n",
-        BOX.x,
-        BOX.y,
-        BOX.t,
+         \"cells\": [\n{}\n  ],\n  \
+         \"speedup\": {speedup:.3},\n  \
+         \"speedup_two_fused\": {speedup_two:.3},\n  \
+         \"speedup_parallel\": {speedup_parallel:.3}\n}}\n",
+        bx.x,
+        bx.y,
+        bx.t,
         jobs.len(),
+        cell_json.join(",\n"),
     );
     std::fs::write("BENCH_fused_cpu.json", &json).unwrap();
     println!("wrote BENCH_fused_cpu.json");

@@ -4,7 +4,8 @@ use crate::fusion::halo::BoxDims;
 use crate::fusion::traffic::InputDims;
 use crate::{Error, Result};
 
-/// Which fusion arm the coordinator executes (the paper's evaluation arms).
+/// Which fusion arm the coordinator executes (the paper's evaluation
+/// arms, plus `Auto` which lets the planner's DP solve pick the arm).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FusionMode {
     /// "No Fusion": five separate executables, host round-trips between.
@@ -13,6 +14,11 @@ pub enum FusionMode {
     Two,
     /// "Full Fusion": one {K1..K5} megakernel.
     Full,
+    /// Planner-selected: `ExecutionPlan::resolve` solves the Fig 5
+    /// partition model with the interval DP and executes whichever arm
+    /// the optimal partition maps to (`ExecutionPlan::effective` records
+    /// the outcome).
+    Auto,
 }
 
 impl FusionMode {
@@ -21,8 +27,9 @@ impl FusionMode {
             "none" | "no" => Ok(FusionMode::None),
             "two" => Ok(FusionMode::Two),
             "full" => Ok(FusionMode::Full),
+            "auto" | "plan" => Ok(FusionMode::Auto),
             _ => Err(Error::Config(format!(
-                "unknown fusion mode '{s}' (expected none|two|full)"
+                "unknown fusion mode '{s}' (expected none|two|full|auto)"
             ))),
         }
     }
@@ -32,6 +39,7 @@ impl FusionMode {
             FusionMode::None => "No Fusion",
             FusionMode::Two => "Two Fusion",
             FusionMode::Full => "Full Fusion",
+            FusionMode::Auto => "Auto (DP-planned)",
         }
     }
 }
@@ -42,11 +50,11 @@ pub enum Backend {
     /// AOT PJRT artifacts (the measured "GPU" stand-in). Needs
     /// `artifacts/` from `make artifacts`.
     Pjrt,
-    /// Native CPU executors from [`crate::exec`]: `FusionMode::Full`
-    /// lowers to the fused single-pass `FusedCpu`, other arms run the
-    /// kernel-by-kernel `StagedCpu` baseline (so `Two` executes unfused
-    /// here; its dispatch/traffic metrics follow the plan model). Always
-    /// available — no artifacts, no compilation.
+    /// Native CPU executors from [`crate::exec`], selected by the plan's
+    /// partition: `Full` lowers to the fused single-pass `FusedCpu`,
+    /// `Two` to the two-partition `TwoFusedCpu` (one materialized
+    /// intermediate), `None` to the kernel-by-kernel `StagedCpu`
+    /// baseline. Always available — no artifacts, no compilation.
     Cpu,
 }
 
@@ -91,6 +99,12 @@ pub struct RunConfig {
     /// 8 → 59 fps at 256²; EXPERIMENTS.md §Perf). Raise it only for
     /// latency isolation experiments.
     pub workers: usize,
+    /// Threads each CPU worker fans a single box out to (row bands with
+    /// halo-aware overlap; see `exec::bands`). 1 = the serial fused
+    /// pass; N > 1 splits every box into up to N bands on a persistent
+    /// per-worker thread set. Ignored by `Backend::Pjrt` (the PJRT
+    /// client parallelizes internally) and by the staged baseline.
+    pub intra_box_threads: usize,
     /// Binarization threshold.
     pub threshold: f32,
     /// Number of synthetic markers to generate/track.
@@ -116,6 +130,7 @@ impl Default for RunConfig {
             mode: FusionMode::Full,
             box_dims: BoxDims::new(32, 32, 8),
             workers: 1,
+            intra_box_threads: 1,
             threshold: 96.0,
             markers: 4,
             queue_depth: 64,
@@ -150,6 +165,12 @@ impl RunConfig {
         }
         if self.workers == 0 || self.queue_depth == 0 {
             return Err(Error::Config("workers/queue_depth must be > 0".into()));
+        }
+        if self.intra_box_threads == 0 {
+            return Err(Error::Config(
+                "intra_box_threads must be > 0 (1 = serial fused pass)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -186,6 +207,21 @@ mod tests {
         assert_eq!(FusionMode::parse("full").unwrap(), FusionMode::Full);
         assert_eq!(FusionMode::parse("two").unwrap(), FusionMode::Two);
         assert_eq!(FusionMode::parse("none").unwrap(), FusionMode::None);
+        assert_eq!(FusionMode::parse("auto").unwrap(), FusionMode::Auto);
         assert!(FusionMode::parse("half").is_err());
+    }
+
+    #[test]
+    fn zero_intra_box_threads_rejected() {
+        let cfg = RunConfig {
+            intra_box_threads: 0,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig {
+            intra_box_threads: 4,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
     }
 }

@@ -23,6 +23,10 @@ pub struct Metrics {
     pub dropped: AtomicU64,
     /// Per-box latencies, microseconds (mutex: amortized by batching).
     latencies_us: Mutex<Vec<u64>>,
+    /// Cumulative wall nanos per executed partition (CPU backends report
+    /// one entry per fused partition; empty until the first box that
+    /// tracks them).
+    stage_nanos: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -31,7 +35,14 @@ impl Metrics {
     }
 
     #[inline]
-    pub fn record_box(&self, latency: Duration, bytes_in: u64, bytes_out: u64, dispatches: u64) {
+    pub fn record_box(
+        &self,
+        latency: Duration,
+        bytes_in: u64,
+        bytes_out: u64,
+        dispatches: u64,
+        stage_nanos: &[u64],
+    ) {
         self.boxes.fetch_add(1, Ordering::Relaxed);
         self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
         self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
@@ -40,6 +51,15 @@ impl Metrics {
             .lock()
             .unwrap()
             .push(latency.as_micros() as u64);
+        if !stage_nanos.is_empty() {
+            let mut acc = self.stage_nanos.lock().unwrap();
+            if acc.len() < stage_nanos.len() {
+                acc.resize(stage_nanos.len(), 0);
+            }
+            for (a, v) in acc.iter_mut().zip(stage_nanos) {
+                *a += v;
+            }
+        }
     }
 
     pub fn snapshot(&self, wall: Duration, frames: u64) -> MetricsReport {
@@ -64,6 +84,7 @@ impl Metrics {
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
+            stage_nanos: self.stage_nanos.lock().unwrap().clone(),
         }
     }
 }
@@ -82,6 +103,9 @@ pub struct MetricsReport {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Cumulative wall nanos per executed partition across the job's
+    /// boxes, in execution order (empty when untracked).
+    pub stage_nanos: Vec<u64>,
 }
 
 impl std::fmt::Display for MetricsReport {
@@ -117,20 +141,21 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
-        m.record_box(Duration::from_micros(100), 10, 5, 3);
-        m.record_box(Duration::from_micros(300), 20, 10, 3);
+        m.record_box(Duration::from_micros(100), 10, 5, 3, &[7, 2]);
+        m.record_box(Duration::from_micros(300), 20, 10, 3, &[3, 5]);
         let r = m.snapshot(Duration::from_millis(10), 16);
         assert_eq!(r.boxes, 2);
         assert_eq!(r.bytes_in, 30);
         assert_eq!(r.dispatches, 6);
         assert_eq!(r.fps, 1600.0);
+        assert_eq!(r.stage_nanos, vec![10, 7]);
     }
 
     #[test]
     fn percentiles_ordered() {
         let m = Metrics::new();
         for us in [10u64, 20, 30, 40, 50, 1000] {
-            m.record_box(Duration::from_micros(us), 0, 0, 1);
+            m.record_box(Duration::from_micros(us), 0, 0, 1, &[]);
         }
         let r = m.snapshot(Duration::from_secs(1), 1);
         assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);

@@ -1,9 +1,24 @@
-//! Execution plans: resolve a fusion arm + box geometry to the artifact
-//! chain each worker dispatches per box.
+//! Execution plans: resolve a fusion arm + box geometry to the partition
+//! each backend executes and the artifact chain each worker dispatches
+//! per box.
+//!
+//! Partition selection FLOWS FROM the planner's interval DP
+//! ([`crate::fusion::dp`]) instead of being hardcoded per backend: every
+//! arm's partition is the DP solution over the Fig 5 set-partitioning
+//! model with the candidate columns restricted to that arm's shape
+//! (`Auto` solves unrestricted and executes whatever wins). Backends
+//! then dispatch on [`ExecutionPlan::partition`] — the CPU side picks
+//! `FusedCpu` / `TwoFusedCpu` / `StagedCpu` by partition shape, the PJRT
+//! side maps the effective arm to its artifact set.
 
 use crate::config::FusionMode;
+use crate::fusion::candidates::Segment;
+use crate::fusion::dp::solve_dp;
 use crate::fusion::halo::BoxDims;
-use crate::fusion::kernel_ir::Radii;
+use crate::fusion::ilp::Model;
+use crate::fusion::kernel_ir::{paper_fusable_run, Radii};
+use crate::fusion::traffic::InputDims;
+use crate::gpusim::device::DeviceSpec;
 use crate::runtime::Manifest;
 
 /// One dispatch in the per-box chain.
@@ -18,7 +33,14 @@ pub struct Stage {
 /// The resolved per-box execution chain for one fusion arm.
 #[derive(Debug, Clone)]
 pub struct ExecutionPlan {
+    /// The requested arm (may be [`FusionMode::Auto`]).
     pub mode: FusionMode,
+    /// The concrete arm the partition maps to — what actually executes
+    /// (never `Auto`).
+    pub effective: FusionMode,
+    /// The DP-selected partition of the K1..K5 run, in execution order.
+    /// Backends dispatch on this, not on the mode enum.
+    pub partition: Vec<Segment>,
     /// Output-box geometry.
     pub box_dims: BoxDims,
     /// Input halo of the whole chain (cumulative: dx=dy=2, dt=1).
@@ -29,13 +51,118 @@ pub struct ExecutionPlan {
     pub detect: Option<String>,
 }
 
+/// The canonical segment list of one concrete arm.
+fn arm_segments(mode: FusionMode) -> Vec<Segment> {
+    match mode {
+        FusionMode::None => (0..5).map(|k| Segment { start: k, len: 1 }).collect(),
+        FusionMode::Two => vec![
+            Segment { start: 0, len: 2 },
+            Segment { start: 2, len: 3 },
+        ],
+        FusionMode::Full => vec![Segment { start: 0, len: 5 }],
+        FusionMode::Auto => unreachable!("Auto has no canonical partition"),
+    }
+}
+
+/// Map a partition back to the concrete arm it belongs to (if any).
+fn arm_of(segs: &[Segment]) -> Option<FusionMode> {
+    for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
+        if segs == arm_segments(arm).as_slice() {
+            return Some(arm);
+        }
+    }
+    None
+}
+
+/// Solve the partition DP with columns restricted to one arm's canonical
+/// segments. `None` when the cost model prices the arm infeasible on the
+/// planning device.
+fn solve_arm(arm: FusionMode, model: &Model) -> Option<(Vec<Segment>, f64)> {
+    let allowed = arm_segments(arm);
+    let cols: Vec<(Segment, f64)> = model
+        .columns
+        .iter()
+        .filter(|c| allowed.contains(&c.segment))
+        .map(|c| (c.segment, c.cost))
+        .collect();
+    solve_dp(&Model::with_costs(model.n_kernels, &cols))
+}
+
+/// Pick the partition (and the concrete arm it maps to) for a requested
+/// mode. Explicit arms run the restricted DP (falling back to the
+/// canonical segments when the model device can't fit the arm — the CPU
+/// executors have no shared-memory limit, so a forced arm always
+/// executes); `Auto` takes the unrestricted DP optimum, degrading to the
+/// cheapest executable arm when the optimum has no executor mapping.
+fn select_partition(
+    mode: FusionMode,
+    model: &Model,
+) -> (Vec<Segment>, FusionMode) {
+    match mode {
+        FusionMode::Auto => {
+            if let Some((segs, _)) = solve_dp(model) {
+                if let Some(arm) = arm_of(&segs) {
+                    return (segs, arm);
+                }
+            }
+            let mut best: Option<(f64, FusionMode)> = None;
+            for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
+                if let Some((_, obj)) = solve_arm(arm, model) {
+                    let better = match best {
+                        None => true,
+                        Some((b, _)) => obj < b,
+                    };
+                    if better {
+                        best = Some((obj, arm));
+                    }
+                }
+            }
+            let arm = best.map_or(FusionMode::Full, |(_, a)| a);
+            (arm_segments(arm), arm)
+        }
+        arm => {
+            let segs = solve_arm(arm, model)
+                .map_or_else(|| arm_segments(arm), |(s, _)| s);
+            (segs, arm)
+        }
+    }
+}
+
 impl ExecutionPlan {
-    /// Build the plan for `(mode, s×s×t)` boxes. The artifact set must
-    /// have been emitted for this geometry (see `python/compile/aot.py`).
-    pub fn resolve(mode: FusionMode, box_dims: BoxDims, with_detect: bool) -> ExecutionPlan {
+    /// Build the plan for `(mode, s×s×t)` boxes with the paper's default
+    /// planning instance (256²×1000 input on the K20 model). The
+    /// artifact set must have been emitted for this geometry (see
+    /// `python/compile/aot.py`).
+    pub fn resolve(
+        mode: FusionMode,
+        box_dims: BoxDims,
+        with_detect: bool,
+    ) -> ExecutionPlan {
+        ExecutionPlan::resolve_on(
+            mode,
+            box_dims,
+            with_detect,
+            InputDims::new(256, 256, 1000),
+            &DeviceSpec::k20(),
+        )
+    }
+
+    /// Build the plan against an explicit planning instance: the
+    /// partition comes out of the interval DP over the Fig 5 model built
+    /// for `(input, dev)` (see [`select_partition`]).
+    pub fn resolve_on(
+        mode: FusionMode,
+        box_dims: BoxDims,
+        with_detect: bool,
+        input: InputDims,
+        dev: &DeviceSpec,
+    ) -> ExecutionPlan {
         assert_eq!(box_dims.x, box_dims.y, "boxes are square (paper eq 4)");
+        let run = paper_fusable_run();
+        let model = Model::build(&run, input, box_dims, dev);
+        let (partition, effective) = select_partition(mode, &model);
         let (s, t) = (box_dims.x, box_dims.t);
-        let stages = Manifest::arm_artifacts(mode, s, t)
+        let stages = Manifest::arm_artifacts(effective, s, t)
             .into_iter()
             .map(|artifact| {
                 // k5, two_b and full take the threshold scalar.
@@ -50,11 +177,33 @@ impl ExecutionPlan {
             .collect();
         ExecutionPlan {
             mode,
+            effective,
+            partition,
             box_dims,
             halo: Radii::new(2, 2, 1),
             stages,
             detect: with_detect.then(|| Manifest::detect_artifact(s, t)),
         }
+    }
+
+    /// Segment lengths of the partition, in execution order — the shape
+    /// backends dispatch on (`[5]`, `[2, 3]`, `[1, 1, 1, 1, 1]`).
+    pub fn partition_shape(&self) -> Vec<usize> {
+        self.partition.iter().map(|s| s.len).collect()
+    }
+
+    /// Human-readable partition, e.g. `{K1..K2}{K3..K5}`.
+    pub fn partition_names(&self) -> String {
+        self.partition
+            .iter()
+            .map(|s| {
+                if s.len == 1 {
+                    format!("{{K{}}}", s.start + 1)
+                } else {
+                    format!("{{K{}..K{}}}", s.start + 1, s.end())
+                }
+            })
+            .collect()
     }
 
     /// Kernel launches per box (for the dispatch metric).
@@ -74,6 +223,9 @@ mod tests {
         assert!(p.stages[0].takes_threshold);
         assert_eq!(p.detect.as_deref(), Some("detect_s32_t8"));
         assert_eq!(p.dispatches_per_box(), 2);
+        assert_eq!(p.partition_shape(), vec![5]);
+        assert_eq!(p.effective, FusionMode::Full);
+        assert_eq!(p.partition_names(), "{K1..K5}");
     }
 
     #[test]
@@ -83,6 +235,7 @@ mod tests {
         assert!(p.stages[..4].iter().all(|s| !s.takes_threshold));
         assert!(p.stages[4].takes_threshold);
         assert_eq!(p.dispatches_per_box(), 5);
+        assert_eq!(p.partition_shape(), vec![1, 1, 1, 1, 1]);
     }
 
     #[test]
@@ -91,5 +244,58 @@ mod tests {
         assert_eq!(p.stages.len(), 2);
         assert!(!p.stages[0].takes_threshold);
         assert!(p.stages[1].takes_threshold);
+        assert_eq!(p.partition_shape(), vec![2, 3]);
+        assert_eq!(p.partition_names(), "{K1..K2}{K3..K5}");
+    }
+
+    #[test]
+    fn auto_resolves_to_a_concrete_arm_via_dp() {
+        let p = ExecutionPlan::resolve(FusionMode::Auto, BoxDims::new(32, 32, 8), true);
+        assert_eq!(p.mode, FusionMode::Auto);
+        assert_ne!(p.effective, FusionMode::Auto);
+        // Whatever the DP picked, the partition maps to the effective
+        // arm and the dispatch chain matches it one stage per segment.
+        assert_eq!(p.partition, arm_segments(p.effective));
+        assert_eq!(p.stages.len(), p.partition.len());
+        // And the choice is DP-optimal among the executable arms: no
+        // restricted arm solve beats the unrestricted winner.
+        let run = paper_fusable_run();
+        let model = Model::build(
+            &run,
+            InputDims::new(256, 256, 1000),
+            BoxDims::new(32, 32, 8),
+            &DeviceSpec::k20(),
+        );
+        let chosen = solve_arm(p.effective, &model).unwrap().1;
+        for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
+            if let Some((_, obj)) = solve_arm(arm, &model) {
+                assert!(
+                    chosen <= obj + 1e-12,
+                    "{:?} beats chosen {:?}",
+                    arm,
+                    p.effective
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_arms_survive_infeasible_devices() {
+        // A device too small for the fused kernels: the cost model
+        // prices fusion infinite, but a forced arm still resolves (the
+        // CPU executors have no shared-memory limit).
+        let tiny = DeviceSpec {
+            shmem_per_block: 64,
+            ..DeviceSpec::gtx750ti()
+        };
+        let p = ExecutionPlan::resolve_on(
+            FusionMode::Full,
+            BoxDims::new(16, 16, 8),
+            false,
+            InputDims::new(64, 64, 16),
+            &tiny,
+        );
+        assert_eq!(p.partition_shape(), vec![5]);
+        assert_eq!(p.effective, FusionMode::Full);
     }
 }

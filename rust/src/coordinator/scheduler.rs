@@ -51,6 +51,9 @@ pub struct BoxResult {
     pub detect: Option<Vec<f32>>,
     /// Queue wait + service time, stamped by the worker at completion.
     pub latency: Duration,
+    /// Wall nanos per executed partition (empty when the backend doesn't
+    /// track them; see `Executor::last_stage_nanos`).
+    pub stage_nanos: Vec<u64>,
 }
 
 /// One routed event from a worker: which job it belongs to and how the
@@ -78,6 +81,8 @@ pub struct WorkerSpec {
     pub threshold: f32,
     /// Shared scratch pool for the CPU backends.
     pub pool: Arc<BufferPool>,
+    /// Intra-box band threads for the fused CPU executors (1 = serial).
+    pub intra_box_threads: usize,
 }
 
 /// Execute one job on a worker's executor. Public so benches can call the
@@ -108,6 +113,7 @@ pub fn execute_box(
         binary: out.binary,
         detect: out.detect,
         latency: job.enqueued.elapsed(),
+        stage_nanos: exec.last_stage_nanos(),
     })
 }
 
@@ -125,9 +131,11 @@ fn build_executor(
             )?;
             Box::new(PjrtExec::new(rt))
         }
-        Backend::Cpu => {
-            crate::exec::cpu_executor(spec.plan.mode, spec.pool.clone())
-        }
+        Backend::Cpu => crate::exec::cpu_executor(
+            &spec.plan,
+            spec.pool.clone(),
+            spec.intra_box_threads,
+        )?,
     };
     exec.prepare(&spec.plan)?;
     Ok(exec)
@@ -248,6 +256,7 @@ mod tests {
             plan,
             threshold: 96.0,
             pool: BufferPool::shared(),
+            intra_box_threads: 2,
         };
         let handles = spawn_workers(
             spec,

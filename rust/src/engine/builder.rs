@@ -64,6 +64,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Threads each CPU worker fans one box out to (row bands; see
+    /// [`RunConfig::intra_box_threads`]). 1 = serial fused pass.
+    pub fn intra_box_threads(mut self, n: usize) -> Self {
+        self.cfg.intra_box_threads = n;
+        self
+    }
+
     /// Binarization threshold.
     pub fn threshold(mut self, th: f32) -> Self {
         self.cfg.threshold = th;
@@ -129,6 +136,7 @@ mod tests {
             .mode(FusionMode::Two)
             .box_dims(BoxDims::new(16, 16, 8))
             .workers(3)
+            .intra_box_threads(2)
             .threshold(42.0)
             .markers(7)
             .queue_depth(9)
@@ -141,6 +149,7 @@ mod tests {
         assert_eq!(cfg.mode, FusionMode::Two);
         assert_eq!(cfg.box_dims, BoxDims::new(16, 16, 8));
         assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.intra_box_threads, 2);
         assert_eq!(cfg.threshold, 42.0);
         assert_eq!(cfg.markers, 7);
         assert_eq!(cfg.queue_depth, 9);

@@ -63,8 +63,15 @@ impl Engine {
             Backend::Pjrt => Arc::new(Manifest::load(&cfg.artifacts_dir)?),
             Backend::Cpu => Arc::new(Manifest::default()),
         };
-        let plan =
-            Arc::new(ExecutionPlan::resolve(cfg.mode, cfg.box_dims, true));
+        // Partition selection flows from the planner's DP solve over
+        // this config's input instance (see ExecutionPlan::resolve_on).
+        let plan = Arc::new(ExecutionPlan::resolve_on(
+            cfg.mode,
+            cfg.box_dims,
+            true,
+            cfg.input_dims(),
+            &crate::gpusim::device::DeviceSpec::k20(),
+        ));
         let pool = BufferPool::shared();
         let queue: Bounded<BoxJob> =
             Bounded::new(cfg.queue_depth, Policy::Block);
@@ -80,6 +87,7 @@ impl Engine {
                 plan: plan.clone(),
                 threshold: cfg.threshold,
                 pool: pool.clone(),
+                intra_box_threads: cfg.intra_box_threads,
             },
             queue.clone(),
             tx,
@@ -133,9 +141,24 @@ impl Engine {
     /// (both settle at build time and must not grow afterwards — the
     /// warm-pool and zero-allocation steady-state contracts).
     pub fn stats(&self) -> EngineStats {
+        // Only the fused CPU executors band boxes; PJRT and the staged
+        // baseline ignore intra_box_threads, so report 1 there instead
+        // of a thread count that never ran.
+        let bands = if self.cfg.backend == Backend::Cpu
+            && self.plan.partition.iter().any(|s| s.len > 1)
+        {
+            crate::exec::split_rows(
+                self.cfg.box_dims.x,
+                self.cfg.intra_box_threads,
+            )
+            .len() as u64
+        } else {
+            1
+        };
         EngineStats {
             compiles: self.compiles.load(Ordering::Relaxed),
             pool_allocs: self.pool.allocations(),
+            bands,
             ..self.totals.clone()
         }
     }
@@ -155,6 +178,12 @@ impl Engine {
         self.totals.bytes_out += rep.bytes_out;
         self.totals.dispatches += rep.dispatches;
         self.totals.dropped += rep.dropped;
+        if self.totals.partition_nanos.len() < rep.stage_nanos.len() {
+            self.totals.partition_nanos.resize(rep.stage_nanos.len(), 0);
+        }
+        for (a, v) in self.totals.partition_nanos.iter_mut().zip(&rep.stage_nanos) {
+            *a += v;
+        }
     }
 
     /// Receive the next result for `job_id`, discarding stale events left
@@ -201,6 +230,7 @@ impl Engine {
             in_bytes,
             out_bytes,
             self.plan.dispatches_per_box(),
+            &r.stage_nanos,
         );
     }
 

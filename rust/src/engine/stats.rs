@@ -33,6 +33,13 @@ pub struct EngineStats {
     /// fused CPU workers prewarm their scratch) and MUST stay flat across
     /// jobs — steady-state streaming does zero pool allocations per box.
     pub pool_allocs: u64,
+    /// Row bands each box is fanned out to on the CPU backends:
+    /// `min(intra_box_threads, box rows)` (1 = serial fused pass).
+    pub bands: u64,
+    /// Cumulative wall nanos per executed partition across every job
+    /// (e.g. `[{K1,K2}, {K3..K5}]` for Two Fusion; one entry for the
+    /// all-fused pass; empty when the backend doesn't track them).
+    pub partition_nanos: Vec<u64>,
 }
 
 impl std::fmt::Display for EngineStats {
@@ -40,15 +47,26 @@ impl std::fmt::Display for EngineStats {
         write!(
             f,
             "{} jobs | {} boxes | {} frames | {} dispatches | \
-             {} dropped | {} compiles | {} pool allocs (warm after build)",
+             {} dropped | {} compiles | {} pool allocs (warm after build) | \
+             {} bands/box",
             self.jobs,
             self.boxes,
             self.frames,
             self.dispatches,
             self.dropped,
             self.compiles,
-            self.pool_allocs
-        )
+            self.pool_allocs,
+            self.bands
+        )?;
+        if !self.partition_nanos.is_empty() {
+            let ms: Vec<String> = self
+                .partition_nanos
+                .iter()
+                .map(|ns| format!("{:.1}", *ns as f64 / 1e6))
+                .collect();
+            write!(f, " | partition ms [{}]", ms.join(", "))?;
+        }
+        Ok(())
     }
 }
 
@@ -73,5 +91,19 @@ mod tests {
         let text = format!("{s}");
         assert!(text.contains("2 jobs"));
         assert!(text.contains("4 compiles"));
+    }
+
+    #[test]
+    fn display_shows_partition_timings_when_tracked() {
+        let s = EngineStats {
+            bands: 2,
+            partition_nanos: vec![1_500_000, 2_500_000],
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("2 bands/box"), "{text}");
+        assert!(text.contains("partition ms [1.5, 2.5]"), "{text}");
+        let bare = format!("{}", EngineStats::default());
+        assert!(!bare.contains("partition ms"), "{bare}");
     }
 }

@@ -1,0 +1,379 @@
+//! Row-band decomposition and the per-worker band thread set.
+//!
+//! The fused CPU pass parallelizes *within* a box by splitting the output
+//! rows into contiguous horizontal bands. Bands are fully independent:
+//! each band owns a private IIR carry slab covering its input rows plus
+//! the stencil halo (2 rows above and below, already present in the
+//! halo'd input box, so no clamping is needed at interior band
+//! boundaries), its own 3-row line-buffer window, and its own detect
+//! partials. The temporal IIR recurrence stays sequential over `t`
+//! *inside* each band — exactly the paper's decomposition: distribute
+//! data (rows) across processors, keep the carried dependency local.
+//!
+//! [`BandPool`] is the thread set: a handful of persistent workers owned
+//! by one executor (itself owned by one scheduler worker thread). Threads
+//! are spawned once at executor construction — never per box — because a
+//! box takes tens of microseconds and a thread spawn would eat the win.
+//! Dispatch is one channel send per band per box; the submitting thread
+//! always executes band 0 itself so `intra_box_threads = N` uses exactly
+//! `N` threads (`N - 1` pool workers + the caller).
+
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// One horizontal band: `rows` contiguous output rows starting at output
+/// row `i0` of the box.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Band {
+    pub i0: usize,
+    pub rows: usize,
+}
+
+/// Split `rows` output rows into at most `parts` contiguous bands, as
+/// evenly as possible (the first `rows % parts` bands get one extra row,
+/// so uneven divisions are handled without a runt band). Never returns an
+/// empty band: the band count is `min(parts, rows)`.
+pub fn split_rows(rows: usize, parts: usize) -> Vec<Band> {
+    assert!(rows > 0, "cannot band an empty box");
+    let parts = parts.clamp(1, rows);
+    let base = rows / parts;
+    let extra = rows % parts;
+    let mut bands = Vec::with_capacity(parts);
+    let mut i0 = 0;
+    for k in 0..parts {
+        let rows = base + usize::from(k < extra);
+        bands.push(Band { i0, rows });
+        i0 += rows;
+    }
+    bands
+}
+
+/// A band task sent to a pool worker. The `'static` is a lie told only
+/// inside [`BandPool::run`], which does not return until every dispatched
+/// task has signalled completion — the borrows the closure captures are
+/// therefore live for the whole execution (see the SAFETY note there).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A small set of persistent worker threads executing band closures.
+///
+/// Owned by one executor on one scheduler worker thread; the pool is not
+/// shared between executors (scratch stays thread-local) and dies with
+/// its executor. `n_extra = 0` is a valid degenerate pool: `run` then
+/// executes every task inline on the caller.
+#[derive(Debug)]
+pub struct BandPool {
+    senders: Vec<Sender<Task>>,
+    done_rx: Receiver<bool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl BandPool {
+    /// Spawn `n_extra` persistent band workers (the caller thread is the
+    /// implicit extra lane, so a pool for `intra_box_threads = N` takes
+    /// `N - 1`).
+    pub fn new(n_extra: usize) -> BandPool {
+        let (done_tx, done_rx) = channel::<bool>();
+        let mut senders = Vec::with_capacity(n_extra);
+        let mut handles = Vec::with_capacity(n_extra);
+        for _ in 0..n_extra {
+            let (tx, rx) = channel::<Task>();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(task) = rx.recv() {
+                    let ok = std::panic::catch_unwind(AssertUnwindSafe(task))
+                        .is_ok();
+                    if done.send(ok).is_err() {
+                        break; // pool dropped mid-task: exit quietly
+                    }
+                }
+            }));
+            senders.push(tx);
+        }
+        BandPool {
+            senders,
+            done_rx,
+            handles,
+        }
+    }
+
+    /// Worker threads in the pool (excluding the caller lane).
+    pub fn extra_threads(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Execute every task, distributing tasks beyond the first across the
+    /// pool workers round-robin while the caller runs task 0 (and any
+    /// task that fails to dispatch) inline. Blocks until ALL tasks have
+    /// completed; panics (after the join) if any task panicked, so a band
+    /// failure surfaces exactly like a single-threaded panic and is
+    /// caught by the scheduler's per-box `catch_unwind`.
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let mut tasks = tasks;
+        if self.senders.is_empty() || tasks.len() <= 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let mut dispatched = 0usize;
+        let mut inline: Vec<Box<dyn FnOnce() + Send + 'scope>> = Vec::new();
+        for (k, task) in tasks.drain(1..).enumerate() {
+            // SAFETY: the closure only borrows data owned by our caller's
+            // stack frame (input box, scratch slabs, output slices). We
+            // never return before receiving `dispatched` completion
+            // signals below — even when the inline lane panics — so every
+            // borrow outlives every use. The lifetime is erased solely to
+            // cross the channel.
+            let task: Task = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(task)
+            };
+            match self.senders[k % self.senders.len()].send(task) {
+                Ok(()) => dispatched += 1,
+                // A worker can only be gone if its thread died; keep the
+                // box correct by running the band on the caller instead.
+                Err(err) => inline.push(err.0),
+            }
+        }
+        let first = tasks.pop().expect("task 0 stays inline");
+        let caller = std::panic::catch_unwind(AssertUnwindSafe(move || {
+            first();
+            for t in inline {
+                t();
+            }
+        }));
+        let mut ok = true;
+        for _ in 0..dispatched {
+            ok &= self
+                .done_rx
+                .recv()
+                .expect("band worker exited with tasks in flight");
+        }
+        // All borrows are dead now; unwinding is safe again.
+        if let Err(panic) = caller {
+            std::panic::resume_unwind(panic);
+        }
+        assert!(ok, "band task panicked on a pool worker");
+    }
+}
+
+impl Drop for BandPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // workers see the closed channel and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-band, per-frame views of a banded buffer: for every frame of
+/// `buf` (whose rows are the concatenation of `bands`, `width` values
+/// per row), split the rows into disjoint `&mut` slices, one per band —
+/// the zero-copy scaffolding both fused executors hand their band tasks.
+/// Returned as `views[band][frame]`.
+pub fn band_views<'a>(
+    buf: &'a mut [f32],
+    bands: &[Band],
+    width: usize,
+) -> Vec<Vec<&'a mut [f32]>> {
+    let rows_total: usize = bands.iter().map(|b| b.rows).sum();
+    let frame = rows_total * width;
+    assert!(frame > 0 && buf.len() % frame == 0);
+    let frames = buf.len() / frame;
+    let mut views: Vec<Vec<&mut [f32]>> =
+        bands.iter().map(|_| Vec::with_capacity(frames)).collect();
+    for frame_buf in buf.chunks_exact_mut(frame) {
+        let mut rest = frame_buf;
+        for (v, b) in views.iter_mut().zip(bands) {
+            let (head, tail) = rest.split_at_mut(b.rows * width);
+            v.push(head);
+            rest = tail;
+        }
+    }
+    views
+}
+
+/// Split an (optional) detect-partials buffer into one `t_out × 3`
+/// mutable chunk per band (all `None` when detection is off) — the
+/// counterpart of [`merge_detect`] on the scatter side.
+pub fn detect_partials<'a>(
+    partials: Option<&'a mut [f32]>,
+    n_bands: usize,
+    t_out: usize,
+) -> Vec<Option<&'a mut [f32]>> {
+    match partials {
+        Some(p) => p.chunks_exact_mut(t_out * 3).map(Some).collect(),
+        None => (0..n_bands).map(|_| None).collect(),
+    }
+}
+
+/// Merge per-band detect partials (laid out `[band][frame][3]`) into the
+/// per-frame `(mass, Σi, Σj)` rows, accumulating bands in ascending row
+/// order. Every summand is an integer (counts and index sums), and for
+/// the shmem-scale boxes this pipeline runs (≤ 64² output rows per
+/// frame) every partial and total stays well inside f32's exact-integer
+/// range (2²⁴), so the merged rows are bit-identical to a single
+/// sequential scan. (A hypothetical ≥ 512² box with near-total
+/// activation would overflow that range and could round differently
+/// from the serial order — box sizes are bounded by the shared-memory
+/// model long before that.)
+pub fn merge_detect(partials: &[f32], n_bands: usize, t_out: usize) -> Vec<f32> {
+    assert_eq!(partials.len(), n_bands * t_out * 3);
+    let mut rows = vec![0.0f32; t_out * 3];
+    for part in partials.chunks_exact(t_out * 3) {
+        for (acc, v) in rows.iter_mut().zip(part) {
+            *acc += v;
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_covers_exactly_and_evenly() {
+        for rows in 1..40 {
+            for parts in 1..8 {
+                let bands = split_rows(rows, parts);
+                assert_eq!(bands.len(), parts.min(rows));
+                let mut next = 0;
+                for b in &bands {
+                    assert_eq!(b.i0, next);
+                    assert!(b.rows > 0);
+                    next = b.i0 + b.rows;
+                }
+                assert_eq!(next, rows);
+                let max = bands.iter().map(|b| b.rows).max().unwrap();
+                let min = bands.iter().map(|b| b.rows).min().unwrap();
+                assert!(max - min <= 1, "uneven split {rows}/{parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_band_counts_put_extra_rows_first() {
+        let bands = split_rows(10, 4);
+        assert_eq!(
+            bands,
+            vec![
+                Band { i0: 0, rows: 3 },
+                Band { i0: 3, rows: 3 },
+                Band { i0: 6, rows: 2 },
+                Band { i0: 8, rows: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn pool_runs_all_tasks_with_borrows() {
+        let pool = BandPool::new(3);
+        let mut out = vec![0usize; 8];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(2)
+                .enumerate()
+                .map(|(k, chunk)| {
+                    let task: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || {
+                            for (i, v) in chunk.iter_mut().enumerate() {
+                                *v = k * 10 + i;
+                            }
+                        });
+                    task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(out, vec![0, 1, 10, 11, 20, 21, 30, 31]);
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_many_rounds() {
+        let pool = BandPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..200 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|_| {
+                    let task: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                    task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 600);
+    }
+
+    #[test]
+    fn degenerate_pool_runs_inline() {
+        let pool = BandPool::new(0);
+        let mut v = [0usize; 2];
+        let (a, b) = v.split_at_mut(1);
+        pool.run(vec![Box::new(|| a[0] += 1), Box::new(|| b[0] += 2)]);
+        assert_eq!(v, [1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "band task panicked")]
+    fn worker_panic_propagates_after_join() {
+        let pool = BandPool::new(1);
+        pool.run(vec![Box::new(|| {}), Box::new(|| panic!("band boom"))]);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_round() {
+        let pool = BandPool::new(1);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![Box::new(|| {}), Box::new(|| panic!("boom"))]);
+        }));
+        assert!(r.is_err());
+        // The worker caught the panic and is still serving.
+        let mut v = [0usize; 2];
+        let (a, b) = v.split_at_mut(1);
+        pool.run(vec![Box::new(|| a[0] += 1), Box::new(|| b[0] += 10)]);
+        assert_eq!(v, [1, 10]);
+    }
+
+    #[test]
+    fn band_views_split_frames_disjointly() {
+        // 2 frames x 3 rows x 2 cols, bands of 2+1 rows.
+        let mut buf: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let bands = split_rows(3, 2);
+        let views = band_views(&mut buf, &bands, 2);
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].len(), 2);
+        assert_eq!(&*views[0][0], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&*views[1][0], &[4.0, 5.0]);
+        assert_eq!(&*views[0][1], &[6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(&*views[1][1], &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn detect_partials_chunk_or_none() {
+        let mut p = vec![0.0f32; 2 * 2 * 3];
+        let parts = detect_partials(Some(&mut p[..]), 2, 2);
+        assert_eq!(parts.len(), 2);
+        assert!(parts.iter().all(|c| c.as_ref().unwrap().len() == 6));
+        let none = detect_partials(None, 3, 2);
+        assert_eq!(none.len(), 3);
+        assert!(none.iter().all(|c| c.is_none()));
+    }
+
+    #[test]
+    fn merge_detect_sums_bands_in_order() {
+        // 2 bands × 2 frames × 3.
+        let partials = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 10.0, 20.0, 30.0,
+                            40.0, 50.0, 60.0];
+        assert_eq!(
+            merge_detect(&partials, 2, 2),
+            vec![11.0, 22.0, 33.0, 44.0, 55.0, 66.0]
+        );
+    }
+}

@@ -1,4 +1,4 @@
-//! Fused single-pass CPU execution of the K1..K5 chain.
+//! Fused single-pass CPU execution of the K1..K5 chain, band-parallel.
 //!
 //! This is the paper's fusion transformation (§VI, Table III) reproduced
 //! on the host: one pass over the halo'd input box with every
@@ -7,8 +7,8 @@
 //!
 //! * **K1 luma** is computed inline from the RGBA input — the gray plane
 //!   never exists.
-//! * **K2 IIR** keeps its state in one `(h, w)` carry plane (the recurrence
-//!   needs exactly one frame of history, nothing more).
+//! * **K2 IIR** keeps its state in a `(rows, w)` carry slab (the
+//!   recurrence needs exactly one frame of history, nothing more).
 //! * **K3 binomial** writes into three rolling line buffers of width
 //!   `w-2` — the 3-row window the Sobel stencil needs, the CPU analogue
 //!   of the fused kernel's shared-memory tile.
@@ -16,86 +16,136 @@
 //!   final binarized value directly; the per-frame detect reduction
 //!   (mass, Σi, Σj) accumulates in the same loop when requested.
 //!
-//! Scratch (carry plane + line buffers) is checked out of the shared
-//! [`BufferPool`] once per worker — at `Executor::prepare`, i.e. at
-//! engine build — held for the executor's lifetime, and returned to the
-//! pool when the worker completes. Steady-state streaming therefore
-//! performs zero scratch allocations (and zero pool round-trips) per box
-//! — the only per-box allocations left are the output buffers handed
-//! across the result channel; the pool's allocation counter settles at
-//! build and stays flat, which `tests/engine_reuse.rs` enforces. Every arithmetic expression matches
-//! `cpu_ref` operation for operation, in the same order — the output is
-//! bit-identical to the staged oracle (property-tested below and in
+//! With `intra_box_threads > 1` the box is additionally split into
+//! horizontal [`Band`]s executed concurrently on the executor's
+//! [`BandPool`]: each band owns a private carry slab covering its input
+//! rows plus the 2-row stencil halo on each side (those halo rows exist
+//! in the halo'd input, so interior band boundaries need no clamping —
+//! border clamping happened at box extraction), its own line buffers, and
+//! its own detect partials, merged in row order after the join. The IIR
+//! recurrence stays sequential over `t` inside each band. Every
+//! arithmetic expression matches `cpu_ref` operation for operation, in
+//! the same order per pixel, so the output is bit-identical to the staged
+//! oracle at ANY thread count (property-tested below and in
 //! `tests/exec_backend.rs`).
+//!
+//! Scratch (carry slabs + line buffers, one set per band) is checked out
+//! of the shared [`BufferPool`] once per worker — at `Executor::prepare`,
+//! i.e. at engine build — held for the executor's lifetime, and returned
+//! to the pool when the worker completes. Steady-state streaming
+//! therefore performs zero scratch allocations (and zero pool
+//! round-trips) per box; the pool's allocation counter settles at build
+//! and stays flat, which `tests/engine_reuse.rs` enforces.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coordinator::plan::ExecutionPlan;
 use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
 use crate::Result;
 
+use super::bands::{
+    band_views, detect_partials, merge_detect, split_rows, Band, BandPool,
+};
 use super::pool::{BufferPool, PoolBuf};
 use super::{check_cpu_input, BoxOutput, Executor};
 
-/// Per-worker rolling storage: the IIR carry plane and the 3-row stencil
-/// window. Lives for the executor's lifetime; contents are fully
-/// rewritten every box, so nothing leaks between boxes.
+/// Per-band rolling storage: the IIR carry slab (band rows + halo) and
+/// the 3-row stencil window. Lives for the executor's lifetime; contents
+/// are fully rewritten every box, so nothing leaks between boxes.
 #[derive(Debug)]
-struct Scratch {
+struct BandScratch {
     carry: PoolBuf,
     srows: PoolBuf,
 }
 
-/// The fused CPU backend: one tiled pass per box, pooled scratch.
-/// Single-threaded by construction (one executor per worker thread), so
-/// the scratch slot is a plain `RefCell`.
+/// The fused CPU backend: one tiled pass per box, pooled scratch, and an
+/// optional intra-box band thread set. One executor per scheduler worker
+/// thread, so the scratch slot is a plain `RefCell`.
 #[derive(Debug)]
 pub struct FusedCpu {
     pool: Arc<BufferPool>,
-    scratch: RefCell<Option<Scratch>>,
+    threads: usize,
+    bands: BandPool,
+    scratch: RefCell<Vec<BandScratch>>,
+    last_nanos: Cell<u64>,
 }
 
 impl FusedCpu {
+    /// Single-threaded fused executor (one band covering the whole box).
     pub fn new(pool: Arc<BufferPool>) -> FusedCpu {
+        FusedCpu::with_threads(pool, 1)
+    }
+
+    /// Fused executor running each box as `threads` row bands (the
+    /// caller thread plus `threads - 1` persistent band workers spawned
+    /// here, never per box).
+    pub fn with_threads(pool: Arc<BufferPool>, threads: usize) -> FusedCpu {
+        assert!(threads >= 1, "intra_box_threads must be >= 1");
         FusedCpu {
             pool,
-            scratch: RefCell::new(None),
+            threads,
+            bands: BandPool::new(threads - 1),
+            scratch: RefCell::new(Vec::new()),
+            last_nanos: Cell::new(0),
         }
     }
 
-    /// Make sure the held scratch matches the requested geometry; checks
-    /// out (allocating at most once per worker per geometry) on first
-    /// use or shape change.
-    fn ensure_scratch(&self, plane: usize, lines: usize) {
+    /// Intra-box threads this executor fans each box out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Make sure the held scratch matches the requested band geometry;
+    /// checks out (allocating at most once per worker per geometry) on
+    /// first use or shape change.
+    fn ensure_scratch(&self, bands: &[Band], w_in: usize) {
+        let lines = 3 * (w_in - 2);
         let mut slot = self.scratch.borrow_mut();
-        let fits = slot
-            .as_ref()
-            .map(|s| s.carry.len() == plane && s.srows.len() == lines)
-            .unwrap_or(false);
+        let fits = slot.len() == bands.len()
+            && slot.iter().zip(bands).all(|(s, b)| {
+                s.carry.len() == (b.rows + 4) * w_in && s.srows.len() == lines
+            });
         if !fits {
             // Drop the old scratch (returning it to the pool) BEFORE the
             // new checkout so a resize can recycle the old buffers.
-            *slot = None;
-            *slot = Some(Scratch {
-                carry: self.pool.checkout(plane),
-                srows: self.pool.checkout(lines),
-            });
+            slot.clear();
+            for b in bands {
+                slot.push(BandScratch {
+                    carry: self.pool.checkout((b.rows + 4) * w_in),
+                    srows: self.pool.checkout(lines),
+                });
+            }
         }
     }
 
-    /// Scratch bytes live at any point during the pass (carry plane +
-    /// three stencil lines) — the fused counterpart of
+    /// Scratch bytes live at any point during a single-threaded pass
+    /// (carry plane + three stencil lines) — the fused counterpart of
     /// [`StagedCpu::intermediate_bytes`](super::StagedCpu::intermediate_bytes).
     pub fn scratch_bytes(h_in: usize, w_in: usize) -> u64 {
-        (4 * (h_in * w_in + 3 * (w_in - 2))) as u64
+        FusedCpu::scratch_bytes_banded(h_in, w_in, 1)
+    }
+
+    /// Total scratch bytes across all bands when the pass runs on
+    /// `threads` bands: the halo rows each interior band duplicates are
+    /// the (small) memory price of intra-box parallelism.
+    pub fn scratch_bytes_banded(
+        h_in: usize,
+        w_in: usize,
+        threads: usize,
+    ) -> u64 {
+        split_rows(h_in - 4, threads)
+            .iter()
+            .map(|b| (4 * ((b.rows + 4) * w_in + 3 * (w_in - 2))) as u64)
+            .sum()
     }
 
     /// The fused pass on a raw halo'd buffer:
     /// `(t_in, h_in, w_in, 4)` RGBA → `(t_in-1, h_in-4, w_in-4)` binary,
     /// plus per-frame `(mass, Σi, Σj)` detect rows when `with_detect`.
     /// Semantics (and bit pattern) identical to
-    /// `cpu_ref::pipeline` + `cpu_ref::detect`.
+    /// `cpu_ref::pipeline` + `cpu_ref::detect` at any thread count.
     pub fn run_box(
         &self,
         x: &[f32],
@@ -108,75 +158,44 @@ impl FusedCpu {
         assert!(t_in >= 2 && h_in >= 5 && w_in >= 5);
         assert_eq!(x.len(), t_in * h_in * w_in * 4);
         let (t_out, oh, ow) = (t_in - 1, h_in - 4, w_in - 4);
-        let sw = w_in - 2; // smoothed-row width (and 3-row window width)
-        let plane = h_in * w_in;
-
-        self.ensure_scratch(plane, 3 * sw);
+        let bands = split_rows(oh, self.threads);
+        let n_bands = bands.len();
+        self.ensure_scratch(&bands, w_in);
         let mut guard = self.scratch.borrow_mut();
-        let scratch = guard.as_mut().unwrap();
-        let carry: &mut [f32] = &mut scratch.carry;
-        let srows: &mut [f32] = &mut scratch.srows;
+
         let mut out = vec![0.0f32; t_out * oh * ow];
-        let mut detect = with_detect.then(|| vec![0.0f32; t_out * 3]);
+        let mut partials =
+            with_detect.then(|| vec![0.0f32; n_bands * t_out * 3]);
 
-        // K2 warm start: the carry is the luma of frame 0 (y[-1] = x[0]).
-        for (c, px) in carry.iter_mut().zip(x.chunks_exact(4)) {
-            *c = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
-        }
+        // Zero-copy band views: disjoint `&mut` row slices per (band,
+        // frame), no merge copy (see `bands::band_views`).
+        let band_rows = band_views(&mut out, &bands, ow);
+        let mut parts =
+            detect_partials(partials.as_deref_mut(), n_bands, t_out);
 
-        for ft in 1..t_in {
-            // K1+K2 fused: luma inline, carry plane updated in place.
-            let frame = &x[ft * plane * 4..(ft + 1) * plane * 4];
-            for (c, px) in carry.iter_mut().zip(frame.chunks_exact(4)) {
-                let g = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
-                *c = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * *c;
-            }
+        let started = Instant::now();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = bands
+            .iter()
+            .zip(guard.iter_mut())
+            .zip(band_rows)
+            .zip(parts.drain(..))
+            .map(|(((band, scratch), rows), det)| {
+                let band = *band;
+                let carry: &mut [f32] = &mut scratch.carry;
+                let srows: &mut [f32] = &mut scratch.srows;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    fused_band(
+                        x, t_in, h_in, w_in, th, band, carry, srows, rows,
+                        det,
+                    );
+                });
+                task
+            })
+            .collect();
+        self.bands.run(tasks);
+        self.last_nanos.set(started.elapsed().as_nanos() as u64);
 
-            let of = ft - 1;
-            // Prime the first two smoothed rows of this frame.
-            smooth_row(carry, w_in, 0, &mut srows[..sw]);
-            smooth_row(carry, w_in, 1, &mut srows[sw..2 * sw]);
-            let (mut mass, mut si, mut sj) = (0.0f32, 0.0f32, 0.0f32);
-            for i in 0..oh {
-                // K3 rolling: compute smoothed row i+2 into the slot the
-                // Sobel window no longer needs.
-                let slot = (i + 2) % 3;
-                {
-                    let row = &mut srows[slot * sw..(slot + 1) * sw];
-                    smooth_row(carry, w_in, i + 2, row);
-                }
-                let sr: &[f32] = &*srows;
-                let r0 = &sr[(i % 3) * sw..][..sw];
-                let r1 = &sr[((i + 1) % 3) * sw..][..sw];
-                let r2 = &sr[((i + 2) % 3) * sw..][..sw];
-                let dst = &mut out[(of * oh + i) * ow..(of * oh + i + 1) * ow];
-                // K4+K5 fused: Sobel L1 magnitude, thresholded in place,
-                // detect reduction accumulated in the same loop. The
-                // expressions mirror cpu_ref::gradient3's p(di, dj) reads
-                // term for term.
-                for (j, d) in dst.iter_mut().enumerate() {
-                    let gx = (r0[j + 2] - r0[j])
-                        + 2.0 * (r1[j + 2] - r1[j])
-                        + (r2[j + 2] - r2[j]);
-                    let gy = (r2[j] - r0[j])
-                        + 2.0 * (r2[j + 1] - r0[j + 1])
-                        + (r2[j + 2] - r0[j + 2]);
-                    let mag = gx.abs() + gy.abs();
-                    let bin = if mag >= th { 255.0 } else { 0.0 };
-                    *d = bin;
-                    if bin > 0.0 {
-                        mass += 1.0;
-                        si += i as f32;
-                        sj += j as f32;
-                    }
-                }
-            }
-            if let Some(rows) = detect.as_mut() {
-                rows[of * 3] = mass;
-                rows[of * 3 + 1] = si;
-                rows[of * 3 + 2] = sj;
-            }
-        }
+        let detect = partials.map(|p| merge_detect(&p, n_bands, t_out));
         BoxOutput {
             binary: out,
             detect,
@@ -184,15 +203,134 @@ impl FusedCpu {
     }
 }
 
+/// One band of the fused pass: private carry slab over the band's input
+/// rows (+2 halo rows on each side), rolling line buffers, direct writes
+/// into the band's per-frame output row slices, detect partial with
+/// GLOBAL row indices so the merged reduction is bit-identical to a
+/// sequential scan.
+#[allow(clippy::too_many_arguments)]
+fn fused_band(
+    x: &[f32],
+    t_in: usize,
+    h_in: usize,
+    w_in: usize,
+    th: f32,
+    band: Band,
+    carry: &mut [f32],
+    srows: &mut [f32],
+    mut out_rows: Vec<&mut [f32]>,
+    mut detect: Option<&mut [f32]>,
+) {
+    let plane = h_in * w_in;
+    let hb = band.rows + 4; // band input rows incl. the stencil halo
+    debug_assert_eq!(carry.len(), hb * w_in);
+    debug_assert!(band.i0 + hb <= h_in);
+
+    // K2 warm start: the carry is the luma of frame 0 (y[-1] = x[0]) over
+    // the band's input rows.
+    let frame0 = &x[band.i0 * w_in * 4..(band.i0 + hb) * w_in * 4];
+    for (c, px) in carry.iter_mut().zip(frame0.chunks_exact(4)) {
+        *c = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+    }
+
+    for ft in 1..t_in {
+        // K1+K2 fused: luma inline, carry slab updated in place.
+        let base = (ft * plane + band.i0 * w_in) * 4;
+        let frame = &x[base..base + hb * w_in * 4];
+        for (c, px) in carry.iter_mut().zip(frame.chunks_exact(4)) {
+            let g = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+            *c = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * *c;
+        }
+
+        let of = ft - 1;
+        let mut acc = (0.0f32, 0.0f32, 0.0f32);
+        stencil_frame(
+            carry,
+            w_in,
+            band.rows,
+            band.i0,
+            th,
+            srows,
+            &mut *out_rows[of],
+            &mut acc,
+        );
+        if let Some(rows) = detect.as_deref_mut() {
+            rows[of * 3] = acc.0;
+            rows[of * 3 + 1] = acc.1;
+            rows[of * 3 + 2] = acc.2;
+        }
+    }
+}
+
+/// K3+K4+K5 for one frame of one band: 3×3 binomial into the rolling
+/// 3-line window, Sobel L1 magnitude thresholded in place, detect
+/// reduction accumulated in the same loop. `src` holds `rows + 4` source
+/// rows of width `w_in` (local row 0 = the band's first input row);
+/// `i_global0` offsets the Σi term to global output rows. Shared with the
+/// Two-Fusion executor, whose second partition runs exactly this tail
+/// over the materialized IIR plane.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn stencil_frame(
+    src: &[f32],
+    w_in: usize,
+    rows: usize,
+    i_global0: usize,
+    th: f32,
+    srows: &mut [f32],
+    dst: &mut [f32],
+    acc: &mut (f32, f32, f32),
+) {
+    let sw = w_in - 2; // smoothed-row width (and 3-row window width)
+    let ow = w_in - 4;
+    debug_assert_eq!(srows.len(), 3 * sw);
+    debug_assert_eq!(dst.len(), rows * ow);
+    // Prime the first two smoothed rows of this frame.
+    smooth_row(src, w_in, 0, &mut srows[..sw]);
+    smooth_row(src, w_in, 1, &mut srows[sw..2 * sw]);
+    for i in 0..rows {
+        // K3 rolling: compute smoothed row i+2 into the slot the Sobel
+        // window no longer needs.
+        let slot = (i + 2) % 3;
+        {
+            let row = &mut srows[slot * sw..(slot + 1) * sw];
+            smooth_row(src, w_in, i + 2, row);
+        }
+        let sr: &[f32] = &*srows;
+        let r0 = &sr[(i % 3) * sw..][..sw];
+        let r1 = &sr[((i + 1) % 3) * sw..][..sw];
+        let r2 = &sr[((i + 2) % 3) * sw..][..sw];
+        let d = &mut dst[i * ow..(i + 1) * ow];
+        // K4+K5 fused: Sobel L1 magnitude, thresholded in place, detect
+        // reduction accumulated in the same loop. The expressions mirror
+        // cpu_ref::gradient3's p(di, dj) reads term for term.
+        for (j, v) in d.iter_mut().enumerate() {
+            let gx = (r0[j + 2] - r0[j])
+                + 2.0 * (r1[j + 2] - r1[j])
+                + (r2[j + 2] - r2[j]);
+            let gy = (r2[j] - r0[j])
+                + 2.0 * (r2[j + 1] - r0[j + 1])
+                + (r2[j + 2] - r0[j + 2]);
+            let mag = gx.abs() + gy.abs();
+            let bin = if mag >= th { 255.0 } else { 0.0 };
+            *v = bin;
+            if bin > 0.0 {
+                acc.0 += 1.0;
+                acc.1 += (i_global0 + i) as f32;
+                acc.2 += j as f32;
+            }
+        }
+    }
+}
+
 /// One 3×3 binomial output row: smoothed row `r` (of `h-2` valid rows)
-/// from carry rows `r..r+3`. Accumulation order matches
+/// from source rows `r..r+3`. Accumulation order matches
 /// `cpu_ref::gaussian3` exactly so results are bit-identical.
 #[inline]
-fn smooth_row(carry: &[f32], w: usize, r: usize, dst: &mut [f32]) {
+pub(super) fn smooth_row(src: &[f32], w: usize, r: usize, dst: &mut [f32]) {
     const K: [[f32; 3]; 3] = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
-    let row0 = &carry[r * w..r * w + w];
-    let row1 = &carry[(r + 1) * w..(r + 1) * w + w];
-    let row2 = &carry[(r + 2) * w..(r + 2) * w + w];
+    let row0 = &src[r * w..r * w + w];
+    let row1 = &src[(r + 1) * w..(r + 1) * w + w];
+    let row2 = &src[(r + 2) * w..(r + 2) * w + w];
     for (j, d) in dst.iter_mut().enumerate() {
         let mut acc = 0.0f32;
         for (dj, kv) in K[0].iter().enumerate() {
@@ -213,13 +351,14 @@ impl Executor for FusedCpu {
         "fused_cpu"
     }
 
-    /// Check out this worker's scratch set up front so the pool's
-    /// allocation counter settles at engine build. The scratch is held
-    /// (not parked) for the executor's lifetime, so concurrent workers
-    /// can never contend for — or re-allocate — each other's buffers.
+    /// Check out this worker's per-band scratch set up front so the
+    /// pool's allocation counter settles at engine build. The scratch is
+    /// held (not parked) for the executor's lifetime, so concurrent
+    /// workers can never contend for — or re-allocate — each other's
+    /// buffers.
     fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
         let din = plan.box_dims.with_halo(plan.halo);
-        self.ensure_scratch(din.x * din.y, 3 * (din.y - 2));
+        self.ensure_scratch(&split_rows(din.x - 4, self.threads), din.y);
         Ok(())
     }
 
@@ -238,6 +377,11 @@ impl Executor for FusedCpu {
             threshold,
             plan.detect.is_some(),
         ))
+    }
+
+    /// One partition ({K1..K5}), so one timing: the whole fused pass.
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        vec![self.last_nanos.get()]
     }
 }
 
@@ -269,6 +413,21 @@ mod tests {
         let fused = FusedCpu::new(BufferPool::shared());
         let got = fused.run_box(&x, t, h, w, 96.0, true);
         assert_eq!(got, oracle(&x, t, h, w, 96.0));
+    }
+
+    #[test]
+    fn banded_pass_matches_oracle_at_every_thread_count() {
+        // Including counts that don't divide the 16 output rows (3, 5)
+        // and counts above the row count (32 clamps to 16 bands).
+        let mut g = Gen::new(17);
+        let (t, h, w) = (9, 20, 20);
+        let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        let want = oracle(&x, t, h, w, 96.0);
+        for threads in [2, 3, 5, 8, 16, 32] {
+            let fused = FusedCpu::with_threads(BufferPool::shared(), threads);
+            let got = fused.run_box(&x, t, h, w, 96.0, true);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 
     #[test]
@@ -307,6 +466,27 @@ mod tests {
             assert_eq!(out.detect.unwrap().len(), 8 * 3);
         }
         assert_eq!(pool.allocations(), warm, "per-box pool allocations");
+        assert!(fused.last_stage_nanos()[0] > 0);
+    }
+
+    #[test]
+    fn banded_executor_steady_state_allocates_nothing() {
+        let pool = BufferPool::shared();
+        let fused = FusedCpu::with_threads(pool.clone(), 3);
+        let plan = ExecutionPlan::resolve(
+            FusionMode::Full,
+            BoxDims::new(16, 16, 8),
+            true,
+        );
+        fused.prepare(&plan).unwrap();
+        let warm = pool.allocations();
+        assert_eq!(warm, 6, "3 bands x (carry slab + line buffers)");
+        let mut g = Gen::new(3);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        for _ in 0..8 {
+            fused.execute(&plan, 96.0, &x).unwrap();
+        }
+        assert_eq!(pool.allocations(), warm, "per-box pool allocations");
     }
 
     #[test]
@@ -314,5 +494,16 @@ mod tests {
         let scratch = FusedCpu::scratch_bytes(20, 20);
         let staged = super::super::StagedCpu::intermediate_bytes(9, 20, 20);
         assert!(scratch * 4 < staged, "{scratch} vs {staged}");
+    }
+
+    #[test]
+    fn banded_scratch_grows_by_halo_rows_only() {
+        let one = FusedCpu::scratch_bytes_banded(20, 20, 1);
+        let two = FusedCpu::scratch_bytes_banded(20, 20, 2);
+        // Second band duplicates 4 halo rows of 20 px plus its own line
+        // buffers: small against the staged intermediates.
+        assert_eq!(two - one, 4 * (4 * 20 + 3 * 18));
+        let staged = super::super::StagedCpu::intermediate_bytes(9, 20, 20);
+        assert!(two * 4 < staged);
     }
 }

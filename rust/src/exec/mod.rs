@@ -1,10 +1,11 @@
 //! Pluggable per-box execution backends.
 //!
 //! The paper's core claim (§VII, Figs 10/16) is that fusing the K1..K5
-//! chain into one kernel removes the intermediate global-memory
-//! round-trips and yields a 2–3× speedup. This module reproduces that
-//! transformation where it can always run — on the host CPU — and makes
-//! the whole engine backend-pluggable so the same
+//! chain into partitions that never spill full-frame intermediates
+//! removes the global-memory round-trips and yields a 2–3× speedup. This
+//! module reproduces that transformation where it can always run — on the
+//! host CPU — with one executor per partition shape, and makes the whole
+//! engine backend-pluggable so the same
 //! Engine → queue → worker → result-router path executes either against
 //! PJRT artifacts or natively:
 //!
@@ -14,40 +15,54 @@
 //! * [`PjrtExec`] — the artifact chain: each stage is one compiled HLO
 //!   executable, every intermediate crosses the host boundary. This is
 //!   the measured "GPU" arm when `artifacts/` is present.
-//! * [`StagedCpu`] — the kernel-by-kernel `cpu_ref` chain. It
-//!   deliberately materializes every intermediate (gray, IIR, smoothed,
-//!   gradient) at full box size — the traffic baseline, i.e. the "No
-//!   Fusion" memory behavior on a CPU.
-//! * [`FusedCpu`] — the fused single pass: BT.601 luma is computed
-//!   inline, the IIR carry lives in one reusable plane, and the 3×3
-//!   binomial + Sobel stencils run over three rolling line buffers with
-//!   the threshold (and detect accumulation) folded into the gradient
-//!   loop. No full-frame intermediate ever exists — the CPU analogue of
+//! * [`StagedCpu`] — the kernel-by-kernel `cpu_ref` chain (partition
+//!   `{K1}{K2}{K3}{K4}{K5}`). It deliberately materializes every
+//!   intermediate (gray, IIR, smoothed, gradient) at full box size — the
+//!   traffic baseline, i.e. the "No Fusion" memory behavior on a CPU.
+//! * [`TwoFusedCpu`] — the paper's Two-Fusion partition
+//!   (`{K1,K2}{K3,K4,K5}`) with exactly ONE materialized intermediate
+//!   (the IIR plane) between the two fused halves.
+//! * [`FusedCpu`] — the All-Fusion single pass (`{K1..K5}`): BT.601 luma
+//!   inline, IIR carry slab, rolling binomial/Sobel line buffers, the
+//!   threshold (and detect accumulation) folded into the gradient loop.
+//!   No full-frame intermediate ever exists — the CPU analogue of
 //!   keeping fused intermediates in shared memory.
+//! * [`bands`] — intra-box parallelism shared by the fused executors:
+//!   boxes split into halo-overlapped row [`bands::Band`]s executed on a
+//!   per-worker [`bands::BandPool`] thread set
+//!   (`RunConfig::intra_box_threads`), bit-identical to the
+//!   single-threaded pass at any thread count.
 //! * [`BufferPool`] — checked-out scratch per worker, returned on box
 //!   completion, so steady-state streaming does zero allocations per box
 //!   (counter-enforced, see [`pool`]).
 //!
 //! Backend selection is [`Backend`](crate::config::Backend) in the run
 //! config: `Backend::Pjrt` needs `artifacts/`; `Backend::Cpu` runs
-//! everywhere, mapping `FusionMode::Full` to [`FusedCpu`] and the other
-//! arms to [`StagedCpu`] (see [`cpu_executor`]).
+//! everywhere. The CPU executor is picked by the PARTITION the plan's
+//! DP solve chose (see [`ExecutionPlan::resolve`]), not hardcoded per
+//! fusion arm — `{K1..K5}` lowers to [`FusedCpu`], `{K1,K2}{K3..K5}` to
+//! [`TwoFusedCpu`], all-singletons to [`StagedCpu`] (see
+//! [`cpu_executor`]). There is no silent fallback: a partition without a
+//! CPU executor is a build-time error.
 
+pub mod bands;
 pub mod fused;
 pub mod pjrt;
 pub mod pool;
 pub mod staged;
+pub mod two_fused;
 
 use std::sync::Arc;
 
-use crate::config::FusionMode;
 use crate::coordinator::plan::ExecutionPlan;
-use crate::Result;
+use crate::{Error, Result};
 
+pub use bands::{split_rows, Band, BandPool};
 pub use fused::FusedCpu;
 pub use pjrt::PjrtExec;
 pub use pool::{BufferPool, PoolBuf};
 pub use staged::StagedCpu;
+pub use two_fused::TwoFusedCpu;
 
 /// Output of one box execution: the binarized (t, x, y) box and, when the
 /// plan requests detection, per-frame `(mass, Σi, Σj)` rows flattened to
@@ -67,8 +82,8 @@ pub trait Executor {
     fn name(&self) -> &'static str;
 
     /// One-time warm-up at worker spawn, before the first job: PJRT
-    /// compiles the plan's executables here, the fused CPU pass prewarms
-    /// its pool scratch. Part of engine build cost, never of job cost.
+    /// compiles the plan's executables here, the fused CPU passes prewarm
+    /// their pool scratch. Part of engine build cost, never of job cost.
     fn prepare(&self, _plan: &ExecutionPlan) -> Result<()> {
         Ok(())
     }
@@ -82,22 +97,40 @@ pub trait Executor {
         threshold: f32,
         input: &[f32],
     ) -> Result<BoxOutput>;
+
+    /// Wall nanos of each partition of the most recent
+    /// [`execute`](Executor::execute) call, one entry per fused partition
+    /// in execution order (empty when the backend doesn't track them).
+    /// The scheduler snapshots this per box for the engine's
+    /// per-partition accounting.
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        Vec::new()
+    }
 }
 
-/// Build the CPU executor for a fusion arm: `Full` lowers the whole chain
-/// into the single-pass [`FusedCpu`]; `None` and `Two` run the
-/// materializing [`StagedCpu`] baseline. The CPU reference has no partial
-/// two-way grouping yet (ROADMAP open item), so on `Backend::Cpu` the
-/// `Two` arm EXECUTES the unfused 5-stage chain while its dispatch and
-/// traffic metrics still reflect the 2-stage plan model — compare only
-/// `None` vs `Full` for measured CPU fusion effects.
+/// Build the CPU executor for a resolved plan, dispatching on the
+/// PARTITION the plan's DP solve selected (`{K1..K5}` → [`FusedCpu`],
+/// `{K1,K2}{K3..K5}` → [`TwoFusedCpu`], singletons → [`StagedCpu`]).
+/// `intra_box_threads` sizes the fused executors' band thread set.
+/// A partition with no CPU executor is an explicit error — never a
+/// silent downgrade to the staged baseline.
 pub fn cpu_executor(
-    mode: FusionMode,
+    plan: &ExecutionPlan,
     pool: Arc<BufferPool>,
-) -> Box<dyn Executor> {
-    match mode {
-        FusionMode::Full => Box::new(FusedCpu::new(pool)),
-        FusionMode::None | FusionMode::Two => Box::new(StagedCpu::new()),
+    intra_box_threads: usize,
+) -> Result<Box<dyn Executor>> {
+    let shape = plan.partition_shape();
+    if shape == [5] {
+        Ok(Box::new(FusedCpu::with_threads(pool, intra_box_threads)))
+    } else if shape == [2, 3] {
+        Ok(Box::new(TwoFusedCpu::with_threads(pool, intra_box_threads)))
+    } else if !shape.is_empty() && shape.iter().all(|&len| len == 1) {
+        Ok(Box::new(StagedCpu::new()))
+    } else {
+        Err(Error::Plan(format!(
+            "no CPU executor for partition {shape:?} (have {{K1..K5}}, \
+             {{K1,K2}}{{K3..K5}}, and singletons)"
+        )))
     }
 }
 
@@ -133,14 +166,48 @@ pub(crate) fn check_cpu_input(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::FusionMode;
     use crate::fusion::halo::BoxDims;
 
+    fn plan_for(mode: FusionMode) -> ExecutionPlan {
+        ExecutionPlan::resolve(mode, BoxDims::new(16, 16, 8), false)
+    }
+
     #[test]
-    fn cpu_executor_maps_arms() {
+    fn cpu_executor_follows_the_plan_partition() {
         let pool = BufferPool::shared();
-        assert_eq!(cpu_executor(FusionMode::Full, pool.clone()).name(), "fused_cpu");
-        assert_eq!(cpu_executor(FusionMode::None, pool.clone()).name(), "staged_cpu");
-        assert_eq!(cpu_executor(FusionMode::Two, pool).name(), "staged_cpu");
+        assert_eq!(
+            cpu_executor(&plan_for(FusionMode::Full), pool.clone(), 1)
+                .unwrap()
+                .name(),
+            "fused_cpu"
+        );
+        assert_eq!(
+            cpu_executor(&plan_for(FusionMode::Two), pool.clone(), 1)
+                .unwrap()
+                .name(),
+            "two_fused_cpu"
+        );
+        assert_eq!(
+            cpu_executor(&plan_for(FusionMode::None), pool, 1)
+                .unwrap()
+                .name(),
+            "staged_cpu"
+        );
+    }
+
+    #[test]
+    fn unsupported_partition_is_an_error_not_a_fallback() {
+        use crate::fusion::candidates::Segment;
+        let mut plan = plan_for(FusionMode::Full);
+        plan.partition = vec![
+            Segment { start: 0, len: 1 },
+            Segment { start: 1, len: 4 },
+        ];
+        let err = cpu_executor(&plan, BufferPool::shared(), 1);
+        assert!(err.is_err());
+        let msg = format!("{}", err.err().unwrap());
+        assert!(msg.contains("no CPU executor"), "{msg}");
     }
 
     #[test]

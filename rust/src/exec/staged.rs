@@ -9,6 +9,9 @@
 //! allocation-heavy so `fig16_fused_cpu` measures the real unfused
 //! memory behavior.
 
+use std::cell::RefCell;
+use std::time::Instant;
+
 use crate::coordinator::plan::ExecutionPlan;
 use crate::cpu_ref;
 use crate::Result;
@@ -17,11 +20,15 @@ use super::{check_cpu_input, BoxOutput, Executor};
 
 /// The unfused CPU backend: one materialized buffer per stage.
 #[derive(Debug, Default)]
-pub struct StagedCpu;
+pub struct StagedCpu {
+    /// Wall nanos of K1..K5 for the most recent box (one per stage —
+    /// the all-singletons partition).
+    last_nanos: RefCell<Vec<u64>>,
+}
 
 impl StagedCpu {
     pub fn new() -> StagedCpu {
-        StagedCpu
+        StagedCpu::default()
     }
 
     /// Bytes written to and re-read from intermediate buffers for one box
@@ -50,11 +57,23 @@ impl Executor for StagedCpu {
         input: &[f32],
     ) -> Result<BoxOutput> {
         let (t_in, h_in, w_in) = check_cpu_input(plan, input)?;
+        let mut nanos = Vec::with_capacity(5);
+        let mut lap = Instant::now();
+        let mut tick = |nanos: &mut Vec<u64>| {
+            nanos.push(lap.elapsed().as_nanos() as u64);
+            lap = Instant::now();
+        };
         let g = cpu_ref::rgb2gray(input, t_in, h_in, w_in);
+        tick(&mut nanos);
         let y = cpu_ref::iir(&g, t_in, h_in, w_in, cpu_ref::kernels::IIR_ALPHA);
+        tick(&mut nanos);
         let s = cpu_ref::gaussian3(&y, t_in - 1, h_in, w_in);
+        tick(&mut nanos);
         let d = cpu_ref::gradient3(&s, t_in - 1, h_in - 2, w_in - 2);
+        tick(&mut nanos);
         let binary = cpu_ref::threshold(&d, threshold);
+        tick(&mut nanos);
+        *self.last_nanos.borrow_mut() = nanos;
         let bx = plan.box_dims;
         let detect = plan.detect.as_ref().map(|_| {
             cpu_ref::detect(&binary, bx.t, bx.x, bx.y)
@@ -63,6 +82,11 @@ impl Executor for StagedCpu {
                 .collect()
         });
         Ok(BoxOutput { binary, detect })
+    }
+
+    /// Five singleton partitions, five timings: K1..K5 in order.
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        self.last_nanos.borrow().clone()
     }
 }
 

@@ -1,0 +1,389 @@
+//! Two-Fusion CPU execution: the paper's {K1,K2} / {K3,K4,K5} partition,
+//! actually executed (not approximated by the staged baseline).
+//!
+//! The Two-Fusion arm groups the chain into two fused kernels with
+//! exactly ONE materialized intermediate between them:
+//!
+//! * **Partition A = {K1,K2}** — BT.601 luma computed inline from the
+//!   RGBA input, feeding the IIR recurrence directly. The gray plane
+//!   never exists; the IIR output `y` is the one intermediate written to
+//!   memory, `(t-1, h, w)` at full box size (pool-checked-out, reused
+//!   across boxes).
+//! * **Partition B = {K3,K4,K5}** — the binomial + Sobel + threshold tail
+//!   over `y`, using the same rolling 3-line window as [`FusedCpu`]
+//!   (via [`stencil_frame`]); smoothed and gradient planes never exist,
+//!   and the detect reduction folds into the same loop.
+//!
+//! Both partitions run on the executor's band thread set: partition A
+//! splits the plane rows (elementwise, no halo), partition B splits the
+//! output rows with the 2-row stencil halo read from the shared `y`.
+//! `BandPool::run` joins between the partitions — the CPU analogue of
+//! the kernel-boundary global synchronization the paper's Two-Fusion arm
+//! pays and Full Fusion deletes. Per-partition wall times are surfaced
+//! through [`Executor::last_stage_nanos`] into the engine stats.
+//!
+//! Every arithmetic expression matches `cpu_ref` operation for
+//! operation, so the output is bit-identical to [`StagedCpu`] (and the
+//! `cpu_ref` oracle) at any thread count — property-tested in
+//! `tests/exec_backend.rs`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
+use crate::Result;
+
+use super::bands::{
+    band_views, detect_partials, merge_detect, split_rows, Band, BandPool,
+};
+use super::fused::stencil_frame;
+use super::pool::{BufferPool, PoolBuf};
+use super::{check_cpu_input, BoxOutput, Executor};
+
+/// Per-worker state: the single materialized intermediate (`y`, the IIR
+/// output) and one rolling line-buffer window per partition-B band.
+#[derive(Debug)]
+struct State {
+    y: PoolBuf,
+    srows: Vec<PoolBuf>,
+}
+
+/// The Two-Fusion CPU backend: two fused partitions, one intermediate.
+#[derive(Debug)]
+pub struct TwoFusedCpu {
+    pool: Arc<BufferPool>,
+    threads: usize,
+    bands: BandPool,
+    state: RefCell<Option<State>>,
+    last_nanos: Cell<(u64, u64)>,
+}
+
+impl TwoFusedCpu {
+    /// Single-threaded Two-Fusion executor.
+    pub fn new(pool: Arc<BufferPool>) -> TwoFusedCpu {
+        TwoFusedCpu::with_threads(pool, 1)
+    }
+
+    /// Two-Fusion executor running both partitions as `threads` row
+    /// bands on a persistent band thread set.
+    pub fn with_threads(pool: Arc<BufferPool>, threads: usize) -> TwoFusedCpu {
+        assert!(threads >= 1, "intra_box_threads must be >= 1");
+        TwoFusedCpu {
+            pool,
+            threads,
+            bands: BandPool::new(threads - 1),
+            state: RefCell::new(None),
+            last_nanos: Cell::new((0, 0)),
+        }
+    }
+
+    /// Intra-box threads this executor fans each box out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Bytes written to and re-read from the ONE materialized
+    /// intermediate (`y`) per box — between
+    /// [`StagedCpu::intermediate_bytes`](super::StagedCpu::intermediate_bytes)
+    /// (four intermediates) and [`FusedCpu`]'s rolling scratch (none).
+    pub fn intermediate_bytes(t_in: usize, h_in: usize, w_in: usize) -> u64 {
+        (2 * 4 * (t_in - 1) * h_in * w_in) as u64
+    }
+
+    fn ensure_state(&self, t_in: usize, h_in: usize, w_in: usize) {
+        let y_len = (t_in - 1) * h_in * w_in;
+        let n_bands = split_rows(h_in - 4, self.threads).len();
+        let lines = 3 * (w_in - 2);
+        let mut slot = self.state.borrow_mut();
+        let fits = slot.as_ref().is_some_and(|s| {
+            s.y.len() == y_len
+                && s.srows.len() == n_bands
+                && s.srows.iter().all(|b| b.len() == lines)
+        });
+        if !fits {
+            *slot = None; // return old buffers before re-checkout
+            *slot = Some(State {
+                y: self.pool.checkout(y_len),
+                srows: (0..n_bands)
+                    .map(|_| self.pool.checkout(lines))
+                    .collect(),
+            });
+        }
+    }
+
+    /// The two-partition pass on a raw halo'd buffer:
+    /// `(t_in, h_in, w_in, 4)` RGBA → `(t_in-1, h_in-4, w_in-4)` binary,
+    /// plus per-frame detect rows when `with_detect`. Bit-identical to
+    /// `cpu_ref::pipeline` + `cpu_ref::detect`.
+    pub fn run_box(
+        &self,
+        x: &[f32],
+        t_in: usize,
+        h_in: usize,
+        w_in: usize,
+        th: f32,
+        with_detect: bool,
+    ) -> BoxOutput {
+        assert!(t_in >= 2 && h_in >= 5 && w_in >= 5);
+        assert_eq!(x.len(), t_in * h_in * w_in * 4);
+        let (t_out, oh, ow) = (t_in - 1, h_in - 4, w_in - 4);
+        self.ensure_state(t_in, h_in, w_in);
+        let mut guard = self.state.borrow_mut();
+        let state = guard.as_mut().unwrap();
+        let y: &mut [f32] = &mut state.y;
+
+        // ── Partition A: {K1,K2}, banded over the plane rows. ──────────
+        // Elementwise in space, so bands split the h_in rows with no
+        // halo; the recurrence stays sequential over t inside each band.
+        let a_bands = split_rows(h_in, self.threads);
+        let y_rows = band_views(&mut *y, &a_bands, w_in);
+        let a_started = Instant::now();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a_bands
+            .iter()
+            .zip(y_rows)
+            .map(|(band, planes)| {
+                let band = *band;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    iir_band(x, t_in, h_in, w_in, band, planes);
+                });
+                task
+            })
+            .collect();
+        self.bands.run(tasks); // join = the kernel-boundary sync
+        let a_nanos = a_started.elapsed().as_nanos() as u64;
+
+        // ── Partition B: {K3,K4,K5}, banded over the output rows. ──────
+        let y: &[f32] = y;
+        let b_bands = split_rows(oh, self.threads);
+        let n_bands = b_bands.len();
+        let mut out = vec![0.0f32; t_out * oh * ow];
+        let mut partials =
+            with_detect.then(|| vec![0.0f32; n_bands * t_out * 3]);
+        let band_rows = band_views(&mut out, &b_bands, ow);
+        let mut parts =
+            detect_partials(partials.as_deref_mut(), n_bands, t_out);
+        let b_started = Instant::now();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = b_bands
+            .iter()
+            .zip(state.srows.iter_mut())
+            .zip(band_rows)
+            .zip(parts.drain(..))
+            .map(|(((band, srows), rows), det)| {
+                let band = *band;
+                let srows: &mut [f32] = srows;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    tail_band(
+                        y, t_out, h_in, w_in, th, band, srows, rows, det,
+                    );
+                });
+                task
+            })
+            .collect();
+        self.bands.run(tasks);
+        self.last_nanos
+            .set((a_nanos, b_started.elapsed().as_nanos() as u64));
+
+        let detect = partials.map(|p| merge_detect(&p, n_bands, t_out));
+        BoxOutput {
+            binary: out,
+            detect,
+        }
+    }
+}
+
+/// Partition A for one band: fused K1+K2 over the band's plane rows,
+/// writing the only materialized intermediate. The warm start reads the
+/// frame-0 luma inline (`y[-1] = gray(x[0])`), later frames read the
+/// band's own previous `y` plane — same expressions, same order as
+/// `cpu_ref::rgb2gray` + `cpu_ref::iir`, hence bit-identical.
+fn iir_band(
+    x: &[f32],
+    t_in: usize,
+    h_in: usize,
+    w_in: usize,
+    band: Band,
+    mut planes: Vec<&mut [f32]>,
+) {
+    let plane = h_in * w_in;
+    let n = band.rows * w_in;
+    let luma = |px: &[f32]| LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
+    for ft in 1..t_in {
+        let base = (ft * plane + band.i0 * w_in) * 4;
+        let frame = &x[base..base + n * 4];
+        let of = ft - 1;
+        if of == 0 {
+            let f0 = &x[band.i0 * w_in * 4..(band.i0 * w_in + n) * 4];
+            for ((d, px), p0) in planes[0]
+                .iter_mut()
+                .zip(frame.chunks_exact(4))
+                .zip(f0.chunks_exact(4))
+            {
+                *d = IIR_ALPHA * luma(px) + (1.0 - IIR_ALPHA) * luma(p0);
+            }
+        } else {
+            let (prev, cur) = planes.split_at_mut(of);
+            for ((d, px), p) in cur[0]
+                .iter_mut()
+                .zip(frame.chunks_exact(4))
+                .zip(prev[of - 1].iter())
+            {
+                *d = IIR_ALPHA * luma(px) + (1.0 - IIR_ALPHA) * *p;
+            }
+        }
+    }
+}
+
+/// Partition B for one band: the K3..K5 stencil tail over the band's
+/// rows of the materialized `y`, frames independent (no carry).
+#[allow(clippy::too_many_arguments)]
+fn tail_band(
+    y: &[f32],
+    t_out: usize,
+    h_in: usize,
+    w_in: usize,
+    th: f32,
+    band: Band,
+    srows: &mut [f32],
+    mut out_rows: Vec<&mut [f32]>,
+    mut detect: Option<&mut [f32]>,
+) {
+    let plane = h_in * w_in;
+    for of in 0..t_out {
+        let base = of * plane + band.i0 * w_in;
+        let src = &y[base..base + (band.rows + 4) * w_in];
+        let mut acc = (0.0f32, 0.0f32, 0.0f32);
+        stencil_frame(
+            src,
+            w_in,
+            band.rows,
+            band.i0,
+            th,
+            srows,
+            &mut *out_rows[of],
+            &mut acc,
+        );
+        if let Some(rows) = detect.as_deref_mut() {
+            rows[of * 3] = acc.0;
+            rows[of * 3 + 1] = acc.1;
+            rows[of * 3 + 2] = acc.2;
+        }
+    }
+}
+
+impl Executor for TwoFusedCpu {
+    fn name(&self) -> &'static str {
+        "two_fused_cpu"
+    }
+
+    /// Check out the `y` intermediate and per-band line buffers up front
+    /// so the pool's allocation counter settles at engine build.
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
+        let din = plan.box_dims.with_halo(plan.halo);
+        self.ensure_state(din.t, din.x, din.y);
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let (t_in, h_in, w_in) = check_cpu_input(plan, input)?;
+        Ok(self.run_box(
+            input,
+            t_in,
+            h_in,
+            w_in,
+            threshold,
+            plan.detect.is_some(),
+        ))
+    }
+
+    /// Two partitions, two timings: ({K1,K2}, {K3,K4,K5}).
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        let (a, b) = self.last_nanos.get();
+        vec![a, b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::cpu_ref;
+    use crate::fusion::halo::BoxDims;
+    use crate::prop::{run_prop, Gen};
+
+    fn oracle(x: &[f32], t: usize, h: usize, w: usize, th: f32) -> BoxOutput {
+        let binary = cpu_ref::pipeline(x, t, h, w, th);
+        let detect = cpu_ref::detect(&binary, t - 1, h - 4, w - 4)
+            .into_iter()
+            .flatten()
+            .collect();
+        BoxOutput {
+            binary,
+            detect: Some(detect),
+        }
+    }
+
+    #[test]
+    fn two_fused_matches_oracle_on_fixed_shape() {
+        let mut g = Gen::new(23);
+        let (t, h, w) = (9, 20, 20);
+        let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        for threads in [1, 2, 3, 7] {
+            let tf = TwoFusedCpu::with_threads(BufferPool::shared(), threads);
+            let got = tf.run_box(&x, t, h, w, 96.0, true);
+            assert_eq!(got, oracle(&x, t, h, w, 96.0), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prop_two_fused_equals_pipeline_oracle() {
+        let tf = TwoFusedCpu::new(BufferPool::shared());
+        run_prop("two_fused_cpu==cpu_ref::pipeline", 60, |g: &mut Gen| {
+            let t = g.usize_in(2, 6);
+            let h = g.usize_in(5, 17);
+            let w = g.usize_in(5, 17);
+            let th = g.f32_in(0.0, 400.0);
+            let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+            let got = tf.run_box(&x, t, h, w, th, true);
+            assert_eq!(got, oracle(&x, t, h, w, th), "t={t} h={h} w={w} th={th}");
+        });
+    }
+
+    #[test]
+    fn executor_path_steady_state_allocates_nothing() {
+        let pool = BufferPool::shared();
+        let tf = TwoFusedCpu::new(pool.clone());
+        let plan = ExecutionPlan::resolve(
+            FusionMode::Two,
+            BoxDims::new(16, 16, 8),
+            true,
+        );
+        tf.prepare(&plan).unwrap();
+        let warm = pool.allocations();
+        assert_eq!(warm, 2, "y intermediate + one band's line buffers");
+        let mut g = Gen::new(3);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        for _ in 0..8 {
+            let out = tf.execute(&plan, 96.0, &x).unwrap();
+            assert_eq!(out.binary.len(), 8 * 16 * 16);
+            assert_eq!(out.detect.unwrap().len(), 8 * 3);
+        }
+        assert_eq!(pool.allocations(), warm, "per-box pool allocations");
+        let stages = tf.last_stage_nanos();
+        assert_eq!(stages.len(), 2, "one timing per partition");
+    }
+
+    #[test]
+    fn one_intermediate_sits_between_staged_and_fused() {
+        let two = TwoFusedCpu::intermediate_bytes(9, 20, 20);
+        let staged = super::super::StagedCpu::intermediate_bytes(9, 20, 20);
+        let fused = super::super::FusedCpu::scratch_bytes(20, 20);
+        assert!(fused < two && two < staged, "{fused} < {two} < {staged}");
+    }
+}

@@ -21,10 +21,11 @@
 //!
 //! Execution is backend-pluggable ([`exec`]): `Backend::Pjrt` dispatches
 //! the AOT artifact chain; `Backend::Cpu` runs the same engine against
-//! native executors — the fused single-pass `FusedCpu` (the paper's
-//! fusion transformation reproduced on the host, rolling scratch from a
-//! zero-steady-state-allocation buffer pool) or the materializing
-//! `StagedCpu` baseline — so the full path runs and is tested offline.
+//! native executors selected by the plan's DP-chosen partition — the
+//! fused single-pass `FusedCpu` (optionally band-parallel within each
+//! box via `intra_box_threads`), the two-partition `TwoFusedCpu` (one
+//! materialized intermediate), or the materializing `StagedCpu`
+//! baseline — so the full path runs and is tested offline.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs once; the PJRT backend loads `artifacts/*.hlo.txt` via the

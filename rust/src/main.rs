@@ -2,17 +2,22 @@
 //!
 //! ```text
 //! kfuse plan     [--device k20|c1060|gtx750ti] [--input 256x256x1000]
-//! kfuse run      [--mode full|two|none] [--backend pjrt|cpu] [--size 256]
-//!                [--frames 64] [--box 32x32x8] [--workers N] [--markers M]
+//! kfuse run      [--mode full|two|none|auto] [--backend pjrt|cpu]
+//!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
+//!                [--intra-threads N] [--markers M]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
-//!                [--size 256] [--frames 256]
+//!                [--size 256] [--frames 256] [--intra-threads N]
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
 //!
 //! `--backend cpu` swaps the PJRT artifact chain for the native CPU
-//! executors (fused single pass under `--mode full`), so `run`/`serve`
-//! work on hosts without `artifacts/`.
+//! executors, so `run`/`serve` work on hosts without `artifacts/`. The
+//! executor follows the plan's DP-chosen partition: `--mode full` runs
+//! the single-pass `FusedCpu`, `--mode two` the two-partition
+//! `TwoFusedCpu`, `--mode none` the staged baseline, and `--mode auto`
+//! lets the planner pick. `--intra-threads N` fans each box out to N row
+//! bands on the fused executors (bit-identical to N=1).
 //!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
@@ -114,6 +119,8 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.frames = args.usize_or("frames", cfg.frames)?;
     cfg.fps = args.f64_or("fps", cfg.fps)?;
     cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.intra_box_threads =
+        args.usize_or("intra-threads", cfg.intra_box_threads)?;
     cfg.markers = args.usize_or("markers", cfg.markers)?;
     cfg.queue_depth = args.usize_or("queue", cfg.queue_depth)?;
     if let Some(m) = args.get("mode") {
@@ -171,7 +178,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.roi_only = args.get("roi").map(|v| v == "true" || v == "1")
         .unwrap_or(cfg.roi_only);
     println!(
-        "run: {} on {} | {}x{} x {} frames | box {}x{}x{} | {} workers{}",
+        "run: {} on {} | {}x{} x {} frames | box {}x{}x{} | {} workers \
+         x {} band threads{}",
         cfg.mode.name(),
         cfg.backend.name(),
         cfg.frame_size,
@@ -181,9 +189,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.box_dims.y,
         cfg.box_dims.t,
         cfg.workers,
+        cfg.intra_box_threads,
         if cfg.roi_only { " | roi-only" } else { "" }
     );
     let mut engine = Engine::builder().config(cfg.clone()).build()?;
+    println!(
+        "partition: {} ({})",
+        engine.plan().partition_names(),
+        engine.plan().effective.name()
+    );
     if cfg.roi_only {
         let (clip, _) = coordinator::synth_clip(&cfg, 42);
         let (rep, coverage) = engine.roi(Arc::new(clip))?;

@@ -127,6 +127,13 @@ impl Manifest {
                 format!("k4_s{s}_t{t}"),
                 format!("k5_s{s}_t{t}"),
             ],
+            // Auto is a planning-time mode only: `ExecutionPlan::resolve`
+            // maps it to the DP-chosen concrete arm before any artifact
+            // lookup happens.
+            FusionMode::Auto => panic!(
+                "FusionMode::Auto must be resolved to a concrete arm \
+                 (ExecutionPlan::resolve) before artifact lookup"
+            ),
         }
     }
 

@@ -1,12 +1,14 @@
 //! CPU execution backends vs the `cpu_ref` oracle, through the same
 //! staging path the scheduler uses (`extract_box_into` → `Executor`).
 //!
-//! The contract: `FusedCpu` (single tiled pass, rolling scratch) is
-//! bit-identical to `StagedCpu` (materializing kernel-by-kernel chain) —
-//! which is itself pinned to `cpu_ref::pipeline` — over randomized clip
-//! shapes, box geometries, thresholds, and box origins, INCLUDING boxes
-//! whose halos hang over the frame border and read edge-replicated
-//! (clamped) pixels.
+//! The contract: `FusedCpu` (single tiled pass, rolling scratch, at ANY
+//! `intra_box_threads`) and `TwoFusedCpu` (two partitions, one
+//! materialized intermediate) are bit-identical to `StagedCpu`
+//! (materializing kernel-by-kernel chain) — which is itself pinned to
+//! `cpu_ref::pipeline` — over randomized clip shapes, box geometries,
+//! thresholds, band counts (including ones that don't divide the box
+//! height), and box origins, INCLUDING boxes whose halos hang over the
+//! frame border and read edge-replicated (clamped) pixels.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,7 +16,7 @@ use std::time::Instant;
 use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::ExecutionPlan;
-use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu};
+use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu};
 use kfuse::fusion::halo::BoxDims;
 use kfuse::prop::{run_prop, Gen};
 use kfuse::video::{BoxTask, Video};
@@ -27,41 +29,47 @@ fn random_clip(g: &mut Gen, t: usize, h: usize, w: usize) -> Video {
     v
 }
 
+/// A random box job biased toward the frame borders so the clamped
+/// (edge-replicated) halo paths are exercised constantly. Returns the
+/// job and the plan resolved for `mode`.
+fn random_border_job(
+    g: &mut Gen,
+    mode: FusionMode,
+) -> (BoxJob, ExecutionPlan) {
+    let bx = g.usize_in(2, 10); // output box is square (paper eq 4)
+    let bt = g.usize_in(1, 4);
+    // Frames can be as small as one box, so corner boxes clamp on BOTH
+    // spatial sides and the first temporal box clamps its dt-halo into
+    // frame 0.
+    let h = bx + g.usize_in(0, 6);
+    let w = bx + g.usize_in(0, 6);
+    let t = bt + g.usize_in(1, 3);
+    let clip = Arc::new(random_clip(g, t, h, w));
+    let plan =
+        ExecutionPlan::resolve(mode, BoxDims::new(bx, bx, bt), g.bool());
+    let job = BoxJob {
+        job_id: 1,
+        task: BoxTask {
+            id: 0,
+            t0: *g.choose(&[0, t - bt]),
+            i0: *g.choose(&[0, h - bx]),
+            j0: *g.choose(&[0, w - bx]),
+            dims: plan.box_dims,
+        },
+        clip,
+        clip_t0: 0,
+        enqueued: Instant::now(),
+    };
+    (job, plan)
+}
+
 #[test]
 fn prop_fused_equals_staged_including_clamped_borders() {
     let fused = FusedCpu::new(BufferPool::shared());
     let staged = StagedCpu::new();
     run_prop("FusedCpu==StagedCpu (borders)", 50, |g: &mut Gen| {
-        let bx = g.usize_in(2, 10); // output box is square (paper eq 4)
-        let bt = g.usize_in(1, 4);
-        // Frames can be as small as one box, so corner boxes clamp on
-        // BOTH spatial sides and the first temporal box clamps its
-        // dt-halo into frame 0.
-        let h = bx + g.usize_in(0, 6);
-        let w = bx + g.usize_in(0, 6);
-        let t = bt + g.usize_in(1, 3);
-        let clip = Arc::new(random_clip(g, t, h, w));
-        let plan = ExecutionPlan::resolve(
-            FusionMode::Full,
-            BoxDims::new(bx, bx, bt),
-            g.bool(),
-        );
+        let (job, plan) = random_border_job(g, FusionMode::Full);
         let threshold = g.f32_in(0.0, 400.0);
-        let job = BoxJob {
-            job_id: 1,
-            task: BoxTask {
-                id: 0,
-                // Bias origins toward the borders (0 and the max) so the
-                // clamped paths are exercised constantly.
-                t0: *g.choose(&[0, t - bt]),
-                i0: *g.choose(&[0, h - bx]),
-                j0: *g.choose(&[0, w - bx]),
-                dims: plan.box_dims,
-            },
-            clip,
-            clip_t0: 0,
-            enqueued: Instant::now(),
-        };
         let mut staging = Vec::new();
         let a = execute_box(&fused, &plan, threshold, &job, &mut staging)
             .unwrap();
@@ -75,6 +83,65 @@ fn prop_fused_equals_staged_including_clamped_borders() {
         assert_eq!(a.detect, b.detect);
         assert_eq!(a.binary.len(), plan.box_dims.pixels());
         assert!(a.binary.iter().all(|&v| v == 0.0 || v == 255.0));
+    });
+}
+
+/// Satellite contract: the Two-Fusion executor (one materialized
+/// intermediate) is bit-identical to the staged chain over random
+/// shapes, thresholds, border boxes, and band thread counts.
+#[test]
+fn prop_two_fused_equals_staged_including_clamped_borders() {
+    let staged = StagedCpu::new();
+    run_prop("TwoFusedCpu==StagedCpu (borders)", 50, |g: &mut Gen| {
+        let (job, plan) = random_border_job(g, FusionMode::Two);
+        let threshold = g.f32_in(0.0, 400.0);
+        // Fresh executor per case: band counts that don't divide the box
+        // height (and exceed it) must all agree.
+        let two = TwoFusedCpu::with_threads(
+            BufferPool::shared(),
+            g.usize_in(1, 5),
+        );
+        let mut staging = Vec::new();
+        let a = execute_box(&two, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        let b = execute_box(&staged, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        assert_eq!(
+            a.binary, b.binary,
+            "threads={} box t0={} i0={} j0={} dims={:?} th={threshold}",
+            two.threads(),
+            job.task.t0,
+            job.task.i0,
+            job.task.j0,
+            plan.box_dims
+        );
+        assert_eq!(a.detect, b.detect);
+    });
+}
+
+/// Satellite contract: the banded fused pass is bit-identical to the
+/// serial fused pass at every thread count, including band counts that
+/// don't divide the box height evenly and exceed it.
+#[test]
+fn prop_fused_parallel_equals_fused_serial() {
+    let serial = FusedCpu::new(BufferPool::shared());
+    run_prop("FusedCpu(N)==FusedCpu(1) (borders)", 50, |g: &mut Gen| {
+        let (job, plan) = random_border_job(g, FusionMode::Full);
+        let threshold = g.f32_in(0.0, 400.0);
+        let threads = g.usize_in(2, 6);
+        let banded =
+            FusedCpu::with_threads(BufferPool::shared(), threads);
+        let mut staging = Vec::new();
+        let a = execute_box(&banded, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        let b = execute_box(&serial, &plan, threshold, &job, &mut staging)
+            .unwrap();
+        assert_eq!(
+            a.binary, b.binary,
+            "threads={threads} box t0={} i0={} j0={} dims={:?}",
+            job.task.t0, job.task.i0, job.task.j0, plan.box_dims
+        );
+        assert_eq!(a.detect, b.detect);
     });
 }
 
