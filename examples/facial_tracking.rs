@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     }
     let mut best: Vec<Option<RunReport>> = modes.iter().map(|_| None).collect();
     for _round in 0..2 {
-        for (i, engine) in engines.iter_mut().enumerate() {
+        for (i, engine) in engines.iter().enumerate() {
             let rep = engine.batch_synth(4242)?;
             if best[i]
                 .as_ref()

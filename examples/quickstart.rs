@@ -65,7 +65,7 @@ fn main() -> Result<()> {
 
     // 4. SESSION — the production path: one persistent engine, compiled
     // once at build, streaming whole clips as jobs.
-    let mut engine = Engine::builder()
+    let engine = Engine::builder()
         .artifacts("artifacts")
         .mode(FusionMode::Full)
         .box_dims(BoxDims::new(32, 32, 8))

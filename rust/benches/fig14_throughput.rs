@@ -84,7 +84,7 @@ fn measured() {
     // arm replaces the old throwaway warm-up pass — build() compiles
     // everything, so every measured round below runs warm.
     let modes = [FusionMode::None, FusionMode::Two, FusionMode::Full];
-    let mut engines: Vec<Engine> = modes
+    let engines: Vec<Engine> = modes
         .iter()
         .map(|&mode| {
             let cfg = RunConfig { mode, ..base.clone() };
@@ -94,7 +94,7 @@ fn measured() {
     let mut best: Vec<Option<kfuse::coordinator::RunReport>> =
         (0..3).map(|_| None).collect();
     for _round in 0..3 {
-        for (i, engine) in engines.iter_mut().enumerate() {
+        for (i, engine) in engines.iter().enumerate() {
             let rep = engine.batch(clip.clone()).unwrap();
             if best[i]
                 .as_ref()

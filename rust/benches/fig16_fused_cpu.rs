@@ -27,7 +27,7 @@ use std::time::Instant;
 use kfuse::bench_util::{header, row, time_fn};
 use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
-use kfuse::coordinator::ExecutionPlan;
+use kfuse::coordinator::{ExecutionPlan, JobId};
 use kfuse::exec::{
     BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu,
 };
@@ -105,10 +105,11 @@ fn main() {
     let jobs: Vec<BoxJob> = cut_boxes(frame, frame, frames, bx)
         .into_iter()
         .map(|task| BoxJob {
-            job_id: 1,
+            job_id: JobId(1),
             task,
             clip: clip.clone(),
             clip_t0: 0,
+            staged: None,
             enqueued: Instant::now(),
         })
         .collect();

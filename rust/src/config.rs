@@ -77,6 +77,49 @@ impl Backend {
     }
 }
 
+/// How the engine's multiplexing ready queue arbitrates between the boxes
+/// of concurrently admitted jobs (CLI: `--queue-policy`).
+///
+/// Every job gets its own bounded lane (depth = `RunConfig::queue_depth`);
+/// the policy decides which lane the next free worker is served from. See
+/// [`crate::coordinator::mux`] for the queue itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Strict global arrival order across all jobs (a long batch job
+    /// monopolizes the pool until its queued boxes drain — the
+    /// pre-multiplexer behavior).
+    Fifo,
+    /// One box per non-empty job lane in rotation: every active job makes
+    /// progress regardless of backlog (the default).
+    RoundRobin,
+    /// Deficit-weighted round robin: each lane accumulates its job's
+    /// weight in credits per rotation and may dequeue that many boxes in
+    /// a burst. Latency-sensitive serve jobs carry a higher weight than
+    /// batch jobs, so they drain faster under contention.
+    DeficitWeighted,
+}
+
+impl QueuePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(QueuePolicy::Fifo),
+            "rr" | "round-robin" => Ok(QueuePolicy::RoundRobin),
+            "drr" | "deficit" => Ok(QueuePolicy::DeficitWeighted),
+            _ => Err(Error::Config(format!(
+                "unknown queue policy '{s}' (expected fifo|rr|drr)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicy::Fifo => "fifo",
+            QueuePolicy::RoundRobin => "rr",
+            QueuePolicy::DeficitWeighted => "drr",
+        }
+    }
+}
+
 /// Full run configuration for the coordinator pipeline.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -109,8 +152,23 @@ pub struct RunConfig {
     pub threshold: f32,
     /// Number of synthetic markers to generate/track.
     pub markers: usize,
-    /// Bounded queue depth between batcher and workers (backpressure).
+    /// Bounded ready-queue depth PER JOB LANE (backpressure element): a
+    /// job's producer stalls (or drops, per its admission policy) once it
+    /// has this many boxes staged ahead of the workers.
     pub queue_depth: usize,
+    /// Fairness policy of the multiplexing ready queue — how worker pops
+    /// arbitrate between concurrently admitted jobs.
+    pub queue_policy: QueuePolicy,
+    /// Frames a serve job's async ingest thread may stage ahead of the
+    /// admission loop. Decouples real-time frame pacing from box
+    /// admission: a transient worker stall is absorbed by up to this many
+    /// staged frames before the source backpressures.
+    pub ingest_depth: usize,
+    /// Planning device the DP partition solve targets (`FusionMode::Auto`
+    /// picks the arm that is optimal ON THIS DEVICE). Accepted names:
+    /// see [`crate::gpusim::device::DeviceSpec::by_name`]
+    /// (`c1060`, `k20`, `gtx750ti`).
+    pub device: String,
     /// Artifacts directory.
     pub artifacts_dir: String,
     /// Process only marker ROIs (tracking mode) instead of whole frames.
@@ -134,6 +192,9 @@ impl Default for RunConfig {
             threshold: 96.0,
             markers: 4,
             queue_depth: 64,
+            queue_policy: QueuePolicy::RoundRobin,
+            ingest_depth: 16,
+            device: "k20".into(),
             artifacts_dir: "artifacts".into(),
             roi_only: false,
             backend: Backend::Pjrt,
@@ -172,6 +233,16 @@ impl RunConfig {
                     .into(),
             ));
         }
+        if self.ingest_depth == 0 {
+            return Err(Error::Config(
+                "ingest_depth must be > 0 (frames staged ahead of \
+                 admission)"
+                    .into(),
+            ));
+        }
+        // Resolve the planning device early so a typo'd --device fails at
+        // validation, not deep inside plan resolution.
+        crate::gpusim::device::DeviceSpec::by_name(&self.device)?;
         Ok(())
     }
 }
@@ -209,6 +280,42 @@ mod tests {
         assert_eq!(FusionMode::parse("none").unwrap(), FusionMode::None);
         assert_eq!(FusionMode::parse("auto").unwrap(), FusionMode::Auto);
         assert!(FusionMode::parse("half").is_err());
+    }
+
+    #[test]
+    fn queue_policy_parse_roundtrip() {
+        assert_eq!(QueuePolicy::parse("fifo").unwrap(), QueuePolicy::Fifo);
+        assert_eq!(
+            QueuePolicy::parse("rr").unwrap(),
+            QueuePolicy::RoundRobin
+        );
+        assert_eq!(
+            QueuePolicy::parse("drr").unwrap(),
+            QueuePolicy::DeficitWeighted
+        );
+        assert!(QueuePolicy::parse("lifo").is_err());
+        assert_eq!(QueuePolicy::DeficitWeighted.name(), "drr");
+    }
+
+    #[test]
+    fn bad_device_and_zero_ingest_depth_rejected() {
+        let cfg = RunConfig {
+            device: "h100".into(),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig {
+            ingest_depth: 0,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        for dev in ["k20", "c1060", "gtx750ti"] {
+            let cfg = RunConfig {
+                device: dev.into(),
+                ..RunConfig::default()
+            };
+            cfg.validate().unwrap();
+        }
     }
 
     #[test]

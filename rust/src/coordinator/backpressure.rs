@@ -1,258 +1,20 @@
-//! Bounded queue with selectable overload policy — the streaming
-//! coordinator's backpressure element.
+//! Admission policy for the streaming coordinator's backpressure.
 //!
-//! At 600–1000 fps ingest, the box queue must either *block* the producer
-//! (batch mode: lossless, throughput-limited) or *drop* the oldest work
-//! (serve mode: bounded latency, lossy under overload). Built on
-//! `Mutex<VecDeque>` + `Condvar` (no external channel crates offline).
+//! At 600–1000 fps ingest, box admission must either *block* the
+//! producer (batch jobs: lossless, throughput-limited) or *drop the
+//! oldest* queued work (serve jobs: bounded latency, lossy under
+//! overload). [`Policy`] names that per-push choice; the queue that
+//! enforces it is the engine's multi-job [`MuxQueue`](super::mux::MuxQueue),
+//! which applies the policy within the pushing job's own lane (the
+//! single-lane `Bounded` queue this module used to carry was superseded
+//! by `MuxQueue` when the engine became a multi-job multiplexer).
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-
-/// Overload policy.
+/// Overload policy, chosen per push.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Producer blocks until space frees up (lossless).
     Block,
-    /// Oldest queued item is dropped to admit the new one (lossy).
+    /// Oldest queued item in the pushing job's lane is dropped to admit
+    /// the new one (lossy, bounded latency).
     DropOldest,
-}
-
-struct Inner<T> {
-    queue: Mutex<QueueState<T>>,
-    cv_push: Condvar,
-    cv_pop: Condvar,
-}
-
-struct QueueState<T> {
-    items: VecDeque<T>,
-    closed: bool,
-}
-
-/// Bounded MPMC queue.
-pub struct Bounded<T> {
-    inner: Arc<Inner<T>>,
-    capacity: usize,
-    policy: Policy,
-    /// Items discarded by `DropOldest`.
-    pub dropped: Arc<AtomicU64>,
-}
-
-impl<T> Clone for Bounded<T> {
-    fn clone(&self) -> Self {
-        Bounded {
-            inner: self.inner.clone(),
-            capacity: self.capacity,
-            policy: self.policy,
-            dropped: self.dropped.clone(),
-        }
-    }
-}
-
-impl<T> Bounded<T> {
-    pub fn new(capacity: usize, policy: Policy) -> Self {
-        assert!(capacity > 0);
-        Bounded {
-            inner: Arc::new(Inner {
-                queue: Mutex::new(QueueState {
-                    items: VecDeque::new(),
-                    closed: false,
-                }),
-                cv_push: Condvar::new(),
-                cv_pop: Condvar::new(),
-            }),
-            capacity,
-            policy,
-            dropped: Arc::new(AtomicU64::new(0)),
-        }
-    }
-
-    /// Enqueue one item, honoring the queue's default overload policy.
-    /// Returns `false` if the queue is closed.
-    pub fn push(&self, item: T) -> bool {
-        self.push_with(item, self.policy)
-    }
-
-    /// Enqueue one item under an explicit overload policy. A persistent
-    /// engine keeps one queue alive across jobs but needs lossless (batch)
-    /// and lossy (serve) admission on a per-job basis.
-    pub fn push_with(&self, item: T, policy: Policy) -> bool {
-        self.push_with_evicted(item, policy).0
-    }
-
-    /// Like [`Bounded::push_with`], but hands back whatever `DropOldest`
-    /// evicted so callers can attribute drops (the engine's serve job
-    /// must not count another job's stale boxes against itself). The
-    /// `Vec` is empty on the common no-eviction path and holds more than
-    /// one item only if racing producers refill the queue mid-push.
-    pub fn push_with_evicted(
-        &self,
-        item: T,
-        policy: Policy,
-    ) -> (bool, Vec<T>) {
-        let mut evicted = Vec::new();
-        let mut st = self.inner.queue.lock().unwrap();
-        loop {
-            if st.closed {
-                return (false, evicted);
-            }
-            if st.items.len() < self.capacity {
-                st.items.push_back(item);
-                self.inner.cv_pop.notify_one();
-                return (true, evicted);
-            }
-            match policy {
-                Policy::Block => {
-                    st = self.inner.cv_push.wait(st).unwrap();
-                }
-                Policy::DropOldest => {
-                    if let Some(old) = st.items.pop_front() {
-                        evicted.push(old);
-                    }
-                    self.dropped.fetch_add(1, Ordering::Relaxed);
-                    // Loop re-checks: there is space now.
-                }
-            }
-        }
-    }
-
-    /// Dequeue one item; blocks until available. `None` when closed AND
-    /// drained.
-    pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.queue.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                self.inner.cv_push.notify_one();
-                return Some(item);
-            }
-            if st.closed {
-                return None;
-            }
-            st = self.inner.cv_pop.wait(st).unwrap();
-        }
-    }
-
-    /// Close the queue: producers fail, consumers drain then get `None`.
-    pub fn close(&self) {
-        let mut st = self.inner.queue.lock().unwrap();
-        st.closed = true;
-        self.inner.cv_pop.notify_all();
-        self.inner.cv_push.notify_all();
-    }
-
-    pub fn len(&self) -> usize {
-        self.inner.queue.lock().unwrap().items.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::thread;
-    use std::time::Duration;
-
-    #[test]
-    fn fifo_order() {
-        let q = Bounded::new(4, Policy::Block);
-        for i in 0..4 {
-            assert!(q.push(i));
-        }
-        for i in 0..4 {
-            assert_eq!(q.pop(), Some(i));
-        }
-    }
-
-    #[test]
-    fn block_policy_blocks_until_space() {
-        let q = Bounded::new(1, Policy::Block);
-        q.push(1);
-        let q2 = q.clone();
-        let h = thread::spawn(move || q2.push(2));
-        thread::sleep(Duration::from_millis(20));
-        assert_eq!(q.len(), 1); // producer is parked
-        assert_eq!(q.pop(), Some(1));
-        h.join().unwrap();
-        assert_eq!(q.pop(), Some(2));
-    }
-
-    #[test]
-    fn drop_oldest_bounds_queue_and_counts() {
-        let q = Bounded::new(2, Policy::DropOldest);
-        for i in 0..5 {
-            q.push(i);
-        }
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.dropped.load(Ordering::Relaxed), 3);
-        assert_eq!(q.pop(), Some(3)); // oldest survivors
-        assert_eq!(q.pop(), Some(4));
-    }
-
-    #[test]
-    fn per_push_policy_overrides_queue_default() {
-        // A Block-policy queue (the engine's persistent queue) admits
-        // serve-job pushes losslessly-bounded via DropOldest.
-        let q = Bounded::new(2, Policy::Block);
-        assert!(q.push_with(0, Policy::DropOldest));
-        assert!(q.push_with(1, Policy::DropOldest));
-        assert!(q.push_with(2, Policy::DropOldest)); // drops 0, admits 2
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.dropped.load(Ordering::Relaxed), 1);
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(2));
-    }
-
-    #[test]
-    fn eviction_hands_back_the_dropped_item() {
-        let q = Bounded::new(1, Policy::Block);
-        let (ok, evicted) = q.push_with_evicted(7, Policy::DropOldest);
-        assert!(ok);
-        assert!(evicted.is_empty());
-        let (ok, evicted) = q.push_with_evicted(8, Policy::DropOldest);
-        assert!(ok);
-        assert_eq!(evicted, vec![7]);
-        assert_eq!(q.pop(), Some(8));
-    }
-
-    #[test]
-    fn close_drains_then_none() {
-        let q = Bounded::new(4, Policy::Block);
-        q.push(7);
-        q.close();
-        assert!(!q.push(8));
-        assert_eq!(q.pop(), Some(7));
-        assert_eq!(q.pop(), None);
-    }
-
-    #[test]
-    fn mpmc_all_items_delivered_once() {
-        let q: Bounded<usize> = Bounded::new(8, Policy::Block);
-        let total = 1000;
-        let consumers: Vec<_> = (0..4)
-            .map(|_| {
-                let q = q.clone();
-                thread::spawn(move || {
-                    let mut got = Vec::new();
-                    while let Some(v) = q.pop() {
-                        got.push(v);
-                    }
-                    got
-                })
-            })
-            .collect();
-        for i in 0..total {
-            q.push(i);
-        }
-        q.close();
-        let mut all: Vec<usize> = consumers
-            .into_iter()
-            .flat_map(|h| h.join().unwrap())
-            .collect();
-        all.sort_unstable();
-        assert_eq!(all, (0..total).collect::<Vec<_>>());
-    }
 }

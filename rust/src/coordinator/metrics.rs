@@ -21,6 +21,10 @@ pub struct Metrics {
     pub dispatches: AtomicU64,
     /// Frames dropped by backpressure (serve mode).
     pub dropped: AtomicU64,
+    /// Cumulative time boxes sat in the ready queue before a worker
+    /// picked them up, nanos (fairness diagnostic: under multiplexing,
+    /// a job's queue wait is what the scheduling policy controls).
+    pub queue_wait_nanos: AtomicU64,
     /// Per-box latencies, microseconds (mutex: amortized by batching).
     latencies_us: Mutex<Vec<u64>>,
     /// Cumulative wall nanos per executed partition (CPU backends report
@@ -38,12 +42,15 @@ impl Metrics {
     pub fn record_box(
         &self,
         latency: Duration,
+        queue_wait: Duration,
         bytes_in: u64,
         bytes_out: u64,
         dispatches: u64,
         stage_nanos: &[u64],
     ) {
         self.boxes.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait_nanos
+            .fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
         self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
         self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
         self.dispatches.fetch_add(dispatches, Ordering::Relaxed);
@@ -81,6 +88,7 @@ impl Metrics {
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
             dispatches: self.dispatches.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
+            queue_wait_nanos: self.queue_wait_nanos.load(Ordering::Relaxed),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -100,6 +108,8 @@ pub struct MetricsReport {
     pub bytes_out: u64,
     pub dispatches: u64,
     pub dropped: u64,
+    /// Cumulative ready-queue wait across the job's boxes, nanos.
+    pub queue_wait_nanos: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -128,8 +138,12 @@ impl std::fmt::Display for MetricsReport {
         )?;
         write!(
             f,
-            "box latency p50 {} us | p95 {} us | p99 {} us",
-            self.p50_us, self.p95_us, self.p99_us
+            "box latency p50 {} us | p95 {} us | p99 {} us | \
+             queue wait {:.1} ms total",
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.queue_wait_nanos as f64 / 1e6
         )
     }
 }
@@ -141,21 +155,43 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
-        m.record_box(Duration::from_micros(100), 10, 5, 3, &[7, 2]);
-        m.record_box(Duration::from_micros(300), 20, 10, 3, &[3, 5]);
+        m.record_box(
+            Duration::from_micros(100),
+            Duration::from_micros(40),
+            10,
+            5,
+            3,
+            &[7, 2],
+        );
+        m.record_box(
+            Duration::from_micros(300),
+            Duration::from_micros(60),
+            20,
+            10,
+            3,
+            &[3, 5],
+        );
         let r = m.snapshot(Duration::from_millis(10), 16);
         assert_eq!(r.boxes, 2);
         assert_eq!(r.bytes_in, 30);
         assert_eq!(r.dispatches, 6);
         assert_eq!(r.fps, 1600.0);
         assert_eq!(r.stage_nanos, vec![10, 7]);
+        assert_eq!(r.queue_wait_nanos, 100_000);
     }
 
     #[test]
     fn percentiles_ordered() {
         let m = Metrics::new();
         for us in [10u64, 20, 30, 40, 50, 1000] {
-            m.record_box(Duration::from_micros(us), 0, 0, 1, &[]);
+            m.record_box(
+                Duration::from_micros(us),
+                Duration::ZERO,
+                0,
+                0,
+                1,
+                &[],
+            );
         }
         let r = m.snapshot(Duration::from_secs(1), 1);
         assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);

@@ -2,28 +2,51 @@
 //! boxes, dispatches them to a backend-pluggable worker pool, reassembles
 //! binarized output, and drives the Kalman tracker.
 //!
-//! Dataflow (batch): synth/ingest → [`plan::ExecutionPlan`] →
-//! [`backpressure::Bounded`] box queue → [`scheduler`] workers (one
-//! [`Executor`](crate::exec::Executor) each — the PJRT artifact chain or
-//! a native CPU pass, per [`Backend`](crate::config::Backend)) → job-id
-//! result router → [`crate::tracking::Tracker`] →
-//! [`metrics::MetricsReport`]. Serve mode paces ingest at the source fps
-//! through [`batcher::Batcher`] with drop-oldest admission.
+//! Dataflow (one job among many): synth/ingest → [`plan::ExecutionPlan`]
+//! → per-job lane in the multiplexing [`mux::MuxQueue`] (fairness across
+//! concurrently admitted jobs per
+//! [`QueuePolicy`](crate::config::QueuePolicy)) → [`scheduler`] workers
+//! (one [`Executor`](crate::exec::Executor) each — the PJRT artifact
+//! chain or a native CPU pass, per [`Backend`](crate::config::Backend))
+//! → [`router::ResultRouter`] delivering each box to its job's private
+//! channel → [`crate::tracking::Tracker`] → [`metrics::MetricsReport`].
+//! Serve jobs pace ingest at the source fps through
+//! [`batcher::Batcher`] on a dedicated ingest thread, with drop-oldest
+//! admission into their own lane.
 //!
 //! Lifecycle lives in [`crate::engine`]: a persistent
-//! [`Engine`](crate::engine::Engine) owns the queue and the warm worker
-//! pool, and batch/serve/ROI are jobs submitted against it. (The old
-//! one-shot `run_*` shims are gone — build an engine.)
+//! [`Engine`](crate::engine::Engine) owns the queue, the router, and the
+//! warm worker pool; batch/serve/ROI are jobs submitted against it —
+//! concurrently, since the queue multiplexes them. (The old one-shot
+//! `run_*` shims are gone — build an engine.)
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use kfuse::config::Backend;
+//! use kfuse::engine::Engine;
+//!
+//! # fn main() -> kfuse::Result<()> {
+//! let engine = Engine::builder().backend(Backend::Cpu).build()?;
+//! let clip = Arc::new(kfuse::coordinator::synth_clip(engine.config(), 1).0);
+//! let report = engine.batch(clip)?; // one job through the coordinator
+//! println!("{}", report.metrics);
+//! engine.shutdown()
+//! # }
+//! ```
 
 pub mod backpressure;
 pub mod batcher;
 pub mod metrics;
+pub mod mux;
 pub mod plan;
+pub mod router;
 pub mod scheduler;
 
 pub use crate::engine::RunReport;
 pub use metrics::{Metrics, MetricsReport};
+pub use mux::{JobId, MuxQueue};
 pub use plan::ExecutionPlan;
+pub use router::ResultRouter;
 
 use crate::config::RunConfig;
 use crate::video::{SynthConfig, Video};

@@ -1,0 +1,421 @@
+//! Multi-job ready queue: per-job lanes with a fair pop policy.
+//!
+//! The engine admits jobs concurrently; each job's boxes go into its own
+//! bounded lane, and the worker pool pops across lanes under a
+//! [`QueuePolicy`](crate::config::QueuePolicy) — strict arrival order
+//! (`Fifo`), one box per lane in rotation (`RoundRobin`), or
+//! deficit-weighted bursts (`DeficitWeighted`). This is the Kernelet-style
+//! slice interleaving that keeps a warm pool saturated with work from
+//! every active job instead of serializing whole jobs: a long batch job
+//! can no longer starve a latency-sensitive serve job, because fairness is
+//! enforced at the lane boundary on every pop.
+//!
+//! Isolation properties the engine relies on:
+//!
+//! * **Bounded staging per job** — a lane holds at most `depth` boxes, so
+//!   one job's producer can run ahead of the workers without unbounded
+//!   memory and without crowding other jobs out of a shared buffer.
+//! * **Own-lane eviction only** — `DropOldest` admission evicts from the
+//!   pushing job's lane, never another job's, so drop accounting is exact
+//!   per job and jobs cannot lose each other's work.
+//! * **Deterministic teardown** — [`MuxQueue::finish`] retires a lane
+//!   (waking its blocked producers, who observe the lane gone and stop);
+//!   [`MuxQueue::close`] ends the whole queue for engine shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::backpressure::Policy;
+use crate::config::QueuePolicy;
+
+/// Identity of one engine job. Boxes are tagged with it on admission and
+/// results are routed back by it; lanes, drop accounting, and the
+/// per-job rows in [`EngineStats`](crate::engine::EngineStats) all key on
+/// it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+struct Lane<T> {
+    job: JobId,
+    /// DRR quantum: credits granted per rotation.
+    weight: u64,
+    /// DRR credits left in the current burst.
+    deficit: u64,
+    /// `(arrival seq, item)` — seq gives Fifo its global order.
+    items: VecDeque<(u64, T)>,
+}
+
+struct MuxState<T> {
+    lanes: Vec<Lane<T>>,
+    /// Lane index the next RR/DRR pop starts from.
+    cursor: usize,
+    closed: bool,
+    /// Global arrival stamp.
+    seq: u64,
+}
+
+struct Inner<T> {
+    state: Mutex<MuxState<T>>,
+    /// Producers blocked on a full lane.
+    cv_push: Condvar,
+    /// Workers blocked on an all-empty queue.
+    cv_pop: Condvar,
+}
+
+/// Bounded multi-lane MPMC queue multiplexing concurrent jobs onto one
+/// worker pool. Clones share the queue.
+pub struct MuxQueue<T> {
+    inner: Arc<Inner<T>>,
+    /// Per-lane capacity.
+    depth: usize,
+    policy: QueuePolicy,
+}
+
+impl<T> Clone for MuxQueue<T> {
+    fn clone(&self) -> Self {
+        MuxQueue {
+            inner: self.inner.clone(),
+            depth: self.depth,
+            policy: self.policy,
+        }
+    }
+}
+
+impl<T> MuxQueue<T> {
+    pub fn new(depth: usize, policy: QueuePolicy) -> Self {
+        assert!(depth > 0);
+        MuxQueue {
+            inner: Arc::new(Inner {
+                state: Mutex::new(MuxState {
+                    lanes: Vec::new(),
+                    cursor: 0,
+                    closed: false,
+                    seq: 0,
+                }),
+                cv_push: Condvar::new(),
+                cv_pop: Condvar::new(),
+            }),
+            depth,
+            policy,
+        }
+    }
+
+    /// Open a lane for a job. `weight` is the DRR quantum (ignored by
+    /// Fifo/RoundRobin); higher = more boxes per rotation.
+    pub fn register(&self, job: JobId, weight: u64) {
+        let mut st = self.inner.state.lock().unwrap();
+        debug_assert!(st.lanes.iter().all(|l| l.job != job));
+        st.lanes.push(Lane {
+            job,
+            weight: weight.max(1),
+            deficit: 0,
+            items: VecDeque::new(),
+        });
+    }
+
+    /// Retire a job's lane, discarding anything still queued in it.
+    /// Producers blocked on the lane wake and observe it gone (their push
+    /// returns `false`).
+    pub fn finish(&self, job: JobId) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.lanes.retain(|l| l.job != job);
+        self.inner.cv_push.notify_all();
+    }
+
+    /// Enqueue one item into `job`'s lane under `admission`. Returns
+    /// `(accepted, evicted)`: `accepted` is `false` when the queue is
+    /// closed or the lane is gone; `evicted` holds items `DropOldest`
+    /// displaced — always from this same lane, so every evicted item
+    /// belongs to `job`.
+    pub fn push(
+        &self,
+        job: JobId,
+        item: T,
+        admission: Policy,
+    ) -> (bool, Vec<T>) {
+        let mut evicted = Vec::new();
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return (false, evicted);
+            }
+            let seq = st.seq;
+            let Some(lane) = st.lanes.iter_mut().find(|l| l.job == job) else {
+                return (false, evicted);
+            };
+            if lane.items.len() < self.depth {
+                lane.items.push_back((seq, item));
+                st.seq += 1;
+                self.inner.cv_pop.notify_one();
+                return (true, evicted);
+            }
+            match admission {
+                Policy::Block => {
+                    st = self.inner.cv_push.wait(st).unwrap();
+                }
+                Policy::DropOldest => {
+                    // Evict strictly from our own lane (callers account
+                    // drops from the returned items); loop re-checks.
+                    if let Some((_, old)) = lane.items.pop_front() {
+                        evicted.push(old);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Select the lane the next pop is served from, per policy. Caller
+    /// guarantees at least one lane is non-empty.
+    fn select(st: &mut MuxState<T>, policy: QueuePolicy) -> usize {
+        let n = st.lanes.len();
+        match policy {
+            QueuePolicy::Fifo => {
+                // Globally oldest item across lanes.
+                let mut best = usize::MAX;
+                let mut best_seq = u64::MAX;
+                for (i, lane) in st.lanes.iter().enumerate() {
+                    if let Some(&(seq, _)) = lane.items.front() {
+                        if seq < best_seq {
+                            best_seq = seq;
+                            best = i;
+                        }
+                    }
+                }
+                best
+            }
+            QueuePolicy::RoundRobin => {
+                let start = st.cursor;
+                let i = (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&i| !st.lanes[i].items.is_empty())
+                    .unwrap();
+                st.cursor = (i + 1) % n;
+                i
+            }
+            QueuePolicy::DeficitWeighted => {
+                let start = st.cursor;
+                let mut pick = None;
+                for k in 0..n {
+                    let i = (start + k) % n;
+                    if st.lanes[i].items.is_empty() {
+                        // An idle lane forfeits its burst.
+                        st.lanes[i].deficit = 0;
+                    } else {
+                        pick = Some(i);
+                        break;
+                    }
+                }
+                let i = pick.unwrap();
+                let lane = &mut st.lanes[i];
+                if lane.deficit == 0 {
+                    lane.deficit = lane.weight;
+                }
+                lane.deficit -= 1;
+                // Burst spent (or will be re-granted next rotation):
+                // advance so other lanes get their turn.
+                st.cursor = if lane.deficit == 0 { (i + 1) % n } else { i };
+                i
+            }
+        }
+    }
+
+    /// Dequeue the next item under the queue's fairness policy; blocks
+    /// until one is available. `None` when closed AND every lane drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.lanes.iter().any(|l| !l.items.is_empty()) {
+                let i = Self::select(&mut st, self.policy);
+                let (_, item) = st.lanes[i].items.pop_front().unwrap();
+                // notify_all: waiters are per-lane; waking just one could
+                // pick a producer whose lane is still full (lost wakeup).
+                self.inner.cv_push.notify_all();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.cv_pop.wait(st).unwrap();
+        }
+    }
+
+    /// Close the whole queue: pushes fail, pops drain then return `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        self.inner.cv_pop.notify_all();
+        self.inner.cv_push.notify_all();
+    }
+
+    /// Items queued across all lanes.
+    pub fn len(&self) -> usize {
+        let st = self.inner.state.lock().unwrap();
+        st.lanes.iter().map(|l| l.items.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    const A: JobId = JobId(1);
+    const B: JobId = JobId(2);
+
+    fn two_lane(policy: QueuePolicy, depth: usize) -> MuxQueue<u64> {
+        let q = MuxQueue::new(depth, policy);
+        q.register(A, 1);
+        q.register(B, 4);
+        q
+    }
+
+    #[test]
+    fn fifo_preserves_global_arrival_order_across_lanes() {
+        let q = two_lane(QueuePolicy::Fifo, 8);
+        q.push(A, 10, Policy::Block);
+        q.push(B, 20, Policy::Block);
+        q.push(A, 11, Policy::Block);
+        q.push(B, 21, Policy::Block);
+        let got: Vec<u64> = (0..4).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(got, vec![10, 20, 11, 21]);
+    }
+
+    #[test]
+    fn round_robin_interleaves_a_backlogged_lane_with_a_fresh_one() {
+        let q = two_lane(QueuePolicy::RoundRobin, 8);
+        for v in 0..4 {
+            q.push(A, v, Policy::Block);
+        }
+        q.push(B, 100, Policy::Block);
+        q.push(B, 101, Policy::Block);
+        let got: Vec<u64> = (0..6).map(|_| q.pop().unwrap()).collect();
+        // One box per lane in rotation: B never waits behind A's backlog.
+        assert_eq!(got, vec![0, 100, 1, 101, 2, 3]);
+    }
+
+    #[test]
+    fn deficit_weighted_gives_heavy_lane_bursts() {
+        let q = two_lane(QueuePolicy::DeficitWeighted, 16);
+        for v in 0..6 {
+            q.push(A, v, Policy::Block); // weight 1
+        }
+        for v in 100..112 {
+            q.push(B, v, Policy::Block); // weight 4
+        }
+        let got: Vec<u64> = (0..10).map(|_| q.pop().unwrap()).collect();
+        // A gets 1 box per rotation, B gets 4.
+        assert_eq!(
+            got,
+            vec![0, 100, 101, 102, 103, 1, 104, 105, 106, 107]
+        );
+    }
+
+    #[test]
+    fn drop_oldest_evicts_only_from_own_lane() {
+        let q = two_lane(QueuePolicy::RoundRobin, 2);
+        q.push(A, 1, Policy::Block);
+        q.push(A, 2, Policy::Block);
+        q.push(B, 9, Policy::Block);
+        let (ok, evicted) = q.push(A, 3, Policy::DropOldest);
+        assert!(ok);
+        assert_eq!(evicted, vec![1], "evicted A's own oldest, never B's");
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn block_admission_parks_until_a_pop_frees_the_lane() {
+        let q = two_lane(QueuePolicy::RoundRobin, 1);
+        q.push(A, 1, Policy::Block);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(A, 2, Policy::Block).0);
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1); // producer parked on its full lane
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn finish_retires_the_lane_and_unblocks_its_producer() {
+        let q = two_lane(QueuePolicy::RoundRobin, 1);
+        q.push(A, 1, Policy::Block);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(A, 2, Policy::Block).0);
+        thread::sleep(Duration::from_millis(20));
+        q.finish(A);
+        assert!(!h.join().unwrap(), "push to a retired lane fails");
+        assert_eq!(q.len(), 0, "finish discards the lane's items");
+        // B's lane is unaffected.
+        assert!(q.push(B, 7, Policy::Block).0);
+        assert_eq!(q.pop(), Some(7));
+    }
+
+    #[test]
+    fn push_to_unregistered_job_fails() {
+        let q: MuxQueue<u64> =
+            MuxQueue::new(4, QueuePolicy::RoundRobin);
+        assert!(!q.push(JobId(9), 1, Policy::Block).0);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = two_lane(QueuePolicy::Fifo, 4);
+        q.push(A, 7, Policy::Block);
+        q.close();
+        assert!(!q.push(B, 8, Policy::Block).0);
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once_across_jobs() {
+        let q: MuxQueue<u64> =
+            MuxQueue::new(8, QueuePolicy::RoundRobin);
+        q.register(A, 1);
+        q.register(B, 1);
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = [(A, 0u64), (B, 500)]
+            .into_iter()
+            .map(|(job, base)| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for v in 0..500 {
+                        assert!(q.push(job, base + v, Policy::Block).0);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+}

@@ -149,7 +149,7 @@ impl ExecutionPlan {
 
     /// Build the plan against an explicit planning instance: the
     /// partition comes out of the interval DP over the Fig 5 model built
-    /// for `(input, dev)` (see [`select_partition`]).
+    /// for `(input, dev)` (see the module docs for the selection rules).
     pub fn resolve_on(
         mode: FusionMode,
         box_dims: BoxDims,

@@ -1,0 +1,132 @@
+//! Per-job result routing: workers publish, each job consumes its own
+//! channel.
+//!
+//! With concurrent jobs multiplexed onto one worker pool, a single shared
+//! event channel would force every job's collector to sift through (and
+//! re-queue or discard) other jobs' results. The router gives each
+//! admitted job a private channel instead: workers look the job up by
+//! [`JobId`] and deliver directly, so collectors only ever see their own
+//! boxes and a completed job's channel disappears with it. A result for a
+//! job that already deregistered (an error path drained early) is
+//! dropped — by then nobody owns it.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Mutex;
+
+use super::mux::JobId;
+use super::scheduler::WorkerEvent;
+
+/// Registry of active jobs' result channels. Shared (via `Arc`) between
+/// the worker pool and the engine's job collectors.
+#[derive(Default)]
+pub struct ResultRouter {
+    routes: Mutex<HashMap<u64, Sender<WorkerEvent>>>,
+    /// Set at engine teardown: no further registrations are accepted.
+    closed: Mutex<bool>,
+}
+
+impl ResultRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a channel for `job`. The returned receiver is the job's
+    /// collector side; workers deliver into the kept sender.
+    pub fn register(&self, job: JobId) -> Receiver<WorkerEvent> {
+        let (tx, rx) = mpsc::channel();
+        let mut routes = self.routes.lock().unwrap();
+        debug_assert!(!routes.contains_key(&job.0));
+        if !*self.closed.lock().unwrap() {
+            routes.insert(job.0, tx);
+        }
+        // On a closed router the sender is dropped here, so the job's
+        // collector observes an immediate disconnect instead of hanging.
+        rx
+    }
+
+    /// Drop `job`'s channel. Late results for it are discarded by
+    /// [`ResultRouter::route`].
+    pub fn deregister(&self, job: JobId) {
+        self.routes.lock().unwrap().remove(&job.0);
+    }
+
+    /// Deliver one worker event to its job. Returns `false` (dropping the
+    /// event) when the job is no longer registered.
+    pub fn route(&self, ev: WorkerEvent) -> bool {
+        let routes = self.routes.lock().unwrap();
+        match routes.get(&ev.job_id.0) {
+            Some(tx) => tx.send(ev).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Engine teardown: drop every channel (disconnecting any collector
+    /// still blocked on a receive) and refuse new registrations.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.routes.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::BoxResult;
+    use crate::fusion::halo::BoxDims;
+    use crate::video::BoxTask;
+    use std::time::Duration;
+
+    fn event(job: JobId) -> WorkerEvent {
+        WorkerEvent {
+            job_id: job,
+            result: Ok(BoxResult {
+                task: BoxTask {
+                    id: 0,
+                    t0: 0,
+                    i0: 0,
+                    j0: 0,
+                    dims: BoxDims::new(4, 4, 2),
+                },
+                clip_t0: 0,
+                binary: vec![0.0; 32],
+                detect: None,
+                latency: Duration::from_micros(5),
+                queue_wait: Duration::from_micros(1),
+                stage_nanos: Vec::new(),
+            }),
+        }
+    }
+
+    #[test]
+    fn routes_to_the_owning_job_only() {
+        let r = ResultRouter::new();
+        let rx1 = r.register(JobId(1));
+        let rx2 = r.register(JobId(2));
+        assert!(r.route(event(JobId(1))));
+        assert!(r.route(event(JobId(2))));
+        assert!(r.route(event(JobId(1))));
+        assert_eq!(rx1.try_iter().count(), 2);
+        assert_eq!(rx2.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn late_results_for_deregistered_jobs_are_dropped() {
+        let r = ResultRouter::new();
+        let _rx = r.register(JobId(1));
+        r.deregister(JobId(1));
+        assert!(!r.route(event(JobId(1))));
+        assert!(!r.route(event(JobId(7))), "never-registered job");
+    }
+
+    #[test]
+    fn close_disconnects_collectors_and_blocks_new_registrations() {
+        let r = ResultRouter::new();
+        let rx = r.register(JobId(1));
+        r.close();
+        assert!(rx.recv().is_err(), "sender dropped at close");
+        let rx2 = r.register(JobId(2));
+        assert!(rx2.recv().is_err(), "post-close registration is inert");
+        assert!(!r.route(event(JobId(2))));
+    }
+}

@@ -2,8 +2,10 @@
 //!
 //! Each worker constructs its own [`Executor`] in-thread (the PJRT client
 //! is `Rc`-backed and not `Send`), pulls [`BoxJob`]s from the shared
-//! bounded queue, runs the plan's chain on the selected
-//! [`Backend`], and emits [`WorkerEvent`]s to the engine's result router.
+//! multiplexing [`MuxQueue`] — which interleaves boxes from every
+//! concurrently admitted job under the engine's fairness policy — runs
+//! the plan's chain on the selected [`Backend`], and delivers each
+//! [`WorkerEvent`] to its owning job through the [`ResultRouter`].
 //!
 //! Workers are PERSISTENT: they run `Executor::prepare` once at spawn —
 //! PJRT compilation for `Backend::Pjrt`, scratch-pool prewarm for
@@ -14,13 +16,13 @@
 //! itself stays alive for the next job.
 
 use std::sync::atomic::AtomicU64;
-use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::backpressure::Bounded;
+use super::mux::{JobId, MuxQueue};
 use super::plan::ExecutionPlan;
+use super::router::ResultRouter;
 use crate::config::Backend;
 use crate::exec::{BufferPool, Executor, PjrtExec};
 use crate::runtime::{Manifest, Runtime};
@@ -31,12 +33,16 @@ use crate::Result;
 /// engine job that submitted it.
 pub struct BoxJob {
     /// Engine job this box belongs to (results are routed by this id).
-    pub job_id: u64,
+    pub job_id: JobId,
     pub task: BoxTask,
     /// The clip (or rolling window) the box is cut from.
     pub clip: Arc<Video>,
     /// Frame offset of `clip` within the stream (for global frame ids).
     pub clip_t0: usize,
+    /// Halo'd input staged ahead by the job's ingest/producer thread
+    /// (the async-ingest fast path: the worker skips extraction
+    /// entirely). `None` falls back to worker-side `extract_box_into`.
+    pub staged: Option<Vec<f32>>,
     /// Enqueue timestamp (latency accounting includes queue wait).
     pub enqueued: Instant,
 }
@@ -51,17 +57,19 @@ pub struct BoxResult {
     pub detect: Option<Vec<f32>>,
     /// Queue wait + service time, stamped by the worker at completion.
     pub latency: Duration,
+    /// Time the box sat in the ready queue before a worker picked it up
+    /// (stamped at pop; `latency - queue_wait` ≈ service time).
+    pub queue_wait: Duration,
     /// Wall nanos per executed partition (empty when the backend doesn't
     /// track them; see `Executor::last_stage_nanos`).
     pub stage_nanos: Vec<u64>,
 }
 
 /// One routed event from a worker: which job it belongs to and how the
-/// box turned out. The engine discards events whose `job_id` doesn't
-/// match the job it is currently draining (stale work from a job that
-/// failed mid-drain).
+/// box turned out. The [`ResultRouter`] delivers it to that job's private
+/// channel (or drops it if the job already deregistered).
 pub struct WorkerEvent {
-    pub job_id: u64,
+    pub job_id: JobId,
     pub result: Result<BoxResult>,
 }
 
@@ -87,8 +95,8 @@ pub struct WorkerSpec {
 
 /// Execute one job on a worker's executor. Public so benches can call the
 /// exact hot path without threads. `staging` is the reusable input buffer
-/// the halo'd box is extracted into (pass a fresh `Vec` if you don't care
-/// about reuse).
+/// the halo'd box is extracted into when the job carries no pre-staged
+/// input (pass a fresh `Vec` if you don't care about reuse).
 pub fn execute_box(
     exec: &dyn Executor,
     plan: &ExecutionPlan,
@@ -96,23 +104,32 @@ pub fn execute_box(
     job: &BoxJob,
     staging: &mut Vec<f32>,
 ) -> Result<BoxResult> {
-    // Stage the halo'd input box once (the GMEM→SHMEM copy analogue);
-    // the staging buffer is worker-owned and reused across boxes.
-    job.clip.extract_box_into(
-        job.task.t0,
-        job.task.i0,
-        job.task.j0,
-        job.task.dims,
-        plan.halo,
-        staging,
-    );
-    let out = exec.execute(plan, threshold, staging)?;
+    let queue_wait = job.enqueued.elapsed();
+    // The halo'd input box (the GMEM→SHMEM copy analogue) is either
+    // staged ahead by the job's ingest thread (`job.staged`) or extracted
+    // here into the worker-owned reusable buffer.
+    let input: &[f32] = match &job.staged {
+        Some(buf) => buf,
+        None => {
+            job.clip.extract_box_into(
+                job.task.t0,
+                job.task.i0,
+                job.task.j0,
+                job.task.dims,
+                plan.halo,
+                staging,
+            );
+            staging
+        }
+    };
+    let out = exec.execute(plan, threshold, input)?;
     Ok(BoxResult {
         task: job.task,
         clip_t0: job.clip_t0,
         binary: out.binary,
         detect: out.detect,
         latency: job.enqueued.elapsed(),
+        queue_wait,
         stage_nanos: exec.last_stage_nanos(),
     })
 }
@@ -141,8 +158,8 @@ fn build_executor(
     Ok(exec)
 }
 
-/// Spawn the spec's persistent workers consuming `queue` and routing
-/// results to `out`.
+/// Spawn the spec's persistent workers consuming `queue` and delivering
+/// results through `router`.
 ///
 /// Each worker runs `Executor::prepare` before touching the queue and the
 /// call blocks until every worker is ready: PJRT compilation (and CPU
@@ -155,8 +172,8 @@ fn build_executor(
 /// observes them deterministically on return.
 pub fn spawn_workers(
     spec: WorkerSpec,
-    queue: Bounded<BoxJob>,
-    out: Sender<WorkerEvent>,
+    queue: MuxQueue<BoxJob>,
+    router: Arc<ResultRouter>,
     compiles: Arc<AtomicU64>,
     init_errors: Arc<Mutex<Vec<String>>>,
 ) -> Vec<JoinHandle<Result<()>>> {
@@ -165,7 +182,7 @@ pub fn spawn_workers(
         .map(|_| {
             let spec = spec.clone();
             let queue = queue.clone();
-            let out = out.clone();
+            let router = router.clone();
             let compiles = compiles.clone();
             let init_errors = init_errors.clone();
             let ready = ready.clone();
@@ -183,9 +200,9 @@ pub fn spawn_workers(
                 let mut staging: Vec<f32> = Vec::new();
                 // Persistent service loop: jobs come and go, the executor
                 // (compiled executables / pooled scratch) lives until the
-                // queue closes at engine shutdown. Every popped job MUST
-                // produce an event — the engine's drain counts on it — so
-                // a panic inside the hot path is caught and reported
+                // queue closes at engine shutdown. Every popped box MUST
+                // produce an event — each job's collector counts on it —
+                // so a panic inside the hot path is caught and reported
                 // instead of silently killing this worker's results
                 // (which would hang the submitting job's collector
                 // forever).
@@ -207,9 +224,9 @@ pub fn spawn_workers(
                             "worker panicked executing box".into(),
                         ))
                     });
-                    if out.send(WorkerEvent { job_id, result }).is_err() {
-                        break; // engine gone; drain quietly
-                    }
+                    // An unroutable event (its job already tore down on
+                    // an error path) is dropped — nobody owns it anymore.
+                    let _ = router.route(WorkerEvent { job_id, result });
                 }
                 Ok(())
             })
@@ -222,7 +239,7 @@ pub fn spawn_workers(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::FusionMode;
+    use crate::config::{FusionMode, QueuePolicy};
     use crate::coordinator::backpressure::Policy;
     use crate::fusion::halo::BoxDims;
     use crate::video::SynthConfig;
@@ -232,6 +249,7 @@ mod tests {
         backend: Backend,
         manifest: Arc<Manifest>,
         compiles: &Arc<AtomicU64>,
+        prestage: bool,
     ) -> Vec<WorkerEvent> {
         let cfg = SynthConfig {
             frames: 9,
@@ -246,14 +264,17 @@ mod tests {
             BoxDims::new(16, 16, 8),
             true,
         ));
-        let queue = Bounded::new(16, Policy::Block);
-        let (tx, rx) = std::sync::mpsc::channel();
+        let queue: MuxQueue<BoxJob> =
+            MuxQueue::new(16, QueuePolicy::RoundRobin);
+        queue.register(JobId(1), 1);
+        let router = Arc::new(ResultRouter::new());
+        let rx = router.register(JobId(1));
         let init_errors = Arc::new(Mutex::new(Vec::new()));
         let spec = WorkerSpec {
             workers: 2,
             backend,
             manifest,
-            plan,
+            plan: plan.clone(),
             threshold: 96.0,
             pool: BufferPool::shared(),
             intra_box_threads: 2,
@@ -261,7 +282,7 @@ mod tests {
         let handles = spawn_workers(
             spec,
             queue.clone(),
-            tx,
+            router.clone(),
             compiles.clone(),
             init_errors.clone(),
         );
@@ -270,13 +291,25 @@ mod tests {
             crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
         assert_eq!(tasks.len(), 4); // frames 0..8 = one temporal box
         for task in &tasks {
-            queue.push(BoxJob {
-                job_id: 1,
-                task: *task,
-                clip: clip.clone(),
-                clip_t0: 0,
-                enqueued: Instant::now(),
+            // Half the matrix pre-stages inputs (the async-ingest path),
+            // half relies on worker-side extraction.
+            let staged = prestage.then(|| {
+                clip.extract_box(
+                    task.t0, task.i0, task.j0, task.dims, plan.halo,
+                )
             });
+            queue.push(
+                JobId(1),
+                BoxJob {
+                    job_id: JobId(1),
+                    task: *task,
+                    clip: clip.clone(),
+                    clip_t0: 0,
+                    staged,
+                    enqueued: Instant::now(),
+                },
+                Policy::Block,
+            );
         }
         queue.close();
         let events: Vec<WorkerEvent> = rx.iter().take(tasks.len()).collect();
@@ -289,11 +322,12 @@ mod tests {
     fn check_events(events: &[WorkerEvent]) {
         assert_eq!(events.len(), 4);
         for ev in events {
-            assert_eq!(ev.job_id, 1);
+            assert_eq!(ev.job_id, JobId(1));
             let r = ev.result.as_ref().unwrap();
             assert_eq!(r.binary.len(), 8 * 16 * 16);
             assert_eq!(r.detect.as_ref().unwrap().len(), 8 * 3);
             assert!(r.latency > Duration::ZERO);
+            assert!(r.latency >= r.queue_wait);
         }
     }
 
@@ -301,11 +335,49 @@ mod tests {
     #[test]
     fn cpu_workers_process_all_boxes_offline() {
         let compiles = Arc::new(AtomicU64::new(0));
-        let events =
-            run_pool(Backend::Cpu, Arc::new(Manifest::default()), &compiles);
+        let events = run_pool(
+            Backend::Cpu,
+            Arc::new(Manifest::default()),
+            &compiles,
+            false,
+        );
         check_events(&events);
         // The CPU backend never compiles anything.
         assert_eq!(compiles.load(Ordering::Relaxed), 0);
+    }
+
+    /// Pre-staged (ingest-thread) inputs produce the same results as
+    /// worker-side extraction.
+    #[test]
+    fn prestaged_inputs_match_worker_side_extraction() {
+        let compiles = Arc::new(AtomicU64::new(0));
+        let staged = run_pool(
+            Backend::Cpu,
+            Arc::new(Manifest::default()),
+            &compiles,
+            true,
+        );
+        let extracted = run_pool(
+            Backend::Cpu,
+            Arc::new(Manifest::default()),
+            &compiles,
+            false,
+        );
+        check_events(&staged);
+        let mut a: Vec<_> = staged
+            .iter()
+            .map(|e| e.result.as_ref().unwrap())
+            .collect();
+        let mut b: Vec<_> = extracted
+            .iter()
+            .map(|e| e.result.as_ref().unwrap())
+            .collect();
+        a.sort_by_key(|r| r.task.id);
+        b.sort_by_key(|r| r.task.id);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.binary, y.binary);
+            assert_eq!(x.detect, y.detect);
+        }
     }
 
     /// End-to-end PJRT worker smoke test (needs artifacts; skips
@@ -320,7 +392,8 @@ mod tests {
             return;
         };
         let compiles = Arc::new(AtomicU64::new(0));
-        let events = run_pool(Backend::Pjrt, Arc::new(manifest), &compiles);
+        let events =
+            run_pool(Backend::Pjrt, Arc::new(manifest), &compiles, false);
         check_events(&events);
         // Both workers compiled the full chain (fused stage + detect)
         // exactly once each, at spawn, not per box.

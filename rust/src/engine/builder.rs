@@ -7,7 +7,7 @@
 //! compilation on every worker.
 
 use super::session::Engine;
-use crate::config::{Backend, FusionMode, RunConfig};
+use crate::config::{Backend, FusionMode, QueuePolicy, RunConfig};
 use crate::fusion::halo::BoxDims;
 use crate::Result;
 
@@ -83,9 +83,31 @@ impl EngineBuilder {
         self
     }
 
-    /// Bounded box-queue depth (backpressure element).
+    /// Bounded box-queue depth PER JOB LANE (backpressure element).
     pub fn queue_depth(mut self, depth: usize) -> Self {
         self.cfg.queue_depth = depth;
+        self
+    }
+
+    /// Fairness policy arbitrating worker pops between concurrently
+    /// admitted jobs (see [`QueuePolicy`]). Default: round robin.
+    pub fn queue_policy(mut self, policy: QueuePolicy) -> Self {
+        self.cfg.queue_policy = policy;
+        self
+    }
+
+    /// Frames a serve job's pacer may stage ahead of box admission (the
+    /// async-ingest buffer; see [`RunConfig::ingest_depth`]).
+    pub fn ingest_depth(mut self, depth: usize) -> Self {
+        self.cfg.ingest_depth = depth;
+        self
+    }
+
+    /// Planning device for the DP partition solve (`FusionMode::Auto`
+    /// optimizes for it). Accepted names: `c1060`, `k20`, `gtx750ti`
+    /// (see [`DeviceSpec::by_name`](crate::gpusim::device::DeviceSpec::by_name)).
+    pub fn device(mut self, name: impl Into<String>) -> Self {
+        self.cfg.device = name.into();
         self
     }
 
@@ -140,6 +162,9 @@ mod tests {
             .threshold(42.0)
             .markers(7)
             .queue_depth(9)
+            .queue_policy(QueuePolicy::DeficitWeighted)
+            .ingest_depth(5)
+            .device("gtx750ti")
             .frame_size(64)
             .frames(24)
             .fps(750.0);
@@ -153,6 +178,9 @@ mod tests {
         assert_eq!(cfg.threshold, 42.0);
         assert_eq!(cfg.markers, 7);
         assert_eq!(cfg.queue_depth, 9);
+        assert_eq!(cfg.queue_policy, QueuePolicy::DeficitWeighted);
+        assert_eq!(cfg.ingest_depth, 5);
+        assert_eq!(cfg.device, "gtx750ti");
         assert_eq!(cfg.frame_size, 64);
         assert_eq!(cfg.frames, 24);
         assert_eq!(cfg.fps, 750.0);

@@ -1,23 +1,105 @@
-//! Job submission against a warm [`Engine`]: batch, paced serve, and
-//! ROI-driven batch.
+//! Job submission against a warm [`Engine`]: concurrent batch, paced
+//! serve, and ROI-driven batch, multiplexed over one worker pool.
 //!
-//! Every job reuses the engine's queue and worker pool — no manifest
-//! reload, no plan re-resolution, no worker respawn, and (the big one) no
-//! PJRT recompilation. Per-job isolation comes from job ids: each
-//! submission tags its boxes, and the drain loop ignores events from any
-//! other job.
+//! Every job reuses the engine's ready queue and worker pool — no
+//! manifest reload, no plan re-resolution, no worker respawn, and (the
+//! big one) no PJRT recompilation. Jobs are admitted concurrently: each
+//! [`Engine::submit_batch`] / [`Engine::submit_serve`] /
+//! [`Engine::submit_roi`] call decomposes its clip into per-box work
+//! items tagged with the job's [`JobId`], stages them into the job's own
+//! queue lane from an ingest/producer thread (pre-extracting each box's
+//! halo'd input so workers never stall on extraction), and drains
+//! results on a collector thread through the job's private router
+//! channel. The returned [`JobHandle`] resolves to the job's report;
+//! the blocking wrappers ([`Engine::batch`], [`Engine::serve`],
+//! [`Engine::roi`]) are submit-then-wait.
+//!
+//! Fairness between concurrent jobs is the ready queue's
+//! [`QueuePolicy`](crate::config::QueuePolicy); under round-robin or
+//! deficit-weighted arbitration a small serve job admitted next to a
+//! backlogged batch job drains at its own pace instead of queueing
+//! behind the backlog.
 
+use std::sync::mpsc::{self, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::session::Engine;
+use super::session::{Engine, EngineCore};
 use crate::coordinator::backpressure::Policy;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::{Metrics, MetricsReport};
-use crate::coordinator::scheduler::BoxJob;
+use crate::coordinator::mux::JobId;
+use crate::coordinator::scheduler::{BoxJob, WorkerEvent};
 use crate::tracking::{Tracker, TrackerConfig};
-use crate::video::{cut_boxes, ground_truth, Video};
+use crate::video::{cut_boxes, ground_truth, BoxTask, Video};
 use crate::{Error, Result};
+
+/// What kind of work a job is; determines its default fairness weight
+/// (the deficit-weighted queue's per-rotation quantum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Lossless whole-clip job (Block admission).
+    Batch,
+    /// Paced streaming job; latency-sensitive, so it carries the highest
+    /// deficit weight.
+    Serve,
+    /// Tracker-driven selective batch.
+    Roi,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Batch => "batch",
+            JobKind::Serve => "serve",
+            JobKind::Roi => "roi",
+        }
+    }
+
+    /// DRR quantum: boxes a job's lane may drain per rotation under
+    /// `QueuePolicy::DeficitWeighted`. Serve jobs are latency-sensitive
+    /// and get 4× a batch job's share; ROI jobs sit in between.
+    pub(crate) fn weight(&self) -> u64 {
+        match self {
+            JobKind::Batch => 1,
+            JobKind::Roi => 2,
+            JobKind::Serve => 4,
+        }
+    }
+}
+
+/// An admitted, in-flight job. Obtain from the `submit_*` methods; call
+/// [`JobHandle::wait`] for the job's report. Dropping the handle
+/// detaches the job (it still runs to completion and its stats still
+/// land in [`Engine::stats`]; `Engine::shutdown` drains it).
+pub struct JobHandle<T> {
+    id: JobId,
+    kind: JobKind,
+    thread: std::thread::JoinHandle<Result<T>>,
+}
+
+impl<T> JobHandle<T> {
+    /// The id the job's boxes are tagged with.
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    pub fn kind(&self) -> JobKind {
+        self.kind
+    }
+
+    /// Whether the job has already completed (non-blocking).
+    pub fn is_finished(&self) -> bool {
+        self.thread.is_finished()
+    }
+
+    /// Block until the job completes and return its report.
+    pub fn wait(self) -> Result<T> {
+        self.thread
+            .join()
+            .map_err(|_| Error::Coordinator("job thread panicked".into()))?
+    }
+}
 
 /// End-of-job summary for batch and ROI jobs.
 #[derive(Debug)]
@@ -39,6 +121,8 @@ pub struct ServeOpts {
     /// Overload policy for this job's boxes. [`Policy::DropOldest`]
     /// bounds latency under overload (the streaming default);
     /// [`Policy::Block`] makes serve lossless but throughput-limited.
+    /// Either way, admission only ever evicts from THIS job's queue
+    /// lane — concurrent jobs are isolated.
     pub policy: Policy,
 }
 
@@ -62,324 +146,547 @@ impl ServeOpts {
     }
 }
 
+/// Fold one routed event into a job's accounting: a successful box is
+/// recorded (and handed to `on_box` for reassembly), a worker error is
+/// captured into `first_err` without stopping the drain.
+fn absorb(
+    core: &EngineCore,
+    metrics: &Metrics,
+    ev: WorkerEvent,
+    first_err: &mut Option<Error>,
+    on_box: &mut dyn FnMut(&crate::coordinator::scheduler::BoxResult),
+) {
+    match ev.result {
+        Ok(r) => {
+            core.record(metrics, &r);
+            on_box(&r);
+        }
+        Err(e) => {
+            first_err.get_or_insert(e);
+        }
+    }
+}
+
+fn disconnected() -> Error {
+    Error::Coordinator("engine shut down while job was in flight".into())
+}
+
+/// Runs [`EngineCore::end_job`] on EVERY exit path of a job thread —
+/// panics included. Without this, a panicking job body would leak its
+/// active-job slot and [`Engine::shutdown`]'s drain would wait forever.
+struct JobGuard<'a> {
+    core: &'a EngineCore,
+    id: JobId,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        self.core.end_job(self.id);
+    }
+}
+
 impl Engine {
-    /// A clip must match the engine's box geometry (the compiled
-    /// executables are shape-specific).
-    fn check_clip(&self, clip: &Video) -> Result<()> {
-        let bx = self.cfg.box_dims;
-        if clip.h % bx.x != 0 || clip.w % bx.y != 0 {
-            return Err(Error::Config(format!(
-                "box {}x{} must divide clip {}x{}",
-                bx.x, bx.y, clip.h, clip.w
-            )));
-        }
-        if clip.t < bx.t {
-            return Err(Error::Config(format!(
-                "clip has {} frames, shorter than one temporal box ({})",
-                clip.t, bx.t
-            )));
-        }
-        Ok(())
+    /// Submit a lossless batch job over `clip`; returns immediately with
+    /// a [`JobHandle`]. The job's producer thread pre-extracts each
+    /// box's halo'd input and stages it into the job's queue lane ahead
+    /// of worker demand; a collector thread reassembles the binarized
+    /// output and runs the tracking pass (K6).
+    pub fn submit_batch(
+        &self,
+        clip: Arc<Video>,
+    ) -> Result<JobHandle<RunReport>> {
+        self.submit_batch_inner(clip, None)
     }
 
-    /// Run one lossless batch job over `clip` (Block backpressure), then
-    /// track markers on the reassembled binary output.
-    pub fn batch(&mut self, clip: Arc<Video>) -> Result<RunReport> {
-        self.batch_inner(clip, None)
+    pub(crate) fn submit_batch_inner(
+        &self,
+        clip: Arc<Video>,
+        truth: Option<Vec<Vec<(f64, f64)>>>,
+    ) -> Result<JobHandle<RunReport>> {
+        let core = self.core.clone();
+        core.check_clip(&clip)?;
+        let tasks =
+            cut_boxes(clip.h, clip.w, clip.t, core.cfg.box_dims);
+        if tasks.is_empty() {
+            return Err(Error::Coordinator("no boxes to process".into()));
+        }
+        let (id, rx) = core.admit(JobKind::Batch);
+        let thread = std::thread::spawn(move || {
+            let _guard = JobGuard { core: &core, id };
+            run_batch(&core, id, rx, clip, tasks, truth)
+        });
+        Ok(JobHandle {
+            id,
+            kind: JobKind::Batch,
+            thread,
+        })
+    }
+
+    /// Run one lossless batch job over `clip` (Block admission) and wait
+    /// for it: submit-then-wait over [`Engine::submit_batch`].
+    pub fn batch(&self, clip: Arc<Video>) -> Result<RunReport> {
+        self.submit_batch(clip)?.wait()
     }
 
     /// Batch over a freshly generated synthetic clip; scores tracking
     /// RMSE against the analytic ground truth from the SAME tracking pass
     /// that counts live tracks (the tracker runs exactly once).
-    pub fn batch_synth(&mut self, seed: u64) -> Result<RunReport> {
-        let (clip, scfg) = crate::coordinator::synth_clip(&self.cfg, seed);
+    pub fn batch_synth(&self, seed: u64) -> Result<RunReport> {
+        let (clip, scfg) =
+            crate::coordinator::synth_clip(&self.core.cfg, seed);
         let truth = ground_truth(&scfg);
-        self.batch_inner(Arc::new(clip), Some(&truth))
+        self.submit_batch_inner(Arc::new(clip), Some(truth))?.wait()
     }
 
-    fn batch_inner(
-        &mut self,
-        clip: Arc<Video>,
-        truth: Option<&[Vec<(f64, f64)>]>,
-    ) -> Result<RunReport> {
-        self.check_clip(&clip)?;
-        let bx = self.cfg.box_dims;
-        let tasks = cut_boxes(clip.h, clip.w, clip.t, bx);
-        if tasks.is_empty() {
-            return Err(Error::Coordinator("no boxes to process".into()));
-        }
-        let n_tasks = tasks.len();
-        let frames_covered = (clip.t / bx.t) * bx.t;
-        let job_id = self.begin_job();
-        let metrics = Metrics::new();
-        let started = Instant::now();
-        // Producer off-thread: the bounded queue backpressures it while
-        // the collector below drains (pushing inline would deadlock once
-        // the queue fills).
-        let producer = {
-            let queue = self.queue.clone();
-            let clip = clip.clone();
-            std::thread::spawn(move || {
-                for task in tasks {
-                    if !queue.push(BoxJob {
-                        job_id,
-                        task,
-                        clip: clip.clone(),
-                        clip_t0: 0,
-                        enqueued: Instant::now(),
-                    }) {
-                        break;
-                    }
-                }
-            })
-        };
-        // Collector: reassemble the binarized video.
-        let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
-        let mut outcome: Result<()> = Ok(());
-        for _ in 0..n_tasks {
-            match self.next_result(job_id) {
-                Ok(r) => {
-                    self.record(&metrics, &r);
-                    binary.write_box(
-                        r.clip_t0 + r.task.t0,
-                        r.task.i0,
-                        r.task.j0,
-                        r.task.dims,
-                        &r.binary,
-                    );
-                }
-                Err(e) => {
-                    outcome = Err(e);
-                    break;
-                }
-            }
-        }
-        // Workers keep consuming even on the error path, so the producer
-        // always finishes; its leftover results are stale-discarded by
-        // the next job's drain.
-        let _ = producer.join();
-        outcome?;
-        let wall = started.elapsed();
-
-        // Tracking pass (K6): acquisition on frame 0, Kalman per frame.
-        // One pass serves both the live-track count and (when ground
-        // truth is known) the RMSE score.
-        let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
-        let plane = clip.h * clip.w;
-        tracker.acquire(&binary.data[..plane], self.cfg.markers);
-        for t in 1..frames_covered {
-            tracker.step(&binary.data[t * plane..(t + 1) * plane]);
-        }
-        let rmse = truth.map(|tr| tracker.rmse_vs_truth(tr)).unwrap_or_default();
-
-        let report = metrics.snapshot(wall, frames_covered as u64);
-        self.finish_job(&report);
-        Ok(RunReport {
-            tracks: tracker.tracks.len(),
-            rmse,
-            metrics: report,
-            binary,
-        })
-    }
-
-    /// Streaming serve: frames arrive at `opts.fps`; overload handling
-    /// follows `opts.policy`. Every executed box is drained and counted —
-    /// late results can't race teardown because the pool never tears
-    /// down between jobs.
-    pub fn serve(
-        &mut self,
+    /// Submit a paced streaming job; returns immediately with a
+    /// [`JobHandle`]. Frames "arrive" at `opts.fps` on a dedicated pacer
+    /// thread and are staged (up to `RunConfig::ingest_depth` frames
+    /// ahead) into the admission loop, which windows them, pre-extracts
+    /// each box's input, and admits boxes into the job's lane under
+    /// `opts.policy`. Every executed box is drained and counted.
+    pub fn submit_serve(
+        &self,
         clip: Arc<Video>,
         opts: ServeOpts,
-    ) -> Result<MetricsReport> {
-        self.check_clip(&clip)?;
+    ) -> Result<JobHandle<MetricsReport>> {
+        let core = self.core.clone();
+        core.check_clip(&clip)?;
         if !opts.fps.is_finite() || opts.fps <= 0.0 {
             return Err(Error::Config(format!(
                 "serve fps must be positive and finite, got {}",
                 opts.fps
             )));
         }
-        let bx = self.cfg.box_dims;
-        let job_id = self.begin_job();
-        let metrics = Metrics::new();
-        // Spatial box template per emitted window (t0 shifts below).
-        let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
-
-        let started = Instant::now();
-        let frame_interval = Duration::from_secs_f64(1.0 / opts.fps);
-        let mut batcher = Batcher::new(bx.t, clip.h, clip.w, 4);
-        let plane = clip.h * clip.w * 4;
-        let mut pushed = 0u64;
-        let mut job_dropped = 0u64;
-        let mut completed = 0u64;
-        let mut first_err: Option<Error> = None;
-        let mut next_deadline = started;
-        for t in 0..clip.t {
-            // Pace ingest to the source frame rate.
-            next_deadline += frame_interval;
-            if let Some(wait) =
-                next_deadline.checked_duration_since(Instant::now())
-            {
-                std::thread::sleep(wait);
-            }
-            let frame = clip.data[t * plane..(t + 1) * plane].to_vec();
-            if let Some(window) = batcher.push(frame) {
-                let win = Arc::new(window.buf);
-                for mut task in spatial.iter().copied() {
-                    // Window frames are 1-offset (halo first): shift origin.
-                    task.t0 += 1;
-                    let (accepted, evicted) = self.queue.push_with_evicted(
-                        BoxJob {
-                            job_id,
-                            task,
-                            clip: win.clone(),
-                            clip_t0: window.t0,
-                            enqueued: Instant::now(),
-                        },
-                        opts.policy,
-                    );
-                    if accepted {
-                        pushed += 1;
-                    }
-                    // Attribute drops per job: a stale box left queued by
-                    // an aborted earlier job must not skew this job's
-                    // completion count or drop metric.
-                    job_dropped += evicted
-                        .iter()
-                        .filter(|j| j.job_id == job_id)
-                        .count()
-                        as u64;
-                }
-            }
-            // Opportunistic drain between frames keeps the result channel
-            // flat without a separate sink thread.
-            while let Some(res) = self.try_next_result(job_id) {
-                completed += 1;
-                match res {
-                    Ok(r) => self.record(&metrics, &r),
-                    Err(e) => {
-                        first_err.get_or_insert(e);
-                    }
-                }
-            }
-        }
-        // Ingest done: drops only happen during pushes, so the drop count
-        // is final and the outstanding box count is exact. Drain them all
-        // — no processed result is ever silently discarded.
-        let expected = pushed - job_dropped;
-        while completed < expected {
-            completed += 1;
-            match self.next_result(job_id) {
-                Ok(r) => self.record(&metrics, &r),
-                Err(e) => {
-                    first_err.get_or_insert(e);
-                }
-            }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        let wall = started.elapsed();
-        metrics
-            .dropped
-            .fetch_add(job_dropped, std::sync::atomic::Ordering::Relaxed);
-        let report = metrics.snapshot(wall, clip.t as u64);
-        self.finish_job(&report);
-        Ok(report)
+        let (id, rx) = core.admit(JobKind::Serve);
+        let thread = std::thread::spawn(move || {
+            let _guard = JobGuard { core: &core, id };
+            run_serve(&core, id, rx, clip, opts)
+        });
+        Ok(JobHandle {
+            id,
+            kind: JobKind::Serve,
+            thread,
+        })
     }
 
-    /// ROI-driven batch (the paper's Fig 8b workflow): the first temporal
-    /// window is processed in full to ACQUIRE marker ROIs; every
-    /// subsequent window only dispatches boxes intersecting a tracked
-    /// marker's predicted search window. Returns the report plus the
-    /// fraction of boxes actually processed.
-    pub fn roi(&mut self, clip: Arc<Video>) -> Result<(RunReport, f64)> {
-        self.check_clip(&clip)?;
-        let bx = self.cfg.box_dims;
-        let windows = clip.t / bx.t;
-        let frames_covered = windows * bx.t;
-        let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
-        let total_boxes = spatial.len() * windows;
-        let job_id = self.begin_job();
-        let metrics = Metrics::new();
-        let started = Instant::now();
+    /// Streaming serve, submit-then-wait over [`Engine::submit_serve`].
+    pub fn serve(
+        &self,
+        clip: Arc<Video>,
+        opts: ServeOpts,
+    ) -> Result<MetricsReport> {
+        self.submit_serve(clip, opts)?.wait()
+    }
 
-        let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
-        let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
-        let plane = clip.h * clip.w;
-        let mut processed = 0usize;
+    /// Submit an ROI-driven batch job (the paper's Fig 8b workflow); the
+    /// handle resolves to the report plus the fraction of boxes actually
+    /// processed. The first temporal window is processed in full to
+    /// ACQUIRE marker ROIs; every subsequent window only dispatches
+    /// boxes intersecting a tracked marker's predicted search window.
+    pub fn submit_roi(
+        &self,
+        clip: Arc<Video>,
+    ) -> Result<JobHandle<(RunReport, f64)>> {
+        let core = self.core.clone();
+        core.check_clip(&clip)?;
+        let (id, rx) = core.admit(JobKind::Roi);
+        let thread = std::thread::spawn(move || {
+            let _guard = JobGuard { core: &core, id };
+            run_roi(&core, id, rx, clip)
+        });
+        Ok(JobHandle {
+            id,
+            kind: JobKind::Roi,
+            thread,
+        })
+    }
 
-        for win in 0..windows {
-            let t0 = win * bx.t;
-            // Select boxes: window 0 = all (acquisition); later windows =
-            // only boxes intersecting a track's ROI around the predicted
-            // position.
-            let selected: Vec<_> = if win == 0 {
-                spatial.clone()
-            } else {
-                let half = tracker.cfg.roi_half + bx.x / 2;
-                spatial
-                    .iter()
-                    .filter(|task| {
-                        tracker.tracks.iter().any(|tr| {
-                            let (pi, pj) = tr.filter.predict_pos();
-                            let (ci, cj) = (
-                                task.i0 as f32 + bx.x as f32 / 2.0,
-                                task.j0 as f32 + bx.y as f32 / 2.0,
-                            );
-                            (pi - ci).abs() <= half as f32
-                                && (pj - cj).abs() <= half as f32
-                        })
-                    })
-                    .copied()
-                    .collect()
-            };
-            processed += selected.len();
-            let n_sel = selected.len();
-            for mut task in selected {
-                task.t0 = t0; // temporal origin of this window in the clip
-                self.queue.push(BoxJob {
-                    job_id,
-                    task,
-                    clip: clip.clone(),
-                    clip_t0: 0,
-                    enqueued: Instant::now(),
-                });
+    /// ROI-driven batch, submit-then-wait over [`Engine::submit_roi`].
+    pub fn roi(&self, clip: Arc<Video>) -> Result<(RunReport, f64)> {
+        self.submit_roi(clip)?.wait()
+    }
+}
+
+/// Batch collector body: producer thread stages pre-extracted boxes into
+/// the job's lane; this thread drains exactly one event per pushed box,
+/// reassembles the binarized clip, and runs the tracking pass.
+fn run_batch(
+    core: &Arc<EngineCore>,
+    id: JobId,
+    rx: Receiver<WorkerEvent>,
+    clip: Arc<Video>,
+    tasks: Vec<BoxTask>,
+    truth: Option<Vec<Vec<(f64, f64)>>>,
+) -> Result<RunReport> {
+    let bx = core.cfg.box_dims;
+    let n_tasks = tasks.len();
+    let frames_covered = (clip.t / bx.t) * bx.t;
+    let metrics = Metrics::new();
+    let started = Instant::now();
+    // Async ingest: pre-extract each box's halo'd input and stage it
+    // ahead of worker demand (the lane's bounded depth backpressures
+    // this thread; pushing inline with collection would deadlock once
+    // the lane fills).
+    let producer = {
+        let core = core.clone();
+        let clip = clip.clone();
+        std::thread::spawn(move || {
+            let total = tasks.len();
+            let submitted = std::sync::atomic::AtomicUsize::new(0);
+            // Contained like the workers' hot path: every task the
+            // collector expects MUST produce an event, so if staging
+            // panics (or admission fails mid-job) the remainder is
+            // reported as errors instead of leaving the collector
+            // blocked on a receive forever.
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    for task in tasks {
+                        // Pre-staged halo'd input: a fresh Vec per box,
+                        // NOT pool scratch — bounded by the lane depth
+                        // and freed on execution. (Recycling these
+                        // through BufferPool is a ROADMAP item.)
+                        let staged = clip.extract_box(
+                            task.t0,
+                            task.i0,
+                            task.j0,
+                            task.dims,
+                            core.plan.halo,
+                        );
+                        let (accepted, _) = core.queue.push(
+                            id,
+                            BoxJob {
+                                job_id: id,
+                                task,
+                                clip: clip.clone(),
+                                clip_t0: 0,
+                                staged: Some(staged),
+                                enqueued: Instant::now(),
+                            },
+                            Policy::Block,
+                        );
+                        if !accepted {
+                            return; // engine tearing down
+                        }
+                        submitted.fetch_add(
+                            1,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                    }
+                }),
+            );
+            let submitted =
+                submitted.load(std::sync::atomic::Ordering::Relaxed);
+            if outcome.is_err() || submitted < total {
+                for _ in submitted..total {
+                    let _ = core.router.route(WorkerEvent {
+                        job_id: id,
+                        result: Err(Error::Coordinator(
+                            "batch ingest stopped before staging every \
+                             box"
+                                .into(),
+                        )),
+                    });
+                }
             }
-            for _ in 0..n_sel {
-                let r = self.next_result(job_id)?;
-                self.record(&metrics, &r);
+        })
+    };
+    // Collector: reassemble the binarized video. A worker error does not
+    // stop the drain — every pushed box still produces an event, and
+    // draining them keeps the lane clean for concurrent jobs.
+    let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
+    let mut first_err: Option<Error> = None;
+    for _ in 0..n_tasks {
+        match rx.recv() {
+            Ok(ev) => absorb(core, &metrics, ev, &mut first_err, &mut |r| {
                 binary.write_box(
-                    r.task.t0,
+                    r.clip_t0 + r.task.t0,
                     r.task.i0,
                     r.task.j0,
                     r.task.dims,
                     &r.binary,
                 );
+            }),
+            Err(_) => {
+                first_err.get_or_insert_with(disconnected);
+                break;
             }
-            // Advance the tracker through this window's frames.
-            for dt in 0..bx.t {
-                let t = t0 + dt;
-                let frame = &binary.data[t * plane..(t + 1) * plane];
-                if t == 0 {
-                    tracker.acquire(frame, self.cfg.markers);
-                } else {
-                    tracker.step(frame);
+        }
+    }
+    let _ = producer.join();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = started.elapsed();
+
+    // Tracking pass (K6): acquisition on frame 0, Kalman per frame.
+    // One pass serves both the live-track count and (when ground
+    // truth is known) the RMSE score.
+    let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
+    let plane = clip.h * clip.w;
+    tracker.acquire(&binary.data[..plane], core.cfg.markers);
+    for t in 1..frames_covered {
+        tracker.step(&binary.data[t * plane..(t + 1) * plane]);
+    }
+    let rmse = truth
+        .map(|tr| tracker.rmse_vs_truth(&tr))
+        .unwrap_or_default();
+
+    let report = metrics.snapshot(wall, frames_covered as u64);
+    core.finish_job(id, JobKind::Batch, &report);
+    Ok(RunReport {
+        tracks: tracker.tracks.len(),
+        rmse,
+        metrics: report,
+        binary,
+    })
+}
+
+/// Serve body: a pacer thread emits frames at the source rate into a
+/// bounded staging channel (`ingest_depth` frames deep — the async
+/// ingest buffer that absorbs transient worker stalls); the admission
+/// loop windows frames, pre-extracts box inputs, and admits them under
+/// the job's policy, draining results opportunistically between frames.
+fn run_serve(
+    core: &Arc<EngineCore>,
+    id: JobId,
+    rx: Receiver<WorkerEvent>,
+    clip: Arc<Video>,
+    opts: ServeOpts,
+) -> Result<MetricsReport> {
+    let bx = core.cfg.box_dims;
+    let metrics = Metrics::new();
+    // Spatial box template per emitted window (t0 shifts below).
+    let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
+    let plane = clip.h * clip.w * 4;
+    let started = Instant::now();
+    let frame_interval = Duration::from_secs_f64(1.0 / opts.fps);
+
+    // Pacer: the "camera". Runs free of admission stalls — up to
+    // ingest_depth frames sit staged before it backpressures.
+    let (frame_tx, frame_rx) =
+        mpsc::sync_channel::<Vec<f32>>(core.cfg.ingest_depth);
+    let pacer = {
+        let clip = clip.clone();
+        std::thread::spawn(move || {
+            let mut next_deadline = Instant::now();
+            for t in 0..clip.t {
+                next_deadline += frame_interval;
+                if let Some(wait) =
+                    next_deadline.checked_duration_since(Instant::now())
+                {
+                    std::thread::sleep(wait);
+                }
+                let frame = clip.data[t * plane..(t + 1) * plane].to_vec();
+                if frame_tx.send(frame).is_err() {
+                    break; // admission loop gone
+                }
+            }
+        })
+    };
+
+    let mut batcher = Batcher::new(bx.t, clip.h, clip.w, 4);
+    let mut pushed = 0u64;
+    let mut job_dropped = 0u64;
+    let mut completed = 0u64;
+    let mut first_err: Option<Error> = None;
+    'ingest: for frame in frame_rx.iter() {
+        if let Some(window) = batcher.push(frame) {
+            let win = Arc::new(window.buf);
+            for mut task in spatial.iter().copied() {
+                // Window frames are 1-offset (halo first): shift origin.
+                task.t0 += 1;
+                let staged = win.extract_box(
+                    task.t0,
+                    task.i0,
+                    task.j0,
+                    task.dims,
+                    core.plan.halo,
+                );
+                let (accepted, evicted) = core.queue.push(
+                    id,
+                    BoxJob {
+                        job_id: id,
+                        task,
+                        clip: win.clone(),
+                        clip_t0: window.t0,
+                        staged: Some(staged),
+                        enqueued: Instant::now(),
+                    },
+                    opts.policy,
+                );
+                if !accepted {
+                    break 'ingest; // engine tearing down
+                }
+                pushed += 1;
+                // Lane eviction is strictly own-job, so every evicted
+                // box is ours: exact per-job drop accounting.
+                job_dropped += evicted.len() as u64;
+            }
+        }
+        // Opportunistic drain between frames keeps the result channel
+        // flat without a second collector thread.
+        while let Ok(ev) = rx.try_recv() {
+            completed += 1;
+            absorb(core, &metrics, ev, &mut first_err, &mut |_| {});
+        }
+    }
+    // Drop the staging receiver BEFORE joining: if ingest broke out
+    // early (engine teardown) the pacer may be parked on a full staging
+    // channel, and the disconnect is what unblocks it.
+    drop(frame_rx);
+    let _ = pacer.join();
+    // Ingest done: drops only happen during pushes, so the drop count
+    // is final and the outstanding box count is exact. Drain them all
+    // — no processed result is ever silently discarded.
+    let expected = pushed - job_dropped;
+    while completed < expected {
+        match rx.recv() {
+            Ok(ev) => {
+                completed += 1;
+                absorb(core, &metrics, ev, &mut first_err, &mut |_| {});
+            }
+            Err(_) => {
+                first_err.get_or_insert_with(disconnected);
+                break;
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = started.elapsed();
+    metrics
+        .dropped
+        .fetch_add(job_dropped, std::sync::atomic::Ordering::Relaxed);
+    let report = metrics.snapshot(wall, clip.t as u64);
+    core.finish_job(id, JobKind::Serve, &report);
+    Ok(report)
+}
+
+/// ROI body: window-sequential (the tracker feedback decides the next
+/// window's boxes), but still a first-class multiplexed job — its boxes
+/// share the pool with concurrent jobs through its own lane.
+fn run_roi(
+    core: &Arc<EngineCore>,
+    id: JobId,
+    rx: Receiver<WorkerEvent>,
+    clip: Arc<Video>,
+) -> Result<(RunReport, f64)> {
+    let bx = core.cfg.box_dims;
+    let windows = clip.t / bx.t;
+    let frames_covered = windows * bx.t;
+    let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
+    let total_boxes = spatial.len() * windows;
+    let metrics = Metrics::new();
+    let started = Instant::now();
+
+    let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
+    let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
+    let plane = clip.h * clip.w;
+    let mut processed = 0usize;
+    let mut first_err: Option<Error> = None;
+
+    'windows: for win in 0..windows {
+        let t0 = win * bx.t;
+        // Select boxes: window 0 = all (acquisition); later windows =
+        // only boxes intersecting a track's ROI around the predicted
+        // position.
+        let selected: Vec<_> = if win == 0 {
+            spatial.clone()
+        } else {
+            let half = tracker.cfg.roi_half + bx.x / 2;
+            spatial
+                .iter()
+                .filter(|task| {
+                    tracker.tracks.iter().any(|tr| {
+                        let (pi, pj) = tr.filter.predict_pos();
+                        let (ci, cj) = (
+                            task.i0 as f32 + bx.x as f32 / 2.0,
+                            task.j0 as f32 + bx.y as f32 / 2.0,
+                        );
+                        (pi - ci).abs() <= half as f32
+                            && (pj - cj).abs() <= half as f32
+                    })
+                })
+                .copied()
+                .collect()
+        };
+        processed += selected.len();
+        let n_sel = selected.len();
+        for mut task in selected {
+            task.t0 = t0; // temporal origin of this window in the clip
+            let staged = clip.extract_box(
+                task.t0,
+                task.i0,
+                task.j0,
+                task.dims,
+                core.plan.halo,
+            );
+            let (accepted, _) = core.queue.push(
+                id,
+                BoxJob {
+                    job_id: id,
+                    task,
+                    clip: clip.clone(),
+                    clip_t0: 0,
+                    staged: Some(staged),
+                    enqueued: Instant::now(),
+                },
+                Policy::Block,
+            );
+            if !accepted {
+                first_err.get_or_insert_with(disconnected);
+                break 'windows;
+            }
+        }
+        for _ in 0..n_sel {
+            match rx.recv() {
+                Ok(ev) => {
+                    absorb(core, &metrics, ev, &mut first_err, &mut |r| {
+                        binary.write_box(
+                            r.task.t0,
+                            r.task.i0,
+                            r.task.j0,
+                            r.task.dims,
+                            &r.binary,
+                        );
+                    })
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(disconnected);
+                    break 'windows;
                 }
             }
         }
-        let wall = started.elapsed();
-        let coverage = processed as f64 / total_boxes as f64;
-        let report = metrics.snapshot(wall, frames_covered as u64);
-        self.finish_job(&report);
-        let tracks = tracker.tracks.len();
-        Ok((
-            RunReport {
-                metrics: report,
-                tracks,
-                rmse: Vec::new(),
-                binary,
-            },
-            coverage,
-        ))
+        if first_err.is_some() {
+            break 'windows; // incomplete window: tracking would drift
+        }
+        // Advance the tracker through this window's frames.
+        for dt in 0..bx.t {
+            let t = t0 + dt;
+            let frame = &binary.data[t * plane..(t + 1) * plane];
+            if t == 0 {
+                tracker.acquire(frame, core.cfg.markers);
+            } else {
+                tracker.step(frame);
+            }
+        }
     }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = started.elapsed();
+    let coverage = processed as f64 / total_boxes as f64;
+    let report = metrics.snapshot(wall, frames_covered as u64);
+    core.finish_job(id, JobKind::Roi, &report);
+    let tracks = tracker.tracks.len();
+    Ok((
+        RunReport {
+            metrics: report,
+            tracks,
+            rmse: Vec::new(),
+            binary,
+        },
+        coverage,
+    ))
 }

@@ -1,5 +1,5 @@
-//! `kfuse::engine` — persistent execution sessions for streaming video
-//! analysis.
+//! `kfuse::engine` — persistent, multi-job execution sessions for
+//! streaming video analysis.
 //!
 //! The paper's whole argument is amortization: fuse kernels ONCE, then
 //! stream 600–1000 fps of video through the fused plan with minimal data
@@ -7,31 +7,44 @@
 //! this API) fought that — every call re-loaded the manifest, re-resolved
 //! the execution plan, re-spawned workers, and re-compiled every PJRT
 //! executable. An [`Engine`] pays all of that exactly once at
-//! [`EngineBuilder::build`]:
+//! [`EngineBuilder::build`], and then MULTIPLEXES concurrently admitted
+//! jobs over the warm pool:
 //!
 //! * it owns the loaded [`Manifest`](crate::runtime::Manifest) and the
-//!   resolved [`ExecutionPlan`](crate::coordinator::ExecutionPlan);
+//!   resolved [`ExecutionPlan`](crate::coordinator::ExecutionPlan)
+//!   (solved on the configured planning device — `--device`);
 //! * it keeps a **persistent warm worker pool** — each worker's PJRT
 //!   client and compiled executables survive across jobs;
-//! * batch / serve / ROI are thin [`jobs`] submitted against it, routed
-//!   by job id through one long-lived bounded queue;
-//! * [`Engine::stats`] exposes cumulative session metrics, including the
-//!   pool-wide compile count (which must not grow after build — that is
-//!   the warm-pool contract, and `tests/engine_reuse.rs` enforces it)
-//!   and the scratch-pool allocation count (flat across jobs on the
-//!   fused CPU backend — the zero-allocation steady-state contract);
+//! * batch / serve / ROI are [`jobs`] **admitted concurrently**: each is
+//!   decomposed into per-box work items tagged with its [`JobId`], staged
+//!   by an ingest/producer thread (inputs pre-extracted so workers never
+//!   stall on extraction), and fed through the job's own bounded lane of
+//!   the multiplexing ready queue
+//!   ([`MuxQueue`](crate::coordinator::MuxQueue)); the fairness policy
+//!   ([`QueuePolicy`](crate::config::QueuePolicy)) decides how worker
+//!   pops interleave jobs, so a long batch job cannot starve a
+//!   latency-sensitive serve job;
+//! * results route back per job through the
+//!   [`ResultRouter`](crate::coordinator::ResultRouter); each job gets an
+//!   independent completion ([`JobHandle`]) and its own
+//!   [`JobStats`] row in [`Engine::stats`] (boxes, drops, queue wait,
+//!   per-partition nanos);
+//! * [`Engine::shutdown`] drains in-flight jobs deterministically before
+//!   tearing the pool down — no submitted box is abandoned;
 //! * execution is backend-pluggable
 //!   ([`Backend`](crate::config::Backend)): `Pjrt` dispatches the AOT
 //!   artifact chain, `Cpu` runs the native [`exec`](crate::exec)
 //!   executors so the whole engine builds and serves jobs offline.
 //!
+//! Sequential use (submit-then-wait wrappers):
+//!
 //! ```no_run
 //! use kfuse::config::FusionMode;
-//! use kfuse::engine::{Engine, ServeOpts};
+//! use kfuse::engine::Engine;
 //! use kfuse::fusion::halo::BoxDims;
 //!
 //! fn main() -> kfuse::Result<()> {
-//!     let mut engine = Engine::builder()
+//!     let engine = Engine::builder()
 //!         .artifacts("artifacts")
 //!         .mode(FusionMode::Full)
 //!         .box_dims(BoxDims::new(32, 32, 8))
@@ -44,6 +57,31 @@
 //!     engine.shutdown()
 //! }
 //! ```
+//!
+//! Concurrent jobs multiplexed over one pool:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use kfuse::config::Backend;
+//! use kfuse::engine::{Engine, ServeOpts};
+//!
+//! fn main() -> kfuse::Result<()> {
+//!     let engine = Engine::builder().backend(Backend::Cpu).build()?;
+//!     let (long, _) = kfuse::coordinator::synth_clip(engine.config(), 1);
+//!     let (live, _) = kfuse::coordinator::synth_clip(engine.config(), 2);
+//!     // Admit both; the ready queue interleaves their boxes fairly.
+//!     let batch = engine.submit_batch(Arc::new(long))?;
+//!     let serve = engine.submit_serve(
+//!         Arc::new(live),
+//!         ServeOpts::from_config(engine.config()),
+//!     )?;
+//!     let live_report = serve.wait()?; // finishes while batch still runs
+//!     let batch_report = batch.wait()?;
+//!     println!("{live_report}\n{}", batch_report.metrics);
+//!     println!("session: {}", engine.stats()); // per-job rows included
+//!     engine.shutdown()
+//! }
+//! ```
 
 pub mod builder;
 pub mod jobs;
@@ -51,7 +89,8 @@ pub mod session;
 pub mod stats;
 
 pub use crate::coordinator::backpressure::Policy;
+pub use crate::coordinator::mux::JobId;
 pub use builder::EngineBuilder;
-pub use jobs::{RunReport, ServeOpts};
+pub use jobs::{JobHandle, JobKind, RunReport, ServeOpts};
 pub use session::Engine;
-pub use stats::EngineStats;
+pub use stats::{EngineStats, JobStats};

@@ -1,48 +1,168 @@
-//! Engine lifecycle: build the warm pool once, route job results, tear
-//! down on drop.
+//! Engine lifecycle: build the warm pool once, multiplex concurrent
+//! jobs over it, tear down deterministically.
 //!
-//! The engine owns the four long-lived pieces the one-shot `run_*`
-//! entrypoints used to rebuild per call: the loaded [`Manifest`], the
-//! resolved [`ExecutionPlan`], the bounded box queue, and the persistent
-//! worker pool (each worker holding a PJRT client with its compiled
-//! executables). Jobs (`batch` / `serve` / `roi`, in
-//! [`jobs`](super::jobs)) are thin submissions against this state.
+//! The engine owns the long-lived pieces the one-shot `run_*` entrypoints
+//! used to rebuild per call: the loaded [`Manifest`], the resolved
+//! [`ExecutionPlan`], the multiplexing per-job ready queue
+//! ([`MuxQueue`]), the per-job result router ([`ResultRouter`]), and the
+//! persistent worker pool (each worker holding a PJRT client with its
+//! compiled executables). Jobs (`batch` / `serve` / `roi`, in
+//! [`jobs`](super::jobs)) are admitted CONCURRENTLY against this state:
+//! each is decomposed into per-box work items tagged with its
+//! [`JobId`], fed through its own bounded queue lane under the engine's
+//! fairness policy, and drained by a per-job collector thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
 
-use super::stats::EngineStats;
+use super::jobs::JobKind;
+use super::stats::{EngineStats, JobStats};
 use super::EngineBuilder;
 use crate::config::{Backend, RunConfig};
-use crate::coordinator::backpressure::{Bounded, Policy};
 use crate::coordinator::metrics::{Metrics, MetricsReport};
+use crate::coordinator::mux::{JobId, MuxQueue};
 use crate::coordinator::plan::ExecutionPlan;
+use crate::coordinator::router::ResultRouter;
 use crate::coordinator::scheduler::{
     spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
 };
 use crate::exec::BufferPool;
+use crate::gpusim::device::DeviceSpec;
 use crate::runtime::Manifest;
 use crate::{Error, Result};
 
-/// A persistent execution session: manifest + plan + warm worker pool.
-///
-/// Construct via [`Engine::builder`] (or [`Engine::from_config`]); submit
-/// jobs with [`Engine::batch`], [`Engine::serve`], [`Engine::roi`]; read
-/// lifetime counters with [`Engine::stats`]. Workers — and the PJRT
-/// executables they compiled at build time — survive across jobs, so
-/// every job after `build()` runs warm.
-pub struct Engine {
+/// Shared session state: everything a job thread needs, behind one `Arc`
+/// so submission returns immediately and collectors outlive the call.
+pub(crate) struct EngineCore {
     pub(crate) cfg: RunConfig,
     pub(crate) plan: Arc<ExecutionPlan>,
-    manifest: Arc<Manifest>,
-    pub(crate) queue: Bounded<BoxJob>,
-    events: Receiver<WorkerEvent>,
-    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    pub(crate) manifest: Arc<Manifest>,
+    pub(crate) queue: MuxQueue<BoxJob>,
+    pub(crate) router: Arc<ResultRouter>,
     compiles: Arc<AtomicU64>,
     pool: Arc<BufferPool>,
-    next_job: u64,
-    totals: EngineStats,
+    next_job: AtomicU64,
+    totals: Mutex<EngineStats>,
+    /// Jobs admitted but not yet completed; `shutdown` drains to zero.
+    active: Mutex<u64>,
+    idle: Condvar,
+}
+
+impl EngineCore {
+    /// Admit a job: allocate its id, open its queue lane (weighted for
+    /// deficit-weighted fairness) and its private result channel, and
+    /// count it active until [`EngineCore::end_job`].
+    pub(crate) fn admit(
+        &self,
+        kind: JobKind,
+    ) -> (JobId, Receiver<WorkerEvent>) {
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed) + 1);
+        self.queue.register(id, kind.weight());
+        let rx = self.router.register(id);
+        *self.active.lock().unwrap() += 1;
+        (id, rx)
+    }
+
+    /// Fold a completed job's report into the lifetime totals and append
+    /// its per-job row (completion order).
+    pub(crate) fn finish_job(
+        &self,
+        id: JobId,
+        kind: JobKind,
+        rep: &MetricsReport,
+    ) {
+        let mut tot = self.totals.lock().unwrap();
+        tot.jobs += 1;
+        tot.boxes += rep.boxes;
+        tot.frames += rep.frames;
+        tot.bytes_in += rep.bytes_in;
+        tot.bytes_out += rep.bytes_out;
+        tot.dispatches += rep.dispatches;
+        tot.dropped += rep.dropped;
+        tot.queue_wait_nanos += rep.queue_wait_nanos;
+        if tot.partition_nanos.len() < rep.stage_nanos.len() {
+            tot.partition_nanos.resize(rep.stage_nanos.len(), 0);
+        }
+        for (a, v) in tot.partition_nanos.iter_mut().zip(&rep.stage_nanos) {
+            *a += v;
+        }
+        tot.per_job.push(JobStats {
+            job: id.0,
+            kind: kind.name(),
+            boxes: rep.boxes,
+            dropped: rep.dropped,
+            queue_wait_nanos: rep.queue_wait_nanos,
+            partition_nanos: rep.stage_nanos.clone(),
+        });
+    }
+
+    /// Retire a job whether it succeeded or failed: drop its result
+    /// route, retire its queue lane (unblocking a parked producer), and
+    /// release its active slot so `shutdown`'s drain can proceed. Runs in
+    /// every job-thread exit path.
+    pub(crate) fn end_job(&self, id: JobId) {
+        self.router.deregister(id);
+        self.queue.finish(id);
+        let mut active = self.active.lock().unwrap();
+        *active -= 1;
+        if *active == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    /// Record one completed box into a job's metrics (byte accounting
+    /// derives from the plan, latency/queue-wait were stamped by the
+    /// worker).
+    pub(crate) fn record(&self, metrics: &Metrics, r: &BoxResult) {
+        // RGBA f32 staged in, with the chain's halo.
+        let in_bytes =
+            (r.task.dims.with_halo(self.plan.halo).pixels() * 4 * 4) as u64;
+        let out_bytes = (r.binary.len() * 4) as u64;
+        metrics.record_box(
+            r.latency,
+            r.queue_wait,
+            in_bytes,
+            out_bytes,
+            self.plan.dispatches_per_box(),
+            &r.stage_nanos,
+        );
+    }
+
+    /// A clip must match the engine's box geometry (the compiled
+    /// executables are shape-specific).
+    pub(crate) fn check_clip(&self, clip: &crate::video::Video) -> Result<()> {
+        let bx = self.cfg.box_dims;
+        if clip.h % bx.x != 0 || clip.w % bx.y != 0 {
+            return Err(Error::Config(format!(
+                "box {}x{} must divide clip {}x{}",
+                bx.x, bx.y, clip.h, clip.w
+            )));
+        }
+        if clip.t < bx.t {
+            return Err(Error::Config(format!(
+                "clip has {} frames, shorter than one temporal box ({})",
+                clip.t, bx.t
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A persistent execution session: manifest + plan + warm worker pool,
+/// multiplexing concurrently admitted jobs.
+///
+/// Construct via [`Engine::builder`] (or [`Engine::from_config`]).
+/// Submit jobs concurrently with [`Engine::submit_batch`],
+/// [`Engine::submit_serve`], [`Engine::submit_roi`] (each returns a
+/// [`JobHandle`](super::JobHandle)), or use the blocking wrappers
+/// [`Engine::batch`], [`Engine::serve`], [`Engine::roi`]. Read lifetime
+/// counters (including per-job rows) with [`Engine::stats`]. Workers —
+/// and the PJRT executables they compiled at build time — survive across
+/// jobs, so every job after `build()` runs warm.
+pub struct Engine {
+    pub(crate) core: Arc<EngineCore>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
 }
 
 impl Engine {
@@ -52,9 +172,10 @@ impl Engine {
     }
 
     /// Build an engine straight from a [`RunConfig`]. All one-time cost
-    /// happens here: validation, manifest load, plan resolution, worker
-    /// spawn, and PJRT compilation on every worker (the call returns only
-    /// once every worker is warm).
+    /// happens here: validation, manifest load, plan resolution (the DP
+    /// partition solve targets `cfg.device`), worker spawn, and PJRT
+    /// compilation on every worker (the call returns only once every
+    /// worker is warm).
     pub fn from_config(cfg: RunConfig) -> Result<Engine> {
         cfg.validate()?;
         // The CPU backend needs no artifact registry: the engine builds
@@ -64,18 +185,21 @@ impl Engine {
             Backend::Cpu => Arc::new(Manifest::default()),
         };
         // Partition selection flows from the planner's DP solve over
-        // this config's input instance (see ExecutionPlan::resolve_on).
+        // this config's input instance ON THE CONFIGURED DEVICE (see
+        // ExecutionPlan::resolve_on): `--device` changes what
+        // FusionMode::Auto picks.
+        let device = DeviceSpec::by_name(&cfg.device)?;
         let plan = Arc::new(ExecutionPlan::resolve_on(
             cfg.mode,
             cfg.box_dims,
             true,
             cfg.input_dims(),
-            &crate::gpusim::device::DeviceSpec::k20(),
+            &device,
         ));
         let pool = BufferPool::shared();
-        let queue: Bounded<BoxJob> =
-            Bounded::new(cfg.queue_depth, Policy::Block);
-        let (tx, rx) = mpsc::channel::<WorkerEvent>();
+        let queue: MuxQueue<BoxJob> =
+            MuxQueue::new(cfg.queue_depth, cfg.queue_policy);
+        let router = Arc::new(ResultRouter::new());
         let compiles = Arc::new(AtomicU64::new(0));
         let init_errors: Arc<Mutex<Vec<String>>> =
             Arc::new(Mutex::new(Vec::new()));
@@ -90,7 +214,7 @@ impl Engine {
                 intra_box_threads: cfg.intra_box_threads,
             },
             queue.clone(),
-            tx,
+            router.clone(),
             compiles.clone(),
             init_errors.clone(),
         );
@@ -108,149 +232,104 @@ impl Engine {
             )));
         }
         Ok(Engine {
-            cfg,
-            plan,
-            manifest,
-            queue,
-            events: rx,
+            core: Arc::new(EngineCore {
+                cfg,
+                plan,
+                manifest,
+                queue,
+                router,
+                compiles,
+                pool,
+                next_job: AtomicU64::new(0),
+                totals: Mutex::new(EngineStats::default()),
+                active: Mutex::new(0),
+                idle: Condvar::new(),
+            }),
             workers,
-            compiles,
-            pool,
-            next_job: 0,
-            totals: EngineStats::default(),
         })
     }
 
     /// The session's configuration (fixed at build).
     pub fn config(&self) -> &RunConfig {
-        &self.cfg
+        &self.core.cfg
     }
 
     /// The resolved per-box execution chain this session dispatches.
     pub fn plan(&self) -> &ExecutionPlan {
-        &self.plan
+        &self.core.plan
     }
 
     /// The loaded artifact registry.
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        &self.core.manifest
     }
 
-    /// Lifetime counters across every job served so far, including the
-    /// pool-wide PJRT compile count and the scratch-pool allocation count
-    /// (both settle at build time and must not grow afterwards — the
-    /// warm-pool and zero-allocation steady-state contracts).
+    /// Lifetime counters across every job served so far — including the
+    /// per-job rows ([`EngineStats::per_job`], completion order), the
+    /// pool-wide PJRT compile count, and the scratch-pool allocation
+    /// count (both settle at build time and must not grow afterwards —
+    /// the warm-pool and zero-allocation steady-state contracts).
     pub fn stats(&self) -> EngineStats {
         // Only the fused CPU executors band boxes; PJRT and the staged
         // baseline ignore intra_box_threads, so report 1 there instead
         // of a thread count that never ran.
-        let bands = if self.cfg.backend == Backend::Cpu
-            && self.plan.partition.iter().any(|s| s.len > 1)
+        let bands = if self.core.cfg.backend == Backend::Cpu
+            && self.core.plan.partition.iter().any(|s| s.len > 1)
         {
             crate::exec::split_rows(
-                self.cfg.box_dims.x,
-                self.cfg.intra_box_threads,
+                self.core.cfg.box_dims.x,
+                self.core.cfg.intra_box_threads,
             )
             .len() as u64
         } else {
             1
         };
         EngineStats {
-            compiles: self.compiles.load(Ordering::Relaxed),
-            pool_allocs: self.pool.allocations(),
+            compiles: self.core.compiles.load(Ordering::Relaxed),
+            pool_allocs: self.core.pool.allocations(),
             bands,
-            ..self.totals.clone()
+            ..self.core.totals.lock().unwrap().clone()
         }
     }
 
-    /// Allocate the next job id (ids route results back to their job).
-    pub(crate) fn begin_job(&mut self) -> u64 {
-        self.next_job += 1;
-        self.next_job
+    /// Jobs admitted but not yet completed.
+    pub fn active_jobs(&self) -> u64 {
+        *self.core.active.lock().unwrap()
     }
 
-    /// Fold a completed job's report into the lifetime totals.
-    pub(crate) fn finish_job(&mut self, rep: &MetricsReport) {
-        self.totals.jobs += 1;
-        self.totals.boxes += rep.boxes;
-        self.totals.frames += rep.frames;
-        self.totals.bytes_in += rep.bytes_in;
-        self.totals.bytes_out += rep.bytes_out;
-        self.totals.dispatches += rep.dispatches;
-        self.totals.dropped += rep.dropped;
-        if self.totals.partition_nanos.len() < rep.stage_nanos.len() {
-            self.totals.partition_nanos.resize(rep.stage_nanos.len(), 0);
-        }
-        for (a, v) in self.totals.partition_nanos.iter_mut().zip(&rep.stage_nanos) {
-            *a += v;
-        }
-    }
-
-    /// Receive the next result for `job_id`, discarding stale events left
-    /// in the channel by an earlier job that failed mid-drain. Blocks
-    /// until a matching event arrives.
-    pub(crate) fn next_result(&mut self, job_id: u64) -> Result<BoxResult> {
-        loop {
-            let ev = self.events.recv().map_err(|_| {
-                Error::Coordinator(
-                    "worker pool died (event channel closed)".into(),
-                )
-            })?;
-            if ev.job_id != job_id {
-                continue;
-            }
-            return ev.result;
-        }
-    }
-
-    /// Non-blocking [`Engine::next_result`] for opportunistic draining
-    /// while a serve job paces ingest.
-    pub(crate) fn try_next_result(
-        &mut self,
-        job_id: u64,
-    ) -> Option<Result<BoxResult>> {
-        loop {
-            match self.events.try_recv() {
-                Ok(ev) if ev.job_id == job_id => return Some(ev.result),
-                Ok(_) => continue, // stale event from an aborted job
-                Err(_) => return None,
-            }
-        }
-    }
-
-    /// Record one completed box into a job's metrics (byte accounting
-    /// derives from the plan, latency was stamped by the worker).
-    pub(crate) fn record(&self, metrics: &Metrics, r: &BoxResult) {
-        // RGBA f32 staged in, with the chain's halo.
-        let in_bytes =
-            (r.task.dims.with_halo(self.plan.halo).pixels() * 4 * 4) as u64;
-        let out_bytes = (r.binary.len() * 4) as u64;
-        metrics.record_box(
-            r.latency,
-            in_bytes,
-            out_bytes,
-            self.plan.dispatches_per_box(),
-            &r.stage_nanos,
-        );
-    }
-
-    /// Orderly teardown: close the queue, join every worker, surface the
-    /// first worker error. `Drop` does the same minus error reporting, so
-    /// calling this is optional but recommended in tests.
+    /// Orderly teardown: DRAIN every in-flight job to completion (the
+    /// deterministic-shutdown contract — no submitted box is abandoned),
+    /// then close the queue, join every worker, and surface the first
+    /// worker error. `Drop` tears down without draining, so calling this
+    /// is the way to guarantee outstanding [`JobHandle`]s resolve
+    /// normally.
+    ///
+    /// [`JobHandle`]: super::JobHandle
     pub fn shutdown(mut self) -> Result<()> {
-        self.queue.close();
+        let mut active = self.core.active.lock().unwrap();
+        while *active > 0 {
+            active = self.core.idle.wait(active).unwrap();
+        }
+        drop(active);
+        self.core.queue.close();
         let workers = std::mem::take(&mut self.workers);
         for h in workers {
             h.join()
                 .map_err(|_| Error::Coordinator("worker panicked".into()))??;
         }
+        self.core.router.close();
         Ok(())
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        self.queue.close();
+        // Not a drain: in-flight producers see their pushes fail, and
+        // router.close() disconnects any collector still blocked on a
+        // receive, so job threads terminate (with an error) instead of
+        // hanging.
+        self.core.queue.close();
+        self.core.router.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }

@@ -1,10 +1,60 @@
-//! Cumulative, engine-lifetime statistics.
+//! Cumulative, engine-lifetime statistics, with per-job rows.
+
+/// Accounting for one completed job, appended to
+/// [`EngineStats::per_job`] in completion order. The per-job rows
+/// partition the session totals: summing a column across rows yields the
+/// corresponding lifetime counter (enforced by
+/// `tests/engine_multiplex.rs`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobStats {
+    /// Engine job id (monotone admission order).
+    pub job: u64,
+    /// Job kind: `"batch"`, `"serve"`, or `"roi"`.
+    pub kind: &'static str,
+    /// Boxes this job executed.
+    pub boxes: u64,
+    /// Boxes this job's admission policy dropped (always the job's own —
+    /// lane eviction never crosses jobs).
+    pub dropped: u64,
+    /// Cumulative ready-queue wait across the job's boxes, nanos. Under
+    /// multiplexing this is the number the fairness policy controls: a
+    /// latency-sensitive job sharing the pool with a backlogged batch
+    /// job should see a small value here.
+    pub queue_wait_nanos: u64,
+    /// Cumulative wall nanos per executed partition across the job's
+    /// boxes (empty when the backend doesn't track them).
+    pub partition_nanos: Vec<u64>,
+}
+
+impl std::fmt::Display for JobStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {} {}: {} boxes | {} dropped | queue wait {:.1} ms",
+            self.job,
+            self.kind,
+            self.boxes,
+            self.dropped,
+            self.queue_wait_nanos as f64 / 1e6
+        )?;
+        if !self.partition_nanos.is_empty() {
+            let ms: Vec<String> = self
+                .partition_nanos
+                .iter()
+                .map(|ns| format!("{:.1}", *ns as f64 / 1e6))
+                .collect();
+            write!(f, " | partition ms [{}]", ms.join(", "))?;
+        }
+        Ok(())
+    }
+}
 
 /// Counters accumulated across every job a persistent [`Engine`] has
 /// served. Per-job numbers live in each job's
-/// [`MetricsReport`](crate::coordinator::MetricsReport); these totals are
-/// the session-level view (the "millions of users" accounting the
-/// one-shot `run_*` entrypoints could never provide).
+/// [`MetricsReport`](crate::coordinator::MetricsReport) and in the
+/// [`per_job`](EngineStats::per_job) rows; the top-level fields are the
+/// session view (the "millions of users" accounting the one-shot `run_*`
+/// entrypoints could never provide).
 ///
 /// [`Engine`]: crate::engine::Engine
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -23,6 +73,8 @@ pub struct EngineStats {
     pub dispatches: u64,
     /// Boxes dropped by backpressure (serve jobs).
     pub dropped: u64,
+    /// Cumulative ready-queue wait across every box of every job, nanos.
+    pub queue_wait_nanos: u64,
     /// PJRT executable compilations across the worker pool. Settles at
     /// `workers × plan artifacts` during `build()` (stays 0 on
     /// `Backend::Cpu`) and MUST NOT grow on later jobs — compiled
@@ -40,6 +92,11 @@ pub struct EngineStats {
     /// (e.g. `[{K1,K2}, {K3..K5}]` for Two Fusion; one entry for the
     /// all-fused pass; empty when the backend doesn't track them).
     pub partition_nanos: Vec<u64>,
+    /// One row per completed job, in completion order. Under
+    /// multiplexing, completion order is the fairness story: a small
+    /// serve job admitted after a large batch job should still complete
+    /// first.
+    pub per_job: Vec<JobStats>,
 }
 
 impl std::fmt::Display for EngineStats {
@@ -47,13 +104,14 @@ impl std::fmt::Display for EngineStats {
         write!(
             f,
             "{} jobs | {} boxes | {} frames | {} dispatches | \
-             {} dropped | {} compiles | {} pool allocs (warm after build) | \
-             {} bands/box",
+             {} dropped | queue wait {:.1} ms | {} compiles | \
+             {} pool allocs (warm after build) | {} bands/box",
             self.jobs,
             self.boxes,
             self.frames,
             self.dispatches,
             self.dropped,
+            self.queue_wait_nanos as f64 / 1e6,
             self.compiles,
             self.pool_allocs,
             self.bands
@@ -65,6 +123,9 @@ impl std::fmt::Display for EngineStats {
                 .map(|ns| format!("{:.1}", *ns as f64 / 1e6))
                 .collect();
             write!(f, " | partition ms [{}]", ms.join(", "))?;
+        }
+        for row in &self.per_job {
+            write!(f, "\n  {row}")?;
         }
         Ok(())
     }
@@ -79,6 +140,7 @@ mod tests {
         let s = EngineStats::default();
         assert_eq!(s.jobs, 0);
         assert_eq!(s.compiles, 0);
+        assert!(s.per_job.is_empty());
     }
 
     #[test]
@@ -105,5 +167,35 @@ mod tests {
         assert!(text.contains("partition ms [1.5, 2.5]"), "{text}");
         let bare = format!("{}", EngineStats::default());
         assert!(!bare.contains("partition ms"), "{bare}");
+    }
+
+    #[test]
+    fn display_lists_per_job_rows_in_completion_order() {
+        let s = EngineStats {
+            jobs: 2,
+            per_job: vec![
+                JobStats {
+                    job: 2,
+                    kind: "serve",
+                    boxes: 16,
+                    queue_wait_nanos: 1_200_000,
+                    ..JobStats::default()
+                },
+                JobStats {
+                    job: 1,
+                    kind: "batch",
+                    boxes: 64,
+                    partition_nanos: vec![800_000],
+                    ..JobStats::default()
+                },
+            ],
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        let serve = text.find("job 2 serve: 16 boxes").unwrap();
+        let batch = text.find("job 1 batch: 64 boxes").unwrap();
+        assert!(serve < batch, "completion order preserved: {text}");
+        assert!(text.contains("queue wait 1.2 ms"), "{text}");
+        assert!(text.contains("partition ms [0.8]"), "{text}");
     }
 }

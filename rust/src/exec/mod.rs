@@ -44,6 +44,25 @@
 //! [`TwoFusedCpu`], all-singletons to [`StagedCpu`] (see
 //! [`cpu_executor`]). There is no silent fallback: a partition without a
 //! CPU executor is a build-time error.
+//!
+//! ```no_run
+//! use kfuse::config::{Backend, FusionMode};
+//! use kfuse::engine::Engine;
+//!
+//! # fn main() -> kfuse::Result<()> {
+//! // Two Fusion on the native CPU executors: the engine's workers each
+//! // construct a TwoFusedCpu (per the plan's {K1,K2}{K3..K5} partition)
+//! // with 4 row-band threads per box.
+//! let engine = Engine::builder()
+//!     .backend(Backend::Cpu)
+//!     .mode(FusionMode::Two)
+//!     .intra_box_threads(4)
+//!     .build()?;
+//! let report = engine.batch_synth(7)?;
+//! println!("{}", report.metrics);
+//! engine.shutdown()
+//! # }
+//! ```
 
 pub mod bands;
 pub mod fused;

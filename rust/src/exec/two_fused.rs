@@ -11,7 +11,8 @@
 //!   across boxes).
 //! * **Partition B = {K3,K4,K5}** — the binomial + Sobel + threshold tail
 //!   over `y`, using the same rolling 3-line window as [`FusedCpu`]
-//!   (via [`stencil_frame`]); smoothed and gradient planes never exist,
+//!   (via `stencil_frame`, shared with the all-fused pass); smoothed and
+//!   gradient planes never exist,
 //!   and the detect reduction folds into the same loop.
 //!
 //! Both partitions run on the executor's band thread set: partition A

@@ -8,6 +8,25 @@
 //! [`fuse::FusedKernelPlan`]s (Algorithm 1) with halos from [`halo`]
 //! (Algorithm 2) → [`boxopt`] picks the box dimensions (eq 3–6) →
 //! [`traffic`] accounts for data movement (§VI-D, Figs 12/13).
+//!
+//! The planner is on the execution path, not just in figures: an engine
+//! built with `FusionMode::Auto` executes whatever partition the [`dp`]
+//! solve picks for the configured device —
+//!
+//! ```no_run
+//! use kfuse::config::{Backend, FusionMode};
+//! use kfuse::engine::Engine;
+//!
+//! # fn main() -> kfuse::Result<()> {
+//! let engine = Engine::builder()
+//!     .backend(Backend::Cpu)
+//!     .mode(FusionMode::Auto) // DP decides: full / two / none
+//!     .device("gtx750ti")     // ...optimizing for this device model
+//!     .build()?;
+//! println!("DP chose: {}", engine.plan().partition_names());
+//! engine.shutdown()
+//! # }
+//! ```
 
 pub mod boxopt;
 pub mod candidates;

@@ -88,6 +88,25 @@ impl DeviceSpec {
         vec![Self::c1060(), Self::k20(), Self::gtx750ti()]
     }
 
+    /// CLI names accepted by [`DeviceSpec::by_name`], in figure order.
+    pub const NAMES: [&'static str; 3] = ["c1060", "k20", "gtx750ti"];
+
+    /// Resolve a device by its CLI name (case-insensitive). Accepted:
+    /// `c1060`, `k20`, `gtx750ti` (alias `750ti`). This is the single
+    /// name registry shared by `--device` on `plan`, `simulate`, `run`,
+    /// and `serve`.
+    pub fn by_name(name: &str) -> crate::Result<DeviceSpec> {
+        match name.to_lowercase().as_str() {
+            "c1060" => Ok(Self::c1060()),
+            "k20" => Ok(Self::k20()),
+            "gtx750ti" | "750ti" => Ok(Self::gtx750ti()),
+            _ => Err(crate::Error::Config(format!(
+                "unknown device '{name}' (expected {})",
+                Self::NAMES.join("|")
+            ))),
+        }
+    }
+
     /// Max f32 values a block's box may occupy in SHMEM (β in eq 4–6).
     pub fn shmem_values(&self) -> usize {
         self.shmem_per_block / 4
@@ -113,6 +132,16 @@ mod tests {
             assert!(d.flops > d.gmem_bw, "GPUs are memory-bound here");
             assert!(d.shmem_speedup > 1.0);
         }
+    }
+
+    #[test]
+    fn by_name_resolves_every_registered_device() {
+        for name in DeviceSpec::NAMES {
+            DeviceSpec::by_name(name).unwrap();
+            DeviceSpec::by_name(&name.to_uppercase()).unwrap();
+        }
+        assert_eq!(DeviceSpec::by_name("750ti").unwrap().name, "GTX 750 Ti");
+        assert!(DeviceSpec::by_name("h100").is_err());
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //!   the amortization that turns the paper's fusion win into sustained
 //!   600–1000 fps throughput.
 //!
+//! Jobs are **multiplexed**, not serialized: each submission is
+//! decomposed into per-box work items tagged with a
+//! [`JobId`](engine::JobId), staged into the job's own bounded lane of
+//! the ready queue ([`coordinator::MuxQueue`]) by an async ingest
+//! thread, and interleaved onto the shared worker pool under a fairness
+//! policy ([`config::QueuePolicy`]); results route back per job through
+//! the [`coordinator::ResultRouter`]. A latency-sensitive serve job
+//! therefore completes while a large batch job is still streaming —
+//! the Kernelet-style slice scheduling that keeps a shared executor
+//! saturated.
+//!
 //! Execution is backend-pluggable ([`exec`]): `Backend::Pjrt` dispatches
 //! the AOT artifact chain; `Backend::Cpu` runs the same engine against
 //! native executors selected by the plan's DP-chosen partition — the
@@ -30,6 +41,24 @@
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs once; the PJRT backend loads `artifacts/*.hlo.txt` via the
 //! `xla` crate (PJRT CPU client).
+//!
+//! The repo-level `ARCHITECTURE.md` maps every paper construct (K1..K5,
+//! Algorithms 1–2, eq 3–6, Figs 7/14/16) to the modules and benches
+//! here; start there for a tour. Minimal session:
+//!
+//! ```no_run
+//! use kfuse::config::Backend;
+//! use kfuse::engine::Engine;
+//!
+//! fn main() -> kfuse::Result<()> {
+//!     let engine = Engine::builder()
+//!         .backend(Backend::Cpu) // offline: no artifacts needed
+//!         .build()?;
+//!     let report = engine.batch_synth(42)?;
+//!     println!("{}", report.metrics);
+//!     engine.shutdown()
+//! }
+//! ```
 
 pub mod bench_util;
 pub mod config;

@@ -3,9 +3,12 @@
 //! ```text
 //! kfuse plan     [--device k20|c1060|gtx750ti] [--input 256x256x1000]
 //! kfuse run      [--mode full|two|none|auto] [--backend pjrt|cpu]
+//!                [--device k20|c1060|gtx750ti]
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
 //!                [--intra-threads N] [--markers M]
+//!                [--queue-policy fifo|rr|drr] [--queue N]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
+//!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
 //!                [--size 256] [--frames 256] [--intra-threads N]
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
@@ -16,20 +19,27 @@
 //! executor follows the plan's DP-chosen partition: `--mode full` runs
 //! the single-pass `FusedCpu`, `--mode two` the two-partition
 //! `TwoFusedCpu`, `--mode none` the staged baseline, and `--mode auto`
-//! lets the planner pick. `--intra-threads N` fans each box out to N row
-//! bands on the fused executors (bit-identical to N=1).
+//! lets the planner pick — optimizing for the `--device` model (`k20`
+//! default; accepted names: `k20`, `c1060`, `gtx750ti`/`750ti`).
+//! `--intra-threads N` fans each box out to N row bands on the fused
+//! executors (bit-identical to N=1).
 //!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
 //! load, plan resolution, worker spawn, and PJRT compilation all happen
 //! once at engine build, so the reported wall time is warm steady-state
-//! execution. Each command prints the session's cumulative
-//! `engine.stats()` line at the end (including the compile count that
-//! settles at build and must not grow per job).
+//! execution. The engine multiplexes concurrently admitted jobs through
+//! per-job queue lanes — `--queue-policy` picks the fairness policy
+//! (`rr` round robin default, `fifo` global arrival order, `drr`
+//! deficit-weighted), `--queue` the per-lane depth, and `--ingest-depth`
+//! how many frames a serve job's pacer stages ahead of admission. Each
+//! command prints the session's cumulative `engine.stats()` line at the
+//! end (including per-job rows and the compile count that settles at
+//! build and must not grow per job).
 
 use std::sync::Arc;
 
-use kfuse::config::{Backend, FusionMode, RunConfig};
+use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
 use kfuse::coordinator;
 use kfuse::engine::{Engine, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -103,15 +113,6 @@ fn parse_dims3(s: &str) -> Result<(usize, usize, usize)> {
     Ok((p(0)?, p(1)?, p(2)?))
 }
 
-fn device_by_name(name: &str) -> Result<DeviceSpec> {
-    match name.to_lowercase().as_str() {
-        "c1060" => Ok(DeviceSpec::c1060()),
-        "k20" => Ok(DeviceSpec::k20()),
-        "gtx750ti" | "750ti" => Ok(DeviceSpec::gtx750ti()),
-        _ => Err(Error::Config(format!("unknown device '{name}'"))),
-    }
-}
-
 #[allow(clippy::field_reassign_with_default)]
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
@@ -123,6 +124,16 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         args.usize_or("intra-threads", cfg.intra_box_threads)?;
     cfg.markers = args.usize_or("markers", cfg.markers)?;
     cfg.queue_depth = args.usize_or("queue", cfg.queue_depth)?;
+    cfg.ingest_depth = args.usize_or("ingest-depth", cfg.ingest_depth)?;
+    if let Some(p) = args.get("queue-policy") {
+        cfg.queue_policy = QueuePolicy::parse(p)?;
+    }
+    if let Some(d) = args.get("device") {
+        // Validate eagerly for a crisp CLI error; the engine re-resolves
+        // the same name at build.
+        DeviceSpec::by_name(d)?;
+        cfg.device = d.to_string();
+    }
     if let Some(m) = args.get("mode") {
         cfg.mode = FusionMode::parse(m)?;
     }
@@ -141,7 +152,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    let dev = device_by_name(args.get("device").unwrap_or("k20"))?;
+    let dev = DeviceSpec::by_name(args.get("device").unwrap_or("k20"))?;
     let (n, m, t) = parse_dims3(args.get("input").unwrap_or("256x256x1000"))?;
     let input = InputDims::new(n, m, t);
     let plan = fusion::plan(&paper_pipeline(), input, &dev)?;
@@ -192,11 +203,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.intra_box_threads,
         if cfg.roi_only { " | roi-only" } else { "" }
     );
-    let mut engine = Engine::builder().config(cfg.clone()).build()?;
+    let engine = Engine::builder().config(cfg.clone()).build()?;
     println!(
-        "partition: {} ({})",
+        "partition: {} ({}) | planned on {} | queue policy {}",
         engine.plan().partition_names(),
-        engine.plan().effective.name()
+        engine.plan().effective.name(),
+        cfg.device,
+        cfg.queue_policy.name()
     );
     if cfg.roi_only {
         let (clip, _) = coordinator::synth_clip(&cfg, 42);
@@ -228,13 +241,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let (clip, _) = coordinator::synth_clip(&cfg, 42);
     println!(
-        "serve: {} fps ingest | {} on {} | {} frames",
+        "serve: {} fps ingest | {} on {} | {} frames | planned on {} | \
+         ingest depth {} | queue policy {}",
         cfg.fps,
         cfg.mode.name(),
         cfg.backend.name(),
-        cfg.frames
+        cfg.frames,
+        cfg.device,
+        cfg.ingest_depth,
+        cfg.queue_policy.name()
     );
-    let mut engine = Engine::builder().config(cfg.clone()).build()?;
+    let engine = Engine::builder().config(cfg.clone()).build()?;
     let rep = engine.serve(Arc::new(clip), ServeOpts::from_config(&cfg))?;
     println!("{rep}");
     println!("session: {}", engine.stats());
@@ -242,7 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let dev = device_by_name(args.get("device").unwrap_or("k20"))?;
+    let dev = DeviceSpec::by_name(args.get("device").unwrap_or("k20"))?;
     let (n, m, t) = parse_dims3(args.get("input").unwrap_or("256x256x1000"))?;
     let input = InputDims::new(n, m, t);
     let (x, y, bt) = parse_dims3(args.get("box").unwrap_or("32x32x8"))?;
@@ -296,7 +313,12 @@ fn main() {
             println!(
                 "kfuse — kernel fusion for massive video analysis\n\
                  subcommands: plan | run | serve | simulate | codegen\n\
-                 (see crate docs / README for flags)"
+                 devices (--device, used by planning and --mode auto): \
+                 {}\n\
+                 multiplexing: --queue-policy fifo|rr|drr, --queue N \
+                 (per-job lane depth), --ingest-depth N (serve staging)\n\
+                 (see crate docs / README / ARCHITECTURE.md for all flags)",
+                DeviceSpec::NAMES.join(" | ")
             );
             Ok(())
         }

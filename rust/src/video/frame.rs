@@ -1,7 +1,7 @@
 //! Video buffers and the box partitioner (the paper's Fig 3).
 //!
 //! A [`Video`] is a dense `(T, H, W, C)` f32 tensor in row-major order.
-//! [`BoxCutter`] cuts it into halo'd boxes for the coordinator: each output
+//! [`cut_boxes`] cuts it into halo'd boxes for the coordinator: each output
 //! box `Box_b` of extent `t×x×y` gets an input box `Box_b_in` of extent
 //! `(t+δt)×(x+2δx)×(y+2δy)`, clamped (edge-replicated) at frame borders —
 //! the same data distribution that lets no thread block depend on another.

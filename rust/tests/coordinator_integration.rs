@@ -76,7 +76,7 @@ fn tracker_follows_synthetic_markers() {
         backend: backend(),
         ..RunConfig::default()
     };
-    let mut engine = Engine::from_config(cfg).unwrap();
+    let engine = Engine::from_config(cfg).unwrap();
     let rep = engine.batch_synth(5).unwrap();
     assert_eq!(rep.tracks, 2, "both markers tracked");
     assert_eq!(rep.rmse.len(), 2, "one RMSE score per acquired track");
@@ -87,7 +87,7 @@ fn tracker_follows_synthetic_markers() {
 
 #[test]
 fn binary_output_is_binary_and_nonempty() {
-    let mut engine = engine(FusionMode::Full);
+    let engine = engine(FusionMode::Full);
     let rep = engine.batch_synth(3).unwrap();
     let on = rep.binary.data.iter().filter(|&&v| v == 255.0).count();
     let off = rep.binary.data.iter().filter(|&&v| v == 0.0).count();
@@ -111,7 +111,7 @@ fn serve_mode_reports_and_bounds_queue() {
         ..RunConfig::default()
     };
     let (clip, _) = synth_clip(&cfg, 21);
-    let mut engine = Engine::from_config(cfg).unwrap();
+    let engine = Engine::from_config(cfg).unwrap();
     let rep = engine
         .serve(
             Arc::new(clip),
@@ -139,7 +139,7 @@ fn partial_temporal_tail_is_dropped_cleanly() {
         frames: 20, // 2 full boxes of t=8, 4-frame tail
         ..small_cfg(FusionMode::Full)
     };
-    let mut engine = Engine::from_config(cfg).unwrap();
+    let engine = Engine::from_config(cfg).unwrap();
     let rep = engine.batch_synth(2).unwrap();
     assert_eq!(rep.binary.t, 16);
     assert_eq!(rep.metrics.frames, 16);
@@ -159,7 +159,7 @@ fn invalid_config_is_rejected_before_work() {
 #[test]
 fn mismatched_clip_geometry_is_rejected_per_job() {
     // The engine is built for 16x16 boxes; a 24x24 clip can't be tiled.
-    let mut engine = engine(FusionMode::Full);
+    let engine = engine(FusionMode::Full);
     let clip = Arc::new(kfuse::video::Video::zeros(16, 24, 24, 4));
     assert!(engine.batch(clip).is_err());
 }
@@ -177,7 +177,7 @@ fn roi_mode_processes_fewer_boxes_same_tracks() {
     };
     let (clip, scfg) = synth_clip(&cfg, 13);
     let clip = Arc::new(clip);
-    let mut engine = Engine::from_config(cfg.clone()).unwrap();
+    let engine = Engine::from_config(cfg.clone()).unwrap();
     let (rep, coverage) = engine.roi(clip.clone()).unwrap();
     // ROI mode must skip a solid fraction of boxes after acquisition...
     assert!(coverage < 0.8, "coverage {coverage}");

@@ -1,0 +1,244 @@
+//! Multi-job multiplexing contract: concurrently admitted jobs share the
+//! warm worker pool without changing results, without starving each
+//! other, and with exact per-job accounting.
+//!
+//! Everything runs on `Backend::Cpu` (offline, deterministic executors):
+//!
+//! * interleaved execution is BIT-IDENTICAL to serialized execution —
+//!   multiplexing changes scheduling, never numbers;
+//! * a small serve job admitted behind a large batch backlog completes
+//!   while the batch job is still running (the fair ready queue at
+//!   work);
+//! * the per-job stats rows partition the session totals exactly
+//!   (boxes, queue wait, partition nanos);
+//! * `shutdown` drains in-flight jobs deterministically.
+
+use std::sync::Arc;
+
+use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
+use kfuse::coordinator::synth_clip;
+use kfuse::engine::{Engine, JobKind, Policy, ServeOpts};
+use kfuse::fusion::halo::BoxDims;
+
+fn cpu_cfg(frames: usize, workers: usize) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames,
+        mode: FusionMode::Full,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers,
+        markers: 1,
+        backend: Backend::Cpu,
+        queue_policy: QueuePolicy::RoundRobin,
+        ..RunConfig::default()
+    }
+}
+
+/// Serialized runs on one engine vs the same jobs interleaved on
+/// another: the batch outputs must be bitwise equal, and the lossless
+/// serve must execute the same box count.
+#[test]
+fn interleaved_jobs_bit_identical_to_serialized() {
+    let cfg = cpu_cfg(32, 2);
+    let (clip_a, _) = synth_clip(&cfg, 11);
+    let (clip_b, _) = synth_clip(&cfg, 22);
+    let (clip_a, clip_b) = (Arc::new(clip_a), Arc::new(clip_b));
+    let lossless = ServeOpts {
+        fps: 20_000.0, // pacing negligible: contention is the point
+        policy: Policy::Block,
+    };
+
+    // Serialized reference.
+    let serial = Engine::from_config(cfg.clone()).unwrap();
+    let ref_batch = serial.batch(clip_a.clone()).unwrap();
+    let ref_batch2 = serial.batch(clip_b.clone()).unwrap();
+    let ref_serve = serial.serve(clip_b.clone(), lossless).unwrap();
+    serial.shutdown().unwrap();
+
+    // The same three jobs, admitted concurrently on one engine.
+    let engine = Engine::from_config(cfg).unwrap();
+    let batch1 = engine.submit_batch(clip_a).unwrap();
+    let batch2 = engine.submit_batch(clip_b.clone()).unwrap();
+    let serve = engine.submit_serve(clip_b, lossless).unwrap();
+    assert_eq!(batch1.kind(), JobKind::Batch);
+    assert_eq!(serve.kind(), JobKind::Serve);
+    let b1 = batch1.wait().unwrap();
+    let b2 = batch2.wait().unwrap();
+    let s = serve.wait().unwrap();
+
+    assert_eq!(
+        b1.binary.data, ref_batch.binary.data,
+        "interleaving changed batch output"
+    );
+    assert_eq!(
+        b2.binary.data, ref_batch2.binary.data,
+        "interleaving changed batch output"
+    );
+    assert_eq!(s.boxes, ref_serve.boxes, "lossless serve lost boxes");
+    assert_eq!(s.dropped, 0);
+
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 3);
+    assert_eq!(
+        stats.boxes,
+        b1.metrics.boxes + b2.metrics.boxes + s.boxes
+    );
+    engine.shutdown().unwrap();
+}
+
+/// A small serve job is admitted AFTER a 512-box batch backlog on a
+/// single worker; round-robin lanes interleave them, so the serve job
+/// must complete long before the batch job does.
+#[test]
+fn small_serve_completes_while_large_batch_runs() {
+    let cfg = cpu_cfg(256, 1); // 16 spatial boxes x 32 windows = 512
+    let (big, _) = synth_clip(&cfg, 5);
+    let live_cfg = RunConfig {
+        frames: 8, // one window: 16 boxes
+        ..cfg.clone()
+    };
+    let (live, _) = synth_clip(&live_cfg, 6);
+
+    let engine = Engine::from_config(cfg).unwrap();
+    let batch = engine.submit_batch(Arc::new(big)).unwrap();
+    let serve = engine
+        .submit_serve(
+            Arc::new(live),
+            ServeOpts {
+                fps: 20_000.0,
+                policy: Policy::Block,
+            },
+        )
+        .unwrap();
+    let serve_id = serve.id();
+    let s = serve.wait().unwrap();
+    assert_eq!(s.boxes, 16);
+    // 512-box backlog vs 16 fairly interleaved boxes: the batch job
+    // cannot have finished yet.
+    assert!(
+        !batch.is_finished(),
+        "batch (512 boxes) finished before a 16-box serve job — \
+         the ready queue is not interleaving jobs"
+    );
+    // Only the serve job has a completion row so far.
+    let mid = engine.stats();
+    assert_eq!(mid.per_job.len(), 1);
+    assert_eq!(mid.per_job[0].job, serve_id.0);
+    assert_eq!(mid.per_job[0].kind, "serve");
+
+    let b = batch.wait().unwrap();
+    assert_eq!(b.metrics.boxes, 512);
+    let done = engine.stats();
+    assert_eq!(done.per_job.len(), 2);
+    assert_eq!(
+        done.per_job[0].kind, "serve",
+        "completion order must put the serve job first"
+    );
+    assert_eq!(done.per_job[1].kind, "batch");
+    engine.shutdown().unwrap();
+}
+
+/// Satellite: per-job queue-wait and partition_nanos rows must sum to
+/// the session totals on a deterministic two-job workload.
+#[test]
+fn per_job_rows_sum_to_session_totals() {
+    let cfg = cpu_cfg(16, 2);
+    let (clip_a, _) = synth_clip(&cfg, 31);
+    let (clip_b, _) = synth_clip(&cfg, 32);
+    let engine = Engine::from_config(cfg).unwrap();
+    let a = engine.batch(Arc::new(clip_a)).unwrap();
+    let b = engine.batch(Arc::new(clip_b)).unwrap();
+
+    let stats = engine.stats();
+    assert_eq!(stats.per_job.len(), 2);
+
+    // Each row mirrors its own job report...
+    assert_eq!(stats.per_job[0].boxes, a.metrics.boxes);
+    assert_eq!(stats.per_job[1].boxes, b.metrics.boxes);
+    assert_eq!(
+        stats.per_job[0].queue_wait_nanos,
+        a.metrics.queue_wait_nanos
+    );
+    assert_eq!(
+        stats.per_job[1].queue_wait_nanos,
+        b.metrics.queue_wait_nanos
+    );
+
+    // ...and the rows partition the session totals exactly.
+    assert_eq!(
+        stats.boxes,
+        stats.per_job.iter().map(|j| j.boxes).sum::<u64>()
+    );
+    assert_eq!(
+        stats.queue_wait_nanos,
+        stats
+            .per_job
+            .iter()
+            .map(|j| j.queue_wait_nanos)
+            .sum::<u64>()
+    );
+    assert_eq!(
+        stats.dropped,
+        stats.per_job.iter().map(|j| j.dropped).sum::<u64>()
+    );
+    // Partition timings: elementwise sum across rows == totals. The CPU
+    // fused pass tracks them, so they must be non-trivial.
+    assert!(!stats.partition_nanos.is_empty());
+    let mut summed = vec![0u64; stats.partition_nanos.len()];
+    for row in &stats.per_job {
+        assert_eq!(row.partition_nanos.len(), summed.len());
+        for (acc, v) in summed.iter_mut().zip(&row.partition_nanos) {
+            *acc += v;
+        }
+    }
+    assert_eq!(summed, stats.partition_nanos);
+    engine.shutdown().unwrap();
+}
+
+/// Every queue policy executes correctly (fairness differs; results
+/// must not).
+#[test]
+fn all_queue_policies_produce_identical_results() {
+    let base = cpu_cfg(16, 2);
+    let (clip, _) = synth_clip(&base, 7);
+    let clip = Arc::new(clip);
+    let mut reference: Option<Vec<f32>> = None;
+    for policy in [
+        QueuePolicy::Fifo,
+        QueuePolicy::RoundRobin,
+        QueuePolicy::DeficitWeighted,
+    ] {
+        let cfg = RunConfig {
+            queue_policy: policy,
+            ..base.clone()
+        };
+        let engine = Engine::from_config(cfg).unwrap();
+        let h1 = engine.submit_batch(clip.clone()).unwrap();
+        let h2 = engine.submit_batch(clip.clone()).unwrap();
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        assert_eq!(r1.binary.data, r2.binary.data);
+        match &reference {
+            None => reference = Some(r1.binary.data.clone()),
+            Some(want) => assert_eq!(
+                &r1.binary.data, want,
+                "policy {policy:?} changed results"
+            ),
+        }
+        engine.shutdown().unwrap();
+    }
+}
+
+/// `shutdown` blocks until in-flight jobs drain: the handle of a job
+/// submitted right before shutdown still resolves to a complete report.
+#[test]
+fn shutdown_drains_inflight_jobs_deterministically() {
+    let cfg = cpu_cfg(64, 1); // 16 spatial x 8 windows = 128 boxes
+    let (clip, _) = synth_clip(&cfg, 9);
+    let engine = Engine::from_config(cfg).unwrap();
+    let handle = engine.submit_batch(Arc::new(clip)).unwrap();
+    // Shutdown with the job still in flight: must drain, not abandon.
+    engine.shutdown().unwrap();
+    let report = handle.wait().unwrap();
+    assert_eq!(report.metrics.boxes, 128, "shutdown abandoned boxes");
+}

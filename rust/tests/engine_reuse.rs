@@ -46,7 +46,7 @@ fn second_batch_on_warm_engine_compiles_nothing_and_matches() {
         return;
     }
     let workers = 2;
-    let mut engine = Engine::from_config(cfg(workers)).unwrap();
+    let engine = Engine::from_config(cfg(workers)).unwrap();
     // build() compiled the plan on every worker: Full fusion = 1 fused
     // stage + 1 detect artifact per worker.
     let per_worker = engine.plan().stages.len() + 1;
@@ -76,7 +76,7 @@ fn mixed_job_kinds_share_the_warm_pool() {
     if !artifacts_present() {
         return;
     }
-    let mut engine = Engine::from_config(cfg(1)).unwrap();
+    let engine = Engine::from_config(cfg(1)).unwrap();
     let after_build = engine.stats().compiles;
     let (clip, _) = synth_clip(engine.config(), 57);
     let clip = Arc::new(clip);
@@ -118,7 +118,7 @@ fn cpu_cfg(workers: usize, mode: FusionMode) -> RunConfig {
 #[test]
 fn cpu_backend_warm_engine_reuses_pool_across_jobs() {
     let workers = 2;
-    let mut engine = Engine::from_config(cpu_cfg(workers, FusionMode::Full))
+    let engine = Engine::from_config(cpu_cfg(workers, FusionMode::Full))
         .unwrap();
     // No artifacts, no PJRT, no compilation — ever.
     assert_eq!(engine.stats().compiles, 0);
@@ -153,7 +153,7 @@ fn cpu_backend_warm_engine_reuses_pool_across_jobs() {
 /// batch / lossless serve / ROI all share the CPU warm pool, offline.
 #[test]
 fn cpu_backend_mixed_job_kinds_share_the_warm_pool() {
-    let mut engine =
+    let engine =
         Engine::from_config(cpu_cfg(1, FusionMode::Full)).unwrap();
     let warm = engine.stats().pool_allocs;
     let (clip, _) = synth_clip(engine.config(), 57);
@@ -189,9 +189,9 @@ fn cpu_backend_mixed_job_kinds_share_the_warm_pool() {
 fn cpu_backend_staged_arm_matches_fused_arm() {
     let (clip, _) = synth_clip(&cpu_cfg(1, FusionMode::Full), 7);
     let clip = Arc::new(clip);
-    let mut fused =
+    let fused =
         Engine::from_config(cpu_cfg(1, FusionMode::Full)).unwrap();
-    let mut staged =
+    let staged =
         Engine::from_config(cpu_cfg(1, FusionMode::None)).unwrap();
     let a = fused.batch(clip.clone()).unwrap();
     let b = staged.batch(clip).unwrap();

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
+use kfuse::coordinator::JobId;
 use kfuse::coordinator::ExecutionPlan;
 use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu};
 use kfuse::fusion::halo::BoxDims;
@@ -48,7 +49,7 @@ fn random_border_job(
     let plan =
         ExecutionPlan::resolve(mode, BoxDims::new(bx, bx, bt), g.bool());
     let job = BoxJob {
-        job_id: 1,
+        job_id: JobId(1),
         task: BoxTask {
             id: 0,
             t0: *g.choose(&[0, t - bt]),
@@ -58,6 +59,7 @@ fn random_border_job(
         },
         clip,
         clip_t0: 0,
+        staged: None,
         enqueued: Instant::now(),
     };
     (job, plan)
@@ -158,7 +160,7 @@ fn executor_names_and_detect_gating() {
     let mut g = Gen::new(9);
     let clip = Arc::new(random_clip(&mut g, 4, 8, 8));
     let job = BoxJob {
-        job_id: 1,
+        job_id: JobId(1),
         task: BoxTask {
             id: 0,
             t0: 0,
@@ -168,6 +170,7 @@ fn executor_names_and_detect_gating() {
         },
         clip,
         clip_t0: 0,
+        staged: None,
         enqueued: Instant::now(),
     };
     let mut staging = Vec::new();
