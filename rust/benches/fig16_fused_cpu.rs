@@ -2,23 +2,37 @@
 //! the engine's workers run (`scheduler::execute_box`): staged
 //! kernel-by-kernel baseline vs Two-Fusion (one materialized
 //! intermediate) vs the fused single pass, the fused executors swept
-//! over intra-box band thread counts.
+//! over intra-box band thread counts AND lane backends (`--isa`).
 //!
 //! Default workload: 128×128×16 synthetic clip cut into 32×32×8 boxes
 //! (32 boxes). `StagedCpu` materializes every intermediate at full box
-//! size — the unfused global-memory traffic pattern; `TwoFusedCpu`
-//! spills exactly one intermediate ({K1,K2} → {K3..K5}); `FusedCpu`
-//! keeps everything in an IIR carry slab plus three rolling stencil
-//! lines, optionally split into row bands across threads. The paper's
-//! claim (Figs 10/11/16) is that removing the round-trips buys 2–3×;
-//! this bench reproduces it on the host and emits one JSON record per
-//! (executor, threads) cell to `BENCH_fused_cpu.json` — the entry point
-//! shared by local runs and the CI `bench-smoke` regression gate.
+//! size — the unfused global-memory traffic pattern (always scalar: it
+//! is the oracle); `TwoFusedCpu` spills exactly one intermediate
+//! ({K1,K2} → {K3..K5}); `FusedCpu` keeps everything in an IIR carry
+//! slab plus three rolling stencil lines. The paper's claim
+//! (Figs 10/11/16) is that removing the round-trips buys 2–3×; once the
+//! round-trips are gone the surviving arithmetic is the bottleneck, and
+//! the `--isa` axis measures how much of it the vector layer recovers.
+//! One JSON record per (executor, threads, isa) cell goes to
+//! `BENCH_fused_cpu.json` — the entry point shared by local runs and
+//! the CI `bench-smoke` regression gate. Schema is backward-compatible:
+//! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`) are
+//! additions only.
+//!
+//! Headline numbers:
+//! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
+//!   from SIMD (CI gates >= 1.0).
+//! * `speedup_simd` — fused(1T, portable) vs fused(1T, scalar): the
+//!   vector-layer win on the forced-width path (CI gates >= 1.0;
+//!   runtime-detected paths are report-only — shared runners vary).
+//! * `speedup_parallel` — best fused(N>1T, scalar) vs fused(1T,
+//!   scalar): the banding win (report-only in CI).
 //!
 //! ```text
 //! cargo bench --bench fig16_fused_cpu -- \
 //!     [--frame 128] [--frames 16] [--box 32x32x8] \
-//!     [--threads 1,2,4] [--partition staged,two,fused]
+//!     [--threads 1,2,4] [--partition staged,two,fused] \
+//!     [--isa scalar,portable,auto]
 //! ```
 
 use std::sync::Arc;
@@ -29,15 +43,16 @@ use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::{ExecutionPlan, JobId};
 use kfuse::exec::{
-    BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu,
+    BufferPool, Executor, FusedCpu, Isa, StagedCpu, TwoFusedCpu,
 };
 use kfuse::fusion::halo::BoxDims;
 use kfuse::video::{cut_boxes, generate, SynthConfig};
 
-/// One measured (executor, threads) cell.
+/// One measured (executor, threads, isa) cell.
 struct Cell {
     executor: &'static str,
     threads: usize,
+    isa: &'static str,
     ns_per_box: f64,
     /// Intermediate/scratch bytes touched per box (the traffic story).
     bytes_per_box: u64,
@@ -93,6 +108,23 @@ fn main() {
             || vec!["staged".into(), "two".into(), "fused".into()],
             |v| v.split(',').map(str::to_string).collect(),
         );
+    // Lane backends to sweep; `auto` resolves to the host's widest.
+    // Resolved duplicates collapse (e.g. auto == portable off-x86).
+    let isa_flags: Vec<Isa> = flag(&args, "--isa").map_or_else(
+        || vec![Isa::Scalar, Isa::Portable, Isa::Auto],
+        |v| {
+            v.split(',')
+                .map(|s| Isa::parse(s).expect("--isa a,b,..."))
+                .collect()
+        },
+    );
+    let mut isas: Vec<Isa> = Vec::new();
+    for isa in isa_flags {
+        let r = isa.resolve().expect("--isa not runnable on this host");
+        if !isas.contains(&r) {
+            isas.push(r);
+        }
+    }
 
     let clip = Arc::new(generate(&SynthConfig {
         frames,
@@ -125,6 +157,8 @@ fn main() {
     for part in &partitions {
         match part.as_str() {
             "staged" => {
+                // The staged baseline is the scalar oracle by design —
+                // one cell, tagged "scalar".
                 let exec = StagedCpu::new();
                 let t = time_fn(3, 25, || {
                     sweep(&exec, &none, &jobs, &mut staging)
@@ -132,6 +166,7 @@ fn main() {
                 cells.push(Cell {
                     executor: "staged_cpu",
                     threads: 1,
+                    isa: "scalar",
                     ns_per_box: t.median * 1e9 / n,
                     bytes_per_box: StagedCpu::intermediate_bytes(
                         din.t, din.x, din.y,
@@ -139,37 +174,47 @@ fn main() {
                 });
             }
             "two" => {
-                for &th in &threads {
-                    let exec = TwoFusedCpu::with_threads(pool.clone(), th);
-                    exec.prepare(&two).unwrap();
-                    let t = time_fn(3, 25, || {
-                        sweep(&exec, &two, &jobs, &mut staging)
-                    });
-                    cells.push(Cell {
-                        executor: "two_fused_cpu",
-                        threads: th,
-                        ns_per_box: t.median * 1e9 / n,
-                        bytes_per_box: TwoFusedCpu::intermediate_bytes(
-                            din.t, din.x, din.y,
-                        ),
-                    });
+                for &isa in &isas {
+                    for &th in &threads {
+                        let exec =
+                            TwoFusedCpu::with_isa(pool.clone(), th, isa)
+                                .unwrap();
+                        exec.prepare(&two).unwrap();
+                        let t = time_fn(3, 25, || {
+                            sweep(&exec, &two, &jobs, &mut staging)
+                        });
+                        cells.push(Cell {
+                            executor: "two_fused_cpu",
+                            threads: th,
+                            isa: exec.isa().name(),
+                            ns_per_box: t.median * 1e9 / n,
+                            bytes_per_box: TwoFusedCpu::intermediate_bytes(
+                                din.t, din.x, din.y,
+                            ),
+                        });
+                    }
                 }
             }
             "fused" => {
-                for &th in &threads {
-                    let exec = FusedCpu::with_threads(pool.clone(), th);
-                    exec.prepare(&full).unwrap();
-                    let t = time_fn(3, 25, || {
-                        sweep(&exec, &full, &jobs, &mut staging)
-                    });
-                    cells.push(Cell {
-                        executor: "fused_cpu",
-                        threads: th,
-                        ns_per_box: t.median * 1e9 / n,
-                        bytes_per_box: FusedCpu::scratch_bytes_banded(
-                            din.x, din.y, th,
-                        ),
-                    });
+                for &isa in &isas {
+                    for &th in &threads {
+                        let exec =
+                            FusedCpu::with_isa(pool.clone(), th, isa)
+                                .unwrap();
+                        exec.prepare(&full).unwrap();
+                        let t = time_fn(3, 25, || {
+                            sweep(&exec, &full, &jobs, &mut staging)
+                        });
+                        cells.push(Cell {
+                            executor: "fused_cpu",
+                            threads: th,
+                            isa: exec.isa().name(),
+                            ns_per_box: t.median * 1e9 / n,
+                            bytes_per_box: FusedCpu::scratch_bytes_banded(
+                                din.x, din.y, th,
+                            ),
+                        });
+                    }
                 }
             }
             other => panic!(
@@ -180,11 +225,12 @@ fn main() {
 
     header(
         "Fig 16 (measured, this host)",
-        "CPU executor matrix: staged vs two-fused vs fused x band threads",
+        "CPU executor matrix: staged vs two-fused vs fused x threads x isa",
     );
     row(&[
         format!("{:>14}", "executor"),
         format!("{:>8}", "threads"),
+        format!("{:>9}", "isa"),
         format!("{:>12}", "ns/box"),
         format!("{:>18}", "intermediates B"),
     ]);
@@ -192,41 +238,53 @@ fn main() {
         row(&[
             format!("{:>14}", c.executor),
             format!("{:>8}", c.threads),
+            format!("{:>9}", c.isa),
             format!("{:>12.0}", c.ns_per_box),
             format!("{:>18}", c.bytes_per_box),
         ]);
     }
 
-    let find = |name: &str, th: usize| {
+    let find = |name: &str, th: usize, isa: &str| {
         cells
             .iter()
-            .find(|c| c.executor == name && c.threads == th)
+            .find(|c| {
+                c.executor == name && c.threads == th && c.isa == isa
+            })
             .map(|c| c.ns_per_box)
     };
-    let staged_ns = find("staged_cpu", 1);
-    let fused1_ns = find("fused_cpu", 1);
-    // Fused-vs-staged: the paper's fusion claim, and the CI tripwire.
-    let speedup = match (staged_ns, fused1_ns) {
+    let staged_ns = find("staged_cpu", 1, "scalar");
+    let fused1_scalar = find("fused_cpu", 1, "scalar");
+    // Fused-vs-staged on the scalar path: the paper's fusion claim
+    // isolated from SIMD, and the original CI tripwire.
+    let speedup = match (staged_ns, fused1_scalar) {
         (Some(s), Some(f)) => s / f,
         _ => 0.0,
     };
-    // Best parallel fused vs serial fused: the band-threading win.
+    // SIMD win on the forced-width portable path: the PR-5 CI gate.
+    let fused1_portable = find("fused_cpu", 1, "portable");
+    let speedup_simd = match (fused1_scalar, fused1_portable) {
+        (Some(s), Some(p)) => s / p,
+        _ => 0.0,
+    };
+    // Best parallel fused vs serial fused, scalar path: the banding win.
     let best_parallel = cells
         .iter()
-        .filter(|c| c.executor == "fused_cpu" && c.threads > 1)
+        .filter(|c| {
+            c.executor == "fused_cpu" && c.threads > 1 && c.isa == "scalar"
+        })
         .map(|c| c.ns_per_box)
         .fold(f64::INFINITY, f64::min);
-    let speedup_parallel = match fused1_ns {
+    let speedup_parallel = match fused1_scalar {
         Some(f) if best_parallel.is_finite() => f / best_parallel,
         _ => 0.0,
     };
-    let speedup_two = match (staged_ns, find("two_fused_cpu", 1)) {
+    let speedup_two = match (staged_ns, find("two_fused_cpu", 1, "scalar")) {
         (Some(s), Some(t)) => s / t,
         _ => 0.0,
     };
     if speedup > 0.0 {
         println!(
-            "fused(1T) vs staged speedup: {speedup:.2}x \
+            "fused(1T, scalar) vs staged speedup: {speedup:.2}x \
              (paper fusion claim: 2-3x)"
         );
         if speedup < 2.0 {
@@ -236,22 +294,49 @@ fn main() {
         }
     }
     if speedup_two > 0.0 {
-        println!("two-fused(1T) vs staged speedup: {speedup_two:.2}x");
+        println!("two-fused(1T, scalar) vs staged speedup: {speedup_two:.2}x");
+    }
+    if speedup_simd > 0.0 {
+        println!(
+            "fused(1T) portable vs scalar speedup: {speedup_simd:.2}x \
+             (the vector-layer win, forced width)"
+        );
+    }
+    for c in cells.iter().filter(|c| {
+        c.executor == "fused_cpu"
+            && c.threads == 1
+            && c.isa != "scalar"
+            && c.isa != "portable"
+    }) {
+        if let Some(s) = fused1_scalar {
+            println!(
+                "fused(1T) {} vs scalar speedup: {:.2}x (runtime-detected)",
+                c.isa,
+                s / c.ns_per_box
+            );
+        }
     }
     if speedup_parallel > 0.0 {
         println!(
-            "fused parallel vs serial speedup: {speedup_parallel:.2}x \
-             (best of threads>1)"
+            "fused parallel vs serial speedup (scalar): \
+             {speedup_parallel:.2}x (best of threads>1)"
         );
     }
 
     let cell_json: Vec<String> = cells
         .iter()
         .map(|c| {
+            // Per-cell SIMD speedup vs the scalar cell of the same
+            // (executor, threads) — 0.0 when no scalar twin ran.
+            let simd = find(c.executor, c.threads, "scalar")
+                .map_or(0.0, |s| s / c.ns_per_box);
             format!(
                 "    {{\"executor\": \"{}\", \"threads\": {}, \
-                 \"ns_per_box\": {:.0}, \"intermediate_bytes_per_box\": {}}}",
-                c.executor, c.threads, c.ns_per_box, c.bytes_per_box
+                 \"isa\": \"{}\", \"ns_per_box\": {:.0}, \
+                 \"intermediate_bytes_per_box\": {}, \
+                 \"speedup_simd\": {:.3}}}",
+                c.executor, c.threads, c.isa, c.ns_per_box,
+                c.bytes_per_box, simd
             )
         })
         .collect();
@@ -261,7 +346,8 @@ fn main() {
          \"cells\": [\n{}\n  ],\n  \
          \"speedup\": {speedup:.3},\n  \
          \"speedup_two_fused\": {speedup_two:.3},\n  \
-         \"speedup_parallel\": {speedup_parallel:.3}\n}}\n",
+         \"speedup_parallel\": {speedup_parallel:.3},\n  \
+         \"speedup_simd\": {speedup_simd:.3}\n}}\n",
         bx.x,
         bx.y,
         bx.t,

@@ -4,6 +4,8 @@ use crate::fusion::halo::BoxDims;
 use crate::fusion::traffic::InputDims;
 use crate::{Error, Result};
 
+pub use crate::exec::simd::Isa;
+
 /// Which fusion arm the coordinator executes (the paper's evaluation
 /// arms, plus `Auto` which lets the planner's DP solve pick the arm).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,6 +150,14 @@ pub struct RunConfig {
     /// per-worker thread set. Ignored by `Backend::Pjrt` (the PJRT
     /// client parallelizes internally) and by the staged baseline.
     pub intra_box_threads: usize,
+    /// Lane backend for the fused CPU executors' inner loops (CLI
+    /// `--isa`; see [`Isa`]). `Auto` (default) probes the host once per
+    /// executor and takes the widest available path; every backend is
+    /// bit-identical to the scalar walk. Requesting a backend the host
+    /// cannot run fails at [`RunConfig::validate`]. Ignored by
+    /// `Backend::Pjrt` and the staged baseline (which stays the scalar
+    /// oracle).
+    pub isa: Isa,
     /// Binarization threshold.
     pub threshold: f32,
     /// Number of synthetic markers to generate/track.
@@ -189,6 +199,7 @@ impl Default for RunConfig {
             box_dims: BoxDims::new(32, 32, 8),
             workers: 1,
             intra_box_threads: 1,
+            isa: Isa::Auto,
             threshold: 96.0,
             markers: 4,
             queue_depth: 64,
@@ -241,8 +252,11 @@ impl RunConfig {
             ));
         }
         // Resolve the planning device early so a typo'd --device fails at
-        // validation, not deep inside plan resolution.
+        // validation, not deep inside plan resolution — and the lane
+        // backend likewise, so an --isa this host cannot run errors here
+        // instead of inside a worker spawn.
         crate::gpusim::device::DeviceSpec::by_name(&self.device)?;
+        self.isa.resolve()?;
         Ok(())
     }
 }
@@ -316,6 +330,25 @@ mod tests {
             };
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn isa_is_validated_with_the_config() {
+        // Concrete always-available backends and Auto all validate.
+        for isa in [Isa::Auto, Isa::Scalar, Isa::Portable] {
+            let cfg = RunConfig {
+                isa,
+                ..RunConfig::default()
+            };
+            cfg.validate().unwrap();
+        }
+        // A std::arch backend validates exactly when the host runs it.
+        let cfg = RunConfig {
+            isa: Isa::Avx2,
+            ..RunConfig::default()
+        };
+        assert_eq!(cfg.validate().is_ok(), Isa::Avx2.available());
+        assert!(Isa::parse("altivec").is_err());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use super::mux::{JobId, MuxQueue};
 use super::plan::ExecutionPlan;
 use super::router::ResultRouter;
 use crate::config::Backend;
-use crate::exec::{BufferPool, Executor, PjrtExec};
+use crate::exec::{BufferPool, Executor, Isa, PjrtExec, PoolBuf};
 use crate::runtime::{Manifest, Runtime};
 use crate::video::{BoxTask, Video};
 use crate::Result;
@@ -41,8 +41,11 @@ pub struct BoxJob {
     pub clip_t0: usize,
     /// Halo'd input staged ahead by the job's ingest/producer thread
     /// (the async-ingest fast path: the worker skips extraction
-    /// entirely). `None` falls back to worker-side `extract_box_into`.
-    pub staged: Option<Vec<f32>>,
+    /// entirely). Checked out of the engine's [`BufferPool`] so staging
+    /// stops allocating once the pool is warm; it returns to the pool
+    /// when the job drops after execution. `None` falls back to
+    /// worker-side `extract_box_into`.
+    pub staged: Option<PoolBuf>,
     /// Enqueue timestamp (latency accounting includes queue wait).
     pub enqueued: Instant,
 }
@@ -91,6 +94,10 @@ pub struct WorkerSpec {
     pub pool: Arc<BufferPool>,
     /// Intra-box band threads for the fused CPU executors (1 = serial).
     pub intra_box_threads: usize,
+    /// Lane backend for the fused CPU executors' inner loops (the
+    /// engine passes the session's resolved [`Isa`]; `Isa::Auto` is
+    /// also accepted and resolves per worker).
+    pub isa: Isa,
 }
 
 /// Execute one job on a worker's executor. Public so benches can call the
@@ -109,7 +116,7 @@ pub fn execute_box(
     // staged ahead by the job's ingest thread (`job.staged`) or extracted
     // here into the worker-owned reusable buffer.
     let input: &[f32] = match &job.staged {
-        Some(buf) => buf,
+        Some(buf) => &buf[..],
         None => {
             job.clip.extract_box_into(
                 job.task.t0,
@@ -152,6 +159,7 @@ fn build_executor(
             &spec.plan,
             spec.pool.clone(),
             spec.intra_box_threads,
+            spec.isa,
         )?,
     };
     exec.prepare(&spec.plan)?;
@@ -270,14 +278,16 @@ mod tests {
         let router = Arc::new(ResultRouter::new());
         let rx = router.register(JobId(1));
         let init_errors = Arc::new(Mutex::new(Vec::new()));
+        let pool = BufferPool::shared();
         let spec = WorkerSpec {
             workers: 2,
             backend,
             manifest,
             plan: plan.clone(),
             threshold: 96.0,
-            pool: BufferPool::shared(),
+            pool: pool.clone(),
             intra_box_threads: 2,
+            isa: Isa::Auto,
         };
         let handles = spawn_workers(
             spec,
@@ -291,12 +301,21 @@ mod tests {
             crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
         assert_eq!(tasks.len(), 4); // frames 0..8 = one temporal box
         for task in &tasks {
-            // Half the matrix pre-stages inputs (the async-ingest path),
-            // half relies on worker-side extraction.
+            // Half the matrix pre-stages inputs (the async-ingest path,
+            // pool-recycled like the engine's producers), half relies on
+            // worker-side extraction.
             let staged = prestage.then(|| {
-                clip.extract_box(
-                    task.t0, task.i0, task.j0, task.dims, plan.halo,
-                )
+                let din = task.dims.with_halo(plan.halo);
+                let mut buf = pool.checkout(din.pixels() * 4);
+                clip.extract_box_into(
+                    task.t0,
+                    task.i0,
+                    task.j0,
+                    task.dims,
+                    plan.halo,
+                    buf.vec_mut(),
+                );
+                buf
             });
             queue.push(
                 JobId(1),

@@ -7,7 +7,7 @@
 //! compilation on every worker.
 
 use super::session::Engine;
-use crate::config::{Backend, FusionMode, QueuePolicy, RunConfig};
+use crate::config::{Backend, FusionMode, Isa, QueuePolicy, RunConfig};
 use crate::fusion::halo::BoxDims;
 use crate::Result;
 
@@ -68,6 +68,14 @@ impl EngineBuilder {
     /// [`RunConfig::intra_box_threads`]). 1 = serial fused pass.
     pub fn intra_box_threads(mut self, n: usize) -> Self {
         self.cfg.intra_box_threads = n;
+        self
+    }
+
+    /// Lane backend for the fused CPU executors' inner loops (see
+    /// [`RunConfig::isa`]). Default [`Isa::Auto`] = runtime-detected;
+    /// a backend the host cannot run fails at `build()`.
+    pub fn isa(mut self, isa: Isa) -> Self {
+        self.cfg.isa = isa;
         self
     }
 
@@ -159,6 +167,7 @@ mod tests {
             .box_dims(BoxDims::new(16, 16, 8))
             .workers(3)
             .intra_box_threads(2)
+            .isa(Isa::Portable)
             .threshold(42.0)
             .markers(7)
             .queue_depth(9)
@@ -175,6 +184,7 @@ mod tests {
         assert_eq!(cfg.box_dims, BoxDims::new(16, 16, 8));
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.intra_box_threads, 2);
+        assert_eq!(cfg.isa, Isa::Portable);
         assert_eq!(cfg.threshold, 42.0);
         assert_eq!(cfg.markers, 7);
         assert_eq!(cfg.queue_depth, 9);

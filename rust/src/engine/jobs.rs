@@ -8,8 +8,9 @@
 //! [`Engine::submit_roi`] call decomposes its clip into per-box work
 //! items tagged with the job's [`JobId`], stages them into the job's own
 //! queue lane from an ingest/producer thread (pre-extracting each box's
-//! halo'd input so workers never stall on extraction), and drains
-//! results on a collector thread through the job's private router
+//! halo'd input into a pool-recycled staging buffer, so workers never
+//! stall on extraction and steady-state ingest never allocates), and
+//! drains results on a collector thread through the job's private router
 //! channel. The returned [`JobHandle`] resolves to the job's report;
 //! the blocking wrappers ([`Engine::batch`], [`Engine::serve`],
 //! [`Engine::roi`]) are submit-then-wait.
@@ -341,16 +342,19 @@ fn run_batch(
             let outcome = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
                     for task in tasks {
-                        // Pre-staged halo'd input: a fresh Vec per box,
-                        // NOT pool scratch — bounded by the lane depth
-                        // and freed on execution. (Recycling these
-                        // through BufferPool is a ROADMAP item.)
-                        let staged = clip.extract_box(
+                        // Pre-staged halo'd input, recycled through the
+                        // engine's BufferPool: in-flight staging is
+                        // bounded by the lane depth, and the pool was
+                        // prewarmed to that bound at build, so steady
+                        // state stages without allocating.
+                        let mut staged = core.checkout_staging();
+                        clip.extract_box_into(
                             task.t0,
                             task.i0,
                             task.j0,
                             task.dims,
                             core.plan.halo,
+                            staged.vec_mut(),
                         );
                         let (accepted, _) = core.queue.push(
                             id,
@@ -495,12 +499,14 @@ fn run_serve(
             for mut task in spatial.iter().copied() {
                 // Window frames are 1-offset (halo first): shift origin.
                 task.t0 += 1;
-                let staged = win.extract_box(
+                let mut staged = core.checkout_staging();
+                win.extract_box_into(
                     task.t0,
                     task.i0,
                     task.j0,
                     task.dims,
                     core.plan.halo,
+                    staged.vec_mut(),
                 );
                 let (accepted, evicted) = core.queue.push(
                     id,
@@ -615,12 +621,14 @@ fn run_roi(
         let n_sel = selected.len();
         for mut task in selected {
             task.t0 = t0; // temporal origin of this window in the clip
-            let staged = clip.extract_box(
+            let mut staged = core.checkout_staging();
+            clip.extract_box_into(
                 task.t0,
                 task.i0,
                 task.j0,
                 task.dims,
                 core.plan.halo,
+                staged.vec_mut(),
             );
             let (accepted, _) = core.queue.push(
                 id,

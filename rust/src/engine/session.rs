@@ -19,7 +19,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use super::jobs::JobKind;
 use super::stats::{EngineStats, JobStats};
 use super::EngineBuilder;
-use crate::config::{Backend, RunConfig};
+use crate::config::{Backend, Isa, RunConfig};
 use crate::coordinator::metrics::{Metrics, MetricsReport};
 use crate::coordinator::mux::{JobId, MuxQueue};
 use crate::coordinator::plan::ExecutionPlan;
@@ -27,7 +27,7 @@ use crate::coordinator::router::ResultRouter;
 use crate::coordinator::scheduler::{
     spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
 };
-use crate::exec::BufferPool;
+use crate::exec::{BufferPool, PoolBuf};
 use crate::gpusim::device::DeviceSpec;
 use crate::runtime::Manifest;
 use crate::{Error, Result};
@@ -42,6 +42,9 @@ pub(crate) struct EngineCore {
     pub(crate) router: Arc<ResultRouter>,
     compiles: Arc<AtomicU64>,
     pool: Arc<BufferPool>,
+    /// The session's resolved lane backend (what `cfg.isa` dispatched
+    /// to; surfaced through `EngineStats::isa` on the CPU backend).
+    isa: Isa,
     next_job: AtomicU64,
     totals: Mutex<EngineStats>,
     /// Jobs admitted but not yet completed; `shutdown` drains to zero.
@@ -109,6 +112,38 @@ impl EngineCore {
         if *active == 0 {
             self.idle.notify_all();
         }
+    }
+
+    /// f32 values in one staged halo'd RGBA input box (every job stages
+    /// boxes of the engine's fixed geometry).
+    fn staging_len(&self) -> usize {
+        self.plan.box_dims.with_halo(self.plan.halo).pixels() * 4
+    }
+
+    /// Check out one pooled staging buffer sized for a halo'd box. The
+    /// job producers recycle their staged inputs through the engine's
+    /// shared pool this way (the same pool the executors' per-worker
+    /// scratch lives in; the sizes differ, so best-fit keeps them
+    /// apart). Checked out EMPTY: `extract_box_into` rewrites the whole
+    /// buffer, so the zeroing a plain checkout pays would be a wasted
+    /// per-box memset on the ingest hot path.
+    pub(crate) fn checkout_staging(&self) -> PoolBuf {
+        self.pool.checkout_empty(self.staging_len())
+    }
+
+    /// Park one job's worst-case in-flight staging set in the pool —
+    /// a lane's bounded depth, plus one box in service per worker, plus
+    /// the one being extracted — so `pool_allocs` settles AT BUILD and
+    /// stays flat across sequential jobs (the zero-allocation
+    /// steady-state contract now covers ingest staging, not just
+    /// executor scratch). Concurrent jobs beyond the first allocate
+    /// their own bound on demand, then it parks and is reused too.
+    fn prewarm_staging(&self) {
+        let len = self.staging_len();
+        let bound = self.cfg.queue_depth + self.cfg.workers + 1;
+        let warm: Vec<PoolBuf> =
+            (0..bound).map(|_| self.pool.checkout_empty(len)).collect();
+        drop(warm);
     }
 
     /// Record one completed box into a job's metrics (byte accounting
@@ -196,6 +231,11 @@ impl Engine {
             cfg.input_dims(),
             &device,
         ));
+        // Resolve the lane backend once for the session: validate()
+        // already proved it runnable, and pinning the concrete ISA here
+        // means every worker dispatches the same path and stats can
+        // report it.
+        let isa = cfg.isa.resolve()?;
         let pool = BufferPool::shared();
         let queue: MuxQueue<BoxJob> =
             MuxQueue::new(cfg.queue_depth, cfg.queue_policy);
@@ -212,6 +252,7 @@ impl Engine {
                 threshold: cfg.threshold,
                 pool: pool.clone(),
                 intra_box_threads: cfg.intra_box_threads,
+                isa,
             },
             queue.clone(),
             router.clone(),
@@ -231,22 +272,25 @@ impl Engine {
                 "engine build: worker init failed: {msg}"
             )));
         }
-        Ok(Engine {
-            core: Arc::new(EngineCore {
-                cfg,
-                plan,
-                manifest,
-                queue,
-                router,
-                compiles,
-                pool,
-                next_job: AtomicU64::new(0),
-                totals: Mutex::new(EngineStats::default()),
-                active: Mutex::new(0),
-                idle: Condvar::new(),
-            }),
-            workers,
-        })
+        let core = Arc::new(EngineCore {
+            cfg,
+            plan,
+            manifest,
+            queue,
+            router,
+            compiles,
+            pool,
+            isa,
+            next_job: AtomicU64::new(0),
+            totals: Mutex::new(EngineStats::default()),
+            active: Mutex::new(0),
+            idle: Condvar::new(),
+        });
+        // Staging buffers are pooled (one checkout per staged box,
+        // returned when the box completes); prewarming the per-job bound
+        // keeps the allocation counter flat from here on.
+        core.prewarm_staging();
+        Ok(Engine { core, workers })
     }
 
     /// The session's configuration (fixed at build).
@@ -270,12 +314,13 @@ impl Engine {
     /// count (both settle at build time and must not grow afterwards —
     /// the warm-pool and zero-allocation steady-state contracts).
     pub fn stats(&self) -> EngineStats {
-        // Only the fused CPU executors band boxes; PJRT and the staged
-        // baseline ignore intra_box_threads, so report 1 there instead
-        // of a thread count that never ran.
-        let bands = if self.core.cfg.backend == Backend::Cpu
-            && self.core.plan.partition.iter().any(|s| s.len > 1)
-        {
+        // Only the fused CPU executors band boxes (and run the vector
+        // layer); PJRT and the staged baseline ignore intra_box_threads
+        // and isa, so report the neutral values there instead of knobs
+        // that never ran.
+        let cpu_fused = self.core.cfg.backend == Backend::Cpu
+            && self.core.plan.partition.iter().any(|s| s.len > 1);
+        let bands = if cpu_fused {
             crate::exec::split_rows(
                 self.core.cfg.box_dims.x,
                 self.core.cfg.intra_box_threads,
@@ -288,6 +333,7 @@ impl Engine {
             compiles: self.core.compiles.load(Ordering::Relaxed),
             pool_allocs: self.core.pool.allocations(),
             bands,
+            isa: if cpu_fused { self.core.isa.name() } else { "" },
             ..self.core.totals.lock().unwrap().clone()
         }
     }

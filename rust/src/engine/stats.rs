@@ -81,13 +81,21 @@ pub struct EngineStats {
     /// executables outliving jobs is the entire point of the warm pool.
     pub compiles: u64,
     /// Scratch-buffer allocations performed by the engine's
-    /// [`BufferPool`](crate::exec::BufferPool). Settles at build (the
-    /// fused CPU workers prewarm their scratch) and MUST stay flat across
-    /// jobs — steady-state streaming does zero pool allocations per box.
+    /// [`BufferPool`](crate::exec::BufferPool). Settles at build — the
+    /// fused CPU workers prewarm their scratch and the engine prewarms
+    /// one job's bound of pooled ingest-staging buffers — and MUST stay
+    /// flat across jobs: steady-state streaming does zero pool
+    /// allocations per box, staging included.
     pub pool_allocs: u64,
     /// Row bands each box is fanned out to on the CPU backends:
     /// `min(intra_box_threads, box rows)` (1 = serial fused pass).
     pub bands: u64,
+    /// The lane backend the session's fused CPU executors dispatched to
+    /// (`"scalar"`, `"portable"`, `"sse2"`, `"avx2"` — the RESOLVED
+    /// [`Isa`](crate::exec::Isa), never `"auto"`). Empty when no fused
+    /// CPU executor runs (PJRT backend, or the staged partition, which
+    /// stays on the scalar oracle).
+    pub isa: &'static str,
     /// Cumulative wall nanos per executed partition across every job
     /// (e.g. `[{K1,K2}, {K3..K5}]` for Two Fusion; one entry for the
     /// all-fused pass; empty when the backend doesn't track them).
@@ -116,6 +124,9 @@ impl std::fmt::Display for EngineStats {
             self.pool_allocs,
             self.bands
         )?;
+        if !self.isa.is_empty() {
+            write!(f, " | isa {}", self.isa)?;
+        }
         if !self.partition_nanos.is_empty() {
             let ms: Vec<String> = self
                 .partition_nanos
@@ -167,6 +178,18 @@ mod tests {
         assert!(text.contains("partition ms [1.5, 2.5]"), "{text}");
         let bare = format!("{}", EngineStats::default());
         assert!(!bare.contains("partition ms"), "{bare}");
+    }
+
+    #[test]
+    fn display_shows_the_dispatched_isa_when_set() {
+        let s = EngineStats {
+            isa: "avx2",
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("| isa avx2"), "{text}");
+        let bare = format!("{}", EngineStats::default());
+        assert!(!bare.contains("isa"), "{bare}");
     }
 
     #[test]

@@ -36,19 +36,26 @@
 //! therefore performs zero scratch allocations (and zero pool
 //! round-trips) per box; the pool's allocation counter settles at build
 //! and stays flat, which `tests/engine_reuse.rs` enforces.
+//!
+//! The arithmetic itself runs on the vector layer ([`super::simd`]): the
+//! luma/IIR prologue, the binomial line-buffer fill, and the
+//! Sobel+threshold+detect fold each go through a [`LaneKernels`] set
+//! bound to one [`Isa`] at executor construction (`RunConfig::isa`,
+//! `auto` = runtime-detected). Every backend is bit-identical to the
+//! scalar walk, so banding × lanes never changes a single output bit.
 
 use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::plan::ExecutionPlan;
-use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
 use crate::Result;
 
 use super::bands::{
     band_views, detect_partials, merge_detect, split_rows, Band, BandPool,
 };
 use super::pool::{BufferPool, PoolBuf};
+use super::simd::{Isa, LaneKernels};
 use super::{check_cpu_input, BoxOutput, Executor};
 
 /// Per-band rolling storage: the IIR carry slab (band rows + halo) and
@@ -67,34 +74,59 @@ struct BandScratch {
 pub struct FusedCpu {
     pool: Arc<BufferPool>,
     threads: usize,
+    lanes: LaneKernels,
     bands: BandPool,
     scratch: RefCell<Vec<BandScratch>>,
     last_nanos: Cell<u64>,
 }
 
 impl FusedCpu {
-    /// Single-threaded fused executor (one band covering the whole box).
+    /// Single-threaded fused executor (one band covering the whole box),
+    /// runtime-detected lane backend.
     pub fn new(pool: Arc<BufferPool>) -> FusedCpu {
         FusedCpu::with_threads(pool, 1)
     }
 
     /// Fused executor running each box as `threads` row bands (the
     /// caller thread plus `threads - 1` persistent band workers spawned
-    /// here, never per box).
+    /// here, never per box), runtime-detected lane backend.
+    ///
+    /// # Panics
+    /// Only if a `KFUSE_ISA` override names a backend this host cannot
+    /// run — a deliberate loud failure (silently ignoring a forced
+    /// override would defeat its purpose). The engine path surfaces the
+    /// same condition as a clean config error at validation instead.
     pub fn with_threads(pool: Arc<BufferPool>, threads: usize) -> FusedCpu {
+        FusedCpu::with_isa(pool, threads, Isa::Auto)
+            .unwrap_or_else(|e| panic!("lane backend resolution: {e}"))
+    }
+
+    /// Fused executor with an explicit lane backend; errors if the host
+    /// cannot run `isa` (see [`Isa::resolve`]).
+    pub fn with_isa(
+        pool: Arc<BufferPool>,
+        threads: usize,
+        isa: Isa,
+    ) -> Result<FusedCpu> {
         assert!(threads >= 1, "intra_box_threads must be >= 1");
-        FusedCpu {
+        Ok(FusedCpu {
             pool,
             threads,
+            lanes: LaneKernels::for_isa(isa)?,
             bands: BandPool::new(threads - 1),
             scratch: RefCell::new(Vec::new()),
             last_nanos: Cell::new(0),
-        }
+        })
     }
 
     /// Intra-box threads this executor fans each box out to.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The concrete lane backend the inner loops run on.
+    pub fn isa(&self) -> Isa {
+        self.lanes.isa()
     }
 
     /// Make sure the held scratch matches the requested band geometry;
@@ -174,6 +206,7 @@ impl FusedCpu {
             detect_partials(partials.as_deref_mut(), n_bands, t_out);
 
         let started = Instant::now();
+        let lanes = self.lanes;
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = bands
             .iter()
             .zip(guard.iter_mut())
@@ -185,8 +218,8 @@ impl FusedCpu {
                 let srows: &mut [f32] = &mut scratch.srows;
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     fused_band(
-                        x, t_in, h_in, w_in, th, band, carry, srows, rows,
-                        det,
+                        lanes, x, t_in, h_in, w_in, th, band, carry, srows,
+                        rows, det,
                     );
                 });
                 task
@@ -207,9 +240,10 @@ impl FusedCpu {
 /// rows (+2 halo rows on each side), rolling line buffers, direct writes
 /// into the band's per-frame output row slices, detect partial with
 /// GLOBAL row indices so the merged reduction is bit-identical to a
-/// sequential scan.
+/// sequential scan. All arithmetic goes through the band's lane kernels.
 #[allow(clippy::too_many_arguments)]
 fn fused_band(
+    k: LaneKernels,
     x: &[f32],
     t_in: usize,
     h_in: usize,
@@ -229,22 +263,18 @@ fn fused_band(
     // K2 warm start: the carry is the luma of frame 0 (y[-1] = x[0]) over
     // the band's input rows.
     let frame0 = &x[band.i0 * w_in * 4..(band.i0 + hb) * w_in * 4];
-    for (c, px) in carry.iter_mut().zip(frame0.chunks_exact(4)) {
-        *c = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
-    }
+    k.luma(frame0, carry);
 
     for ft in 1..t_in {
         // K1+K2 fused: luma inline, carry slab updated in place.
         let base = (ft * plane + band.i0 * w_in) * 4;
         let frame = &x[base..base + hb * w_in * 4];
-        for (c, px) in carry.iter_mut().zip(frame.chunks_exact(4)) {
-            let g = LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
-            *c = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * *c;
-        }
+        k.luma_iir(frame, carry);
 
         let of = ft - 1;
         let mut acc = (0.0f32, 0.0f32, 0.0f32);
         stencil_frame(
+            k,
             carry,
             w_in,
             band.rows,
@@ -264,13 +294,14 @@ fn fused_band(
 
 /// K3+K4+K5 for one frame of one band: 3×3 binomial into the rolling
 /// 3-line window, Sobel L1 magnitude thresholded in place, detect
-/// reduction accumulated in the same loop. `src` holds `rows + 4` source
-/// rows of width `w_in` (local row 0 = the band's first input row);
-/// `i_global0` offsets the Σi term to global output rows. Shared with the
-/// Two-Fusion executor, whose second partition runs exactly this tail
-/// over the materialized IIR plane.
+/// reduction folded from the lane kernels' per-row partials. `src` holds
+/// `rows + 4` source rows of width `w_in` (local row 0 = the band's
+/// first input row); `i_global0` offsets the Σi term to global output
+/// rows. Shared with the Two-Fusion executor, whose second partition
+/// runs exactly this tail over the materialized IIR plane.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn stencil_frame(
+    k: LaneKernels,
     src: &[f32],
     w_in: usize,
     rows: usize,
@@ -285,65 +316,51 @@ pub(super) fn stencil_frame(
     debug_assert_eq!(srows.len(), 3 * sw);
     debug_assert_eq!(dst.len(), rows * ow);
     // Prime the first two smoothed rows of this frame.
-    smooth_row(src, w_in, 0, &mut srows[..sw]);
-    smooth_row(src, w_in, 1, &mut srows[sw..2 * sw]);
+    smooth_row(k, src, w_in, 0, &mut srows[..sw]);
+    smooth_row(k, src, w_in, 1, &mut srows[sw..2 * sw]);
     for i in 0..rows {
         // K3 rolling: compute smoothed row i+2 into the slot the Sobel
         // window no longer needs.
         let slot = (i + 2) % 3;
         {
             let row = &mut srows[slot * sw..(slot + 1) * sw];
-            smooth_row(src, w_in, i + 2, row);
+            smooth_row(k, src, w_in, i + 2, row);
         }
         let sr: &[f32] = &*srows;
         let r0 = &sr[(i % 3) * sw..][..sw];
         let r1 = &sr[((i + 1) % 3) * sw..][..sw];
         let r2 = &sr[((i + 2) % 3) * sw..][..sw];
         let d = &mut dst[i * ow..(i + 1) * ow];
-        // K4+K5 fused: Sobel L1 magnitude, thresholded in place, detect
-        // reduction accumulated in the same loop. The expressions mirror
-        // cpu_ref::gradient3's p(di, dj) reads term for term.
-        for (j, v) in d.iter_mut().enumerate() {
-            let gx = (r0[j + 2] - r0[j])
-                + 2.0 * (r1[j + 2] - r1[j])
-                + (r2[j + 2] - r2[j]);
-            let gy = (r2[j] - r0[j])
-                + 2.0 * (r2[j + 1] - r0[j + 1])
-                + (r2[j + 2] - r0[j + 2]);
-            let mag = gx.abs() + gy.abs();
-            let bin = if mag >= th { 255.0 } else { 0.0 };
-            *v = bin;
-            if bin > 0.0 {
-                acc.0 += 1.0;
-                acc.1 += (i_global0 + i) as f32;
-                acc.2 += j as f32;
-            }
-        }
+        // K4+K5 fused, lane-parallel: the kernel thresholds the row in
+        // place and returns its (mass, Σj) detect partials. Every detect
+        // summand is an exact f32 integer (counts / pixel indices, far
+        // below 2²⁴ — see bands::merge_detect), so folding the row count
+        // in one addition — and the Σi term as row_index × mass — is
+        // bit-identical to the serial per-pixel accumulation.
+        let (mass, sumj) = k.sobel_row(r0, r1, r2, th, d);
+        acc.0 += mass;
+        acc.1 += (i_global0 + i) as f32 * mass;
+        acc.2 += sumj;
     }
 }
 
 /// One 3×3 binomial output row: smoothed row `r` (of `h-2` valid rows)
-/// from source rows `r..r+3`. Accumulation order matches
-/// `cpu_ref::gaussian3` exactly so results are bit-identical.
+/// from source rows `r..r+3`, through the lane kernels (which keep
+/// `cpu_ref::gaussian3`'s exact accumulation order at every width).
 #[inline]
-pub(super) fn smooth_row(src: &[f32], w: usize, r: usize, dst: &mut [f32]) {
-    const K: [[f32; 3]; 3] = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
-    let row0 = &src[r * w..r * w + w];
-    let row1 = &src[(r + 1) * w..(r + 1) * w + w];
-    let row2 = &src[(r + 2) * w..(r + 2) * w + w];
-    for (j, d) in dst.iter_mut().enumerate() {
-        let mut acc = 0.0f32;
-        for (dj, kv) in K[0].iter().enumerate() {
-            acc += kv * row0[j + dj];
-        }
-        for (dj, kv) in K[1].iter().enumerate() {
-            acc += kv * row1[j + dj];
-        }
-        for (dj, kv) in K[2].iter().enumerate() {
-            acc += kv * row2[j + dj];
-        }
-        *d = acc / 16.0;
-    }
+pub(super) fn smooth_row(
+    k: LaneKernels,
+    src: &[f32],
+    w: usize,
+    r: usize,
+    dst: &mut [f32],
+) {
+    k.smooth3(
+        &src[r * w..(r + 1) * w],
+        &src[(r + 1) * w..(r + 2) * w],
+        &src[(r + 2) * w..(r + 3) * w],
+        dst,
+    );
 }
 
 impl Executor for FusedCpu {
@@ -427,6 +444,27 @@ mod tests {
             let fused = FusedCpu::with_threads(BufferPool::shared(), threads);
             let got = fused.run_box(&x, t, h, w, 96.0, true);
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_oracle() {
+        // Odd spatial extents leave remainder lanes at every width the
+        // backends use (4 and 8); every host backend must still match
+        // the cpu_ref oracle bitwise, banded or not.
+        let mut g = Gen::new(29);
+        let (t, h, w) = (6, 17, 19);
+        let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        let want = oracle(&x, t, h, w, 96.0);
+        for isa in Isa::all_available() {
+            for threads in [1, 3] {
+                let fused =
+                    FusedCpu::with_isa(BufferPool::shared(), threads, isa)
+                        .unwrap();
+                assert_eq!(fused.isa(), isa);
+                let got = fused.run_box(&x, t, h, w, 96.0, true);
+                assert_eq!(got, want, "isa={isa} threads={threads}");
+            }
         }
     }
 

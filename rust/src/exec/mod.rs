@@ -32,9 +32,16 @@
 //!   per-worker [`bands::BandPool`] thread set
 //!   (`RunConfig::intra_box_threads`), bit-identical to the
 //!   single-threaded pass at any thread count.
+//! * [`simd`] — the vector layer under the fused executors: the hot
+//!   loops (luma/IIR prologue, binomial line fill, Sobel+threshold+
+//!   detect fold) run on a fixed-width [`Isa`] lane backend (`scalar`,
+//!   8-wide `portable`, `std::arch` `sse2`/`avx2`) selected once per
+//!   executor via runtime dispatch (`RunConfig::isa`, CLI `--isa`,
+//!   default `auto`), bit-identical to the scalar walk at any width.
 //! * [`BufferPool`] — checked-out scratch per worker, returned on box
 //!   completion, so steady-state streaming does zero allocations per box
-//!   (counter-enforced, see [`pool`]).
+//!   (counter-enforced, see [`pool`]). Since PR 5 the engine's ingest
+//!   staging buffers recycle through the same pool.
 //!
 //! Backend selection is [`Backend`](crate::config::Backend) in the run
 //! config: `Backend::Pjrt` needs `artifacts/`; `Backend::Cpu` runs
@@ -68,6 +75,7 @@ pub mod bands;
 pub mod fused;
 pub mod pjrt;
 pub mod pool;
+pub mod simd;
 pub mod staged;
 pub mod two_fused;
 
@@ -80,6 +88,7 @@ pub use bands::{split_rows, Band, BandPool};
 pub use fused::FusedCpu;
 pub use pjrt::PjrtExec;
 pub use pool::{BufferPool, PoolBuf};
+pub use simd::{Isa, LaneKernels};
 pub use staged::StagedCpu;
 pub use two_fused::TwoFusedCpu;
 
@@ -130,19 +139,24 @@ pub trait Executor {
 /// Build the CPU executor for a resolved plan, dispatching on the
 /// PARTITION the plan's DP solve selected (`{K1..K5}` → [`FusedCpu`],
 /// `{K1,K2}{K3..K5}` → [`TwoFusedCpu`], singletons → [`StagedCpu`]).
-/// `intra_box_threads` sizes the fused executors' band thread set.
+/// `intra_box_threads` sizes the fused executors' band thread set and
+/// `isa` picks their lane backend (errors if the host cannot run it).
+/// The staged baseline deliberately stays on the scalar `cpu_ref` chain
+/// regardless of `isa` — it is both the traffic baseline and the
+/// independent oracle the lane backends are property-tested against.
 /// A partition with no CPU executor is an explicit error — never a
 /// silent downgrade to the staged baseline.
 pub fn cpu_executor(
     plan: &ExecutionPlan,
     pool: Arc<BufferPool>,
     intra_box_threads: usize,
+    isa: Isa,
 ) -> Result<Box<dyn Executor>> {
     let shape = plan.partition_shape();
     if shape == [5] {
-        Ok(Box::new(FusedCpu::with_threads(pool, intra_box_threads)))
+        Ok(Box::new(FusedCpu::with_isa(pool, intra_box_threads, isa)?))
     } else if shape == [2, 3] {
-        Ok(Box::new(TwoFusedCpu::with_threads(pool, intra_box_threads)))
+        Ok(Box::new(TwoFusedCpu::with_isa(pool, intra_box_threads, isa)?))
     } else if !shape.is_empty() && shape.iter().all(|&len| len == 1) {
         Ok(Box::new(StagedCpu::new()))
     } else {
@@ -195,24 +209,15 @@ mod tests {
     #[test]
     fn cpu_executor_follows_the_plan_partition() {
         let pool = BufferPool::shared();
-        assert_eq!(
-            cpu_executor(&plan_for(FusionMode::Full), pool.clone(), 1)
-                .unwrap()
-                .name(),
-            "fused_cpu"
-        );
-        assert_eq!(
-            cpu_executor(&plan_for(FusionMode::Two), pool.clone(), 1)
-                .unwrap()
-                .name(),
-            "two_fused_cpu"
-        );
-        assert_eq!(
-            cpu_executor(&plan_for(FusionMode::None), pool, 1)
-                .unwrap()
-                .name(),
-            "staged_cpu"
-        );
+        let full = plan_for(FusionMode::Full);
+        let exec = cpu_executor(&full, pool.clone(), 1, Isa::Auto).unwrap();
+        assert_eq!(exec.name(), "fused_cpu");
+        let two = plan_for(FusionMode::Two);
+        let exec = cpu_executor(&two, pool.clone(), 1, Isa::Scalar).unwrap();
+        assert_eq!(exec.name(), "two_fused_cpu");
+        let none = plan_for(FusionMode::None);
+        let exec = cpu_executor(&none, pool, 1, Isa::Portable).unwrap();
+        assert_eq!(exec.name(), "staged_cpu");
     }
 
     #[test]
@@ -223,7 +228,7 @@ mod tests {
             Segment { start: 0, len: 1 },
             Segment { start: 1, len: 4 },
         ];
-        let err = cpu_executor(&plan, BufferPool::shared(), 1);
+        let err = cpu_executor(&plan, BufferPool::shared(), 1, Isa::Auto);
         assert!(err.is_err());
         let msg = format!("{}", err.err().unwrap());
         assert!(msg.contains("no CPU executor"), "{msg}");

@@ -2,10 +2,12 @@
 //!
 //! The fused single-pass executor needs a small amount of per-box scratch
 //! (an IIR carry plane and three rolling stencil line buffers — the CPU
-//! analogue of the fused kernel's shared-memory tile). Allocating that
-//! scratch per box would put an allocator round-trip on the 600–1000 fps
-//! hot path, so workers check buffers out of a shared [`BufferPool`] and
-//! return them (via [`PoolBuf`]'s `Drop`) when the box completes.
+//! analogue of the fused kernel's shared-memory tile), and every job's
+//! ingest thread stages one halo'd input buffer per box ahead of worker
+//! demand. Allocating either per box would put an allocator round-trip on
+//! the 600–1000 fps hot path, so workers and producers check buffers out
+//! of a shared [`BufferPool`] and return them (via [`PoolBuf`]'s `Drop`)
+//! when the box completes.
 //!
 //! The pool is best-fit: a checkout reuses the smallest free buffer whose
 //! capacity already covers the request and only allocates on a true miss,
@@ -32,29 +34,47 @@ impl BufferPool {
         Arc::new(BufferPool::default())
     }
 
+    /// Best-fit acquisition shared by the checkout flavors: the smallest
+    /// free buffer whose capacity covers `len`, or a fresh (counted)
+    /// allocation on a true miss.
+    fn acquire(&self, len: usize) -> Vec<f32> {
+        let mut free = self.free.lock().unwrap();
+        let fit = free
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        match fit {
+            Some(i) => free.swap_remove(i),
+            None => {
+                self.allocations.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        }
+    }
+
     /// Check out a zeroed buffer of exactly `len` elements. Reuses the
     /// smallest free buffer with sufficient capacity; allocates (and
     /// counts) only on a miss. The buffer returns to the pool when the
     /// [`PoolBuf`] drops.
     pub fn checkout(self: &Arc<Self>, len: usize) -> PoolBuf {
-        let mut buf = {
-            let mut free = self.free.lock().unwrap();
-            let fit = free
-                .iter()
-                .enumerate()
-                .filter(|(_, b)| b.capacity() >= len)
-                .min_by_key(|(_, b)| b.capacity())
-                .map(|(i, _)| i);
-            match fit {
-                Some(i) => free.swap_remove(i),
-                None => {
-                    self.allocations.fetch_add(1, Ordering::Relaxed);
-                    Vec::with_capacity(len)
-                }
-            }
-        };
+        let mut buf = self.acquire(len);
         buf.clear();
         buf.resize(len, 0.0);
+        PoolBuf {
+            buf,
+            pool: self.clone(),
+        }
+    }
+
+    /// Check out a buffer with at least `len` elements of capacity and
+    /// LENGTH ZERO — for callers that refill the whole buffer through
+    /// [`PoolBuf::vec_mut`] (the ingest-staging path), where `checkout`'s
+    /// zero-fill would be a full-buffer memset thrown away immediately.
+    pub fn checkout_empty(self: &Arc<Self>, len: usize) -> PoolBuf {
+        let mut buf = self.acquire(len);
+        buf.clear();
         PoolBuf {
             buf,
             pool: self.clone(),
@@ -92,6 +112,18 @@ impl Deref for PoolBuf {
 
 impl DerefMut for PoolBuf {
     fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl PoolBuf {
+    /// The backing `Vec`, for refills through extend-style APIs
+    /// (e.g. [`Video::extract_box_into`](crate::video::Video::extract_box_into)).
+    /// The buffer returns to the pool on drop whatever its final
+    /// length. Growing past the checked-out capacity is a plain `Vec`
+    /// realloc the [`BufferPool::allocations`] counter cannot see —
+    /// check out the full size up front.
+    pub fn vec_mut(&mut self) -> &mut Vec<f32> {
         &mut self.buf
     }
 }
@@ -159,6 +191,41 @@ mod tests {
         let b = pool.checkout(1024); // no fit: fresh allocation
         assert_eq!(b.len(), 1024);
         assert_eq!(pool.allocations(), 2);
+    }
+
+    #[test]
+    fn checkout_empty_skips_the_zero_fill_but_still_pools() {
+        let pool = BufferPool::shared();
+        {
+            let mut b = pool.checkout_empty(8);
+            assert_eq!(b.len(), 0, "refill-style checkout starts empty");
+            assert!(b.vec_mut().capacity() >= 8);
+            b.vec_mut().extend_from_slice(&[7.0; 8]);
+        }
+        assert_eq!(pool.allocations(), 1);
+        // The parked buffer serves both checkout flavors.
+        let b = pool.checkout(8);
+        assert_eq!(pool.allocations(), 1);
+        assert!(b.iter().all(|&v| v == 0.0), "plain checkout still zeroes");
+        drop(b);
+        let b = pool.checkout_empty(8);
+        assert_eq!(pool.allocations(), 1);
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn vec_mut_refills_keep_the_buffer_pooled() {
+        let pool = BufferPool::shared();
+        {
+            let mut b = pool.checkout(6);
+            b.vec_mut().clear();
+            b.vec_mut().extend_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            assert_eq!(&b[..], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        }
+        // The refilled buffer parked; re-checkout reuses it, zeroed.
+        let b = pool.checkout(6);
+        assert_eq!(pool.allocations(), 1);
+        assert!(b.iter().all(|&v| v == 0.0));
     }
 
     #[test]

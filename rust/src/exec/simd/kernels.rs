@@ -1,0 +1,349 @@
+//! Width-generic row kernels for the fused hot loops, written against
+//! [`Vf32`] so one body serves every lane backend.
+//!
+//! Each kernel replicates the scalar reference arithmetic OPERATION FOR
+//! OPERATION per lane — same multiplies, same adds, same association,
+//! same order — so the output is bit-identical to the `cpu_ref` oracle
+//! at any lane width. Two tempting restructurings are deliberately NOT
+//! done, because each would change the rounding and break the contract:
+//!
+//! * no fused multiply-add anywhere (every `mul` and `add` rounds
+//!   separately, exactly like the scalar expressions);
+//! * no separable 1-2-1 factorization of the 3×3 binomial (a vertical
+//!   pass followed by a horizontal pass re-associates the nine taps;
+//!   the kernels keep `cpu_ref::gaussian3`'s 9-tap accumulation order
+//!   with shifted loads instead).
+//!
+//! The vector body covers `len - len % N` elements; a scalar tail with
+//! the identical expressions handles the remainder, so widths that
+//! leave 1 or `N - 1` trailing lanes still match bitwise (the property
+//! tests in `tests/exec_backend.rs` sweep exactly those widths).
+//!
+//! The detect reduction is the one place values are REGROUPED rather
+//! than replayed: `sobel_row_v` returns per-row `(mass, Σj)` partials
+//! reduced from the lanes in ascending order, and the caller folds the
+//! Σi term as `row_index × mass`. Every summand is an exact f32 integer
+//! bounded far below 2²⁴ (counts and pixel indices of shmem-scale
+//! boxes), so each partial sum is exact and the regrouped total carries
+//! the same bits as the serial per-pixel walk — the same argument
+//! `exec::bands::merge_detect` already relies on for band partials.
+
+use super::lanes::Vf32;
+use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
+
+/// Scalar BT.601 luma of one RGBA pixel — the exact `cpu_ref::rgb2gray`
+/// expression, shared by every scalar tail below.
+#[inline(always)]
+fn luma_px(p: &[f32]) -> f32 {
+    LUMA[0] * p[0] + LUMA[1] * p[1] + LUMA[2] * p[2]
+}
+
+/// Vector BT.601 luma of lanes `k..k + N` of an RGBA row: three
+/// stride-4 channel gathers combined as `(l0·r + l1·g) + l2·b`, the
+/// scalar association.
+///
+/// # Safety
+/// `4 * (k + V::N - 1) + 2 < px.len()`.
+#[inline(always)]
+unsafe fn luma_at<V: Vf32>(px: &[f32], k: usize, l0: V, l1: V, l2: V) -> V {
+    let r = V::gather4(px, 4 * k);
+    let g = V::gather4(px, 4 * k + 1);
+    let b = V::gather4(px, 4 * k + 2);
+    l0.mul(r).add(l1.mul(g)).add(l2.mul(b))
+}
+
+/// K1 luma over a pixel run: `dst[k] = luma(px[4k..4k+4])`. Used for the
+/// IIR warm start (`y[-1] = gray(x[0])`).
+#[inline(always)]
+pub(crate) fn luma_v<V: Vf32>(px: &[f32], dst: &mut [f32]) {
+    assert_eq!(px.len(), 4 * dst.len());
+    let n = dst.len();
+    let l0 = V::splat(LUMA[0]);
+    let l1 = V::splat(LUMA[1]);
+    let l2 = V::splat(LUMA[2]);
+    let mut k = 0;
+    while k + V::N <= n {
+        // SAFETY: k + V::N <= n bounds the channel gathers by
+        // 4(k + V::N - 1) + 2 < 4n = px.len() and the store by dst.len().
+        unsafe {
+            luma_at::<V>(px, k, l0, l1, l2).store(dst, k);
+        }
+        k += V::N;
+    }
+    for (i, d) in dst.iter_mut().enumerate().skip(k) {
+        *d = luma_px(&px[4 * i..4 * i + 4]);
+    }
+}
+
+/// Fused K1+K2 step, in place: `c = α·luma(px) + (1-α)·c` over a pixel
+/// run — the carry-slab update of the fused pass. The recurrence is over
+/// `t`, so lanes vectorize freely across columns.
+#[inline(always)]
+pub(crate) fn luma_iir_v<V: Vf32>(px: &[f32], carry: &mut [f32]) {
+    assert_eq!(px.len(), 4 * carry.len());
+    let n = carry.len();
+    let l0 = V::splat(LUMA[0]);
+    let l1 = V::splat(LUMA[1]);
+    let l2 = V::splat(LUMA[2]);
+    let a = V::splat(IIR_ALPHA);
+    let b = V::splat(1.0 - IIR_ALPHA);
+    let mut k = 0;
+    while k + V::N <= n {
+        // SAFETY: k + V::N <= n bounds gathers, load, and store alike.
+        unsafe {
+            let g = luma_at::<V>(px, k, l0, l1, l2);
+            let c = V::load(carry, k);
+            a.mul(g).add(b.mul(c)).store(carry, k);
+        }
+        k += V::N;
+    }
+    for (i, c) in carry.iter_mut().enumerate().skip(k) {
+        let g = luma_px(&px[4 * i..4 * i + 4]);
+        *c = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * *c;
+    }
+}
+
+/// Fused K1+K2 step, out of place: `dst = α·luma(px) + (1-α)·prev` —
+/// the Two-Fusion partition A body, where the previous IIR plane is read
+/// from the materialized intermediate instead of updated in place.
+#[inline(always)]
+pub(crate) fn luma_iir_into_v<V: Vf32>(px: &[f32], prev: &[f32], dst: &mut [f32]) {
+    assert_eq!(px.len(), 4 * dst.len());
+    assert_eq!(prev.len(), dst.len());
+    let n = dst.len();
+    let l0 = V::splat(LUMA[0]);
+    let l1 = V::splat(LUMA[1]);
+    let l2 = V::splat(LUMA[2]);
+    let a = V::splat(IIR_ALPHA);
+    let b = V::splat(1.0 - IIR_ALPHA);
+    let mut k = 0;
+    while k + V::N <= n {
+        // SAFETY: k + V::N <= n == prev.len() == dst.len() bounds all
+        // three accesses; the gathers as in `luma_v`.
+        unsafe {
+            let g = luma_at::<V>(px, k, l0, l1, l2);
+            let p = V::load(prev, k);
+            a.mul(g).add(b.mul(p)).store(dst, k);
+        }
+        k += V::N;
+    }
+    for (i, d) in dst.iter_mut().enumerate().skip(k) {
+        let g = luma_px(&px[4 * i..4 * i + 4]);
+        *d = IIR_ALPHA * g + (1.0 - IIR_ALPHA) * prev[i];
+    }
+}
+
+/// K3: one 3×3 binomial output row from three source rows, shifted
+/// loads, `cpu_ref::gaussian3`'s exact 9-tap accumulation order
+/// (row-major taps, weights 1-2-1 / 2-4-2 / 1-2-1, then `/ 16`).
+/// `dst.len()` is the smoothed width; each row must carry two more
+/// columns.
+#[inline(always)]
+pub(crate) fn smooth3_v<V: Vf32>(r0: &[f32], r1: &[f32], r2: &[f32], dst: &mut [f32]) {
+    let sw = dst.len();
+    assert!(r0.len() >= sw + 2 && r1.len() >= sw + 2 && r2.len() >= sw + 2);
+    let w1 = V::splat(1.0);
+    let w2 = V::splat(2.0);
+    let w4 = V::splat(4.0);
+    let sixteen = V::splat(16.0);
+    let mut j = 0;
+    while j + V::N <= sw {
+        // SAFETY: the widest shifted load ends at j + 2 + V::N - 1
+        // <= sw + 1 < row length; the store at j + V::N - 1 < sw.
+        unsafe {
+            let mut acc = V::splat(0.0);
+            acc = acc.add(w1.mul(V::load(r0, j)));
+            acc = acc.add(w2.mul(V::load(r0, j + 1)));
+            acc = acc.add(w1.mul(V::load(r0, j + 2)));
+            acc = acc.add(w2.mul(V::load(r1, j)));
+            acc = acc.add(w4.mul(V::load(r1, j + 1)));
+            acc = acc.add(w2.mul(V::load(r1, j + 2)));
+            acc = acc.add(w1.mul(V::load(r2, j)));
+            acc = acc.add(w2.mul(V::load(r2, j + 1)));
+            acc = acc.add(w1.mul(V::load(r2, j + 2)));
+            acc.div(sixteen).store(dst, j);
+        }
+        j += V::N;
+    }
+    const K: [[f32; 3]; 3] = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
+    for (jj, d) in dst.iter_mut().enumerate().skip(j) {
+        let mut acc = 0.0f32;
+        for (dj, kv) in K[0].iter().enumerate() {
+            acc += kv * r0[jj + dj];
+        }
+        for (dj, kv) in K[1].iter().enumerate() {
+            acc += kv * r1[jj + dj];
+        }
+        for (dj, kv) in K[2].iter().enumerate() {
+            acc += kv * r2[jj + dj];
+        }
+        *d = acc / 16.0;
+    }
+}
+
+/// K4+K5 (+detect) for one output row: Sobel L1 magnitude over three
+/// smoothed rows, thresholded into `dst` (255/0), returning this row's
+/// detect partials `(mass, Σj)` — exact-integer sums reduced from the
+/// lanes in ascending order (bit-identical to the serial per-pixel
+/// accumulation; see the module docs). The caller owns the Σi term,
+/// which collapses to `row_index × mass`.
+#[inline(always)]
+pub(crate) fn sobel_row_v<V: Vf32>(
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    th: f32,
+    dst: &mut [f32],
+) -> (f32, f32) {
+    let ow = dst.len();
+    assert!(r0.len() >= ow + 2 && r1.len() >= ow + 2 && r2.len() >= ow + 2);
+    let two = V::splat(2.0);
+    let thv = V::splat(th);
+    let on = V::splat(255.0);
+    let zero = V::splat(0.0);
+    let one = V::splat(1.0);
+    let mut mass = 0.0f32;
+    let mut sumj = 0.0f32;
+    let mut j = 0;
+    while j + V::N <= ow {
+        // SAFETY: the widest shifted load ends at j + 2 + V::N - 1
+        // <= ow + 1 < row length; the store at j + V::N - 1 < ow.
+        unsafe {
+            let p00 = V::load(r0, j);
+            let p01 = V::load(r0, j + 1);
+            let p02 = V::load(r0, j + 2);
+            let p10 = V::load(r1, j);
+            let p12 = V::load(r1, j + 2);
+            let p20 = V::load(r2, j);
+            let p21 = V::load(r2, j + 1);
+            let p22 = V::load(r2, j + 2);
+            // The exact cpu_ref::gradient3 associations:
+            // gx = ((p02-p00) + 2(p12-p10)) + (p22-p20)
+            // gy = ((p20-p00) + 2(p21-p01)) + (p22-p02)
+            let gx = p02.sub(p00).add(two.mul(p12.sub(p10))).add(p22.sub(p20));
+            let gy = p20.sub(p00).add(two.mul(p21.sub(p01))).add(p22.sub(p02));
+            let mag = gx.abs().add(gy.abs());
+            mag.ge_blend(thv, on, zero).store(dst, j);
+            let hit = mag.ge_blend(thv, one, zero);
+            mass += hit.hsum();
+            sumj += hit.mul(V::iota(j as f32)).hsum();
+        }
+        j += V::N;
+    }
+    for (jj, d) in dst.iter_mut().enumerate().skip(j) {
+        let gx = (r0[jj + 2] - r0[jj])
+            + 2.0 * (r1[jj + 2] - r1[jj])
+            + (r2[jj + 2] - r2[jj]);
+        let gy = (r2[jj] - r0[jj])
+            + 2.0 * (r2[jj + 1] - r0[jj + 1])
+            + (r2[jj + 2] - r0[jj + 2]);
+        let mag = gx.abs() + gy.abs();
+        let bin = if mag >= th { 255.0 } else { 0.0 };
+        *d = bin;
+        if bin > 0.0 {
+            mass += 1.0;
+            sumj += jj as f32;
+        }
+    }
+    (mass, sumj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lanes::{Portable8, Scalar1};
+    use super::*;
+    use crate::prop::Gen;
+
+    /// Every width around the lane count, so both the all-vector and the
+    /// remainder-heavy shapes are covered.
+    const WIDTHS: [usize; 7] = [1, 3, 7, 8, 9, 15, 16];
+
+    #[test]
+    fn portable_luma_kernels_match_scalar_lane_bitwise() {
+        let mut g = Gen::new(71);
+        for n in WIDTHS {
+            let px = g.vec_f32(4 * n, 0.0, 255.0);
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            luma_v::<Scalar1>(&px, &mut a);
+            luma_v::<Portable8>(&px, &mut b);
+            assert_eq!(a, b, "luma n={n}");
+
+            let px2 = g.vec_f32(4 * n, 0.0, 255.0);
+            let (mut ca, mut cb) = (a.clone(), b.clone());
+            luma_iir_v::<Scalar1>(&px2, &mut ca);
+            luma_iir_v::<Portable8>(&px2, &mut cb);
+            assert_eq!(ca, cb, "luma_iir n={n}");
+
+            let mut da = vec![0.0f32; n];
+            let mut db = vec![0.0f32; n];
+            luma_iir_into_v::<Scalar1>(&px2, &a, &mut da);
+            luma_iir_into_v::<Portable8>(&px2, &b, &mut db);
+            assert_eq!(da, db, "luma_iir_into n={n}");
+            // In-place over the warm start == out-of-place from it.
+            assert_eq!(ca, da, "in-place vs into n={n}");
+        }
+    }
+
+    #[test]
+    fn portable_stencil_kernels_match_scalar_lane_bitwise() {
+        let mut g = Gen::new(72);
+        for w in WIDTHS {
+            let r0 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r1 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r2 = g.vec_f32(w + 2, 0.0, 255.0);
+            let mut a = vec![0.0f32; w];
+            let mut b = vec![0.0f32; w];
+            smooth3_v::<Scalar1>(&r0, &r1, &r2, &mut a);
+            smooth3_v::<Portable8>(&r0, &r1, &r2, &mut b);
+            assert_eq!(a, b, "smooth3 w={w}");
+
+            let th = g.f32_in(0.0, 400.0);
+            let sa = sobel_row_v::<Scalar1>(&r0, &r1, &r2, th, &mut a);
+            let sb = sobel_row_v::<Portable8>(&r0, &r1, &r2, th, &mut b);
+            assert_eq!(a, b, "sobel row w={w} th={th}");
+            assert_eq!(sa, sb, "sobel partials w={w} th={th}");
+        }
+    }
+
+    #[test]
+    fn scalar_lane_matches_cpu_ref_expressions() {
+        // The one-lane kernels ARE the reference arithmetic: pin them to
+        // cpu_ref directly so the whole pyramid bottoms out in the
+        // paper's oracle.
+        let mut g = Gen::new(73);
+        let (h, w) = (3, 9);
+        let px = g.vec_f32(h * w * 4, 0.0, 255.0);
+        let mut got = vec![0.0f32; h * w];
+        luma_v::<Scalar1>(&px, &mut got);
+        assert_eq!(got, crate::cpu_ref::rgb2gray(&px, 1, h, w));
+
+        let smoothed = crate::cpu_ref::gaussian3(&got, 1, h, w);
+        let mut row = vec![0.0f32; w - 2];
+        smooth3_v::<Scalar1>(
+            &got[..w],
+            &got[w..2 * w],
+            &got[2 * w..],
+            &mut row,
+        );
+        assert_eq!(&row[..], &smoothed[..w - 2]);
+    }
+
+    #[test]
+    fn sobel_partials_count_hits_and_columns() {
+        // A lone spike in the middle row: the horizontal Sobel fires at
+        // exactly the two columns whose 3-wide window straddles it.
+        let r0 = vec![0.0f32; 10];
+        let r2 = vec![0.0f32; 10];
+        let mut r1 = vec![0.0f32; 10];
+        r1[3] = 50.0;
+        let mut dst = vec![0.0f32; 8];
+        let (mass, sumj) =
+            sobel_row_v::<Portable8>(&r0, &r1, &r2, 1.0, &mut dst);
+        assert_eq!(mass, 2.0, "columns 1 and 3 fire");
+        assert_eq!(sumj, 1.0 + 3.0);
+        assert_eq!(dst[1], 255.0);
+        assert_eq!(dst[3], 255.0);
+        assert_eq!(dst.iter().sum::<f32>(), 510.0);
+    }
+}

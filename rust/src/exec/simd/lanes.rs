@@ -1,0 +1,328 @@
+//! The `f32` lane abstraction the vectorized row kernels are written
+//! against, plus the two always-available backends.
+//!
+//! [`Vf32`] is a fixed-width bundle of `f32` lanes with EXPLICIT
+//! operations: separate `mul` and `add` (never a fused multiply-add),
+//! IEEE `div`, sign-bit `abs`, and an ordered `>=` select. Every lane
+//! performs exactly the scalar operation sequence the generic kernels
+//! spell out, so any backend — at any width — produces the same bits as
+//! the one-lane scalar walk. That is the whole contract: widening the
+//! vector changes which lanes compute in parallel, never what each lane
+//! computes (see [`super::kernels`] for why the kernels also forbid
+//! re-association).
+//!
+//! Backends:
+//!
+//! * [`Scalar1`] — one lane, plain `f32` ops. The reference backend the
+//!   property tests pin every other backend against.
+//! * [`Portable8`] — `[f32; 8]` with element loops. No `std::arch`, no
+//!   `unsafe` intrinsics: the fixed-width loops are shaped for LLVM's
+//!   autovectorizer, so this is the "SIMD everywhere" path (and the one
+//!   CI gates, since it behaves the same on every runner).
+//! * SSE2/AVX2 (in [`super::x86`], x86/x86_64 only) — real `std::arch`
+//!   intrinsics behind `#[target_feature]` wrappers, selected at runtime
+//!   via `is_x86_feature_detected!`.
+
+/// A fixed-width bundle of `f32` lanes with explicit, order-preserving
+/// arithmetic. See the module docs for the bit-identity contract.
+///
+/// The load/store/gather methods are `unsafe` so backends can use
+/// unchecked or intrinsic accesses on the hot path; the generic kernels
+/// establish the bounds once per row before entering the vector body.
+pub(crate) trait Vf32: Copy {
+    /// Lane count of this backend.
+    const N: usize;
+
+    /// All lanes set to `v`.
+    fn splat(v: f32) -> Self;
+
+    /// Load `N` consecutive values starting at `src[off]`.
+    ///
+    /// # Safety
+    /// `off + N <= src.len()`.
+    unsafe fn load(src: &[f32], off: usize) -> Self;
+
+    /// Store the lanes to `dst[off..off + N]`.
+    ///
+    /// # Safety
+    /// `off + N <= dst.len()`.
+    unsafe fn store(self, dst: &mut [f32], off: usize);
+
+    /// Load `N` values with stride 4 (`src[off + 4k]` for lane `k`) —
+    /// the RGBA-channel de-interleave the K1 luma gather needs.
+    ///
+    /// # Safety
+    /// `off + 4 * (N - 1) < src.len()`.
+    unsafe fn gather4(src: &[f32], off: usize) -> Self;
+
+    /// Lanewise `self + o` (one IEEE rounding, no contraction).
+    fn add(self, o: Self) -> Self;
+
+    /// Lanewise `self - o`.
+    fn sub(self, o: Self) -> Self;
+
+    /// Lanewise `self * o` (kept separate from `add`: FMA contraction
+    /// would change results, which the bit-identity contract forbids).
+    fn mul(self, o: Self) -> Self;
+
+    /// Lanewise `self / o`.
+    fn div(self, o: Self) -> Self;
+
+    /// Lanewise sign-bit clear — exactly `f32::abs`, NaN included.
+    fn abs(self) -> Self;
+
+    /// Lanewise `if self >= th { on } else { off }`, an ordered compare
+    /// (NaN selects `off`, matching the scalar `>=`).
+    fn ge_blend(self, th: Self, on: Self, off: Self) -> Self;
+
+    /// `[base, base + 1, …, base + N-1]` — column indices for the
+    /// detect Σj accumulation.
+    fn iota(base: f32) -> Self;
+
+    /// Horizontal sum in ascending lane order: `((lane0 + lane1) + …)`.
+    /// Only used for detect partials, whose summands are exact f32
+    /// integers, so the grouping cannot change the result anyway (see
+    /// `exec::bands::merge_detect`).
+    fn hsum(self) -> f32;
+}
+
+/// One-lane reference backend: plain `f32` scalar operations.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Scalar1(f32);
+
+impl Vf32 for Scalar1 {
+    const N: usize = 1;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        Scalar1(v)
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: &[f32], off: usize) -> Self {
+        debug_assert!(off < src.len());
+        Scalar1(*src.get_unchecked(off))
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off < dst.len());
+        *dst.get_unchecked_mut(off) = self.0;
+    }
+
+    #[inline(always)]
+    unsafe fn gather4(src: &[f32], off: usize) -> Self {
+        debug_assert!(off < src.len());
+        Scalar1(*src.get_unchecked(off))
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        Scalar1(self.0 + o.0)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        Scalar1(self.0 - o.0)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        Scalar1(self.0 * o.0)
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        Scalar1(self.0 / o.0)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        Scalar1(self.0.abs())
+    }
+
+    #[inline(always)]
+    fn ge_blend(self, th: Self, on: Self, off: Self) -> Self {
+        Scalar1(if self.0 >= th.0 { on.0 } else { off.0 })
+    }
+
+    #[inline(always)]
+    fn iota(base: f32) -> Self {
+        Scalar1(base)
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        self.0
+    }
+}
+
+/// Eight lanes as a plain `[f32; 8]`: fixed-width element loops the
+/// compiler autovectorizes, with no `std::arch` dependency. Available on
+/// every target; the CI perf gate runs against this backend.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Portable8([f32; 8]);
+
+impl Portable8 {
+    #[inline(always)]
+    fn zip(self, o: Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        let mut out = [0.0f32; 8];
+        for ((d, a), b) in out.iter_mut().zip(self.0).zip(o.0) {
+            *d = f(a, b);
+        }
+        Portable8(out)
+    }
+}
+
+impl Vf32 for Portable8 {
+    const N: usize = 8;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        Portable8([v; 8])
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 8 <= src.len());
+        let mut out = [0.0f32; 8];
+        out.copy_from_slice(src.get_unchecked(off..off + 8));
+        Portable8(out)
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 8 <= dst.len());
+        dst.get_unchecked_mut(off..off + 8).copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    unsafe fn gather4(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 * 7 < src.len());
+        let mut out = [0.0f32; 8];
+        for (k, d) in out.iter_mut().enumerate() {
+            *d = *src.get_unchecked(off + 4 * k);
+        }
+        Portable8(out)
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self.zip(o, |a, b| a + b)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        self.zip(o, |a, b| a - b)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        self.zip(o, |a, b| a * b)
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        self.zip(o, |a, b| a / b)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        let mut out = self.0;
+        for v in out.iter_mut() {
+            *v = v.abs();
+        }
+        Portable8(out)
+    }
+
+    #[inline(always)]
+    fn ge_blend(self, th: Self, on: Self, off: Self) -> Self {
+        let mut out = [0.0f32; 8];
+        for ((((d, a), t), hi), lo) in out
+            .iter_mut()
+            .zip(self.0)
+            .zip(th.0)
+            .zip(on.0)
+            .zip(off.0)
+        {
+            *d = if a >= t { hi } else { lo };
+        }
+        Portable8(out)
+    }
+
+    #[inline(always)]
+    fn iota(base: f32) -> Self {
+        let mut out = [0.0f32; 8];
+        for (k, d) in out.iter_mut().enumerate() {
+            *d = base + k as f32;
+        }
+        Portable8(out)
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        // std's f32 Sum is a sequential in-order fold from 0.0 — the
+        // ascending-lane order the trait contract asks for.
+        self.0.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p8(vs: [f32; 8]) -> Portable8 {
+        Portable8(vs)
+    }
+
+    #[test]
+    fn portable_ops_match_scalar_ops_lanewise() {
+        let a = [1.5f32, -2.0, 0.25, 3.0, -0.5, 8.0, 1e-3, 255.0];
+        let b = [0.5f32, 4.0, -0.25, 3.0, 2.0, -1.0, 1e3, 0.5];
+        let (va, vb) = (p8(a), p8(b));
+        let lanewise = |f: fn(f32, f32) -> f32| -> [f32; 8] {
+            let mut want = [0.0f32; 8];
+            for ((w, &x), &y) in want.iter_mut().zip(&a).zip(&b) {
+                *w = f(x, y);
+            }
+            want
+        };
+        assert_eq!(va.add(vb).0, lanewise(|x, y| x + y));
+        assert_eq!(va.sub(vb).0, lanewise(|x, y| x - y));
+        assert_eq!(va.mul(vb).0, lanewise(|x, y| x * y));
+        assert_eq!(va.div(vb).0, lanewise(|x, y| x / y));
+        assert_eq!(va.abs().0, lanewise(|x, _| x.abs()));
+    }
+
+    #[test]
+    fn ge_blend_is_the_scalar_ordered_compare() {
+        let mag = p8([1.0, 2.0, 3.0, f32::NAN, 2.0, 0.0, -1.0, 2.5]);
+        let th = Portable8::splat(2.0);
+        let on = Portable8::splat(255.0);
+        let off = Portable8::splat(0.0);
+        let got = mag.ge_blend(th, on, off);
+        assert_eq!(got.0, [0.0, 255.0, 255.0, 0.0, 255.0, 0.0, 0.0, 255.0]);
+    }
+
+    #[test]
+    fn iota_hsum_and_gather_behave() {
+        assert_eq!(
+            Portable8::iota(3.0).0,
+            [3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
+        );
+        assert_eq!(Portable8::iota(0.0).hsum(), 28.0);
+        let strided: Vec<f32> = (0..32).map(|v| v as f32).collect();
+        let got = unsafe { Portable8::gather4(&strided, 1) };
+        assert_eq!(got.0, [1.0, 5.0, 9.0, 13.0, 17.0, 21.0, 25.0, 29.0]);
+        assert_eq!(unsafe { Scalar1::gather4(&strided, 2) }.hsum(), 2.0);
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let src: Vec<f32> = (0..10).map(|v| v as f32).collect();
+        let v = unsafe { Portable8::load(&src, 1) };
+        let mut dst = vec![0.0f32; 10];
+        unsafe { v.store(&mut dst, 2) };
+        assert_eq!(&dst[2..10], &src[1..9]);
+    }
+}

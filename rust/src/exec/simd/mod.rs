@@ -1,0 +1,355 @@
+//! The vector layer: lane-parallel inner loops for the fused CPU
+//! executors, with runtime ISA dispatch.
+//!
+//! The paper's fusion transformation removes the memory round-trips, so
+//! what survives on the fused hot path is pure arithmetic — the scalar
+//! `f32` loops in `smooth_row`, the Sobel+threshold fold, and the
+//! luma/IIR prologue were leaving 4–8× of per-core width on the table.
+//! This module rewrites those loops against a fixed-width lane
+//! abstraction (`lanes::Vf32`) with four interchangeable backends:
+//!
+//! | [`Isa`] | lanes | how |
+//! |---|---|---|
+//! | `scalar` | 1 | plain `f32` ops — the reference walk |
+//! | `portable` | 8 | `[f32; 8]` element loops (autovectorized, runs everywhere) |
+//! | `sse2` | 4 | `std::arch` `__m128` intrinsics (x86/x86_64) |
+//! | `avx2` | 8 | `std::arch` `__m256` intrinsics (x86/x86_64) |
+//!
+//! Selection happens ONCE per executor: [`LaneKernels::for_isa`]
+//! resolves the configured [`Isa`] (`auto` probes
+//! `is_x86_feature_detected!`, best first) into a set of function
+//! pointers the executors call per row. `RunConfig::isa` / CLI `--isa`
+//! override the probe; requesting an ISA the host cannot run is a
+//! config-time error, and the `KFUSE_ISA` environment variable rebinds
+//! what `auto` means (the CI lever for running the whole suite under a
+//! forced backend).
+//!
+//! **The contract: same bits, fewer nanoseconds.** Every backend at
+//! every width is bit-identical to the scalar walk — each lane performs
+//! the exact scalar operation sequence (no FMA contraction, no
+//! re-association, ordered compares; see the `kernels` docs) and remainder
+//! columns fall back to literally the scalar expressions. Everything
+//! above this layer (banding, executors, engines, future backends)
+//! can therefore treat ISA choice as a pure performance knob,
+//! property-tested in `tests/exec_backend.rs` across remainder widths,
+//! band counts, and executors.
+
+pub(crate) mod kernels;
+pub(crate) mod lanes;
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub(crate) mod x86;
+
+use crate::{Error, Result};
+
+/// Which lane backend the fused executors run their inner loops on
+/// (CLI `--isa`, `RunConfig::isa`, `EngineBuilder::isa`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Probe the host once per executor and take the widest available
+    /// backend (`avx2` → `sse2` → `portable`). The `KFUSE_ISA`
+    /// environment variable, when set, overrides the probe.
+    Auto,
+    /// One-lane reference walk — the oracle every other backend must
+    /// match bitwise.
+    Scalar,
+    /// 8-wide `[f32; 8]` loops, no `std::arch`: the forced-width path
+    /// that behaves identically on every host (CI gates this one).
+    Portable,
+    /// `std::arch` SSE2 (`__m128`, 4 lanes). x86/x86_64 only.
+    Sse2,
+    /// `std::arch` AVX2 (`__m256`, 8 lanes). x86/x86_64 only.
+    Avx2,
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+fn x86_feature(name: &str) -> bool {
+    match name {
+        "sse2" => std::arch::is_x86_feature_detected!("sse2"),
+        "avx2" => std::arch::is_x86_feature_detected!("avx2"),
+        _ => false,
+    }
+}
+
+#[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+fn x86_feature(_name: &str) -> bool {
+    false
+}
+
+impl Isa {
+    pub fn parse(s: &str) -> Result<Isa> {
+        match s {
+            "auto" => Ok(Isa::Auto),
+            "scalar" => Ok(Isa::Scalar),
+            "portable" => Ok(Isa::Portable),
+            "sse2" => Ok(Isa::Sse2),
+            "avx2" => Ok(Isa::Avx2),
+            _ => Err(Error::Config(format!(
+                "unknown isa '{s}' (expected auto|scalar|portable|sse2|avx2)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Auto => "auto",
+            Isa::Scalar => "scalar",
+            Isa::Portable => "portable",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this host can run the backend (`auto`, `scalar`, and
+    /// `portable` always can; the `std::arch` backends need the CPU
+    /// feature AND an x86 target).
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Auto | Isa::Scalar | Isa::Portable => true,
+            Isa::Sse2 => x86_feature("sse2"),
+            Isa::Avx2 => x86_feature("avx2"),
+        }
+    }
+
+    /// The widest backend this host supports — what `auto` resolves to
+    /// absent a `KFUSE_ISA` override.
+    pub fn detect() -> Isa {
+        if Isa::Avx2.available() {
+            Isa::Avx2
+        } else if Isa::Sse2.available() {
+            Isa::Sse2
+        } else {
+            Isa::Portable
+        }
+    }
+
+    /// Resolve to a concrete, runnable backend: `Auto` honors
+    /// `KFUSE_ISA` (if set and non-empty) and otherwise probes the
+    /// host; a concrete request errors if the host cannot run it —
+    /// at config-validation time, not deep inside a worker.
+    pub fn resolve(self) -> Result<Isa> {
+        let want = match self {
+            Isa::Auto => match std::env::var("KFUSE_ISA") {
+                Ok(v) if !v.is_empty() => Isa::parse(&v)?,
+                _ => Isa::detect(),
+            },
+            concrete => concrete,
+        };
+        // KFUSE_ISA=auto (or empty) still means "probe".
+        let want = if want == Isa::Auto { Isa::detect() } else { want };
+        if !want.available() {
+            return Err(Error::Config(format!(
+                "isa '{}' is not available on this host (widest \
+                 supported: '{}')",
+                want.name(),
+                Isa::detect().name()
+            )));
+        }
+        Ok(want)
+    }
+
+    /// Every concrete backend this host can run, scalar first — the
+    /// sweep set for the equivalence property tests and the bench
+    /// matrix.
+    pub fn all_available() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Portable, Isa::Sse2, Isa::Avx2]
+            .into_iter()
+            .filter(|isa| isa.available())
+            .collect()
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The per-executor kernel set: one function pointer per fused hot
+/// loop, bound to a concrete [`Isa`] exactly once (at executor
+/// construction) so the per-row dispatch is a plain indirect call.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneKernels {
+    isa: Isa,
+    luma_fn: fn(&[f32], &mut [f32]),
+    luma_iir_fn: fn(&[f32], &mut [f32]),
+    luma_iir_into_fn: fn(&[f32], &[f32], &mut [f32]),
+    smooth3_fn: fn(&[f32], &[f32], &[f32], &mut [f32]),
+    sobel_row_fn: fn(&[f32], &[f32], &[f32], f32, &mut [f32]) -> (f32, f32),
+}
+
+impl LaneKernels {
+    /// Resolve `isa` (see [`Isa::resolve`]) and bind the kernel set for
+    /// it. Errors if the host cannot run the requested backend.
+    pub fn for_isa(isa: Isa) -> Result<LaneKernels> {
+        use lanes::{Portable8, Scalar1};
+        let isa = isa.resolve()?;
+        Ok(match isa {
+            Isa::Scalar => LaneKernels {
+                isa,
+                luma_fn: kernels::luma_v::<Scalar1>,
+                luma_iir_fn: kernels::luma_iir_v::<Scalar1>,
+                luma_iir_into_fn: kernels::luma_iir_into_v::<Scalar1>,
+                smooth3_fn: kernels::smooth3_v::<Scalar1>,
+                sobel_row_fn: kernels::sobel_row_v::<Scalar1>,
+            },
+            Isa::Portable => LaneKernels {
+                isa,
+                luma_fn: kernels::luma_v::<Portable8>,
+                luma_iir_fn: kernels::luma_iir_v::<Portable8>,
+                luma_iir_into_fn: kernels::luma_iir_into_v::<Portable8>,
+                smooth3_fn: kernels::smooth3_v::<Portable8>,
+                sobel_row_fn: kernels::sobel_row_v::<Portable8>,
+            },
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            Isa::Sse2 => LaneKernels {
+                isa,
+                luma_fn: x86::luma_sse2,
+                luma_iir_fn: x86::luma_iir_sse2,
+                luma_iir_into_fn: x86::luma_iir_into_sse2,
+                smooth3_fn: x86::smooth3_sse2,
+                sobel_row_fn: x86::sobel_row_sse2,
+            },
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            Isa::Avx2 => LaneKernels {
+                isa,
+                luma_fn: x86::luma_avx2,
+                luma_iir_fn: x86::luma_iir_avx2,
+                luma_iir_into_fn: x86::luma_iir_into_avx2,
+                smooth3_fn: x86::smooth3_avx2,
+                sobel_row_fn: x86::sobel_row_avx2,
+            },
+            #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+            Isa::Sse2 | Isa::Avx2 => {
+                unreachable!("resolve() rejects std::arch ISAs off-x86")
+            }
+            Isa::Auto => unreachable!("resolve() returns a concrete ISA"),
+        })
+    }
+
+    /// The concrete backend this kernel set runs on.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// K1 luma: `dst[k] = luma(px[4k..4k+4])` (IIR warm start).
+    #[inline]
+    pub(crate) fn luma(&self, px: &[f32], dst: &mut [f32]) {
+        (self.luma_fn)(px, dst)
+    }
+
+    /// Fused K1+K2 in place: `c = α·luma(px) + (1-α)·c`.
+    #[inline]
+    pub(crate) fn luma_iir(&self, px: &[f32], carry: &mut [f32]) {
+        (self.luma_iir_fn)(px, carry)
+    }
+
+    /// Fused K1+K2 out of place: `dst = α·luma(px) + (1-α)·prev`.
+    #[inline]
+    pub(crate) fn luma_iir_into(
+        &self,
+        px: &[f32],
+        prev: &[f32],
+        dst: &mut [f32],
+    ) {
+        (self.luma_iir_into_fn)(px, prev, dst)
+    }
+
+    /// K3: one binomial output row from three source rows.
+    #[inline]
+    pub(crate) fn smooth3(
+        &self,
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        dst: &mut [f32],
+    ) {
+        (self.smooth3_fn)(r0, r1, r2, dst)
+    }
+
+    /// K4+K5 (+detect partials) for one output row; returns the row's
+    /// `(mass, Σj)`.
+    #[inline]
+    pub(crate) fn sobel_row(
+        &self,
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        th: f32,
+        dst: &mut [f32],
+    ) -> (f32, f32) {
+        (self.sobel_row_fn)(r0, r1, r2, th, dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Gen;
+
+    #[test]
+    fn parse_name_round_trip() {
+        for isa in [
+            Isa::Auto,
+            Isa::Scalar,
+            Isa::Portable,
+            Isa::Sse2,
+            Isa::Avx2,
+        ] {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
+            assert_eq!(format!("{isa}"), isa.name());
+        }
+        assert!(Isa::parse("neon").is_err());
+    }
+
+    #[test]
+    fn detection_and_resolution_are_concrete_and_available() {
+        let best = Isa::detect();
+        assert_ne!(best, Isa::Auto);
+        assert!(best.available());
+        let all = Isa::all_available();
+        assert!(all.contains(&Isa::Scalar));
+        assert!(all.contains(&Isa::Portable));
+        assert!(all.contains(&best));
+        for isa in all {
+            assert_eq!(isa.resolve().unwrap(), isa);
+        }
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_on_a_row() {
+        let mut g = Gen::new(91);
+        let scalar = LaneKernels::for_isa(Isa::Scalar).unwrap();
+        for isa in Isa::all_available() {
+            let k = LaneKernels::for_isa(isa).unwrap();
+            assert_eq!(k.isa(), isa);
+            for w in [1usize, 7, 8, 9, 15] {
+                let r0 = g.vec_f32(w + 2, 0.0, 255.0);
+                let r1 = g.vec_f32(w + 2, 0.0, 255.0);
+                let r2 = g.vec_f32(w + 2, 0.0, 255.0);
+                let th = g.f32_in(0.0, 400.0);
+                let mut a = vec![0.0f32; w];
+                let mut b = vec![0.0f32; w];
+                scalar.smooth3(&r0, &r1, &r2, &mut a);
+                k.smooth3(&r0, &r1, &r2, &mut b);
+                assert_eq!(a, b, "smooth3 isa={isa} w={w}");
+                let sa = scalar.sobel_row(&r0, &r1, &r2, th, &mut a);
+                let sb = k.sobel_row(&r0, &r1, &r2, th, &mut b);
+                assert_eq!(a, b, "sobel isa={isa} w={w}");
+                assert_eq!(sa, sb, "sobel partials isa={isa} w={w}");
+                let px = g.vec_f32(4 * w, 0.0, 255.0);
+                scalar.luma(&px, &mut a);
+                k.luma(&px, &mut b);
+                assert_eq!(a, b, "luma isa={isa} w={w}");
+                let px2 = g.vec_f32(4 * w, 0.0, 255.0);
+                scalar.luma_iir(&px2, &mut a);
+                k.luma_iir(&px2, &mut b);
+                assert_eq!(a, b, "luma_iir isa={isa} w={w}");
+                let mut da = vec![0.0f32; w];
+                let mut db = vec![0.0f32; w];
+                scalar.luma_iir_into(&px2, &a, &mut da);
+                k.luma_iir_into(&px2, &b, &mut db);
+                assert_eq!(da, db, "luma_iir_into isa={isa} w={w}");
+            }
+        }
+    }
+}

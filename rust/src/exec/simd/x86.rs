@@ -1,0 +1,415 @@
+//! `std::arch` lane backends for x86/x86_64: SSE2 (4 lanes) and AVX2
+//! (8 lanes).
+//!
+//! Each backend implements [`Vf32`] with the corresponding intrinsics —
+//! separate `mul`/`add` (no FMA intrinsics anywhere, so no contraction
+//! can change results), `andnot` sign-bit `abs`, and an ordered-quiet
+//! `>=` compare feeding a blend, all of which are lanewise identical to
+//! the scalar IEEE operations. The kernel entry points are monomorphized
+//! inside `#[target_feature]` functions so the generic bodies compile to
+//! actual SSE2/AVX2 code, then wrapped in safe shims.
+//!
+//! # Safety
+//! The safe shims are only reachable through
+//! [`LaneKernels::for_isa`](super::LaneKernels::for_isa), which refuses
+//! to hand out a backend unless the matching
+//! `is_x86_feature_detected!` check passed on this host — that runtime
+//! check is the precondition every `unsafe` block below relies on.
+//! (SSE2 is additionally part of the x86_64 baseline ABI.)
+
+use super::lanes::Vf32;
+
+#[cfg(target_arch = "x86")]
+use core::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// Four `f32` lanes in an SSE2 `__m128`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Sse2(__m128);
+
+impl Vf32 for Sse2 {
+    const N: usize = 4;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        // SAFETY (here and below): SSE2 presence is guaranteed by the
+        // dispatch-time feature check (module docs).
+        unsafe { Sse2(_mm_set1_ps(v)) }
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 <= src.len());
+        Sse2(_mm_loadu_ps(src.as_ptr().add(off)))
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 4 <= dst.len());
+        _mm_storeu_ps(dst.as_mut_ptr().add(off), self.0)
+    }
+
+    #[inline(always)]
+    unsafe fn gather4(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 * 3 < src.len());
+        let p = src.as_ptr();
+        Sse2(_mm_setr_ps(
+            *p.add(off),
+            *p.add(off + 4),
+            *p.add(off + 8),
+            *p.add(off + 12),
+        ))
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        unsafe { Sse2(_mm_add_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        unsafe { Sse2(_mm_sub_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        unsafe { Sse2(_mm_mul_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        unsafe { Sse2(_mm_div_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        // Clear the sign bit — exactly f32::abs, NaN included.
+        unsafe { Sse2(_mm_andnot_ps(_mm_set1_ps(-0.0), self.0)) }
+    }
+
+    #[inline(always)]
+    fn ge_blend(self, th: Self, on: Self, off: Self) -> Self {
+        unsafe {
+            let m = _mm_cmpge_ps(self.0, th.0); // ordered: NaN -> off
+            Sse2(_mm_or_ps(
+                _mm_and_ps(m, on.0),
+                _mm_andnot_ps(m, off.0),
+            ))
+        }
+    }
+
+    #[inline(always)]
+    fn iota(base: f32) -> Self {
+        unsafe {
+            Sse2(_mm_setr_ps(base, base + 1.0, base + 2.0, base + 3.0))
+        }
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        let mut lanes = [0.0f32; 4];
+        unsafe { _mm_storeu_ps(lanes.as_mut_ptr(), self.0) };
+        lanes.iter().sum() // in-order fold: ascending lanes
+    }
+}
+
+/// Eight `f32` lanes in an AVX `__m256` (dispatched under the `avx2`
+/// feature gate, matching the CLI name).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Avx2(__m256);
+
+impl Vf32 for Avx2 {
+    const N: usize = 8;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        // SAFETY (here and below): AVX2 presence is guaranteed by the
+        // dispatch-time `is_x86_feature_detected!("avx2")` (module docs).
+        unsafe { Avx2(_mm256_set1_ps(v)) }
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 8 <= src.len());
+        Avx2(_mm256_loadu_ps(src.as_ptr().add(off)))
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 8 <= dst.len());
+        _mm256_storeu_ps(dst.as_mut_ptr().add(off), self.0)
+    }
+
+    #[inline(always)]
+    unsafe fn gather4(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 * 7 < src.len());
+        let p = src.as_ptr();
+        Avx2(_mm256_setr_ps(
+            *p.add(off),
+            *p.add(off + 4),
+            *p.add(off + 8),
+            *p.add(off + 12),
+            *p.add(off + 16),
+            *p.add(off + 20),
+            *p.add(off + 24),
+            *p.add(off + 28),
+        ))
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        unsafe { Avx2(_mm256_add_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        unsafe { Avx2(_mm256_sub_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        unsafe { Avx2(_mm256_mul_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        unsafe { Avx2(_mm256_div_ps(self.0, o.0)) }
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        unsafe { Avx2(_mm256_andnot_ps(_mm256_set1_ps(-0.0), self.0)) }
+    }
+
+    #[inline(always)]
+    fn ge_blend(self, th: Self, on: Self, off: Self) -> Self {
+        unsafe {
+            // Ordered-quiet >=: NaN compares false, matching scalar.
+            let m = _mm256_cmp_ps::<_CMP_GE_OQ>(self.0, th.0);
+            Avx2(_mm256_blendv_ps(off.0, on.0, m))
+        }
+    }
+
+    #[inline(always)]
+    fn iota(base: f32) -> Self {
+        unsafe {
+            Avx2(_mm256_setr_ps(
+                base,
+                base + 1.0,
+                base + 2.0,
+                base + 3.0,
+                base + 4.0,
+                base + 5.0,
+                base + 6.0,
+                base + 7.0,
+            ))
+        }
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), self.0) };
+        lanes.iter().sum() // in-order fold: ascending lanes
+    }
+}
+
+/// Generates, per kernel: a `#[target_feature]` monomorphization (so the
+/// generic body compiles with the vector ISA enabled) and the safe shim
+/// [`LaneKernels::for_isa`](super::LaneKernels::for_isa) takes a pointer
+/// to. The shim's `unsafe` discharge is the dispatch-time runtime
+/// feature check (module docs).
+macro_rules! lane_entries {
+    ($feature:literal, $lane:ty,
+     $(($tf:ident, $safe:ident, $generic:ident,
+        ($($arg:ident: $ty2:ty),*) $(-> $ret:ty)?)),+ $(,)?) => {
+        $(
+            #[target_feature(enable = $feature)]
+            unsafe fn $tf($($arg: $ty2),*) $(-> $ret)? {
+                super::kernels::$generic::<$lane>($($arg),*)
+            }
+
+            pub(super) fn $safe($($arg: $ty2),*) $(-> $ret)? {
+                // SAFETY: only reachable via LaneKernels::for_isa after
+                // the runtime feature check for this backend passed.
+                unsafe { $tf($($arg),*) }
+            }
+        )+
+    };
+}
+
+lane_entries!(
+    "sse2",
+    Sse2,
+    (luma_sse2_tf, luma_sse2, luma_v, (px: &[f32], dst: &mut [f32])),
+    (
+        luma_iir_sse2_tf,
+        luma_iir_sse2,
+        luma_iir_v,
+        (px: &[f32], carry: &mut [f32])
+    ),
+    (
+        luma_iir_into_sse2_tf,
+        luma_iir_into_sse2,
+        luma_iir_into_v,
+        (px: &[f32], prev: &[f32], dst: &mut [f32])
+    ),
+    (
+        smooth3_sse2_tf,
+        smooth3_sse2,
+        smooth3_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], dst: &mut [f32])
+    ),
+    (
+        sobel_row_sse2_tf,
+        sobel_row_sse2,
+        sobel_row_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], th: f32, dst: &mut [f32])
+            -> (f32, f32)
+    ),
+);
+
+lane_entries!(
+    "avx2",
+    Avx2,
+    (luma_avx2_tf, luma_avx2, luma_v, (px: &[f32], dst: &mut [f32])),
+    (
+        luma_iir_avx2_tf,
+        luma_iir_avx2,
+        luma_iir_v,
+        (px: &[f32], carry: &mut [f32])
+    ),
+    (
+        luma_iir_into_avx2_tf,
+        luma_iir_into_avx2,
+        luma_iir_into_v,
+        (px: &[f32], prev: &[f32], dst: &mut [f32])
+    ),
+    (
+        smooth3_avx2_tf,
+        smooth3_avx2,
+        smooth3_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], dst: &mut [f32])
+    ),
+    (
+        sobel_row_avx2_tf,
+        sobel_row_avx2,
+        sobel_row_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], th: f32, dst: &mut [f32])
+            -> (f32, f32)
+    ),
+);
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernels;
+    use super::super::lanes::{Scalar1, Vf32};
+    use super::*;
+    use crate::prop::Gen;
+
+    #[test]
+    fn x86_lane_ops_match_scalar_lanewise() {
+        if !std::arch::is_x86_feature_detected!("sse2") {
+            eprintln!("skipping: no sse2 on this host");
+            return;
+        }
+        let mut g = Gen::new(81);
+        let a = g.vec_f32(8, -100.0, 100.0);
+        let b = g.vec_f32(8, 0.5, 100.0);
+        let s = |v: &[f32], k: usize| unsafe { Sse2::load(v, k) };
+        for k in [0usize, 4] {
+            let (va, vb) = (s(&a, k), s(&b, k));
+            let mut got = [0.0f32; 4];
+            for (op, name) in [
+                (va.add(vb), "add"),
+                (va.sub(vb), "sub"),
+                (va.mul(vb), "mul"),
+                (va.div(vb), "div"),
+                (va.abs(), "abs"),
+            ] {
+                unsafe { op.store(&mut got, 0) };
+                for (lane, &got_v) in got.iter().enumerate() {
+                    let (x, y) = (a[k + lane], b[k + lane]);
+                    let want = match name {
+                        "add" => x + y,
+                        "sub" => x - y,
+                        "mul" => x * y,
+                        "div" => x / y,
+                        _ => x.abs(),
+                    };
+                    assert_eq!(got_v, want, "sse2 {name} lane {lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sse2_kernels_match_scalar_oracle_bitwise() {
+        if !std::arch::is_x86_feature_detected!("sse2") {
+            eprintln!("skipping: no sse2 on this host");
+            return;
+        }
+        let mut g = Gen::new(82);
+        for w in [1usize, 3, 4, 5, 7, 8, 11] {
+            let r0 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r1 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r2 = g.vec_f32(w + 2, 0.0, 255.0);
+            let th = g.f32_in(0.0, 400.0);
+            let mut a = vec![0.0f32; w];
+            let mut b = vec![0.0f32; w];
+            kernels::smooth3_v::<Scalar1>(&r0, &r1, &r2, &mut a);
+            smooth3_sse2(&r0, &r1, &r2, &mut b);
+            assert_eq!(a, b, "smooth3 sse2 w={w}");
+            let sa = kernels::sobel_row_v::<Scalar1>(&r0, &r1, &r2, th, &mut a);
+            let sb = sobel_row_sse2(&r0, &r1, &r2, th, &mut b);
+            assert_eq!((a.clone(), sa), (b.clone(), sb), "sobel sse2 w={w}");
+
+            let px = g.vec_f32(4 * w, 0.0, 255.0);
+            kernels::luma_v::<Scalar1>(&px, &mut a);
+            luma_sse2(&px, &mut b);
+            assert_eq!(a, b, "luma sse2 w={w}");
+            let px2 = g.vec_f32(4 * w, 0.0, 255.0);
+            kernels::luma_iir_v::<Scalar1>(&px2, &mut a);
+            luma_iir_sse2(&px2, &mut b);
+            assert_eq!(a, b, "luma_iir sse2 w={w}");
+        }
+    }
+
+    #[test]
+    fn avx2_kernels_match_scalar_oracle_bitwise() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: no avx2 on this host");
+            return;
+        }
+        let mut g = Gen::new(83);
+        for w in [1usize, 7, 8, 9, 15, 16, 23] {
+            let r0 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r1 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r2 = g.vec_f32(w + 2, 0.0, 255.0);
+            let th = g.f32_in(0.0, 400.0);
+            let mut a = vec![0.0f32; w];
+            let mut b = vec![0.0f32; w];
+            kernels::smooth3_v::<Scalar1>(&r0, &r1, &r2, &mut a);
+            smooth3_avx2(&r0, &r1, &r2, &mut b);
+            assert_eq!(a, b, "smooth3 avx2 w={w}");
+            let sa = kernels::sobel_row_v::<Scalar1>(&r0, &r1, &r2, th, &mut a);
+            let sb = sobel_row_avx2(&r0, &r1, &r2, th, &mut b);
+            assert_eq!((a.clone(), sa), (b.clone(), sb), "sobel avx2 w={w}");
+
+            let px = g.vec_f32(4 * w, 0.0, 255.0);
+            kernels::luma_v::<Scalar1>(&px, &mut a);
+            luma_avx2(&px, &mut b);
+            assert_eq!(a, b, "luma avx2 w={w}");
+            let px2 = g.vec_f32(4 * w, 0.0, 255.0);
+            let mut c = vec![0.0f32; w];
+            luma_iir_into_avx2(&px2, &a, &mut c);
+            let mut want = vec![0.0f32; w];
+            kernels::luma_iir_into_v::<Scalar1>(&px2, &a, &mut want);
+            assert_eq!(c, want, "luma_iir_into avx2 w={w}");
+            kernels::luma_iir_v::<Scalar1>(&px2, &mut a);
+            luma_iir_avx2(&px2, &mut b);
+            assert_eq!(a, b, "luma_iir avx2 w={w}");
+        }
+    }
+}

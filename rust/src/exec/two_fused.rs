@@ -33,7 +33,6 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::plan::ExecutionPlan;
-use crate::cpu_ref::kernels::{IIR_ALPHA, LUMA};
 use crate::Result;
 
 use super::bands::{
@@ -41,6 +40,7 @@ use super::bands::{
 };
 use super::fused::stencil_frame;
 use super::pool::{BufferPool, PoolBuf};
+use super::simd::{Isa, LaneKernels};
 use super::{check_cpu_input, BoxOutput, Executor};
 
 /// Per-worker state: the single materialized intermediate (`y`, the IIR
@@ -56,33 +56,57 @@ struct State {
 pub struct TwoFusedCpu {
     pool: Arc<BufferPool>,
     threads: usize,
+    lanes: LaneKernels,
     bands: BandPool,
     state: RefCell<Option<State>>,
     last_nanos: Cell<(u64, u64)>,
 }
 
 impl TwoFusedCpu {
-    /// Single-threaded Two-Fusion executor.
+    /// Single-threaded Two-Fusion executor, runtime-detected lane
+    /// backend.
     pub fn new(pool: Arc<BufferPool>) -> TwoFusedCpu {
         TwoFusedCpu::with_threads(pool, 1)
     }
 
     /// Two-Fusion executor running both partitions as `threads` row
-    /// bands on a persistent band thread set.
+    /// bands on a persistent band thread set, runtime-detected lane
+    /// backend.
+    ///
+    /// # Panics
+    /// Only if a `KFUSE_ISA` override names a backend this host cannot
+    /// run (see [`FusedCpu::with_threads`](super::FusedCpu::with_threads)).
     pub fn with_threads(pool: Arc<BufferPool>, threads: usize) -> TwoFusedCpu {
+        TwoFusedCpu::with_isa(pool, threads, Isa::Auto)
+            .unwrap_or_else(|e| panic!("lane backend resolution: {e}"))
+    }
+
+    /// Two-Fusion executor with an explicit lane backend; errors if the
+    /// host cannot run `isa` (see [`Isa::resolve`]).
+    pub fn with_isa(
+        pool: Arc<BufferPool>,
+        threads: usize,
+        isa: Isa,
+    ) -> Result<TwoFusedCpu> {
         assert!(threads >= 1, "intra_box_threads must be >= 1");
-        TwoFusedCpu {
+        Ok(TwoFusedCpu {
             pool,
             threads,
+            lanes: LaneKernels::for_isa(isa)?,
             bands: BandPool::new(threads - 1),
             state: RefCell::new(None),
             last_nanos: Cell::new((0, 0)),
-        }
+        })
     }
 
     /// Intra-box threads this executor fans each box out to.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The concrete lane backend the inner loops run on.
+    pub fn isa(&self) -> Isa {
+        self.lanes.isa()
     }
 
     /// Bytes written to and re-read from the ONE materialized
@@ -141,13 +165,14 @@ impl TwoFusedCpu {
         let a_bands = split_rows(h_in, self.threads);
         let y_rows = band_views(&mut *y, &a_bands, w_in);
         let a_started = Instant::now();
+        let lanes = self.lanes;
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a_bands
             .iter()
             .zip(y_rows)
             .map(|(band, planes)| {
                 let band = *band;
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    iir_band(x, t_in, h_in, w_in, band, planes);
+                    iir_band(lanes, x, t_in, h_in, w_in, band, planes);
                 });
                 task
             })
@@ -176,7 +201,8 @@ impl TwoFusedCpu {
                 let srows: &mut [f32] = srows;
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     tail_band(
-                        y, t_out, h_in, w_in, th, band, srows, rows, det,
+                        lanes, y, t_out, h_in, w_in, th, band, srows, rows,
+                        det,
                     );
                 });
                 task
@@ -195,11 +221,14 @@ impl TwoFusedCpu {
 }
 
 /// Partition A for one band: fused K1+K2 over the band's plane rows,
-/// writing the only materialized intermediate. The warm start reads the
-/// frame-0 luma inline (`y[-1] = gray(x[0])`), later frames read the
-/// band's own previous `y` plane — same expressions, same order as
-/// `cpu_ref::rgb2gray` + `cpu_ref::iir`, hence bit-identical.
+/// writing the only materialized intermediate. The warm start computes
+/// the frame-0 luma into the first `y` plane, then folds frame 1 over it
+/// in place (`y[0] = α·gray(x[1]) + (1-α)·gray(x[0])`); later frames
+/// read the band's own previous `y` plane. Each luma rounds to f32 once
+/// either way, so the split is bit-identical to `cpu_ref::rgb2gray` +
+/// `cpu_ref::iir` — and every step runs on the band's lane kernels.
 fn iir_band(
+    k: LaneKernels,
     x: &[f32],
     t_in: usize,
     h_in: usize,
@@ -209,29 +238,17 @@ fn iir_band(
 ) {
     let plane = h_in * w_in;
     let n = band.rows * w_in;
-    let luma = |px: &[f32]| LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2];
     for ft in 1..t_in {
         let base = (ft * plane + band.i0 * w_in) * 4;
         let frame = &x[base..base + n * 4];
         let of = ft - 1;
         if of == 0 {
             let f0 = &x[band.i0 * w_in * 4..(band.i0 * w_in + n) * 4];
-            for ((d, px), p0) in planes[0]
-                .iter_mut()
-                .zip(frame.chunks_exact(4))
-                .zip(f0.chunks_exact(4))
-            {
-                *d = IIR_ALPHA * luma(px) + (1.0 - IIR_ALPHA) * luma(p0);
-            }
+            k.luma(f0, &mut *planes[0]);
+            k.luma_iir(frame, &mut *planes[0]);
         } else {
             let (prev, cur) = planes.split_at_mut(of);
-            for ((d, px), p) in cur[0]
-                .iter_mut()
-                .zip(frame.chunks_exact(4))
-                .zip(prev[of - 1].iter())
-            {
-                *d = IIR_ALPHA * luma(px) + (1.0 - IIR_ALPHA) * *p;
-            }
+            k.luma_iir_into(frame, &*prev[of - 1], &mut *cur[0]);
         }
     }
 }
@@ -240,6 +257,7 @@ fn iir_band(
 /// rows of the materialized `y`, frames independent (no carry).
 #[allow(clippy::too_many_arguments)]
 fn tail_band(
+    k: LaneKernels,
     y: &[f32],
     t_out: usize,
     h_in: usize,
@@ -256,6 +274,7 @@ fn tail_band(
         let src = &y[base..base + (band.rows + 4) * w_in];
         let mut acc = (0.0f32, 0.0f32, 0.0f32);
         stencil_frame(
+            k,
             src,
             w_in,
             band.rows,
@@ -339,6 +358,25 @@ mod tests {
             let tf = TwoFusedCpu::with_threads(BufferPool::shared(), threads);
             let got = tf.run_box(&x, t, h, w, 96.0, true);
             assert_eq!(got, oracle(&x, t, h, w, 96.0), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_oracle() {
+        // Odd extents leave remainder lanes at both std::arch widths.
+        let mut g = Gen::new(31);
+        let (t, h, w) = (5, 15, 17);
+        let x = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        let want = oracle(&x, t, h, w, 120.0);
+        for isa in Isa::all_available() {
+            for threads in [1, 2] {
+                let tf =
+                    TwoFusedCpu::with_isa(BufferPool::shared(), threads, isa)
+                        .unwrap();
+                assert_eq!(tf.isa(), isa);
+                let got = tf.run_box(&x, t, h, w, 120.0, true);
+                assert_eq!(got, want, "isa={isa} threads={threads}");
+            }
         }
     }
 

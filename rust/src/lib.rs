@@ -36,7 +36,11 @@
 //! fused single-pass `FusedCpu` (optionally band-parallel within each
 //! box via `intra_box_threads`), the two-partition `TwoFusedCpu` (one
 //! materialized intermediate), or the materializing `StagedCpu`
-//! baseline — so the full path runs and is tested offline.
+//! baseline — so the full path runs and is tested offline. The fused
+//! executors' inner loops run on the [`exec::simd`] vector layer:
+//! lane backends (scalar / portable / SSE2 / AVX2) selected once per
+//! executor by runtime dispatch ([`config::Isa`], CLI `--isa`), every
+//! one bit-identical to the scalar walk.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs once; the PJRT backend loads `artifacts/*.hlo.txt` via the

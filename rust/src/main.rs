@@ -5,11 +5,12 @@
 //! kfuse run      [--mode full|two|none|auto] [--backend pjrt|cpu]
 //!                [--device k20|c1060|gtx750ti]
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
-//!                [--intra-threads N] [--markers M]
-//!                [--queue-policy fifo|rr|drr] [--queue N]
+//!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
+//!                [--markers M] [--queue-policy fifo|rr|drr] [--queue N]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
 //!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
 //!                [--size 256] [--frames 256] [--intra-threads N]
+//!                [--isa auto|scalar|portable|sse2|avx2]
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
@@ -22,7 +23,12 @@
 //! lets the planner pick — optimizing for the `--device` model (`k20`
 //! default; accepted names: `k20`, `c1060`, `gtx750ti`/`750ti`).
 //! `--intra-threads N` fans each box out to N row bands on the fused
-//! executors (bit-identical to N=1).
+//! executors (bit-identical to N=1), and `--isa` picks their lane
+//! backend — `auto` (default) probes the host and takes the widest of
+//! `avx2`/`sse2`/`portable`; every backend is bit-identical to
+//! `scalar`. Asking for an ISA the host cannot run is a config error;
+//! the session line in `engine.stats()` reports which one actually
+//! served.
 //!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
@@ -39,7 +45,7 @@
 
 use std::sync::Arc;
 
-use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
+use kfuse::config::{Backend, FusionMode, Isa, QueuePolicy, RunConfig};
 use kfuse::coordinator;
 use kfuse::engine::{Engine, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -137,6 +143,11 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(m) = args.get("mode") {
         cfg.mode = FusionMode::parse(m)?;
     }
+    if let Some(i) = args.get("isa") {
+        // Parse eagerly; validate() additionally rejects backends this
+        // host cannot run before any engine state is built.
+        cfg.isa = Isa::parse(i)?;
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = Backend::parse(b)?;
     }
@@ -190,7 +201,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .unwrap_or(cfg.roi_only);
     println!(
         "run: {} on {} | {}x{} x {} frames | box {}x{}x{} | {} workers \
-         x {} band threads{}",
+         x {} band threads | isa {}{}",
         cfg.mode.name(),
         cfg.backend.name(),
         cfg.frame_size,
@@ -201,6 +212,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.box_dims.t,
         cfg.workers,
         cfg.intra_box_threads,
+        cfg.isa.name(),
         if cfg.roi_only { " | roi-only" } else { "" }
     );
     let engine = Engine::builder().config(cfg.clone()).build()?;
@@ -317,6 +329,8 @@ fn main() {
                  {}\n\
                  multiplexing: --queue-policy fifo|rr|drr, --queue N \
                  (per-job lane depth), --ingest-depth N (serve staging)\n\
+                 vector layer: --isa auto|scalar|portable|sse2|avx2 \
+                 (fused CPU lane backend; all bit-identical)\n\
                  (see crate docs / README / ARCHITECTURE.md for all flags)",
                 DeviceSpec::NAMES.join(" | ")
             );

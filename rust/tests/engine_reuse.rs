@@ -3,8 +3,10 @@
 //! The whole point of the persistent session API is that `build()` pays
 //! the one-time cost exactly once; every later job runs warm. Two
 //! counters in `engine.stats()` pin that down: `compiles` (PJRT
-//! executables, settles at build) and `pool_allocs` (the CPU backends'
-//! scratch pool, settles at build thanks to worker prewarm).
+//! executables, settles at build) and `pool_allocs` (the shared
+//! `BufferPool`, settles at build thanks to worker scratch prewarm AND
+//! the engine's ingest-staging prewarm — staged box inputs recycle
+//! through the same pool since PR 5).
 //!
 //! The PJRT tests require `artifacts/` (run `make artifacts`) and SKIP
 //! with a message otherwise; the `Backend::Cpu` tests always run — that
@@ -111,34 +113,43 @@ fn cpu_cfg(workers: usize, mode: FusionMode) -> RunConfig {
     }
 }
 
+/// One job's worst-case in-flight staging set: a lane's bounded depth,
+/// one box in service per worker, and the one being extracted — the
+/// bound `Engine::build` prewarms so `pool_allocs` settles at build.
+fn staging_warm(cfg: &RunConfig) -> u64 {
+    (cfg.queue_depth + cfg.workers + 1) as u64
+}
+
 /// The engine-reuse contract on `Backend::Cpu`, un-skipped offline: the
 /// full Engine → queue → worker → result-router path with zero PJRT
 /// compiles and a scratch pool that warms at build and stays FLAT across
-/// jobs (zero steady-state allocations per box).
+/// jobs (zero steady-state allocations per box — executor scratch AND
+/// pooled ingest staging alike).
 #[test]
 fn cpu_backend_warm_engine_reuses_pool_across_jobs() {
     let workers = 2;
-    let engine = Engine::from_config(cpu_cfg(workers, FusionMode::Full))
-        .unwrap();
+    let cfg = cpu_cfg(workers, FusionMode::Full);
+    let engine = Engine::from_config(cfg.clone()).unwrap();
     // No artifacts, no PJRT, no compilation — ever.
     assert_eq!(engine.stats().compiles, 0);
     // Each fused worker prewarmed its scratch (carry plane + line
-    // buffers) at spawn.
+    // buffers) at spawn, and the engine prewarmed one job's bound of
+    // pooled staging buffers.
     let warm = engine.stats().pool_allocs;
-    assert_eq!(warm, (workers * 2) as u64);
+    assert_eq!(warm, (workers * 2) as u64 + staging_warm(&cfg));
 
     let (clip, _) = synth_clip(engine.config(), 31);
     let clip = Arc::new(clip);
     let first = engine.batch(clip.clone()).unwrap();
     let second = engine.batch(clip.clone()).unwrap();
 
-    // Warm-pool contracts: zero recompiles AND zero new scratch
-    // allocations across consecutive jobs.
+    // Warm-pool contracts: zero recompiles AND zero new pool
+    // allocations across consecutive jobs — ingest staging included.
     assert_eq!(engine.stats().compiles, 0);
     assert_eq!(
         engine.stats().pool_allocs,
         warm,
-        "steady-state jobs must not allocate pool scratch"
+        "steady-state jobs must not allocate pool scratch or staging"
     );
     // And the jobs are bit-identical.
     assert_eq!(first.binary.data, second.binary.data);

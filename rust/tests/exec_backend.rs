@@ -2,13 +2,14 @@
 //! staging path the scheduler uses (`extract_box_into` → `Executor`).
 //!
 //! The contract: `FusedCpu` (single tiled pass, rolling scratch, at ANY
-//! `intra_box_threads`) and `TwoFusedCpu` (two partitions, one
-//! materialized intermediate) are bit-identical to `StagedCpu`
-//! (materializing kernel-by-kernel chain) — which is itself pinned to
-//! `cpu_ref::pipeline` — over randomized clip shapes, box geometries,
-//! thresholds, band counts (including ones that don't divide the box
-//! height), and box origins, INCLUDING boxes whose halos hang over the
-//! frame border and read edge-replicated (clamped) pixels.
+//! `intra_box_threads` and ANY `Isa` lane backend) and `TwoFusedCpu`
+//! (two partitions, one materialized intermediate) are bit-identical to
+//! `StagedCpu` (materializing kernel-by-kernel chain) — which is itself
+//! pinned to `cpu_ref::pipeline` — over randomized clip shapes, box
+//! geometries, thresholds, band counts (including ones that don't
+//! divide the box height), box widths that exercise the vector
+//! remainder lanes, and box origins, INCLUDING boxes whose halos hang
+//! over the frame border and read edge-replicated (clamped) pixels.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -17,7 +18,9 @@ use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::JobId;
 use kfuse::coordinator::ExecutionPlan;
-use kfuse::exec::{BufferPool, Executor, FusedCpu, StagedCpu, TwoFusedCpu};
+use kfuse::exec::{
+    BufferPool, Executor, FusedCpu, Isa, StagedCpu, TwoFusedCpu,
+};
 use kfuse::fusion::halo::BoxDims;
 use kfuse::prop::{run_prop, Gen};
 use kfuse::video::{BoxTask, Video};
@@ -144,6 +147,87 @@ fn prop_fused_parallel_equals_fused_serial() {
             job.task.t0, job.task.i0, job.task.j0, plan.box_dims
         );
         assert_eq!(a.detect, b.detect);
+    });
+}
+
+/// Tentpole contract: every lane backend this host can run — scalar,
+/// portable, and whatever `std::arch` paths the CPU supports — is
+/// bitwise-identical to the `StagedCpu` scalar oracle for BOTH fused
+/// executors, across output widths chosen so the vector remainder takes
+/// 0, 1, and LANES-1 columns (for both the 4- and 8-lane backends),
+/// uneven band counts, border-clamped boxes, and random thresholds.
+#[test]
+fn prop_every_isa_matches_the_scalar_oracle_bitwise() {
+    let staged = StagedCpu::new();
+    let isas = Isa::all_available();
+    assert!(isas.contains(&Isa::Scalar), "scalar is always available");
+    assert!(isas.contains(&Isa::Portable), "portable is always available");
+    run_prop("ISA x executor == StagedCpu", 30, |g: &mut Gen| {
+        // Output width around the lane counts: ow % 8 hits {0, 1, 7}
+        // and ow % 4 hits {0, 1, 3} across this set; ow = 1 runs the
+        // pure-remainder path.
+        let ow = *g.choose(&[1usize, 7, 8, 9, 15, 16]);
+        let bh = g.usize_in(2, 9);
+        let bt = g.usize_in(1, 3);
+        let h = bh + g.usize_in(0, 4);
+        let w = ow + g.usize_in(0, 4);
+        let t = bt + g.usize_in(1, 2);
+        let clip = Arc::new(random_clip(g, t, h, w));
+        let th = g.f32_in(0.0, 400.0);
+        for mode in [FusionMode::Full, FusionMode::Two] {
+            let plan =
+                ExecutionPlan::resolve(mode, BoxDims::new(bh, ow, bt), true);
+            let job = BoxJob {
+                job_id: JobId(1),
+                task: BoxTask {
+                    id: 0,
+                    t0: *g.choose(&[0, t - bt]),
+                    i0: *g.choose(&[0, h - bh]),
+                    j0: *g.choose(&[0, w - ow]),
+                    dims: plan.box_dims,
+                },
+                clip: clip.clone(),
+                clip_t0: 0,
+                staged: None,
+                enqueued: Instant::now(),
+            };
+            let mut staging = Vec::new();
+            let want = execute_box(&staged, &plan, th, &job, &mut staging)
+                .unwrap();
+            for &isa in &isas {
+                let threads = g.usize_in(1, 4);
+                let pool = BufferPool::shared();
+                let exec: Box<dyn Executor> = match mode {
+                    FusionMode::Full => Box::new(
+                        FusedCpu::with_isa(pool, threads, isa).unwrap(),
+                    ),
+                    _ => Box::new(
+                        TwoFusedCpu::with_isa(pool, threads, isa).unwrap(),
+                    ),
+                };
+                let got =
+                    execute_box(&*exec, &plan, th, &job, &mut staging)
+                        .unwrap();
+                assert_eq!(
+                    got.binary,
+                    want.binary,
+                    "isa={} exec={} threads={threads} ow={ow} bh={bh} \
+                     bt={bt} t0={} i0={} j0={} th={th}",
+                    isa.name(),
+                    exec.name(),
+                    job.task.t0,
+                    job.task.i0,
+                    job.task.j0
+                );
+                assert_eq!(
+                    got.detect,
+                    want.detect,
+                    "detect isa={} exec={} threads={threads} ow={ow}",
+                    isa.name(),
+                    exec.name()
+                );
+            }
+        }
     });
 }
 
