@@ -1,8 +1,12 @@
 //! Fig 16 (ours) — the CPU executor matrix on the exact per-box hot path
 //! the engine's workers run (`scheduler::execute_box`): staged
 //! kernel-by-kernel baseline vs Two-Fusion (one materialized
-//! intermediate) vs the fused single pass, the fused executors swept
-//! over intra-box band thread counts AND lane backends (`--isa`).
+//! intermediate) vs the fused single pass vs the DERIVED executor (the
+//! engine's spec-compiled path), the fused executors swept over
+//! intra-box band thread counts AND lane backends (`--isa`). A second
+//! workload prices the `anomaly` pipeline — derived vs its staged
+//! interpreter — proving the spec-compiled fusion win is not
+//! facial-specific.
 //!
 //! Default workload: 128×128×16 synthetic clip cut into 32×32×8 boxes
 //! (32 boxes). `StagedCpu` materializes every intermediate at full box
@@ -13,15 +17,19 @@
 //! (Figs 10/11/16) is that removing the round-trips buys 2–3×; once the
 //! round-trips are gone the surviving arithmetic is the bottleneck, and
 //! the `--isa` axis measures how much of it the vector layer recovers.
-//! One JSON record per (executor, threads, isa) cell goes to
+//! One JSON record per (pipeline, executor, threads, isa) cell goes to
 //! `BENCH_fused_cpu.json` — the entry point shared by local runs and
 //! the CI `bench-smoke` regression gate. Schema is backward-compatible:
-//! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`) are
-//! additions only.
+//! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`) and
+//! this PR's (`pipeline` per cell, `speedup_derived`) are additions
+//! only.
 //!
 //! Headline numbers:
 //! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
 //!   from SIMD (CI gates >= 1.0).
+//! * `speedup_derived` — derived(1T, scalar) vs staged on the facial
+//!   chain: the spec-COMPILED fused pass must keep the hand-written
+//!   pass's win over the unfused baseline (CI gates >= 1.0).
 //! * `speedup_simd` — fused(1T, portable) vs fused(1T, scalar): the
 //!   vector-layer win on the forced-width path (CI gates >= 1.0;
 //!   runtime-detected paths are report-only — shared runners vary).
@@ -31,7 +39,7 @@
 //! ```text
 //! cargo bench --bench fig16_fused_cpu -- \
 //!     [--frame 128] [--frames 16] [--box 32x32x8] \
-//!     [--threads 1,2,4] [--partition staged,two,fused] \
+//!     [--threads 1,2,4] [--partition staged,two,fused,derived] \
 //!     [--isa scalar,portable,auto]
 //! ```
 
@@ -43,13 +51,17 @@ use kfuse::config::FusionMode;
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::{ExecutionPlan, JobId};
 use kfuse::exec::{
-    BufferPool, Executor, FusedCpu, Isa, StagedCpu, TwoFusedCpu,
+    BufferPool, DerivedCpu, Executor, FusedCpu, Isa, StagedCpu,
+    StagedInterp, TwoFusedCpu,
 };
 use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
 use kfuse::video::{cut_boxes, generate, SynthConfig};
 
-/// One measured (executor, threads, isa) cell.
+/// One measured (pipeline, executor, threads, isa) cell.
 struct Cell {
+    pipeline: &'static str,
     executor: &'static str,
     threads: usize,
     isa: &'static str,
@@ -105,7 +117,14 @@ fn main() {
         );
     let partitions: Vec<String> = flag(&args, "--partition")
         .map_or_else(
-            || vec!["staged".into(), "two".into(), "fused".into()],
+            || {
+                vec![
+                    "staged".into(),
+                    "two".into(),
+                    "fused".into(),
+                    "derived".into(),
+                ]
+            },
             |v| v.split(',').map(str::to_string).collect(),
         );
     // Lane backends to sweep; `auto` resolves to the host's widest.
@@ -164,6 +183,7 @@ fn main() {
                     sweep(&exec, &none, &jobs, &mut staging)
                 });
                 cells.push(Cell {
+                    pipeline: "facial",
                     executor: "staged_cpu",
                     threads: 1,
                     isa: "scalar",
@@ -184,6 +204,7 @@ fn main() {
                             sweep(&exec, &two, &jobs, &mut staging)
                         });
                         cells.push(Cell {
+                            pipeline: "facial",
                             executor: "two_fused_cpu",
                             threads: th,
                             isa: exec.isa().name(),
@@ -206,6 +227,7 @@ fn main() {
                             sweep(&exec, &full, &jobs, &mut staging)
                         });
                         cells.push(Cell {
+                            pipeline: "facial",
                             executor: "fused_cpu",
                             threads: th,
                             isa: exec.isa().name(),
@@ -217,17 +239,98 @@ fn main() {
                     }
                 }
             }
+            "derived" => {
+                for &isa in &isas {
+                    for &th in &threads {
+                        let exec =
+                            DerivedCpu::with_isa(pool.clone(), th, isa)
+                                .unwrap();
+                        exec.prepare(&full).unwrap();
+                        let t = time_fn(3, 25, || {
+                            sweep(&exec, &full, &jobs, &mut staging)
+                        });
+                        cells.push(Cell {
+                            pipeline: "facial",
+                            executor: "derived_cpu",
+                            threads: th,
+                            isa: exec.isa().name(),
+                            ns_per_box: t.median * 1e9 / n,
+                            // The compiled facial {K1..K5} program uses
+                            // the same slab+ring scratch as FusedCpu.
+                            bytes_per_box: FusedCpu::scratch_bytes_banded(
+                                din.x, din.y, th,
+                            ),
+                        });
+                    }
+                }
+            }
             other => panic!(
-                "unknown --partition '{other}' (expected staged|two|fused)"
+                "unknown --partition '{other}' (expected \
+                 staged|two|fused|derived)"
             ),
+        }
+    }
+
+    // Second workload: the anomaly pipeline through the spec-generic
+    // executors — the derived fused pass vs its one-buffer-per-stage
+    // interpreter. Same clip, same box grid; the plan's halo differs
+    // (δ=1,1,1), so execute_box re-extracts per the anomaly plan.
+    let anomaly_full = ExecutionPlan::resolve_spec(
+        kfuse::pipeline::anomaly(),
+        FusionMode::Full,
+        bx,
+        true,
+        InputDims::new(frame, frame, frames),
+        &DeviceSpec::k20(),
+    );
+    let anomaly_none = ExecutionPlan::resolve_spec(
+        kfuse::pipeline::anomaly(),
+        FusionMode::None,
+        bx,
+        true,
+        InputDims::new(frame, frame, frames),
+        &DeviceSpec::k20(),
+    );
+    {
+        let interp = StagedInterp::new();
+        let t = time_fn(3, 25, || {
+            sweep(&interp, &anomaly_none, &jobs, &mut staging)
+        });
+        cells.push(Cell {
+            pipeline: "anomaly",
+            executor: "staged_interp",
+            threads: 1,
+            isa: "scalar",
+            ns_per_box: t.median * 1e9 / n,
+            // Scratch bytes are unmodeled for the spec-generic
+            // executors (report-only cells).
+            bytes_per_box: 0,
+        });
+        for &th in &threads {
+            let exec = DerivedCpu::with_isa(pool.clone(), th, Isa::Scalar)
+                .unwrap();
+            exec.prepare(&anomaly_full).unwrap();
+            let t = time_fn(3, 25, || {
+                sweep(&exec, &anomaly_full, &jobs, &mut staging)
+            });
+            cells.push(Cell {
+                pipeline: "anomaly",
+                executor: "derived_cpu",
+                threads: th,
+                isa: "scalar",
+                ns_per_box: t.median * 1e9 / n,
+                bytes_per_box: 0,
+            });
         }
     }
 
     header(
         "Fig 16 (measured, this host)",
-        "CPU executor matrix: staged vs two-fused vs fused x threads x isa",
+        "CPU executor matrix: staged vs two-fused vs fused vs derived \
+         x threads x isa (+ anomaly pipeline)",
     );
     row(&[
+        format!("{:>8}", "pipeline"),
         format!("{:>14}", "executor"),
         format!("{:>8}", "threads"),
         format!("{:>9}", "isa"),
@@ -236,6 +339,7 @@ fn main() {
     ]);
     for c in &cells {
         row(&[
+            format!("{:>8}", c.pipeline),
             format!("{:>14}", c.executor),
             format!("{:>8}", c.threads),
             format!("{:>9}", c.isa),
@@ -244,16 +348,30 @@ fn main() {
         ]);
     }
 
-    let find = |name: &str, th: usize, isa: &str| {
+    let find_in = |pipe: &str, name: &str, th: usize, isa: &str| {
         cells
             .iter()
             .find(|c| {
-                c.executor == name && c.threads == th && c.isa == isa
+                c.pipeline == pipe
+                    && c.executor == name
+                    && c.threads == th
+                    && c.isa == isa
             })
             .map(|c| c.ns_per_box)
     };
+    let find = |name: &str, th: usize, isa: &str| {
+        find_in("facial", name, th, isa)
+    };
     let staged_ns = find("staged_cpu", 1, "scalar");
     let fused1_scalar = find("fused_cpu", 1, "scalar");
+    // The spec-compiled pass must keep the hand-written pass's win over
+    // the unfused baseline — the CI gate proving the derived executor
+    // did not give the fusion win back.
+    let derived1_scalar = find("derived_cpu", 1, "scalar");
+    let speedup_derived = match (staged_ns, derived1_scalar) {
+        (Some(s), Some(d)) => s / d,
+        _ => 0.0,
+    };
     // Fused-vs-staged on the scalar path: the paper's fusion claim
     // isolated from SIMD, and the original CI tripwire.
     let speedup = match (staged_ns, fused1_scalar) {
@@ -296,6 +414,25 @@ fn main() {
     if speedup_two > 0.0 {
         println!("two-fused(1T, scalar) vs staged speedup: {speedup_two:.2}x");
     }
+    if speedup_derived > 0.0 {
+        println!(
+            "derived(1T, scalar) vs staged speedup: {speedup_derived:.2}x \
+             (spec-compiled fused pass)"
+        );
+    }
+    let speedup_anomaly = match (
+        find_in("anomaly", "staged_interp", 1, "scalar"),
+        find_in("anomaly", "derived_cpu", 1, "scalar"),
+    ) {
+        (Some(s), Some(d)) => s / d,
+        _ => 0.0,
+    };
+    if speedup_anomaly > 0.0 {
+        println!(
+            "anomaly derived(1T) vs staged interp speedup: \
+             {speedup_anomaly:.2}x (report-only)"
+        );
+    }
     if speedup_simd > 0.0 {
         println!(
             "fused(1T) portable vs scalar speedup: {speedup_simd:.2}x \
@@ -327,15 +464,17 @@ fn main() {
         .iter()
         .map(|c| {
             // Per-cell SIMD speedup vs the scalar cell of the same
-            // (executor, threads) — 0.0 when no scalar twin ran.
-            let simd = find(c.executor, c.threads, "scalar")
+            // (pipeline, executor, threads) — 0.0 when no scalar twin
+            // ran.
+            let simd = find_in(c.pipeline, c.executor, c.threads, "scalar")
                 .map_or(0.0, |s| s / c.ns_per_box);
             format!(
-                "    {{\"executor\": \"{}\", \"threads\": {}, \
+                "    {{\"pipeline\": \"{}\", \"executor\": \"{}\", \
+                 \"threads\": {}, \
                  \"isa\": \"{}\", \"ns_per_box\": {:.0}, \
                  \"intermediate_bytes_per_box\": {}, \
                  \"speedup_simd\": {:.3}}}",
-                c.executor, c.threads, c.isa, c.ns_per_box,
+                c.pipeline, c.executor, c.threads, c.isa, c.ns_per_box,
                 c.bytes_per_box, simd
             )
         })
@@ -347,6 +486,8 @@ fn main() {
          \"speedup\": {speedup:.3},\n  \
          \"speedup_two_fused\": {speedup_two:.3},\n  \
          \"speedup_parallel\": {speedup_parallel:.3},\n  \
+         \"speedup_derived\": {speedup_derived:.3},\n  \
+         \"speedup_anomaly\": {speedup_anomaly:.3},\n  \
          \"speedup_simd\": {speedup_simd:.3}\n}}\n",
         bx.x,
         bx.y,

@@ -52,11 +52,11 @@ pub enum Backend {
     /// AOT PJRT artifacts (the measured "GPU" stand-in). Needs
     /// `artifacts/` from `make artifacts`.
     Pjrt,
-    /// Native CPU executors from [`crate::exec`], selected by the plan's
-    /// partition: `Full` lowers to the fused single-pass `FusedCpu`,
-    /// `Two` to the two-partition `TwoFusedCpu` (one materialized
-    /// intermediate), `None` to the kernel-by-kernel `StagedCpu`
-    /// baseline. Always available — no artifacts, no compilation.
+    /// The native derived executor from [`crate::exec`]: the plan's
+    /// pipeline spec and DP-chosen partition are compiled into banded
+    /// fused segment programs (`DerivedCpu`), so any registered
+    /// pipeline and any partition runs. Always available — no
+    /// artifacts, no compilation.
     Cpu,
 }
 
@@ -134,6 +134,13 @@ pub struct RunConfig {
     pub fps: f64,
     /// Fusion arm.
     pub mode: FusionMode,
+    /// Registered pipeline the engine plans and executes (CLI
+    /// `--pipeline`; see [`crate::pipeline::by_name`]). Default
+    /// `"facial"`, the paper's K1..K5 chain; `"anomaly"` runs the
+    /// frame-diff detector through the same planner and derived
+    /// executor. `Backend::Pjrt` artifacts only exist for the facial
+    /// chain, so any other pipeline requires `Backend::Cpu`.
+    pub pipeline: String,
     /// Output box dims (spatial must divide frame size for full coverage).
     pub box_dims: BoxDims,
     /// Worker threads ("SMs") executing boxes.
@@ -196,6 +203,7 @@ impl Default for RunConfig {
             frames: 64,
             fps: 600.0,
             mode: FusionMode::Full,
+            pipeline: "facial".into(),
             box_dims: BoxDims::new(32, 32, 8),
             workers: 1,
             intra_box_threads: 1,
@@ -257,6 +265,16 @@ impl RunConfig {
         // instead of inside a worker spawn.
         crate::gpusim::device::DeviceSpec::by_name(&self.device)?;
         self.isa.resolve()?;
+        // And the pipeline: a typo'd --pipeline fails here, and the PJRT
+        // artifact chain only exists for the facial pipeline.
+        crate::pipeline::by_name(&self.pipeline)?;
+        if self.backend == Backend::Pjrt && self.pipeline != "facial" {
+            return Err(Error::Config(format!(
+                "pipeline '{}' requires --backend cpu (PJRT artifacts \
+                 exist for the facial chain only)",
+                self.pipeline
+            )));
+        }
         Ok(())
     }
 }
@@ -349,6 +367,29 @@ mod tests {
         };
         assert_eq!(cfg.validate().is_ok(), Isa::Avx2.available());
         assert!(Isa::parse("altivec").is_err());
+    }
+
+    #[test]
+    fn pipeline_is_validated_with_the_config() {
+        let cfg = RunConfig {
+            pipeline: "tracking".into(),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err(), "unknown pipeline rejected");
+        // Non-facial pipelines have no PJRT artifacts: Cpu only.
+        let cfg = RunConfig {
+            pipeline: "anomaly".into(),
+            backend: Backend::Pjrt,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().err().unwrap();
+        assert!(format!("{err}").contains("backend cpu"), "{err}");
+        let cfg = RunConfig {
+            pipeline: "anomaly".into(),
+            backend: Backend::Cpu,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

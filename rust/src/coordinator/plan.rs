@@ -1,24 +1,28 @@
-//! Execution plans: resolve a fusion arm + box geometry to the partition
-//! each backend executes and the artifact chain each worker dispatches
-//! per box.
+//! Execution plans: resolve a pipeline spec + fusion arm + box geometry
+//! to the partition each backend executes and the artifact chain each
+//! worker dispatches per box.
 //!
 //! Partition selection FLOWS FROM the planner's interval DP
 //! ([`crate::fusion::dp`]) instead of being hardcoded per backend: every
 //! arm's partition is the DP solution over the Fig 5 set-partitioning
 //! model with the candidate columns restricted to that arm's shape
-//! (`Auto` solves unrestricted and executes whatever wins). Backends
-//! then dispatch on [`ExecutionPlan::partition`] — the CPU side picks
-//! `FusedCpu` / `TwoFusedCpu` / `StagedCpu` by partition shape, the PJRT
-//! side maps the effective arm to its artifact set.
+//! (`Auto` solves unrestricted and executes whatever wins). The model is
+//! built from the plan's [`PipelineSpec`] — any registered pipeline
+//! plans through the same DP. Backends then dispatch on
+//! [`ExecutionPlan::partition`]: the CPU side compiles the partition
+//! into derived fused segments (`exec::DerivedCpu`), the PJRT side maps
+//! the effective arm to its artifact set (facial pipeline only — the
+//! artifact registry predates the spec layer).
 
 use crate::config::FusionMode;
 use crate::fusion::candidates::Segment;
 use crate::fusion::dp::solve_dp;
 use crate::fusion::halo::BoxDims;
 use crate::fusion::ilp::Model;
-use crate::fusion::kernel_ir::{paper_fusable_run, Radii};
+use crate::fusion::kernel_ir::Radii;
 use crate::fusion::traffic::InputDims;
 use crate::gpusim::device::DeviceSpec;
+use crate::pipeline::PipelineSpec;
 use crate::runtime::Manifest;
 
 /// One dispatch in the per-box chain.
@@ -33,41 +37,61 @@ pub struct Stage {
 /// The resolved per-box execution chain for one fusion arm.
 #[derive(Debug, Clone)]
 pub struct ExecutionPlan {
+    /// The pipeline this plan executes — the single source of truth for
+    /// stage kinds, names, radii, and flops. The derived CPU executor
+    /// compiles its segment programs from this.
+    pub spec: PipelineSpec,
     /// The requested arm (may be [`FusionMode::Auto`]).
     pub mode: FusionMode,
     /// The concrete arm the partition maps to — what actually executes
     /// (never `Auto`).
     pub effective: FusionMode,
-    /// The DP-selected partition of the K1..K5 run, in execution order.
+    /// The DP-selected partition of the fusable run, in execution order.
     /// Backends dispatch on this, not on the mode enum.
     pub partition: Vec<Segment>,
     /// Output-box geometry.
     pub box_dims: BoxDims,
-    /// Input halo of the whole chain (cumulative: dx=dy=2, dt=1).
+    /// Input halo of the whole chain (the spec's cumulative radii; for
+    /// the facial pipeline dx=dy=2, dt=1).
     pub halo: Radii,
-    /// Stages in dispatch order.
+    /// PJRT stages in dispatch order (facial pipeline only; empty for
+    /// spec-only pipelines, which run on the CPU backend).
     pub stages: Vec<Stage>,
-    /// Detection artifact appended after the chain (optional).
+    /// Detection artifact appended after the chain (optional; only for
+    /// specs whose fusable run ends in a threshold stage).
     pub detect: Option<String>,
 }
 
-/// The canonical segment list of one concrete arm.
-fn arm_segments(mode: FusionMode) -> Vec<Segment> {
+/// The canonical segment list of one concrete arm over `spec`'s fusable
+/// run: `None` = one segment per stage, `Two` = cut at the spec's
+/// first-stencil boundary, `Full` = everything in one segment.
+fn arm_segments(mode: FusionMode, spec: &PipelineSpec) -> Vec<Segment> {
+    let n = spec.len();
     match mode {
-        FusionMode::None => (0..5).map(|k| Segment { start: k, len: 1 }).collect(),
-        FusionMode::Two => vec![
-            Segment { start: 0, len: 2 },
-            Segment { start: 2, len: 3 },
-        ],
-        FusionMode::Full => vec![Segment { start: 0, len: 5 }],
+        FusionMode::None => (0..n).map(|k| Segment { start: k, len: 1 }).collect(),
+        FusionMode::Two => {
+            let cut = spec.two_fusion_cut();
+            if cut >= n {
+                vec![Segment { start: 0, len: n }]
+            } else {
+                vec![
+                    Segment { start: 0, len: cut },
+                    Segment {
+                        start: cut,
+                        len: n - cut,
+                    },
+                ]
+            }
+        }
+        FusionMode::Full => vec![Segment { start: 0, len: n }],
         FusionMode::Auto => unreachable!("Auto has no canonical partition"),
     }
 }
 
 /// Map a partition back to the concrete arm it belongs to (if any).
-fn arm_of(segs: &[Segment]) -> Option<FusionMode> {
+fn arm_of(segs: &[Segment], spec: &PipelineSpec) -> Option<FusionMode> {
     for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
-        if segs == arm_segments(arm).as_slice() {
+        if segs == arm_segments(arm, spec).as_slice() {
             return Some(arm);
         }
     }
@@ -77,8 +101,12 @@ fn arm_of(segs: &[Segment]) -> Option<FusionMode> {
 /// Solve the partition DP with columns restricted to one arm's canonical
 /// segments. `None` when the cost model prices the arm infeasible on the
 /// planning device.
-fn solve_arm(arm: FusionMode, model: &Model) -> Option<(Vec<Segment>, f64)> {
-    let allowed = arm_segments(arm);
+fn solve_arm(
+    arm: FusionMode,
+    model: &Model,
+    spec: &PipelineSpec,
+) -> Option<(Vec<Segment>, f64)> {
+    let allowed = arm_segments(arm, spec);
     let cols: Vec<(Segment, f64)> = model
         .columns
         .iter()
@@ -97,17 +125,18 @@ fn solve_arm(arm: FusionMode, model: &Model) -> Option<(Vec<Segment>, f64)> {
 fn select_partition(
     mode: FusionMode,
     model: &Model,
+    spec: &PipelineSpec,
 ) -> (Vec<Segment>, FusionMode) {
     match mode {
         FusionMode::Auto => {
             if let Some((segs, _)) = solve_dp(model) {
-                if let Some(arm) = arm_of(&segs) {
+                if let Some(arm) = arm_of(&segs, spec) {
                     return (segs, arm);
                 }
             }
             let mut best: Option<(f64, FusionMode)> = None;
             for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
-                if let Some((_, obj)) = solve_arm(arm, model) {
+                if let Some((_, obj)) = solve_arm(arm, model, spec) {
                     let better = match best {
                         None => true,
                         Some((b, _)) => obj < b,
@@ -118,11 +147,11 @@ fn select_partition(
                 }
             }
             let arm = best.map_or(FusionMode::Full, |(_, a)| a);
-            (arm_segments(arm), arm)
+            (arm_segments(arm, spec), arm)
         }
         arm => {
-            let segs = solve_arm(arm, model)
-                .map_or_else(|| arm_segments(arm), |(s, _)| s);
+            let segs = solve_arm(arm, model, spec)
+                .map_or_else(|| arm_segments(arm, spec), |(s, _)| s);
             (segs, arm)
         }
     }
@@ -147,9 +176,8 @@ impl ExecutionPlan {
         )
     }
 
-    /// Build the plan against an explicit planning instance: the
-    /// partition comes out of the interval DP over the Fig 5 model built
-    /// for `(input, dev)` (see the module docs for the selection rules).
+    /// Build the plan against an explicit planning instance with the
+    /// paper's facial pipeline (the PJRT-capable chain).
     pub fn resolve_on(
         mode: FusionMode,
         box_dims: BoxDims,
@@ -157,32 +185,64 @@ impl ExecutionPlan {
         input: InputDims,
         dev: &DeviceSpec,
     ) -> ExecutionPlan {
+        ExecutionPlan::resolve_spec(
+            crate::pipeline::facial(),
+            mode,
+            box_dims,
+            with_detect,
+            input,
+            dev,
+        )
+    }
+
+    /// Build the plan for an arbitrary registered pipeline: the
+    /// partition comes out of the interval DP over the Fig 5 model built
+    /// from `spec.kernel_run()` for `(input, dev)` (see the module docs
+    /// for the selection rules). PJRT artifact stages are attached for
+    /// the facial pipeline only; the detect reduction is attached when
+    /// `with_detect` and the spec ends in a threshold stage.
+    pub fn resolve_spec(
+        spec: PipelineSpec,
+        mode: FusionMode,
+        box_dims: BoxDims,
+        with_detect: bool,
+        input: InputDims,
+        dev: &DeviceSpec,
+    ) -> ExecutionPlan {
         assert_eq!(box_dims.x, box_dims.y, "boxes are square (paper eq 4)");
-        let run = paper_fusable_run();
+        let run = spec.kernel_run();
         let model = Model::build(&run, input, box_dims, dev);
-        let (partition, effective) = select_partition(mode, &model);
+        let (partition, effective) = select_partition(mode, &model, &spec);
         let (s, t) = (box_dims.x, box_dims.t);
-        let stages = Manifest::arm_artifacts(effective, s, t)
-            .into_iter()
-            .map(|artifact| {
-                // k5, two_b and full take the threshold scalar.
-                let takes_threshold = artifact.starts_with("k5_")
-                    || artifact.starts_with("two_b_")
-                    || artifact.starts_with("full_");
-                Stage {
-                    artifact,
-                    takes_threshold,
-                }
-            })
-            .collect();
+        let stages = if spec.name == "facial" {
+            Manifest::arm_artifacts(effective, s, t)
+                .into_iter()
+                .map(|artifact| {
+                    // k5, two_b and full take the threshold scalar.
+                    let takes_threshold = artifact.starts_with("k5_")
+                        || artifact.starts_with("two_b_")
+                        || artifact.starts_with("full_");
+                    Stage {
+                        artifact,
+                        takes_threshold,
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let detect = (with_detect && spec.ends_with_threshold())
+            .then(|| Manifest::detect_artifact(s, t));
+        let halo = spec.halo();
         ExecutionPlan {
+            spec,
             mode,
             effective,
             partition,
             box_dims,
-            halo: Radii::new(2, 2, 1),
+            halo,
             stages,
-            detect: with_detect.then(|| Manifest::detect_artifact(s, t)),
+            detect,
         }
     }
 
@@ -206,9 +266,20 @@ impl ExecutionPlan {
             .collect()
     }
 
-    /// Kernel launches per box (for the dispatch metric).
+    /// Spec-derived segment labels, one per partition entry, e.g.
+    /// `["{rgbToGray..IIRFilter}", "{GaussianFilter..Threshold}"]` —
+    /// the per-partition row names `EngineStats` displays.
+    pub fn partition_stage_names(&self) -> Vec<String> {
+        self.partition
+            .iter()
+            .map(|s| self.spec.segment_label(s.start, s.len))
+            .collect()
+    }
+
+    /// Kernel launches per box (for the dispatch metric): one per
+    /// partition segment plus the detect reduction.
     pub fn dispatches_per_box(&self) -> u64 {
-        self.stages.len() as u64 + self.detect.is_some() as u64
+        self.partition.len() as u64 + self.detect.is_some() as u64
     }
 }
 
@@ -246,6 +317,13 @@ mod tests {
         assert!(p.stages[1].takes_threshold);
         assert_eq!(p.partition_shape(), vec![2, 3]);
         assert_eq!(p.partition_names(), "{K1..K2}{K3..K5}");
+        assert_eq!(
+            p.partition_stage_names(),
+            [
+                "{rgbToGray..IIRFilter}",
+                "{GaussianFilter..Threshold}"
+            ]
+        );
     }
 
     #[test]
@@ -255,20 +333,19 @@ mod tests {
         assert_ne!(p.effective, FusionMode::Auto);
         // Whatever the DP picked, the partition maps to the effective
         // arm and the dispatch chain matches it one stage per segment.
-        assert_eq!(p.partition, arm_segments(p.effective));
+        assert_eq!(p.partition, arm_segments(p.effective, &p.spec));
         assert_eq!(p.stages.len(), p.partition.len());
         // And the choice is DP-optimal among the executable arms: no
         // restricted arm solve beats the unrestricted winner.
-        let run = paper_fusable_run();
         let model = Model::build(
-            &run,
+            &p.spec.kernel_run(),
             InputDims::new(256, 256, 1000),
             BoxDims::new(32, 32, 8),
             &DeviceSpec::k20(),
         );
-        let chosen = solve_arm(p.effective, &model).unwrap().1;
+        let chosen = solve_arm(p.effective, &model, &p.spec).unwrap().1;
         for arm in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
-            if let Some((_, obj)) = solve_arm(arm, &model) {
+            if let Some((_, obj)) = solve_arm(arm, &model, &p.spec) {
                 assert!(
                     chosen <= obj + 1e-12,
                     "{:?} beats chosen {:?}",
@@ -277,6 +354,61 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn anomaly_pipeline_plans_through_the_same_dp() {
+        // The 3-stage anomaly spec planned for every arm: None = three
+        // singletons, Two cuts before the first stencil, Full fuses all;
+        // halo, labels, and detect all derive from the spec.
+        let spec = crate::pipeline::anomaly();
+        let input = InputDims::new(64, 64, 16);
+        let dev = DeviceSpec::k20();
+        let bx = BoxDims::new(16, 16, 8);
+        for (mode, shape) in [
+            (FusionMode::None, vec![1, 1, 1]),
+            (FusionMode::Two, vec![1, 2]),
+            (FusionMode::Full, vec![3]),
+        ] {
+            let p = ExecutionPlan::resolve_spec(
+                spec.clone(),
+                mode,
+                bx,
+                true,
+                input,
+                &dev,
+            );
+            assert_eq!(p.partition_shape(), shape, "{mode:?}");
+            assert_eq!(p.halo, Radii::new(1, 1, 1));
+            assert_eq!(p.spec.name, "anomaly");
+            // No PJRT artifacts for spec-only pipelines, but the detect
+            // reduction still rides on the trailing threshold stage.
+            assert!(p.stages.is_empty());
+            assert!(p.detect.is_some());
+            assert_eq!(
+                p.dispatches_per_box(),
+                shape.len() as u64 + 1
+            );
+        }
+        let p = ExecutionPlan::resolve_spec(
+            spec.clone(),
+            FusionMode::Two,
+            bx,
+            false,
+            input,
+            &dev,
+        );
+        assert_eq!(
+            p.partition_stage_names(),
+            ["{FrameDiff}", "{GaussianFilter..Threshold}"]
+        );
+        assert!(p.detect.is_none());
+        // Auto resolves to a concrete arm for this spec too.
+        let p = ExecutionPlan::resolve_spec(
+            spec, FusionMode::Auto, bx, true, input, &dev,
+        );
+        assert_ne!(p.effective, FusionMode::Auto);
+        assert_eq!(p.partition, arm_segments(p.effective, &p.spec));
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! [`WorkerEvent`] to its owning job through the [`ResultRouter`].
 //!
 //! Workers are PERSISTENT: they run `Executor::prepare` once at spawn —
-//! PJRT compilation for `Backend::Pjrt`, scratch-pool prewarm for
-//! `Backend::Cpu` — and then service jobs until the queue closes at
+//! PJRT compilation for `Backend::Pjrt`; segment-program compilation and
+//! scratch-pool prewarm for `Backend::Cpu` (the derived executor lowers
+//! the plan's spec + partition there, see `exec::derived`) — and then
+//! service jobs until the queue closes at
 //! engine shutdown. Prepared state therefore survives across jobs — the
 //! amortization the paper's 600–1000 fps streaming scenario depends on.
 //! A box that fails mid-job is reported as an `Err` event; the worker

@@ -91,6 +91,31 @@ pub fn gradient3(x: &[f32], t: usize, h: usize, w: usize) -> Vec<f32> {
     out
 }
 
+/// Frame-diff head of the anomaly pipeline:
+/// (T,H,W,4) RGBA -> (T-1,H,W), |luma(x[t]) - luma(x[t-1])| per pixel.
+pub fn frame_diff(x: &[f32], t: usize, h: usize, w: usize) -> Vec<f32> {
+    assert!(t >= 2);
+    assert_eq!(x.len(), t * h * w * 4);
+    let plane = h * w;
+    let luma_px = |px: &[f32]| {
+        LUMA[0] * px[0] + LUMA[1] * px[1] + LUMA[2] * px[2]
+    };
+    let mut out = vec![0.0; (t - 1) * plane];
+    for ft in 1..t {
+        let prev = &x[(ft - 1) * plane * 4..ft * plane * 4];
+        let cur = &x[ft * plane * 4..(ft + 1) * plane * 4];
+        let dst = &mut out[(ft - 1) * plane..ft * plane];
+        for ((d, c), p) in dst
+            .iter_mut()
+            .zip(cur.chunks_exact(4))
+            .zip(prev.chunks_exact(4))
+        {
+            *d = (luma_px(c) - luma_px(p)).abs();
+        }
+    }
+    out
+}
+
 /// K5: binarize to {0, 255}.
 pub fn threshold(x: &[f32], th: f32) -> Vec<f32> {
     x.iter()
@@ -143,6 +168,26 @@ mod tests {
         let want = 255.0 * (LUMA[0] + LUMA[1] + LUMA[2]);
         for v in g {
             assert!((v - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn frame_diff_is_abs_luma_delta() {
+        // Frame 0 all-black, frame 1 all-white: the diff is the luma of
+        // white everywhere; a third identical frame diffs to zero.
+        let (t, h, w) = (3, 2, 2);
+        let mut x = vec![0.0; t * h * w * 4];
+        for px in x[h * w * 4..].chunks_exact_mut(4) {
+            px.copy_from_slice(&[255.0, 255.0, 255.0, 255.0]);
+        }
+        let d = frame_diff(&x, t, h, w);
+        assert_eq!(d.len(), (t - 1) * h * w);
+        let white = 255.0 * (LUMA[0] + LUMA[1] + LUMA[2]);
+        for &v in &d[..h * w] {
+            assert!((v - white).abs() < 1e-3);
+        }
+        for &v in &d[h * w..] {
+            assert_eq!(v, 0.0);
         }
     }
 

@@ -2,4 +2,7 @@
 
 pub mod kernels;
 
-pub use kernels::{detect, gaussian3, gradient3, iir, pipeline, rgb2gray, threshold};
+pub use kernels::{
+    detect, frame_diff, gaussian3, gradient3, iir, pipeline, rgb2gray,
+    threshold,
+};

@@ -51,6 +51,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Registered pipeline the engine plans and executes (`"facial"` —
+    /// the default paper chain — or `"anomaly"`; see
+    /// [`crate::pipeline::names`]). Non-facial pipelines need
+    /// `Backend::Cpu` (no PJRT artifacts exist for them).
+    pub fn pipeline(mut self, name: impl Into<String>) -> Self {
+        self.cfg.pipeline = name.into();
+        self
+    }
+
     /// Output-box geometry (must match an emitted artifact set).
     pub fn box_dims(mut self, dims: BoxDims) -> Self {
         self.cfg.box_dims = dims;
@@ -164,6 +173,7 @@ mod tests {
             .artifacts("elsewhere")
             .backend(Backend::Cpu)
             .mode(FusionMode::Two)
+            .pipeline("anomaly")
             .box_dims(BoxDims::new(16, 16, 8))
             .workers(3)
             .intra_box_threads(2)
@@ -181,6 +191,7 @@ mod tests {
         assert_eq!(cfg.artifacts_dir, "elsewhere");
         assert_eq!(cfg.backend, Backend::Cpu);
         assert_eq!(cfg.mode, FusionMode::Two);
+        assert_eq!(cfg.pipeline, "anomaly");
         assert_eq!(cfg.box_dims, BoxDims::new(16, 16, 8));
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.intra_box_threads, 2);

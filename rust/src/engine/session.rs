@@ -220,11 +220,14 @@ impl Engine {
             Backend::Cpu => Arc::new(Manifest::default()),
         };
         // Partition selection flows from the planner's DP solve over
-        // this config's input instance ON THE CONFIGURED DEVICE (see
-        // ExecutionPlan::resolve_on): `--device` changes what
-        // FusionMode::Auto picks.
+        // the configured pipeline's kernel run and this config's input
+        // instance ON THE CONFIGURED DEVICE (see
+        // ExecutionPlan::resolve_spec): `--pipeline` changes what chain
+        // is planned, `--device` changes what FusionMode::Auto picks.
         let device = DeviceSpec::by_name(&cfg.device)?;
-        let plan = Arc::new(ExecutionPlan::resolve_on(
+        let spec = crate::pipeline::by_name(&cfg.pipeline)?;
+        let plan = Arc::new(ExecutionPlan::resolve_spec(
+            spec,
             cfg.mode,
             cfg.box_dims,
             true,
@@ -314,13 +317,12 @@ impl Engine {
     /// count (both settle at build time and must not grow afterwards —
     /// the warm-pool and zero-allocation steady-state contracts).
     pub fn stats(&self) -> EngineStats {
-        // Only the fused CPU executors band boxes (and run the vector
-        // layer); PJRT and the staged baseline ignore intra_box_threads
-        // and isa, so report the neutral values there instead of knobs
-        // that never ran.
-        let cpu_fused = self.core.cfg.backend == Backend::Cpu
-            && self.core.plan.partition.iter().any(|s| s.len > 1);
-        let bands = if cpu_fused {
+        // The derived CPU executor bands every box and runs the vector
+        // layer whatever the partition shape; PJRT ignores
+        // intra_box_threads and isa, so report the neutral values there
+        // instead of knobs that never ran.
+        let cpu = self.core.cfg.backend == Backend::Cpu;
+        let bands = if cpu {
             crate::exec::split_rows(
                 self.core.cfg.box_dims.x,
                 self.core.cfg.intra_box_threads,
@@ -333,7 +335,9 @@ impl Engine {
             compiles: self.core.compiles.load(Ordering::Relaxed),
             pool_allocs: self.core.pool.allocations(),
             bands,
-            isa: if cpu_fused { self.core.isa.name() } else { "" },
+            isa: if cpu { self.core.isa.name() } else { "" },
+            pipeline: self.core.plan.spec.name,
+            partition_labels: self.core.plan.partition_stage_names(),
             ..self.core.totals.lock().unwrap().clone()
         }
     }

@@ -96,6 +96,16 @@ pub struct EngineStats {
     /// CPU executor runs (PJRT backend, or the staged partition, which
     /// stays on the scalar oracle).
     pub isa: &'static str,
+    /// Name of the registered pipeline the session plans and executes
+    /// (`"facial"`, `"anomaly"`, …): `RunConfig::pipeline` as resolved
+    /// into the plan's spec. Empty only on a default-constructed stats
+    /// value.
+    pub pipeline: &'static str,
+    /// Spec-derived label of each executed partition, aligned with
+    /// [`partition_nanos`](EngineStats::partition_nanos) (e.g.
+    /// `["{rgbToGray..IIRFilter}", "{Gaussian..Threshold}"]` for Two
+    /// Fusion on the facial chain).
+    pub partition_labels: Vec<String>,
     /// Cumulative wall nanos per executed partition across every job
     /// (e.g. `[{K1,K2}, {K3..K5}]` for Two Fusion; one entry for the
     /// all-fused pass; empty when the backend doesn't track them).
@@ -127,11 +137,21 @@ impl std::fmt::Display for EngineStats {
         if !self.isa.is_empty() {
             write!(f, " | isa {}", self.isa)?;
         }
+        if !self.pipeline.is_empty() {
+            write!(f, " | pipeline {}", self.pipeline)?;
+        }
         if !self.partition_nanos.is_empty() {
             let ms: Vec<String> = self
                 .partition_nanos
                 .iter()
-                .map(|ns| format!("{:.1}", *ns as f64 / 1e6))
+                .enumerate()
+                .map(|(k, ns)| {
+                    let ms = *ns as f64 / 1e6;
+                    match self.partition_labels.get(k) {
+                        Some(label) => format!("{label} {ms:.1}"),
+                        None => format!("{ms:.1}"),
+                    }
+                })
                 .collect();
             write!(f, " | partition ms [{}]", ms.join(", "))?;
         }
@@ -190,6 +210,29 @@ mod tests {
         assert!(text.contains("| isa avx2"), "{text}");
         let bare = format!("{}", EngineStats::default());
         assert!(!bare.contains("isa"), "{bare}");
+    }
+
+    #[test]
+    fn display_labels_partitions_and_names_the_pipeline() {
+        let s = EngineStats {
+            pipeline: "anomaly",
+            partition_labels: vec![
+                "{FrameDiff..Gaussian}".into(),
+                "{Threshold}".into(),
+            ],
+            partition_nanos: vec![1_500_000, 2_500_000],
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("| pipeline anomaly"), "{text}");
+        assert!(
+            text.contains(
+                "partition ms [{FrameDiff..Gaussian} 1.5, {Threshold} 2.5]"
+            ),
+            "{text}"
+        );
+        let bare = format!("{}", EngineStats::default());
+        assert!(!bare.contains("pipeline"), "{bare}");
     }
 
     #[test]

@@ -1,0 +1,1004 @@
+//! The derived CPU executor: fused banded segment programs compiled at
+//! runtime from a [`PipelineSpec`] and the DP-chosen partition.
+//!
+//! The hand-written executors ([`FusedCpu`](super::FusedCpu),
+//! [`TwoFusedCpu`](super::TwoFusedCpu), [`StagedCpu`](super::StagedCpu))
+//! each implement ONE partition of ONE pipeline. This module implements
+//! the transformation itself: given any validated spec (the grammar
+//! `(Luma|FrameDiff) Iir? Stencil{0..2} Threshold?`) and ANY contiguous
+//! partition of its fusable run, [`DerivedCpu`] compiles each segment
+//! into a [`SegProg`] — a head op, a stencil cascade, and an optional
+//! threshold fold — and executes it with exactly the machinery the
+//! hand-written fused pass uses:
+//!
+//! * temporal heads (luma+IIR, IIR, frame diff) keep one frame of
+//!   history in a per-band **carry slab** sized `(band rows + halo) × w`;
+//! * a two-stencil cascade rolls the first stencil's output through a
+//!   **3-line ring buffer** (the shared-memory tile analogue) feeding
+//!   the second stencil row by row;
+//! * a trailing threshold folds into the final stencil's row loop
+//!   (`sobel_row`) or runs over a **one-row temp** (`smooth3` →
+//!   `thresh_row`), accumulating the per-frame detect reduction in the
+//!   same pass;
+//! * segments communicate through pooled full-size intermediates — the
+//!   global-memory round-trips the paper's model charges a partition
+//!   boundary for, and nothing else ever materializes.
+//!
+//! Segment programs, band decompositions, and every pool checkout (slabs,
+//! rings, row temps, intermediates) are compiled once per plan at
+//! [`Executor::prepare`] and held for the executor's lifetime, so the
+//! zero-allocation steady-state contract of the hand-written passes
+//! carries over unchanged (`tests/engine_reuse.rs`).
+//!
+//! **Bit-identity contract.** Every emitted program matches the staged
+//! per-stage interpreter ([`StagedInterp`](super::StagedInterp), i.e. the
+//! `cpu_ref` chain) bit for bit at any band count, ISA, and partition:
+//! the row loops call the same [`LaneKernels`] entry points in the same
+//! order as the hand-written passes, detect partials use global row
+//! indices and exact-integer folding (see `bands::merge_detect`), and the
+//! facial `{K1..K5}` program is operation-for-operation the
+//! [`FusedCpu`](super::FusedCpu) loop. Property-tested across the full
+//! (pipeline × partition × bands × ISA × width) matrix in
+//! `tests/pipeline_derived.rs`.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::fusion::candidates::Segment;
+use crate::fusion::halo::BoxDims;
+use crate::fusion::kernel_ir::Radii;
+use crate::pipeline::{PipelineSpec, StageKind};
+use crate::Result;
+
+use super::bands::{
+    band_views, detect_partials, merge_detect, split_rows, Band, BandPool,
+};
+use super::pool::{BufferPool, PoolBuf};
+use super::simd::{Isa, LaneKernels};
+use super::{check_spec_input, BoxOutput, Executor};
+
+/// The head of a segment program: how the segment's (gray) row stream is
+/// produced before the stencil cascade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Head {
+    /// Segment starts at a stencil or threshold stage: rows come
+    /// straight from the previous segment's materialized intermediate.
+    None,
+    /// Pointwise RGBA → luma, one frame at a time (a `{Luma}` segment
+    /// cut off from its IIR successor).
+    Luma,
+    /// Fused luma + IIR carry (the facial pipeline's K1+K2 prologue):
+    /// warm start `y[-1] = luma(x[0])`, then `c = α·luma(x) + (1−α)·c`.
+    LumaIir,
+    /// IIR over an already-materialized gray plane (an `{IIRFilter}`
+    /// segment after a partition cut).
+    Iir,
+    /// `|luma(x[t]) − luma(x[t−1])|` — the anomaly pipeline's temporal
+    /// head; reads two RGBA frames, carries no state.
+    FrameDiff,
+}
+
+impl Head {
+    /// Whether the head consumes one frame of history (output has one
+    /// frame fewer than input).
+    fn temporal(self) -> bool {
+        matches!(self, Head::LumaIir | Head::Iir | Head::FrameDiff)
+    }
+
+    /// Whether the head reads 4-channel RGBA input (else 1-channel gray).
+    fn reads_rgba(self) -> bool {
+        matches!(self, Head::Luma | Head::LumaIir | Head::FrameDiff)
+    }
+}
+
+/// One 3×3 stencil op of a segment's cascade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StencilOp {
+    /// Binomial smoothing (`GaussianFilter`).
+    Smooth,
+    /// Sobel L1 gradient magnitude (`GradientOperation`).
+    Sobel,
+}
+
+/// The compiled program for one partition segment: what to run and the
+/// exact geometry it runs over.
+#[derive(Debug)]
+struct SegProg {
+    head: Head,
+    /// Stencil cascade after the head, at most two deep (the rolling
+    /// 3-line window supports one producer/consumer pair).
+    stencils: Vec<StencilOp>,
+    /// Whether the segment ends in the threshold stage (detect folds
+    /// here when the plan requests it).
+    thresh: bool,
+    t_in: usize,
+    h_in: usize,
+    w_in: usize,
+    t_out: usize,
+    h_out: usize,
+    w_out: usize,
+}
+
+impl SegProg {
+    /// Stencil depth (0..=2); each level shrinks the frame by 2 in both
+    /// spatial axes and adds 2 halo rows to every band.
+    fn m(&self) -> usize {
+        self.stencils.len()
+    }
+
+    /// Carry/luma slab: any head needs one, except when the head can
+    /// write its rows straight into the segment output (pure pointwise
+    /// segment with no threshold and no carry to keep).
+    fn needs_slab(&self) -> bool {
+        match self.head {
+            Head::None => false,
+            Head::LumaIir | Head::Iir => true,
+            Head::Luma | Head::FrameDiff => self.m() > 0 || self.thresh,
+        }
+    }
+
+    /// 3-line ring buffer: only a two-deep cascade needs one.
+    fn needs_ring(&self) -> bool {
+        self.m() == 2
+    }
+
+    /// One-row temp: only a smooth-then-threshold tail needs one (the
+    /// Sobel kernel folds the threshold itself).
+    fn needs_row(&self) -> bool {
+        self.thresh && self.stencils.last() == Some(&StencilOp::Smooth)
+    }
+}
+
+/// Compile a partition of `spec`'s fusable run into segment programs,
+/// walking the geometry forward from the halo'd input `din`. Panics only
+/// on specs that bypassed [`PipelineSpec::validate`] — every contiguous
+/// cut of a validated chain is compilable.
+fn compile(
+    spec: &PipelineSpec,
+    partition: &[Segment],
+    din: BoxDims,
+) -> Vec<SegProg> {
+    let (mut t, mut h, mut w) = (din.t, din.x, din.y);
+    partition
+        .iter()
+        .map(|seg| {
+            let kinds: Vec<StageKind> = spec.stages[seg.start..seg.end()]
+                .iter()
+                .map(|s| s.kind)
+                .collect();
+            let mut i = 0;
+            let head = match kinds[0] {
+                StageKind::Luma => {
+                    if kinds.get(1) == Some(&StageKind::Iir) {
+                        i = 2;
+                        Head::LumaIir
+                    } else {
+                        i = 1;
+                        Head::Luma
+                    }
+                }
+                StageKind::FrameDiff => {
+                    i = 1;
+                    Head::FrameDiff
+                }
+                StageKind::Iir => {
+                    i = 1;
+                    Head::Iir
+                }
+                _ => Head::None,
+            };
+            let mut stencils = Vec::new();
+            while i < kinds.len() && kinds[i].is_stencil() {
+                stencils.push(match kinds[i] {
+                    StageKind::Smooth3 => StencilOp::Smooth,
+                    _ => StencilOp::Sobel,
+                });
+                i += 1;
+            }
+            let thresh = kinds.get(i) == Some(&StageKind::Threshold);
+            i += usize::from(thresh);
+            assert_eq!(
+                i,
+                kinds.len(),
+                "segment {kinds:?} escapes the validated stage grammar"
+            );
+            let (t_in, h_in, w_in) = (t, h, w);
+            if head.temporal() {
+                t -= 1;
+            }
+            h -= 2 * stencils.len();
+            w -= 2 * stencils.len();
+            SegProg {
+                head,
+                stencils,
+                thresh,
+                t_in,
+                h_in,
+                w_in,
+                t_out: t,
+                h_out: h,
+                w_out: w,
+            }
+        })
+        .collect()
+}
+
+/// One compiled segment with its band decomposition and per-band pooled
+/// scratch.
+#[derive(Debug)]
+struct SegRun {
+    prog: SegProg,
+    bands: Vec<Band>,
+    scratch: Vec<SegScratch>,
+}
+
+/// Per-band scratch of one segment; present only where the program
+/// needs it (see the `SegProg::needs_*` predicates).
+#[derive(Debug)]
+struct SegScratch {
+    slab: Option<PoolBuf>,
+    ring: Option<PoolBuf>,
+    row: Option<PoolBuf>,
+}
+
+/// The full compiled state for one plan: segment programs plus the
+/// pooled full-size intermediates between them.
+#[derive(Debug)]
+struct State {
+    key: (&'static str, Vec<Segment>, BoxDims, Radii),
+    segs: Vec<SegRun>,
+    inters: Vec<PoolBuf>,
+}
+
+/// The spec-derived CPU backend: compiles the plan's partition into
+/// banded fused segment programs at `prepare` and streams boxes through
+/// them. One executor per scheduler worker thread.
+#[derive(Debug)]
+pub struct DerivedCpu {
+    pool: Arc<BufferPool>,
+    threads: usize,
+    lanes: LaneKernels,
+    bands: BandPool,
+    state: RefCell<Option<State>>,
+    last_nanos: RefCell<Vec<u64>>,
+}
+
+impl DerivedCpu {
+    /// Single-threaded derived executor (one band per segment),
+    /// runtime-detected lane backend.
+    pub fn new(pool: Arc<BufferPool>) -> DerivedCpu {
+        DerivedCpu::with_threads(pool, 1)
+    }
+
+    /// Derived executor running each segment as `threads` row bands,
+    /// runtime-detected lane backend.
+    ///
+    /// # Panics
+    /// Only if a `KFUSE_ISA` override names a backend this host cannot
+    /// run (see [`FusedCpu::with_threads`](super::FusedCpu::with_threads)
+    /// — same contract).
+    pub fn with_threads(pool: Arc<BufferPool>, threads: usize) -> DerivedCpu {
+        DerivedCpu::with_isa(pool, threads, Isa::Auto)
+            .unwrap_or_else(|e| panic!("lane backend resolution: {e}"))
+    }
+
+    /// Derived executor with an explicit lane backend; errors if the
+    /// host cannot run `isa`.
+    pub fn with_isa(
+        pool: Arc<BufferPool>,
+        threads: usize,
+        isa: Isa,
+    ) -> Result<DerivedCpu> {
+        assert!(threads >= 1, "intra_box_threads must be >= 1");
+        Ok(DerivedCpu {
+            pool,
+            threads,
+            lanes: LaneKernels::for_isa(isa)?,
+            bands: BandPool::new(threads - 1),
+            state: RefCell::new(None),
+            last_nanos: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Intra-box threads each segment fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The concrete lane backend the segment programs run on.
+    pub fn isa(&self) -> Isa {
+        self.lanes.isa()
+    }
+
+    /// (Re)compile the held state for `plan` if the plan's identity
+    /// (spec, partition, geometry) changed. The old state drops FIRST so
+    /// its pool buffers are parked before the new checkout — a recompile
+    /// recycles instead of growing the pool.
+    fn ensure_state(&self, plan: &ExecutionPlan) {
+        let key = (
+            plan.spec.name,
+            plan.partition.clone(),
+            plan.box_dims,
+            plan.halo,
+        );
+        let mut slot = self.state.borrow_mut();
+        if slot.as_ref().is_some_and(|s| s.key == key) {
+            return;
+        }
+        *slot = None;
+        let din = plan.box_dims.with_halo(plan.halo);
+        let progs = compile(&plan.spec, &plan.partition, din);
+        let last = progs.last().expect("validated specs have stages");
+        assert_eq!(
+            (last.t_out, last.h_out, last.w_out),
+            (plan.box_dims.t, plan.box_dims.x, plan.box_dims.y),
+            "segment geometry must close on the output box"
+        );
+        let n = progs.len();
+        let mut segs = Vec::with_capacity(n);
+        let mut inters = Vec::with_capacity(n - 1);
+        for (k, prog) in progs.into_iter().enumerate() {
+            if k + 1 < n {
+                inters.push(
+                    self.pool
+                        .checkout(prog.t_out * prog.h_out * prog.w_out),
+                );
+            }
+            let bands = split_rows(prog.h_out, self.threads);
+            let scratch = bands
+                .iter()
+                .map(|b| SegScratch {
+                    slab: prog.needs_slab().then(|| {
+                        self.pool
+                            .checkout((b.rows + 2 * prog.m()) * prog.w_in)
+                    }),
+                    ring: prog
+                        .needs_ring()
+                        .then(|| self.pool.checkout(3 * (prog.w_in - 2))),
+                    row: prog
+                        .needs_row()
+                        .then(|| self.pool.checkout(prog.w_out)),
+                })
+                .collect();
+            segs.push(SegRun {
+                prog,
+                bands,
+                scratch,
+            });
+        }
+        *slot = Some(State { key, segs, inters });
+    }
+}
+
+/// Accumulate one row's detect partials: exact-integer folding with the
+/// GLOBAL output row index, bit-identical to a serial per-pixel scan
+/// (see `bands::merge_detect`).
+#[inline]
+fn fold_detect(acc: &mut (f32, f32, f32), i_global: usize, mass: f32, sumj: f32) {
+    acc.0 += mass;
+    acc.1 += i_global as f32 * mass;
+    acc.2 += sumj;
+}
+
+/// One intermediate-cascade stencil row: source rows `r..r+3` of width
+/// `w` into a ring line of width `w - 2`.
+fn stencil_mid_row(
+    k: LaneKernels,
+    op: StencilOp,
+    src: &[f32],
+    w: usize,
+    r: usize,
+    dst: &mut [f32],
+) {
+    let r0 = &src[r * w..(r + 1) * w];
+    let r1 = &src[(r + 1) * w..(r + 2) * w];
+    let r2 = &src[(r + 2) * w..(r + 3) * w];
+    match op {
+        StencilOp::Smooth => k.smooth3(r0, r1, r2, dst),
+        StencilOp::Sobel => k.sobel_mag_row(r0, r1, r2, dst),
+    }
+}
+
+/// The cascade's final output row: last stencil plus the optional
+/// threshold fold (Sobel folds it in-kernel; smooth goes through the
+/// one-row temp), detect partials accumulated when thresholding.
+#[allow(clippy::too_many_arguments)]
+fn final_row(
+    k: LaneKernels,
+    op: StencilOp,
+    thresh: bool,
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    th: f32,
+    row: Option<&mut [f32]>,
+    dst: &mut [f32],
+    i_global: usize,
+    acc: &mut (f32, f32, f32),
+) {
+    match (op, thresh) {
+        (StencilOp::Smooth, false) => k.smooth3(r0, r1, r2, dst),
+        (StencilOp::Sobel, false) => k.sobel_mag_row(r0, r1, r2, dst),
+        (StencilOp::Sobel, true) => {
+            let (mass, sumj) = k.sobel_row(r0, r1, r2, th, dst);
+            fold_detect(acc, i_global, mass, sumj);
+        }
+        (StencilOp::Smooth, true) => {
+            let tmp = row.expect("smooth+threshold program has a row temp");
+            k.smooth3(r0, r1, r2, tmp);
+            let (mass, sumj) = k.thresh_row(tmp, th, dst);
+            fold_detect(acc, i_global, mass, sumj);
+        }
+    }
+}
+
+/// Run the post-head part of a segment program over one frame of one
+/// band: `src_rows` holds `band.rows + 2m` gray rows of width `w_in`
+/// (local row 0 = the band's first input row), `dst` the band's
+/// `rows × w_out` output rows of this frame.
+#[allow(clippy::too_many_arguments)]
+fn emit_frame(
+    k: LaneKernels,
+    prog: &SegProg,
+    src_rows: &[f32],
+    band: Band,
+    th: f32,
+    ring: Option<&mut [f32]>,
+    row: Option<&mut [f32]>,
+    dst: &mut [f32],
+    acc: &mut (f32, f32, f32),
+) {
+    let (w_in, w_out) = (prog.w_in, prog.w_out);
+    debug_assert_eq!(dst.len(), band.rows * w_out);
+    match prog.m() {
+        0 => {
+            // Pointwise tail: threshold the rows or pass them through.
+            for i in 0..band.rows {
+                let s = &src_rows[i * w_in..][..w_in];
+                let d = &mut dst[i * w_out..][..w_out];
+                if prog.thresh {
+                    let (mass, sumj) = k.thresh_row(s, th, d);
+                    fold_detect(acc, band.i0 + i, mass, sumj);
+                } else {
+                    d.copy_from_slice(s);
+                }
+            }
+        }
+        1 => {
+            let op = prog.stencils[0];
+            let mut row = row;
+            for i in 0..band.rows {
+                let r0 = &src_rows[i * w_in..][..w_in];
+                let r1 = &src_rows[(i + 1) * w_in..][..w_in];
+                let r2 = &src_rows[(i + 2) * w_in..][..w_in];
+                let d = &mut dst[i * w_out..][..w_out];
+                final_row(
+                    k,
+                    op,
+                    prog.thresh,
+                    r0,
+                    r1,
+                    r2,
+                    th,
+                    row.as_deref_mut(),
+                    d,
+                    band.i0 + i,
+                    acc,
+                );
+            }
+        }
+        2 => {
+            // Rolling cascade: stencil 0 fills the 3-line ring, stencil 1
+            // consumes it — the same slot walk as the hand-written
+            // `fused::stencil_frame`.
+            let ring = ring.expect("two-stencil program has a ring");
+            let sw = w_in - 2;
+            let (s0, s1) = (prog.stencils[0], prog.stencils[1]);
+            stencil_mid_row(k, s0, src_rows, w_in, 0, &mut ring[..sw]);
+            stencil_mid_row(k, s0, src_rows, w_in, 1, &mut ring[sw..2 * sw]);
+            let mut row = row;
+            for i in 0..band.rows {
+                let slot = (i + 2) % 3;
+                {
+                    let line = &mut ring[slot * sw..(slot + 1) * sw];
+                    stencil_mid_row(k, s0, src_rows, w_in, i + 2, line);
+                }
+                let rr: &[f32] = &*ring;
+                let r0 = &rr[(i % 3) * sw..][..sw];
+                let r1 = &rr[((i + 1) % 3) * sw..][..sw];
+                let r2 = &rr[((i + 2) % 3) * sw..][..sw];
+                let d = &mut dst[i * w_out..][..w_out];
+                final_row(
+                    k,
+                    s1,
+                    prog.thresh,
+                    r0,
+                    r1,
+                    r2,
+                    th,
+                    row.as_deref_mut(),
+                    d,
+                    band.i0 + i,
+                    acc,
+                );
+            }
+        }
+        _ => unreachable!("validated specs chain at most two stencils"),
+    }
+}
+
+/// [`emit_frame`] plus the per-frame detect row write.
+#[allow(clippy::too_many_arguments)]
+fn finish_frame(
+    k: LaneKernels,
+    prog: &SegProg,
+    src_rows: &[f32],
+    band: Band,
+    th: f32,
+    ring: Option<&mut [f32]>,
+    row: Option<&mut [f32]>,
+    dst: &mut [f32],
+    detect: Option<&mut [f32]>,
+    of: usize,
+) {
+    let mut acc = (0.0f32, 0.0f32, 0.0f32);
+    emit_frame(k, prog, src_rows, band, th, ring, row, dst, &mut acc);
+    if let Some(rows) = detect {
+        rows[of * 3] = acc.0;
+        rows[of * 3 + 1] = acc.1;
+        rows[of * 3 + 2] = acc.2;
+    }
+}
+
+/// One band of one segment program: the head produces the band's gray
+/// row stream (frame by frame, carrying IIR state where the program
+/// says so), `emit_frame` runs the cascade, and the detect partials land
+/// in this band's chunk with global row indices.
+#[allow(clippy::too_many_arguments)]
+fn seg_band(
+    k: LaneKernels,
+    prog: &SegProg,
+    src: &[f32],
+    th: f32,
+    band: Band,
+    mut slab: Option<&mut [f32]>,
+    mut ring: Option<&mut [f32]>,
+    mut row: Option<&mut [f32]>,
+    mut out_rows: Vec<&mut [f32]>,
+    mut detect: Option<&mut [f32]>,
+) {
+    let m = prog.m();
+    let hb = band.rows + 2 * m;
+    let ch = if prog.head.reads_rgba() { 4 } else { 1 };
+    let (h_in, w_in) = (prog.h_in, prog.w_in);
+    let plane = h_in * w_in * ch;
+    debug_assert!(band.i0 + hb <= h_in);
+    debug_assert_eq!(src.len(), prog.t_in * plane);
+    let rows_of =
+        |ft: usize| &src[ft * plane + band.i0 * w_in * ch..][..hb * w_in * ch];
+
+    match prog.head {
+        Head::LumaIir => {
+            let slab = slab.expect("carry head has a slab");
+            // Warm start: y[-1] = luma(x[0]) over the band's input rows.
+            k.luma(rows_of(0), slab);
+            for ft in 1..prog.t_in {
+                k.luma_iir(rows_of(ft), slab);
+                finish_frame(
+                    k,
+                    prog,
+                    slab,
+                    band,
+                    th,
+                    ring.as_deref_mut(),
+                    row.as_deref_mut(),
+                    &mut out_rows[ft - 1],
+                    detect.as_deref_mut(),
+                    ft - 1,
+                );
+            }
+        }
+        Head::Iir => {
+            let slab = slab.expect("carry head has a slab");
+            // Warm start: the carry is frame 0 of the gray input.
+            slab.copy_from_slice(rows_of(0));
+            for ft in 1..prog.t_in {
+                k.iir_row(rows_of(ft), slab);
+                finish_frame(
+                    k,
+                    prog,
+                    slab,
+                    band,
+                    th,
+                    ring.as_deref_mut(),
+                    row.as_deref_mut(),
+                    &mut out_rows[ft - 1],
+                    detect.as_deref_mut(),
+                    ft - 1,
+                );
+            }
+        }
+        Head::FrameDiff => {
+            for ft in 1..prog.t_in {
+                if let Some(slab) = slab.as_deref_mut() {
+                    k.luma_diff(rows_of(ft), rows_of(ft - 1), slab);
+                    finish_frame(
+                        k,
+                        prog,
+                        slab,
+                        band,
+                        th,
+                        ring.as_deref_mut(),
+                        row.as_deref_mut(),
+                        &mut out_rows[ft - 1],
+                        detect.as_deref_mut(),
+                        ft - 1,
+                    );
+                } else {
+                    // Pure pointwise segment: diff straight into the
+                    // output rows (w_out == w_in, rows contiguous).
+                    k.luma_diff(
+                        rows_of(ft),
+                        rows_of(ft - 1),
+                        &mut out_rows[ft - 1],
+                    );
+                }
+            }
+        }
+        Head::Luma => {
+            for ft in 0..prog.t_in {
+                if let Some(slab) = slab.as_deref_mut() {
+                    k.luma(rows_of(ft), slab);
+                    finish_frame(
+                        k,
+                        prog,
+                        slab,
+                        band,
+                        th,
+                        ring.as_deref_mut(),
+                        row.as_deref_mut(),
+                        &mut out_rows[ft],
+                        detect.as_deref_mut(),
+                        ft,
+                    );
+                } else {
+                    k.luma(rows_of(ft), &mut out_rows[ft]);
+                }
+            }
+        }
+        Head::None => {
+            for ft in 0..prog.t_in {
+                finish_frame(
+                    k,
+                    prog,
+                    rows_of(ft),
+                    band,
+                    th,
+                    ring.as_deref_mut(),
+                    row.as_deref_mut(),
+                    &mut out_rows[ft],
+                    detect.as_deref_mut(),
+                    ft,
+                );
+            }
+        }
+    }
+}
+
+impl Executor for DerivedCpu {
+    fn name(&self) -> &'static str {
+        "derived_cpu"
+    }
+
+    /// Compile the plan's segment programs and check out every pooled
+    /// buffer (scratch + intermediates) up front, so the pool's
+    /// allocation counter settles at engine build.
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
+        self.ensure_state(plan);
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        check_spec_input(plan, input)?;
+        self.ensure_state(plan);
+        let mut guard = self.state.borrow_mut();
+        let State { segs, inters, .. } =
+            guard.as_mut().expect("state compiled above");
+        let n = segs.len();
+        let fin = &segs[n - 1].prog;
+        let mut out = vec![0.0f32; fin.t_out * fin.h_out * fin.w_out];
+        let with_detect = plan.detect.is_some();
+        let lanes = self.lanes;
+        let mut nanos = Vec::with_capacity(n);
+        let mut detect_rows: Option<Vec<f32>> = None;
+
+        for (k, seg) in segs.iter_mut().enumerate() {
+            let prog = &seg.prog;
+            let n_bands = seg.bands.len();
+            // Segment k reads intermediate k-1 (or the box input) and
+            // writes intermediate k (or the final output buffer).
+            let (lo, hi) = inters.split_at_mut(k);
+            let src: &[f32] = if k == 0 { input } else { &lo[k - 1] };
+            let dst: &mut [f32] =
+                if k + 1 == n { &mut out } else { &mut hi[0] };
+            let band_rows = band_views(dst, &seg.bands, prog.w_out);
+            let mut partials = (with_detect && prog.thresh)
+                .then(|| vec![0.0f32; n_bands * prog.t_out * 3]);
+            let mut parts =
+                detect_partials(partials.as_deref_mut(), n_bands, prog.t_out);
+
+            let started = Instant::now();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = seg
+                .bands
+                .iter()
+                .zip(seg.scratch.iter_mut())
+                .zip(band_rows)
+                .zip(parts.drain(..))
+                .map(|(((band, scratch), rows), det)| {
+                    let band = *band;
+                    let slab = scratch.slab.as_deref_mut();
+                    let ring = scratch.ring.as_deref_mut();
+                    let row = scratch.row.as_deref_mut();
+                    let task: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || {
+                            seg_band(
+                                lanes, prog, src, threshold, band, slab,
+                                ring, row, rows, det,
+                            );
+                        });
+                    task
+                })
+                .collect();
+            self.bands.run(tasks);
+            nanos.push(started.elapsed().as_nanos() as u64);
+            if let Some(p) = partials {
+                detect_rows = Some(merge_detect(&p, n_bands, prog.t_out));
+            }
+        }
+        *self.last_nanos.borrow_mut() = nanos;
+        Ok(BoxOutput {
+            binary: out,
+            detect: detect_rows,
+        })
+    }
+
+    /// One timing per partition segment, in execution order — the
+    /// engine's per-partition accounting rows.
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        self.last_nanos.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::cpu_ref;
+    use crate::exec::FusedCpu;
+    use crate::fusion::traffic::InputDims;
+    use crate::gpusim::device::DeviceSpec;
+    use crate::prop::Gen;
+
+    fn facial_plan(mode: FusionMode) -> ExecutionPlan {
+        ExecutionPlan::resolve(mode, BoxDims::new(16, 16, 8), true)
+    }
+
+    fn anomaly_plan(mode: FusionMode) -> ExecutionPlan {
+        ExecutionPlan::resolve_spec(
+            crate::pipeline::anomaly(),
+            mode,
+            BoxDims::new(16, 16, 8),
+            true,
+            InputDims::new(64, 64, 16),
+            &DeviceSpec::k20(),
+        )
+    }
+
+    fn facial_oracle(
+        x: &[f32],
+        t: usize,
+        h: usize,
+        w: usize,
+        th: f32,
+    ) -> BoxOutput {
+        let binary = cpu_ref::pipeline(x, t, h, w, th);
+        let detect = cpu_ref::detect(&binary, t - 1, h - 4, w - 4)
+            .into_iter()
+            .flatten()
+            .collect();
+        BoxOutput {
+            binary,
+            detect: Some(detect),
+        }
+    }
+
+    fn anomaly_oracle(
+        x: &[f32],
+        t: usize,
+        h: usize,
+        w: usize,
+        th: f32,
+    ) -> BoxOutput {
+        let d = cpu_ref::frame_diff(x, t, h, w);
+        let s = cpu_ref::gaussian3(&d, t - 1, h, w);
+        let binary = cpu_ref::threshold(&s, th);
+        let detect = cpu_ref::detect(&binary, t - 1, h - 2, w - 2)
+            .into_iter()
+            .flatten()
+            .collect();
+        BoxOutput {
+            binary,
+            detect: Some(detect),
+        }
+    }
+
+    #[test]
+    fn derived_facial_matches_oracle_for_every_arm() {
+        let mut g = Gen::new(7);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let want = facial_oracle(&x, 9, 20, 20, 96.0);
+        for mode in [FusionMode::None, FusionMode::Two, FusionMode::Full] {
+            let plan = facial_plan(mode);
+            for threads in [1, 3] {
+                let exec =
+                    DerivedCpu::with_threads(BufferPool::shared(), threads);
+                exec.prepare(&plan).unwrap();
+                let got = exec.execute(&plan, 96.0, &x).unwrap();
+                assert_eq!(got, want, "mode={mode:?} threads={threads}");
+                assert_eq!(
+                    exec.last_stage_nanos().len(),
+                    plan.partition.len(),
+                    "one timing per segment"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn derived_full_is_bit_identical_to_the_handwritten_fused_pass() {
+        let mut g = Gen::new(13);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let plan = facial_plan(FusionMode::Full);
+        for threads in [1, 4] {
+            let derived =
+                DerivedCpu::with_threads(BufferPool::shared(), threads);
+            let fused = FusedCpu::with_threads(BufferPool::shared(), threads);
+            let a = derived.execute(&plan, 96.0, &x).unwrap();
+            let b = fused.execute(&plan, 96.0, &x).unwrap();
+            assert_eq!(a, b, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn derived_anomaly_matches_the_staged_chain_for_every_arm() {
+        // No hand-written executor exists for this pipeline anywhere —
+        // the program is generated from the spec.
+        let mut g = Gen::new(23);
+        let x = g.vec_f32(9 * 18 * 18 * 4, 0.0, 255.0);
+        let want = anomaly_oracle(&x, 9, 18, 18, 24.0);
+        for mode in [FusionMode::None, FusionMode::Two, FusionMode::Full] {
+            let plan = anomaly_plan(mode);
+            for threads in [1, 3] {
+                let exec =
+                    DerivedCpu::with_threads(BufferPool::shared(), threads);
+                let got = exec.execute(&plan, 24.0, &x).unwrap();
+                assert_eq!(got, want, "mode={mode:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn arbitrary_partitions_compile_and_match() {
+        // Partitions no hand-written executor covers — e.g. {K1}{K2..K5}
+        // — execute through the same derived path, bit-identically.
+        let mut g = Gen::new(31);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let want = facial_oracle(&x, 9, 20, 20, 96.0);
+        for cuts in [vec![1, 4], vec![3, 2], vec![1, 1, 3], vec![2, 2, 1]] {
+            let mut plan = facial_plan(FusionMode::Full);
+            let mut start = 0;
+            plan.partition = cuts
+                .iter()
+                .map(|&len| {
+                    let s = Segment { start, len };
+                    start += len;
+                    s
+                })
+                .collect();
+            let exec = DerivedCpu::new(BufferPool::shared());
+            let got = exec.execute(&plan, 96.0, &x).unwrap();
+            assert_eq!(got, want, "partition {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn full_plan_steady_state_allocates_exactly_the_fused_scratch() {
+        // Same pool footprint as the hand-written FusedCpu: one carry
+        // slab + one ring per band, nothing per box — the pin
+        // `tests/engine_reuse.rs` builds on.
+        let pool = BufferPool::shared();
+        let exec = DerivedCpu::new(pool.clone());
+        let plan = facial_plan(FusionMode::Full);
+        exec.prepare(&plan).unwrap();
+        let warm = pool.allocations();
+        assert_eq!(warm, 2, "carry slab + line ring");
+        let mut g = Gen::new(3);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        for _ in 0..8 {
+            let out = exec.execute(&plan, 96.0, &x).unwrap();
+            assert_eq!(out.binary.len(), 8 * 16 * 16);
+            assert_eq!(out.detect.unwrap().len(), 8 * 3);
+        }
+        assert_eq!(pool.allocations(), warm, "per-box pool allocations");
+        assert!(exec.last_stage_nanos()[0] > 0);
+    }
+
+    #[test]
+    fn two_plan_checks_out_one_intermediate_and_stays_flat() {
+        let pool = BufferPool::shared();
+        let exec = DerivedCpu::new(pool.clone());
+        let plan = facial_plan(FusionMode::Two);
+        exec.prepare(&plan).unwrap();
+        let warm = pool.allocations();
+        // IIR intermediate + partition-A carry slab + partition-B ring.
+        assert_eq!(warm, 3);
+        let mut g = Gen::new(5);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        for _ in 0..4 {
+            exec.execute(&plan, 96.0, &x).unwrap();
+        }
+        assert_eq!(pool.allocations(), warm);
+    }
+
+    #[test]
+    fn replanning_recompiles_and_recycles_pool_buffers() {
+        let pool = BufferPool::shared();
+        let exec = DerivedCpu::new(pool.clone());
+        let mut g = Gen::new(41);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let full = facial_plan(FusionMode::Full);
+        let two = facial_plan(FusionMode::Two);
+        let want = facial_oracle(&x, 9, 20, 20, 96.0);
+        assert_eq!(exec.execute(&full, 96.0, &x).unwrap(), want);
+        assert_eq!(exec.execute(&two, 96.0, &x).unwrap(), want);
+        let after_both = pool.allocations();
+        // Flipping back recycles the parked buffers: no new allocations.
+        assert_eq!(exec.execute(&full, 96.0, &x).unwrap(), want);
+        assert_eq!(exec.execute(&two, 96.0, &x).unwrap(), want);
+        assert_eq!(pool.allocations(), after_both);
+    }
+
+    #[test]
+    fn every_available_isa_matches_the_oracle_banded() {
+        // Odd extents leave remainder lanes at every backend width.
+        let mut g = Gen::new(29);
+        let x = g.vec_f32(6 * 15 * 15 * 4, 0.0, 255.0);
+        let spec = crate::pipeline::anomaly();
+        let plan = ExecutionPlan::resolve_spec(
+            spec,
+            FusionMode::Full,
+            BoxDims::new(13, 13, 5),
+            true,
+            InputDims::new(64, 64, 16),
+            &DeviceSpec::k20(),
+        );
+        let want = anomaly_oracle(&x, 6, 15, 15, 24.0);
+        for isa in Isa::all_available() {
+            for threads in [1, 3] {
+                let exec =
+                    DerivedCpu::with_isa(BufferPool::shared(), threads, isa)
+                        .unwrap();
+                assert_eq!(exec.isa(), isa);
+                let got = exec.execute(&plan, 24.0, &x).unwrap();
+                assert_eq!(got, want, "isa={isa} threads={threads}");
+            }
+        }
+    }
+}

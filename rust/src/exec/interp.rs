@@ -1,0 +1,168 @@
+//! Staged per-stage interpreter: the spec-generic oracle executor.
+//!
+//! Walks a plan's [`PipelineSpec`](crate::pipeline::PipelineSpec) stage
+//! by stage, materializing every intermediate through the scalar
+//! `cpu_ref` kernels — the reference semantics the derived executor
+//! ([`DerivedCpu`](super::DerivedCpu)) must reproduce bit for bit on any
+//! partition, band count, and ISA (`tests/pipeline_derived.rs`). It is
+//! to arbitrary specs what [`StagedCpu`](super::StagedCpu) is to the
+//! hard-wired facial chain: deliberately allocation-heavy, one full-size
+//! buffer per stage, so the fig16 bench can price the unfused memory
+//! behavior of spec-only pipelines too.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::cpu_ref;
+use crate::pipeline::StageKind;
+use crate::Result;
+
+use super::{check_spec_input, BoxOutput, Executor};
+
+/// The spec-interpreting unfused baseline: one materialized buffer per
+/// stage of whatever pipeline the plan carries.
+#[derive(Debug, Default)]
+pub struct StagedInterp {
+    /// Wall nanos per STAGE (not per partition) of the most recent box.
+    last_nanos: RefCell<Vec<u64>>,
+}
+
+impl StagedInterp {
+    pub fn new() -> StagedInterp {
+        StagedInterp::default()
+    }
+}
+
+impl Executor for StagedInterp {
+    fn name(&self) -> &'static str {
+        "staged_interp"
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let (t_in, h_in, w_in) = check_spec_input(plan, input)?;
+        let (mut t, mut h, mut w) = (t_in, h_in, w_in);
+        let mut cur: Vec<f32> = Vec::new();
+        let mut nanos = Vec::with_capacity(plan.spec.len());
+        for stage in &plan.spec.stages {
+            let lap = Instant::now();
+            cur = match stage.kind {
+                // Validation pins the RGBA-consuming heads to stage 0,
+                // so they read `input`, never `cur`.
+                StageKind::Luma => cpu_ref::rgb2gray(input, t, h, w),
+                StageKind::FrameDiff => {
+                    let d = cpu_ref::frame_diff(input, t, h, w);
+                    t -= 1;
+                    d
+                }
+                StageKind::Iir => {
+                    let y = cpu_ref::iir(
+                        &cur,
+                        t,
+                        h,
+                        w,
+                        cpu_ref::kernels::IIR_ALPHA,
+                    );
+                    t -= 1;
+                    y
+                }
+                StageKind::Smooth3 => {
+                    let s = cpu_ref::gaussian3(&cur, t, h, w);
+                    h -= 2;
+                    w -= 2;
+                    s
+                }
+                StageKind::Sobel3 => {
+                    let d = cpu_ref::gradient3(&cur, t, h, w);
+                    h -= 2;
+                    w -= 2;
+                    d
+                }
+                StageKind::Threshold => cpu_ref::threshold(&cur, threshold),
+            };
+            nanos.push(lap.elapsed().as_nanos() as u64);
+        }
+        *self.last_nanos.borrow_mut() = nanos;
+        let detect = plan.detect.as_ref().map(|_| {
+            cpu_ref::detect(&cur, t, h, w)
+                .into_iter()
+                .flatten()
+                .collect()
+        });
+        Ok(BoxOutput {
+            binary: cur,
+            detect,
+        })
+    }
+
+    /// One timing per STAGE of the spec (finer than the partition
+    /// accounting the engine's executors report — this oracle never
+    /// serves an engine).
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        self.last_nanos.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::fusion::halo::BoxDims;
+    use crate::fusion::traffic::InputDims;
+    use crate::gpusim::device::DeviceSpec;
+    use crate::prop::Gen;
+
+    #[test]
+    fn interp_facial_matches_the_hardwired_pipeline_oracle() {
+        let plan = ExecutionPlan::resolve(
+            FusionMode::None,
+            BoxDims::new(16, 16, 8),
+            true,
+        );
+        let mut g = Gen::new(11);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let out = StagedInterp::new().execute(&plan, 96.0, &x).unwrap();
+        assert_eq!(out.binary, cpu_ref::pipeline(&x, 9, 20, 20, 96.0));
+        let want: Vec<f32> = cpu_ref::detect(&out.binary, 8, 16, 16)
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(out.detect.unwrap(), want);
+        assert_eq!(
+            StagedInterp::new().last_stage_nanos().len(),
+            0,
+            "no box executed yet"
+        );
+    }
+
+    #[test]
+    fn interp_anomaly_walks_the_spec() {
+        let plan = ExecutionPlan::resolve_spec(
+            crate::pipeline::anomaly(),
+            FusionMode::None,
+            BoxDims::new(16, 16, 8),
+            true,
+            InputDims::new(64, 64, 16),
+            &DeviceSpec::k20(),
+        );
+        let mut g = Gen::new(17);
+        let x = g.vec_f32(9 * 18 * 18 * 4, 0.0, 255.0);
+        let interp = StagedInterp::new();
+        let out = interp.execute(&plan, 24.0, &x).unwrap();
+        let d = cpu_ref::frame_diff(&x, 9, 18, 18);
+        let s = cpu_ref::gaussian3(&d, 8, 18, 18);
+        let binary = cpu_ref::threshold(&s, 24.0);
+        assert_eq!(out.binary, binary);
+        let want: Vec<f32> = cpu_ref::detect(&binary, 8, 16, 16)
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(out.detect.unwrap(), want);
+        assert_eq!(interp.last_stage_nanos().len(), 3, "one per stage");
+    }
+}

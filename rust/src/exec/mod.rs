@@ -15,18 +15,26 @@
 //! * [`PjrtExec`] — the artifact chain: each stage is one compiled HLO
 //!   executable, every intermediate crosses the host boundary. This is
 //!   the measured "GPU" arm when `artifacts/` is present.
-//! * [`StagedCpu`] — the kernel-by-kernel `cpu_ref` chain (partition
-//!   `{K1}{K2}{K3}{K4}{K5}`). It deliberately materializes every
-//!   intermediate (gray, IIR, smoothed, gradient) at full box size — the
-//!   traffic baseline, i.e. the "No Fusion" memory behavior on a CPU.
-//! * [`TwoFusedCpu`] — the paper's Two-Fusion partition
+//! * [`DerivedCpu`] — THE native engine path: compiles the plan's
+//!   [`PipelineSpec`](crate::pipeline::PipelineSpec) + DP-chosen
+//!   partition into banded fused segment programs at `prepare` (carry
+//!   slabs, rolling line rings, pooled intermediates only at partition
+//!   boundaries), so any registered pipeline and any partition executes
+//!   without a hand-written executor.
+//! * [`StagedInterp`] — the spec-generic oracle: interprets the plan's
+//!   spec stage by stage through the scalar `cpu_ref` kernels, one
+//!   materialized buffer per stage. The derived executor is
+//!   property-tested bit-identical to it.
+//! * [`StagedCpu`] — the hand-written kernel-by-kernel facial chain
+//!   (partition `{K1}{K2}{K3}{K4}{K5}`), the traffic baseline the fig16
+//!   bench prices; retained as an equivalence baseline.
+//! * [`TwoFusedCpu`] — the hand-written Two-Fusion partition
 //!   (`{K1,K2}{K3,K4,K5}`) with exactly ONE materialized intermediate
-//!   (the IIR plane) between the two fused halves.
-//! * [`FusedCpu`] — the All-Fusion single pass (`{K1..K5}`): BT.601 luma
-//!   inline, IIR carry slab, rolling binomial/Sobel line buffers, the
-//!   threshold (and detect accumulation) folded into the gradient loop.
-//!   No full-frame intermediate ever exists — the CPU analogue of
-//!   keeping fused intermediates in shared memory.
+//!   (the IIR plane); retained as an equivalence baseline.
+//! * [`FusedCpu`] — the hand-written All-Fusion single pass
+//!   (`{K1..K5}`): the loop structure the derived executor's facial
+//!   `{K1..K5}` program reproduces operation for operation; retained as
+//!   an equivalence baseline.
 //! * [`bands`] — intra-box parallelism shared by the fused executors:
 //!   boxes split into halo-overlapped row [`bands::Band`]s executed on a
 //!   per-worker [`bands::BandPool`] thread set
@@ -45,21 +53,21 @@
 //!
 //! Backend selection is [`Backend`](crate::config::Backend) in the run
 //! config: `Backend::Pjrt` needs `artifacts/`; `Backend::Cpu` runs
-//! everywhere. The CPU executor is picked by the PARTITION the plan's
-//! DP solve chose (see [`ExecutionPlan::resolve`]), not hardcoded per
-//! fusion arm — `{K1..K5}` lowers to [`FusedCpu`], `{K1,K2}{K3..K5}` to
-//! [`TwoFusedCpu`], all-singletons to [`StagedCpu`] (see
-//! [`cpu_executor`]). There is no silent fallback: a partition without a
-//! CPU executor is a build-time error.
+//! everywhere. Since the pipeline layer landed, [`cpu_executor`] always
+//! returns a [`DerivedCpu`]: the partition the plan's DP solve chose
+//! (see [`ExecutionPlan::resolve`]) is COMPILED, not matched against a
+//! fixed executor table, so every partition of every registered
+//! pipeline executes — including shapes (`{K1}{K2..K5}`, …) no
+//! hand-written executor ever covered.
 //!
 //! ```no_run
 //! use kfuse::config::{Backend, FusionMode};
 //! use kfuse::engine::Engine;
 //!
 //! # fn main() -> kfuse::Result<()> {
-//! // Two Fusion on the native CPU executors: the engine's workers each
-//! // construct a TwoFusedCpu (per the plan's {K1,K2}{K3..K5} partition)
-//! // with 4 row-band threads per box.
+//! // Two Fusion on the native CPU executors: each worker's DerivedCpu
+//! // compiles the plan's {K1,K2}{K3..K5} partition into two fused
+//! // segment programs, 4 row-band threads per box.
 //! let engine = Engine::builder()
 //!     .backend(Backend::Cpu)
 //!     .mode(FusionMode::Two)
@@ -72,7 +80,9 @@
 //! ```
 
 pub mod bands;
+pub mod derived;
 pub mod fused;
+pub mod interp;
 pub mod pjrt;
 pub mod pool;
 pub mod simd;
@@ -82,10 +92,12 @@ pub mod two_fused;
 use std::sync::Arc;
 
 use crate::coordinator::plan::ExecutionPlan;
-use crate::{Error, Result};
+use crate::Result;
 
 pub use bands::{split_rows, Band, BandPool};
+pub use derived::DerivedCpu;
 pub use fused::FusedCpu;
+pub use interp::StagedInterp;
 pub use pjrt::PjrtExec;
 pub use pool::{BufferPool, PoolBuf};
 pub use simd::{Isa, LaneKernels};
@@ -136,51 +148,32 @@ pub trait Executor {
     }
 }
 
-/// Build the CPU executor for a resolved plan, dispatching on the
-/// PARTITION the plan's DP solve selected (`{K1..K5}` → [`FusedCpu`],
-/// `{K1,K2}{K3..K5}` → [`TwoFusedCpu`], singletons → [`StagedCpu`]).
-/// `intra_box_threads` sizes the fused executors' band thread set and
-/// `isa` picks their lane backend (errors if the host cannot run it).
-/// The staged baseline deliberately stays on the scalar `cpu_ref` chain
-/// regardless of `isa` — it is both the traffic baseline and the
-/// independent oracle the lane backends are property-tested against.
-/// A partition with no CPU executor is an explicit error — never a
-/// silent downgrade to the staged baseline.
+/// Build the CPU executor for a resolved plan. Always a [`DerivedCpu`]:
+/// the plan's spec + partition is compiled into fused segment programs
+/// at `prepare`, so every DP outcome — not just the three shapes the
+/// hand-written executors cover — lowers to the same banded single-pass
+/// machinery. `intra_box_threads` sizes the band thread set and `isa`
+/// picks the lane backend (errors if the host cannot run it). The
+/// legacy executors stay constructible directly for the equivalence
+/// tests and the fig16 bench arms.
 pub fn cpu_executor(
     plan: &ExecutionPlan,
     pool: Arc<BufferPool>,
     intra_box_threads: usize,
     isa: Isa,
 ) -> Result<Box<dyn Executor>> {
-    let shape = plan.partition_shape();
-    if shape == [5] {
-        Ok(Box::new(FusedCpu::with_isa(pool, intra_box_threads, isa)?))
-    } else if shape == [2, 3] {
-        Ok(Box::new(TwoFusedCpu::with_isa(pool, intra_box_threads, isa)?))
-    } else if !shape.is_empty() && shape.iter().all(|&len| len == 1) {
-        Ok(Box::new(StagedCpu::new()))
-    } else {
-        Err(Error::Plan(format!(
-            "no CPU executor for partition {shape:?} (have {{K1..K5}}, \
-             {{K1,K2}}{{K3..K5}}, and singletons)"
-        )))
-    }
+    debug_assert!(!plan.partition.is_empty(), "plans carry a partition");
+    Ok(Box::new(DerivedCpu::with_isa(pool, intra_box_threads, isa)?))
 }
 
-/// Shape guard shared by the CPU executors: the cpu_ref chain is only
-/// defined for the pipeline's cumulative halo (δx=δy=2, δt=1).
-pub(crate) fn check_cpu_input(
+/// Shape guard for the spec-generic executors ([`DerivedCpu`],
+/// [`StagedInterp`]): the staged RGBA input must match the plan's
+/// halo'd box `(t+δt, x+2δx, y+2δy, 4)` for whatever halo the spec
+/// declares.
+pub(crate) fn check_spec_input(
     plan: &ExecutionPlan,
     input: &[f32],
 ) -> Result<(usize, usize, usize)> {
-    let halo = crate::fusion::kernel_ir::Radii::new(2, 2, 1);
-    if plan.halo != halo {
-        return Err(crate::Error::Shape(format!(
-            "CPU backend supports the K1..K5 chain halo {halo:?} only, \
-             plan has {:?}",
-            plan.halo
-        )));
-    }
     let din = plan.box_dims.with_halo(plan.halo);
     let (t_in, h_in, w_in) = (din.t, din.x, din.y);
     if input.len() != t_in * h_in * w_in * 4 {
@@ -196,6 +189,24 @@ pub(crate) fn check_cpu_input(
     Ok((t_in, h_in, w_in))
 }
 
+/// Shape guard for the hand-written facial executors: those loops are
+/// only defined for the K1..K5 chain's cumulative halo (δx=δy=2, δt=1),
+/// so a plan for any other spec is rejected up front.
+pub(crate) fn check_cpu_input(
+    plan: &ExecutionPlan,
+    input: &[f32],
+) -> Result<(usize, usize, usize)> {
+    let halo = crate::fusion::kernel_ir::Radii::new(2, 2, 1);
+    if plan.halo != halo {
+        return Err(crate::Error::Shape(format!(
+            "hand-written CPU executors support the K1..K5 chain halo \
+             {halo:?} only, plan has {:?}",
+            plan.halo
+        )));
+    }
+    check_spec_input(plan, input)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,31 +218,36 @@ mod tests {
     }
 
     #[test]
-    fn cpu_executor_follows_the_plan_partition() {
+    fn cpu_executor_is_always_the_derived_compiler() {
         let pool = BufferPool::shared();
-        let full = plan_for(FusionMode::Full);
-        let exec = cpu_executor(&full, pool.clone(), 1, Isa::Auto).unwrap();
-        assert_eq!(exec.name(), "fused_cpu");
-        let two = plan_for(FusionMode::Two);
-        let exec = cpu_executor(&two, pool.clone(), 1, Isa::Scalar).unwrap();
-        assert_eq!(exec.name(), "two_fused_cpu");
-        let none = plan_for(FusionMode::None);
-        let exec = cpu_executor(&none, pool, 1, Isa::Portable).unwrap();
-        assert_eq!(exec.name(), "staged_cpu");
+        for mode in [FusionMode::Full, FusionMode::Two, FusionMode::None] {
+            let plan = plan_for(mode);
+            let exec =
+                cpu_executor(&plan, pool.clone(), 1, Isa::Auto).unwrap();
+            assert_eq!(exec.name(), "derived_cpu", "{mode:?}");
+        }
     }
 
     #[test]
-    fn unsupported_partition_is_an_error_not_a_fallback() {
+    fn partitions_without_handwritten_executors_now_execute() {
         use crate::fusion::candidates::Segment;
+        use crate::prop::Gen;
         let mut plan = plan_for(FusionMode::Full);
         plan.partition = vec![
             Segment { start: 0, len: 1 },
             Segment { start: 1, len: 4 },
         ];
-        let err = cpu_executor(&plan, BufferPool::shared(), 1, Isa::Auto);
-        assert!(err.is_err());
-        let msg = format!("{}", err.err().unwrap());
-        assert!(msg.contains("no CPU executor"), "{msg}");
+        let exec =
+            cpu_executor(&plan, BufferPool::shared(), 1, Isa::Auto).unwrap();
+        exec.prepare(&plan).unwrap();
+        let mut g = Gen::new(3);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let out = exec.execute(&plan, 96.0, &x).unwrap();
+        assert_eq!(
+            out.binary,
+            crate::cpu_ref::pipeline(&x, 9, 20, 20, 96.0),
+            "{{K1}}{{K2..K5}} matches the staged oracle"
+        );
     }
 
     #[test]
@@ -243,6 +259,26 @@ mod tests {
         );
         let ok = vec![0.0; 9 * 20 * 20 * 4];
         assert_eq!(check_cpu_input(&plan, &ok).unwrap(), (9, 20, 20));
+        assert_eq!(check_spec_input(&plan, &ok).unwrap(), (9, 20, 20));
         assert!(check_cpu_input(&plan, &ok[1..]).is_err());
+        assert!(check_spec_input(&plan, &ok[1..]).is_err());
+    }
+
+    #[test]
+    fn handwritten_executors_reject_non_facial_halos() {
+        use crate::fusion::traffic::InputDims;
+        use crate::gpusim::device::DeviceSpec;
+        let plan = ExecutionPlan::resolve_spec(
+            crate::pipeline::anomaly(),
+            FusionMode::Full,
+            BoxDims::new(16, 16, 8),
+            false,
+            InputDims::new(64, 64, 16),
+            &DeviceSpec::k20(),
+        );
+        let x = vec![0.0; 9 * 18 * 18 * 4];
+        assert_eq!(check_spec_input(&plan, &x).unwrap(), (9, 18, 18));
+        let err = check_cpu_input(&plan, &x).err().unwrap();
+        assert!(format!("{err}").contains("hand-written"), "{err}");
     }
 }

@@ -248,6 +248,148 @@ pub(crate) fn sobel_row_v<V: Vf32>(
     (mass, sumj)
 }
 
+/// Plain IIR step over a gray row, in place: `c = α·src + (1-α)·c` —
+/// the derived executor's IIR-headed segment body, where the gray input
+/// comes from an upstream partition's materialized intermediate instead
+/// of an inline luma.
+#[inline(always)]
+pub(crate) fn iir_row_v<V: Vf32>(src: &[f32], carry: &mut [f32]) {
+    assert_eq!(src.len(), carry.len());
+    let n = carry.len();
+    let a = V::splat(IIR_ALPHA);
+    let b = V::splat(1.0 - IIR_ALPHA);
+    let mut k = 0;
+    while k + V::N <= n {
+        // SAFETY: k + V::N <= n bounds both loads and the store.
+        unsafe {
+            let g = V::load(src, k);
+            let c = V::load(carry, k);
+            a.mul(g).add(b.mul(c)).store(carry, k);
+        }
+        k += V::N;
+    }
+    for (i, c) in carry.iter_mut().enumerate().skip(k) {
+        *c = IIR_ALPHA * src[i] + (1.0 - IIR_ALPHA) * *c;
+    }
+}
+
+/// Frame-diff head over a pixel run:
+/// `dst[k] = |luma(cur[4k..]) - luma(prev[4k..])|` — the anomaly
+/// pipeline's temporal stage, matching `cpu_ref::frame_diff` operation
+/// for operation (two lumas, one subtract, one abs).
+#[inline(always)]
+pub(crate) fn luma_diff_v<V: Vf32>(cur: &[f32], prev: &[f32], dst: &mut [f32]) {
+    assert_eq!(cur.len(), 4 * dst.len());
+    assert_eq!(prev.len(), cur.len());
+    let n = dst.len();
+    let l0 = V::splat(LUMA[0]);
+    let l1 = V::splat(LUMA[1]);
+    let l2 = V::splat(LUMA[2]);
+    let mut k = 0;
+    while k + V::N <= n {
+        // SAFETY: k + V::N <= n bounds the gathers on both frames (as in
+        // `luma_v`) and the store by dst.len().
+        unsafe {
+            let c = luma_at::<V>(cur, k, l0, l1, l2);
+            let p = luma_at::<V>(prev, k, l0, l1, l2);
+            c.sub(p).abs().store(dst, k);
+        }
+        k += V::N;
+    }
+    for (i, d) in dst.iter_mut().enumerate().skip(k) {
+        let c = luma_px(&cur[4 * i..4 * i + 4]);
+        let p = luma_px(&prev[4 * i..4 * i + 4]);
+        *d = (c - p).abs();
+    }
+}
+
+/// Sobel L1 magnitude for one output row WITHOUT the threshold fold —
+/// the derived executor's standalone `GradientOperation` stage (when the
+/// DP plan cuts between gradient and threshold). Same shifted loads and
+/// exact `cpu_ref::gradient3` associations as [`sobel_row_v`].
+#[inline(always)]
+pub(crate) fn sobel_mag_row_v<V: Vf32>(
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    dst: &mut [f32],
+) {
+    let ow = dst.len();
+    assert!(r0.len() >= ow + 2 && r1.len() >= ow + 2 && r2.len() >= ow + 2);
+    let two = V::splat(2.0);
+    let mut j = 0;
+    while j + V::N <= ow {
+        // SAFETY: the widest shifted load ends at j + 2 + V::N - 1
+        // <= ow + 1 < row length; the store at j + V::N - 1 < ow.
+        unsafe {
+            let p00 = V::load(r0, j);
+            let p01 = V::load(r0, j + 1);
+            let p02 = V::load(r0, j + 2);
+            let p10 = V::load(r1, j);
+            let p12 = V::load(r1, j + 2);
+            let p20 = V::load(r2, j);
+            let p21 = V::load(r2, j + 1);
+            let p22 = V::load(r2, j + 2);
+            let gx = p02.sub(p00).add(two.mul(p12.sub(p10))).add(p22.sub(p20));
+            let gy = p20.sub(p00).add(two.mul(p21.sub(p01))).add(p22.sub(p02));
+            gx.abs().add(gy.abs()).store(dst, j);
+        }
+        j += V::N;
+    }
+    for (jj, d) in dst.iter_mut().enumerate().skip(j) {
+        let gx = (r0[jj + 2] - r0[jj])
+            + 2.0 * (r1[jj + 2] - r1[jj])
+            + (r2[jj + 2] - r2[jj]);
+        let gy = (r2[jj] - r0[jj])
+            + 2.0 * (r2[jj + 1] - r0[jj + 1])
+            + (r2[jj + 2] - r0[jj + 2]);
+        *d = gx.abs() + gy.abs();
+    }
+}
+
+/// Pointwise K5 (+detect) for one row: `dst = src >= th ? 255 : 0` plus
+/// this row's detect partials `(mass, Σj)` — the derived executor's
+/// threshold stage when its input is NOT a Sobel row (e.g. the anomaly
+/// pipeline's smooth → threshold edge, or a singleton Threshold
+/// segment). Partials follow the same exact-integer regrouping argument
+/// as [`sobel_row_v`].
+#[inline(always)]
+pub(crate) fn thresh_row_v<V: Vf32>(
+    src: &[f32],
+    th: f32,
+    dst: &mut [f32],
+) -> (f32, f32) {
+    let ow = dst.len();
+    assert!(src.len() >= ow);
+    let thv = V::splat(th);
+    let on = V::splat(255.0);
+    let zero = V::splat(0.0);
+    let one = V::splat(1.0);
+    let mut mass = 0.0f32;
+    let mut sumj = 0.0f32;
+    let mut j = 0;
+    while j + V::N <= ow {
+        // SAFETY: j + V::N <= ow bounds the load and the store.
+        unsafe {
+            let v = V::load(src, j);
+            v.ge_blend(thv, on, zero).store(dst, j);
+            let hit = v.ge_blend(thv, one, zero);
+            mass += hit.hsum();
+            sumj += hit.mul(V::iota(j as f32)).hsum();
+        }
+        j += V::N;
+    }
+    for (jj, d) in dst.iter_mut().enumerate().skip(j) {
+        let bin = if src[jj] >= th { 255.0 } else { 0.0 };
+        *d = bin;
+        if bin > 0.0 {
+            mass += 1.0;
+            sumj += jj as f32;
+        }
+    }
+    (mass, sumj)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::lanes::{Portable8, Scalar1};
@@ -327,6 +469,110 @@ mod tests {
             &mut row,
         );
         assert_eq!(&row[..], &smoothed[..w - 2]);
+    }
+
+    #[test]
+    fn portable_pipeline_kernels_match_scalar_lane_bitwise() {
+        // The derived-executor additions: IIR over gray rows, frame
+        // diff, standalone Sobel magnitude, pointwise threshold.
+        let mut g = Gen::new(74);
+        for n in WIDTHS {
+            let src = g.vec_f32(n, 0.0, 255.0);
+            let seed = g.vec_f32(n, 0.0, 255.0);
+            let (mut ca, mut cb) = (seed.clone(), seed.clone());
+            iir_row_v::<Scalar1>(&src, &mut ca);
+            iir_row_v::<Portable8>(&src, &mut cb);
+            assert_eq!(ca, cb, "iir_row n={n}");
+
+            let cur = g.vec_f32(4 * n, 0.0, 255.0);
+            let prev = g.vec_f32(4 * n, 0.0, 255.0);
+            let mut da = vec![0.0f32; n];
+            let mut db = vec![0.0f32; n];
+            luma_diff_v::<Scalar1>(&cur, &prev, &mut da);
+            luma_diff_v::<Portable8>(&cur, &prev, &mut db);
+            assert_eq!(da, db, "luma_diff n={n}");
+
+            let r0 = g.vec_f32(n + 2, 0.0, 255.0);
+            let r1 = g.vec_f32(n + 2, 0.0, 255.0);
+            let r2 = g.vec_f32(n + 2, 0.0, 255.0);
+            let mut ma = vec![0.0f32; n];
+            let mut mb = vec![0.0f32; n];
+            sobel_mag_row_v::<Scalar1>(&r0, &r1, &r2, &mut ma);
+            sobel_mag_row_v::<Portable8>(&r0, &r1, &r2, &mut mb);
+            assert_eq!(ma, mb, "sobel_mag n={n}");
+
+            let th = g.f32_in(0.0, 400.0);
+            let ta = thresh_row_v::<Scalar1>(&ma, th, &mut da);
+            let tb = thresh_row_v::<Portable8>(&mb, th, &mut db);
+            assert_eq!(da, db, "thresh row n={n} th={th}");
+            assert_eq!(ta, tb, "thresh partials n={n} th={th}");
+        }
+    }
+
+    #[test]
+    fn split_sobel_threshold_equals_fused_sobel_row() {
+        // sobel_mag_row_v + thresh_row_v must reproduce sobel_row_v's
+        // output AND partials bitwise — the derived executor relies on
+        // this when the DP plan cuts between K4 and K5.
+        let mut g = Gen::new(75);
+        for w in WIDTHS {
+            let r0 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r1 = g.vec_f32(w + 2, 0.0, 255.0);
+            let r2 = g.vec_f32(w + 2, 0.0, 255.0);
+            let th = g.f32_in(0.0, 400.0);
+            let mut fused = vec![0.0f32; w];
+            let pf = sobel_row_v::<Portable8>(&r0, &r1, &r2, th, &mut fused);
+            let mut mag = vec![0.0f32; w];
+            sobel_mag_row_v::<Portable8>(&r0, &r1, &r2, &mut mag);
+            let mut split = vec![0.0f32; w];
+            let ps = thresh_row_v::<Portable8>(&mag, th, &mut split);
+            assert_eq!(fused, split, "w={w} th={th}");
+            assert_eq!(pf, ps, "partials w={w} th={th}");
+        }
+    }
+
+    #[test]
+    fn scalar_pipeline_kernels_match_cpu_ref() {
+        let mut g = Gen::new(76);
+        let (t, h, w) = (3, 4, 5);
+        let px = g.vec_f32(t * h * w * 4, 0.0, 255.0);
+        // Frame diff vs the cpu_ref oracle, frame by frame.
+        let want = crate::cpu_ref::frame_diff(&px, t, h, w);
+        let plane = h * w;
+        for ft in 1..t {
+            let mut got = vec![0.0f32; plane];
+            luma_diff_v::<Scalar1>(
+                &px[ft * plane * 4..(ft + 1) * plane * 4],
+                &px[(ft - 1) * plane * 4..ft * plane * 4],
+                &mut got,
+            );
+            assert_eq!(&got[..], &want[(ft - 1) * plane..ft * plane]);
+        }
+        // IIR over a gray plane vs cpu_ref::iir.
+        let gray = crate::cpu_ref::rgb2gray(&px, t, h, w);
+        let want = crate::cpu_ref::iir(&gray, t, h, w, IIR_ALPHA);
+        let mut carry = gray[..plane].to_vec();
+        for ft in 1..t {
+            iir_row_v::<Scalar1>(
+                &gray[ft * plane..(ft + 1) * plane],
+                &mut carry,
+            );
+            assert_eq!(&carry[..], &want[(ft - 1) * plane..ft * plane]);
+        }
+        // Standalone Sobel magnitude vs cpu_ref::gradient3.
+        let want = crate::cpu_ref::gradient3(&gray, 1, h, w);
+        let mut row = vec![0.0f32; w - 2];
+        sobel_mag_row_v::<Scalar1>(
+            &gray[..w],
+            &gray[w..2 * w],
+            &gray[2 * w..3 * w],
+            &mut row,
+        );
+        assert_eq!(&row[..], &want[..w - 2]);
+        // Pointwise threshold vs cpu_ref::threshold.
+        let mut bin = vec![0.0f32; row.len()];
+        thresh_row_v::<Scalar1>(&row, 96.0, &mut bin);
+        assert_eq!(bin, crate::cpu_ref::threshold(&row, 96.0));
     }
 
     #[test]

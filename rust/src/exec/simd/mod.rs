@@ -175,6 +175,10 @@ pub struct LaneKernels {
     luma_iir_into_fn: fn(&[f32], &[f32], &mut [f32]),
     smooth3_fn: fn(&[f32], &[f32], &[f32], &mut [f32]),
     sobel_row_fn: fn(&[f32], &[f32], &[f32], f32, &mut [f32]) -> (f32, f32),
+    iir_row_fn: fn(&[f32], &mut [f32]),
+    luma_diff_fn: fn(&[f32], &[f32], &mut [f32]),
+    sobel_mag_row_fn: fn(&[f32], &[f32], &[f32], &mut [f32]),
+    thresh_row_fn: fn(&[f32], f32, &mut [f32]) -> (f32, f32),
 }
 
 impl LaneKernels {
@@ -191,6 +195,10 @@ impl LaneKernels {
                 luma_iir_into_fn: kernels::luma_iir_into_v::<Scalar1>,
                 smooth3_fn: kernels::smooth3_v::<Scalar1>,
                 sobel_row_fn: kernels::sobel_row_v::<Scalar1>,
+                iir_row_fn: kernels::iir_row_v::<Scalar1>,
+                luma_diff_fn: kernels::luma_diff_v::<Scalar1>,
+                sobel_mag_row_fn: kernels::sobel_mag_row_v::<Scalar1>,
+                thresh_row_fn: kernels::thresh_row_v::<Scalar1>,
             },
             Isa::Portable => LaneKernels {
                 isa,
@@ -199,6 +207,10 @@ impl LaneKernels {
                 luma_iir_into_fn: kernels::luma_iir_into_v::<Portable8>,
                 smooth3_fn: kernels::smooth3_v::<Portable8>,
                 sobel_row_fn: kernels::sobel_row_v::<Portable8>,
+                iir_row_fn: kernels::iir_row_v::<Portable8>,
+                luma_diff_fn: kernels::luma_diff_v::<Portable8>,
+                sobel_mag_row_fn: kernels::sobel_mag_row_v::<Portable8>,
+                thresh_row_fn: kernels::thresh_row_v::<Portable8>,
             },
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             Isa::Sse2 => LaneKernels {
@@ -208,6 +220,10 @@ impl LaneKernels {
                 luma_iir_into_fn: x86::luma_iir_into_sse2,
                 smooth3_fn: x86::smooth3_sse2,
                 sobel_row_fn: x86::sobel_row_sse2,
+                iir_row_fn: x86::iir_row_sse2,
+                luma_diff_fn: x86::luma_diff_sse2,
+                sobel_mag_row_fn: x86::sobel_mag_row_sse2,
+                thresh_row_fn: x86::thresh_row_sse2,
             },
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             Isa::Avx2 => LaneKernels {
@@ -217,6 +233,10 @@ impl LaneKernels {
                 luma_iir_into_fn: x86::luma_iir_into_avx2,
                 smooth3_fn: x86::smooth3_avx2,
                 sobel_row_fn: x86::sobel_row_avx2,
+                iir_row_fn: x86::iir_row_avx2,
+                luma_diff_fn: x86::luma_diff_avx2,
+                sobel_mag_row_fn: x86::sobel_mag_row_avx2,
+                thresh_row_fn: x86::thresh_row_avx2,
             },
             #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
             Isa::Sse2 | Isa::Avx2 => {
@@ -278,6 +298,48 @@ impl LaneKernels {
         dst: &mut [f32],
     ) -> (f32, f32) {
         (self.sobel_row_fn)(r0, r1, r2, th, dst)
+    }
+
+    /// K2 alone, in place over a gray row: `c = α·src + (1-α)·c` (the
+    /// derived executor's IIR-headed segments).
+    #[inline]
+    pub(crate) fn iir_row(&self, src: &[f32], carry: &mut [f32]) {
+        (self.iir_row_fn)(src, carry)
+    }
+
+    /// Frame diff: `dst[k] = |luma(cur[4k..]) - luma(prev[4k..])|` (the
+    /// anomaly pipeline's temporal head).
+    #[inline]
+    pub(crate) fn luma_diff(
+        &self,
+        cur: &[f32],
+        prev: &[f32],
+        dst: &mut [f32],
+    ) {
+        (self.luma_diff_fn)(cur, prev, dst)
+    }
+
+    /// K4 alone: one Sobel L1 magnitude row, no threshold fold.
+    #[inline]
+    pub(crate) fn sobel_mag_row(
+        &self,
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        dst: &mut [f32],
+    ) {
+        (self.sobel_mag_row_fn)(r0, r1, r2, dst)
+    }
+
+    /// K5 alone (+detect partials) for one row; returns `(mass, Σj)`.
+    #[inline]
+    pub(crate) fn thresh_row(
+        &self,
+        src: &[f32],
+        th: f32,
+        dst: &mut [f32],
+    ) -> (f32, f32) {
+        (self.thresh_row_fn)(src, th, dst)
     }
 }
 
@@ -349,6 +411,21 @@ mod tests {
                 scalar.luma_iir_into(&px2, &a, &mut da);
                 k.luma_iir_into(&px2, &b, &mut db);
                 assert_eq!(da, db, "luma_iir_into isa={isa} w={w}");
+                // The derived-executor kernels, same bit contract.
+                scalar.iir_row(&r0[..w], &mut a);
+                k.iir_row(&r0[..w], &mut b);
+                assert_eq!(a, b, "iir_row isa={isa} w={w}");
+                let px3 = g.vec_f32(4 * w, 0.0, 255.0);
+                scalar.luma_diff(&px2, &px3, &mut da);
+                k.luma_diff(&px2, &px3, &mut db);
+                assert_eq!(da, db, "luma_diff isa={isa} w={w}");
+                scalar.sobel_mag_row(&r0, &r1, &r2, &mut a);
+                k.sobel_mag_row(&r0, &r1, &r2, &mut b);
+                assert_eq!(a, b, "sobel_mag isa={isa} w={w}");
+                let ta = scalar.thresh_row(&a, th, &mut da);
+                let tb = k.thresh_row(&b, th, &mut db);
+                assert_eq!(da, db, "thresh isa={isa} w={w}");
+                assert_eq!(ta, tb, "thresh partials isa={isa} w={w}");
             }
         }
     }

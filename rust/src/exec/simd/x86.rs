@@ -268,6 +268,30 @@ lane_entries!(
         (r0: &[f32], r1: &[f32], r2: &[f32], th: f32, dst: &mut [f32])
             -> (f32, f32)
     ),
+    (
+        iir_row_sse2_tf,
+        iir_row_sse2,
+        iir_row_v,
+        (src: &[f32], carry: &mut [f32])
+    ),
+    (
+        luma_diff_sse2_tf,
+        luma_diff_sse2,
+        luma_diff_v,
+        (cur: &[f32], prev: &[f32], dst: &mut [f32])
+    ),
+    (
+        sobel_mag_row_sse2_tf,
+        sobel_mag_row_sse2,
+        sobel_mag_row_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], dst: &mut [f32])
+    ),
+    (
+        thresh_row_sse2_tf,
+        thresh_row_sse2,
+        thresh_row_v,
+        (src: &[f32], th: f32, dst: &mut [f32]) -> (f32, f32)
+    ),
 );
 
 lane_entries!(
@@ -298,6 +322,30 @@ lane_entries!(
         sobel_row_v,
         (r0: &[f32], r1: &[f32], r2: &[f32], th: f32, dst: &mut [f32])
             -> (f32, f32)
+    ),
+    (
+        iir_row_avx2_tf,
+        iir_row_avx2,
+        iir_row_v,
+        (src: &[f32], carry: &mut [f32])
+    ),
+    (
+        luma_diff_avx2_tf,
+        luma_diff_avx2,
+        luma_diff_v,
+        (cur: &[f32], prev: &[f32], dst: &mut [f32])
+    ),
+    (
+        sobel_mag_row_avx2_tf,
+        sobel_mag_row_avx2,
+        sobel_mag_row_v,
+        (r0: &[f32], r1: &[f32], r2: &[f32], dst: &mut [f32])
+    ),
+    (
+        thresh_row_avx2_tf,
+        thresh_row_avx2,
+        thresh_row_v,
+        (src: &[f32], th: f32, dst: &mut [f32]) -> (f32, f32)
     ),
 );
 
@@ -373,6 +421,22 @@ mod tests {
             kernels::luma_iir_v::<Scalar1>(&px2, &mut a);
             luma_iir_sse2(&px2, &mut b);
             assert_eq!(a, b, "luma_iir sse2 w={w}");
+
+            kernels::iir_row_v::<Scalar1>(&r0[..w], &mut a);
+            iir_row_sse2(&r0[..w], &mut b);
+            assert_eq!(a, b, "iir_row sse2 w={w}");
+            let px3 = g.vec_f32(4 * w, 0.0, 255.0);
+            kernels::luma_diff_v::<Scalar1>(&px2, &px3, &mut a);
+            luma_diff_sse2(&px2, &px3, &mut b);
+            assert_eq!(a, b, "luma_diff sse2 w={w}");
+            kernels::sobel_mag_row_v::<Scalar1>(&r0, &r1, &r2, &mut a);
+            sobel_mag_row_sse2(&r0, &r1, &r2, &mut b);
+            assert_eq!(a, b, "sobel_mag sse2 w={w}");
+            let mut ta = vec![0.0f32; w];
+            let mut tb = vec![0.0f32; w];
+            let pa = kernels::thresh_row_v::<Scalar1>(&a, th, &mut ta);
+            let pb = thresh_row_sse2(&b, th, &mut tb);
+            assert_eq!((ta, pa), (tb, pb), "thresh sse2 w={w}");
         }
     }
 
@@ -410,6 +474,22 @@ mod tests {
             kernels::luma_iir_v::<Scalar1>(&px2, &mut a);
             luma_iir_avx2(&px2, &mut b);
             assert_eq!(a, b, "luma_iir avx2 w={w}");
+
+            kernels::iir_row_v::<Scalar1>(&r0[..w], &mut a);
+            iir_row_avx2(&r0[..w], &mut b);
+            assert_eq!(a, b, "iir_row avx2 w={w}");
+            let px3 = g.vec_f32(4 * w, 0.0, 255.0);
+            kernels::luma_diff_v::<Scalar1>(&px2, &px3, &mut a);
+            luma_diff_avx2(&px2, &px3, &mut b);
+            assert_eq!(a, b, "luma_diff avx2 w={w}");
+            kernels::sobel_mag_row_v::<Scalar1>(&r0, &r1, &r2, &mut a);
+            sobel_mag_row_avx2(&r0, &r1, &r2, &mut b);
+            assert_eq!(a, b, "sobel_mag avx2 w={w}");
+            let mut ta = vec![0.0f32; w];
+            let mut tb = vec![0.0f32; w];
+            let pa = kernels::thresh_row_v::<Scalar1>(&a, th, &mut ta);
+            let pb = thresh_row_avx2(&b, th, &mut tb);
+            assert_eq!((ta, pa), (tb, pb), "thresh avx2 w={w}");
         }
     }
 }

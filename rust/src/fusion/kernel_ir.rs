@@ -138,69 +138,16 @@ pub const BYTES_PER_VALUE: usize = 4;
 
 /// The paper's Table II / Table IV pipeline: K1..K6 in execution order.
 ///
-/// Flop counts are per output pixel for our concrete kernels:
-/// K1 luma = 3 mul + 2 add; K2 IIR = 2 mul + 2 add (incl. 1-α);
-/// K3 3×3 binomial = 9 mul + 8 add + 1 scale; K4 Sobel = 2×(9 fma) + abs/add;
-/// K5 compare+select; K6 small-matrix Kalman per *feature* not per pixel —
-/// modeled per-pixel-equivalent as its measurement extraction.
+/// Delegates to the registered `facial` [`crate::pipeline::PipelineSpec`]
+/// — the single source of truth for kernel names, radii, and flop
+/// counts (see `pipeline::facial` for the per-kernel accounting).
 pub fn paper_pipeline() -> Vec<KernelSpec> {
-    vec![
-        KernelSpec {
-            name: "rgbToGray",
-            radii: Radii::point(),
-            in_channels: 4,
-            out_channels: 1,
-            flops_per_pixel: 5.0,
-            dep_on_prev: DepType::ThreadToThread,
-        },
-        KernelSpec {
-            name: "IIRFilter",
-            radii: Radii::new(0, 0, 1),
-            in_channels: 1,
-            out_channels: 1,
-            flops_per_pixel: 4.0,
-            dep_on_prev: DepType::ThreadToThread,
-        },
-        KernelSpec {
-            name: "GaussianFilter",
-            radii: Radii::new(1, 1, 0),
-            in_channels: 1,
-            out_channels: 1,
-            flops_per_pixel: 18.0,
-            dep_on_prev: DepType::ThreadToMultiThread,
-        },
-        KernelSpec {
-            name: "GradientOperation",
-            radii: Radii::new(1, 1, 0),
-            in_channels: 1,
-            out_channels: 1,
-            flops_per_pixel: 22.0,
-            dep_on_prev: DepType::ThreadToMultiThread,
-        },
-        KernelSpec {
-            name: "Threshold",
-            radii: Radii::point(),
-            in_channels: 1,
-            out_channels: 1,
-            flops_per_pixel: 2.0,
-            dep_on_prev: DepType::ThreadToThread,
-        },
-        KernelSpec {
-            name: "KalmanFilter",
-            radii: Radii::new(0, 0, 1),
-            in_channels: 1,
-            out_channels: 1,
-            flops_per_pixel: 3.0,
-            dep_on_prev: DepType::KernelToKernel,
-        },
-    ]
+    crate::pipeline::facial().full_kernels()
 }
 
 /// The fusable prefix K1..K5 (everything before the KK-dependent tracker).
 pub fn paper_fusable_run() -> Vec<KernelSpec> {
-    let mut v = paper_pipeline();
-    v.truncate(5);
-    v
+    crate::pipeline::facial().kernel_run()
 }
 
 #[cfg(test)]

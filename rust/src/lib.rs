@@ -30,17 +30,24 @@
 //! the Kernelet-style slice scheduling that keeps a shared executor
 //! saturated.
 //!
+//! Workloads are described, not hand-wired: a [`pipeline::PipelineSpec`]
+//! names a typed kernel DAG (the paper's K1..K5 `facial` chain and a
+//! frame-diff `anomaly` detector ship registered), the planner's DP
+//! partitions it per machine, and the derived CPU executor
+//! (`exec::DerivedCpu`) compiles whatever partition wins into banded
+//! single-pass fused segments at runtime — rolling line buffers, carry
+//! slabs, and pooled intermediates generated from the spec.
+//!
 //! Execution is backend-pluggable ([`exec`]): `Backend::Pjrt` dispatches
 //! the AOT artifact chain; `Backend::Cpu` runs the same engine against
-//! native executors selected by the plan's DP-chosen partition — the
-//! fused single-pass `FusedCpu` (optionally band-parallel within each
-//! box via `intra_box_threads`), the two-partition `TwoFusedCpu` (one
-//! materialized intermediate), or the materializing `StagedCpu`
-//! baseline — so the full path runs and is tested offline. The fused
-//! executors' inner loops run on the [`exec::simd`] vector layer:
-//! lane backends (scalar / portable / SSE2 / AVX2) selected once per
-//! executor by runtime dispatch ([`config::Isa`], CLI `--isa`), every
-//! one bit-identical to the scalar walk.
+//! the derived executor (optionally band-parallel within each box via
+//! `intra_box_threads`), with the hand-written `FusedCpu` /
+//! `TwoFusedCpu` / `StagedCpu` retained as equivalence baselines — so
+//! the full path runs and is tested offline. The executors' inner loops
+//! run on the [`exec::simd`] vector layer: lane backends (scalar /
+//! portable / SSE2 / AVX2) selected once per executor by runtime
+//! dispatch ([`config::Isa`], CLI `--isa`), every one bit-identical to
+//! the scalar walk.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs once; the PJRT backend loads `artifacts/*.hlo.txt` via the
@@ -73,6 +80,7 @@ pub mod error;
 pub mod exec;
 pub mod fusion;
 pub mod gpusim;
+pub mod pipeline;
 pub mod prop;
 pub mod runtime;
 pub mod tracking;

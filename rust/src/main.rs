@@ -3,11 +3,13 @@
 //! ```text
 //! kfuse plan     [--device k20|c1060|gtx750ti] [--input 256x256x1000]
 //! kfuse run      [--mode full|two|none|auto] [--backend pjrt|cpu]
+//!                [--pipeline facial|anomaly]
 //!                [--device k20|c1060|gtx750ti]
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
 //!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
 //!                [--markers M] [--queue-policy fifo|rr|drr] [--queue N]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
+//!                [--pipeline facial|anomaly]
 //!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
 //!                [--size 256] [--frames 256] [--intra-threads N]
 //!                [--isa auto|scalar|portable|sse2|avx2]
@@ -15,11 +17,14 @@
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
 //!
-//! `--backend cpu` swaps the PJRT artifact chain for the native CPU
-//! executors, so `run`/`serve` work on hosts without `artifacts/`. The
-//! executor follows the plan's DP-chosen partition: `--mode full` runs
-//! the single-pass `FusedCpu`, `--mode two` the two-partition
-//! `TwoFusedCpu`, `--mode none` the staged baseline, and `--mode auto`
+//! `--backend cpu` swaps the PJRT artifact chain for the native derived
+//! CPU executor, so `run`/`serve` work on hosts without `artifacts/`.
+//! `--pipeline` picks which registered kernel DAG the engine plans and
+//! executes (`facial` — the paper's K1..K5 chain, the default — or
+//! `anomaly`, the frame-diff detector; non-facial pipelines need
+//! `--backend cpu`). The executor COMPILES the plan's DP-chosen
+//! partition into banded fused segment programs, so `--mode
+//! full|two|none` all lower to the same machinery, and `--mode auto`
 //! lets the planner pick — optimizing for the `--device` model (`k20`
 //! default; accepted names: `k20`, `c1060`, `gtx750ti`/`750ti`).
 //! `--intra-threads N` fans each box out to N row bands on the fused
@@ -143,6 +148,12 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(m) = args.get("mode") {
         cfg.mode = FusionMode::parse(m)?;
     }
+    if let Some(p) = args.get("pipeline") {
+        // Validate eagerly for a crisp CLI error; validate() re-checks
+        // the name (and the PJRT-requires-facial rule) at build.
+        kfuse::pipeline::by_name(p)?;
+        cfg.pipeline = p.to_string();
+    }
     if let Some(i) = args.get("isa") {
         // Parse eagerly; validate() additionally rejects backends this
         // host cannot run before any engine state is built.
@@ -200,10 +211,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.roi_only = args.get("roi").map(|v| v == "true" || v == "1")
         .unwrap_or(cfg.roi_only);
     println!(
-        "run: {} on {} | {}x{} x {} frames | box {}x{}x{} | {} workers \
-         x {} band threads | isa {}{}",
+        "run: {} on {} | pipeline {} | {}x{} x {} frames | box {}x{}x{} \
+         | {} workers x {} band threads | isa {}{}",
         cfg.mode.name(),
         cfg.backend.name(),
+        cfg.pipeline,
         cfg.frame_size,
         cfg.frame_size,
         cfg.frames,
@@ -253,11 +265,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let (clip, _) = coordinator::synth_clip(&cfg, 42);
     println!(
-        "serve: {} fps ingest | {} on {} | {} frames | planned on {} | \
-         ingest depth {} | queue policy {}",
+        "serve: {} fps ingest | {} on {} | pipeline {} | {} frames | \
+         planned on {} | ingest depth {} | queue policy {}",
         cfg.fps,
         cfg.mode.name(),
         cfg.backend.name(),
+        cfg.pipeline,
         cfg.frames,
         cfg.device,
         cfg.ingest_depth,
@@ -327,12 +340,15 @@ fn main() {
                  subcommands: plan | run | serve | simulate | codegen\n\
                  devices (--device, used by planning and --mode auto): \
                  {}\n\
+                 pipelines (--pipeline, planned + compiled by the \
+                 derived executor): {}\n\
                  multiplexing: --queue-policy fifo|rr|drr, --queue N \
                  (per-job lane depth), --ingest-depth N (serve staging)\n\
                  vector layer: --isa auto|scalar|portable|sse2|avx2 \
                  (fused CPU lane backend; all bit-identical)\n\
                  (see crate docs / README / ARCHITECTURE.md for all flags)",
-                DeviceSpec::NAMES.join(" | ")
+                DeviceSpec::NAMES.join(" | "),
+                kfuse::pipeline::names().join(" | ")
             );
             Ok(())
         }

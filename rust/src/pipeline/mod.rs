@@ -1,0 +1,532 @@
+//! Pipeline descriptions: typed kernel DAGs the fused executor is
+//! derived from.
+//!
+//! The paper's fusion model is general — any sequence of simple kernels
+//! with pixel-level data dependencies can be partitioned for maximum
+//! throughput — but until this layer existed the execution side was
+//! hard-wired to the five-kernel facial-tracking chain. A
+//! [`PipelineSpec`] closes that gap: it names a linear DAG of typed
+//! stages ([`StageKind`]) over the `exec/simd` lane kernels, carrying
+//! per-stage [`KernelSpec`] metadata (radii / flops / deps) so the
+//! existing `fusion::kernel_ir` + `fusion::dp` planner consumes it
+//! unchanged, while `exec::DerivedCpu` compiles the DP-chosen partition
+//! into banded single-pass segment programs at runtime.
+//!
+//! Two pipelines ship registered:
+//!
+//! * **`facial`** — the paper's K1..K6 chain (K1..K5 fusable + the
+//!   KK-dependent Kalman tracker). This is the single source of truth
+//!   for the kernel names/flops/radii that used to live in
+//!   `fusion::kernel_ir::paper_pipeline` (which now delegates here).
+//! * **`anomaly`** — frame-diff anomaly detection
+//!   (diff → smooth → threshold+count), the Eä `video_anomaly` shape:
+//!   no hand-written executor exists for it anywhere; the derived
+//!   executor is generated from this spec.
+//!
+//! Registering a new pipeline = adding a constructor here (validated by
+//! [`PipelineSpec::validate`] against the stage grammar the derived
+//! executor supports) and listing it in [`by_name`]. Everything else —
+//! planning, banding, scratch sizing, stats labels, the CLI `--pipeline`
+//! flag — follows from the spec.
+
+use crate::fusion::kernel_ir::{DepType, KernelSpec, Radii};
+use crate::{Error, Result};
+
+/// The typed operation a stage performs — the contract between a spec
+/// and the derived executor, which knows how to emit exactly these
+/// shapes from the `exec/simd` lane kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Pointwise RGBA → gray luma map (4 channels in, 1 out).
+    Luma,
+    /// Temporal pointwise |luma(frame t) − luma(frame t−1)| over RGBA
+    /// input (4 channels in, 1 out, dt = 1).
+    FrameDiff,
+    /// First-order IIR carry over frames: y[t] = α·x[t] + (1−α)·y[t−1]
+    /// with warm start y[−1] = x[0] (1 channel, dt = 1).
+    Iir,
+    /// 3×3 binomial smoothing, valid mode (spatial radius 1).
+    Smooth3,
+    /// 3×3 Sobel L1 gradient magnitude, valid mode (spatial radius 1).
+    Sobel3,
+    /// Pointwise ≥-threshold binarization to {0, 255}; when the plan
+    /// carries a detect stage, the per-frame (mass, Σi, Σj) reduction
+    /// folds into this stage.
+    Threshold,
+}
+
+impl StageKind {
+    /// The stencil radii this kind MUST declare — the derived executor
+    /// sizes slabs and line buffers from radii, so a mismatch between
+    /// kind and radii would corrupt geometry silently.
+    fn required_radii(self) -> Radii {
+        match self {
+            StageKind::Luma | StageKind::Threshold => Radii::point(),
+            StageKind::FrameDiff | StageKind::Iir => Radii::new(0, 0, 1),
+            StageKind::Smooth3 | StageKind::Sobel3 => Radii::new(1, 1, 0),
+        }
+    }
+
+    /// Whether this kind is a 3×3 spatial stencil (drives the
+    /// Two-Fusion cut point and derived line-buffer sizing).
+    pub fn is_stencil(self) -> bool {
+        matches!(self, StageKind::Smooth3 | StageKind::Sobel3)
+    }
+}
+
+/// One fusable stage: the typed operation plus the planner-facing
+/// metadata ([`KernelSpec`]: radii, channel widths, flops, dependency
+/// on the previous stage).
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// What the stage computes (drives derived code emission).
+    pub kind: StageKind,
+    /// How the planner models it (drives the DP cost model).
+    pub kernel: KernelSpec,
+}
+
+/// A registered pipeline: a linear chain of fusable stages plus an
+/// optional non-fusable tail the planner still models (the paper's
+/// KernelToKernel-dependent stages, e.g. the Kalman tracker).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Registry name (`--pipeline` value, stats label).
+    pub name: &'static str,
+    /// The fusable stage chain, in execution order.
+    pub stages: Vec<StageSpec>,
+    /// Non-fusable tail kernels (KernelToKernel deps) that follow the
+    /// fusable run — modeled by the planner, executed outside the box
+    /// path (the tracker layer).
+    pub post: Vec<KernelSpec>,
+}
+
+impl PipelineSpec {
+    /// The fusable run as the planner sees it (one [`KernelSpec`] per
+    /// stage) — feed this to `fusion::Model::build` / `solve_dp`.
+    pub fn kernel_run(&self) -> Vec<KernelSpec> {
+        self.stages.iter().map(|s| s.kernel.clone()).collect()
+    }
+
+    /// The full chain including the non-fusable tail (the facial
+    /// pipeline's Table II view: K1..K6).
+    pub fn full_kernels(&self) -> Vec<KernelSpec> {
+        let mut v = self.kernel_run();
+        v.extend(self.post.iter().cloned());
+        v
+    }
+
+    /// Cumulative halo of the fusable run (chained-stencil sum — the
+    /// corrected Algorithm 2 accumulator).
+    pub fn halo(&self) -> Radii {
+        self.stages
+            .iter()
+            .fold(Radii::point(), |acc, s| acc.sum(s.kernel.radii))
+    }
+
+    /// Number of fusable stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Whether the spec has no fusable stages (never true for a
+    /// validated spec — validation requires at least one stage).
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Stage names in execution order (spec-derived observability
+    /// labels).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.kernel.name).collect()
+    }
+
+    /// Whether the fusable run ends in a threshold stage — the gate for
+    /// the detect reduction (and the PJRT threshold operand).
+    pub fn ends_with_threshold(&self) -> bool {
+        matches!(
+            self.stages.last().map(|s| s.kind),
+            Some(StageKind::Threshold)
+        )
+    }
+
+    /// The Two-Fusion cut point: index of the first stencil stage,
+    /// clamped inside `[1, len-1]` — partition A is the
+    /// pointwise/temporal prologue, partition B the stencil tail (the
+    /// paper's `{K1..K2}{K3..K5}` shape generalized). Returns `len` for
+    /// a single-stage pipeline (no cut possible).
+    pub fn two_fusion_cut(&self) -> usize {
+        let n = self.len();
+        if n < 2 {
+            return n;
+        }
+        let head = self
+            .stages
+            .iter()
+            .position(|s| s.kind.is_stencil())
+            .unwrap_or(n);
+        head.clamp(1, n - 1)
+    }
+
+    /// Human label for a contiguous stage range `[start, start+len)`,
+    /// e.g. `{rgbToGray..Threshold}` or `{FrameDiff}`.
+    pub fn segment_label(&self, start: usize, len: usize) -> String {
+        let names = self.stage_names();
+        if len == 1 {
+            format!("{{{}}}", names[start])
+        } else {
+            format!("{{{}..{}}}", names[start], names[start + len - 1])
+        }
+    }
+
+    /// Check the spec against the stage grammar the derived executor
+    /// can compile:
+    ///
+    /// ```text
+    /// (Luma | FrameDiff) Iir? (Smooth3 | Sobel3){0..2} Threshold?
+    /// ```
+    ///
+    /// plus the structural invariants every layer above assumes:
+    /// exactly one temporal stage (cumulative `dt == 1` — the serve
+    /// path's 1-frame window offset), RGBA (4-channel) input on the
+    /// first stage only, radii consistent with each stage kind, and a
+    /// KernelToKernel-free fusable run (KK deps belong in `post`).
+    pub fn validate(&self) -> Result<()> {
+        let bad = |m: String| Err(Error::Plan(format!("pipeline {}: {m}", self.name)));
+        if self.stages.is_empty() {
+            return bad("no fusable stages".into());
+        }
+        for (k, s) in self.stages.iter().enumerate() {
+            if s.kernel.radii != s.kind.required_radii() {
+                return bad(format!(
+                    "stage {} ({}) declares radii {:?}, kind {:?} requires {:?}",
+                    k,
+                    s.kernel.name,
+                    s.kernel.radii,
+                    s.kind,
+                    s.kind.required_radii()
+                ));
+            }
+            let want_in = if k == 0 { 4 } else { 1 };
+            if s.kernel.in_channels != want_in || s.kernel.out_channels != 1 {
+                return bad(format!(
+                    "stage {} ({}) channels {}→{}, expected {}→1",
+                    k,
+                    s.kernel.name,
+                    s.kernel.in_channels,
+                    s.kernel.out_channels,
+                    want_in
+                ));
+            }
+            if s.kernel.dep_on_prev == DepType::KernelToKernel {
+                return bad(format!(
+                    "stage {} ({}) is KernelToKernel-dependent; \
+                     it belongs in `post`, not the fusable run",
+                    k, s.kernel.name
+                ));
+            }
+        }
+        // Grammar walk: head, optional IIR, up to two stencils,
+        // optional threshold — nothing after.
+        let kinds: Vec<StageKind> = self.stages.iter().map(|s| s.kind).collect();
+        let mut i = 0;
+        if !matches!(kinds[i], StageKind::Luma | StageKind::FrameDiff) {
+            return bad(format!(
+                "must start with Luma or FrameDiff, got {:?}",
+                kinds[i]
+            ));
+        }
+        i += 1;
+        if kinds.get(i) == Some(&StageKind::Iir) {
+            i += 1;
+        }
+        let mut stencils = 0;
+        while kinds.get(i).is_some_and(|k| k.is_stencil()) {
+            stencils += 1;
+            i += 1;
+        }
+        if stencils > 2 {
+            return bad(format!(
+                "{stencils} chained stencils; the derived executor \
+                 supports at most 2 (one rolling 3-line window)"
+            ));
+        }
+        if kinds.get(i) == Some(&StageKind::Threshold) {
+            i += 1;
+        }
+        if i != kinds.len() {
+            return bad(format!(
+                "stage {} ({:?}) not accepted by the grammar \
+                 (Luma|FrameDiff) Iir? Stencil{{0..2}} Threshold?",
+                i, kinds[i]
+            ));
+        }
+        // Exactly one temporal stage: the serve path offsets every
+        // window by one halo frame, and the derived segment programs
+        // carry one frame of history.
+        let h = self.halo();
+        if h.dt != 1 {
+            return bad(format!(
+                "cumulative temporal halo dt={} (need exactly 1)",
+                h.dt
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The paper's facial-tracking pipeline: K1..K5 fusable + K6 Kalman
+/// tail. Flop counts per output pixel for our concrete kernels:
+/// K1 luma = 3 mul + 2 add; K2 IIR = 2 mul + 2 add (incl. 1−α);
+/// K3 3×3 binomial = 9 mul + 8 add + 1 scale; K4 Sobel = 2×(9 fma) +
+/// abs/add; K5 compare+select; K6 small-matrix Kalman per *feature*,
+/// modeled per-pixel-equivalent as its measurement extraction.
+pub fn facial() -> PipelineSpec {
+    PipelineSpec {
+        name: "facial",
+        stages: vec![
+            StageSpec {
+                kind: StageKind::Luma,
+                kernel: KernelSpec {
+                    name: "rgbToGray",
+                    radii: Radii::point(),
+                    in_channels: 4,
+                    out_channels: 1,
+                    flops_per_pixel: 5.0,
+                    dep_on_prev: DepType::ThreadToThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Iir,
+                kernel: KernelSpec {
+                    name: "IIRFilter",
+                    radii: Radii::new(0, 0, 1),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 4.0,
+                    dep_on_prev: DepType::ThreadToThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Smooth3,
+                kernel: KernelSpec {
+                    name: "GaussianFilter",
+                    radii: Radii::new(1, 1, 0),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 18.0,
+                    dep_on_prev: DepType::ThreadToMultiThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Sobel3,
+                kernel: KernelSpec {
+                    name: "GradientOperation",
+                    radii: Radii::new(1, 1, 0),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 22.0,
+                    dep_on_prev: DepType::ThreadToMultiThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Threshold,
+                kernel: KernelSpec {
+                    name: "Threshold",
+                    radii: Radii::point(),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 2.0,
+                    dep_on_prev: DepType::ThreadToThread,
+                },
+            },
+        ],
+        post: vec![KernelSpec {
+            name: "KalmanFilter",
+            radii: Radii::new(0, 0, 1),
+            in_channels: 1,
+            out_channels: 1,
+            flops_per_pixel: 3.0,
+            dep_on_prev: DepType::KernelToKernel,
+        }],
+    }
+}
+
+/// Frame-diff anomaly detection (the Eä `video_anomaly` shape):
+/// |luma(t) − luma(t−1)| → 3×3 binomial → threshold + count. Flops:
+/// diff = 2×(3 mul + 2 add) + sub + abs; smooth/threshold as in the
+/// facial pipeline. No non-fusable tail.
+pub fn anomaly() -> PipelineSpec {
+    PipelineSpec {
+        name: "anomaly",
+        stages: vec![
+            StageSpec {
+                kind: StageKind::FrameDiff,
+                kernel: KernelSpec {
+                    name: "FrameDiff",
+                    radii: Radii::new(0, 0, 1),
+                    in_channels: 4,
+                    out_channels: 1,
+                    flops_per_pixel: 12.0,
+                    dep_on_prev: DepType::ThreadToThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Smooth3,
+                kernel: KernelSpec {
+                    name: "GaussianFilter",
+                    radii: Radii::new(1, 1, 0),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 18.0,
+                    dep_on_prev: DepType::ThreadToMultiThread,
+                },
+            },
+            StageSpec {
+                kind: StageKind::Threshold,
+                kernel: KernelSpec {
+                    name: "Threshold",
+                    radii: Radii::point(),
+                    in_channels: 1,
+                    out_channels: 1,
+                    flops_per_pixel: 2.0,
+                    dep_on_prev: DepType::ThreadToThread,
+                },
+            },
+        ],
+        post: Vec::new(),
+    }
+}
+
+/// Names of every registered pipeline, in registry order.
+pub fn names() -> &'static [&'static str] {
+    &["facial", "anomaly"]
+}
+
+/// Look up a registered pipeline by name (the `--pipeline` flag /
+/// `RunConfig::pipeline` path). Every returned spec is validated.
+pub fn by_name(name: &str) -> Result<PipelineSpec> {
+    let spec = match name {
+        "facial" => facial(),
+        "anomaly" => anomaly(),
+        _ => {
+            return Err(Error::Config(format!(
+                "unknown pipeline '{name}' (registered: {})",
+                names().join(", ")
+            )))
+        }
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registered_pipelines_validate() {
+        for name in names() {
+            let spec = by_name(name).unwrap();
+            assert_eq!(&spec.name, name);
+            assert!(!spec.is_empty());
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn facial_matches_the_paper_tables() {
+        let spec = facial();
+        assert_eq!(spec.len(), 5);
+        assert_eq!(
+            spec.stage_names(),
+            [
+                "rgbToGray",
+                "IIRFilter",
+                "GaussianFilter",
+                "GradientOperation",
+                "Threshold"
+            ]
+        );
+        assert_eq!(spec.halo(), Radii::new(2, 2, 1));
+        assert_eq!(spec.two_fusion_cut(), 2, "{{K1..K2}}{{K3..K5}}");
+        assert!(spec.ends_with_threshold());
+        // Full chain = Table II's six kernels, KK tail last.
+        let full = spec.full_kernels();
+        assert_eq!(full.len(), 6);
+        assert_eq!(full[5].name, "KalmanFilter");
+        assert_eq!(full[5].dep_on_prev, DepType::KernelToKernel);
+    }
+
+    #[test]
+    fn anomaly_shape_and_halo() {
+        let spec = anomaly();
+        assert_eq!(
+            spec.stage_names(),
+            ["FrameDiff", "GaussianFilter", "Threshold"]
+        );
+        assert_eq!(spec.halo(), Radii::new(1, 1, 1));
+        assert_eq!(spec.two_fusion_cut(), 1, "{{diff}}{{smooth..thresh}}");
+        assert!(spec.ends_with_threshold());
+        assert!(spec.post.is_empty());
+    }
+
+    #[test]
+    fn segment_labels_come_from_stage_names() {
+        let spec = facial();
+        assert_eq!(spec.segment_label(0, 5), "{rgbToGray..Threshold}");
+        assert_eq!(spec.segment_label(0, 2), "{rgbToGray..IIRFilter}");
+        assert_eq!(spec.segment_label(4, 1), "{Threshold}");
+        let a = anomaly();
+        assert_eq!(a.segment_label(0, 1), "{FrameDiff}");
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        // Threshold first: no head.
+        let mut s = facial();
+        s.stages.rotate_left(4);
+        assert!(s.validate().is_err());
+
+        // Three chained stencils exceed the rolling-window limit.
+        let mut s = facial();
+        let extra = s.stages[2].clone();
+        s.stages.insert(3, extra);
+        assert!(s.validate().is_err());
+
+        // IIR after a stencil breaks the grammar.
+        let mut s = facial();
+        s.stages.swap(1, 2);
+        assert!(s.validate().is_err());
+
+        // Radii inconsistent with the stage kind.
+        let mut s = anomaly();
+        s.stages[1].kernel.radii = Radii::new(2, 2, 0);
+        assert!(s.validate().is_err());
+
+        // Two temporal stages: cumulative dt != 1.
+        let mut s = facial();
+        s.stages[1].kernel.radii = Radii::new(0, 0, 2);
+        assert!(s.validate().is_err());
+
+        // KK dep inside the fusable run.
+        let mut s = facial();
+        s.stages[4].kernel.dep_on_prev = DepType::KernelToKernel;
+        assert!(s.validate().is_err());
+
+        // Wrong input channels on the head.
+        let mut s = anomaly();
+        s.stages[0].kernel.in_channels = 1;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_rejected() {
+        let s = PipelineSpec {
+            name: "empty",
+            stages: Vec::new(),
+            post: Vec::new(),
+        };
+        assert!(s.validate().is_err());
+        assert!(s.is_empty());
+    }
+}

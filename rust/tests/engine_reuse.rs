@@ -193,9 +193,10 @@ fn cpu_backend_mixed_job_kinds_share_the_warm_pool() {
     engine.shutdown().unwrap();
 }
 
-/// The staged CPU arm exercises the same engine path (it allocates its
-/// materialized intermediates outside the pool — that is its role as the
-/// unfused traffic baseline).
+/// The unfused CPU arm exercises the same engine path: the derived
+/// executor compiles the 5-segment `{K1}{K2}{K3}{K4}{K5}` partition and
+/// materializes its pooled intermediates at every segment boundary —
+/// the traffic behavior the plan's dispatch accounting prices.
 #[test]
 fn cpu_backend_staged_arm_matches_fused_arm() {
     let (clip, _) = synth_clip(&cpu_cfg(1, FusionMode::Full), 7);

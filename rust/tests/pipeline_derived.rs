@@ -1,0 +1,225 @@
+//! Pipeline-subsystem contract: the derived executor is bit-identical
+//! to the staged per-stage interpreter for EVERY registered pipeline,
+//! on every DP arm, at every band count, on every lane backend this
+//! host can run, and across vector-remainder output widths.
+//!
+//! This is the property that makes `exec::DerivedCpu` trustworthy as
+//! THE engine executor: `exec::StagedInterp` walks the plan's
+//! `PipelineSpec` through the scalar `cpu_ref` kernels one materialized
+//! buffer at a time, so agreement here means the compiled banded fused
+//! segment programs (carry slabs, rolling line rings, pooled
+//! intermediates only at partition boundaries) changed the execution
+//! schedule and nothing else. A second set of tests pins the derived
+//! facial `{K1..K5}` program to the hand-written `FusedCpu` loop it
+//! generalizes, and the engine-level tests run the anomaly pipeline end
+//! to end through `EngineBuilder::pipeline`, batch, serve, and stats.
+
+use std::sync::Arc;
+
+use kfuse::config::{Backend, FusionMode, RunConfig};
+use kfuse::coordinator::synth_clip;
+use kfuse::coordinator::ExecutionPlan;
+use kfuse::engine::{Engine, Policy, ServeOpts};
+use kfuse::exec::{
+    BufferPool, DerivedCpu, Executor, FusedCpu, Isa, StagedInterp,
+};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::traffic::InputDims;
+use kfuse::gpusim::device::DeviceSpec;
+use kfuse::pipeline;
+use kfuse::prop::Gen;
+
+/// Resolve a plan for one registered pipeline on one DP arm. Detect is
+/// always requested; specs that do not end in a threshold simply plan
+/// without it.
+fn plan_for(
+    name: &str,
+    mode: FusionMode,
+    side: usize,
+    t: usize,
+) -> ExecutionPlan {
+    ExecutionPlan::resolve_spec(
+        pipeline::by_name(name).unwrap(),
+        mode,
+        BoxDims::new(side, side, t),
+        true,
+        InputDims::new(256, 256, 64),
+        &DeviceSpec::k20(),
+    )
+}
+
+/// Random halo'd RGBA input for a plan's box.
+fn input_for(plan: &ExecutionPlan, seed: u64) -> Vec<f32> {
+    let din = plan.box_dims.with_halo(plan.halo);
+    Gen::new(seed).vec_f32(din.t * din.x * din.y * 4, 0.0, 255.0)
+}
+
+/// The tentpole property: derived ≡ staged interpreter, bitwise, over
+/// pipelines × DP arms × band counts × remainder widths. Box sides 15,
+/// 16, 17 put the output width at every remainder class of both the
+/// 4-wide (SSE2) and 8-wide (portable/AVX2) lane loops.
+#[test]
+fn derived_matches_the_staged_interpreter_everywhere() {
+    let pool = BufferPool::shared();
+    let oracle = StagedInterp::new();
+    for name in pipeline::names() {
+        for mode in [FusionMode::None, FusionMode::Two, FusionMode::Full] {
+            for side in [15, 16, 17] {
+                let plan = plan_for(name, mode, side, 8);
+                let x = input_for(&plan, 0xD0 + side as u64);
+                let th = if *name == "anomaly" { 24.0 } else { 96.0 };
+                let want = oracle.execute(&plan, th, &x).unwrap();
+                for threads in [1, 2, 3, 5] {
+                    let exec =
+                        DerivedCpu::with_threads(pool.clone(), threads);
+                    exec.prepare(&plan).unwrap();
+                    let got = exec.execute(&plan, th, &x).unwrap();
+                    let tag = format!("{name} {mode:?} {side} {threads}T");
+                    assert_eq!(got.binary, want.binary, "{tag}");
+                    assert_eq!(got.detect, want.detect, "{tag}");
+                    assert_eq!(
+                        exec.last_stage_nanos().len(),
+                        plan.partition.len(),
+                        "{tag}: one timing per compiled segment"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every lane backend this host can run agrees with the scalar staged
+/// walk, banded, for both pipelines.
+#[test]
+fn every_host_isa_is_bit_identical_to_the_oracle() {
+    let pool = BufferPool::shared();
+    let oracle = StagedInterp::new();
+    for name in pipeline::names() {
+        let plan = plan_for(name, FusionMode::Full, 17, 6);
+        let x = input_for(&plan, 0x15A);
+        let th = if *name == "anomaly" { 24.0 } else { 96.0 };
+        let want = oracle.execute(&plan, th, &x).unwrap();
+        for isa in Isa::all_available() {
+            for threads in [1, 3] {
+                let exec =
+                    DerivedCpu::with_isa(pool.clone(), threads, isa)
+                        .unwrap();
+                exec.prepare(&plan).unwrap();
+                let got = exec.execute(&plan, th, &x).unwrap();
+                let tag = format!("{name} {isa:?} {threads}T");
+                assert_eq!(got.binary, want.binary, "{tag}");
+                assert_eq!(got.detect, want.detect, "{tag}");
+            }
+        }
+    }
+}
+
+/// The derived facial `{K1..K5}` program IS the hand-written fused
+/// loop: bit-identical to `FusedCpu` at matching thread counts.
+#[test]
+fn derived_facial_full_matches_the_handwritten_fused_executor() {
+    let pool = BufferPool::shared();
+    let plan = plan_for("facial", FusionMode::Full, 16, 8);
+    let x = input_for(&plan, 0xFACE);
+    for threads in [1, 2, 4] {
+        let hand = FusedCpu::with_threads(pool.clone(), threads);
+        hand.prepare(&plan).unwrap();
+        let derived = DerivedCpu::with_threads(pool.clone(), threads);
+        derived.prepare(&plan).unwrap();
+        let a = hand.execute(&plan, 96.0, &x).unwrap();
+        let b = derived.execute(&plan, 96.0, &x).unwrap();
+        assert_eq!(a.binary, b.binary, "{threads}T");
+        assert_eq!(a.detect, b.detect, "{threads}T");
+    }
+}
+
+fn anomaly_cfg() -> RunConfig {
+    RunConfig {
+        backend: Backend::Cpu,
+        pipeline: "anomaly".into(),
+        frame_size: 64,
+        frames: 16,
+        box_dims: BoxDims::new(16, 16, 8),
+        markers: 1,
+        threshold: 24.0,
+        ..RunConfig::default()
+    }
+}
+
+/// The second registered pipeline runs END TO END through the engine —
+/// builder, mux queue, derived workers, stats — with no hand-written
+/// executor anywhere on the path.
+#[test]
+fn anomaly_pipeline_serves_through_the_engine() {
+    let engine = Engine::builder()
+        .config(anomaly_cfg())
+        .intra_box_threads(2)
+        .build()
+        .unwrap();
+    assert_eq!(engine.plan().spec.name, "anomaly");
+    let (clip, _) = synth_clip(engine.config(), 23);
+    let clip = Arc::new(clip);
+    let warm = engine.stats().pool_allocs;
+    let batch = engine.batch(clip.clone()).unwrap();
+    assert!(batch.metrics.boxes > 0);
+    engine
+        .serve(
+            clip,
+            ServeOpts {
+                fps: 5000.0,
+                policy: Policy::Block,
+            },
+        )
+        .unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.pipeline, "anomaly");
+    assert_eq!(
+        stats.partition_labels.len(),
+        engine.plan().partition.len(),
+        "one spec-derived label per executed partition"
+    );
+    assert!(
+        !stats.partition_nanos.is_empty(),
+        "derived executor reports per-partition timings"
+    );
+    assert_eq!(
+        stats.pool_allocs, warm,
+        "anomaly streaming is zero-allocation steady state too"
+    );
+    engine.shutdown().unwrap();
+}
+
+/// Batch output through the engine equals the staged interpreter run
+/// box by box: the multiplexed path changes scheduling, never results.
+#[test]
+fn engine_anomaly_batch_is_bit_identical_to_the_oracle() {
+    let a = Engine::from_config(anomaly_cfg()).unwrap();
+    let b = Engine::from_config(RunConfig {
+        mode: FusionMode::None,
+        ..anomaly_cfg()
+    })
+    .unwrap();
+    let (clip, _) = synth_clip(a.config(), 41);
+    let clip = Arc::new(clip);
+    let full = a.batch(clip.clone()).unwrap();
+    let none = b.batch(clip).unwrap();
+    assert_eq!(full.binary.data, none.binary.data);
+    a.shutdown().unwrap();
+    b.shutdown().unwrap();
+}
+
+/// Config-level guard rails for the new knob.
+#[test]
+fn pipeline_config_rejections() {
+    let err = Engine::builder().pipeline("tracking").build();
+    assert!(err.is_err(), "unknown pipeline rejected at build");
+    let err = Engine::builder()
+        .pipeline("anomaly")
+        .backend(Backend::Pjrt)
+        .build();
+    assert!(
+        err.is_err(),
+        "non-facial pipelines have no PJRT artifacts"
+    );
+}
