@@ -20,9 +20,11 @@
 //! One JSON record per (pipeline, executor, threads, isa) cell goes to
 //! `BENCH_fused_cpu.json` — the entry point shared by local runs and
 //! the CI `bench-smoke` regression gate. Schema is backward-compatible:
-//! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`) and
-//! this PR's (`pipeline` per cell, `speedup_derived`) are additions
-//! only.
+//! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`), the
+//! PR-6 ones (`pipeline` per cell, `speedup_derived`), and this PR's
+//! `faults_overhead` (zero-rate `FaultyExec` wrapper vs the bare fused
+//! pass — the fault-injection layer must cost ~nothing when disarmed)
+//! are additions only.
 //!
 //! Headline numbers:
 //! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
@@ -162,6 +164,8 @@ fn main() {
             clip_t0: 0,
             staged: None,
             enqueued: Instant::now(),
+            attempt: 0,
+            deadline: None,
         })
         .collect();
     let n = jobs.len() as f64;
@@ -270,6 +274,31 @@ fn main() {
             ),
         }
     }
+
+    // Fault-layer overhead guard: a zero-rate FaultyExec wrapper around
+    // the fused pass vs the bare pass on the identical job sweep. The
+    // engine only wraps executors when a FaultPlan is armed, so this
+    // ratio bounds the WORST case; production `faults: None` engines
+    // never even take the wrapper. Gated leniently in CI (ratio near
+    // 1.0) so the fault-injection layer can never quietly tax the hot
+    // path.
+    let faults_overhead = {
+        let plain =
+            FusedCpu::with_isa(pool.clone(), 1, Isa::Scalar).unwrap();
+        plain.prepare(&full).unwrap();
+        let tp =
+            time_fn(3, 25, || sweep(&plain, &full, &jobs, &mut staging));
+        let wrapped = kfuse::exec::FaultyExec::new(
+            Box::new(
+                FusedCpu::with_isa(pool.clone(), 1, Isa::Scalar).unwrap(),
+            ),
+            kfuse::coordinator::FaultPlan::new(1),
+        );
+        wrapped.prepare(&full).unwrap();
+        let tw =
+            time_fn(3, 25, || sweep(&wrapped, &full, &jobs, &mut staging));
+        tw.median / tp.median
+    };
 
     // Second workload: the anomaly pipeline through the spec-generic
     // executors — the derived fused pass vs its one-buffer-per-stage
@@ -459,6 +488,10 @@ fn main() {
              {speedup_parallel:.2}x (best of threads>1)"
         );
     }
+    println!(
+        "zero-rate fault wrapper overhead: {faults_overhead:.3}x \
+         (fused 1T scalar; must stay ~1.0)"
+    );
 
     let cell_json: Vec<String> = cells
         .iter()
@@ -488,7 +521,8 @@ fn main() {
          \"speedup_parallel\": {speedup_parallel:.3},\n  \
          \"speedup_derived\": {speedup_derived:.3},\n  \
          \"speedup_anomaly\": {speedup_anomaly:.3},\n  \
-         \"speedup_simd\": {speedup_simd:.3}\n}}\n",
+         \"speedup_simd\": {speedup_simd:.3},\n  \
+         \"faults_overhead\": {faults_overhead:.3}\n}}\n",
         bx.x,
         bx.y,
         bx.t,

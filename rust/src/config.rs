@@ -4,6 +4,7 @@ use crate::fusion::halo::BoxDims;
 use crate::fusion::traffic::InputDims;
 use crate::{Error, Result};
 
+pub use crate::coordinator::faults::FaultPlan;
 pub use crate::exec::simd::Isa;
 
 /// Which fusion arm the coordinator executes (the paper's evaluation
@@ -194,6 +195,12 @@ pub struct RunConfig {
     /// runs the same engine end to end with the native executors (no
     /// artifacts required).
     pub backend: Backend,
+    /// Deterministic fault-injection plan for chaos testing (CLI
+    /// `--faults`, env `KFUSE_FAULTS`; an explicit config plan wins over
+    /// the env var). `None` — the default — injects nothing and costs
+    /// one `Option` check per site. See
+    /// [`crate::coordinator::faults::FaultPlan`].
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for RunConfig {
@@ -217,6 +224,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             roi_only: false,
             backend: Backend::Pjrt,
+            faults: None,
         }
     }
 }
@@ -274,6 +282,9 @@ impl RunConfig {
                  exist for the facial chain only)",
                 self.pipeline
             )));
+        }
+        if let Some(f) = &self.faults {
+            f.validate()?;
         }
         Ok(())
     }
@@ -390,6 +401,23 @@ mod tests {
             ..RunConfig::default()
         };
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_plan_is_validated_with_the_config() {
+        let cfg = RunConfig {
+            faults: Some(FaultPlan::uniform(1, 0.05).unwrap()),
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let cfg = RunConfig {
+            faults: Some(FaultPlan {
+                exec_panic: 1.5,
+                ..FaultPlan::new(1)
+            }),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err(), "out-of-range rate rejected");
     }
 
     #[test]

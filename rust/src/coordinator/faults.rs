@@ -1,0 +1,360 @@
+//! Deterministic, seeded fault injection for the engine's chaos testing.
+//!
+//! A [`FaultPlan`] carries one probability per [`FaultSite`] — the five
+//! places a streaming box can die: ingest-side extraction and staging,
+//! executor panic, executor error, and result delivery. Whether a given
+//! (site, job, box, attempt) fires is a PURE FUNCTION of the plan's seed
+//! — a splitmix64 hash chain, no shared RNG state — so two runs with the
+//! same seed and the same submission order inject byte-for-byte the same
+//! faults, concurrency notwithstanding. That determinism is what makes
+//! the chaos soak test (`tests/engine_chaos.rs`) assertable: the
+//! disposition log of a faulty run is bitwise reproducible.
+//!
+//! Wiring: `RunConfig::faults` / `EngineBuilder::faults` programmatically,
+//! `--faults` on the CLI, or the `KFUSE_FAULTS` env var (read at engine
+//! build when the config carries no plan, same precedence pattern as
+//! `KFUSE_ISA`). The harness is compiled in always and zero-cost when
+//! absent: a `None` plan never hashes anything.
+
+use crate::{Error, Result};
+
+/// Environment variable consulted by [`FaultPlan::from_env`]; same
+/// syntax as [`FaultPlan::parse`], e.g.
+/// `KFUSE_FAULTS=seed=7,all=0.05`.
+pub const ENV_FAULTS: &str = "KFUSE_FAULTS";
+
+/// Where in a box's life a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Ingest: the producer fails before checking out a staging buffer
+    /// (a poisoned source frame). Retryable — the retry re-extracts
+    /// worker-side.
+    Extract,
+    /// Ingest: extraction succeeded but staging is abandoned (a torn
+    /// buffer handoff). Retryable like [`FaultSite::Extract`].
+    Stage,
+    /// The worker's executor panics mid-box. NOT retryable: the box is
+    /// quarantined and the worker is respawned (its executor state is
+    /// assumed poisoned).
+    ExecutePanic,
+    /// The worker's executor returns `Err` (a transient backend error).
+    /// Retryable.
+    ExecuteError,
+    /// The finished result is lost in delivery to the job's collector.
+    /// Retryable — the box re-executes.
+    ResultRoute,
+}
+
+impl FaultSite {
+    /// Every site, in hash-tag order.
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::Extract,
+        FaultSite::Stage,
+        FaultSite::ExecutePanic,
+        FaultSite::ExecuteError,
+        FaultSite::ResultRoute,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::Extract => "extract",
+            FaultSite::Stage => "stage",
+            FaultSite::ExecutePanic => "exec-panic",
+            FaultSite::ExecuteError => "exec-error",
+            FaultSite::ResultRoute => "route",
+        }
+    }
+
+    /// Per-site hash domain separator (1-based so no site collides with
+    /// the zero-extended inputs).
+    fn tag(&self) -> u64 {
+        match self {
+            FaultSite::Extract => 1,
+            FaultSite::Stage => 2,
+            FaultSite::ExecutePanic => 3,
+            FaultSite::ExecuteError => 4,
+            FaultSite::ResultRoute => 5,
+        }
+    }
+}
+
+/// Seeded per-site fault probabilities. `Copy` and tiny: the engine
+/// threads it by value into every worker and producer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Hash seed: same seed ⇒ same faults for the same (site, job, box,
+    /// attempt) coordinates, regardless of thread interleaving.
+    pub seed: u64,
+    /// P(fire) at [`FaultSite::Extract`], in `[0, 1]`.
+    pub extract: f64,
+    /// P(fire) at [`FaultSite::Stage`].
+    pub stage: f64,
+    /// P(fire) at [`FaultSite::ExecutePanic`].
+    pub exec_panic: f64,
+    /// P(fire) at [`FaultSite::ExecuteError`].
+    pub exec_error: f64,
+    /// P(fire) at [`FaultSite::ResultRoute`].
+    pub route: f64,
+}
+
+/// splitmix64 (Steele et al.) — the one-shot mixer under
+/// [`FaultPlan::fires`].
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and every rate zero (inject nothing
+    /// until rates are set — handy with struct-update syntax).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            extract: 0.0,
+            stage: 0.0,
+            exec_panic: 0.0,
+            exec_error: 0.0,
+            route: 0.0,
+        }
+    }
+
+    /// A plan firing with probability `p` at EVERY site.
+    pub fn uniform(seed: u64, p: f64) -> Result<FaultPlan> {
+        let plan = FaultPlan {
+            seed,
+            extract: p,
+            stage: p,
+            exec_panic: p,
+            exec_error: p,
+            route: p,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// The configured probability at `site`.
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        match site {
+            FaultSite::Extract => self.extract,
+            FaultSite::Stage => self.stage,
+            FaultSite::ExecutePanic => self.exec_panic,
+            FaultSite::ExecuteError => self.exec_error,
+            FaultSite::ResultRoute => self.route,
+        }
+    }
+
+    /// Whether the fault at `site` fires for this (job, box, attempt).
+    /// Deterministic: a pure hash of (seed, site, job, box, attempt) —
+    /// no state, so concurrent callers agree and replays reproduce.
+    /// Keyed on `attempt` too: a retried box rolls fresh faults, so a
+    /// transient injected failure clears the way a real one would.
+    pub fn fires(
+        &self,
+        site: FaultSite,
+        job: u64,
+        box_id: u64,
+        attempt: u32,
+    ) -> bool {
+        let p = self.rate(site);
+        if p <= 0.0 {
+            return false; // zero-cost when the site is quiet
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        let mut h = self.seed ^ 0x9e37_79b9_7f4a_7c15;
+        for v in [site.tag(), job, box_id, u64::from(attempt)] {
+            h = splitmix64(h ^ v);
+        }
+        // Top 53 bits → uniform in [0, 1).
+        ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < p
+    }
+
+    /// Reject rates outside `[0, 1]` (or NaN).
+    pub fn validate(&self) -> Result<()> {
+        for site in FaultSite::ALL {
+            let p = self.rate(site);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "fault rate {}={p} must be in [0, 1]",
+                    site.name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse `key=value` pairs separated by commas. Keys: `seed` (u64),
+    /// one per site (`extract`, `stage`, `exec-panic`, `exec-error`,
+    /// `route`), and `all` (sets every site). Later keys override
+    /// earlier ones, so `all=0.05,route=0` reads naturally.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "fault plan: expected key=value, got '{part}'"
+                ))
+            })?;
+            if key == "seed" {
+                plan.seed = value.parse().map_err(|_| {
+                    Error::Config(format!("fault plan: bad seed '{value}'"))
+                })?;
+                continue;
+            }
+            let p: f64 = value.parse().map_err(|_| {
+                Error::Config(format!(
+                    "fault plan: bad rate '{value}' for '{key}'"
+                ))
+            })?;
+            match key {
+                "all" => {
+                    plan.extract = p;
+                    plan.stage = p;
+                    plan.exec_panic = p;
+                    plan.exec_error = p;
+                    plan.route = p;
+                }
+                "extract" => plan.extract = p,
+                "stage" => plan.stage = p,
+                "exec-panic" => plan.exec_panic = p,
+                "exec-error" => plan.exec_error = p,
+                "route" => plan.route = p,
+                _ => {
+                    return Err(Error::Config(format!(
+                        "fault plan: unknown key '{key}' (expected seed|\
+                         all|extract|stage|exec-panic|exec-error|route)"
+                    )))
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Read a plan from [`ENV_FAULTS`]; `Ok(None)` when unset or empty,
+    /// `Err` when set but unparseable (a typo'd injection request must
+    /// not silently run faultless).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(ENV_FAULTS) {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Round-trips through [`FaultPlan::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={},extract={},stage={},exec-panic={},exec-error={},\
+             route={}",
+            self.seed,
+            self.extract,
+            self.stage,
+            self.exec_panic,
+            self.exec_error,
+            self.route
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn firing_is_deterministic_and_keyed_per_coordinate() {
+        let plan = FaultPlan::uniform(42, 0.5).unwrap();
+        for site in FaultSite::ALL {
+            for job in 0..4u64 {
+                for bx in 0..16u64 {
+                    let a = plan.fires(site, job, bx, 0);
+                    let b = plan.fires(site, job, bx, 0);
+                    assert_eq!(a, b, "same coordinates, same verdict");
+                }
+            }
+        }
+        // Different seeds decorrelate: over 256 coordinates the two
+        // plans cannot agree everywhere.
+        let other = FaultPlan::uniform(43, 0.5).unwrap();
+        let disagree = (0..256u64).filter(|&bx| {
+            plan.fires(FaultSite::ExecutePanic, 1, bx, 0)
+                != other.fires(FaultSite::ExecutePanic, 1, bx, 0)
+        });
+        assert!(disagree.count() > 0);
+    }
+
+    #[test]
+    fn rate_extremes_short_circuit() {
+        let zero = FaultPlan::new(7);
+        let one = FaultPlan::uniform(7, 1.0).unwrap();
+        for bx in 0..64u64 {
+            assert!(!zero.fires(FaultSite::Extract, 1, bx, 0));
+            assert!(one.fires(FaultSite::Extract, 1, bx, 0));
+        }
+    }
+
+    #[test]
+    fn firing_frequency_tracks_the_rate() {
+        let plan = FaultPlan::uniform(9, 0.25).unwrap();
+        let hits = (0..10_000u64)
+            .filter(|&bx| plan.fires(FaultSite::ExecuteError, 3, bx, 0))
+            .count();
+        // 0.25 ± generous slack (binomial σ ≈ 43 at n=10k).
+        assert!((2_200..=2_800).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn attempts_reroll_the_fault() {
+        // With p=0.5, SOME box that fires at attempt 0 must clear at
+        // attempt 1 — the retry machinery depends on faults not being
+        // sticky across attempts.
+        let plan = FaultPlan::uniform(11, 0.5).unwrap();
+        let cleared = (0..64u64).any(|bx| {
+            plan.fires(FaultSite::ExecuteError, 1, bx, 0)
+                && !plan.fires(FaultSite::ExecuteError, 1, bx, 1)
+        });
+        assert!(cleared);
+    }
+
+    #[test]
+    fn parse_display_roundtrip() {
+        let plan =
+            FaultPlan::parse("seed=7,extract=0.1,exec-panic=0.05,route=1")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.extract, 0.1);
+        assert_eq!(plan.stage, 0.0);
+        assert_eq!(plan.exec_panic, 0.05);
+        assert_eq!(plan.route, 1.0);
+        let reparsed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(reparsed, plan);
+    }
+
+    #[test]
+    fn parse_all_sets_every_site_and_later_keys_override() {
+        let plan = FaultPlan::parse("seed=3,all=0.05,route=0").unwrap();
+        for site in FaultSite::ALL {
+            let want = if site == FaultSite::ResultRoute { 0.0 } else { 0.05 };
+            assert_eq!(plan.rate(site), want, "{}", site.name());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(FaultPlan::parse("all=1.5").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("all=-0.1").is_err(), "rate < 0");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+        assert!(FaultPlan::parse("warp=0.1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("extract").is_err(), "missing value");
+        assert!(FaultPlan::uniform(1, f64::NAN).is_err(), "NaN rate");
+    }
+}

@@ -1,10 +1,65 @@
 //! Lock-free run metrics: throughput, latency percentiles, traffic
 //! counters. Shared across worker threads via atomics; snapshotted into a
 //! [`MetricsReport`] at the end of a run.
+//!
+//! Since the fault-tolerance layer, the report also carries the job's
+//! exact failure accounting: every submitted box resolves to exactly one
+//! [`Disposition`], and the per-box [`BoxDisposition`] log (sorted by
+//! global frame and box id, so equal-seed runs compare bitwise) lets the
+//! chaos soak test assert determinism.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// How one submitted box finally resolved. Exactly one per box: the
+/// engine's accounting invariant is that a job's dispositions partition
+/// its submitted boxes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Completed on the first attempt.
+    Ok,
+    /// Completed after ≥1 retried attempt.
+    RetriedOk,
+    /// Failed terminally: non-retryable, or retries exhausted.
+    Failed,
+    /// Executor panicked on it; never retried (input treated as poison,
+    /// its hash recorded).
+    Quarantined,
+    /// Evicted by `DropOldest` backpressure before any worker saw it.
+    Dropped,
+    /// Shed past the job's deadline (at admission or at worker pop).
+    DeadlineExceeded,
+}
+
+impl Disposition {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Disposition::Ok => "ok",
+            Disposition::RetriedOk => "retried-ok",
+            Disposition::Failed => "failed",
+            Disposition::Quarantined => "quarantined",
+            Disposition::Dropped => "dropped",
+            Disposition::DeadlineExceeded => "deadline-exceeded",
+        }
+    }
+}
+
+/// One line of a job's disposition log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoxDisposition {
+    /// Global first frame of the box (`clip_t0 + task.t0`) — together
+    /// with `box_id` this uniquely keys a box within a job across all
+    /// job kinds, which is what makes the sorted log deterministic.
+    pub frame_t0: u64,
+    /// The box's task id within its window.
+    pub box_id: u64,
+    pub disposition: Disposition,
+    /// Attempts consumed (0 for boxes shed before any attempt).
+    pub attempts: u32,
+    /// FNV-1a hash of the input box, recorded for quarantined boxes.
+    pub input_hash: Option<u64>,
+}
 
 /// Shared counters (cheap on the hot path).
 #[derive(Debug, Default)]
@@ -19,8 +74,19 @@ pub struct Metrics {
     pub bytes_out: AtomicU64,
     /// Executable dispatches (kernel launches).
     pub dispatches: AtomicU64,
-    /// Frames dropped by backpressure (serve mode).
+    /// Boxes dropped by backpressure (serve mode eviction).
     pub dropped: AtomicU64,
+    /// Boxes that failed terminally (non-retryable, or retries
+    /// exhausted).
+    pub failed: AtomicU64,
+    /// Boxes quarantined after an executor panic (never retried).
+    pub quarantined: AtomicU64,
+    /// Boxes shed past their job's deadline.
+    pub deadline_exceeded: AtomicU64,
+    /// Retry attempts issued (an individual box can contribute several).
+    pub retries: AtomicU64,
+    /// Boxes that completed after ≥1 retry (subset of `boxes`).
+    pub retried_ok: AtomicU64,
     /// Cumulative time boxes sat in the ready queue before a worker
     /// picked them up, nanos (fairness diagnostic: under multiplexing,
     /// a job's queue wait is what the scheduling policy controls).
@@ -88,11 +154,19 @@ impl Metrics {
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
             dispatches: self.dispatches.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            deadline_exceeded: self
+                .deadline_exceeded
+                .load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            retried_ok: self.retried_ok.load(Ordering::Relaxed),
             queue_wait_nanos: self.queue_wait_nanos.load(Ordering::Relaxed),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
             stage_nanos: self.stage_nanos.lock().unwrap().clone(),
+            dispositions: Vec::new(),
         }
     }
 }
@@ -108,6 +182,16 @@ pub struct MetricsReport {
     pub bytes_out: u64,
     pub dispatches: u64,
     pub dropped: u64,
+    /// Boxes that failed terminally.
+    pub failed: u64,
+    /// Boxes quarantined after an executor panic.
+    pub quarantined: u64,
+    /// Boxes shed past the job's deadline.
+    pub deadline_exceeded: u64,
+    /// Retry attempts issued across the job.
+    pub retries: u64,
+    /// Boxes that completed after ≥1 retry (subset of `boxes`).
+    pub retried_ok: u64,
     /// Cumulative ready-queue wait across the job's boxes, nanos.
     pub queue_wait_nanos: u64,
     pub p50_us: u64,
@@ -116,6 +200,11 @@ pub struct MetricsReport {
     /// Cumulative wall nanos per executed partition across the job's
     /// boxes, in execution order (empty when untracked).
     pub stage_nanos: Vec<u64>,
+    /// The job's per-box disposition log, sorted by (global frame, box
+    /// id). Filled by the job layer from its ledger after the run (the
+    /// raw `Metrics` snapshot leaves it empty); the exact-accounting
+    /// invariant is that this log partitions the job's submitted boxes.
+    pub dispositions: Vec<BoxDisposition>,
 }
 
 impl std::fmt::Display for MetricsReport {
@@ -144,7 +233,27 @@ impl std::fmt::Display for MetricsReport {
             self.p95_us,
             self.p99_us,
             self.queue_wait_nanos as f64 / 1e6
-        )
+        )?;
+        // Failure accounting prints only when something actually failed:
+        // faultless runs keep the historical three-line shape.
+        if self.failed
+            + self.quarantined
+            + self.deadline_exceeded
+            + self.retries
+            > 0
+        {
+            write!(
+                f,
+                "\nfaults: {} failed | {} quarantined | {} past deadline \
+                 | {} retries ({} recovered)",
+                self.failed,
+                self.quarantined,
+                self.deadline_exceeded,
+                self.retries,
+                self.retried_ok
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -204,5 +313,28 @@ mod tests {
         let r = m.snapshot(Duration::from_secs(1), 0);
         assert_eq!(r.p50_us, 0);
         assert_eq!(r.fps, 0.0);
+    }
+
+    #[test]
+    fn fault_counters_snapshot_and_display_only_when_nonzero() {
+        let m = Metrics::new();
+        let clean = m.snapshot(Duration::from_secs(1), 0);
+        assert!(
+            !format!("{clean}").contains("faults:"),
+            "faultless reports keep the historical shape"
+        );
+        m.failed.fetch_add(2, Ordering::Relaxed);
+        m.quarantined.fetch_add(1, Ordering::Relaxed);
+        m.retries.fetch_add(3, Ordering::Relaxed);
+        m.retried_ok.fetch_add(1, Ordering::Relaxed);
+        let r = m.snapshot(Duration::from_secs(1), 0);
+        assert_eq!(
+            (r.failed, r.quarantined, r.retries, r.retried_ok),
+            (2, 1, 3, 1)
+        );
+        assert!(r.dispositions.is_empty(), "the job layer fills the log");
+        let s = format!("{r}");
+        assert!(s.contains("faults: 2 failed | 1 quarantined"), "{s}");
+        assert!(s.contains("3 retries (1 recovered)"), "{s}");
     }
 }

@@ -36,6 +36,7 @@
 
 pub mod backpressure;
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod mux;
 pub mod plan;
@@ -43,7 +44,8 @@ pub mod router;
 pub mod scheduler;
 
 pub use crate::engine::RunReport;
-pub use metrics::{Metrics, MetricsReport};
+pub use faults::{FaultPlan, FaultSite};
+pub use metrics::{BoxDisposition, Disposition, Metrics, MetricsReport};
 pub use mux::{JobId, MuxQueue};
 pub use plan::ExecutionPlan;
 pub use router::ResultRouter;

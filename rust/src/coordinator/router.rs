@@ -72,7 +72,7 @@ impl ResultRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::scheduler::BoxResult;
+    use crate::coordinator::scheduler::{BoxOutcome, BoxResult};
     use crate::fusion::halo::BoxDims;
     use crate::video::BoxTask;
     use std::time::Duration;
@@ -80,7 +80,7 @@ mod tests {
     fn event(job: JobId) -> WorkerEvent {
         WorkerEvent {
             job_id: job,
-            result: Ok(BoxResult {
+            outcome: BoxOutcome::Done(BoxResult {
                 task: BoxTask {
                     id: 0,
                     t0: 0,
@@ -94,6 +94,7 @@ mod tests {
                 latency: Duration::from_micros(5),
                 queue_wait: Duration::from_micros(1),
                 stage_nanos: Vec::new(),
+                attempt: 0,
             }),
         }
     }

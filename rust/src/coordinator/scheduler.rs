@@ -14,22 +14,37 @@
 //! service jobs until the queue closes at
 //! engine shutdown. Prepared state therefore survives across jobs — the
 //! amortization the paper's 600–1000 fps streaming scenario depends on.
-//! A box that fails mid-job is reported as an `Err` event; the worker
-//! itself stays alive for the next job.
+//!
+//! Failure is contained per box, in one of four [`BoxOutcome`] shapes:
+//! a box that completes is `Done`; an executor error (or an injected
+//! fault — see [`faults`](super::faults)) is `Failed` with a
+//! [`RetryTicket`] the job may requeue; a box popped past its job's
+//! deadline is `DeadlineExceeded` without being executed; and a PANIC is
+//! `Panicked` — the worker catches it, reports the payload plus the
+//! (job, box, attempt) identity and the input's hash, and then assumes
+//! its executor (carry slabs, line rings, pooled scratch) is poisoned:
+//! it tears the executor down (returning its pool buffers) and respawns
+//! a fresh one in place, bumping the spec's respawn counter. The worker
+//! THREAD is never lost to a panic, so every popped box still produces
+//! exactly one event — the invariant each job's collector counts on.
 
-use std::sync::atomic::AtomicU64;
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::faults::{FaultPlan, FaultSite};
 use super::mux::{JobId, MuxQueue};
 use super::plan::ExecutionPlan;
 use super::router::ResultRouter;
 use crate::config::Backend;
-use crate::exec::{BufferPool, Executor, Isa, PjrtExec, PoolBuf};
+use crate::exec::{
+    BufferPool, Executor, FaultyExec, Isa, PjrtExec, PoolBuf,
+};
 use crate::runtime::{Manifest, Runtime};
 use crate::video::{BoxTask, Video};
-use crate::Result;
+use crate::{Error, Result};
 
 /// One unit of work: a box of a specific clip window, tagged with the
 /// engine job that submitted it.
@@ -50,6 +65,12 @@ pub struct BoxJob {
     pub staged: Option<PoolBuf>,
     /// Enqueue timestamp (latency accounting includes queue wait).
     pub enqueued: Instant,
+    /// Which try this is: 0 on first submission, +1 per retry requeue.
+    pub attempt: u32,
+    /// Absolute deadline inherited from the job's `JobOptions`; a worker
+    /// popping the box at or past this instant sheds it unexecuted
+    /// (`BoxOutcome::DeadlineExceeded`).
+    pub deadline: Option<Instant>,
 }
 
 /// Output of one box execution.
@@ -68,6 +89,84 @@ pub struct BoxResult {
     /// Wall nanos per executed partition (empty when the backend doesn't
     /// track them; see `Executor::last_stage_nanos`).
     pub stage_nanos: Vec<u64>,
+    /// Which attempt produced this result (0 = first try; >0 means the
+    /// box was retried and the job accounts it `retried-then-ok`).
+    pub attempt: u32,
+}
+
+/// Everything the owning job needs to requeue a failed box for another
+/// attempt: the work coordinates plus the retained clip window. The
+/// staged input is NOT carried — a retry re-extracts worker-side from
+/// the clip, so retries never check out staging buffers.
+pub struct RetryTicket {
+    pub task: BoxTask,
+    pub clip: Arc<Video>,
+    pub clip_t0: usize,
+    /// Attempt that just failed.
+    pub attempt: u32,
+    pub deadline: Option<Instant>,
+}
+
+impl RetryTicket {
+    pub fn of(job: &BoxJob) -> RetryTicket {
+        RetryTicket {
+            task: job.task,
+            clip: job.clip.clone(),
+            clip_t0: job.clip_t0,
+            attempt: job.attempt,
+            deadline: job.deadline,
+        }
+    }
+
+    /// Rebuild a queueable job for the next attempt.
+    pub fn requeue(self, job_id: JobId) -> BoxJob {
+        BoxJob {
+            job_id,
+            task: self.task,
+            clip: self.clip,
+            clip_t0: self.clip_t0,
+            staged: None,
+            enqueued: Instant::now(),
+            attempt: self.attempt + 1,
+            deadline: self.deadline,
+        }
+    }
+}
+
+/// How one popped box resolved. Every pop produces exactly one outcome
+/// event; the owning job folds outcomes into its disposition ledger
+/// (see `engine::jobs`).
+pub enum BoxOutcome {
+    /// Executed to completion.
+    Done(BoxResult),
+    /// The box did not complete but the failure is contained: the
+    /// executor returned an error, an injected fault fired, or the
+    /// worker's executor was lost. `retryable` distinguishes transient
+    /// failures (worth requeueing) from terminal ones.
+    Failed {
+        ticket: RetryTicket,
+        error: Error,
+        retryable: bool,
+    },
+    /// The executor PANICKED on this box. Never retried: the input is
+    /// treated as poison — its hash is recorded for offline triage and
+    /// the job quarantines the box. The worker respawns its executor
+    /// after reporting this.
+    Panicked {
+        task: BoxTask,
+        clip_t0: usize,
+        attempt: u32,
+        /// Panic payload plus (job, box, attempt) identity.
+        message: String,
+        /// FNV-1a over the input bits ([`hash_input`]).
+        input_hash: u64,
+    },
+    /// Popped at or past the job's deadline; shed without executing.
+    DeadlineExceeded {
+        task: BoxTask,
+        clip_t0: usize,
+        attempt: u32,
+    },
 }
 
 /// One routed event from a worker: which job it belongs to and how the
@@ -75,7 +174,35 @@ pub struct BoxResult {
 /// channel (or drops it if the job already deregistered).
 pub struct WorkerEvent {
     pub job_id: JobId,
-    pub result: Result<BoxResult>,
+    pub outcome: BoxOutcome,
+}
+
+/// Render a caught panic payload: `String` and `&str` payloads (what
+/// `panic!` produces) come through verbatim, anything else is named as
+/// opaque.
+pub fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(payload) => match payload.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "<non-string panic payload>".to_string(),
+        },
+    }
+}
+
+/// FNV-1a over an input box's f32 bit patterns. Recorded with every
+/// quarantined box so a poisoned input can be matched across runs (the
+/// fault-injection soak asserts the same seed quarantines the same
+/// hashes).
+pub fn hash_input(input: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in input {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// Everything a worker pool needs besides its channels: pool size,
@@ -100,6 +227,12 @@ pub struct WorkerSpec {
     /// engine passes the session's resolved [`Isa`]; `Isa::Auto` is
     /// also accepted and resolves per worker).
     pub isa: Isa,
+    /// Seeded fault-injection plan; `None` (the production value) costs
+    /// nothing — workers construct their executor bare and never hash.
+    pub faults: Option<FaultPlan>,
+    /// Bumped once per successful executor respawn after a caught panic
+    /// (surfaces as `EngineStats::respawns`).
+    pub respawns: Arc<AtomicU64>,
 }
 
 /// Execute one job on a worker's executor. Public so benches can call the
@@ -140,6 +273,7 @@ pub fn execute_box(
         latency: job.enqueued.elapsed(),
         queue_wait,
         stage_nanos: exec.last_stage_nanos(),
+        attempt: job.attempt,
     })
 }
 
@@ -168,6 +302,26 @@ fn build_executor(
     Ok(exec)
 }
 
+/// A worker's executor slot. `Lost` is the dead-letter state: the
+/// executor panicked AND its replacement failed to build — the worker
+/// keeps popping so collectors never hang, failing every box
+/// non-retryably with the build error.
+enum Armed {
+    Plain(Box<dyn Executor>),
+    Faulty(FaultyExec),
+    Lost(String),
+}
+
+impl Armed {
+    fn build(spec: &WorkerSpec, compiles: &Arc<AtomicU64>) -> Result<Armed> {
+        let exec = build_executor(spec, compiles)?;
+        Ok(match spec.faults {
+            Some(fp) => Armed::Faulty(FaultyExec::new(exec, fp)),
+            None => Armed::Plain(exec),
+        })
+    }
+}
+
 /// Spawn the spec's persistent workers consuming `queue` and delivering
 /// results through `router`.
 ///
@@ -177,18 +331,22 @@ fn build_executor(
 /// measured wall time (§Perf in EXPERIMENTS.md — this moved p95 box
 /// latency from ~0.44 s to the worker service time). Each PJRT
 /// compilation bumps `compiles` so the engine can prove executables are
-/// reused across jobs; the CPU backends never touch it. Init failures are
-/// pushed into `init_errors` BEFORE the barrier releases, so the spawner
-/// observes them deterministically on return.
+/// reused across jobs; the CPU backends never touch it.
+///
+/// If ANY worker fails to initialize, the whole spawn fails: the queue
+/// is closed, every spawned thread is joined, and the returned error
+/// carries every collected init message (not just the first — a
+/// misconfigured host typically fails all workers the same way and the
+/// caller deserves the full picture).
 pub fn spawn_workers(
     spec: WorkerSpec,
     queue: MuxQueue<BoxJob>,
     router: Arc<ResultRouter>,
     compiles: Arc<AtomicU64>,
-    init_errors: Arc<Mutex<Vec<String>>>,
-) -> Vec<JoinHandle<Result<()>>> {
+) -> Result<Vec<JoinHandle<Result<()>>>> {
     let ready = Arc::new(std::sync::Barrier::new(spec.workers + 1));
-    let handles = (0..spec.workers)
+    let init_errors = Arc::new(Mutex::new(Vec::<String>::new()));
+    let handles: Vec<_> = (0..spec.workers)
         .map(|_| {
             let spec = spec.clone();
             let queue = queue.clone();
@@ -198,52 +356,182 @@ pub fn spawn_workers(
             let ready = ready.clone();
             std::thread::spawn(move || -> Result<()> {
                 // Prepare the backend up front; on failure still release
-                // the barrier so spawn_workers can't hang.
-                let init = build_executor(&spec, &compiles);
+                // the barrier so spawn_workers can't hang. Errors are
+                // pushed BEFORE the barrier so the spawner observes them
+                // deterministically on return.
+                let init = Armed::build(&spec, &compiles);
                 if let Err(e) = &init {
                     init_errors.lock().unwrap().push(e.to_string());
                 }
                 ready.wait();
-                let exec = init?;
+                let mut armed = init?;
                 let plan = spec.plan.clone();
                 let threshold = spec.threshold;
                 let mut staging: Vec<f32> = Vec::new();
                 // Persistent service loop: jobs come and go, the executor
                 // (compiled executables / pooled scratch) lives until the
                 // queue closes at engine shutdown. Every popped box MUST
-                // produce an event — each job's collector counts on it —
-                // so a panic inside the hot path is caught and reported
-                // instead of silently killing this worker's results
-                // (which would hang the submitting job's collector
-                // forever).
+                // produce exactly one event — each job's collector counts
+                // on it — including panics (caught, quarantined,
+                // respawned) and past-deadline boxes (shed unexecuted).
                 while let Some(job) = queue.pop() {
                     let job_id = job.job_id;
-                    let result = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| {
-                            execute_box(
-                                exec.as_ref(),
-                                &plan,
-                                threshold,
-                                &job,
-                                &mut staging,
-                            )
-                        }),
-                    )
-                    .unwrap_or_else(|_| {
-                        Err(crate::Error::Coordinator(
-                            "worker panicked executing box".into(),
-                        ))
-                    });
-                    // An unroutable event (its job already tore down on
-                    // an error path) is dropped — nobody owns it anymore.
-                    let _ = router.route(WorkerEvent { job_id, result });
+                    if job.deadline.is_some_and(|d| Instant::now() >= d) {
+                        let _ = router.route(WorkerEvent {
+                            job_id,
+                            outcome: BoxOutcome::DeadlineExceeded {
+                                task: job.task,
+                                clip_t0: job.clip_t0,
+                                attempt: job.attempt,
+                            },
+                        });
+                        continue;
+                    }
+                    let mut respawn = false;
+                    let outcome = match &armed {
+                        Armed::Lost(msg) => BoxOutcome::Failed {
+                            ticket: RetryTicket::of(&job),
+                            error: Error::Coordinator(format!(
+                                "worker executor lost after panic: {msg}"
+                            )),
+                            retryable: false,
+                        },
+                        Armed::Plain(_) | Armed::Faulty(_) => {
+                            let exec: &dyn Executor = match &armed {
+                                Armed::Plain(e) => e.as_ref(),
+                                Armed::Faulty(f) => {
+                                    f.arm(
+                                        job_id.0,
+                                        job.task.id as u64,
+                                        job.attempt,
+                                    );
+                                    f
+                                }
+                                Armed::Lost(_) => unreachable!(),
+                            };
+                            let caught = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    execute_box(
+                                        exec,
+                                        &plan,
+                                        threshold,
+                                        &job,
+                                        &mut staging,
+                                    )
+                                }),
+                            );
+                            match caught {
+                                Ok(Ok(r)) => {
+                                    // The result-route fault models a lost
+                                    // delivery: the box executed but its
+                                    // result never reaches the collector,
+                                    // so it must re-execute.
+                                    let lost =
+                                        spec.faults.is_some_and(|f| {
+                                            f.fires(
+                                                FaultSite::ResultRoute,
+                                                job_id.0,
+                                                job.task.id as u64,
+                                                job.attempt,
+                                            )
+                                        });
+                                    if lost {
+                                        BoxOutcome::Failed {
+                                            ticket: RetryTicket::of(&job),
+                                            error: Error::Coordinator(
+                                                format!(
+                                                    "injected result-route \
+                                                     fault: job {} box {} \
+                                                     attempt {} result lost \
+                                                     in delivery",
+                                                    job_id.0,
+                                                    job.task.id,
+                                                    job.attempt
+                                                ),
+                                            ),
+                                            retryable: true,
+                                        }
+                                    } else {
+                                        BoxOutcome::Done(r)
+                                    }
+                                }
+                                Ok(Err(e)) => BoxOutcome::Failed {
+                                    ticket: RetryTicket::of(&job),
+                                    error: e,
+                                    retryable: true,
+                                },
+                                Err(payload) => {
+                                    respawn = true;
+                                    let input: &[f32] = match &job.staged {
+                                        Some(b) => &b[..],
+                                        None => &staging[..],
+                                    };
+                                    BoxOutcome::Panicked {
+                                        task: job.task,
+                                        clip_t0: job.clip_t0,
+                                        attempt: job.attempt,
+                                        message: format!(
+                                            "worker panicked executing job \
+                                             {} box {} (attempt {}): {}",
+                                            job_id.0,
+                                            job.task.id,
+                                            job.attempt,
+                                            panic_message(payload)
+                                        ),
+                                        input_hash: hash_input(input),
+                                    }
+                                }
+                            }
+                        }
+                    };
+                    if respawn {
+                        // Supervision: the panicked executor's state
+                        // (carry slabs, line rings, pooled scratch) is
+                        // assumed poisoned. Drop the job FIRST (returning
+                        // its staged buffer) and the old executor next
+                        // (returning its scratch), so the replacement's
+                        // prewarm re-checks the same buffers out of the
+                        // pool and `pool_allocs` stays at its build-time
+                        // value. The respawn completes BEFORE the
+                        // quarantine outcome is routed, so any reader
+                        // that has observed the settled box also sees
+                        // its respawn counted (`respawns` == quarantined
+                        // is race-free).
+                        drop(job);
+                        armed = Armed::Lost(String::new());
+                        armed = match Armed::build(&spec, &compiles) {
+                            Ok(fresh) => {
+                                spec.respawns
+                                    .fetch_add(1, Ordering::Relaxed);
+                                fresh
+                            }
+                            // Dead-letter mode: keep servicing pops (the
+                            // collectors must drain) but fail every box
+                            // with the rebuild error.
+                            Err(e) => Armed::Lost(e.to_string()),
+                        };
+                    }
+                    let _ = router.route(WorkerEvent { job_id, outcome });
                 }
                 Ok(())
             })
         })
         .collect();
     ready.wait(); // preparation done on every worker before we return
-    handles
+    let errors = init_errors.lock().unwrap().clone();
+    if !errors.is_empty() {
+        // Fail the build as a unit: release the surviving workers (pop
+        // returns None once closed) and surface EVERY init message.
+        queue.close();
+        for h in handles {
+            let _ = h.join();
+        }
+        return Err(Error::Coordinator(format!(
+            "engine build: worker init failed: {}",
+            errors.join("; ")
+        )));
+    }
+    Ok(handles)
 }
 
 #[cfg(test)]
@@ -253,14 +541,15 @@ mod tests {
     use crate::coordinator::backpressure::Policy;
     use crate::fusion::halo::BoxDims;
     use crate::video::SynthConfig;
-    use std::sync::atomic::Ordering;
 
     fn run_pool(
         backend: Backend,
         manifest: Arc<Manifest>,
         compiles: &Arc<AtomicU64>,
         prestage: bool,
-    ) -> Vec<WorkerEvent> {
+        faults: Option<FaultPlan>,
+        deadline: Option<Instant>,
+    ) -> (Vec<WorkerEvent>, u64) {
         let cfg = SynthConfig {
             frames: 9,
             height: 32,
@@ -279,8 +568,8 @@ mod tests {
         queue.register(JobId(1), 1);
         let router = Arc::new(ResultRouter::new());
         let rx = router.register(JobId(1));
-        let init_errors = Arc::new(Mutex::new(Vec::new()));
         let pool = BufferPool::shared();
+        let respawns = Arc::new(AtomicU64::new(0));
         let spec = WorkerSpec {
             workers: 2,
             backend,
@@ -290,15 +579,16 @@ mod tests {
             pool: pool.clone(),
             intra_box_threads: 2,
             isa: Isa::Auto,
+            faults,
+            respawns: respawns.clone(),
         };
         let handles = spawn_workers(
             spec,
             queue.clone(),
             router.clone(),
             compiles.clone(),
-            init_errors.clone(),
-        );
-        assert!(init_errors.lock().unwrap().is_empty());
+        )
+        .unwrap();
         let tasks =
             crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8));
         assert_eq!(tasks.len(), 4); // frames 0..8 = one temporal box
@@ -328,6 +618,8 @@ mod tests {
                     clip_t0: 0,
                     staged,
                     enqueued: Instant::now(),
+                    attempt: 0,
+                    deadline,
                 },
                 Policy::Block,
             );
@@ -337,18 +629,26 @@ mod tests {
         for h in handles {
             h.join().unwrap().unwrap();
         }
-        events
+        (events, respawns.load(Ordering::Relaxed))
+    }
+
+    fn done(ev: &WorkerEvent) -> &BoxResult {
+        match &ev.outcome {
+            BoxOutcome::Done(r) => r,
+            _ => panic!("expected a Done outcome"),
+        }
     }
 
     fn check_events(events: &[WorkerEvent]) {
         assert_eq!(events.len(), 4);
         for ev in events {
             assert_eq!(ev.job_id, JobId(1));
-            let r = ev.result.as_ref().unwrap();
+            let r = done(ev);
             assert_eq!(r.binary.len(), 8 * 16 * 16);
             assert_eq!(r.detect.as_ref().unwrap().len(), 8 * 3);
             assert!(r.latency > Duration::ZERO);
             assert!(r.latency >= r.queue_wait);
+            assert_eq!(r.attempt, 0);
         }
     }
 
@@ -356,15 +656,18 @@ mod tests {
     #[test]
     fn cpu_workers_process_all_boxes_offline() {
         let compiles = Arc::new(AtomicU64::new(0));
-        let events = run_pool(
+        let (events, respawns) = run_pool(
             Backend::Cpu,
             Arc::new(Manifest::default()),
             &compiles,
             false,
+            None,
+            None,
         );
         check_events(&events);
-        // The CPU backend never compiles anything.
+        // The CPU backend never compiles anything; nothing respawned.
         assert_eq!(compiles.load(Ordering::Relaxed), 0);
+        assert_eq!(respawns, 0);
     }
 
     /// Pre-staged (ingest-thread) inputs produce the same results as
@@ -372,33 +675,123 @@ mod tests {
     #[test]
     fn prestaged_inputs_match_worker_side_extraction() {
         let compiles = Arc::new(AtomicU64::new(0));
-        let staged = run_pool(
+        let (staged, _) = run_pool(
             Backend::Cpu,
             Arc::new(Manifest::default()),
             &compiles,
             true,
+            None,
+            None,
         );
-        let extracted = run_pool(
+        let (extracted, _) = run_pool(
             Backend::Cpu,
             Arc::new(Manifest::default()),
             &compiles,
             false,
+            None,
+            None,
         );
         check_events(&staged);
-        let mut a: Vec<_> = staged
-            .iter()
-            .map(|e| e.result.as_ref().unwrap())
-            .collect();
-        let mut b: Vec<_> = extracted
-            .iter()
-            .map(|e| e.result.as_ref().unwrap())
-            .collect();
+        let mut a: Vec<_> = staged.iter().map(done).collect();
+        let mut b: Vec<_> = extracted.iter().map(done).collect();
         a.sort_by_key(|r| r.task.id);
         b.sort_by_key(|r| r.task.id);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.binary, y.binary);
             assert_eq!(x.detect, y.detect);
         }
+    }
+
+    /// A certain-fire execute-panic plan: every box is quarantined with
+    /// the preserved panic payload + identity, and the worker respawns
+    /// its executor once per panic.
+    #[test]
+    fn panics_quarantine_the_box_and_respawn_the_executor() {
+        let compiles = Arc::new(AtomicU64::new(0));
+        let faults = FaultPlan {
+            exec_panic: 1.0,
+            ..FaultPlan::new(7)
+        };
+        let (events, respawns) = run_pool(
+            Backend::Cpu,
+            Arc::new(Manifest::default()),
+            &compiles,
+            false,
+            Some(faults),
+            None,
+        );
+        assert_eq!(events.len(), 4);
+        for ev in &events {
+            match &ev.outcome {
+                BoxOutcome::Panicked {
+                    message, attempt, ..
+                } => {
+                    assert_eq!(*attempt, 0);
+                    assert!(
+                        message.contains("injected execute-panic fault"),
+                        "payload preserved: {message}"
+                    );
+                    assert!(
+                        message.contains("job 1 box"),
+                        "identity recorded: {message}"
+                    );
+                }
+                _ => panic!("expected every box quarantined"),
+            }
+        }
+        assert_eq!(respawns, 4, "one respawn per caught panic");
+    }
+
+    /// Boxes popped past their deadline are shed unexecuted with the
+    /// distinct DeadlineExceeded outcome.
+    #[test]
+    fn past_deadline_boxes_are_shed_at_pop() {
+        let compiles = Arc::new(AtomicU64::new(0));
+        let expired = Instant::now() - Duration::from_millis(1);
+        let (events, respawns) = run_pool(
+            Backend::Cpu,
+            Arc::new(Manifest::default()),
+            &compiles,
+            false,
+            None,
+            Some(expired),
+        );
+        assert_eq!(events.len(), 4);
+        for ev in &events {
+            assert!(matches!(
+                ev.outcome,
+                BoxOutcome::DeadlineExceeded { attempt: 0, .. }
+            ));
+        }
+        assert_eq!(respawns, 0);
+    }
+
+    /// A retry ticket rebuilds the job one attempt up, without staging.
+    #[test]
+    fn retry_tickets_requeue_without_staging() {
+        let clip = Arc::new(crate::video::generate(&SynthConfig {
+            frames: 9,
+            height: 32,
+            width: 32,
+            ..SynthConfig::default()
+        }));
+        let task =
+            crate::video::cut_boxes(32, 32, 9, BoxDims::new(16, 16, 8))[0];
+        let job = BoxJob {
+            job_id: JobId(3),
+            task,
+            clip,
+            clip_t0: 8,
+            staged: None,
+            enqueued: Instant::now(),
+            attempt: 1,
+            deadline: None,
+        };
+        let requeued = RetryTicket::of(&job).requeue(JobId(3));
+        assert_eq!(requeued.attempt, 2);
+        assert_eq!(requeued.clip_t0, 8);
+        assert_eq!(requeued.task.id, task.id);
+        assert!(requeued.staged.is_none());
     }
 
     /// End-to-end PJRT worker smoke test (needs artifacts; skips
@@ -413,8 +806,14 @@ mod tests {
             return;
         };
         let compiles = Arc::new(AtomicU64::new(0));
-        let events =
-            run_pool(Backend::Pjrt, Arc::new(manifest), &compiles, false);
+        let (events, _) = run_pool(
+            Backend::Pjrt,
+            Arc::new(manifest),
+            &compiles,
+            false,
+            None,
+            None,
+        );
         check_events(&events);
         // Both workers compiled the full chain (fused stage + detect)
         // exactly once each, at spawn, not per box.

@@ -7,7 +7,9 @@
 //! compilation on every worker.
 
 use super::session::Engine;
-use crate::config::{Backend, FusionMode, Isa, QueuePolicy, RunConfig};
+use crate::config::{
+    Backend, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
+};
 use crate::fusion::halo::BoxDims;
 use crate::Result;
 
@@ -149,6 +151,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Deterministic fault-injection plan for chaos testing (see
+    /// [`FaultPlan`]): seeded, so equal-seed runs inject the exact same
+    /// faults. Unset (the default) injects nothing; the `KFUSE_FAULTS`
+    /// env var fills in only when no plan was set here.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.cfg.faults = Some(plan);
+        self
+    }
+
     /// The config as currently accumulated (inspection/testing).
     pub fn run_config(&self) -> &RunConfig {
         &self.cfg
@@ -186,7 +197,8 @@ mod tests {
             .device("gtx750ti")
             .frame_size(64)
             .frames(24)
-            .fps(750.0);
+            .fps(750.0)
+            .faults(FaultPlan::uniform(11, 0.05).unwrap());
         let cfg = b.run_config();
         assert_eq!(cfg.artifacts_dir, "elsewhere");
         assert_eq!(cfg.backend, Backend::Cpu);
@@ -205,6 +217,7 @@ mod tests {
         assert_eq!(cfg.frame_size, 64);
         assert_eq!(cfg.frames, 24);
         assert_eq!(cfg.fps, 750.0);
+        assert_eq!(cfg.faults, Some(FaultPlan::uniform(11, 0.05).unwrap()));
     }
 
     #[test]

@@ -20,7 +20,23 @@
 //! deficit-weighted arbitration a small serve job admitted next to a
 //! backlogged batch job drains at its own pace instead of queueing
 //! behind the backlog.
+//!
+//! # Fault tolerance
+//!
+//! Box failure is contained per box, never per job. Each job keeps a
+//! disposition [`Ledger`]: every submitted box resolves to exactly ONE
+//! [`Disposition`] — ok, retried-then-ok, failed, quarantined (executor
+//! panic), dropped (backpressure eviction), or deadline-exceeded — and
+//! the sorted per-box log lands in the job's
+//! [`MetricsReport::dispositions`]. [`JobOptions`] controls the policy:
+//! transient failures (executor errors, injected faults) requeue with
+//! exponential backoff up to `max_retries`; a `deadline` sheds work both
+//! at serve admission (before paying for staging) and at worker pop.
+//! A job therefore completes `Ok` with failures COUNTED rather than
+//! erroring out; `Err` from a job means infrastructure collapse (the
+//! engine tore down mid-flight), not a bad box.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -28,9 +44,14 @@ use std::time::{Duration, Instant};
 use super::session::{Engine, EngineCore};
 use crate::coordinator::backpressure::Policy;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::metrics::{Metrics, MetricsReport};
+use crate::coordinator::faults::{FaultPlan, FaultSite};
+use crate::coordinator::metrics::{
+    BoxDisposition, Disposition, Metrics, MetricsReport,
+};
 use crate::coordinator::mux::JobId;
-use crate::coordinator::scheduler::{BoxJob, WorkerEvent};
+use crate::coordinator::scheduler::{
+    panic_message, BoxJob, BoxOutcome, BoxResult, RetryTicket, WorkerEvent,
+};
 use crate::tracking::{Tracker, TrackerConfig};
 use crate::video::{cut_boxes, ground_truth, BoxTask, Video};
 use crate::{Error, Result};
@@ -69,6 +90,33 @@ impl JobKind {
     }
 }
 
+/// Per-job fault policy, passed at submission (`submit_*_with`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobOptions {
+    /// Soft completion budget, measured from job start. Past it, serve
+    /// admission sheds boxes before staging and workers shed queued
+    /// boxes at pop; both resolve as `Disposition::DeadlineExceeded`.
+    /// `None` (default) never sheds.
+    pub deadline: Option<Duration>,
+    /// Retry budget per box for TRANSIENT failures (executor errors,
+    /// injected faults). Panics are never retried — the input is
+    /// quarantined. 0 (default) fails fast.
+    pub max_retries: u32,
+    /// Base backoff before the first retry; doubles per attempt
+    /// (`backoff × 2^attempt`).
+    pub backoff: Duration,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        JobOptions {
+            deadline: None,
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+        }
+    }
+}
+
 /// An admitted, in-flight job. Obtain from the `submit_*` methods; call
 /// [`JobHandle::wait`] for the job's report. Dropping the handle
 /// detaches the job (it still runs to completion and its stats still
@@ -96,9 +144,12 @@ impl<T> JobHandle<T> {
 
     /// Block until the job completes and return its report.
     pub fn wait(self) -> Result<T> {
-        self.thread
-            .join()
-            .map_err(|_| Error::Coordinator("job thread panicked".into()))?
+        self.thread.join().map_err(|p| {
+            Error::Coordinator(format!(
+                "job thread panicked: {}",
+                panic_message(p)
+            ))
+        })?
     }
 }
 
@@ -110,7 +161,8 @@ pub struct RunReport {
     pub tracks: usize,
     /// Per-track RMSE vs ground truth (synthetic clips only).
     pub rmse: Vec<f64>,
-    /// Reassembled binary output (for inspection/testing).
+    /// Reassembled binary output (for inspection/testing). Boxes that
+    /// failed, quarantined, or were shed stay zero.
     pub binary: Video,
 }
 
@@ -147,23 +199,264 @@ impl ServeOpts {
     }
 }
 
-/// Fold one routed event into a job's accounting: a successful box is
-/// recorded (and handed to `on_box` for reassembly), a worker error is
-/// captured into `first_err` without stopping the drain.
+/// A job's exact failure accounting. Owned by the job's collector; every
+/// submitted box passes through [`Ledger::settle`] exactly once, so at
+/// job end `log` partitions the submitted boxes and the counters
+/// partition `log`.
+struct Ledger {
+    opts: JobOptions,
+    /// Absolute deadline (`job start + opts.deadline`).
+    deadline: Option<Instant>,
+    /// Admission policy for retry requeues (the job's own policy, so a
+    /// retry competes like any other of the job's boxes).
+    admission: Policy,
+    log: Vec<BoxDisposition>,
+    dropped: u64,
+    failed: u64,
+    quarantined: u64,
+    deadline_exceeded: u64,
+    retries: u64,
+    retried_ok: u64,
+}
+
+impl Ledger {
+    fn new(opts: JobOptions, admission: Policy, started: Instant) -> Ledger {
+        Ledger {
+            deadline: opts.deadline.map(|d| started + d),
+            opts,
+            admission,
+            log: Vec::new(),
+            dropped: 0,
+            failed: 0,
+            quarantined: 0,
+            deadline_exceeded: 0,
+            retries: 0,
+            retried_ok: 0,
+        }
+    }
+
+    fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Record a box's FINAL disposition. Called exactly once per box.
+    fn settle(
+        &mut self,
+        frame_t0: u64,
+        box_id: u64,
+        disposition: Disposition,
+        attempts: u32,
+        input_hash: Option<u64>,
+    ) {
+        match disposition {
+            Disposition::Ok => {}
+            Disposition::RetriedOk => self.retried_ok += 1,
+            Disposition::Failed => self.failed += 1,
+            Disposition::Quarantined => self.quarantined += 1,
+            Disposition::Dropped => self.dropped += 1,
+            Disposition::DeadlineExceeded => self.deadline_exceeded += 1,
+        }
+        self.log.push(BoxDisposition {
+            frame_t0,
+            box_id,
+            disposition,
+            attempts,
+            input_hash,
+        });
+    }
+
+    /// Settle backpressure evictions (always this job's own boxes).
+    fn record_drops(&mut self, evicted: &[BoxJob]) {
+        for job in evicted {
+            self.settle(
+                (job.clip_t0 + job.task.t0) as u64,
+                job.task.id as u64,
+                Disposition::Dropped,
+                job.attempt,
+                None,
+            );
+        }
+    }
+
+    /// Settle a box shed at admission, before staging (serve's
+    /// past-deadline load shedding).
+    fn shed(&mut self, clip_t0: usize, task: &BoxTask) {
+        self.settle(
+            (clip_t0 + task.t0) as u64,
+            task.id as u64,
+            Disposition::DeadlineExceeded,
+            0,
+            None,
+        );
+    }
+
+    /// Fold the counters into the job's metrics and return the log,
+    /// sorted by (global frame, box id) — a canonical order independent
+    /// of worker interleaving, so equal-seed fault runs compare bitwise.
+    fn finish(mut self, metrics: &Metrics) -> Vec<BoxDisposition> {
+        let rel = std::sync::atomic::Ordering::Relaxed;
+        metrics.dropped.fetch_add(self.dropped, rel);
+        metrics.failed.fetch_add(self.failed, rel);
+        metrics.quarantined.fetch_add(self.quarantined, rel);
+        metrics.deadline_exceeded.fetch_add(self.deadline_exceeded, rel);
+        metrics.retries.fetch_add(self.retries, rel);
+        metrics.retried_ok.fetch_add(self.retried_ok, rel);
+        self.log.sort_by_key(|d| (d.frame_t0, d.box_id));
+        self.log
+    }
+}
+
+/// Whether an ingest-side fault fires for this box (always attempt 0:
+/// retries re-extract worker-side and never pass through ingest again).
+fn ingest_fires(
+    faults: Option<FaultPlan>,
+    site: FaultSite,
+    job: JobId,
+    box_id: usize,
+) -> bool {
+    faults.is_some_and(|f| f.fires(site, job.0, box_id as u64, 0))
+}
+
+/// The failure outcome for a fired ingest fault: retryable, carrying the
+/// ticket that lets the retry re-extract worker-side.
+fn ingest_fault_outcome(
+    site: FaultSite,
+    job: JobId,
+    ticket: RetryTicket,
+) -> BoxOutcome {
+    let error = Error::Coordinator(format!(
+        "injected {} fault: job {} box {}",
+        site.name(),
+        job.0,
+        ticket.task.id
+    ));
+    BoxOutcome::Failed {
+        ticket,
+        error,
+        retryable: true,
+    }
+}
+
+/// Fold one box outcome into the job's accounting.
+///
+/// Returns `(settled, evicted)`: `settled` is `true` when the box
+/// reached its final disposition (one outstanding box resolved), `false`
+/// when it was requeued for another attempt (still outstanding);
+/// `evicted` is how many OTHER outstanding boxes a retry requeue
+/// displaced under `DropOldest` (each already settled as `Dropped`
+/// here — the caller only adjusts its outstanding count).
 fn absorb(
     core: &EngineCore,
+    id: JobId,
     metrics: &Metrics,
-    ev: WorkerEvent,
-    first_err: &mut Option<Error>,
-    on_box: &mut dyn FnMut(&crate::coordinator::scheduler::BoxResult),
-) {
-    match ev.result {
-        Ok(r) => {
+    ledger: &mut Ledger,
+    outcome: BoxOutcome,
+    on_box: &mut dyn FnMut(&BoxResult),
+) -> (bool, u64) {
+    match outcome {
+        BoxOutcome::Done(r) => {
             core.record(metrics, &r);
+            let disposition = if r.attempt > 0 {
+                Disposition::RetriedOk
+            } else {
+                Disposition::Ok
+            };
+            ledger.settle(
+                (r.clip_t0 + r.task.t0) as u64,
+                r.task.id as u64,
+                disposition,
+                r.attempt + 1,
+                None,
+            );
             on_box(&r);
+            (true, 0)
         }
-        Err(e) => {
-            first_err.get_or_insert(e);
+        BoxOutcome::Failed {
+            ticket, retryable, ..
+        } => {
+            let frame_t0 = (ticket.clip_t0 + ticket.task.t0) as u64;
+            let box_id = ticket.task.id as u64;
+            let attempts = ticket.attempt + 1;
+            if retryable && ticket.attempt < ledger.opts.max_retries {
+                if ledger.past_deadline() {
+                    // No point requeueing work the deadline already
+                    // killed.
+                    ledger.settle(
+                        frame_t0,
+                        box_id,
+                        Disposition::DeadlineExceeded,
+                        attempts,
+                        None,
+                    );
+                    return (true, 0);
+                }
+                // Exponential backoff, slept on the collector thread:
+                // safe, because the result channel is unbounded — the
+                // workers never block on delivery while we sleep.
+                let backoff = ledger
+                    .opts
+                    .backoff
+                    .saturating_mul(1u32 << ticket.attempt.min(16));
+                std::thread::sleep(backoff);
+                let (accepted, evicted) =
+                    core.queue.push(id, ticket.requeue(id), ledger.admission);
+                let n_evicted = evicted.len() as u64;
+                ledger.record_drops(&evicted);
+                if accepted {
+                    ledger.retries += 1;
+                    (false, n_evicted)
+                } else {
+                    // Engine tearing down: the retry never entered the
+                    // queue, settle terminally.
+                    ledger.settle(
+                        frame_t0,
+                        box_id,
+                        Disposition::Failed,
+                        attempts,
+                        None,
+                    );
+                    (true, n_evicted)
+                }
+            } else {
+                ledger.settle(
+                    frame_t0,
+                    box_id,
+                    Disposition::Failed,
+                    attempts,
+                    None,
+                );
+                (true, 0)
+            }
+        }
+        BoxOutcome::Panicked {
+            task,
+            clip_t0,
+            attempt,
+            input_hash,
+            ..
+        } => {
+            ledger.settle(
+                (clip_t0 + task.t0) as u64,
+                task.id as u64,
+                Disposition::Quarantined,
+                attempt + 1,
+                Some(input_hash),
+            );
+            (true, 0)
+        }
+        BoxOutcome::DeadlineExceeded {
+            task,
+            clip_t0,
+            attempt,
+        } => {
+            ledger.settle(
+                (clip_t0 + task.t0) as u64,
+                task.id as u64,
+                Disposition::DeadlineExceeded,
+                attempt,
+                None,
+            );
+            (true, 0)
         }
     }
 }
@@ -196,13 +489,24 @@ impl Engine {
         &self,
         clip: Arc<Video>,
     ) -> Result<JobHandle<RunReport>> {
-        self.submit_batch_inner(clip, None)
+        self.submit_batch_inner(clip, None, JobOptions::default())
+    }
+
+    /// [`Engine::submit_batch`] with an explicit fault policy
+    /// (deadline / retry budget / backoff).
+    pub fn submit_batch_with(
+        &self,
+        clip: Arc<Video>,
+        opts: JobOptions,
+    ) -> Result<JobHandle<RunReport>> {
+        self.submit_batch_inner(clip, None, opts)
     }
 
     pub(crate) fn submit_batch_inner(
         &self,
         clip: Arc<Video>,
         truth: Option<Vec<Vec<(f64, f64)>>>,
+        opts: JobOptions,
     ) -> Result<JobHandle<RunReport>> {
         let core = self.core.clone();
         core.check_clip(&clip)?;
@@ -214,7 +518,7 @@ impl Engine {
         let (id, rx) = core.admit(JobKind::Batch);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_batch(&core, id, rx, clip, tasks, truth)
+            run_batch(&core, id, rx, clip, tasks, truth, opts)
         });
         Ok(JobHandle {
             id,
@@ -236,7 +540,12 @@ impl Engine {
         let (clip, scfg) =
             crate::coordinator::synth_clip(&self.core.cfg, seed);
         let truth = ground_truth(&scfg);
-        self.submit_batch_inner(Arc::new(clip), Some(truth))?.wait()
+        self.submit_batch_inner(
+            Arc::new(clip),
+            Some(truth),
+            JobOptions::default(),
+        )?
+        .wait()
     }
 
     /// Submit a paced streaming job; returns immediately with a
@@ -250,6 +559,19 @@ impl Engine {
         clip: Arc<Video>,
         opts: ServeOpts,
     ) -> Result<JobHandle<MetricsReport>> {
+        self.submit_serve_with(clip, opts, JobOptions::default())
+    }
+
+    /// [`Engine::submit_serve`] with an explicit fault policy. A
+    /// `deadline` makes the admission loop shed boxes BEFORE staging
+    /// once the lane is past-deadline — the pacer keeps its cadence and
+    /// the engine stops paying for work that can no longer be on time.
+    pub fn submit_serve_with(
+        &self,
+        clip: Arc<Video>,
+        opts: ServeOpts,
+        jopts: JobOptions,
+    ) -> Result<JobHandle<MetricsReport>> {
         let core = self.core.clone();
         core.check_clip(&clip)?;
         if !opts.fps.is_finite() || opts.fps <= 0.0 {
@@ -261,7 +583,7 @@ impl Engine {
         let (id, rx) = core.admit(JobKind::Serve);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_serve(&core, id, rx, clip, opts)
+            run_serve(&core, id, rx, clip, opts, jopts)
         });
         Ok(JobHandle {
             id,
@@ -288,12 +610,21 @@ impl Engine {
         &self,
         clip: Arc<Video>,
     ) -> Result<JobHandle<(RunReport, f64)>> {
+        self.submit_roi_with(clip, JobOptions::default())
+    }
+
+    /// [`Engine::submit_roi`] with an explicit fault policy.
+    pub fn submit_roi_with(
+        &self,
+        clip: Arc<Video>,
+        opts: JobOptions,
+    ) -> Result<JobHandle<(RunReport, f64)>> {
         let core = self.core.clone();
         core.check_clip(&clip)?;
         let (id, rx) = core.admit(JobKind::Roi);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_roi(&core, id, rx, clip)
+            run_roi(&core, id, rx, clip, opts)
         });
         Ok(JobHandle {
             id,
@@ -309,8 +640,11 @@ impl Engine {
 }
 
 /// Batch collector body: producer thread stages pre-extracted boxes into
-/// the job's lane; this thread drains exactly one event per pushed box,
-/// reassembles the binarized clip, and runs the tracking pass.
+/// the job's lane; this thread drains one event per outstanding box
+/// (retries stay outstanding until their final attempt resolves),
+/// reassembles the binarized clip, and runs the tracking pass. Boxes
+/// that fail terminally leave their region zero; the job still
+/// completes `Ok` with the failures counted in its disposition log.
 fn run_batch(
     core: &Arc<EngineCore>,
     id: JobId,
@@ -318,12 +652,16 @@ fn run_batch(
     clip: Arc<Video>,
     tasks: Vec<BoxTask>,
     truth: Option<Vec<Vec<(f64, f64)>>>,
+    opts: JobOptions,
 ) -> Result<RunReport> {
     let bx = core.cfg.box_dims;
     let n_tasks = tasks.len();
     let frames_covered = (clip.t / bx.t) * bx.t;
     let metrics = Metrics::new();
     let started = Instant::now();
+    let mut ledger = Ledger::new(opts, Policy::Block, started);
+    let deadline = ledger.deadline;
+    let faults = core.faults;
     // Async ingest: pre-extract each box's halo'd input and stage it
     // ahead of worker demand (the lane's bounded depth backpressures
     // this thread; pushing inline with collection would deadlock once
@@ -333,15 +671,46 @@ fn run_batch(
         let clip = clip.clone();
         std::thread::spawn(move || {
             let total = tasks.len();
-            let submitted = std::sync::atomic::AtomicUsize::new(0);
+            let covered = AtomicUsize::new(0);
             // Contained like the workers' hot path: every task the
-            // collector expects MUST produce an event, so if staging
-            // panics (or admission fails mid-job) the remainder is
-            // reported as errors instead of leaving the collector
-            // blocked on a receive forever.
+            // collector expects MUST produce exactly one initial event —
+            // a worker event once pushed, a routed ingest-fault event,
+            // or (if staging panics / admission fails mid-job) a routed
+            // remainder error — so the collector can never block on a
+            // receive forever.
             let outcome = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
-                    for task in tasks {
+                    for task in &tasks {
+                        let task = *task;
+                        let ticket = || RetryTicket {
+                            task,
+                            clip: clip.clone(),
+                            clip_t0: 0,
+                            attempt: 0,
+                            deadline,
+                        };
+                        // Injected ingest faults: the box never stages.
+                        // Its failure event routes through the same
+                        // channel the workers use, so the collector's
+                        // accounting (and the retry machinery) is
+                        // uniform across fault sites.
+                        if ingest_fires(
+                            faults,
+                            FaultSite::Extract,
+                            id,
+                            task.id,
+                        ) {
+                            let _ = core.router.route(WorkerEvent {
+                                job_id: id,
+                                outcome: ingest_fault_outcome(
+                                    FaultSite::Extract,
+                                    id,
+                                    ticket(),
+                                ),
+                            });
+                            covered.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
                         // Pre-staged halo'd input, recycled through the
                         // engine's BufferPool: in-flight staging is
                         // bounded by the lane depth, and the pool was
@@ -356,6 +725,26 @@ fn run_batch(
                             core.plan.halo,
                             staged.vec_mut(),
                         );
+                        if ingest_fires(
+                            faults,
+                            FaultSite::Stage,
+                            id,
+                            task.id,
+                        ) {
+                            // Torn handoff: the extracted buffer goes
+                            // back to the pool unstaged.
+                            drop(staged);
+                            let _ = core.router.route(WorkerEvent {
+                                job_id: id,
+                                outcome: ingest_fault_outcome(
+                                    FaultSite::Stage,
+                                    id,
+                                    ticket(),
+                                ),
+                            });
+                            covered.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
                         let (accepted, _) = core.queue.push(
                             id,
                             BoxJob {
@@ -365,59 +754,82 @@ fn run_batch(
                                 clip_t0: 0,
                                 staged: Some(staged),
                                 enqueued: Instant::now(),
+                                attempt: 0,
+                                deadline,
                             },
                             Policy::Block,
                         );
                         if !accepted {
                             return; // engine tearing down
                         }
-                        submitted.fetch_add(
-                            1,
-                            std::sync::atomic::Ordering::Relaxed,
-                        );
+                        covered.fetch_add(1, Ordering::Relaxed);
                     }
                 }),
             );
-            let submitted =
-                submitted.load(std::sync::atomic::Ordering::Relaxed);
-            if outcome.is_err() || submitted < total {
-                for _ in submitted..total {
+            let covered = covered.load(Ordering::Relaxed);
+            if outcome.is_err() || covered < total {
+                for task in &tasks[covered..] {
                     let _ = core.router.route(WorkerEvent {
                         job_id: id,
-                        result: Err(Error::Coordinator(
-                            "batch ingest stopped before staging every \
-                             box"
-                                .into(),
-                        )),
+                        outcome: BoxOutcome::Failed {
+                            ticket: RetryTicket {
+                                task: *task,
+                                clip: clip.clone(),
+                                clip_t0: 0,
+                                attempt: 0,
+                                deadline,
+                            },
+                            error: Error::Coordinator(
+                                "batch ingest stopped before staging \
+                                 every box"
+                                    .into(),
+                            ),
+                            retryable: false,
+                        },
                     });
                 }
             }
         })
     };
-    // Collector: reassemble the binarized video. A worker error does not
-    // stop the drain — every pushed box still produces an event, and
-    // draining them keeps the lane clean for concurrent jobs.
+    // Collector: reassemble the binarized video. Failures do not stop
+    // the drain — every outstanding box resolves to exactly one
+    // disposition, and draining keeps the lane clean for concurrent
+    // jobs.
     let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
-    let mut first_err: Option<Error> = None;
-    for _ in 0..n_tasks {
+    let mut outstanding = n_tasks as u64;
+    let mut infra: Option<Error> = None;
+    while outstanding > 0 {
         match rx.recv() {
-            Ok(ev) => absorb(core, &metrics, ev, &mut first_err, &mut |r| {
-                binary.write_box(
-                    r.clip_t0 + r.task.t0,
-                    r.task.i0,
-                    r.task.j0,
-                    r.task.dims,
-                    &r.binary,
+            Ok(ev) => {
+                let (settled, evicted) = absorb(
+                    core,
+                    id,
+                    &metrics,
+                    &mut ledger,
+                    ev.outcome,
+                    &mut |r| {
+                        binary.write_box(
+                            r.clip_t0 + r.task.t0,
+                            r.task.i0,
+                            r.task.j0,
+                            r.task.dims,
+                            &r.binary,
+                        );
+                    },
                 );
-            }),
+                if settled {
+                    outstanding -= 1;
+                }
+                outstanding -= evicted;
+            }
             Err(_) => {
-                first_err.get_or_insert_with(disconnected);
+                infra = Some(disconnected());
                 break;
             }
         }
     }
     let _ = producer.join();
-    if let Some(e) = first_err {
+    if let Some(e) = infra {
         return Err(e);
     }
     let wall = started.elapsed();
@@ -435,7 +847,9 @@ fn run_batch(
         .map(|tr| tracker.rmse_vs_truth(&tr))
         .unwrap_or_default();
 
-    let report = metrics.snapshot(wall, frames_covered as u64);
+    let dispositions = ledger.finish(&metrics);
+    let mut report = metrics.snapshot(wall, frames_covered as u64);
+    report.dispositions = dispositions;
     core.finish_job(id, JobKind::Batch, &report);
     Ok(RunReport {
         tracks: tracker.tracks.len(),
@@ -450,12 +864,16 @@ fn run_batch(
 /// ingest buffer that absorbs transient worker stalls); the admission
 /// loop windows frames, pre-extracts box inputs, and admits them under
 /// the job's policy, draining results opportunistically between frames.
+/// With a `JobOptions::deadline`, a past-deadline lane sheds boxes at
+/// admission, BEFORE extraction/staging — load shedding that keeps the
+/// pacer honest instead of queueing doomed work.
 fn run_serve(
     core: &Arc<EngineCore>,
     id: JobId,
     rx: Receiver<WorkerEvent>,
     clip: Arc<Video>,
     opts: ServeOpts,
+    jopts: JobOptions,
 ) -> Result<MetricsReport> {
     let bx = core.cfg.box_dims;
     let metrics = Metrics::new();
@@ -463,6 +881,9 @@ fn run_serve(
     let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
     let plane = clip.h * clip.w * 4;
     let started = Instant::now();
+    let mut ledger = Ledger::new(jopts, opts.policy, started);
+    let deadline = ledger.deadline;
+    let faults = core.faults;
     let frame_interval = Duration::from_secs_f64(1.0 / opts.fps);
 
     // Pacer: the "camera". Runs free of admission stalls — up to
@@ -489,16 +910,52 @@ fn run_serve(
     };
 
     let mut batcher = Batcher::new(bx.t, clip.h, clip.w, 4);
-    let mut pushed = 0u64;
-    let mut job_dropped = 0u64;
-    let mut completed = 0u64;
-    let mut first_err: Option<Error> = None;
+    // Boxes in flight (queued or executing). Settled dispositions and
+    // backpressure evictions decrement; retry requeues keep a box
+    // outstanding.
+    let mut outstanding = 0u64;
+    let mut infra: Option<Error> = None;
     'ingest: for frame in frame_rx.iter() {
         if let Some(window) = batcher.push(frame) {
             let win = Arc::new(window.buf);
             for mut task in spatial.iter().copied() {
                 // Window frames are 1-offset (halo first): shift origin.
                 task.t0 += 1;
+                // Deadline-aware admission: shed BEFORE paying for
+                // extraction and staging.
+                if ledger.past_deadline() {
+                    ledger.shed(window.t0, &task);
+                    continue;
+                }
+                let ticket = || RetryTicket {
+                    task,
+                    clip: win.clone(),
+                    clip_t0: window.t0,
+                    attempt: 0,
+                    deadline,
+                };
+                // Ingest faults are absorbed directly — this IS the
+                // job's collector thread, no routing detour needed. A
+                // requeued retry becomes outstanding like a pushed box.
+                if ingest_fires(faults, FaultSite::Extract, id, task.id) {
+                    let (settled, evicted) = absorb(
+                        core,
+                        id,
+                        &metrics,
+                        &mut ledger,
+                        ingest_fault_outcome(
+                            FaultSite::Extract,
+                            id,
+                            ticket(),
+                        ),
+                        &mut |_| {},
+                    );
+                    if !settled {
+                        outstanding += 1;
+                    }
+                    outstanding -= evicted;
+                    continue;
+                }
                 let mut staged = core.checkout_staging();
                 win.extract_box_into(
                     task.t0,
@@ -508,6 +965,22 @@ fn run_serve(
                     core.plan.halo,
                     staged.vec_mut(),
                 );
+                if ingest_fires(faults, FaultSite::Stage, id, task.id) {
+                    drop(staged);
+                    let (settled, evicted) = absorb(
+                        core,
+                        id,
+                        &metrics,
+                        &mut ledger,
+                        ingest_fault_outcome(FaultSite::Stage, id, ticket()),
+                        &mut |_| {},
+                    );
+                    if !settled {
+                        outstanding += 1;
+                    }
+                    outstanding -= evicted;
+                    continue;
+                }
                 let (accepted, evicted) = core.queue.push(
                     id,
                     BoxJob {
@@ -517,23 +990,36 @@ fn run_serve(
                         clip_t0: window.t0,
                         staged: Some(staged),
                         enqueued: Instant::now(),
+                        attempt: 0,
+                        deadline,
                     },
                     opts.policy,
                 );
+                // Lane eviction is strictly own-job, so every evicted
+                // box is ours: settle each as Dropped, exact accounting.
+                outstanding -= evicted.len() as u64;
+                ledger.record_drops(&evicted);
                 if !accepted {
                     break 'ingest; // engine tearing down
                 }
-                pushed += 1;
-                // Lane eviction is strictly own-job, so every evicted
-                // box is ours: exact per-job drop accounting.
-                job_dropped += evicted.len() as u64;
+                outstanding += 1;
             }
         }
         // Opportunistic drain between frames keeps the result channel
         // flat without a second collector thread.
         while let Ok(ev) = rx.try_recv() {
-            completed += 1;
-            absorb(core, &metrics, ev, &mut first_err, &mut |_| {});
+            let (settled, evicted) = absorb(
+                core,
+                id,
+                &metrics,
+                &mut ledger,
+                ev.outcome,
+                &mut |_| {},
+            );
+            if settled {
+                outstanding -= 1;
+            }
+            outstanding -= evicted;
         }
     }
     // Drop the staging receiver BEFORE joining: if ingest broke out
@@ -541,42 +1027,54 @@ fn run_serve(
     // channel, and the disconnect is what unblocks it.
     drop(frame_rx);
     let _ = pacer.join();
-    // Ingest done: drops only happen during pushes, so the drop count
-    // is final and the outstanding box count is exact. Drain them all
-    // — no processed result is ever silently discarded.
-    let expected = pushed - job_dropped;
-    while completed < expected {
+    // Ingest done: every outstanding box still resolves to exactly one
+    // disposition. Drain them all — no processed result is ever
+    // silently discarded.
+    while outstanding > 0 {
         match rx.recv() {
             Ok(ev) => {
-                completed += 1;
-                absorb(core, &metrics, ev, &mut first_err, &mut |_| {});
+                let (settled, evicted) = absorb(
+                    core,
+                    id,
+                    &metrics,
+                    &mut ledger,
+                    ev.outcome,
+                    &mut |_| {},
+                );
+                if settled {
+                    outstanding -= 1;
+                }
+                outstanding -= evicted;
             }
             Err(_) => {
-                first_err.get_or_insert_with(disconnected);
+                infra = Some(disconnected());
                 break;
             }
         }
     }
-    if let Some(e) = first_err {
+    if let Some(e) = infra {
         return Err(e);
     }
     let wall = started.elapsed();
-    metrics
-        .dropped
-        .fetch_add(job_dropped, std::sync::atomic::Ordering::Relaxed);
-    let report = metrics.snapshot(wall, clip.t as u64);
+    let dispositions = ledger.finish(&metrics);
+    let mut report = metrics.snapshot(wall, clip.t as u64);
+    report.dispositions = dispositions;
     core.finish_job(id, JobKind::Serve, &report);
     Ok(report)
 }
 
 /// ROI body: window-sequential (the tracker feedback decides the next
 /// window's boxes), but still a first-class multiplexed job — its boxes
-/// share the pool with concurrent jobs through its own lane.
+/// share the pool with concurrent jobs through its own lane. A box that
+/// fails terminally leaves its region zero and the window still
+/// completes (the tracker coasts through the hole on its prediction);
+/// only engine teardown aborts the job.
 fn run_roi(
     core: &Arc<EngineCore>,
     id: JobId,
     rx: Receiver<WorkerEvent>,
     clip: Arc<Video>,
+    opts: JobOptions,
 ) -> Result<(RunReport, f64)> {
     let bx = core.cfg.box_dims;
     let windows = clip.t / bx.t;
@@ -585,14 +1083,16 @@ fn run_roi(
     let total_boxes = spatial.len() * windows;
     let metrics = Metrics::new();
     let started = Instant::now();
+    let mut ledger = Ledger::new(opts, Policy::Block, started);
+    let deadline = ledger.deadline;
+    let faults = core.faults;
 
     let mut binary = Video::zeros(frames_covered, clip.h, clip.w, 1);
     let mut tracker = Tracker::new(TrackerConfig::default(), clip.h, clip.w);
     let plane = clip.h * clip.w;
     let mut processed = 0usize;
-    let mut first_err: Option<Error> = None;
 
-    'windows: for win in 0..windows {
+    for win in 0..windows {
         let t0 = win * bx.t;
         // Select boxes: window 0 = all (acquisition); later windows =
         // only boxes intersecting a track's ROI around the predicted
@@ -618,9 +1118,31 @@ fn run_roi(
                 .collect()
         };
         processed += selected.len();
-        let n_sel = selected.len();
+        let mut outstanding = 0u64;
         for mut task in selected {
             task.t0 = t0; // temporal origin of this window in the clip
+            let ticket = || RetryTicket {
+                task,
+                clip: clip.clone(),
+                clip_t0: 0,
+                attempt: 0,
+                deadline,
+            };
+            if ingest_fires(faults, FaultSite::Extract, id, task.id) {
+                let (settled, evicted) = absorb(
+                    core,
+                    id,
+                    &metrics,
+                    &mut ledger,
+                    ingest_fault_outcome(FaultSite::Extract, id, ticket()),
+                    &mut |_| {},
+                );
+                if !settled {
+                    outstanding += 1;
+                }
+                outstanding -= evicted;
+                continue;
+            }
             let mut staged = core.checkout_staging();
             clip.extract_box_into(
                 task.t0,
@@ -630,6 +1152,22 @@ fn run_roi(
                 core.plan.halo,
                 staged.vec_mut(),
             );
+            if ingest_fires(faults, FaultSite::Stage, id, task.id) {
+                drop(staged);
+                let (settled, evicted) = absorb(
+                    core,
+                    id,
+                    &metrics,
+                    &mut ledger,
+                    ingest_fault_outcome(FaultSite::Stage, id, ticket()),
+                    &mut |_| {},
+                );
+                if !settled {
+                    outstanding += 1;
+                }
+                outstanding -= evicted;
+                continue;
+            }
             let (accepted, _) = core.queue.push(
                 id,
                 BoxJob {
@@ -639,37 +1177,45 @@ fn run_roi(
                     clip_t0: 0,
                     staged: Some(staged),
                     enqueued: Instant::now(),
+                    attempt: 0,
+                    deadline,
                 },
                 Policy::Block,
             );
             if !accepted {
-                first_err.get_or_insert_with(disconnected);
-                break 'windows;
+                return Err(disconnected());
             }
+            outstanding += 1;
         }
-        for _ in 0..n_sel {
+        while outstanding > 0 {
             match rx.recv() {
                 Ok(ev) => {
-                    absorb(core, &metrics, ev, &mut first_err, &mut |r| {
-                        binary.write_box(
-                            r.task.t0,
-                            r.task.i0,
-                            r.task.j0,
-                            r.task.dims,
-                            &r.binary,
-                        );
-                    })
+                    let (settled, evicted) = absorb(
+                        core,
+                        id,
+                        &metrics,
+                        &mut ledger,
+                        ev.outcome,
+                        &mut |r| {
+                            binary.write_box(
+                                r.task.t0,
+                                r.task.i0,
+                                r.task.j0,
+                                r.task.dims,
+                                &r.binary,
+                            );
+                        },
+                    );
+                    if settled {
+                        outstanding -= 1;
+                    }
+                    outstanding -= evicted;
                 }
-                Err(_) => {
-                    first_err.get_or_insert_with(disconnected);
-                    break 'windows;
-                }
+                Err(_) => return Err(disconnected()),
             }
         }
-        if first_err.is_some() {
-            break 'windows; // incomplete window: tracking would drift
-        }
-        // Advance the tracker through this window's frames.
+        // Advance the tracker through this window's frames (failed boxes
+        // are zero-filled holes; prediction coasts across them).
         for dt in 0..bx.t {
             let t = t0 + dt;
             let frame = &binary.data[t * plane..(t + 1) * plane];
@@ -680,12 +1226,11 @@ fn run_roi(
             }
         }
     }
-    if let Some(e) = first_err {
-        return Err(e);
-    }
     let wall = started.elapsed();
     let coverage = processed as f64 / total_boxes as f64;
-    let report = metrics.snapshot(wall, frames_covered as u64);
+    let dispositions = ledger.finish(&metrics);
+    let mut report = metrics.snapshot(wall, frames_covered as u64);
+    report.dispositions = dispositions;
     core.finish_job(id, JobKind::Roi, &report);
     let tracks = tracker.tracks.len();
     Ok((

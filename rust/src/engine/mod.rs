@@ -29,6 +29,15 @@
 //!   independent completion ([`JobHandle`]) and its own
 //!   [`JobStats`] row in [`Engine::stats`] (boxes, drops, queue wait,
 //!   per-partition nanos);
+//! * the pool is **fault-tolerant**: a panicking executor is torn down
+//!   and respawned in place (its box quarantined, never retried), while
+//!   transient box failures retry with exponential backoff under the
+//!   job's [`JobOptions`] (deadline / retry budget) — every submitted
+//!   box resolves to exactly one
+//!   [`Disposition`](crate::coordinator::Disposition) in the job's
+//!   report, and a seeded
+//!   [`FaultPlan`](crate::coordinator::FaultPlan) (`--faults`,
+//!   `KFUSE_FAULTS`) injects deterministic chaos to prove it;
 //! * [`Engine::shutdown`] drains in-flight jobs deterministically before
 //!   tearing the pool down — no submitted box is abandoned;
 //! * execution is backend-pluggable
@@ -91,6 +100,6 @@ pub mod stats;
 pub use crate::coordinator::backpressure::Policy;
 pub use crate::coordinator::mux::JobId;
 pub use builder::EngineBuilder;
-pub use jobs::{JobHandle, JobKind, RunReport, ServeOpts};
+pub use jobs::{JobHandle, JobKind, JobOptions, RunReport, ServeOpts};
 pub use session::Engine;
 pub use stats::{EngineStats, JobStats};

@@ -11,6 +11,13 @@
 //! each is decomposed into per-box work items tagged with its
 //! [`JobId`], fed through its own bounded queue lane under the engine's
 //! fairness policy, and drained by a per-job collector thread.
+//!
+//! The pool is SUPERVISED: a worker that catches an executor panic
+//! quarantines the offending box, tears the poisoned executor down, and
+//! rebuilds it in place ([`EngineStats::respawns`] counts the rebuilds),
+//! so one bad box never takes a worker slot out of the rotation. An
+//! optional [`FaultPlan`] (config or `KFUSE_FAULTS`) injects
+//! deterministic seeded faults at every handoff site for chaos testing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
@@ -20,12 +27,13 @@ use super::jobs::JobKind;
 use super::stats::{EngineStats, JobStats};
 use super::EngineBuilder;
 use crate::config::{Backend, Isa, RunConfig};
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::{Metrics, MetricsReport};
 use crate::coordinator::mux::{JobId, MuxQueue};
 use crate::coordinator::plan::ExecutionPlan;
 use crate::coordinator::router::ResultRouter;
 use crate::coordinator::scheduler::{
-    spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
+    panic_message, spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
 };
 use crate::exec::{BufferPool, PoolBuf};
 use crate::gpusim::device::DeviceSpec;
@@ -45,6 +53,13 @@ pub(crate) struct EngineCore {
     /// The session's resolved lane backend (what `cfg.isa` dispatched
     /// to; surfaced through `EngineStats::isa` on the CPU backend).
     isa: Isa,
+    /// Resolved fault-injection plan (config wins over `KFUSE_FAULTS`);
+    /// `None` — the production default — makes every fault check a
+    /// no-op.
+    pub(crate) faults: Option<FaultPlan>,
+    /// Executors rebuilt in place after a caught panic (worker
+    /// supervision); shared with the workers.
+    respawns: Arc<AtomicU64>,
     next_job: AtomicU64,
     totals: Mutex<EngineStats>,
     /// Jobs admitted but not yet completed; `shutdown` drains to zero.
@@ -83,6 +98,11 @@ impl EngineCore {
         tot.bytes_out += rep.bytes_out;
         tot.dispatches += rep.dispatches;
         tot.dropped += rep.dropped;
+        tot.failed += rep.failed;
+        tot.quarantined += rep.quarantined;
+        tot.deadline_exceeded += rep.deadline_exceeded;
+        tot.retries += rep.retries;
+        tot.retried_ok += rep.retried_ok;
         tot.queue_wait_nanos += rep.queue_wait_nanos;
         if tot.partition_nanos.len() < rep.stage_nanos.len() {
             tot.partition_nanos.resize(rep.stage_nanos.len(), 0);
@@ -95,6 +115,11 @@ impl EngineCore {
             kind: kind.name(),
             boxes: rep.boxes,
             dropped: rep.dropped,
+            failed: rep.failed,
+            quarantined: rep.quarantined,
+            deadline_exceeded: rep.deadline_exceeded,
+            retried_ok: rep.retried_ok,
+            retries: rep.retries,
             queue_wait_nanos: rep.queue_wait_nanos,
             partition_nanos: rep.stage_nanos.clone(),
         });
@@ -239,13 +264,23 @@ impl Engine {
         // means every worker dispatches the same path and stats can
         // report it.
         let isa = cfg.isa.resolve()?;
+        // Fault injection: an explicit config plan wins; otherwise the
+        // KFUSE_FAULTS env var (same precedence pattern as KFUSE_ISA).
+        // `None` — the production default — costs one Option check per
+        // site.
+        let faults = match cfg.faults {
+            Some(f) => Some(f),
+            None => FaultPlan::from_env()?,
+        };
         let pool = BufferPool::shared();
         let queue: MuxQueue<BoxJob> =
             MuxQueue::new(cfg.queue_depth, cfg.queue_policy);
         let router = Arc::new(ResultRouter::new());
         let compiles = Arc::new(AtomicU64::new(0));
-        let init_errors: Arc<Mutex<Vec<String>>> =
-            Arc::new(Mutex::new(Vec::new()));
+        let respawns = Arc::new(AtomicU64::new(0));
+        // spawn_workers blocks on the ready barrier and surfaces every
+        // worker's init error (joined into one message): the build fails
+        // instead of handing out an engine with a crippled pool.
         let workers = spawn_workers(
             WorkerSpec {
                 workers: cfg.workers,
@@ -256,25 +291,13 @@ impl Engine {
                 pool: pool.clone(),
                 intra_box_threads: cfg.intra_box_threads,
                 isa,
+                faults,
+                respawns: respawns.clone(),
             },
             queue.clone(),
             router.clone(),
             compiles.clone(),
-            init_errors.clone(),
-        );
-        // spawn_workers released the ready barrier, so init errors (if
-        // any) are already recorded: fail the build instead of handing
-        // out an engine with a crippled pool.
-        let first_err = init_errors.lock().unwrap().first().cloned();
-        if let Some(msg) = first_err {
-            queue.close();
-            for h in workers {
-                let _ = h.join();
-            }
-            return Err(Error::Coordinator(format!(
-                "engine build: worker init failed: {msg}"
-            )));
-        }
+        )?;
         let core = Arc::new(EngineCore {
             cfg,
             plan,
@@ -284,6 +307,8 @@ impl Engine {
             compiles,
             pool,
             isa,
+            faults,
+            respawns,
             next_job: AtomicU64::new(0),
             totals: Mutex::new(EngineStats::default()),
             active: Mutex::new(0),
@@ -334,6 +359,7 @@ impl Engine {
         EngineStats {
             compiles: self.core.compiles.load(Ordering::Relaxed),
             pool_allocs: self.core.pool.allocations(),
+            respawns: self.core.respawns.load(Ordering::Relaxed),
             bands,
             isa: if cpu { self.core.isa.name() } else { "" },
             pipeline: self.core.plan.spec.name,
@@ -364,8 +390,12 @@ impl Engine {
         self.core.queue.close();
         let workers = std::mem::take(&mut self.workers);
         for h in workers {
-            h.join()
-                .map_err(|_| Error::Coordinator("worker panicked".into()))??;
+            h.join().map_err(|p| {
+                Error::Coordinator(format!(
+                    "worker thread panicked: {}",
+                    panic_message(p)
+                ))
+            })??;
         }
         self.core.router.close();
         Ok(())

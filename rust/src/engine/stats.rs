@@ -16,6 +16,17 @@ pub struct JobStats {
     /// Boxes this job's admission policy dropped (always the job's own —
     /// lane eviction never crosses jobs).
     pub dropped: u64,
+    /// Boxes that failed terminally (non-retryable error, or retries
+    /// exhausted).
+    pub failed: u64,
+    /// Boxes quarantined after an executor panic (never retried).
+    pub quarantined: u64,
+    /// Boxes shed past the job's deadline.
+    pub deadline_exceeded: u64,
+    /// Boxes that completed after ≥1 retry (subset of `boxes`).
+    pub retried_ok: u64,
+    /// Retry attempts this job issued.
+    pub retries: u64,
     /// Cumulative ready-queue wait across the job's boxes, nanos. Under
     /// multiplexing this is the number the fairness policy controls: a
     /// latency-sensitive job sharing the pool with a backlogged batch
@@ -37,6 +48,20 @@ impl std::fmt::Display for JobStats {
             self.dropped,
             self.queue_wait_nanos as f64 / 1e6
         )?;
+        if self.failed + self.quarantined + self.deadline_exceeded > 0 {
+            write!(
+                f,
+                " | {} failed | {} quarantined | {} past deadline",
+                self.failed, self.quarantined, self.deadline_exceeded
+            )?;
+        }
+        if self.retries > 0 {
+            write!(
+                f,
+                " | {} retries ({} recovered)",
+                self.retries, self.retried_ok
+            )?;
+        }
         if !self.partition_nanos.is_empty() {
             let ms: Vec<String> = self
                 .partition_nanos
@@ -73,6 +98,21 @@ pub struct EngineStats {
     pub dispatches: u64,
     /// Boxes dropped by backpressure (serve jobs).
     pub dropped: u64,
+    /// Boxes that failed terminally across all jobs.
+    pub failed: u64,
+    /// Boxes quarantined after executor panics across all jobs.
+    pub quarantined: u64,
+    /// Boxes shed past their job's deadline across all jobs.
+    pub deadline_exceeded: u64,
+    /// Boxes that completed after ≥1 retry across all jobs.
+    pub retried_ok: u64,
+    /// Retry attempts issued across all jobs.
+    pub retries: u64,
+    /// Workers whose executor was torn down and rebuilt in place after a
+    /// caught panic (the supervision counter). A healthy faultless
+    /// session keeps this at 0; under fault injection it equals the
+    /// number of quarantined boxes.
+    pub respawns: u64,
     /// Cumulative ready-queue wait across every box of every job, nanos.
     pub queue_wait_nanos: u64,
     /// PJRT executable compilations across the worker pool. Settles at
@@ -134,6 +174,29 @@ impl std::fmt::Display for EngineStats {
             self.pool_allocs,
             self.bands
         )?;
+        if self.failed
+            + self.quarantined
+            + self.deadline_exceeded
+            + self.respawns
+            > 0
+        {
+            write!(
+                f,
+                " | {} failed | {} quarantined | {} past deadline | \
+                 {} respawns",
+                self.failed,
+                self.quarantined,
+                self.deadline_exceeded,
+                self.respawns
+            )?;
+        }
+        if self.retries > 0 {
+            write!(
+                f,
+                " | {} retries ({} recovered)",
+                self.retries, self.retried_ok
+            )?;
+        }
         if !self.isa.is_empty() {
             write!(f, " | isa {}", self.isa)?;
         }
@@ -233,6 +296,56 @@ mod tests {
         );
         let bare = format!("{}", EngineStats::default());
         assert!(!bare.contains("pipeline"), "{bare}");
+    }
+
+    #[test]
+    fn display_shows_fault_columns_only_when_nonzero() {
+        let bare = format!("{}", EngineStats::default());
+        assert!(!bare.contains("failed"), "{bare}");
+        assert!(!bare.contains("retries"), "{bare}");
+        let s = EngineStats {
+            failed: 3,
+            quarantined: 2,
+            deadline_exceeded: 1,
+            respawns: 2,
+            retries: 5,
+            retried_ok: 4,
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(
+            text.contains(
+                "3 failed | 2 quarantined | 1 past deadline | 2 respawns"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("5 retries (4 recovered)"), "{text}");
+        let row = JobStats {
+            job: 1,
+            kind: "batch",
+            boxes: 7,
+            failed: 1,
+            quarantined: 1,
+            deadline_exceeded: 2,
+            retries: 3,
+            retried_ok: 2,
+            ..JobStats::default()
+        };
+        let text = format!("{row}");
+        assert!(
+            text.contains("1 failed | 1 quarantined | 2 past deadline"),
+            "{text}"
+        );
+        assert!(text.contains("3 retries (2 recovered)"), "{text}");
+        let clean_row = format!(
+            "{}",
+            JobStats {
+                job: 1,
+                kind: "batch",
+                ..JobStats::default()
+            }
+        );
+        assert!(!clean_row.contains("failed"), "{clean_row}");
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! [`FaultyExec`] — an [`Executor`] decorator that injects execute-site
+//! faults from a [`FaultPlan`].
+//!
+//! When the engine runs with a fault plan, each worker wraps its real
+//! executor in one of these. Before every box the worker [`arm`]s the
+//! wrapper with the (job, box, attempt) coordinates; `execute` then
+//! consults the plan's deterministic hash and either panics
+//! ([`FaultSite::ExecutePanic`] — exercising the supervision/respawn
+//! path), returns an error ([`FaultSite::ExecuteError`] — exercising
+//! retry), or delegates to the wrapped executor untouched. The wrapper
+//! exists only on faulty engines; a `None` plan never constructs one.
+//!
+//! [`arm`]: FaultyExec::arm
+
+use std::cell::Cell;
+
+use crate::coordinator::faults::{FaultPlan, FaultSite};
+use crate::coordinator::plan::ExecutionPlan;
+use crate::{Error, Result};
+
+use super::{BoxOutput, Executor};
+
+/// Fault-injecting wrapper around a worker's executor. Lives on one
+/// worker thread (like every executor); the armed coordinates are a
+/// plain [`Cell`].
+pub struct FaultyExec {
+    inner: Box<dyn Executor>,
+    plan: FaultPlan,
+    /// (job, box, attempt) of the box about to execute.
+    ctx: Cell<(u64, u64, u32)>,
+}
+
+impl FaultyExec {
+    pub fn new(inner: Box<dyn Executor>, plan: FaultPlan) -> FaultyExec {
+        FaultyExec { inner, plan, ctx: Cell::new((0, 0, 0)) }
+    }
+
+    /// Record which (job, box, attempt) the next `execute` call serves,
+    /// so the injected fault is keyed to the box, not the call order.
+    pub fn arm(&self, job: u64, box_id: u64, attempt: u32) {
+        self.ctx.set((job, box_id, attempt));
+    }
+}
+
+impl Executor for FaultyExec {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<()> {
+        self.inner.prepare(plan)
+    }
+
+    fn execute(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+    ) -> Result<BoxOutput> {
+        let (job, bx, attempt) = self.ctx.get();
+        if self.plan.fires(FaultSite::ExecutePanic, job, bx, attempt) {
+            panic!(
+                "injected execute-panic fault (job {job} box {bx} \
+                 attempt {attempt})"
+            );
+        }
+        if self.plan.fires(FaultSite::ExecuteError, job, bx, attempt) {
+            return Err(Error::Coordinator(format!(
+                "injected execute-error fault (job {job} box {bx} \
+                 attempt {attempt})"
+            )));
+        }
+        self.inner.execute(plan, threshold, input)
+    }
+
+    fn last_stage_nanos(&self) -> Vec<u64> {
+        self.inner.last_stage_nanos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FusionMode;
+    use crate::exec::{cpu_executor, BufferPool, Isa};
+    use crate::fusion::halo::BoxDims;
+
+    fn armed(plan: FaultPlan) -> (FaultyExec, ExecutionPlan) {
+        let eplan =
+            ExecutionPlan::resolve(FusionMode::Full, BoxDims::new(16, 16, 8), false);
+        let inner =
+            cpu_executor(&eplan, BufferPool::shared(), 1, Isa::Scalar).unwrap();
+        inner.prepare(&eplan).unwrap();
+        (FaultyExec::new(inner, plan), eplan)
+    }
+
+    #[test]
+    fn zero_rate_wrapper_is_transparent() {
+        let (exec, plan) = armed(FaultPlan::new(1));
+        assert_eq!(exec.name(), "derived_cpu");
+        let x = vec![10.0; 9 * 20 * 20 * 4];
+        exec.arm(1, 0, 0);
+        let out = exec.execute(&plan, 96.0, &x).unwrap();
+        let bare = armed(FaultPlan::new(2)).0;
+        bare.arm(9, 9, 9);
+        assert_eq!(out, bare.execute(&plan, 96.0, &x).unwrap());
+    }
+
+    #[test]
+    fn exec_error_fault_names_the_box() {
+        let mut fp = FaultPlan::new(5);
+        fp.exec_error = 1.0;
+        let (exec, plan) = armed(fp);
+        exec.arm(3, 17, 2);
+        let err = exec.execute(&plan, 96.0, &[]).err().unwrap();
+        let msg = format!("{err}");
+        assert!(msg.contains("injected execute-error fault"), "{msg}");
+        assert!(msg.contains("job 3 box 17 attempt 2"), "{msg}");
+    }
+
+    #[test]
+    fn exec_panic_fault_panics_with_identity() {
+        let mut fp = FaultPlan::new(5);
+        fp.exec_panic = 1.0;
+        let (exec, plan) = armed(fp);
+        exec.arm(2, 4, 0);
+        let payload = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| exec.execute(&plan, 96.0, &[])),
+        )
+        .err()
+        .unwrap();
+        let msg = payload.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("injected execute-panic fault"), "{msg}");
+        assert!(msg.contains("job 2 box 4 attempt 0"), "{msg}");
+    }
+}

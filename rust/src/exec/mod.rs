@@ -50,6 +50,11 @@
 //!   completion, so steady-state streaming does zero allocations per box
 //!   (counter-enforced, see [`pool`]). Since PR 5 the engine's ingest
 //!   staging buffers recycle through the same pool.
+//! * [`FaultyExec`] — a decorator injecting execute-site faults
+//!   (panic / error) from a seeded
+//!   [`FaultPlan`](crate::coordinator::faults::FaultPlan); workers wrap
+//!   their executor in it only when the engine runs with fault
+//!   injection enabled.
 //!
 //! Backend selection is [`Backend`](crate::config::Backend) in the run
 //! config: `Backend::Pjrt` needs `artifacts/`; `Backend::Cpu` runs
@@ -81,6 +86,7 @@
 
 pub mod bands;
 pub mod derived;
+pub mod faulty;
 pub mod fused;
 pub mod interp;
 pub mod pjrt;
@@ -96,6 +102,7 @@ use crate::Result;
 
 pub use bands::{split_rows, Band, BandPool};
 pub use derived::DerivedCpu;
+pub use faulty::FaultyExec;
 pub use fused::FusedCpu;
 pub use interp::StagedInterp;
 pub use pjrt::PjrtExec;

@@ -8,11 +8,13 @@
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
 //!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
 //!                [--markers M] [--queue-policy fifo|rr|drr] [--queue N]
+//!                [--faults seed=S,all=P|site=P,...]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
 //!                [--pipeline facial|anomaly]
 //!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
 //!                [--size 256] [--frames 256] [--intra-threads N]
 //!                [--isa auto|scalar|portable|sse2|avx2]
+//!                [--faults seed=S,all=P|site=P,...]
 //! kfuse simulate [--device k20] [--input 256x256x1000] [--box 32x32x8]
 //! kfuse codegen  (print Table III-style fused kernel source)
 //! ```
@@ -35,6 +37,12 @@
 //! the session line in `engine.stats()` reports which one actually
 //! served.
 //!
+//! `--faults seed=S,all=P` (or per-site rates: `extract`, `stage`,
+//! `exec-panic`, `exec-error`, `route`) arms the seeded fault-injection
+//! harness for chaos testing: equal seeds inject the exact same faults.
+//! The `KFUSE_FAULTS` env var carries the same syntax and applies when
+//! the flag (and config) left the plan unset.
+//!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
 //! load, plan resolution, worker spawn, and PJRT compilation all happen
@@ -50,7 +58,9 @@
 
 use std::sync::Arc;
 
-use kfuse::config::{Backend, FusionMode, Isa, QueuePolicy, RunConfig};
+use kfuse::config::{
+    Backend, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
+};
 use kfuse::coordinator;
 use kfuse::engine::{Engine, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -165,6 +175,12 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(b) = args.get("box") {
         let (x, y, t) = parse_dims3(b)?;
         cfg.box_dims = BoxDims::new(x, y, t);
+    }
+    if let Some(f) = args.get("faults") {
+        // Seeded chaos plan, e.g. --faults seed=7,all=0.05 or
+        // --faults seed=7,exec-panic=0.1,route=0.02. An explicit flag
+        // wins over the KFUSE_FAULTS env var.
+        cfg.faults = Some(FaultPlan::parse(f)?);
     }
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
@@ -346,6 +362,9 @@ fn main() {
                  (per-job lane depth), --ingest-depth N (serve staging)\n\
                  vector layer: --isa auto|scalar|portable|sse2|avx2 \
                  (fused CPU lane backend; all bit-identical)\n\
+                 chaos: --faults seed=S,all=P (or per-site \
+                 extract|stage|exec-panic|exec-error|route=P; env \
+                 KFUSE_FAULTS)\n\
                  (see crate docs / README / ARCHITECTURE.md for all flags)",
                 DeviceSpec::NAMES.join(" | "),
                 kfuse::pipeline::names().join(" | ")

@@ -1,0 +1,306 @@
+//! Chaos soak: deterministic seeded fault injection across concurrent
+//! batch + serve + ROI jobs on the warm CPU engine.
+//!
+//! The fault plan fires at EVERY site (~5%: extract, stage,
+//! execute-panic, execute-error, result-route), keyed by a seeded hash
+//! on (site, job, box, attempt) — so the contract under test is exact:
+//!
+//! * every submitted box resolves to exactly ONE disposition, and the
+//!   per-report disposition log partitions the report's counters;
+//! * per-job stats rows sum to the session totals across every failure
+//!   column;
+//! * a panicked worker is respawned (`respawns` > 0, and exactly one
+//!   respawn per quarantined box), and post-respawn boxes are
+//!   bit-identical to a faultless run;
+//! * equal seeds replay the exact same disposition log, bitwise;
+//! * respawns recycle the executor's pooled buffers (`pool_allocs`
+//!   stays at its warm value);
+//! * shutdown drains without hanging (the CI `chaos-smoke` job wraps
+//!   this binary in a timeout).
+//!
+//! The seed below is pinned: with `FaultPlan::uniform(2026, 0.05)` the
+//! batch job (id 1, boxes 0..64) quarantines 4 boxes and retries ~12 to
+//! success, and every job sees at least one fault — so the respawn and
+//! retry paths are provably exercised, not probabilistically hoped for.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use kfuse::config::{
+    Backend, FaultPlan, FusionMode, QueuePolicy, RunConfig,
+};
+use kfuse::coordinator::{synth_clip, Disposition, MetricsReport};
+use kfuse::engine::{
+    Engine, EngineStats, JobOptions, Policy, RunReport, ServeOpts,
+};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::video::{cut_boxes, BoxTask, Video};
+
+/// Pinned chaos seed (see module docs for the fates it produces).
+const SEED: u64 = 2026;
+
+fn chaos_cfg(frames: usize, faults: Option<FaultPlan>) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames,
+        mode: FusionMode::Full,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers: 2,
+        markers: 1,
+        backend: Backend::Cpu,
+        queue_policy: QueuePolicy::RoundRobin,
+        faults,
+        ..RunConfig::default()
+    }
+}
+
+fn retrying() -> JobOptions {
+    JobOptions {
+        deadline: None,
+        max_retries: 3,
+        backoff: Duration::from_micros(100),
+    }
+}
+
+/// One full chaos session: batch (job 1, 64 boxes) + serve (job 2) +
+/// ROI (job 3) admitted concurrently under a 5%-everywhere fault plan.
+fn run_soak() -> (RunReport, MetricsReport, RunReport, EngineStats) {
+    let cfg = chaos_cfg(32, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let (batch_clip, _) = synth_clip(&cfg, 41);
+    let serve_cfg = RunConfig {
+        frames: 16,
+        ..cfg.clone()
+    };
+    let (serve_clip, _) = synth_clip(&serve_cfg, 42);
+    let (roi_clip, _) = synth_clip(&cfg, 43);
+
+    let engine = Engine::from_config(cfg).unwrap();
+    let batch = engine
+        .submit_batch_with(Arc::new(batch_clip), retrying())
+        .unwrap();
+    let serve = engine
+        .submit_serve_with(
+            Arc::new(serve_clip),
+            ServeOpts {
+                fps: 20_000.0,
+                policy: Policy::Block, // no timing-dependent drops
+            },
+            retrying(),
+        )
+        .unwrap();
+    let roi = engine
+        .submit_roi_with(Arc::new(roi_clip), retrying())
+        .unwrap();
+    let b = batch.wait().unwrap();
+    let s = serve.wait().unwrap();
+    let (r, _coverage) = roi.wait().unwrap();
+    let stats = engine.stats();
+    // Shutdown must drain, not hang (timeout-enforced in CI).
+    engine.shutdown().unwrap();
+    (b, s, r, stats)
+}
+
+/// The disposition log must partition the report's counters exactly:
+/// each counter equals the number of log entries with that disposition,
+/// and no (frame, box) pair settles twice.
+fn assert_partition(rep: &MetricsReport, label: &str) {
+    let count = |d: Disposition| {
+        rep.dispositions
+            .iter()
+            .filter(|x| x.disposition == d)
+            .count() as u64
+    };
+    // `boxes` counts every executed box (first-try and retried alike).
+    assert_eq!(count(Disposition::Ok), rep.boxes - rep.retried_ok, "{label}");
+    assert_eq!(count(Disposition::RetriedOk), rep.retried_ok, "{label}");
+    assert_eq!(count(Disposition::Failed), rep.failed, "{label}");
+    assert_eq!(count(Disposition::Quarantined), rep.quarantined, "{label}");
+    assert_eq!(count(Disposition::Dropped), rep.dropped, "{label}");
+    assert_eq!(
+        count(Disposition::DeadlineExceeded),
+        rep.deadline_exceeded,
+        "{label}"
+    );
+    let mut keys: Vec<(u64, u64)> = rep
+        .dispositions
+        .iter()
+        .map(|d| (d.frame_t0, d.box_id))
+        .collect();
+    let total = keys.len();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), total, "{label}: a box settled more than once");
+}
+
+#[test]
+fn chaos_soak_accounts_every_box_exactly_once() {
+    let (b, s, r, stats) = run_soak();
+
+    // Batch: 64 submitted boxes (4x4 spatial x 4 windows), each settled
+    // exactly once — the sorted ids reconstruct 0..64.
+    assert_eq!(b.metrics.dispositions.len(), 64);
+    let mut ids: Vec<u64> =
+        b.metrics.dispositions.iter().map(|d| d.box_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..64).collect::<Vec<u64>>());
+    assert_partition(&b.metrics, "batch");
+
+    // Serve: whole windows of 16 spatial boxes, all settled.
+    assert!(s.dispositions.len() >= 16);
+    assert_eq!(s.dispositions.len() % 16, 0);
+    assert_partition(&s, "serve");
+
+    // ROI: window 0 submits all 16 boxes; later windows a subset.
+    assert!(r.metrics.dispositions.len() >= 16);
+    assert_partition(&r.metrics, "roi");
+
+    // The pinned seed provably exercises the failure machinery.
+    assert!(b.metrics.quarantined >= 1, "no injected panic fired");
+    assert!(b.metrics.retried_ok >= 1, "no retry recovered");
+    assert!(stats.retries >= 1);
+
+    // Supervision: every quarantined box is one caught worker panic,
+    // and every caught panic respawned the executor in place.
+    assert!(stats.respawns >= 1, "panicked worker was not respawned");
+    assert_eq!(stats.respawns, stats.quarantined);
+
+    // Per-job rows partition the session totals across EVERY column,
+    // failure columns included (extends the multiplexing invariant).
+    assert_eq!(stats.per_job.len(), 3);
+    let sum = |f: fn(&kfuse::engine::JobStats) -> u64| {
+        stats.per_job.iter().map(f).sum::<u64>()
+    };
+    assert_eq!(stats.boxes, sum(|j| j.boxes));
+    assert_eq!(stats.dropped, sum(|j| j.dropped));
+    assert_eq!(stats.failed, sum(|j| j.failed));
+    assert_eq!(stats.quarantined, sum(|j| j.quarantined));
+    assert_eq!(stats.deadline_exceeded, sum(|j| j.deadline_exceeded));
+    assert_eq!(stats.retried_ok, sum(|j| j.retried_ok));
+    assert_eq!(stats.retries, sum(|j| j.retries));
+    assert_eq!(stats.queue_wait_nanos, sum(|j| j.queue_wait_nanos));
+
+    // Each row mirrors its own job's report (rows complete in finish
+    // order, so look them up by kind).
+    let row = |kind: &str| {
+        stats.per_job.iter().find(|j| j.kind == kind).unwrap()
+    };
+    assert_eq!(row("batch").quarantined, b.metrics.quarantined);
+    assert_eq!(row("batch").retried_ok, b.metrics.retried_ok);
+    assert_eq!(row("serve").boxes, s.boxes);
+    assert_eq!(row("roi").boxes, r.metrics.boxes);
+}
+
+/// Same seed ⇒ bitwise-identical disposition logs, per job, regardless
+/// of worker interleaving: the faults are keyed by (site, job, box,
+/// attempt) and the log is canonically sorted.
+#[test]
+fn equal_seeds_replay_identical_disposition_logs() {
+    let (b1, s1, r1, _) = run_soak();
+    let (b2, s2, r2, _) = run_soak();
+    assert_eq!(b1.metrics.dispositions, b2.metrics.dispositions);
+    assert_eq!(s1.dispositions, s2.dispositions);
+    assert_eq!(r1.metrics.dispositions, r2.metrics.dispositions);
+}
+
+/// Read one box's region out of a single-channel reassembled clip.
+fn box_region(v: &Video, task: &BoxTask) -> Vec<f32> {
+    let plane = v.h * v.w;
+    let mut out = Vec::with_capacity(task.dims.pixels());
+    for dt in 0..task.dims.t {
+        for di in 0..task.dims.x {
+            let base =
+                (task.t0 + dt) * plane + (task.i0 + di) * v.w + task.j0;
+            out.extend_from_slice(&v.data[base..base + task.dims.y]);
+        }
+    }
+    out
+}
+
+/// After a worker panics and respawns, the boxes it executes are
+/// bit-identical to a faultless run — the poisoned executor state never
+/// leaks into results. Terminal failures leave their region zeroed.
+#[test]
+fn surviving_boxes_bit_identical_to_faultless_run() {
+    let cfg = chaos_cfg(32, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let (clip, _) = synth_clip(&cfg, 41);
+    let clip = Arc::new(clip);
+
+    let faulted = Engine::from_config(cfg.clone()).unwrap();
+    let got = faulted
+        .submit_batch_with(clip.clone(), retrying())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(faulted.stats().respawns >= 1, "no respawn exercised");
+    faulted.shutdown().unwrap();
+
+    let clean_cfg = RunConfig {
+        faults: None,
+        ..cfg
+    };
+    let clean = Engine::from_config(clean_cfg).unwrap();
+    let want = clean.batch(clip.clone()).unwrap();
+    clean.shutdown().unwrap();
+
+    let tasks: HashMap<u64, BoxTask> =
+        cut_boxes(clip.h, clip.w, clip.t, BoxDims::new(16, 16, 8))
+            .into_iter()
+            .map(|t| (t.id as u64, t))
+            .collect();
+    for d in &got.metrics.dispositions {
+        let task = &tasks[&d.box_id];
+        let region = box_region(&got.binary, task);
+        match d.disposition {
+            Disposition::Ok | Disposition::RetriedOk => {
+                assert_eq!(
+                    region,
+                    box_region(&want.binary, task),
+                    "box {} ({:?}) diverged from the faultless run",
+                    d.box_id,
+                    d.disposition
+                );
+            }
+            _ => {
+                assert!(
+                    region.iter().all(|&v| v == 0.0),
+                    "box {} failed terminally but left output",
+                    d.box_id
+                );
+            }
+        }
+    }
+}
+
+/// Respawning an executor recycles its pooled buffers: `pool_allocs`
+/// settles after the first (warming) job and a second faulted job —
+/// quarantines and respawns included — allocates nothing new.
+#[test]
+fn respawns_do_not_leak_pool_buffers() {
+    let cfg = chaos_cfg(32, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let (clip, _) = synth_clip(&cfg, 41);
+    let clip = Arc::new(clip);
+    let engine = Engine::from_config(cfg).unwrap();
+
+    let first = engine
+        .submit_batch_with(clip.clone(), retrying())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(first.metrics.quarantined >= 1, "first job must panic+respawn");
+    let warm = engine.stats().pool_allocs;
+
+    let second = engine
+        .submit_batch_with(clip, retrying())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(second.metrics.quarantined >= 1);
+    let stats = engine.stats();
+    assert_eq!(
+        stats.pool_allocs, warm,
+        "respawns leaked pool buffers ({} -> {})",
+        warm, stats.pool_allocs
+    );
+    engine.shutdown().unwrap();
+}

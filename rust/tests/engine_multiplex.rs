@@ -15,7 +15,9 @@
 
 use std::sync::Arc;
 
-use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
+use kfuse::config::{
+    Backend, FaultPlan, FusionMode, QueuePolicy, RunConfig,
+};
 use kfuse::coordinator::synth_clip;
 use kfuse::engine::{Engine, JobKind, Policy, ServeOpts};
 use kfuse::fusion::halo::BoxDims;
@@ -227,6 +229,49 @@ fn all_queue_policies_produce_identical_results() {
         }
         engine.shutdown().unwrap();
     }
+}
+
+/// Satellite: a mid-job injected worker panic — on a single worker with
+/// a full (depth-4) lane behind it — still drains deterministically: no
+/// hang, the panicked boxes quarantine, the worker respawns in place,
+/// the surviving boxes complete, and the per-job row sums to the
+/// session totals including the failure columns.
+///
+/// Seed 77 at `exec_panic = 0.3` is pinned: 16 of the 64 boxes panic
+/// and 48 survive, so both paths are provably exercised.
+#[test]
+fn injected_panic_mid_job_drains_and_accounts_exactly() {
+    let cfg = RunConfig {
+        queue_depth: 4,
+        faults: Some(FaultPlan {
+            exec_panic: 0.3,
+            ..FaultPlan::new(77)
+        }),
+        ..cpu_cfg(32, 1)
+    };
+    let (clip, _) = synth_clip(&cfg, 13);
+    let engine = Engine::from_config(cfg).unwrap();
+    // Block admission: the producer stalls on the full lane while the
+    // lone worker panics and respawns mid-backlog.
+    let report = engine.batch(Arc::new(clip)).unwrap();
+
+    assert!(report.metrics.quarantined >= 1, "seeded panics must fire");
+    assert!(report.metrics.boxes >= 1, "some boxes must survive");
+    assert_eq!(
+        report.metrics.boxes + report.metrics.quarantined,
+        64,
+        "every box must settle as executed or quarantined"
+    );
+    assert_eq!(report.metrics.dispositions.len(), 64);
+
+    let stats = engine.stats();
+    assert_eq!(stats.respawns, stats.quarantined, "one respawn per panic");
+    assert_eq!(stats.per_job.len(), 1);
+    assert_eq!(stats.per_job[0].quarantined, report.metrics.quarantined);
+    assert_eq!(stats.per_job[0].boxes, report.metrics.boxes);
+    assert_eq!(stats.quarantined, report.metrics.quarantined);
+    assert_eq!(stats.boxes, report.metrics.boxes);
+    engine.shutdown().unwrap();
 }
 
 /// `shutdown` blocks until in-flight jobs drain: the handle of a job

@@ -64,6 +64,8 @@ fn random_border_job(
         clip_t0: 0,
         staged: None,
         enqueued: Instant::now(),
+        attempt: 0,
+        deadline: None,
     };
     (job, plan)
 }
@@ -190,6 +192,8 @@ fn prop_every_isa_matches_the_scalar_oracle_bitwise() {
                 clip_t0: 0,
                 staged: None,
                 enqueued: Instant::now(),
+                attempt: 0,
+                deadline: None,
             };
             let mut staging = Vec::new();
             let want = execute_box(&staged, &plan, th, &job, &mut staging)
@@ -256,6 +260,8 @@ fn executor_names_and_detect_gating() {
         clip_t0: 0,
         staged: None,
         enqueued: Instant::now(),
+        attempt: 0,
+        deadline: None,
     };
     let mut staging = Vec::new();
     let r = execute_box(&fused, &plan_no_detect, 96.0, &job, &mut staging)
