@@ -21,10 +21,13 @@
 //! `BENCH_fused_cpu.json` — the entry point shared by local runs and
 //! the CI `bench-smoke` regression gate. Schema is backward-compatible:
 //! the PR-5 fields (`isa`, per-cell and top-level `speedup_simd`), the
-//! PR-6 ones (`pipeline` per cell, `speedup_derived`), and this PR's
-//! `faults_overhead` (zero-rate `FaultyExec` wrapper vs the bare fused
-//! pass — the fault-injection layer must cost ~nothing when disarmed)
-//! are additions only.
+//! PR-6 ones (`pipeline` per cell, `speedup_derived`), the
+//! `faults_overhead` ratio (zero-rate `FaultyExec` wrapper vs the bare
+//! fused pass — the fault-injection layer must cost ~nothing when
+//! disarmed), and this PR's `speedup_calibrated` (the measured-optimal
+//! plan vs the static-table plan on one shared measured table; fitted
+//! device constants land in the `BENCH_calibration.json` sidecar) are
+//! additions only. See `docs/COST_MODEL.md` for how to read them.
 //!
 //! Headline numbers:
 //! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
@@ -37,6 +40,11 @@
 //!   runtime-detected paths are report-only — shared runners vary).
 //! * `speedup_parallel` — best fused(N>1T, scalar) vs fused(1T,
 //!   scalar): the banding win (report-only in CI).
+//! * `speedup_calibrated` — the plan the measured-cost DP picks vs the
+//!   plan the static device table picked, both priced on the SAME
+//!   probe-measured table: the self-tuning planner must never lose to
+//!   the static one (CI gates >= 1.0; an in-binary assert enforces it
+//!   too).
 //!
 //! ```text
 //! cargo bench --bench fig16_fused_cpu -- \
@@ -56,7 +64,12 @@ use kfuse::exec::{
     BufferPool, DerivedCpu, Executor, FusedCpu, Isa, StagedCpu,
     StagedInterp, TwoFusedCpu,
 };
+use kfuse::fusion::calibrate::{
+    candidate_partitions, fit_constants, partition_cost, segment_features,
+    select_measured, FittedConstants, SegmentFeatures, SegmentTable,
+};
 use kfuse::fusion::halo::BoxDims;
+use kfuse::fusion::ilp::Model;
 use kfuse::fusion::traffic::InputDims;
 use kfuse::gpusim::device::DeviceSpec;
 use kfuse::video::{cut_boxes, generate, SynthConfig};
@@ -353,6 +366,100 @@ fn main() {
         }
     }
 
+    // Calibrated arm: close the measurement→plan loop on this host.
+    // Probe every statically-feasible candidate partition of the facial
+    // run (the same deterministic probe `Engine::calibrate` runs),
+    // re-solve the partition DP over the MEASURED per-segment times,
+    // and compare the measured-optimal plan against what the static
+    // device table picked (`FusionMode::Auto`). By DP construction over
+    // one shared measured table the calibrated plan can never lose —
+    // asserted here and gated in CI via `speedup_calibrated`.
+    let input_dims = InputDims::new(frame, frame, frames);
+    let facial_run = kfuse::pipeline::facial().kernel_run();
+    let plan_dev = DeviceSpec::k20();
+    let auto = ExecutionPlan::resolve_spec(
+        kfuse::pipeline::facial(),
+        FusionMode::Auto,
+        bx,
+        true,
+        input_dims,
+        &plan_dev,
+    );
+    let model = Model::build(&facial_run, input_dims, bx, &plan_dev);
+    let mut probe_in = Vec::new();
+    clip.extract_box_into(
+        jobs[0].task.t0,
+        jobs[0].task.i0,
+        jobs[0].task.j0,
+        jobs[0].task.dims,
+        auto.halo,
+        &mut probe_in,
+    );
+    let probe_exec =
+        DerivedCpu::with_isa(BufferPool::shared(), 1, Isa::Scalar).unwrap();
+    let mut table = SegmentTable::new(1.0);
+    for partition in candidate_partitions(auto.spec.len()) {
+        let feasible = partition.iter().all(|s| {
+            model
+                .columns
+                .iter()
+                .any(|c| c.segment == *s && c.cost.is_finite())
+        });
+        if !feasible {
+            continue;
+        }
+        let variant = auto.with_partition(partition.clone());
+        let ns = probe_exec.probe(&variant, 96.0, &probe_in, 5).unwrap();
+        for (seg, v) in partition.iter().zip(&ns) {
+            if partition.len() == auto.spec.len() || seg.len >= 2 {
+                table.observe(*seg, *v as f64);
+            }
+        }
+    }
+    let measured = table.snapshot();
+    let (cal_partition, cal_ns) =
+        select_measured(auto.spec.len(), &measured, &model)
+            .expect("probe covers every feasible candidate");
+    let static_measured_ns = partition_cost(&auto.partition, &measured)
+        .expect("static partition was probed");
+    assert!(
+        cal_ns <= static_measured_ns * 1.0001,
+        "calibrated plan ({cal_ns:.0} ns/box) must not lose to the \
+         static-table plan ({static_measured_ns:.0} ns/box) on the same \
+         measured table"
+    );
+    let speedup_calibrated = static_measured_ns / cal_ns;
+    let fitted = {
+        let samples: Vec<(SegmentFeatures, f64)> = measured
+            .iter()
+            .filter_map(|&(seg, ns)| {
+                segment_features(&facial_run, seg, input_dims, bx, &plan_dev)
+                    .map(|f| (f, ns * 1e-9))
+            })
+            .collect();
+        fit_constants(&samples)
+            .unwrap_or_else(|| FittedConstants::from_device(&plan_dev))
+    };
+    // Time the calibrated plan end-to-end on the full job sweep, as its
+    // own bench cell.
+    {
+        let cal_plan = auto.with_partition(cal_partition.clone());
+        let exec =
+            DerivedCpu::with_isa(pool.clone(), 1, Isa::Scalar).unwrap();
+        exec.prepare(&cal_plan).unwrap();
+        let t = time_fn(3, 25, || {
+            sweep(&exec, &cal_plan, &jobs, &mut staging)
+        });
+        cells.push(Cell {
+            pipeline: "facial",
+            executor: "calibrated",
+            threads: 1,
+            isa: "scalar",
+            ns_per_box: t.median * 1e9 / n,
+            bytes_per_box: 0,
+        });
+    }
+
     header(
         "Fig 16 (measured, this host)",
         "CPU executor matrix: staged vs two-fused vs fused vs derived \
@@ -492,6 +599,12 @@ fn main() {
         "zero-rate fault wrapper overhead: {faults_overhead:.3}x \
          (fused 1T scalar; must stay ~1.0)"
     );
+    let shape: Vec<usize> = cal_partition.iter().map(|s| s.len).collect();
+    println!(
+        "calibrated plan {shape:?} vs static-table plan (measured \
+         table): {speedup_calibrated:.2}x (>= 1.0 by DP construction; \
+         CI-gated)"
+    );
 
     let cell_json: Vec<String> = cells
         .iter()
@@ -522,7 +635,8 @@ fn main() {
          \"speedup_derived\": {speedup_derived:.3},\n  \
          \"speedup_anomaly\": {speedup_anomaly:.3},\n  \
          \"speedup_simd\": {speedup_simd:.3},\n  \
-         \"faults_overhead\": {faults_overhead:.3}\n}}\n",
+         \"faults_overhead\": {faults_overhead:.3},\n  \
+         \"speedup_calibrated\": {speedup_calibrated:.3}\n}}\n",
         bx.x,
         bx.y,
         bx.t,
@@ -531,4 +645,27 @@ fn main() {
     );
     std::fs::write("BENCH_fused_cpu.json", &json).unwrap();
     println!("wrote BENCH_fused_cpu.json");
+
+    // Calibration sidecar: the fitted device constants and measured
+    // table behind `speedup_calibrated`, uploaded as a CI artifact.
+    let measured_json: Vec<String> = measured
+        .iter()
+        .map(|(s, ns)| {
+            format!("    {{\"start\": {}, \"len\": {}, \"ns_per_box\": {ns:.0}}}", s.start, s.len)
+        })
+        .collect();
+    let cal_json = format!(
+        "{{\n  \"fitted\": {},\n  \
+         \"partition\": {shape:?},\n  \
+         \"static_partition\": {:?},\n  \
+         \"measured_ns_per_box\": {cal_ns:.0},\n  \
+         \"static_measured_ns_per_box\": {static_measured_ns:.0},\n  \
+         \"speedup_calibrated\": {speedup_calibrated:.3},\n  \
+         \"measured\": [\n{}\n  ]\n}}\n",
+        fitted.to_json(),
+        auto.partition.iter().map(|s| s.len).collect::<Vec<_>>(),
+        measured_json.join(",\n"),
+    );
+    std::fs::write("BENCH_calibration.json", &cal_json).unwrap();
+    println!("wrote BENCH_calibration.json");
 }

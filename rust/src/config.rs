@@ -201,6 +201,20 @@ pub struct RunConfig {
     /// one `Option` check per site. See
     /// [`crate::coordinator::faults::FaultPlan`].
     pub faults: Option<FaultPlan>,
+    /// Run the deterministic calibration probe at startup (CLI
+    /// `--calibrate`): fit the device-model constants from measured
+    /// segment times and swap the live plan to the measured-optimal
+    /// partition before the first job. CPU backend only. Default off —
+    /// the engine then executes the static DP plan untouched.
+    pub calibrate: bool,
+    /// Online re-plan margin (CLI `--replan-margin`): after each job,
+    /// re-solve the partition DP over live measured per-segment EWMAs
+    /// and swap the plan when the measured optimum beats the current
+    /// partition's measured cost by more than this fraction (e.g. `0.1`
+    /// = 10%). `None` — the serve steady-state default — disables the
+    /// hook entirely; swaps are observable via
+    /// `EngineStats::{replans, plan_source}`.
+    pub replan_margin: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -225,6 +239,8 @@ impl Default for RunConfig {
             roi_only: false,
             backend: Backend::Pjrt,
             faults: None,
+            calibrate: false,
+            replan_margin: None,
         }
     }
 }
@@ -285,6 +301,20 @@ impl RunConfig {
         }
         if let Some(f) = &self.faults {
             f.validate()?;
+        }
+        if self.calibrate && self.backend != Backend::Cpu {
+            return Err(Error::Config(
+                "--calibrate requires --backend cpu (the probe executes \
+                 candidate partitions through the derived executor)"
+                    .into(),
+            ));
+        }
+        if let Some(m) = self.replan_margin {
+            if !m.is_finite() || m < 0.0 {
+                return Err(Error::Config(format!(
+                    "replan margin must be a finite fraction >= 0, got {m}"
+                )));
+            }
         }
         Ok(())
     }
@@ -418,6 +448,37 @@ mod tests {
             ..RunConfig::default()
         };
         assert!(cfg.validate().is_err(), "out-of-range rate rejected");
+    }
+
+    #[test]
+    fn calibration_knobs_are_validated_with_the_config() {
+        // Calibration probes run through the derived CPU executor.
+        let cfg = RunConfig {
+            calibrate: true,
+            backend: Backend::Pjrt,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().err().unwrap();
+        assert!(format!("{err}").contains("backend cpu"), "{err}");
+        let cfg = RunConfig {
+            calibrate: true,
+            backend: Backend::Cpu,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        // Margins must be finite, non-negative fractions.
+        for bad in [-0.1, f64::NAN, f64::INFINITY] {
+            let cfg = RunConfig {
+                replan_margin: Some(bad),
+                ..RunConfig::default()
+            };
+            assert!(cfg.validate().is_err(), "margin {bad} rejected");
+        }
+        let cfg = RunConfig {
+            replan_margin: Some(0.1),
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

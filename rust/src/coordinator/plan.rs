@@ -14,6 +14,9 @@
 //! the effective arm to its artifact set (facial pipeline only — the
 //! artifact registry predates the spec layer).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
 use crate::config::FusionMode;
 use crate::fusion::candidates::Segment;
 use crate::fusion::dp::solve_dp;
@@ -281,6 +284,86 @@ impl ExecutionPlan {
     pub fn dispatches_per_box(&self) -> u64 {
         self.partition.len() as u64 + self.detect.is_some() as u64
     }
+
+    /// The same plan with a different partition of the same fusable run
+    /// — the re-plan primitive `fusion::calibrate` swaps into the live
+    /// [`PlanCell`]. Geometry (box, halo) and the spec are unchanged, so
+    /// staging buffers sized for the old plan stay valid; `effective`
+    /// re-maps to the concrete arm when the partition has one (kept
+    /// as-is for shapes outside the three named arms). The PJRT stage
+    /// chain is NOT rebuilt — swapped plans are for the CPU path, where
+    /// `DerivedCpu` recompiles its segment programs from the partition.
+    pub fn with_partition(&self, partition: Vec<Segment>) -> ExecutionPlan {
+        debug_assert_eq!(
+            partition.iter().map(|s| s.len).sum::<usize>(),
+            self.spec.len(),
+            "partition must tile the fusable run"
+        );
+        let effective = arm_of(&partition, &self.spec).unwrap_or(self.effective);
+        ExecutionPlan {
+            partition,
+            effective,
+            ..self.clone()
+        }
+    }
+}
+
+/// The engine's live plan: a versioned, swappable [`ExecutionPlan`]
+/// shared between the session core and every worker.
+///
+/// Workers `load()` the current plan per popped box (an `Arc` clone
+/// under a read lock — nanoseconds against a multi-millisecond box),
+/// so a `swap()` from `Engine::calibrate` or the online re-plan hook
+/// takes effect at the next box boundary without stopping the pool;
+/// `exec::DerivedCpu` notices the changed partition and recompiles its
+/// segment programs on the worker's own thread.
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use kfuse::config::FusionMode;
+/// use kfuse::coordinator::plan::{ExecutionPlan, PlanCell};
+/// use kfuse::fusion::halo::BoxDims;
+///
+/// let plan = ExecutionPlan::resolve(
+///     FusionMode::Auto, BoxDims::new(32, 32, 8), false,
+/// );
+/// let cell = PlanCell::new(Arc::new(plan));
+/// let v0 = cell.version();
+/// let swapped = cell.load().with_partition(cell.load().partition.clone());
+/// cell.swap(Arc::new(swapped));
+/// assert_eq!(cell.version(), v0 + 1);
+/// ```
+#[derive(Debug)]
+pub struct PlanCell {
+    plan: RwLock<Arc<ExecutionPlan>>,
+    version: AtomicU64,
+}
+
+impl PlanCell {
+    /// Wrap the build-time plan as version 0.
+    pub fn new(plan: Arc<ExecutionPlan>) -> Self {
+        PlanCell {
+            plan: RwLock::new(plan),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the current plan (cheap: one `Arc` clone).
+    pub fn load(&self) -> Arc<ExecutionPlan> {
+        self.plan.read().expect("plan lock poisoned").clone()
+    }
+
+    /// Publish a new plan; returns the new version number.
+    pub fn swap(&self, plan: Arc<ExecutionPlan>) -> u64 {
+        let mut slot = self.plan.write().expect("plan lock poisoned");
+        *slot = plan;
+        self.version.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// How many times the plan has been swapped since build.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
 }
 
 #[cfg(test)]
@@ -409,6 +492,52 @@ mod tests {
         );
         assert_ne!(p.effective, FusionMode::Auto);
         assert_eq!(p.partition, arm_segments(p.effective, &p.spec));
+    }
+
+    #[test]
+    fn with_partition_swaps_shape_and_remaps_arm() {
+        let p = ExecutionPlan::resolve(
+            FusionMode::Full,
+            BoxDims::new(32, 32, 8),
+            true,
+        );
+        let two = p.with_partition(vec![
+            Segment { start: 0, len: 2 },
+            Segment { start: 2, len: 3 },
+        ]);
+        assert_eq!(two.partition_shape(), vec![2, 3]);
+        assert_eq!(two.effective, FusionMode::Two, "re-mapped to the arm");
+        assert_eq!(two.box_dims, p.box_dims);
+        assert_eq!(two.halo, p.halo);
+        // A shape outside the named arms keeps the previous effective.
+        let odd = p.with_partition(vec![
+            Segment { start: 0, len: 1 },
+            Segment { start: 1, len: 4 },
+        ]);
+        assert_eq!(odd.partition_shape(), vec![1, 4]);
+        assert_eq!(odd.effective, FusionMode::Full);
+    }
+
+    #[test]
+    fn plan_cell_versions_swaps() {
+        let base = ExecutionPlan::resolve(
+            FusionMode::Auto,
+            BoxDims::new(16, 16, 8),
+            false,
+        );
+        let cell = PlanCell::new(Arc::new(base));
+        assert_eq!(cell.version(), 0);
+        let before = cell.load();
+        let next = before.with_partition(vec![
+            Segment { start: 0, len: 1 },
+            Segment { start: 1, len: 4 },
+        ]);
+        assert_eq!(cell.swap(Arc::new(next)), 1);
+        assert_eq!(cell.version(), 1);
+        assert_eq!(cell.load().partition_shape(), vec![1, 4]);
+        // The pre-swap snapshot is unaffected (workers finish their
+        // in-flight box on the old plan).
+        assert_eq!(before.partition_shape().len(), before.partition.len());
     }
 
     #[test]

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 
 use super::faults::{FaultPlan, FaultSite};
 use super::mux::{JobId, MuxQueue};
-use super::plan::ExecutionPlan;
+use super::plan::{ExecutionPlan, PlanCell};
 use super::router::ResultRouter;
 use crate::config::Backend;
 use crate::exec::{
@@ -215,8 +215,11 @@ pub struct WorkerSpec {
     pub backend: Backend,
     /// Artifact registry (only consulted by `Backend::Pjrt`).
     pub manifest: Arc<Manifest>,
-    /// The resolved per-box chain.
-    pub plan: Arc<ExecutionPlan>,
+    /// The live per-box chain. Workers snapshot it per popped box, so a
+    /// calibration or re-plan `swap` takes effect at the next box
+    /// boundary (the derived CPU executor recompiles its segment
+    /// programs in-thread when the partition changes).
+    pub plan: Arc<PlanCell>,
     /// Binarization threshold.
     pub threshold: f32,
     /// Shared scratch pool for the CPU backends.
@@ -283,6 +286,7 @@ fn build_executor(
     spec: &WorkerSpec,
     compiles: &Arc<AtomicU64>,
 ) -> Result<Box<dyn Executor>> {
+    let plan = spec.plan.load();
     let exec: Box<dyn Executor> = match spec.backend {
         Backend::Pjrt => {
             let rt = Runtime::with_compile_counter(
@@ -292,13 +296,13 @@ fn build_executor(
             Box::new(PjrtExec::new(rt))
         }
         Backend::Cpu => crate::exec::cpu_executor(
-            &spec.plan,
+            &plan,
             spec.pool.clone(),
             spec.intra_box_threads,
             spec.isa,
         )?,
     };
-    exec.prepare(&spec.plan)?;
+    exec.prepare(&plan)?;
     Ok(exec)
 }
 
@@ -365,7 +369,6 @@ pub fn spawn_workers(
                 }
                 ready.wait();
                 let mut armed = init?;
-                let plan = spec.plan.clone();
                 let threshold = spec.threshold;
                 let mut staging: Vec<f32> = Vec::new();
                 // Persistent service loop: jobs come and go, the executor
@@ -376,6 +379,9 @@ pub fn spawn_workers(
                 // respawned) and past-deadline boxes (shed unexecuted).
                 while let Some(job) = queue.pop() {
                     let job_id = job.job_id;
+                    // Per-box plan snapshot: a swap lands at the next
+                    // box boundary; the in-flight box keeps its plan.
+                    let plan = spec.plan.load();
                     if job.deadline.is_some_and(|d| Instant::now() >= d) {
                         let _ = router.route(WorkerEvent {
                             job_id,
@@ -574,7 +580,7 @@ mod tests {
             workers: 2,
             backend,
             manifest,
-            plan: plan.clone(),
+            plan: Arc::new(PlanCell::new(plan.clone())),
             threshold: 96.0,
             pool: pool.clone(),
             intra_box_threads: 2,

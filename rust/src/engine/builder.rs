@@ -160,6 +160,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Run the startup calibration probe as part of `build()`, with the
+    /// default deterministic seed (see [`RunConfig::calibrate`]).
+    /// Requires `Backend::Cpu`. Call [`Engine::calibrate`] yourself
+    /// instead when you want the fitted-constants report or a custom
+    /// seed (the CLI does, to print and write `--calibration-out`).
+    pub fn calibrate(mut self, on: bool) -> Self {
+        self.cfg.calibrate = on;
+        self
+    }
+
+    /// Enable the online re-plan hook with this divergence margin (see
+    /// [`RunConfig::replan_margin`]). Unset (the default) keeps the
+    /// plan fixed after build/calibration.
+    pub fn replan_margin(mut self, margin: f64) -> Self {
+        self.cfg.replan_margin = Some(margin);
+        self
+    }
+
     /// The config as currently accumulated (inspection/testing).
     pub fn run_config(&self) -> &RunConfig {
         &self.cfg
@@ -198,7 +216,9 @@ mod tests {
             .frame_size(64)
             .frames(24)
             .fps(750.0)
-            .faults(FaultPlan::uniform(11, 0.05).unwrap());
+            .faults(FaultPlan::uniform(11, 0.05).unwrap())
+            .calibrate(true)
+            .replan_margin(0.15);
         let cfg = b.run_config();
         assert_eq!(cfg.artifacts_dir, "elsewhere");
         assert_eq!(cfg.backend, Backend::Cpu);
@@ -218,6 +238,8 @@ mod tests {
         assert_eq!(cfg.frames, 24);
         assert_eq!(cfg.fps, 750.0);
         assert_eq!(cfg.faults, Some(FaultPlan::uniform(11, 0.05).unwrap()));
+        assert!(cfg.calibrate);
+        assert_eq!(cfg.replan_margin, Some(0.15));
     }
 
     #[test]

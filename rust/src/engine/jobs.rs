@@ -722,7 +722,7 @@ fn run_batch(
                             task.i0,
                             task.j0,
                             task.dims,
-                            core.plan.halo,
+                            core.plan.load().halo,
                             staged.vec_mut(),
                         );
                         if ingest_fires(
@@ -962,7 +962,7 @@ fn run_serve(
                     task.i0,
                     task.j0,
                     task.dims,
-                    core.plan.halo,
+                    core.plan.load().halo,
                     staged.vec_mut(),
                 );
                 if ingest_fires(faults, FaultSite::Stage, id, task.id) {
@@ -1149,7 +1149,7 @@ fn run_roi(
                 task.i0,
                 task.j0,
                 task.dims,
-                core.plan.halo,
+                core.plan.load().halo,
                 staged.vec_mut(),
             );
             if ingest_fires(faults, FaultSite::Stage, id, task.id) {

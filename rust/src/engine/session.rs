@@ -30,21 +30,55 @@ use crate::config::{Backend, Isa, RunConfig};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::{Metrics, MetricsReport};
 use crate::coordinator::mux::{JobId, MuxQueue};
-use crate::coordinator::plan::ExecutionPlan;
+use crate::coordinator::plan::{ExecutionPlan, PlanCell};
 use crate::coordinator::router::ResultRouter;
 use crate::coordinator::scheduler::{
     panic_message, spawn_workers, BoxJob, BoxResult, WorkerEvent, WorkerSpec,
 };
-use crate::exec::{BufferPool, PoolBuf};
+use crate::exec::{BufferPool, DerivedCpu, PoolBuf};
+use crate::fusion::calibrate::{
+    candidate_partitions, fit_constants, partition_cost, segment_features,
+    select_measured, Calibration, FittedConstants, PlanCache, PlanKey,
+    PlanSource, SegmentFeatures, SegmentTable,
+};
+use crate::fusion::ilp::Model;
 use crate::gpusim::device::DeviceSpec;
+use crate::prop::Gen;
 use crate::runtime::Manifest;
 use crate::{Error, Result};
+
+/// Probe executions per candidate partition (median taken — one
+/// compile-and-warm pass runs first, untimed).
+const PROBE_REPS: usize = 5;
+
+/// Seed for the build-time probe when `RunConfig::calibrate` is set
+/// (the CLI passes the same one so both paths probe identical bytes).
+const CALIBRATE_SEED: u64 = 42;
+
+/// Live calibration state: the engine's cache key plus the plan cache
+/// whose entry for that key carries the measured ns/box EWMAs feeding
+/// the online re-plan hook.
+struct CalibState {
+    key: PlanKey,
+    cache: PlanCache,
+}
 
 /// Shared session state: everything a job thread needs, behind one `Arc`
 /// so submission returns immediately and collectors outlive the call.
 pub(crate) struct EngineCore {
     pub(crate) cfg: RunConfig,
-    pub(crate) plan: Arc<ExecutionPlan>,
+    /// Versioned, swappable resolved plan. Workers snapshot it per box;
+    /// [`Engine::calibrate`] and the online re-plan hook swap it.
+    pub(crate) plan: Arc<PlanCell>,
+    /// Planning device model (what the static DP priced against).
+    device: DeviceSpec,
+    /// Static cost columns over the fusable run — the feasibility
+    /// authority: measured selection never leaves this model's feasible
+    /// set.
+    planner: Model,
+    /// Plan cache + live per-segment EWMAs (the measurement side of the
+    /// measurement→plan loop).
+    calib: Mutex<CalibState>,
     pub(crate) manifest: Arc<Manifest>,
     pub(crate) queue: MuxQueue<BoxJob>,
     pub(crate) router: Arc<ResultRouter>,
@@ -90,7 +124,14 @@ impl EngineCore {
         kind: JobKind,
         rep: &MetricsReport,
     ) {
+        // Online re-plan hook (before the totals lock — the two locks
+        // never nest). Default off: `replan_margin: None` skips it all.
+        let replanned = self.observe_and_replan(rep);
         let mut tot = self.totals.lock().unwrap();
+        if replanned {
+            tot.replans += 1;
+            tot.plan_source = PlanSource::Cached.as_str();
+        }
         tot.jobs += 1;
         tot.boxes += rep.boxes;
         tot.frames += rep.frames;
@@ -125,6 +166,53 @@ impl EngineCore {
         });
     }
 
+    /// The measurement side of the measurement→plan loop, run once per
+    /// completed job: fold the job's measured per-segment ns/box into
+    /// the plan-cache entry's EWMAs, re-solve the partition DP over the
+    /// MEASURED segment costs (restricted to the static model's feasible
+    /// columns), and swap the live plan when the measured optimum beats
+    /// the current partition's measured cost by more than
+    /// `cfg.replan_margin`. Returns whether a swap happened.
+    ///
+    /// Gated on `replan_margin` being set — in the default (serve
+    /// steady-state) configuration this is one `Option` check.
+    fn observe_and_replan(&self, rep: &MetricsReport) -> bool {
+        let Some(margin) = self.cfg.replan_margin else {
+            return false;
+        };
+        let plan = self.plan.load();
+        // Per-segment ns/box: stage_nanos sums over the job's boxes and
+        // is indexed by the partition the boxes executed under. A job
+        // that raced a swap can report a mismatched shape — skip it
+        // rather than attribute times to the wrong segments.
+        if rep.boxes == 0 || rep.stage_nanos.len() != plan.partition.len() {
+            return false;
+        }
+        let mut cal = self.calib.lock().unwrap();
+        let key = cal.key.clone();
+        let entry = cal.cache.entry_mut(&key);
+        for (seg, total) in plan.partition.iter().zip(&rep.stage_nanos) {
+            entry.nanos.observe(*seg, *total as f64 / rep.boxes as f64);
+        }
+        let measured = entry.nanos.snapshot();
+        let n = plan.spec.len();
+        let Some((best, best_ns)) =
+            select_measured(n, &measured, &self.planner)
+        else {
+            return false; // partial coverage: not every segment observed
+        };
+        let Some(current_ns) = partition_cost(&plan.partition, &measured)
+        else {
+            return false;
+        };
+        if best == plan.partition || best_ns * (1.0 + margin) >= current_ns {
+            return false;
+        }
+        entry.partition = best.clone();
+        self.plan.swap(Arc::new(plan.with_partition(best)));
+        true
+    }
+
     /// Retire a job whether it succeeded or failed: drop its result
     /// route, retire its queue lane (unblocking a parked producer), and
     /// release its active slot so `shutdown`'s drain can proceed. Runs in
@@ -142,7 +230,10 @@ impl EngineCore {
     /// f32 values in one staged halo'd RGBA input box (every job stages
     /// boxes of the engine's fixed geometry).
     fn staging_len(&self) -> usize {
-        self.plan.box_dims.with_halo(self.plan.halo).pixels() * 4
+        // Geometry (box dims, halo) is invariant across plan swaps —
+        // `with_partition` keeps it — so any snapshot gives the answer.
+        let plan = self.plan.load();
+        plan.box_dims.with_halo(plan.halo).pixels() * 4
     }
 
     /// Check out one pooled staging buffer sized for a halo'd box. The
@@ -175,16 +266,17 @@ impl EngineCore {
     /// derives from the plan, latency/queue-wait were stamped by the
     /// worker).
     pub(crate) fn record(&self, metrics: &Metrics, r: &BoxResult) {
+        let plan = self.plan.load();
         // RGBA f32 staged in, with the chain's halo.
         let in_bytes =
-            (r.task.dims.with_halo(self.plan.halo).pixels() * 4 * 4) as u64;
+            (r.task.dims.with_halo(plan.halo).pixels() * 4 * 4) as u64;
         let out_bytes = (r.binary.len() * 4) as u64;
         metrics.record_box(
             r.latency,
             r.queue_wait,
             in_bytes,
             out_bytes,
-            self.plan.dispatches_per_box(),
+            plan.dispatches_per_box(),
             &r.stage_nanos,
         );
     }
@@ -251,14 +343,25 @@ impl Engine {
         // is planned, `--device` changes what FusionMode::Auto picks.
         let device = DeviceSpec::by_name(&cfg.device)?;
         let spec = crate::pipeline::by_name(&cfg.pipeline)?;
-        let plan = Arc::new(ExecutionPlan::resolve_spec(
-            spec,
-            cfg.mode,
-            cfg.box_dims,
-            true,
+        // Static cost columns over the fusable run, kept for the life of
+        // the session: calibration and the re-plan hook restrict every
+        // measured selection to this model's feasible set.
+        let planner = Model::build(
+            &spec.kernel_run(),
             cfg.input_dims(),
+            cfg.box_dims,
             &device,
-        ));
+        );
+        let plan = Arc::new(PlanCell::new(Arc::new(
+            ExecutionPlan::resolve_spec(
+                spec,
+                cfg.mode,
+                cfg.box_dims,
+                true,
+                cfg.input_dims(),
+                &device,
+            ),
+        )));
         // Resolve the lane backend once for the session: validate()
         // already proved it runnable, and pinning the concrete ISA here
         // means every worker dispatches the same path and stats can
@@ -298,9 +401,24 @@ impl Engine {
             router.clone(),
             compiles.clone(),
         )?;
+        // Plan-cache key: the full planning substrate. Any of these
+        // changing invalidates measured times, so they all key the cache.
+        let calib = Mutex::new(CalibState {
+            key: PlanKey {
+                pipeline: cfg.pipeline.clone(),
+                box_dims: cfg.box_dims,
+                device: cfg.device.clone(),
+                isa: isa.name().to_string(),
+                threads: cfg.intra_box_threads,
+            },
+            cache: PlanCache::new(),
+        });
         let core = Arc::new(EngineCore {
             cfg,
             plan,
+            device,
+            planner,
+            calib,
             manifest,
             queue,
             router,
@@ -310,7 +428,10 @@ impl Engine {
             faults,
             respawns,
             next_job: AtomicU64::new(0),
-            totals: Mutex::new(EngineStats::default()),
+            totals: Mutex::new(EngineStats {
+                plan_source: PlanSource::Static.as_str(),
+                ..EngineStats::default()
+            }),
             active: Mutex::new(0),
             idle: Condvar::new(),
         });
@@ -318,7 +439,15 @@ impl Engine {
         // returned when the box completes); prewarming the per-job bound
         // keeps the allocation counter flat from here on.
         core.prewarm_staging();
-        Ok(Engine { core, workers })
+        let engine = Engine { core, workers };
+        // `calibrate: true` in the config runs the startup probe as part
+        // of build, with the default deterministic seed. Callers that
+        // want the report (or a custom seed) leave the flag off and call
+        // [`Engine::calibrate`] themselves — the CLI does exactly that.
+        if engine.core.cfg.calibrate {
+            engine.calibrate(CALIBRATE_SEED)?;
+        }
+        Ok(engine)
     }
 
     /// The session's configuration (fixed at build).
@@ -326,9 +455,18 @@ impl Engine {
         &self.core.cfg
     }
 
-    /// The resolved per-box execution chain this session dispatches.
-    pub fn plan(&self) -> &ExecutionPlan {
-        &self.core.plan
+    /// Snapshot of the resolved per-box execution chain this session
+    /// dispatches. The plan is a versioned, swappable value
+    /// ([`PlanCell`]) since calibration landed: the snapshot stays
+    /// internally consistent, but a concurrent [`Engine::calibrate`] or
+    /// re-plan may swap a newer version in behind it.
+    pub fn plan(&self) -> Arc<ExecutionPlan> {
+        self.core.plan.load()
+    }
+
+    /// Plan versions swapped in since build (0 = still the static plan).
+    pub fn plan_version(&self) -> u64 {
+        self.core.plan.version()
     }
 
     /// The loaded artifact registry.
@@ -356,16 +494,169 @@ impl Engine {
         } else {
             1
         };
+        let plan = self.core.plan.load();
         EngineStats {
             compiles: self.core.compiles.load(Ordering::Relaxed),
             pool_allocs: self.core.pool.allocations(),
             respawns: self.core.respawns.load(Ordering::Relaxed),
             bands,
             isa: if cpu { self.core.isa.name() } else { "" },
-            pipeline: self.core.plan.spec.name,
-            partition_labels: self.core.plan.partition_stage_names(),
+            pipeline: plan.spec.name,
+            partition_labels: plan.partition_stage_names(),
             ..self.core.totals.lock().unwrap().clone()
         }
+    }
+
+    /// Calibrate the planner against THIS host: run a short
+    /// deterministic probe over every statically-feasible candidate
+    /// partition, fit the device-model constants from the measured
+    /// segment times, re-solve the partition DP over the measured costs,
+    /// and swap the live plan if the measured optimum differs from the
+    /// current partition. CPU-backend only (the probe executes candidate
+    /// partitions through the derived executor).
+    ///
+    /// The probe is deterministic: equal `seed` (and equal host timing
+    /// behavior) gives equal inputs and equal candidate order, and the
+    /// constant fit is a pure function of the measured table. The probe
+    /// runs on a PRIVATE scratch pool so the engine pool's settled
+    /// allocation counter stays flat (the zero-allocation steady-state
+    /// contract).
+    ///
+    /// After this returns, [`EngineStats::plan_source`] reads
+    /// `"calibrated"` and [`EngineStats::replans`] counts the swap (if
+    /// any). The measured table also seeds the plan cache, so a
+    /// subsequent `replan_margin` hook starts from probe data instead of
+    /// cold.
+    ///
+    /// ```no_run
+    /// use kfuse::config::{Backend, FusionMode};
+    /// use kfuse::engine::Engine;
+    ///
+    /// # fn main() -> kfuse::Result<()> {
+    /// let engine = Engine::builder()
+    ///     .backend(Backend::Cpu)
+    ///     .mode(FusionMode::Auto)
+    ///     .build()?;
+    /// let cal = engine.calibrate(42)?;
+    /// println!("measured-optimal ns/box: {}", cal.measured_ns);
+    /// engine.shutdown()
+    /// # }
+    /// ```
+    pub fn calibrate(&self, seed: u64) -> Result<Calibration> {
+        let core = &self.core;
+        if core.cfg.backend != Backend::Cpu {
+            return Err(Error::Config(
+                "calibrate requires the cpu backend (the probe executes \
+                 candidate partitions through the derived executor)"
+                    .into(),
+            ));
+        }
+        let base = core.plan.load();
+        let n = base.spec.len();
+        let run = base.spec.kernel_run();
+        // Private scratch pool: probe allocations must not disturb the
+        // engine pool's settled `pool_allocs` counter.
+        let pool = BufferPool::shared();
+        let exec =
+            DerivedCpu::with_isa(pool, core.cfg.intra_box_threads, core.isa)?;
+        // Deterministic probe input: one halo'd RGBA box of seeded noise.
+        let din = base.box_dims.with_halo(base.halo);
+        let mut g = Gen::new(seed);
+        let input = g.vec_f32(din.pixels() * 4, 0.0, 255.0);
+        // Probe every candidate the static model prices feasible. Alpha
+        // 1.0: each slot holds its own median, no blending across
+        // candidates.
+        let mut table = SegmentTable::new(1.0);
+        for partition in candidate_partitions(n) {
+            let feasible = partition.iter().all(|s| {
+                core.planner
+                    .columns
+                    .iter()
+                    .any(|c| c.segment == *s && c.cost.is_finite())
+            });
+            if !feasible {
+                continue;
+            }
+            let variant = base.with_partition(partition.clone());
+            let nanos =
+                exec.probe(&variant, core.cfg.threshold, &input, PROBE_REPS)?;
+            for (seg, ns) in partition.iter().zip(&nanos) {
+                // The all-singletons schedule measures every singleton;
+                // isolating schedules contribute only their fused
+                // candidate (their flanking singletons are remeasures).
+                if partition.len() == n || seg.len >= 2 {
+                    table.observe(*seg, *ns as f64);
+                }
+            }
+        }
+        let measured = table.snapshot();
+        // Fit the device-model constants by least squares from the
+        // measured times. Features come from the same accounting the
+        // static prediction used; a degenerate fit (too few / collinear
+        // samples) falls back to the static device table.
+        let samples: Vec<(SegmentFeatures, f64)> = measured
+            .iter()
+            .filter_map(|&(seg, ns)| {
+                segment_features(
+                    &run,
+                    seg,
+                    core.cfg.input_dims(),
+                    base.box_dims,
+                    &core.device,
+                )
+                .map(|f| (f, ns * 1e-9))
+            })
+            .collect();
+        let fitted = fit_constants(&samples)
+            .unwrap_or_else(|| FittedConstants::from_device(&core.device));
+        // Re-solve the partition DP over MEASURED costs, restricted to
+        // the static model's feasible columns.
+        let (partition, measured_ns) =
+            select_measured(n, &measured, &core.planner).ok_or_else(|| {
+                Error::Plan(
+                    "calibration probe left the fusable run uncovered"
+                        .into(),
+                )
+            })?;
+        let static_partition = base.partition.clone();
+        let static_ns = partition_cost(&static_partition, &measured)
+            .unwrap_or(f64::INFINITY);
+        let swapped = partition != static_partition;
+        if swapped {
+            core.plan
+                .swap(Arc::new(base.with_partition(partition.clone())));
+        }
+        // Seed the plan cache so the online hook starts warm.
+        {
+            let mut cal = core.calib.lock().unwrap();
+            let key = cal.key.clone();
+            let entry = cal.cache.entry_mut(&key);
+            entry.partition = partition.clone();
+            for &(seg, ns) in &measured {
+                entry.nanos.observe(seg, ns);
+            }
+        }
+        {
+            let mut tot = core.totals.lock().unwrap();
+            if swapped {
+                tot.replans += 1;
+            }
+            tot.plan_source = PlanSource::Calibrated.as_str();
+        }
+        Ok(Calibration {
+            device: core.cfg.device.clone(),
+            pipeline: core.cfg.pipeline.clone(),
+            box_dims: base.box_dims,
+            threads: core.cfg.intra_box_threads,
+            isa: core.isa.name().to_string(),
+            fitted,
+            measured,
+            partition,
+            static_partition,
+            measured_ns,
+            static_ns,
+            swapped,
+        })
     }
 
     /// Jobs admitted but not yet completed.

@@ -141,6 +141,20 @@ pub struct EngineStats {
     /// into the plan's spec. Empty only on a default-constructed stats
     /// value.
     pub pipeline: &'static str,
+    /// Where the live partition came from: `"static"` (build-time DP
+    /// over the device table — every engine starts here), `"cached"`
+    /// (the online re-plan hook re-scored the plan-cache entry from live
+    /// measured EWMAs), or `"calibrated"`
+    /// ([`Engine::calibrate`](crate::engine::Engine::calibrate) probe).
+    /// Empty only on a default-constructed stats value.
+    pub plan_source: &'static str,
+    /// Plan swaps since build: [`Engine::calibrate`] swapping in the
+    /// measured-optimal partition, plus every online re-plan the
+    /// `replan_margin` hook performed. 0 in the (default) static
+    /// configuration.
+    ///
+    /// [`Engine::calibrate`]: crate::engine::Engine::calibrate
+    pub replans: u64,
     /// Spec-derived label of each executed partition, aligned with
     /// [`partition_nanos`](EngineStats::partition_nanos) (e.g.
     /// `["{rgbToGray..IIRFilter}", "{Gaussian..Threshold}"]` for Two
@@ -202,6 +216,12 @@ impl std::fmt::Display for EngineStats {
         }
         if !self.pipeline.is_empty() {
             write!(f, " | pipeline {}", self.pipeline)?;
+        }
+        if !self.plan_source.is_empty() {
+            write!(f, " | plan {}", self.plan_source)?;
+            if self.replans > 0 {
+                write!(f, " ({} replans)", self.replans)?;
+            }
         }
         if !self.partition_nanos.is_empty() {
             let ms: Vec<String> = self
@@ -296,6 +316,26 @@ mod tests {
         );
         let bare = format!("{}", EngineStats::default());
         assert!(!bare.contains("pipeline"), "{bare}");
+    }
+
+    #[test]
+    fn display_shows_plan_source_and_replans_when_set() {
+        let bare = format!("{}", EngineStats::default());
+        assert!(!bare.contains("plan"), "{bare}");
+        let s = EngineStats {
+            plan_source: "static",
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("| plan static"), "{text}");
+        assert!(!text.contains("replans"), "{text}");
+        let s = EngineStats {
+            plan_source: "calibrated",
+            replans: 2,
+            ..EngineStats::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("| plan calibrated (2 replans)"), "{text}");
     }
 
     #[test]

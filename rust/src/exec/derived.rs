@@ -302,6 +302,39 @@ impl DerivedCpu {
         })
     }
 
+    /// Timing probe for [`fusion::calibrate`](crate::fusion::calibrate):
+    /// execute `plan` on `input` `reps + 1` times — one untimed
+    /// compile-and-warm pass, then `reps` timed passes — and return the
+    /// per-segment MEDIAN wall nanos, aligned with `plan.partition`.
+    /// The warm pass makes the timed reps measure steady state (segment
+    /// programs compiled, pool buffers faulted in); the median discards
+    /// scheduler noise without averaging it into the table.
+    pub fn probe(
+        &self,
+        plan: &ExecutionPlan,
+        threshold: f32,
+        input: &[f32],
+        reps: usize,
+    ) -> Result<Vec<u64>> {
+        assert!(reps >= 1, "probe needs at least one timed rep");
+        self.execute(plan, threshold, input)?;
+        let n = plan.partition.len();
+        let mut per_seg: Vec<Vec<u64>> = vec![Vec::with_capacity(reps); n];
+        for _ in 0..reps {
+            self.execute(plan, threshold, input)?;
+            for (k, ns) in self.last_stage_nanos().into_iter().enumerate() {
+                per_seg[k].push(ns);
+            }
+        }
+        Ok(per_seg
+            .into_iter()
+            .map(|mut v| {
+                v.sort_unstable();
+                v[v.len() / 2]
+            })
+            .collect())
+    }
+
     /// Intra-box threads each segment fans out to.
     pub fn threads(&self) -> usize {
         self.threads
@@ -973,6 +1006,19 @@ mod tests {
         assert_eq!(exec.execute(&full, 96.0, &x).unwrap(), want);
         assert_eq!(exec.execute(&two, 96.0, &x).unwrap(), want);
         assert_eq!(pool.allocations(), after_both);
+    }
+
+    #[test]
+    fn probe_times_every_segment_of_any_partition() {
+        let mut g = Gen::new(17);
+        let x = g.vec_f32(9 * 20 * 20 * 4, 0.0, 255.0);
+        let exec = DerivedCpu::new(BufferPool::shared());
+        for mode in [FusionMode::None, FusionMode::Two, FusionMode::Full] {
+            let plan = facial_plan(mode);
+            let ns = exec.probe(&plan, 96.0, &x, 3).unwrap();
+            assert_eq!(ns.len(), plan.partition.len(), "mode={mode:?}");
+            assert!(ns.iter().all(|&v| v > 0), "mode={mode:?} ns={ns:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1033 @@
+//! Self-tuning planner: close the measurement→plan loop.
+//!
+//! The DP planner ([`super::dp`]) prices candidate fused kernels with a
+//! static device table ([`DeviceSpec`]) — honest for reproducing the
+//! paper's figures, wrong for whatever host is actually executing the
+//! boxes. This module feeds *measured* per-segment wall time (the
+//! engine's `partition_nanos` accounting) back into the plan:
+//!
+//! * [`SegmentTable`] — per-candidate-segment EWMA of measured ns/box.
+//! * [`PlanCache`] — measured tables + chosen partitions keyed by
+//!   [`PlanKey`] `(pipeline, box, device, isa, threads)`, so decisions
+//!   are scoped to the substrate they were measured on.
+//! * [`candidate_partitions`] — the deterministic probe schedule: a
+//!   partition set that executes every contiguous candidate segment.
+//! * [`fit_constants`] — least-squares fit of the device-model constants
+//!   (GMEM bandwidth, SHMEM speedup, flop rate, launch overhead) from
+//!   measured `(features, seconds)` samples; [`calibrated_device`]
+//!   bakes the fit into a [`DeviceSpec`] the unchanged planner consumes.
+//! * [`select_measured`] — the re-plan decision: an interval DP over
+//!   measured segment costs, restricted to candidates the *static*
+//!   model prices feasible — a measured blip can never talk the planner
+//!   into a partition that violates the SHMEM constraint.
+//!
+//! `Engine::calibrate` (and the CLI `--calibrate` flag) drives the loop
+//! end-to-end: probe → fit → select → swap the live
+//! [`PlanCell`](crate::coordinator::plan::PlanCell). The math behind
+//! the fit is derived in `docs/COST_MODEL.md`.
+
+use std::fmt;
+
+use super::candidates::{enumerate_candidates, Segment};
+use super::cost;
+use super::dp;
+use super::halo::BoxDims;
+use super::ilp::Model;
+use super::kernel_ir::KernelSpec;
+use super::traffic::InputDims;
+use crate::gpusim::device::DeviceSpec;
+
+/// Where the engine's currently-live [`ExecutionPlan`]
+/// (crate::coordinator::plan::ExecutionPlan) came from, surfaced as
+/// `EngineStats::plan_source`.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::PlanSource;
+/// assert_eq!(PlanSource::Calibrated.as_str(), "calibrated");
+/// assert_eq!(PlanSource::default(), PlanSource::Static);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanSource {
+    /// Resolved at build time from the static device table.
+    #[default]
+    Static,
+    /// Swapped by the online re-plan hook from live EWMA measurements.
+    Cached,
+    /// Swapped (or confirmed) by an explicit calibration probe run.
+    Calibrated,
+}
+
+impl PlanSource {
+    /// Stable lowercase label (`static` | `cached` | `calibrated`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanSource::Static => "static",
+            PlanSource::Cached => "cached",
+            PlanSource::Calibrated => "calibrated",
+        }
+    }
+}
+
+impl fmt::Display for PlanSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Exponentially-weighted moving average of a measured quantity.
+///
+/// The first observation seeds the average directly; later observations
+/// blend in with weight `alpha` (higher = more reactive).
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::Ewma;
+/// let mut e = Ewma::new(0.25);
+/// assert!(e.get().is_none());
+/// e.observe(100.0);
+/// e.observe(200.0);
+/// assert_eq!(e.get(), Some(125.0)); // 0.25·200 + 0.75·100
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// New average with blend weight `alpha` in `(0, 1]`.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Ewma { alpha, value: None }
+    }
+
+    /// Fold one observation in.
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    /// Current average, or `None` before the first observation.
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Measured ns/box per candidate segment, EWMA-smoothed.
+///
+/// [`Segment`] deliberately does not implement `Hash` (candidate sets
+/// are tiny — `n(n+1)/2` for the 3–5-stage registered pipelines), so
+/// the table is a linear-scan vector, which also keeps iteration order
+/// deterministic for the calibration fit.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::SegmentTable;
+/// use kfuse::fusion::candidates::Segment;
+/// let mut t = SegmentTable::new(0.3);
+/// t.observe(Segment { start: 0, len: 2 }, 1500.0);
+/// assert_eq!(t.get(Segment { start: 0, len: 2 }), Some(1500.0));
+/// assert_eq!(t.snapshot().len(), 1);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct SegmentTable {
+    alpha: f64,
+    entries: Vec<(Segment, Ewma)>,
+}
+
+impl SegmentTable {
+    /// Default EWMA blend weight used by the engine's live table.
+    pub const DEFAULT_ALPHA: f64 = 0.25;
+
+    /// Empty table; every segment's EWMA will use `alpha`.
+    pub fn new(alpha: f64) -> Self {
+        SegmentTable {
+            alpha,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Fold one ns/box observation for `seg` into its EWMA.
+    pub fn observe(&mut self, seg: Segment, nanos_per_box: f64) {
+        if !nanos_per_box.is_finite() || nanos_per_box < 0.0 {
+            return;
+        }
+        if let Some((_, e)) = self.entries.iter_mut().find(|(s, _)| *s == seg)
+        {
+            e.observe(nanos_per_box);
+            return;
+        }
+        let mut e = Ewma::new(if self.alpha > 0.0 {
+            self.alpha
+        } else {
+            Self::DEFAULT_ALPHA
+        });
+        e.observe(nanos_per_box);
+        self.entries.push((seg, e));
+    }
+
+    /// Current EWMA for `seg`, if it has ever been observed.
+    pub fn get(&self, seg: Segment) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|(s, _)| *s == seg)
+            .and_then(|(_, e)| e.get())
+    }
+
+    /// All observed `(segment, ns/box)` pairs, in first-observed order.
+    pub fn snapshot(&self) -> Vec<(Segment, f64)> {
+        self.entries
+            .iter()
+            .filter_map(|(s, e)| e.get().map(|v| (*s, v)))
+            .collect()
+    }
+
+    /// Number of segments observed so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing has been observed yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Cache key: the full substrate a measurement is valid for. Timings
+/// taken at one `(pipeline, box, device, isa, threads)` tuple say
+/// nothing about any other tuple, so each gets its own entry.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::PlanKey;
+/// use kfuse::fusion::halo::BoxDims;
+/// let key = PlanKey {
+///     pipeline: "facial".into(),
+///     box_dims: BoxDims::new(32, 32, 8),
+///     device: "k20".into(),
+///     isa: "avx2".into(),
+///     threads: 4,
+/// };
+/// assert_eq!(key, key.clone());
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanKey {
+    /// Registered pipeline name (`RunConfig::pipeline`).
+    pub pipeline: String,
+    /// Output box dimensions the plan executes.
+    pub box_dims: BoxDims,
+    /// Device-model name the static table priced against.
+    pub device: String,
+    /// Dispatched lane ISA (`scalar` / `portable` / `sse2` / `avx2`).
+    pub isa: String,
+    /// Intra-box band threads.
+    pub threads: usize,
+}
+
+/// One cache entry: the partition last chosen for the key's substrate
+/// plus the measured evidence it was chosen from.
+#[derive(Debug, Clone, Default)]
+pub struct CacheEntry {
+    /// Partition last selected for this substrate (empty = never
+    /// re-planned; the static plan stands).
+    pub partition: Vec<Segment>,
+    /// Measured ns/box EWMAs backing the selection.
+    pub nanos: SegmentTable,
+}
+
+/// Plan cache: measured evidence and chosen partitions per [`PlanKey`].
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::{PlanCache, PlanKey};
+/// use kfuse::fusion::candidates::Segment;
+/// use kfuse::fusion::halo::BoxDims;
+/// let key = PlanKey {
+///     pipeline: "anomaly".into(),
+///     box_dims: BoxDims::new(16, 16, 8),
+///     device: "k20".into(),
+///     isa: "scalar".into(),
+///     threads: 1,
+/// };
+/// let mut cache = PlanCache::new();
+/// cache.entry_mut(&key).partition = vec![Segment { start: 0, len: 3 }];
+/// assert_eq!(cache.get(&key).unwrap().partition.len(), 1);
+/// assert_eq!(cache.len(), 1);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct PlanCache {
+    entries: Vec<(PlanKey, CacheEntry)>,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Entry for `key`, inserted (empty, [`SegmentTable::DEFAULT_ALPHA`])
+    /// on first access.
+    pub fn entry_mut(&mut self, key: &PlanKey) -> &mut CacheEntry {
+        if let Some(i) = self.entries.iter().position(|(k, _)| k == key) {
+            return &mut self.entries[i].1;
+        }
+        self.entries.push((
+            key.clone(),
+            CacheEntry {
+                partition: Vec::new(),
+                nanos: SegmentTable::new(SegmentTable::DEFAULT_ALPHA),
+            },
+        ));
+        &mut self.entries.last_mut().expect("just pushed").1
+    }
+
+    /// Entry for `key`, if one exists.
+    pub fn get(&self, key: &PlanKey) -> Option<&CacheEntry> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, e)| e)
+    }
+
+    /// Number of substrates cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The deterministic probe schedule for an `n`-kernel fusable run: a set
+/// of valid partitions that, together, execute **every** contiguous
+/// candidate segment at least once.
+///
+/// The schedule is the all-singletons partition (covers every length-1
+/// candidate) plus, for each candidate of length ≥ 2, the partition that
+/// isolates it between singletons — `1 + n(n+1)/2 − n` partitions total
+/// (11 for the paper's 5-kernel run).
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::candidate_partitions;
+/// let parts = candidate_partitions(5);
+/// assert_eq!(parts.len(), 11);
+/// assert!(parts.iter().all(|p| {
+///     p.iter().map(|s| s.len).sum::<usize>() == 5
+/// }));
+/// ```
+pub fn candidate_partitions(n: usize) -> Vec<Vec<Segment>> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    out.push((0..n).map(|i| Segment { start: i, len: 1 }).collect());
+    for cand in enumerate_candidates(n) {
+        if cand.len < 2 {
+            continue;
+        }
+        let mut p: Vec<Segment> = (0..cand.start)
+            .map(|i| Segment { start: i, len: 1 })
+            .collect();
+        p.push(cand);
+        p.extend((cand.end()..n).map(|i| Segment { start: i, len: 1 }));
+        out.push(p);
+    }
+    out
+}
+
+/// The cost-model features of one candidate segment — the regressors of
+/// the calibration fit (see [`fit_constants`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentFeatures {
+    /// Which candidate these features describe.
+    pub segment: Segment,
+    /// GMEM bytes moved, divided by the occupancy factor (the static
+    /// model's effective-bandwidth divisor).
+    pub gmem_per_occ: f64,
+    /// SHMEM bytes moved, divided by the occupancy factor.
+    pub shmem_per_occ: f64,
+    /// Arithmetic work over the whole input volume, flops.
+    pub flops: f64,
+}
+
+/// Compute the fit features of candidate `seg`, or `None` when the
+/// static model prices it infeasible (its features are undefined — an
+/// infeasible candidate never executes).
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::segment_features;
+/// use kfuse::fusion::candidates::Segment;
+/// use kfuse::fusion::halo::BoxDims;
+/// use kfuse::fusion::kernel_ir::paper_fusable_run;
+/// use kfuse::fusion::traffic::InputDims;
+/// use kfuse::gpusim::device::DeviceSpec;
+/// let f = segment_features(
+///     &paper_fusable_run(),
+///     Segment { start: 0, len: 5 },
+///     InputDims::new(256, 256, 1000),
+///     BoxDims::new(32, 32, 8),
+///     &DeviceSpec::k20(),
+/// )
+/// .unwrap();
+/// assert!(f.gmem_per_occ > 0.0 && f.flops > 0.0);
+/// ```
+pub fn segment_features(
+    run: &[KernelSpec],
+    seg: Segment,
+    input: InputDims,
+    bx: BoxDims,
+    dev: &DeviceSpec,
+) -> Option<SegmentFeatures> {
+    let c = cost::predict(&run[seg.kernels()], input, bx, dev);
+    if !c.feasible {
+        return None;
+    }
+    Some(SegmentFeatures {
+        segment: seg,
+        gmem_per_occ: c.gmem_bytes as f64 / c.occupancy,
+        shmem_per_occ: c.shmem_bytes as f64 / c.occupancy,
+        flops: c.flops,
+    })
+}
+
+/// Device-model constants recovered by the calibration fit — the four
+/// numbers `cost::predict` takes from the device table, in the same
+/// units ([`calibrated_device`] substitutes them into a [`DeviceSpec`]).
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::FittedConstants;
+/// use kfuse::gpusim::device::DeviceSpec;
+/// let base = FittedConstants::from_device(&DeviceSpec::k20());
+/// assert_eq!(base.gmem_bw, 208.0e9);
+/// println!("{}", base.to_json());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FittedConstants {
+    /// Effective global-memory bandwidth, bytes/s (`1/a`).
+    pub gmem_bw: f64,
+    /// SHMEM-vs-GMEM speed ratio (`a/b`).
+    pub shmem_speedup: f64,
+    /// Effective arithmetic throughput, flop/s (`1/c`).
+    pub flops: f64,
+    /// Fixed per-dispatch overhead, seconds (`d`).
+    pub launch_overhead: f64,
+}
+
+impl FittedConstants {
+    /// The constants a static device table implies (the fit's identity
+    /// fallback when a probe yields too few / degenerate samples).
+    pub fn from_device(dev: &DeviceSpec) -> Self {
+        FittedConstants {
+            gmem_bw: dev.gmem_bw,
+            shmem_speedup: dev.shmem_speedup,
+            flops: dev.flops,
+            launch_overhead: dev.launch_overhead,
+        }
+    }
+
+    /// One-line JSON object (the `BENCH_calibration.json` payload — the
+    /// repo hand-rolls JSON, no serde in the vendor set).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"gmem_bw\": {:e}, \"shmem_speedup\": {}, \
+             \"flops\": {:e}, \"launch_overhead\": {:e}}}",
+            self.gmem_bw, self.shmem_speedup, self.flops,
+            self.launch_overhead
+        )
+    }
+}
+
+/// Least-squares fit of the device-model constants from measured
+/// segment times.
+///
+/// The static model predicts `t = d + max(mem, compute)` with
+/// `mem = gmem/(bw·occ) + shmem/(bw·spd·occ)` and
+/// `compute = flops/F`. The fit linearizes the roofline `max` into a
+/// sum — `t ≈ a·(gmem/occ) + b·(shmem/occ) + c·flops + d` — which is
+/// exact in the memory-bound regime the paper establishes (compute is
+/// the small term, and the `c` coefficient absorbs it). Solving the
+/// 4-parameter normal equations recovers `bw = 1/a`, `spd = a/b`,
+/// `F = 1/c`, `overhead = d`, each clamped to a physical range so a
+/// noisy probe can never produce a degenerate device model.
+///
+/// Returns `None` with fewer than 4 samples or a rank-deficient design
+/// (e.g. all samples identical). The fit is a pure function of its
+/// input: equal sample tables produce bit-identical constants
+/// (property-tested in `tests/planner_properties.rs`).
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::{fit_constants, SegmentFeatures};
+/// use kfuse::fusion::candidates::Segment;
+/// let seg = Segment { start: 0, len: 1 };
+/// let samples: Vec<(SegmentFeatures, f64)> = (0..8)
+///     .map(|i| {
+///         let f = SegmentFeatures {
+///             segment: seg,
+///             gmem_per_occ: 1.0e6 * (i + 1) as f64,
+///             shmem_per_occ: 2.0e5 * (i * i) as f64,
+///             flops: 1.0e7 * ((i * 3) % 7 + 1) as f64,
+///         };
+///         let t = f.gmem_per_occ / 150.0e9
+///             + f.shmem_per_occ / (150.0e9 * 14.0)
+///             + f.flops / 2.0e12
+///             + 3.0e-6;
+///         (f, t)
+///     })
+///     .collect();
+/// let fit = fit_constants(&samples).unwrap();
+/// assert!((fit.gmem_bw - 150.0e9).abs() / 150.0e9 < 1e-3);
+/// ```
+pub fn fit_constants(
+    samples: &[(SegmentFeatures, f64)],
+) -> Option<FittedConstants> {
+    if samples.len() < 4 {
+        return None;
+    }
+    // Normal equations AᵀA β = Aᵀy for rows [gmem/occ, shmem/occ,
+    // flops, 1]. Feature magnitudes span ~12 decades against the
+    // intercept, so columns are scaled to unit max first (diagonal
+    // preconditioning) to keep the 4×4 solve well-conditioned.
+    let mut scale = [0.0f64; 4];
+    for (f, _) in samples {
+        scale[0] = scale[0].max(f.gmem_per_occ.abs());
+        scale[1] = scale[1].max(f.shmem_per_occ.abs());
+        scale[2] = scale[2].max(f.flops.abs());
+    }
+    scale[3] = 1.0;
+    for s in scale.iter_mut() {
+        if *s <= 0.0 {
+            *s = 1.0;
+        }
+    }
+    let mut ata = [[0.0f64; 4]; 4];
+    let mut aty = [0.0f64; 4];
+    for (f, y) in samples {
+        let row = [
+            f.gmem_per_occ / scale[0],
+            f.shmem_per_occ / scale[1],
+            f.flops / scale[2],
+            1.0,
+        ];
+        for (i, &ri) in row.iter().enumerate() {
+            for (j, &rj) in row.iter().enumerate() {
+                ata[i][j] += ri * rj;
+            }
+            aty[i] += ri * y;
+        }
+    }
+    let beta_scaled = solve4(&mut ata, &mut aty)?;
+    let beta: Vec<f64> = beta_scaled
+        .iter()
+        .zip(scale.iter())
+        .map(|(b, s)| b / s)
+        .collect();
+    // Map coefficients back to device constants, clamped to physical
+    // ranges (a near-zero or negative coefficient means the probe had
+    // no signal on that axis; the clamp pins it to "effectively free").
+    let inv = |x: f64, lo: f64, hi: f64| (1.0 / x.max(1e-300)).clamp(lo, hi);
+    let gmem_bw = inv(beta[0], 1.0e6, 1.0e15);
+    let shmem_bw = inv(beta[1], 1.0e6, 1.0e18);
+    Some(FittedConstants {
+        gmem_bw,
+        shmem_speedup: (shmem_bw / gmem_bw).clamp(1.0, 1.0e4),
+        flops: inv(beta[2], 1.0e6, 1.0e18),
+        launch_overhead: beta[3].clamp(0.0, 1.0),
+    })
+}
+
+/// Solve the 4×4 system in place by Gaussian elimination with partial
+/// pivoting; `None` when (numerically) singular.
+fn solve4(a: &mut [[f64; 4]; 4], b: &mut [f64; 4]) -> Option<[f64; 4]> {
+    for col in 0..4 {
+        let pivot = (col..4)
+            .max_by(|&i, &j| {
+                a[i][col].abs().total_cmp(&a[j][col].abs())
+            })
+            .expect("non-empty range");
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..4 {
+            let f = a[row][col] / a[col][col];
+            for k in col..4 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 4];
+    for row in (0..4).rev() {
+        let mut acc = b[row];
+        for k in row + 1..4 {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Some(x)
+}
+
+/// A [`DeviceSpec`] with the fitted constants substituted in — feed it
+/// to `Model::build` / `ExecutionPlan::resolve_spec` and the unchanged
+/// static planner plans for the measured machine.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::{calibrated_device, FittedConstants};
+/// use kfuse::gpusim::device::DeviceSpec;
+/// let base = DeviceSpec::k20();
+/// let fit = FittedConstants {
+///     gmem_bw: 50.0e9,
+///     shmem_speedup: 8.0,
+///     flops: 1.0e12,
+///     launch_overhead: 2.0e-6,
+/// };
+/// let dev = calibrated_device(&base, &fit);
+/// assert_eq!(dev.gmem_bw, 50.0e9);
+/// assert_eq!(dev.shmem_per_block, base.shmem_per_block);
+/// ```
+pub fn calibrated_device(
+    base: &DeviceSpec,
+    fit: &FittedConstants,
+) -> DeviceSpec {
+    DeviceSpec {
+        gmem_bw: fit.gmem_bw.max(1.0),
+        shmem_speedup: fit.shmem_speedup.max(1.0),
+        flops: fit.flops.max(1.0),
+        launch_overhead: fit.launch_overhead.max(0.0),
+        ..base.clone()
+    }
+}
+
+/// Pick the measured-optimal partition: an interval DP over measured
+/// segment costs, **restricted to candidates the static model prices
+/// feasible**. The restriction is the safety rail: no matter what the
+/// clock says, a partition whose segment violates the static SHMEM
+/// constraint is never selected (property-tested). Returns `None` when
+/// the measured table doesn't yet cover any full partition.
+///
+/// Because every candidate is priced from the same table, the returned
+/// objective is ≤ the measured cost of *any* valid partition assembled
+/// from observed segments — in particular the static plan's, which is
+/// what the fig16 `calibrated` arm asserts.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::select_measured;
+/// use kfuse::fusion::candidates::Segment;
+/// use kfuse::fusion::ilp::Model;
+/// let statics = Model::with_costs(
+///     2,
+///     &[
+///         (Segment { start: 0, len: 1 }, 2.0),
+///         (Segment { start: 1, len: 1 }, 2.0),
+///         (Segment { start: 0, len: 2 }, 3.0),
+///     ],
+/// );
+/// let measured = [
+///     (Segment { start: 0, len: 1 }, 900.0),
+///     (Segment { start: 1, len: 1 }, 900.0),
+///     (Segment { start: 0, len: 2 }, 2500.0),
+/// ];
+/// // Static table prefers the fused pair; the clock disagrees.
+/// let (segs, ns) = select_measured(2, &measured, &statics).unwrap();
+/// assert_eq!(segs.len(), 2);
+/// assert_eq!(ns, 1800.0);
+/// ```
+pub fn select_measured(
+    n_kernels: usize,
+    measured: &[(Segment, f64)],
+    statics: &Model,
+) -> Option<(Vec<Segment>, f64)> {
+    let feasible: Vec<(Segment, f64)> = measured
+        .iter()
+        .filter(|(seg, ns)| {
+            ns.is_finite()
+                && statics
+                    .columns
+                    .iter()
+                    .any(|c| c.segment == *seg && c.cost.is_finite())
+        })
+        .cloned()
+        .collect();
+    if feasible.is_empty() {
+        return None;
+    }
+    dp::solve_dp(&Model::with_costs(n_kernels, &feasible))
+}
+
+/// Measured cost of a specific partition priced from a measured table;
+/// `None` when some segment of the partition was never observed.
+///
+/// ```no_run
+/// use kfuse::fusion::calibrate::partition_cost;
+/// use kfuse::fusion::candidates::Segment;
+/// let table = [
+///     (Segment { start: 0, len: 1 }, 10.0),
+///     (Segment { start: 1, len: 2 }, 30.0),
+/// ];
+/// let part = [
+///     Segment { start: 0, len: 1 },
+///     Segment { start: 1, len: 2 },
+/// ];
+/// assert_eq!(partition_cost(&part, &table), Some(40.0));
+/// ```
+pub fn partition_cost(
+    partition: &[Segment],
+    measured: &[(Segment, f64)],
+) -> Option<f64> {
+    partition
+        .iter()
+        .map(|seg| {
+            measured
+                .iter()
+                .find(|(s, _)| s == seg)
+                .map(|(_, ns)| *ns)
+        })
+        .sum()
+}
+
+/// Report of one `Engine::calibrate` probe run: what was measured, what
+/// was fitted, and which partition won.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Base device-model name the static plan priced against.
+    pub device: String,
+    /// Pipeline probed.
+    pub pipeline: String,
+    /// Output box dimensions probed.
+    pub box_dims: BoxDims,
+    /// Intra-box band threads during the probe.
+    pub threads: usize,
+    /// Dispatched lane ISA during the probe.
+    pub isa: String,
+    /// Device constants fitted from the probe samples (falls back to
+    /// the static table's constants on a degenerate fit).
+    pub fitted: FittedConstants,
+    /// Median measured ns/box per candidate segment.
+    pub measured: Vec<(Segment, f64)>,
+    /// The measured-optimal partition.
+    pub partition: Vec<Segment>,
+    /// The static-table partition the engine was built with.
+    pub static_partition: Vec<Segment>,
+    /// Measured ns/box of [`Calibration::partition`].
+    pub measured_ns: f64,
+    /// Measured ns/box of [`Calibration::static_partition`] from the
+    /// same table (≥ `measured_ns` by DP optimality).
+    pub static_ns: f64,
+    /// Whether the live plan was swapped (the two partitions differed).
+    pub swapped: bool,
+}
+
+impl Calibration {
+    /// One-line JSON report (the CI-uploaded artifact payload).
+    pub fn to_json(&self) -> String {
+        let segs = |p: &[Segment]| {
+            p.iter()
+                .map(|s| s.len.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let table = self
+            .measured
+            .iter()
+            .map(|(s, ns)| format!("\"{}+{}\": {ns}", s.start, s.len))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{{\"device\": \"{}\", \"pipeline\": \"{}\", \
+             \"box\": \"{}x{}x{}\", \"threads\": {}, \"isa\": \"{}\", \
+             \"fitted\": {}, \"partition\": [{}], \
+             \"static_partition\": [{}], \"measured_ns\": {}, \
+             \"static_ns\": {}, \"swapped\": {}, \"measured\": {{{}}}}}",
+            self.device,
+            self.pipeline,
+            self.box_dims.x,
+            self.box_dims.y,
+            self.box_dims.t,
+            self.threads,
+            self.isa,
+            self.fitted.to_json(),
+            segs(&self.partition),
+            segs(&self.static_partition),
+            self.measured_ns,
+            self.static_ns,
+            self.swapped,
+            table,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::kernel_ir::paper_fusable_run;
+    use crate::prop::Gen;
+
+    #[test]
+    fn ewma_seeds_then_blends() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        e.observe(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.observe(20.0);
+        assert_eq!(e.get(), Some(15.0));
+    }
+
+    #[test]
+    fn segment_table_smooths_and_ignores_garbage() {
+        let mut t = SegmentTable::new(0.5);
+        let s = Segment { start: 1, len: 2 };
+        t.observe(s, f64::NAN);
+        t.observe(s, -5.0);
+        assert!(t.is_empty());
+        t.observe(s, 100.0);
+        t.observe(s, 200.0);
+        assert_eq!(t.get(s), Some(150.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.snapshot(), vec![(s, 150.0)]);
+    }
+
+    #[test]
+    fn probe_schedule_covers_every_candidate() {
+        for n in 1..=6 {
+            let parts = candidate_partitions(n);
+            assert_eq!(parts.len(), 1 + n * (n + 1) / 2 - n);
+            // Every partition tiles [0, n) exactly.
+            for p in &parts {
+                let mut next = 0;
+                for s in p {
+                    assert_eq!(s.start, next);
+                    next = s.end();
+                }
+                assert_eq!(next, n);
+            }
+            // Every candidate appears in some partition.
+            for cand in enumerate_candidates(n) {
+                assert!(
+                    parts.iter().any(|p| p.contains(&cand)),
+                    "n={n} candidate {cand:?} never probed"
+                );
+            }
+        }
+        assert!(candidate_partitions(0).is_empty());
+    }
+
+    #[test]
+    fn features_follow_the_static_cost_model() {
+        let run = paper_fusable_run();
+        let input = InputDims::new(256, 256, 1000);
+        let bx = BoxDims::new(32, 32, 8);
+        let dev = DeviceSpec::k20();
+        let full = Segment { start: 0, len: 5 };
+        let f = segment_features(&run, full, input, bx, &dev).unwrap();
+        let c = cost::predict(&run, input, bx, &dev);
+        assert_eq!(f.gmem_per_occ, c.gmem_bytes as f64 / c.occupancy);
+        assert_eq!(f.flops, c.flops);
+        // Reconstructing the (linearized) prediction from the static
+        // constants lands within the roofline-max gap.
+        let fit = FittedConstants::from_device(&dev);
+        let lin = f.gmem_per_occ / fit.gmem_bw
+            + f.shmem_per_occ / (fit.gmem_bw * fit.shmem_speedup)
+            + fit.launch_overhead;
+        assert!(
+            lin <= c.seconds * 1.001,
+            "linearized {lin} vs predicted {}",
+            c.seconds
+        );
+        // Infeasible on the small-SHMEM device at a huge box → None.
+        let none = segment_features(
+            &run,
+            full,
+            input,
+            BoxDims::new(128, 128, 8),
+            &DeviceSpec::c1060(),
+        );
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn fit_recovers_planted_constants() {
+        let truth = FittedConstants {
+            gmem_bw: 150.0e9,
+            shmem_speedup: 14.0,
+            flops: 2.0e12,
+            launch_overhead: 3.0e-6,
+        };
+        let mut g = Gen::new(11);
+        let samples: Vec<(SegmentFeatures, f64)> = (0..12)
+            .map(|_| {
+                let f = SegmentFeatures {
+                    segment: Segment { start: 0, len: 1 },
+                    gmem_per_occ: g.f64_in(1.0e5, 1.0e8),
+                    shmem_per_occ: g.f64_in(1.0e5, 1.0e8),
+                    flops: g.f64_in(1.0e6, 1.0e9),
+                };
+                let t = f.gmem_per_occ / truth.gmem_bw
+                    + f.shmem_per_occ
+                        / (truth.gmem_bw * truth.shmem_speedup)
+                    + f.flops / truth.flops
+                    + truth.launch_overhead;
+                (f, t)
+            })
+            .collect();
+        let fit = fit_constants(&samples).unwrap();
+        let rel = |a: f64, b: f64| (a - b).abs() / b;
+        assert!(rel(fit.gmem_bw, truth.gmem_bw) < 1e-3, "{fit:?}");
+        assert!(rel(fit.shmem_speedup, truth.shmem_speedup) < 1e-3);
+        assert!(rel(fit.flops, truth.flops) < 1e-3);
+        assert!(rel(fit.launch_overhead, truth.launch_overhead) < 1e-3);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        let f = SegmentFeatures {
+            segment: Segment { start: 0, len: 1 },
+            gmem_per_occ: 1.0e6,
+            shmem_per_occ: 1.0e6,
+            flops: 1.0e6,
+        };
+        assert!(fit_constants(&[(f, 1.0); 3]).is_none(), "too few");
+        assert!(fit_constants(&[(f, 1.0); 10]).is_none(), "rank 1");
+    }
+
+    #[test]
+    fn fit_clamps_keep_the_device_physical() {
+        // Pure-overhead samples: zero traffic signal on every axis
+        // except the intercept would be rank-deficient; give each axis
+        // a tiny negative-correlated wiggle instead and check clamps.
+        let mut g = Gen::new(5);
+        let samples: Vec<(SegmentFeatures, f64)> = (0..10)
+            .map(|_| {
+                let f = SegmentFeatures {
+                    segment: Segment { start: 0, len: 1 },
+                    gmem_per_occ: g.f64_in(1.0, 2.0),
+                    shmem_per_occ: g.f64_in(1.0, 2.0),
+                    flops: g.f64_in(1.0, 2.0),
+                };
+                (f, 1.0e-6) // constant time: coefficients fit ≈ 0
+            })
+            .collect();
+        if let Some(fit) = fit_constants(&samples) {
+            let dev = calibrated_device(&DeviceSpec::k20(), &fit);
+            assert!(dev.gmem_bw >= 1.0 && dev.gmem_bw.is_finite());
+            assert!(dev.shmem_speedup >= 1.0);
+            assert!(dev.flops >= 1.0 && dev.flops.is_finite());
+            assert!(dev.launch_overhead >= 0.0);
+        }
+    }
+
+    #[test]
+    fn calibrated_device_keeps_structure_constants() {
+        let base = DeviceSpec::gtx750ti();
+        let fit = FittedConstants {
+            gmem_bw: 1.0e10,
+            shmem_speedup: 5.0,
+            flops: 1.0e11,
+            launch_overhead: 1.0e-6,
+        };
+        let dev = calibrated_device(&base, &fit);
+        assert_eq!(dev.name, base.name);
+        assert_eq!(dev.sm_count, base.sm_count);
+        assert_eq!(dev.shmem_per_block, base.shmem_per_block);
+        assert_eq!(dev.gmem_bw, 1.0e10);
+        assert_eq!(dev.flops, 1.0e11);
+    }
+
+    #[test]
+    fn select_measured_never_picks_statically_infeasible() {
+        // Static table: fused pair infeasible (INFINITY); measured table
+        // claims the fused pair is nearly free. The rail must hold.
+        let statics = Model::with_costs(
+            2,
+            &[
+                (Segment { start: 0, len: 1 }, 1.0),
+                (Segment { start: 1, len: 1 }, 1.0),
+                (Segment { start: 0, len: 2 }, f64::INFINITY),
+            ],
+        );
+        let measured = [
+            (Segment { start: 0, len: 1 }, 500.0),
+            (Segment { start: 1, len: 1 }, 500.0),
+            (Segment { start: 0, len: 2 }, 1.0),
+        ];
+        let (segs, ns) = select_measured(2, &measured, &statics).unwrap();
+        assert_eq!(segs.len(), 2, "fused pair must be rejected");
+        assert_eq!(ns, 1000.0);
+    }
+
+    #[test]
+    fn select_measured_needs_full_coverage() {
+        let statics = Model::with_costs(
+            2,
+            &[
+                (Segment { start: 0, len: 1 }, 1.0),
+                (Segment { start: 1, len: 1 }, 1.0),
+            ],
+        );
+        // Only kernel 0 observed: no full partition exists yet.
+        let measured = [(Segment { start: 0, len: 1 }, 500.0)];
+        assert!(select_measured(2, &measured, &statics).is_none());
+        assert!(select_measured(2, &[], &statics).is_none());
+    }
+
+    #[test]
+    fn partition_cost_sums_or_bails() {
+        let table = [
+            (Segment { start: 0, len: 2 }, 70.0),
+            (Segment { start: 2, len: 1 }, 30.0),
+        ];
+        let part = [
+            Segment { start: 0, len: 2 },
+            Segment { start: 2, len: 1 },
+        ];
+        assert_eq!(partition_cost(&part, &table), Some(100.0));
+        let unseen = [Segment { start: 0, len: 3 }];
+        assert_eq!(partition_cost(&unseen, &table), None);
+    }
+
+    #[test]
+    fn plan_cache_is_keyed_by_full_substrate() {
+        let key = |isa: &str, threads: usize| PlanKey {
+            pipeline: "facial".into(),
+            box_dims: BoxDims::new(32, 32, 8),
+            device: "k20".into(),
+            isa: isa.into(),
+            threads,
+        };
+        let mut cache = PlanCache::new();
+        assert!(cache.is_empty());
+        cache.entry_mut(&key("avx2", 4)).partition =
+            vec![Segment { start: 0, len: 5 }];
+        cache
+            .entry_mut(&key("avx2", 4))
+            .nanos
+            .observe(Segment { start: 0, len: 5 }, 1234.0);
+        assert_eq!(cache.len(), 1, "same key reuses the entry");
+        assert!(cache.get(&key("scalar", 4)).is_none());
+        assert!(cache.get(&key("avx2", 1)).is_none());
+        let e = cache.get(&key("avx2", 4)).unwrap();
+        assert_eq!(e.partition.len(), 1);
+        assert_eq!(e.nanos.get(Segment { start: 0, len: 5 }), Some(1234.0));
+    }
+
+    #[test]
+    fn calibration_report_serializes() {
+        let cal = Calibration {
+            device: "k20".into(),
+            pipeline: "facial".into(),
+            box_dims: BoxDims::new(32, 32, 8),
+            threads: 1,
+            isa: "scalar".into(),
+            fitted: FittedConstants::from_device(&DeviceSpec::k20()),
+            measured: vec![(Segment { start: 0, len: 5 }, 1500.0)],
+            partition: vec![Segment { start: 0, len: 5 }],
+            static_partition: vec![Segment { start: 0, len: 5 }],
+            measured_ns: 1500.0,
+            static_ns: 1500.0,
+            swapped: false,
+        };
+        let j = cal.to_json();
+        assert!(j.contains("\"swapped\": false"), "{j}");
+        assert!(j.contains("\"gmem_bw\""), "{j}");
+        assert!(j.contains("\"0+5\": 1500"), "{j}");
+        assert_eq!(PlanSource::Static.to_string(), "static");
+        assert_eq!(PlanSource::Cached.as_str(), "cached");
+    }
+}

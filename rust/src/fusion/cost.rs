@@ -24,6 +24,12 @@ pub struct CandidateCost {
     pub gmem_bytes: u64,
     /// SHMEM bytes moved (intra-fusion intermediate reuse).
     pub shmem_bytes: u64,
+    /// Arithmetic work over the whole input volume, flops.
+    pub flops: f64,
+    /// Occupancy factor scaling effective bandwidth, in (0, 1]
+    /// (0 when infeasible). Exposed so `fusion::calibrate` can build
+    /// its fit regressors from the same accounting the prediction used.
+    pub occupancy: f64,
     /// Whether the halo'd input box fits the device's SHMEM.
     pub feasible: bool,
 }
@@ -55,6 +61,8 @@ pub fn predict(
             seconds: f64::INFINITY,
             gmem_bytes: 0,
             shmem_bytes: 0,
+            flops: 0.0,
+            occupancy: 0.0,
             feasible,
         };
     }
@@ -98,6 +106,8 @@ pub fn predict(
         seconds,
         gmem_bytes: gmem_bytes as u64,
         shmem_bytes: shmem_bytes as u64,
+        flops,
+        occupancy: occ,
         feasible,
     }
 }

@@ -6,12 +6,46 @@
 //! whose edge (i → j) carries `C(segment [i, j))`. `best[j] =
 //! min_i (best[i] + C[i..j])` solves it in O(n²) — provably optimal, so
 //! any disagreement with the B&B is a bug in one of them.
+//!
+//! The same recurrence also powers the SELF-TUNING planner: feed it a
+//! [`Model`] whose column costs are live measured per-segment times
+//! instead of device-table predictions (see
+//! [`calibrate::select_measured`](super::calibrate::select_measured))
+//! and the optimum it returns is the measured-optimal plan. The full
+//! derivation — and what calibration changes about the costs — is in
+//! `docs/COST_MODEL.md`.
 
 use super::candidates::Segment;
 use super::ilp::Model;
 
-/// Optimal contiguous partition. Returns (segments, objective), or `None`
-/// when some kernel has no feasible covering column.
+/// Optimal contiguous partition of the model's fusable run.
+///
+/// Solves `best[j] = min_{i<j} (best[i] + cost[i..j])` over cut
+/// positions `0..=n`, where `cost[i..j]` is the cheapest column
+/// covering segment `[i, j)` (duplicate columns collapse to their
+/// minimum). Returns `(segments, objective)` — the partition in
+/// execution order plus its summed cost — or `None` when some kernel
+/// has no finite-cost covering column, i.e. every partition is
+/// infeasible.
+///
+/// ```no_run
+/// use kfuse::fusion::dp::solve_dp;
+/// use kfuse::fusion::halo::BoxDims;
+/// use kfuse::fusion::ilp::Model;
+/// use kfuse::fusion::kernel_ir::paper_fusable_run;
+/// use kfuse::fusion::traffic::InputDims;
+/// use kfuse::gpusim::device::DeviceSpec;
+///
+/// let model = Model::build(
+///     &paper_fusable_run(),
+///     InputDims::new(256, 256, 1000),
+///     BoxDims::new(32, 32, 8),
+///     &DeviceSpec::k20(),
+/// );
+/// let (partition, seconds) = solve_dp(&model).expect("feasible run");
+/// assert_eq!(partition.iter().map(|s| s.len).sum::<usize>(), 5);
+/// println!("optimal partition costs {seconds:.6} s");
+/// ```
 pub fn solve_dp(model: &Model) -> Option<(Vec<Segment>, f64)> {
     let n = model.n_kernels;
     // cost[i][j] = cost of segment starting at i with length j-i.

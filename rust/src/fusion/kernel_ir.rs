@@ -11,6 +11,16 @@ use std::fmt;
 /// Stencil radii of a kernel: how far one output pixel reaches into its
 /// input neighborhood along each axis (the paper's `δ_i, δ_j, δ_t`, with
 /// the convention that a point op has all-zero radii).
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::Radii;
+///
+/// let gauss = Radii::new(2, 2, 0); // 5x5 spatial window, one frame
+/// let grad = Radii::new(1, 1, 0);
+/// // Chained stencils accumulate by SUM, not max: a pixel of the
+/// // gradient needs a (2+1)-radius halo of the original input.
+/// assert_eq!(gauss.sum(grad), Radii::new(3, 3, 0));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Radii {
     /// Spatial radius along image rows.
@@ -22,6 +32,7 @@ pub struct Radii {
 }
 
 impl Radii {
+    /// Radii with the given reach along rows, columns, and time.
     pub const fn new(dx: usize, dy: usize, dt: usize) -> Self {
         Radii { dx, dy, dt }
     }
@@ -43,6 +54,14 @@ impl Radii {
 }
 
 /// Table I: operation types, derived from the stencil radii.
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::{OpType, Radii};
+///
+/// assert_eq!(OpType::classify(Radii::point()), OpType::SinglePoint);
+/// assert_eq!(OpType::classify(Radii::new(2, 2, 3)), OpType::SpatioTemporal);
+/// println!("{}", OpType::Rectangular); // "Rectangular Operation"
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpType {
     /// `|d_i|=|d_j|=|d_t|=1` — one input pixel per output pixel.
@@ -80,6 +99,18 @@ impl fmt::Display for OpType {
 }
 
 /// Table IV: thread-level dependency of a kernel on its predecessor.
+///
+/// Drives fusability: `ThreadToThread` fuses freely,
+/// `ThreadToMultiThread` fuses behind a block-local sync, and
+/// `KernelToKernel` is a global barrier that ends the fusable run.
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::{paper_pipeline, DepType};
+///
+/// let stages = paper_pipeline();
+/// // The tracker is the only global barrier in the facial pipeline.
+/// assert_eq!(stages.last().unwrap().dep_on_prev, DepType::KernelToKernel);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DepType {
     /// Thread-to-Thread: output pixel (i,j,t) needs exactly input (i,j,t).
@@ -104,6 +135,18 @@ impl fmt::Display for DepType {
 }
 
 /// One pipeline stage as the planner models it.
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::paper_fusable_run;
+///
+/// for k in paper_fusable_run() {
+///     println!(
+///         "{}: {} ({} flops/px, {}→{} ch)",
+///         k.name, k.op_type(), k.flops_per_pixel,
+///         k.in_channels, k.out_channels,
+///     );
+/// }
+/// ```
 #[derive(Debug, Clone)]
 pub struct KernelSpec {
     /// Human/trace name ("rgbToGray", …).
@@ -133,7 +176,8 @@ impl KernelSpec {
     }
 }
 
-/// Bytes per f32 value moved by the pipelines.
+/// Bytes per f32 value moved by the pipelines (the traffic model prices
+/// every channel as one `f32` per pixel).
 pub const BYTES_PER_VALUE: usize = 4;
 
 /// The paper's Table II / Table IV pipeline: K1..K6 in execution order.
@@ -141,11 +185,24 @@ pub const BYTES_PER_VALUE: usize = 4;
 /// Delegates to the registered `facial` [`crate::pipeline::PipelineSpec`]
 /// — the single source of truth for kernel names, radii, and flop
 /// counts (see `pipeline::facial` for the per-kernel accounting).
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::paper_pipeline;
+///
+/// assert_eq!(paper_pipeline().len(), 6);
+/// ```
 pub fn paper_pipeline() -> Vec<KernelSpec> {
     crate::pipeline::facial().full_kernels()
 }
 
-/// The fusable prefix K1..K5 (everything before the KK-dependent tracker).
+/// The fusable prefix K1..K5 (everything before the KK-dependent
+/// tracker) — the run the planner partitions.
+///
+/// ```no_run
+/// use kfuse::fusion::kernel_ir::paper_fusable_run;
+///
+/// assert_eq!(paper_fusable_run().len(), 5);
+/// ```
 pub fn paper_fusable_run() -> Vec<KernelSpec> {
     crate::pipeline::facial().kernel_run()
 }

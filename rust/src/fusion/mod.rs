@@ -8,6 +8,10 @@
 //! [`fuse::FusedKernelPlan`]s (Algorithm 1) with halos from [`halo`]
 //! (Algorithm 2) → [`boxopt`] picks the box dimensions (eq 3–6) →
 //! [`traffic`] accounts for data movement (§VI-D, Figs 12/13).
+//! [`calibrate`] closes the loop the other way: it fits the device
+//! constants the [`cost`] model consumes from measured segment times
+//! and re-solves the [`dp`] recurrence over measured costs (the
+//! self-tuning planner — `docs/COST_MODEL.md` has the derivation).
 //!
 //! The planner is on the execution path, not just in figures: an engine
 //! built with `FusionMode::Auto` executes whatever partition the [`dp`]
@@ -29,6 +33,7 @@
 //! ```
 
 pub mod boxopt;
+pub mod calibrate;
 pub mod candidates;
 pub mod cost;
 pub mod dp;

@@ -9,6 +9,8 @@
 //!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
 //!                [--markers M] [--queue-policy fifo|rr|drr] [--queue N]
 //!                [--faults seed=S,all=P|site=P,...]
+//!                [--calibrate true [--calibration-out FILE]]
+//!                [--replan-margin M]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
 //!                [--pipeline facial|anomaly]
 //!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
@@ -36,6 +38,18 @@
 //! `scalar`. Asking for an ISA the host cannot run is a config error;
 //! the session line in `engine.stats()` reports which one actually
 //! served.
+//!
+//! `--calibrate true` (cpu backend only) runs the deterministic
+//! startup probe: every statically-feasible candidate partition is
+//! timed through the derived executor, the device-model constants are
+//! fitted from the measured segment times, and the engine swaps to the
+//! measured-optimal partition before the first job
+//! (`--calibration-out FILE` writes the fitted-constants report as
+//! JSON). `--replan-margin M` additionally re-solves the partition DP
+//! from live measured EWMAs after every job and swaps the plan when
+//! the measured optimum wins by more than the fraction `M`; both are
+//! observable in the session stats line (`plan`, `replans`). See
+//! `docs/COST_MODEL.md`.
 //!
 //! `--faults seed=S,all=P` (or per-site rates: `extract`, `stage`,
 //! `exec-panic`, `exec-error`, `route`) arms the seeded fault-injection
@@ -185,6 +199,16 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
+    // Self-tuning planner knobs: --calibrate true runs the startup
+    // probe (cpu backend only; validate() enforces that), and
+    // --replan-margin M arms the per-job online re-plan hook.
+    cfg.calibrate = args
+        .get("calibrate")
+        .map(|v| v == "true" || v == "1")
+        .unwrap_or(cfg.calibrate);
+    if args.get("replan-margin").is_some() {
+        cfg.replan_margin = Some(args.f64_or("replan-margin", 0.0)?);
+    }
     cfg.threshold = args.f64_or("threshold", cfg.threshold as f64)? as f32;
     Ok(cfg)
 }
@@ -243,7 +267,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.isa.name(),
         if cfg.roi_only { " | roi-only" } else { "" }
     );
-    let engine = Engine::builder().config(cfg.clone()).build()?;
+    // Validate the full config (incl. the calibrate x backend rule) up
+    // front, then strip `calibrate` before build: cmd_run runs the
+    // probe itself so it can print and optionally write the report —
+    // leaving the flag set would make build() probe a second time.
+    cfg.validate()?;
+    let engine = Engine::builder()
+        .config(RunConfig {
+            calibrate: false,
+            ..cfg.clone()
+        })
+        .build()?;
     println!(
         "partition: {} ({}) | planned on {} | queue policy {}",
         engine.plan().partition_names(),
@@ -251,6 +285,27 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.device,
         cfg.queue_policy.name()
     );
+    if cfg.calibrate {
+        let cal = engine.calibrate(42)?;
+        println!(
+            "calibrated: {} ({:.3} ms/box measured, static plan {:.3} \
+             ms/box){} | fitted bw {:.2} GB/s, shmem x{:.1}, \
+             {:.0} Gflop/s, launch {:.1} us",
+            engine.plan().partition_names(),
+            cal.measured_ns / 1e6,
+            cal.static_ns / 1e6,
+            if cal.swapped { " | plan swapped" } else { "" },
+            cal.fitted.gmem_bw / 1e9,
+            cal.fitted.shmem_speedup,
+            cal.fitted.flops / 1e9,
+            cal.fitted.launch_overhead * 1e6
+        );
+        if let Some(path) = args.get("calibration-out") {
+            std::fs::write(path, cal.to_json())
+                .map_err(|e| Error::Config(format!("--calibration-out: {e}")))?;
+            println!("calibration report written to {path}");
+        }
+    }
     if cfg.roi_only {
         let (clip, _) = coordinator::synth_clip(&cfg, 42);
         let (rep, coverage) = engine.roi(Arc::new(clip))?;
@@ -365,6 +420,9 @@ fn main() {
                  chaos: --faults seed=S,all=P (or per-site \
                  extract|stage|exec-panic|exec-error|route=P; env \
                  KFUSE_FAULTS)\n\
+                 self-tuning: --calibrate true (probe + fit + replan at \
+                 startup, cpu backend; --calibration-out FILE for the \
+                 fitted JSON), --replan-margin M (online re-plan hook)\n\
                  (see crate docs / README / ARCHITECTURE.md for all flags)",
                 DeviceSpec::NAMES.join(" | "),
                 kfuse::pipeline::names().join(" | ")

@@ -214,3 +214,48 @@ fn cpu_backend_staged_arm_matches_fused_arm() {
     fused.shutdown().unwrap();
     staged.shutdown().unwrap();
 }
+
+/// The self-tuning probe end to end on the CPU backend: stats report
+/// the plan source and exact replan count, the installed plan is the
+/// one the probe chose, and a calibrated engine still produces
+/// bit-identical results (the plan changes execution, never output).
+#[test]
+fn cpu_backend_calibrate_swaps_observably_and_preserves_results() {
+    let cfg = cpu_cfg(1, FusionMode::Auto);
+    let baseline = Engine::from_config(cfg.clone()).unwrap();
+    // Calibration is opt-in: an unprobed engine runs the static plan.
+    assert_eq!(baseline.stats().plan_source, "static");
+    assert_eq!(baseline.stats().replans, 0);
+
+    let engine = Engine::from_config(cfg).unwrap();
+    let v0 = engine.plan_version();
+    let cal = engine.calibrate(42).unwrap();
+
+    // The chosen partition minimizes over a set containing the static
+    // plan, both priced on the same measured table.
+    assert!(cal.measured_ns.is_finite() && cal.measured_ns > 0.0);
+    assert!(cal.measured_ns <= cal.static_ns);
+    // It covers the facial fusable run exactly once, in order.
+    let mut next = 0;
+    for s in &cal.partition {
+        assert_eq!(s.start, next);
+        next = s.end();
+    }
+    assert_eq!(next, 5);
+
+    // Exact observability: source flips to "calibrated", and replans /
+    // the plan-cell version move iff the probe actually swapped.
+    let swaps = cal.swapped as u64;
+    assert_eq!(engine.stats().plan_source, "calibrated");
+    assert_eq!(engine.stats().replans, swaps);
+    assert_eq!(engine.plan_version(), v0 + swaps);
+    assert_eq!(engine.plan().partition, cal.partition);
+
+    let (clip, _) = synth_clip(engine.config(), 31);
+    let clip = Arc::new(clip);
+    let a = engine.batch(clip.clone()).unwrap();
+    let b = baseline.batch(clip).unwrap();
+    assert_eq!(a.binary.data, b.binary.data);
+    engine.shutdown().unwrap();
+    baseline.shutdown().unwrap();
+}

@@ -1,6 +1,9 @@
 //! Property tests over the fusion planner, using the in-repo `prop`
 //! harness (offline stand-in for proptest — DESIGN.md §2).
 
+use kfuse::fusion::calibrate::{
+    fit_constants, select_measured, SegmentFeatures,
+};
 use kfuse::fusion::candidates::{enumerate_candidates, fusable_runs, Segment};
 use kfuse::fusion::halo::{halo_cumulative, halo_traced, BoxDims};
 use kfuse::fusion::ilp::Model;
@@ -166,6 +169,103 @@ fn prop_plan_covers_every_kernel_exactly_once() {
             }
         }
         assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    });
+}
+
+#[test]
+fn prop_measured_plan_respects_static_feasibility() {
+    // The self-tuning planner's safety invariant: no matter what the
+    // measured table claims — here it adversarially prices every
+    // candidate, including statically-infeasible ones, as fast — the
+    // selected plan only ever uses candidates the static model prices
+    // feasible, and it is a contiguous cover of the run.
+    run_prop("measured_respects_static", 200, |g| {
+        let n = g.usize_in(1, 6);
+        let statics: Vec<(Segment, f64)> = enumerate_candidates(n)
+            .into_iter()
+            .map(|s| {
+                // Singletons stay feasible (as in the real cost model,
+                // where unfused kernels never stage into SHMEM); fused
+                // candidates go infeasible a third of the time.
+                let c = if s.len > 1 && g.usize_in(0, 2) == 0 {
+                    f64::INFINITY
+                } else {
+                    g.f64_in(0.1, 100.0)
+                };
+                (s, c)
+            })
+            .collect();
+        let m = Model::with_costs(n, &statics);
+        let measured: Vec<(Segment, f64)> = enumerate_candidates(n)
+            .into_iter()
+            .map(|s| (s, g.f64_in(1.0, 1000.0)))
+            .collect();
+        let (partition, ns) = select_measured(n, &measured, &m)
+            .expect("all-singletons is always feasible and measured");
+        assert!(ns.is_finite() && ns > 0.0);
+        let mut next = 0;
+        for s in &partition {
+            assert_eq!(s.start, next, "non-contiguous cover");
+            assert!(s.len >= 1);
+            next = s.end();
+            assert!(
+                m.columns
+                    .iter()
+                    .any(|c| c.segment == *s && c.cost.is_finite()),
+                "statically-infeasible segment selected: {s:?}"
+            );
+        }
+        assert_eq!(next, n, "partition does not cover the run");
+    });
+}
+
+#[test]
+fn prop_equal_seed_fits_are_bit_identical() {
+    // The calibration fit is a pure function of its sample table:
+    // regenerating the samples from the same seed and fitting again
+    // must reproduce every constant bit for bit (the engine-level
+    // guarantee that equal-seed probe runs calibrate identically,
+    // given identical measured tables).
+    run_prop("fit_deterministic", 100, |g| {
+        let seed = g.next_u64();
+        let samples_from = |seed: u64| -> Vec<(SegmentFeatures, f64)> {
+            let mut g = Gen::new(seed);
+            let n = g.usize_in(4, 12);
+            (0..n)
+                .map(|i| {
+                    let f = SegmentFeatures {
+                        segment: Segment {
+                            start: 0,
+                            len: 1 + i % 5,
+                        },
+                        gmem_per_occ: g.f64_in(1.0e5, 1.0e9),
+                        shmem_per_occ: g.f64_in(0.0, 1.0e8),
+                        flops: g.f64_in(1.0e4, 1.0e8),
+                    };
+                    let t = g.f64_in(1.0e-6, 1.0e-2);
+                    (f, t)
+                })
+                .collect()
+        };
+        match (
+            fit_constants(&samples_from(seed)),
+            fit_constants(&samples_from(seed)),
+        ) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.gmem_bw.to_bits(), b.gmem_bw.to_bits());
+                assert_eq!(
+                    a.shmem_speedup.to_bits(),
+                    b.shmem_speedup.to_bits()
+                );
+                assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+                assert_eq!(
+                    a.launch_overhead.to_bits(),
+                    b.launch_overhead.to_bits()
+                );
+            }
+            (None, None) => {}
+            _ => panic!("equal-seed fits disagreed on feasibility"),
+        }
     });
 }
 
