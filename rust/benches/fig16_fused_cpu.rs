@@ -24,10 +24,13 @@
 //! PR-6 ones (`pipeline` per cell, `speedup_derived`), the
 //! `faults_overhead` ratio (zero-rate `FaultyExec` wrapper vs the bare
 //! fused pass — the fault-injection layer must cost ~nothing when
-//! disarmed), and this PR's `speedup_calibrated` (the measured-optimal
-//! plan vs the static-table plan on one shared measured table; fitted
-//! device constants land in the `BENCH_calibration.json` sidecar) are
-//! additions only. See `docs/COST_MODEL.md` for how to read them.
+//! disarmed), `speedup_calibrated` (the measured-optimal plan vs the
+//! static-table plan on one shared measured table; fitted device
+//! constants land in the `BENCH_calibration.json` sidecar), and this
+//! PR's `fleet` record (past-deadline sheds under static DRR vs
+//! least-laxity lane scheduling through the fleet front; CI gates
+//! `laxity_shed <= drr_shed`) are additions only. See
+//! `docs/COST_MODEL.md` for how to read them.
 //!
 //! Headline numbers:
 //! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
@@ -54,16 +57,18 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use kfuse::bench_util::{header, row, time_fn};
-use kfuse::config::FusionMode;
+use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::{ExecutionPlan, JobId};
+use kfuse::engine::JobOptions;
 use kfuse::exec::{
     BufferPool, DerivedCpu, Executor, FusedCpu, Isa, StagedCpu,
     StagedInterp, TwoFusedCpu,
 };
+use kfuse::fleet::{Fleet, Placement};
 use kfuse::fusion::calibrate::{
     candidate_partitions, fit_constants, partition_cost, segment_features,
     select_measured, FittedConstants, SegmentFeatures, SegmentTable,
@@ -460,6 +465,95 @@ fn main() {
         });
     }
 
+    // Fleet arm: the deadline-laxity scheduling win, measured end to
+    // end through the fleet front on a fixed seeded workload (1 shard,
+    // 1 worker, 8 deadline-free background lanes + 1 lane whose
+    // deadline is 4x its solo wall). Static DRR splits pops evenly and
+    // sheds most of the deadline lane's boxes; least-laxity-first
+    // schedules it ahead of the infinite-laxity lanes. Report-only
+    // here (tests/fleet_soak.rs asserts strict inequality); CI gates
+    // laxity_shed <= drr_shed from the JSON cell.
+    let (fleet_solo_ms, fleet_deadline_ms, drr_shed, laxity_shed) = {
+        let fl_cfg = |policy: QueuePolicy| RunConfig {
+            frame_size: 64,
+            frames: 64, // 16 spatial boxes x 8 windows = 128 per job
+            mode: FusionMode::Full,
+            box_dims: BoxDims::new(16, 16, 8),
+            workers: 1,
+            markers: 1,
+            backend: Backend::Cpu,
+            queue_policy: policy,
+            shards: 1,
+            ..RunConfig::default()
+        };
+        let base = fl_cfg(QueuePolicy::DeficitWeighted);
+        let fclip =
+            Arc::new(kfuse::coordinator::synth_clip(&base, 7).0);
+        let probe = Fleet::from_config(base).unwrap();
+        let solo_job = || {
+            probe
+                .submit_batch(
+                    fclip.clone(),
+                    Placement::default(),
+                    JobOptions::default(),
+                )
+                .unwrap()
+                .wait()
+                .unwrap();
+        };
+        solo_job(); // warm
+        let t0 = Instant::now();
+        solo_job();
+        let solo = t0.elapsed();
+        probe.shutdown().unwrap();
+        let deadline = solo * 4 + Duration::from_millis(2);
+        let shed = |policy: QueuePolicy| -> u64 {
+            let fleet = Fleet::from_config(fl_cfg(policy)).unwrap();
+            fleet
+                .submit_batch(
+                    fclip.clone(),
+                    Placement::tenant("warmup"),
+                    JobOptions::default(),
+                )
+                .unwrap()
+                .wait()
+                .unwrap();
+            let background: Vec<_> = (0..8)
+                .map(|_| {
+                    fleet
+                        .submit_batch(
+                            fclip.clone(),
+                            Placement::tenant("background"),
+                            JobOptions::default(),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            let hot = fleet
+                .submit_batch(
+                    fclip.clone(),
+                    Placement::tenant("deadline"),
+                    JobOptions {
+                        deadline: Some(deadline),
+                        ..JobOptions::default()
+                    },
+                )
+                .unwrap();
+            let report = hot.wait().unwrap();
+            for h in background {
+                h.wait().unwrap();
+            }
+            fleet.shutdown().unwrap();
+            report.metrics.deadline_exceeded
+        };
+        (
+            solo.as_secs_f64() * 1e3,
+            deadline.as_secs_f64() * 1e3,
+            shed(QueuePolicy::DeficitWeighted),
+            shed(QueuePolicy::LeastLaxity),
+        )
+    };
+
     header(
         "Fig 16 (measured, this host)",
         "CPU executor matrix: staged vs two-fused vs fused vs derived \
@@ -605,6 +699,11 @@ fn main() {
          table): {speedup_calibrated:.2}x (>= 1.0 by DP construction; \
          CI-gated)"
     );
+    println!(
+        "fleet deadline sheds (solo {fleet_solo_ms:.1} ms, deadline \
+         {fleet_deadline_ms:.1} ms): drr {drr_shed}, laxity \
+         {laxity_shed} (laxity <= drr CI-gated)"
+    );
 
     let cell_json: Vec<String> = cells
         .iter()
@@ -636,7 +735,11 @@ fn main() {
          \"speedup_anomaly\": {speedup_anomaly:.3},\n  \
          \"speedup_simd\": {speedup_simd:.3},\n  \
          \"faults_overhead\": {faults_overhead:.3},\n  \
-         \"speedup_calibrated\": {speedup_calibrated:.3}\n}}\n",
+         \"speedup_calibrated\": {speedup_calibrated:.3},\n  \
+         \"fleet\": {{\"solo_ms\": {fleet_solo_ms:.2}, \
+         \"deadline_ms\": {fleet_deadline_ms:.2}, \
+         \"drr_shed\": {drr_shed}, \
+         \"laxity_shed\": {laxity_shed}}}\n}}\n",
         bx.x,
         bx.y,
         bx.t,

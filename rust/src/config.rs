@@ -100,6 +100,15 @@ pub enum QueuePolicy {
     /// a burst. Latency-sensitive serve jobs carry a higher weight than
     /// batch jobs, so they drain faster under contention.
     DeficitWeighted,
+    /// Least-laxity-first: each pop serves the lane whose job is closest
+    /// to missing its deadline — laxity = (deadline − now) − backlog ×
+    /// estimated service time, with deadline-free lanes treated as
+    /// infinitely lax and ties broken in round-robin rotation (so with
+    /// no deadlines anywhere the policy degenerates to `RoundRobin`). A
+    /// starvation guard bounds how long a deadline-free lane can be
+    /// passed over (see
+    /// [`STARVATION_GUARD`](crate::coordinator::mux::STARVATION_GUARD)).
+    LeastLaxity,
 }
 
 impl QueuePolicy {
@@ -108,8 +117,9 @@ impl QueuePolicy {
             "fifo" => Ok(QueuePolicy::Fifo),
             "rr" | "round-robin" => Ok(QueuePolicy::RoundRobin),
             "drr" | "deficit" => Ok(QueuePolicy::DeficitWeighted),
+            "laxity" | "llf" => Ok(QueuePolicy::LeastLaxity),
             _ => Err(Error::Config(format!(
-                "unknown queue policy '{s}' (expected fifo|rr|drr)"
+                "unknown queue policy '{s}' (expected fifo|rr|drr|laxity)"
             ))),
         }
     }
@@ -119,7 +129,49 @@ impl QueuePolicy {
             QueuePolicy::Fifo => "fifo",
             QueuePolicy::RoundRobin => "rr",
             QueuePolicy::DeficitWeighted => "drr",
+            QueuePolicy::LeastLaxity => "laxity",
         }
+    }
+}
+
+/// Per-kind DRR quanta: boxes a job's lane may drain per rotation under
+/// [`QueuePolicy::DeficitWeighted`]. The defaults reproduce the
+/// historical hardcoded weights (serve jobs are latency-sensitive and
+/// get 4× a batch job's share; ROI jobs sit in between); lift them per
+/// engine via [`RunConfig::drr_weights`] or
+/// [`EngineBuilder::drr_weights`](crate::engine::EngineBuilder::drr_weights).
+/// Every weight must be ≥ 1 (a zero quantum would never grant credits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrrWeights {
+    /// Quantum for lossless whole-clip batch jobs.
+    pub batch: u64,
+    /// Quantum for tracker-driven ROI jobs.
+    pub roi: u64,
+    /// Quantum for paced streaming serve jobs.
+    pub serve: u64,
+}
+
+impl Default for DrrWeights {
+    fn default() -> Self {
+        DrrWeights {
+            batch: 1,
+            roi: 2,
+            serve: 4,
+        }
+    }
+}
+
+impl DrrWeights {
+    /// Reject zero quanta (the deficit counter would never refill).
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.roi == 0 || self.serve == 0 {
+            return Err(Error::Config(format!(
+                "drr weights must all be >= 1, got batch={} roi={} \
+                 serve={}",
+                self.batch, self.roi, self.serve
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -177,6 +229,14 @@ pub struct RunConfig {
     /// Fairness policy of the multiplexing ready queue — how worker pops
     /// arbitrate between concurrently admitted jobs.
     pub queue_policy: QueuePolicy,
+    /// Per-kind lane quanta for `QueuePolicy::DeficitWeighted` (how many
+    /// boxes each job kind's lane may drain per rotation). Defaults to
+    /// the historical serve=4 / roi=2 / batch=1 split.
+    pub drr_weights: DrrWeights,
+    /// Engines a [`Fleet`](crate::fleet::Fleet) front splits submissions
+    /// across (CLI `--shards`). A plain `Engine` ignores it; the CLI
+    /// routes through a fleet when it is > 1. Must be ≥ 1.
+    pub shards: usize,
     /// Frames a serve job's async ingest thread may stage ahead of the
     /// admission loop. Decouples real-time frame pacing from box
     /// admission: a transient worker stall is absorbed by up to this many
@@ -233,6 +293,8 @@ impl Default for RunConfig {
             markers: 4,
             queue_depth: 64,
             queue_policy: QueuePolicy::RoundRobin,
+            drr_weights: DrrWeights::default(),
+            shards: 1,
             ingest_depth: 16,
             device: "k20".into(),
             artifacts_dir: "artifacts".into(),
@@ -269,6 +331,13 @@ impl RunConfig {
         }
         if self.workers == 0 || self.queue_depth == 0 {
             return Err(Error::Config("workers/queue_depth must be > 0".into()));
+        }
+        self.drr_weights.validate()?;
+        if self.shards == 0 {
+            return Err(Error::Config(
+                "shards must be >= 1 (engines behind the fleet front)"
+                    .into(),
+            ));
         }
         if self.intra_box_threads == 0 {
             return Err(Error::Config(
@@ -368,6 +437,56 @@ mod tests {
         );
         assert!(QueuePolicy::parse("lifo").is_err());
         assert_eq!(QueuePolicy::DeficitWeighted.name(), "drr");
+        assert_eq!(
+            QueuePolicy::parse("laxity").unwrap(),
+            QueuePolicy::LeastLaxity
+        );
+        assert_eq!(
+            QueuePolicy::parse("llf").unwrap(),
+            QueuePolicy::LeastLaxity
+        );
+        assert_eq!(QueuePolicy::LeastLaxity.name(), "laxity");
+    }
+
+    #[test]
+    fn drr_weights_default_matches_historical_split_and_validates() {
+        let w = DrrWeights::default();
+        assert_eq!((w.batch, w.roi, w.serve), (1, 2, 4));
+        w.validate().unwrap();
+        for bad in [
+            DrrWeights { batch: 0, ..w },
+            DrrWeights { roi: 0, ..w },
+            DrrWeights { serve: 0, ..w },
+        ] {
+            let cfg = RunConfig {
+                drr_weights: bad,
+                ..RunConfig::default()
+            };
+            assert!(cfg.validate().is_err(), "zero quantum rejected");
+        }
+        let cfg = RunConfig {
+            drr_weights: DrrWeights {
+                batch: 3,
+                roi: 1,
+                serve: 9,
+            },
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let cfg = RunConfig {
+            shards: 0,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig {
+            shards: 3,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

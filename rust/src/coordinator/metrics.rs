@@ -61,6 +61,74 @@ pub struct BoxDisposition {
     pub input_hash: Option<u64>,
 }
 
+/// Number of log2 buckets in a [`WaitHist`]: bucket 0 holds 0 µs waits
+/// and bucket `i ≥ 1` holds waits in `[2^(i−1), 2^i)` µs, so the top
+/// bucket starts at ~67 s — far past any sane queue wait.
+pub const WAIT_BUCKETS: usize = 28;
+
+/// Mergeable log2 histogram of per-box queue waits in microseconds.
+///
+/// Exact percentiles need every sample; a fleet aggregating tenants
+/// across engines needs something additive instead. Log2 buckets keep
+/// merging exact (bucket-wise sums) at the cost of quantile resolution:
+/// [`WaitHist::quantile_us`] returns the upper bound of the bucket the
+/// rank lands in, a within-2× overestimate.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WaitHist {
+    buckets: [u64; WAIT_BUCKETS],
+}
+
+impl WaitHist {
+    fn bucket(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(WAIT_BUCKETS - 1)
+        }
+    }
+
+    /// Count one queue wait of `us` microseconds.
+    pub fn observe_us(&mut self, us: u64) {
+        self.buckets[Self::bucket(us)] += 1;
+    }
+
+    /// Bucket-wise sum: the aggregation primitive the fleet stats rely
+    /// on (merged histograms partition exactly, like plain counters).
+    pub fn merge(&mut self, other: &WaitHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Samples observed.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Quantile `q` in [0, 1] as the upper bound of the bucket the rank
+    /// lands in (0 when no samples). Uses the same nearest-rank
+    /// convention as the exact percentiles in [`Metrics::snapshot`].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (((total - 1) as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        (1u64 << (WAIT_BUCKETS - 1)) - 1
+    }
+}
+
 /// Shared counters (cheap on the hot path).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -91,6 +159,9 @@ pub struct Metrics {
     /// picked them up, nanos (fairness diagnostic: under multiplexing,
     /// a job's queue wait is what the scheduling policy controls).
     pub queue_wait_nanos: AtomicU64,
+    /// Log2 histogram of per-box queue waits (the mergeable counterpart
+    /// of `queue_wait_nanos`, feeding fleet-level p50/p99 aggregation).
+    queue_wait_hist: Mutex<WaitHist>,
     /// Per-box latencies, microseconds (mutex: amortized by batching).
     latencies_us: Mutex<Vec<u64>>,
     /// Cumulative wall nanos per executed partition (CPU backends report
@@ -117,6 +188,10 @@ impl Metrics {
         self.boxes.fetch_add(1, Ordering::Relaxed);
         self.queue_wait_nanos
             .fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
+        self.queue_wait_hist
+            .lock()
+            .unwrap()
+            .observe_us(queue_wait.as_micros() as u64);
         self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
         self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
         self.dispatches.fetch_add(dispatches, Ordering::Relaxed);
@@ -162,6 +237,7 @@ impl Metrics {
             retries: self.retries.load(Ordering::Relaxed),
             retried_ok: self.retried_ok.load(Ordering::Relaxed),
             queue_wait_nanos: self.queue_wait_nanos.load(Ordering::Relaxed),
+            queue_wait_hist: self.queue_wait_hist.lock().unwrap().clone(),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -194,6 +270,8 @@ pub struct MetricsReport {
     pub retried_ok: u64,
     /// Cumulative ready-queue wait across the job's boxes, nanos.
     pub queue_wait_nanos: u64,
+    /// Mergeable per-box queue-wait histogram (fleet aggregation input).
+    pub queue_wait_hist: WaitHist,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -287,6 +365,37 @@ mod tests {
         assert_eq!(r.fps, 1600.0);
         assert_eq!(r.stage_nanos, vec![10, 7]);
         assert_eq!(r.queue_wait_nanos, 100_000);
+        assert_eq!(r.queue_wait_hist.total(), 2);
+    }
+
+    #[test]
+    fn wait_hist_buckets_merge_and_quantiles() {
+        let mut h = WaitHist::default();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_us(0.99), 0);
+        // 0 lands in bucket 0 (exact); 1 in [1,2); 3 in [2,4).
+        h.observe_us(0);
+        assert_eq!(h.quantile_us(0.0), 0);
+        for _ in 0..99 {
+            h.observe_us(1);
+        }
+        // Rank 50 of 100 samples lands in the 1 µs bucket: the reported
+        // quantile is that bucket's upper bound.
+        assert_eq!(h.quantile_us(0.50), 1);
+        let mut spike = WaitHist::default();
+        spike.observe_us(3000); // bucket [2048, 4096)
+        h.merge(&spike);
+        assert_eq!(h.total(), 101);
+        assert_eq!(h.quantile_us(1.0), 4095, "upper bound of its bucket");
+        // Merging is exact: totals add bucket-wise.
+        let mut sum = WaitHist::default();
+        sum.merge(&h);
+        sum.merge(&h);
+        assert_eq!(sum.total(), 202);
+        // Quantiles are within-2x upper bounds of the true value.
+        let mut big = WaitHist::default();
+        big.observe_us(u64::MAX);
+        assert_eq!(big.quantile_us(1.0), (1u64 << (WAIT_BUCKETS - 1)) - 1);
     }
 
     #[test]

@@ -45,7 +45,9 @@ pub mod scheduler;
 
 pub use crate::engine::RunReport;
 pub use faults::{FaultPlan, FaultSite};
-pub use metrics::{BoxDisposition, Disposition, Metrics, MetricsReport};
+pub use metrics::{
+    BoxDisposition, Disposition, Metrics, MetricsReport, WaitHist,
+};
 pub use mux::{JobId, MuxQueue};
 pub use plan::ExecutionPlan;
 pub use router::ResultRouter;

@@ -3,12 +3,28 @@
 //! The engine admits jobs concurrently; each job's boxes go into its own
 //! bounded lane, and the worker pool pops across lanes under a
 //! [`QueuePolicy`](crate::config::QueuePolicy) — strict arrival order
-//! (`Fifo`), one box per lane in rotation (`RoundRobin`), or
-//! deficit-weighted bursts (`DeficitWeighted`). This is the Kernelet-style
+//! (`Fifo`), one box per lane in rotation (`RoundRobin`),
+//! deficit-weighted bursts (`DeficitWeighted`), or deadline-driven
+//! least-laxity-first (`LeastLaxity`). This is the Kernelet-style
 //! slice interleaving that keeps a warm pool saturated with work from
 //! every active job instead of serializing whole jobs: a long batch job
 //! can no longer starve a latency-sensitive serve job, because fairness is
 //! enforced at the lane boundary on every pop.
+//!
+//! `LeastLaxity` ranks lanes by slack to their job's deadline:
+//!
+//! ```text
+//! laxity(lane) = (deadline − now) − backlog × service_estimate
+//! ```
+//!
+//! where `service_estimate` is an EWMA of observed per-box service time
+//! fed by the workers ([`MuxQueue::observe_service`]). Lanes without a
+//! deadline rank as infinitely lax, so with no deadlines anywhere the
+//! policy degenerates to round robin (ties rotate from the cursor). A
+//! lane passed over [`STARVATION_GUARD`] consecutive pops while holding
+//! work is served unconditionally, which bounds how long an urgent lane
+//! can monopolize the pool: any non-empty lane is served at least once
+//! every `STARVATION_GUARD + lanes` pops.
 //!
 //! Isolation properties the engine relies on:
 //!
@@ -23,10 +39,19 @@
 //!   [`MuxQueue::close`] ends the whole queue for engine shutdown.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::backpressure::Policy;
 use crate::config::QueuePolicy;
+
+/// Consecutive pops a non-empty lane may be passed over under
+/// `QueuePolicy::LeastLaxity` before it is served unconditionally. The
+/// guard bounds priority inversion for deadline-free lanes: a lane with
+/// queued work is served at least once every `STARVATION_GUARD + lanes`
+/// pops regardless of how urgent the other lanes are.
+pub const STARVATION_GUARD: u64 = 16;
 
 /// Identity of one engine job. Boxes are tagged with it on admission and
 /// results are routed back by it; lanes, drop accounting, and the
@@ -47,8 +72,31 @@ struct Lane<T> {
     weight: u64,
     /// DRR credits left in the current burst.
     deficit: u64,
+    /// Absolute deadline of the owning job (`LeastLaxity` ranking input;
+    /// `None` = infinitely lax).
+    deadline: Option<Instant>,
+    /// Consecutive `LeastLaxity` pops that served another lane while this
+    /// one held work (starvation-guard state).
+    skipped: u64,
     /// `(arrival seq, item)` — seq gives Fifo its global order.
     items: VecDeque<(u64, T)>,
+}
+
+impl<T> Lane<T> {
+    /// Slack to the lane's deadline in nanoseconds: time remaining minus
+    /// the estimated time to drain the lane's backlog. Negative = already
+    /// behind; `i128::MAX` = no deadline.
+    fn laxity(&self, now: Instant, svc_est_ns: u64) -> i128 {
+        let Some(deadline) = self.deadline else {
+            return i128::MAX;
+        };
+        let remaining = if deadline > now {
+            deadline.duration_since(now).as_nanos() as i128
+        } else {
+            -(now.duration_since(deadline).as_nanos() as i128)
+        };
+        remaining - self.items.len() as i128 * svc_est_ns as i128
+    }
 }
 
 struct MuxState<T> {
@@ -66,6 +114,10 @@ struct Inner<T> {
     cv_push: Condvar,
     /// Workers blocked on an all-empty queue.
     cv_pop: Condvar,
+    /// EWMA of observed per-box service time in nanoseconds (the backlog
+    /// cost term of the laxity ranking). 0 = no observation yet, which
+    /// makes laxity collapse to raw time-to-deadline.
+    svc_est_ns: AtomicU64,
 }
 
 /// Bounded multi-lane MPMC queue multiplexing concurrent jobs onto one
@@ -100,6 +152,7 @@ impl<T> MuxQueue<T> {
                 }),
                 cv_push: Condvar::new(),
                 cv_pop: Condvar::new(),
+                svc_est_ns: AtomicU64::new(0),
             }),
             depth,
             policy,
@@ -107,16 +160,38 @@ impl<T> MuxQueue<T> {
     }
 
     /// Open a lane for a job. `weight` is the DRR quantum (ignored by
-    /// Fifo/RoundRobin); higher = more boxes per rotation.
-    pub fn register(&self, job: JobId, weight: u64) {
+    /// Fifo/RoundRobin/LeastLaxity); higher = more boxes per rotation.
+    /// `deadline` is the job's absolute deadline, the `LeastLaxity`
+    /// ranking input (ignored by the other policies; `None` ranks the
+    /// lane as infinitely lax).
+    pub fn register(
+        &self,
+        job: JobId,
+        weight: u64,
+        deadline: Option<Instant>,
+    ) {
         let mut st = self.inner.state.lock().unwrap();
         debug_assert!(st.lanes.iter().all(|l| l.job != job));
         st.lanes.push(Lane {
             job,
             weight: weight.max(1),
             deficit: 0,
+            deadline,
+            skipped: 0,
             items: VecDeque::new(),
         });
+    }
+
+    /// Feed one observed per-box service time into the laxity ranking's
+    /// EWMA (α = 1/8). Workers call this for every successfully executed
+    /// box; the estimate is shared across lanes (boxes are
+    /// geometry-uniform within an engine, so one estimate serves all
+    /// jobs). Lock-free — racing updates lose at most one sample.
+    pub fn observe_service(&self, service: Duration) {
+        let ns = (service.as_nanos() as u64).max(1);
+        let old = self.inner.svc_est_ns.load(Ordering::Relaxed);
+        let new = if old == 0 { ns } else { old - old / 8 + ns / 8 };
+        self.inner.svc_est_ns.store(new, Ordering::Relaxed);
     }
 
     /// Retire a job's lane, discarding anything still queued in it.
@@ -171,8 +246,13 @@ impl<T> MuxQueue<T> {
     }
 
     /// Select the lane the next pop is served from, per policy. Caller
-    /// guarantees at least one lane is non-empty.
-    fn select(st: &mut MuxState<T>, policy: QueuePolicy) -> usize {
+    /// guarantees at least one lane is non-empty. `svc_est_ns` is the
+    /// per-box service estimate consumed by the `LeastLaxity` ranking.
+    fn select(
+        st: &mut MuxState<T>,
+        policy: QueuePolicy,
+        svc_est_ns: u64,
+    ) -> usize {
         let n = st.lanes.len();
         match policy {
             QueuePolicy::Fifo => {
@@ -222,6 +302,45 @@ impl<T> MuxQueue<T> {
                 st.cursor = if lane.deficit == 0 { (i + 1) % n } else { i };
                 i
             }
+            QueuePolicy::LeastLaxity => {
+                // Starvation guard first: any non-empty lane passed over
+                // STARVATION_GUARD times is served now, most-starved
+                // first (ties: highest index, per max_by_key).
+                let starved = (0..n)
+                    .filter(|&i| {
+                        !st.lanes[i].items.is_empty()
+                            && st.lanes[i].skipped >= STARVATION_GUARD
+                    })
+                    .max_by_key(|&i| st.lanes[i].skipped);
+                let i = starved.unwrap_or_else(|| {
+                    // Minimum laxity among non-empty lanes; ties are
+                    // broken round-robin from the cursor (strict `<`
+                    // keeps the first candidate in rotation order), so
+                    // an all-deadline-free queue behaves like RoundRobin.
+                    let now = Instant::now();
+                    let mut best: Option<(i128, usize)> = None;
+                    for k in 0..n {
+                        let i = (st.cursor + k) % n;
+                        let lane = &st.lanes[i];
+                        if lane.items.is_empty() {
+                            continue;
+                        }
+                        let lax = lane.laxity(now, svc_est_ns);
+                        if best.is_none_or(|(b, _)| lax < b) {
+                            best = Some((lax, i));
+                        }
+                    }
+                    best.unwrap().1
+                });
+                for (j, lane) in st.lanes.iter_mut().enumerate() {
+                    if j != i && !lane.items.is_empty() {
+                        lane.skipped += 1;
+                    }
+                }
+                st.lanes[i].skipped = 0;
+                st.cursor = (i + 1) % n;
+                i
+            }
         }
     }
 
@@ -231,7 +350,8 @@ impl<T> MuxQueue<T> {
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if st.lanes.iter().any(|l| !l.items.is_empty()) {
-                let i = Self::select(&mut st, self.policy);
+                let est = self.inner.svc_est_ns.load(Ordering::Relaxed);
+                let i = Self::select(&mut st, self.policy, est);
                 let (_, item) = st.lanes[i].items.pop_front().unwrap();
                 // notify_all: waiters are per-lane; waking just one could
                 // pick a producer whose lane is still full (lost wakeup).
@@ -275,8 +395,8 @@ mod tests {
 
     fn two_lane(policy: QueuePolicy, depth: usize) -> MuxQueue<u64> {
         let q = MuxQueue::new(depth, policy);
-        q.register(A, 1);
-        q.register(B, 4);
+        q.register(A, 1, None);
+        q.register(B, 4, None);
         q
     }
 
@@ -319,6 +439,76 @@ mod tests {
             got,
             vec![0, 100, 101, 102, 103, 1, 104, 105, 106, 107]
         );
+    }
+
+    #[test]
+    fn laxity_serves_the_tightest_deadline_first() {
+        let q: MuxQueue<u64> = MuxQueue::new(8, QueuePolicy::LeastLaxity);
+        let now = Instant::now();
+        // A has no deadline (infinitely lax); B is due in 1 ms.
+        q.register(A, 1, None);
+        q.register(B, 1, Some(now + Duration::from_millis(1)));
+        for v in 0..4 {
+            q.push(A, v, Policy::Block);
+        }
+        for v in 100..104 {
+            q.push(B, v, Policy::Block);
+        }
+        let got: Vec<u64> = (0..8).map(|_| q.pop().unwrap()).collect();
+        // B drains completely before A sees a single pop (its skip count
+        // never reaches the guard in 4 pops).
+        assert_eq!(got, vec![100, 101, 102, 103, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn laxity_without_deadlines_degenerates_to_round_robin() {
+        let q: MuxQueue<u64> = MuxQueue::new(8, QueuePolicy::LeastLaxity);
+        q.register(A, 1, None);
+        q.register(B, 1, None);
+        for v in 0..4 {
+            q.push(A, v, Policy::Block);
+        }
+        q.push(B, 100, Policy::Block);
+        q.push(B, 101, Policy::Block);
+        let got: Vec<u64> = (0..6).map(|_| q.pop().unwrap()).collect();
+        // All lanes tie at infinite laxity; ties rotate from the cursor,
+        // i.e. exactly the RoundRobin interleave.
+        assert_eq!(got, vec![0, 100, 1, 101, 2, 3]);
+    }
+
+    #[test]
+    fn starvation_guard_bounds_how_long_an_urgent_lane_dominates() {
+        let q: MuxQueue<u64> = MuxQueue::new(64, QueuePolicy::LeastLaxity);
+        let now = Instant::now();
+        // A is perpetually urgent; B has no deadline at all.
+        q.register(A, 1, Some(now));
+        q.register(B, 1, None);
+        for v in 0..40 {
+            q.push(A, v, Policy::Block);
+        }
+        q.push(B, 999, Policy::Block);
+        let got: Vec<u64> = (0..41).map(|_| q.pop().unwrap()).collect();
+        // B waits while its skip count climbs; pop k serves A and leaves
+        // B.skipped == k + 1, so the guard trips exactly at pop index
+        // STARVATION_GUARD.
+        let b_at = got.iter().position(|&v| v == 999).unwrap();
+        assert_eq!(b_at, STARVATION_GUARD as usize);
+    }
+
+    #[test]
+    fn observe_service_feeds_the_backlog_term() {
+        let q: MuxQueue<u64> = MuxQueue::new(64, QueuePolicy::LeastLaxity);
+        let now = Instant::now();
+        // Same deadline, different backlogs: with a service estimate in
+        // play the deeper lane has less slack and must win.
+        q.register(A, 1, Some(now + Duration::from_secs(3600)));
+        q.register(B, 1, Some(now + Duration::from_secs(3600)));
+        q.observe_service(Duration::from_millis(10));
+        q.push(A, 1, Policy::Block);
+        for v in 100..110 {
+            q.push(B, v, Policy::Block);
+        }
+        assert_eq!(q.pop(), Some(100), "deeper lane has the least laxity");
     }
 
     #[test]
@@ -382,8 +572,8 @@ mod tests {
     fn mpmc_all_items_delivered_once_across_jobs() {
         let q: MuxQueue<u64> =
             MuxQueue::new(8, QueuePolicy::RoundRobin);
-        q.register(A, 1);
-        q.register(B, 1);
+        q.register(A, 1, None);
+        q.register(B, 1, None);
         let consumers: Vec<_> = (0..4)
             .map(|_| {
                 let q = q.clone();

@@ -517,6 +517,15 @@ pub fn spawn_workers(
                             Err(e) => Armed::Lost(e.to_string()),
                         };
                     }
+                    // Feed the queue's laxity service-time estimate from
+                    // genuine completions only (sheds and faults would
+                    // drag the EWMA toward zero and starve the backlog
+                    // term).
+                    if let BoxOutcome::Done(r) = &outcome {
+                        queue.observe_service(
+                            r.latency.saturating_sub(r.queue_wait),
+                        );
+                    }
                     let _ = router.route(WorkerEvent { job_id, outcome });
                 }
                 Ok(())
@@ -571,7 +580,7 @@ mod tests {
         ));
         let queue: MuxQueue<BoxJob> =
             MuxQueue::new(16, QueuePolicy::RoundRobin);
-        queue.register(JobId(1), 1);
+        queue.register(JobId(1), 1, None);
         let router = Arc::new(ResultRouter::new());
         let rx = router.register(JobId(1));
         let pool = BufferPool::shared();

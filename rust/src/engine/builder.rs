@@ -8,7 +8,7 @@
 
 use super::session::Engine;
 use crate::config::{
-    Backend, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
+    Backend, DrrWeights, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
 };
 use crate::fusion::halo::BoxDims;
 use crate::Result;
@@ -115,6 +115,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Per-kind lane weights for `QueuePolicy::DeficitWeighted` (see
+    /// [`DrrWeights`]). Default keeps the historical serve-4 / roi-2 /
+    /// batch-1 split; every weight must be ≥ 1 (`build()` validates).
+    pub fn drr_weights(mut self, weights: DrrWeights) -> Self {
+        self.cfg.drr_weights = weights;
+        self
+    }
+
+    /// Engines a [`Fleet`](crate::fleet::Fleet) front splits submissions
+    /// across (see [`RunConfig::shards`]). A plain `Engine` ignores it.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
     /// Frames a serve job's pacer may stage ahead of box admission (the
     /// async-ingest buffer; see [`RunConfig::ingest_depth`]).
     pub fn ingest_depth(mut self, depth: usize) -> Self {
@@ -211,6 +226,12 @@ mod tests {
             .markers(7)
             .queue_depth(9)
             .queue_policy(QueuePolicy::DeficitWeighted)
+            .drr_weights(DrrWeights {
+                batch: 2,
+                roi: 3,
+                serve: 5,
+            })
+            .shards(2)
             .ingest_depth(5)
             .device("gtx750ti")
             .frame_size(64)
@@ -232,6 +253,15 @@ mod tests {
         assert_eq!(cfg.markers, 7);
         assert_eq!(cfg.queue_depth, 9);
         assert_eq!(cfg.queue_policy, QueuePolicy::DeficitWeighted);
+        assert_eq!(
+            cfg.drr_weights,
+            DrrWeights {
+                batch: 2,
+                roi: 3,
+                serve: 5
+            }
+        );
+        assert_eq!(cfg.shards, 2);
         assert_eq!(cfg.ingest_depth, 5);
         assert_eq!(cfg.device, "gtx750ti");
         assert_eq!(cfg.frame_size, 64);

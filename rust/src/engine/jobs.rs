@@ -42,6 +42,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::session::{Engine, EngineCore};
+use crate::config::DrrWeights;
 use crate::coordinator::backpressure::Policy;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::faults::{FaultPlan, FaultSite};
@@ -79,13 +80,13 @@ impl JobKind {
     }
 
     /// DRR quantum: boxes a job's lane may drain per rotation under
-    /// `QueuePolicy::DeficitWeighted`. Serve jobs are latency-sensitive
-    /// and get 4× a batch job's share; ROI jobs sit in between.
-    pub(crate) fn weight(&self) -> u64 {
+    /// `QueuePolicy::DeficitWeighted`, looked up from the engine's
+    /// configured [`DrrWeights`] (default: serve 4× / roi 2× / batch 1×).
+    pub(crate) fn weight(&self, w: DrrWeights) -> u64 {
         match self {
-            JobKind::Batch => 1,
-            JobKind::Roi => 2,
-            JobKind::Serve => 4,
+            JobKind::Batch => w.batch,
+            JobKind::Roi => w.roi,
+            JobKind::Serve => w.serve,
         }
     }
 }
@@ -93,10 +94,12 @@ impl JobKind {
 /// Per-job fault policy, passed at submission (`submit_*_with`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobOptions {
-    /// Soft completion budget, measured from job start. Past it, serve
+    /// Soft completion budget, measured from submission. Past it, serve
     /// admission sheds boxes before staging and workers shed queued
     /// boxes at pop; both resolve as `Disposition::DeadlineExceeded`.
-    /// `None` (default) never sheds.
+    /// The absolute deadline also tags the job's queue lane, which is
+    /// what `QueuePolicy::LeastLaxity` schedules on. `None` (default)
+    /// never sheds.
     pub deadline: Option<Duration>,
     /// Retry budget per box for TRANSIENT failures (executor errors,
     /// injected faults). Panics are never retried — the input is
@@ -205,7 +208,9 @@ impl ServeOpts {
 /// partition `log`.
 struct Ledger {
     opts: JobOptions,
-    /// Absolute deadline (`job start + opts.deadline`).
+    /// Absolute deadline (`submission + opts.deadline`) — the SAME
+    /// instant the job's queue lane was registered with, so shedding and
+    /// laxity scheduling agree on when the job is late.
     deadline: Option<Instant>,
     /// Admission policy for retry requeues (the job's own policy, so a
     /// retry competes like any other of the job's boxes).
@@ -220,9 +225,13 @@ struct Ledger {
 }
 
 impl Ledger {
-    fn new(opts: JobOptions, admission: Policy, started: Instant) -> Ledger {
+    fn new(
+        opts: JobOptions,
+        admission: Policy,
+        deadline: Option<Instant>,
+    ) -> Ledger {
         Ledger {
-            deadline: opts.deadline.map(|d| started + d),
+            deadline,
             opts,
             admission,
             log: Vec::new(),
@@ -515,10 +524,14 @@ impl Engine {
         if tasks.is_empty() {
             return Err(Error::Coordinator("no boxes to process".into()));
         }
-        let (id, rx) = core.admit(JobKind::Batch);
+        // Absolute deadline fixed at submission, BEFORE admission: the
+        // queue lane and the job's ledger must share the same instant.
+        let deadline = opts.deadline.map(|d| Instant::now() + d);
+        let (id, rx) = core.admit(JobKind::Batch, deadline);
+        let ledger = Ledger::new(opts, Policy::Block, deadline);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_batch(&core, id, rx, clip, tasks, truth, opts)
+            run_batch(&core, id, rx, clip, tasks, truth, ledger)
         });
         Ok(JobHandle {
             id,
@@ -580,10 +593,12 @@ impl Engine {
                 opts.fps
             )));
         }
-        let (id, rx) = core.admit(JobKind::Serve);
+        let deadline = jopts.deadline.map(|d| Instant::now() + d);
+        let (id, rx) = core.admit(JobKind::Serve, deadline);
+        let ledger = Ledger::new(jopts, opts.policy, deadline);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_serve(&core, id, rx, clip, opts, jopts)
+            run_serve(&core, id, rx, clip, opts, ledger)
         });
         Ok(JobHandle {
             id,
@@ -621,10 +636,12 @@ impl Engine {
     ) -> Result<JobHandle<(RunReport, f64)>> {
         let core = self.core.clone();
         core.check_clip(&clip)?;
-        let (id, rx) = core.admit(JobKind::Roi);
+        let deadline = opts.deadline.map(|d| Instant::now() + d);
+        let (id, rx) = core.admit(JobKind::Roi, deadline);
+        let ledger = Ledger::new(opts, Policy::Block, deadline);
         let thread = std::thread::spawn(move || {
             let _guard = JobGuard { core: &core, id };
-            run_roi(&core, id, rx, clip, opts)
+            run_roi(&core, id, rx, clip, ledger)
         });
         Ok(JobHandle {
             id,
@@ -652,14 +669,13 @@ fn run_batch(
     clip: Arc<Video>,
     tasks: Vec<BoxTask>,
     truth: Option<Vec<Vec<(f64, f64)>>>,
-    opts: JobOptions,
+    mut ledger: Ledger,
 ) -> Result<RunReport> {
     let bx = core.cfg.box_dims;
     let n_tasks = tasks.len();
     let frames_covered = (clip.t / bx.t) * bx.t;
     let metrics = Metrics::new();
     let started = Instant::now();
-    let mut ledger = Ledger::new(opts, Policy::Block, started);
     let deadline = ledger.deadline;
     let faults = core.faults;
     // Async ingest: pre-extract each box's halo'd input and stage it
@@ -873,7 +889,7 @@ fn run_serve(
     rx: Receiver<WorkerEvent>,
     clip: Arc<Video>,
     opts: ServeOpts,
-    jopts: JobOptions,
+    mut ledger: Ledger,
 ) -> Result<MetricsReport> {
     let bx = core.cfg.box_dims;
     let metrics = Metrics::new();
@@ -881,7 +897,6 @@ fn run_serve(
     let spatial = cut_boxes(clip.h, clip.w, bx.t, bx);
     let plane = clip.h * clip.w * 4;
     let started = Instant::now();
-    let mut ledger = Ledger::new(jopts, opts.policy, started);
     let deadline = ledger.deadline;
     let faults = core.faults;
     let frame_interval = Duration::from_secs_f64(1.0 / opts.fps);
@@ -1074,7 +1089,7 @@ fn run_roi(
     id: JobId,
     rx: Receiver<WorkerEvent>,
     clip: Arc<Video>,
-    opts: JobOptions,
+    mut ledger: Ledger,
 ) -> Result<(RunReport, f64)> {
     let bx = core.cfg.box_dims;
     let windows = clip.t / bx.t;
@@ -1083,7 +1098,6 @@ fn run_roi(
     let total_boxes = spatial.len() * windows;
     let metrics = Metrics::new();
     let started = Instant::now();
-    let mut ledger = Ledger::new(opts, Policy::Block, started);
     let deadline = ledger.deadline;
     let faults = core.faults;
 

@@ -22,6 +22,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use super::jobs::JobKind;
 use super::stats::{EngineStats, JobStats};
@@ -103,14 +104,20 @@ pub(crate) struct EngineCore {
 
 impl EngineCore {
     /// Admit a job: allocate its id, open its queue lane (weighted for
-    /// deficit-weighted fairness) and its private result channel, and
-    /// count it active until [`EngineCore::end_job`].
+    /// deficit-weighted fairness, deadline-tagged for least-laxity
+    /// scheduling) and its private result channel, and count it active
+    /// until [`EngineCore::end_job`].
     pub(crate) fn admit(
         &self,
         kind: JobKind,
+        deadline: Option<Instant>,
     ) -> (JobId, Receiver<WorkerEvent>) {
         let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed) + 1);
-        self.queue.register(id, kind.weight());
+        self.queue.register(
+            id,
+            kind.weight(self.cfg.drr_weights),
+            deadline,
+        );
         let rx = self.router.register(id);
         *self.active.lock().unwrap() += 1;
         (id, rx)
@@ -145,6 +152,7 @@ impl EngineCore {
         tot.retries += rep.retries;
         tot.retried_ok += rep.retried_ok;
         tot.queue_wait_nanos += rep.queue_wait_nanos;
+        tot.queue_wait_hist.merge(&rep.queue_wait_hist);
         if tot.partition_nanos.len() < rep.stage_nanos.len() {
             tot.partition_nanos.resize(rep.stage_nanos.len(), 0);
         }
@@ -162,6 +170,7 @@ impl EngineCore {
             retried_ok: rep.retried_ok,
             retries: rep.retries,
             queue_wait_nanos: rep.queue_wait_nanos,
+            queue_wait_hist: rep.queue_wait_hist.clone(),
             partition_nanos: rep.stage_nanos.clone(),
         });
     }
@@ -662,6 +671,21 @@ impl Engine {
     /// Jobs admitted but not yet completed.
     pub fn active_jobs(&self) -> u64 {
         *self.core.active.lock().unwrap()
+    }
+
+    /// Boxes currently staged in the ready queue across all lanes (a
+    /// load signal; together with [`Engine::active_jobs`] it is what the
+    /// fleet front routes on).
+    pub fn queued_boxes(&self) -> usize {
+        self.core.queue.len()
+    }
+
+    /// The engine's plan-cache key — the full planning substrate
+    /// (pipeline, box geometry, planning device, resolved ISA, band
+    /// threads). Two engines with equal keys execute compatible plans,
+    /// which is what fleet routing checks before placing a job.
+    pub fn plan_key(&self) -> PlanKey {
+        self.core.calib.lock().unwrap().key.clone()
     }
 
     /// Orderly teardown: DRAIN every in-flight job to completion (the

@@ -1,5 +1,7 @@
 //! Cumulative, engine-lifetime statistics, with per-job rows.
 
+use crate::coordinator::metrics::WaitHist;
+
 /// Accounting for one completed job, appended to
 /// [`EngineStats::per_job`] in completion order. The per-job rows
 /// partition the session totals: summing a column across rows yields the
@@ -32,6 +34,10 @@ pub struct JobStats {
     /// latency-sensitive job sharing the pool with a backlogged batch
     /// job should see a small value here.
     pub queue_wait_nanos: u64,
+    /// Mergeable log2 histogram of the job's per-box queue waits — the
+    /// additive counterpart of `queue_wait_nanos` that fleet-level
+    /// per-tenant p50/p99 aggregation is built from.
+    pub queue_wait_hist: WaitHist,
     /// Cumulative wall nanos per executed partition across the job's
     /// boxes (empty when the backend doesn't track them).
     pub partition_nanos: Vec<u64>,
@@ -115,6 +121,9 @@ pub struct EngineStats {
     pub respawns: u64,
     /// Cumulative ready-queue wait across every box of every job, nanos.
     pub queue_wait_nanos: u64,
+    /// Merged per-box queue-wait histogram across every job (bucket-wise
+    /// sum of the per-job histograms, so it partitions exactly).
+    pub queue_wait_hist: WaitHist,
     /// PJRT executable compilations across the worker pool. Settles at
     /// `workers × plan artifacts` during `build()` (stays 0 on
     /// `Backend::Cpu`) and MUST NOT grow on later jobs — compiled

@@ -1,0 +1,758 @@
+//! `kfuse::fleet` — one submission front over N engines ("shards").
+//!
+//! A [`Fleet`] owns a set of independently built [`Engine`]s and routes
+//! each submitted job to one of them. Routing weighs three inputs:
+//!
+//! * **plan compatibility** — a placement may require a pipeline; only
+//!   shards whose [`PlanKey`] plans it are candidates (two engines with
+//!   equal keys execute compatible plans, so the check is a key match,
+//!   the same identity the plan cache uses);
+//! * **load** — a shard's staged boxes ([`Engine::queued_boxes`]) plus
+//!   its in-flight jobs ([`Engine::active_jobs`]);
+//! * **pressure** — fleet submissions handed out but not yet waited on
+//!   (each [`FleetHandle`] holds a guard on its shard's counter), which
+//!   leads the queue signal: a burst of submissions spreads across
+//!   shards before the first box of any of them is even staged.
+//!
+//! A job with a deadline goes to the shard with the least LOAD (backlog
+//! is what eats laxity); a job without one spreads by pressure first, so
+//! background work fills shards evenly and stays out of the way. Within
+//! a shard, `QueuePolicy::LeastLaxity` schedules lanes by deadline
+//! laxity (see [`crate::coordinator::mux`]).
+//!
+//! Accounting is exact, in the same sense the engine's per-job rows are:
+//! [`Fleet::stats`] returns per-shard [`EngineStats`], an additive
+//! `totals` roll-up, and per-tenant [`TenantStats`] rows built from the
+//! same per-job rows the totals are — so every tenant column sums to the
+//! corresponding fleet total, across ALL disposition columns.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use kfuse::config::{Backend, RunConfig};
+//! use kfuse::engine::JobOptions;
+//! use kfuse::fleet::{Fleet, Placement};
+//!
+//! # fn main() -> kfuse::Result<()> {
+//! let cfg = RunConfig {
+//!     backend: Backend::Cpu,
+//!     shards: 2,
+//!     ..RunConfig::default()
+//! };
+//! let fleet = Fleet::from_config(cfg)?;
+//! let clip = Arc::new(
+//!     kfuse::coordinator::synth_clip(fleet.base_config(), 1).0,
+//! );
+//! let h = fleet.submit_batch(
+//!     clip,
+//!     Placement::tenant("alice"),
+//!     JobOptions::default(),
+//! )?;
+//! let report = h.wait()?;
+//! println!("shard {} ran it\n{}", 0, report.metrics);
+//! println!("{}", fleet.stats());
+//! fleet.shutdown()
+//! # }
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Isa, RunConfig};
+use crate::coordinator::metrics::{MetricsReport, WaitHist};
+use crate::coordinator::mux::JobId;
+use crate::engine::{
+    Engine, EngineStats, JobOptions, RunReport, ServeOpts,
+};
+use crate::fusion::calibrate::PlanKey;
+use crate::video::Video;
+use crate::{Error, Result};
+
+/// Per-shard overrides applied on top of the fleet's base [`RunConfig`].
+/// `None` keeps the base value, so `ShardSpec::default()` is a clone of
+/// the base — a uniform fleet. Heterogeneous fleets override the
+/// planning substrate per shard (device, ISA, band threads, pipeline),
+/// which is exactly what makes their [`PlanKey`]s differ and what
+/// pipeline-constrained routing selects on.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSpec {
+    /// Planning device override (`RunConfig::device`).
+    pub device: Option<String>,
+    /// Lane-backend override (`RunConfig::isa`).
+    pub isa: Option<Isa>,
+    /// Intra-box band-thread override (`RunConfig::intra_box_threads`).
+    pub intra_box_threads: Option<usize>,
+    /// Worker-count override (`RunConfig::workers`).
+    pub workers: Option<usize>,
+    /// Pipeline override (`RunConfig::pipeline`).
+    pub pipeline: Option<String>,
+}
+
+impl ShardSpec {
+    /// The shard's effective config: base with this spec's overrides.
+    fn apply(&self, base: &RunConfig) -> RunConfig {
+        let mut cfg = base.clone();
+        if let Some(d) = &self.device {
+            cfg.device = d.clone();
+        }
+        if let Some(isa) = self.isa {
+            cfg.isa = isa;
+        }
+        if let Some(t) = self.intra_box_threads {
+            cfg.intra_box_threads = t;
+        }
+        if let Some(w) = self.workers {
+            cfg.workers = w;
+        }
+        if let Some(p) = &self.pipeline {
+            cfg.pipeline = p.clone();
+        }
+        cfg
+    }
+}
+
+/// Builder for [`Fleet`]. Obtain one via [`Fleet::builder`].
+///
+/// Explicit [`ShardSpec`]s (via [`FleetBuilder::shard`]) win over the
+/// uniform count (via [`FleetBuilder::shards`]); with neither, the base
+/// config's `shards` field decides.
+#[derive(Debug, Clone, Default)]
+pub struct FleetBuilder {
+    base: RunConfig,
+    uniform: Option<usize>,
+    specs: Vec<ShardSpec>,
+}
+
+impl FleetBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The base config every shard starts from (the CLI hands its parsed
+    /// config here wholesale).
+    pub fn base(mut self, cfg: RunConfig) -> Self {
+        self.base = cfg;
+        self
+    }
+
+    /// Build `n` uniform shards (each a clone of the base config).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.uniform = Some(n);
+        self
+    }
+
+    /// Append one explicitly spec'd shard. Any explicit shard disables
+    /// the uniform count.
+    pub fn shard(mut self, spec: ShardSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Build every shard engine (each pays its own one-time cost:
+    /// validation, plan resolution, worker spawn) and return the front.
+    pub fn build(self) -> Result<Fleet> {
+        let specs: Vec<ShardSpec> = if !self.specs.is_empty() {
+            self.specs
+        } else {
+            let n = self.uniform.unwrap_or(self.base.shards);
+            if n == 0 {
+                return Err(Error::Config(
+                    "fleet needs at least one shard".into(),
+                ));
+            }
+            vec![ShardSpec::default(); n]
+        };
+        let mut shards = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let engine = Engine::from_config(spec.apply(&self.base))?;
+            let key = engine.plan_key();
+            shards.push(Shard {
+                engine,
+                key,
+                pressure: Arc::new(AtomicU64::new(0)),
+            });
+        }
+        Ok(Fleet {
+            shards,
+            base: self.base,
+            tenants: Mutex::new(Vec::new()),
+        })
+    }
+}
+
+/// One engine behind the front, with its routing inputs: the plan-cache
+/// key it was built under (compatibility) and the count of fleet handles
+/// outstanding against it (pressure).
+struct Shard {
+    engine: Engine,
+    key: PlanKey,
+    pressure: Arc<AtomicU64>,
+}
+
+/// Where a fleet submission should land and who it is accounted to.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Tenant the job's stats row is accounted to in
+    /// [`FleetStats::tenants`].
+    pub tenant: String,
+    /// Require a shard planning this pipeline; `None` accepts any shard.
+    pub pipeline: Option<String>,
+}
+
+impl Default for Placement {
+    fn default() -> Self {
+        Placement {
+            tenant: "default".into(),
+            pipeline: None,
+        }
+    }
+}
+
+impl Placement {
+    /// Place for this tenant, on any shard.
+    pub fn tenant(name: impl Into<String>) -> Self {
+        Placement {
+            tenant: name.into(),
+            ..Placement::default()
+        }
+    }
+
+    /// Constrain to shards planning `name`.
+    pub fn pipeline(mut self, name: impl Into<String>) -> Self {
+        self.pipeline = Some(name.into());
+        self
+    }
+}
+
+/// Decrements its shard's pressure counter when dropped — which a
+/// [`FleetHandle`] does once `wait` has consumed it (or when the caller
+/// detaches by dropping the handle).
+struct PressureGuard(Arc<AtomicU64>);
+
+impl PressureGuard {
+    fn acquire(counter: &Arc<AtomicU64>) -> PressureGuard {
+        counter.fetch_add(1, Ordering::Relaxed);
+        PressureGuard(counter.clone())
+    }
+}
+
+impl Drop for PressureGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A fleet-routed, in-flight job: the engine [`JobHandle`] plus which
+/// shard it landed on. Holds pressure against that shard until waited
+/// (or dropped — a detached job still runs and still lands in stats;
+/// the shard's own `active_jobs` keeps counting it for load routing).
+///
+/// [`JobHandle`]: crate::engine::JobHandle
+pub struct FleetHandle<T> {
+    inner: crate::engine::JobHandle<T>,
+    shard: usize,
+    _pressure: PressureGuard,
+}
+
+impl<T> FleetHandle<T> {
+    /// Index of the shard the job was routed to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The job's id WITHIN its shard's engine (unique per shard, not
+    /// fleet-wide — fleet accounting keys on `(shard, job)`).
+    pub fn job(&self) -> JobId {
+        self.inner.id()
+    }
+
+    /// Whether the job has already completed (non-blocking).
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+
+    /// Block until the job completes and return its report.
+    pub fn wait(self) -> Result<T> {
+        self.inner.wait()
+    }
+}
+
+/// The single submission front: routes jobs across its shard engines and
+/// aggregates their stats. See the module docs for the routing rule.
+pub struct Fleet {
+    shards: Vec<Shard>,
+    base: RunConfig,
+    /// `(shard, job id, tenant)` for every submission, appended at
+    /// routing time — the join key that turns per-shard per-job rows
+    /// into per-tenant rows.
+    tenants: Mutex<Vec<(usize, u64, String)>>,
+}
+
+impl Fleet {
+    /// Start building a fleet.
+    pub fn builder() -> FleetBuilder {
+        FleetBuilder::new()
+    }
+
+    /// Uniform fleet straight from a config: `cfg.shards` clones of
+    /// `cfg` (the CLI path for `--shards N`).
+    pub fn from_config(cfg: RunConfig) -> Result<Fleet> {
+        FleetBuilder::new().base(cfg).build()
+    }
+
+    /// Shards behind the front.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The base config shards were derived from.
+    pub fn base_config(&self) -> &RunConfig {
+        &self.base
+    }
+
+    /// Pick a shard: filter by pipeline compatibility, then take the
+    /// least (load, pressure) for deadline jobs or the least (pressure,
+    /// load) for deadline-free ones — ties fall to the lowest index,
+    /// keeping routing deterministic under equal signals.
+    fn route(
+        &self,
+        pipeline: Option<&str>,
+        has_deadline: bool,
+    ) -> Result<usize> {
+        let pick = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                pipeline.is_none_or(|p| s.key.pipeline == p)
+            })
+            .min_by_key(|(i, s)| {
+                let load = s.engine.queued_boxes() as u64
+                    + s.engine.active_jobs();
+                let pressure = s.pressure.load(Ordering::Relaxed);
+                if has_deadline {
+                    (load, pressure, *i)
+                } else {
+                    (pressure, load, *i)
+                }
+            });
+        match pick {
+            Some((i, _)) => Ok(i),
+            None => Err(Error::Config(format!(
+                "no shard plans pipeline '{}' (shards plan: {})",
+                pipeline.unwrap_or("<any>"),
+                self.shards
+                    .iter()
+                    .map(|s| s.key.pipeline.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))),
+        }
+    }
+
+    /// Record the routed job's tenant and wrap its handle.
+    fn dispatch<T>(
+        &self,
+        shard: usize,
+        tenant: &str,
+        guard: PressureGuard,
+        inner: crate::engine::JobHandle<T>,
+    ) -> FleetHandle<T> {
+        self.tenants.lock().unwrap().push((
+            shard,
+            inner.id().0,
+            tenant.to_string(),
+        ));
+        FleetHandle {
+            inner,
+            shard,
+            _pressure: guard,
+        }
+    }
+
+    /// Route and submit a lossless batch job.
+    pub fn submit_batch(
+        &self,
+        clip: Arc<Video>,
+        place: Placement,
+        opts: JobOptions,
+    ) -> Result<FleetHandle<RunReport>> {
+        let shard =
+            self.route(place.pipeline.as_deref(), opts.deadline.is_some())?;
+        let s = &self.shards[shard];
+        let guard = PressureGuard::acquire(&s.pressure);
+        let inner = s.engine.submit_batch_with(clip, opts)?;
+        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    }
+
+    /// Route and submit a paced streaming job.
+    pub fn submit_serve(
+        &self,
+        clip: Arc<Video>,
+        opts: ServeOpts,
+        place: Placement,
+        jopts: JobOptions,
+    ) -> Result<FleetHandle<MetricsReport>> {
+        let shard = self
+            .route(place.pipeline.as_deref(), jopts.deadline.is_some())?;
+        let s = &self.shards[shard];
+        let guard = PressureGuard::acquire(&s.pressure);
+        let inner = s.engine.submit_serve_with(clip, opts, jopts)?;
+        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    }
+
+    /// Route and submit a tracker-driven ROI job.
+    pub fn submit_roi(
+        &self,
+        clip: Arc<Video>,
+        place: Placement,
+        opts: JobOptions,
+    ) -> Result<FleetHandle<(RunReport, f64)>> {
+        let shard =
+            self.route(place.pipeline.as_deref(), opts.deadline.is_some())?;
+        let s = &self.shards[shard];
+        let guard = PressureGuard::acquire(&s.pressure);
+        let inner = s.engine.submit_roi_with(clip, opts)?;
+        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    }
+
+    /// Fleet-level accounting: per-shard [`EngineStats`], an additive
+    /// roll-up, and per-tenant rows. Tenant rows are built from the SAME
+    /// per-job rows the shard totals accumulate, so every tenant column
+    /// sums exactly to the corresponding `totals` column (completed jobs
+    /// only — an in-flight job has no per-job row yet and contributes to
+    /// neither side).
+    pub fn stats(&self) -> FleetStats {
+        let shards: Vec<EngineStats> =
+            self.shards.iter().map(|s| s.engine.stats()).collect();
+        let mut totals = EngineStats::default();
+        for s in &shards {
+            totals.jobs += s.jobs;
+            totals.boxes += s.boxes;
+            totals.frames += s.frames;
+            totals.bytes_in += s.bytes_in;
+            totals.bytes_out += s.bytes_out;
+            totals.dispatches += s.dispatches;
+            totals.dropped += s.dropped;
+            totals.failed += s.failed;
+            totals.quarantined += s.quarantined;
+            totals.deadline_exceeded += s.deadline_exceeded;
+            totals.retried_ok += s.retried_ok;
+            totals.retries += s.retries;
+            totals.respawns += s.respawns;
+            totals.queue_wait_nanos += s.queue_wait_nanos;
+            totals.queue_wait_hist.merge(&s.queue_wait_hist);
+            totals.compiles += s.compiles;
+            totals.pool_allocs += s.pool_allocs;
+            totals.replans += s.replans;
+        }
+        let recs = self.tenants.lock().unwrap().clone();
+        let mut by_name =
+            std::collections::BTreeMap::<String, TenantStats>::new();
+        for (si, s) in shards.iter().enumerate() {
+            for row in &s.per_job {
+                let tenant = recs
+                    .iter()
+                    .find(|(rs, rj, _)| *rs == si && *rj == row.job)
+                    .map(|(_, _, t)| t.as_str())
+                    // Unreachable for fleet-routed jobs; a row without a
+                    // record (someone submitted to the engine directly)
+                    // still partitions under a visible bucket.
+                    .unwrap_or("<direct>");
+                let t = by_name
+                    .entry(tenant.to_string())
+                    .or_insert_with(|| TenantStats {
+                        tenant: tenant.to_string(),
+                        ..TenantStats::default()
+                    });
+                t.jobs += 1;
+                t.boxes += row.boxes;
+                t.dropped += row.dropped;
+                t.failed += row.failed;
+                t.quarantined += row.quarantined;
+                t.deadline_exceeded += row.deadline_exceeded;
+                t.retried_ok += row.retried_ok;
+                t.retries += row.retries;
+                t.queue_wait_nanos += row.queue_wait_nanos;
+                t.queue_wait_hist.merge(&row.queue_wait_hist);
+            }
+        }
+        FleetStats {
+            shards,
+            totals,
+            tenants: by_name.into_values().collect(),
+        }
+    }
+
+    /// Orderly teardown: drain and shut every shard down (all of them,
+    /// even past the first failure — the first error is surfaced).
+    pub fn shutdown(self) -> Result<()> {
+        let mut first: Option<Error> = None;
+        for shard in self.shards {
+            if let Err(e) = shard.engine.shutdown() {
+                first.get_or_insert(e);
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One tenant's slice of the fleet's accounting, summed from the
+/// per-job rows of every job submitted under that tenant name. The
+/// disposition columns mirror [`JobStats`](crate::engine::JobStats);
+/// queue-wait percentiles come from the merged [`WaitHist`] (within-2×
+/// upper bounds — see [`WaitHist::quantile_us`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub jobs: u64,
+    pub boxes: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    pub quarantined: u64,
+    pub deadline_exceeded: u64,
+    pub retried_ok: u64,
+    pub retries: u64,
+    pub queue_wait_nanos: u64,
+    pub queue_wait_hist: WaitHist,
+}
+
+impl TenantStats {
+    /// Median per-box queue wait, µs (bucket upper bound).
+    pub fn p50_wait_us(&self) -> u64 {
+        self.queue_wait_hist.quantile_us(0.50)
+    }
+
+    /// p99 per-box queue wait, µs (bucket upper bound).
+    pub fn p99_wait_us(&self) -> u64 {
+        self.queue_wait_hist.quantile_us(0.99)
+    }
+}
+
+/// Fleet-wide accounting snapshot: per-shard engine stats, their
+/// additive roll-up, and per-tenant rows (sorted by tenant name). The
+/// partition invariants — enforced by `tests/fleet_soak.rs` — are that
+/// each shard's per-job rows partition that shard's totals, the shard
+/// totals partition `totals`, and the tenant rows partition `totals`
+/// again along every disposition column.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// One [`EngineStats`] per shard, in shard order.
+    pub shards: Vec<EngineStats>,
+    /// Field-wise sum of the shards' ADDITIVE columns (jobs, boxes,
+    /// dispositions, waits, compiles, pool allocs, replans; the merged
+    /// wait histogram). Identity fields (isa, pipeline, plan source) and
+    /// `per_job` stay at their defaults — read those per shard.
+    pub totals: EngineStats,
+    /// Per-tenant rows, sorted by tenant name.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl std::fmt::Display for FleetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = &self.totals;
+        writeln!(
+            f,
+            "fleet: {} shards | {} jobs | {} boxes | {} dropped | \
+             {} failed | {} quarantined | {} past deadline | \
+             queue wait {:.1} ms",
+            self.shards.len(),
+            t.jobs,
+            t.boxes,
+            t.dropped,
+            t.failed,
+            t.quarantined,
+            t.deadline_exceeded,
+            t.queue_wait_nanos as f64 / 1e6
+        )?;
+        writeln!(
+            f,
+            "{:<16} {:>5} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} \
+             {:>7} {:>7}",
+            "tenant",
+            "jobs",
+            "boxes",
+            "drop",
+            "fail",
+            "quar",
+            "dline",
+            "retok",
+            "retry",
+            "p50us",
+            "p99us"
+        )?;
+        for row in &self.tenants {
+            writeln!(
+                f,
+                "{:<16} {:>5} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} \
+                 {:>7} {:>7}",
+                row.tenant,
+                row.jobs,
+                row.boxes,
+                row.dropped,
+                row.failed,
+                row.quarantined,
+                row.deadline_exceeded,
+                row.retried_ok,
+                row.retries,
+                row.p50_wait_us(),
+                row.p99_wait_us()
+            )?;
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            writeln!(
+                f,
+                "shard {i}: {} jobs | {} boxes | {} dropped | {} failed \
+                 | {} quarantined | {} past deadline | queue wait \
+                 {:.1} ms",
+                s.jobs,
+                s.boxes,
+                s.dropped,
+                s.failed,
+                s.quarantined,
+                s.deadline_exceeded,
+                s.queue_wait_nanos as f64 / 1e6
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::fusion::halo::BoxDims;
+
+    fn tiny_cfg(shards: usize) -> RunConfig {
+        RunConfig {
+            frame_size: 64,
+            frames: 8,
+            box_dims: BoxDims::new(32, 32, 8),
+            workers: 1,
+            markers: 1,
+            backend: Backend::Cpu,
+            shards,
+            ..RunConfig::default()
+        }
+    }
+
+    fn clip(cfg: &RunConfig, seed: u64) -> Arc<Video> {
+        Arc::new(crate::coordinator::synth_clip(cfg, seed).0)
+    }
+
+    #[test]
+    fn shard_specs_override_the_base_config() {
+        let base = tiny_cfg(1);
+        let spec = ShardSpec {
+            device: Some("gtx750ti".into()),
+            intra_box_threads: Some(2),
+            workers: Some(3),
+            pipeline: Some("anomaly".into()),
+            ..ShardSpec::default()
+        };
+        let cfg = spec.apply(&base);
+        assert_eq!(cfg.device, "gtx750ti");
+        assert_eq!(cfg.intra_box_threads, 2);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.pipeline, "anomaly");
+        // Untouched fields keep the base values.
+        assert_eq!(cfg.frame_size, base.frame_size);
+        assert_eq!(cfg.isa, base.isa);
+        let plain = ShardSpec::default().apply(&base);
+        assert_eq!(plain.device, base.device);
+        assert_eq!(plain.pipeline, base.pipeline);
+    }
+
+    #[test]
+    fn jobs_route_and_account_per_tenant() {
+        let cfg = tiny_cfg(2);
+        let fleet = Fleet::from_config(cfg.clone()).unwrap();
+        assert_eq!(fleet.shards(), 2);
+        let a = fleet
+            .submit_batch(
+                clip(&cfg, 1),
+                Placement::tenant("beta"),
+                JobOptions::default(),
+            )
+            .unwrap();
+        let b = fleet
+            .submit_batch(
+                clip(&cfg, 2),
+                Placement::tenant("alpha"),
+                JobOptions::default(),
+            )
+            .unwrap();
+        a.wait().unwrap();
+        b.wait().unwrap();
+        let stats = fleet.stats();
+        assert_eq!(stats.shards.len(), 2);
+        assert_eq!(stats.totals.jobs, 2);
+        assert_eq!(
+            stats.totals.jobs,
+            stats.shards.iter().map(|s| s.jobs).sum::<u64>()
+        );
+        // Tenant rows: sorted by name, partitioning the totals.
+        let names: Vec<&str> =
+            stats.tenants.iter().map(|t| t.tenant.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"]);
+        assert_eq!(
+            stats.tenants.iter().map(|t| t.boxes).sum::<u64>(),
+            stats.totals.boxes
+        );
+        let text = format!("{stats}");
+        assert!(text.contains("fleet: 2 shards"), "{text}");
+        assert!(text.contains("alpha"), "{text}");
+        assert!(text.contains("shard 1:"), "{text}");
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deadline_free_jobs_spread_by_pressure() {
+        let cfg = tiny_cfg(2);
+        let fleet = Fleet::from_config(cfg.clone()).unwrap();
+        let a = fleet
+            .submit_batch(
+                clip(&cfg, 1),
+                Placement::default(),
+                JobOptions::default(),
+            )
+            .unwrap();
+        // The first handle is still outstanding: its shard carries
+        // pressure 1, so the second submission must go elsewhere.
+        let b = fleet
+            .submit_batch(
+                clip(&cfg, 2),
+                Placement::default(),
+                JobOptions::default(),
+            )
+            .unwrap();
+        assert_ne!(a.shard(), b.shard());
+        a.wait().unwrap();
+        b.wait().unwrap();
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn routing_rejects_an_unplannable_pipeline() {
+        let cfg = tiny_cfg(1);
+        let fleet = Fleet::from_config(cfg.clone()).unwrap();
+        let err = fleet.submit_batch(
+            clip(&cfg, 1),
+            Placement::tenant("t").pipeline("anomaly"),
+            JobOptions::default(),
+        );
+        let msg = format!("{}", err.err().unwrap());
+        assert!(msg.contains("no shard plans pipeline 'anomaly'"), "{msg}");
+        // The constraint is satisfiable when a shard does plan it.
+        let ok = fleet.submit_batch(
+            clip(&cfg, 1),
+            Placement::tenant("t").pipeline("facial"),
+            JobOptions::default(),
+        );
+        ok.unwrap().wait().unwrap();
+        fleet.shutdown().unwrap();
+    }
+}

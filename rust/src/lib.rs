@@ -78,6 +78,7 @@ pub mod cpu_ref;
 pub mod engine;
 pub mod error;
 pub mod exec;
+pub mod fleet;
 pub mod fusion;
 pub mod gpusim;
 pub mod pipeline;

@@ -7,12 +7,13 @@
 //!                [--device k20|c1060|gtx750ti]
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
 //!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
-//!                [--markers M] [--queue-policy fifo|rr|drr] [--queue N]
+//!                [--markers M] [--queue-policy fifo|rr|drr|laxity]
+//!                [--queue N] [--shards N]
 //!                [--faults seed=S,all=P|site=P,...]
 //!                [--calibrate true [--calibration-out FILE]]
 //!                [--replan-margin M]
 //! kfuse serve    [--fps 600] [--mode full] [--backend pjrt|cpu]
-//!                [--pipeline facial|anomaly]
+//!                [--pipeline facial|anomaly] [--shards N]
 //!                [--device k20|c1060|gtx750ti] [--ingest-depth N]
 //!                [--size 256] [--frames 256] [--intra-threads N]
 //!                [--isa auto|scalar|portable|sse2|avx2]
@@ -62,10 +63,15 @@
 //! load, plan resolution, worker spawn, and PJRT compilation all happen
 //! once at engine build, so the reported wall time is warm steady-state
 //! execution. The engine multiplexes concurrently admitted jobs through
-//! per-job queue lanes — `--queue-policy` picks the fairness policy
-//! (`rr` round robin default, `fifo` global arrival order, `drr`
-//! deficit-weighted), `--queue` the per-lane depth, and `--ingest-depth`
-//! how many frames a serve job's pacer stages ahead of admission. Each
+//! per-job queue lanes — `--queue-policy` (alias `--policy`) picks the
+//! fairness policy (`rr` round robin default, `fifo` global arrival
+//! order, `drr` deficit-weighted, `laxity` least-laxity-first deadline
+//! scheduling), `--queue` the per-lane depth, and `--ingest-depth`
+//! how many frames a serve job's pacer stages ahead of admission.
+//! `--shards N` (N > 1) routes `run`/`serve` through a
+//! [`kfuse::fleet::Fleet`] front over N engines — one synthetic job per
+//! shard, each under its own tenant — and prints the fleet's per-tenant
+//! stats table instead of a single session line. Each
 //! command prints the session's cumulative `engine.stats()` line at the
 //! end (including per-job rows and the compile count that settles at
 //! build and must not grow per job).
@@ -76,7 +82,8 @@ use kfuse::config::{
     Backend, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
 };
 use kfuse::coordinator;
-use kfuse::engine::{Engine, ServeOpts};
+use kfuse::engine::{Engine, JobOptions, ServeOpts};
+use kfuse::fleet::{Fleet, Placement};
 use kfuse::fusion::halo::BoxDims;
 use kfuse::fusion::kernel_ir::paper_pipeline;
 use kfuse::fusion::traffic::InputDims;
@@ -160,7 +167,10 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.markers = args.usize_or("markers", cfg.markers)?;
     cfg.queue_depth = args.usize_or("queue", cfg.queue_depth)?;
     cfg.ingest_depth = args.usize_or("ingest-depth", cfg.ingest_depth)?;
-    if let Some(p) = args.get("queue-policy") {
+    cfg.shards = args.usize_or("shards", cfg.shards)?;
+    // --policy is the short alias; an explicit --queue-policy wins.
+    if let Some(p) = args.get("queue-policy").or_else(|| args.get("policy"))
+    {
         cfg.queue_policy = QueuePolicy::parse(p)?;
     }
     if let Some(d) = args.get("device") {
@@ -272,6 +282,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     // probe itself so it can print and optionally write the report —
     // leaving the flag set would make build() probe a second time.
     cfg.validate()?;
+    if cfg.shards > 1 {
+        if cfg.roi_only || cfg.calibrate {
+            return Err(Error::Config(
+                "--shards > 1 routes through the fleet front, which \
+                 submits batch/serve jobs only (drop --roi / --calibrate)"
+                    .into(),
+            ));
+        }
+        return run_fleet_batch(&cfg);
+    }
     let engine = Engine::builder()
         .config(RunConfig {
             calibrate: false,
@@ -332,9 +352,53 @@ fn cmd_run(args: &Args) -> Result<()> {
     engine.shutdown()
 }
 
+/// Fleet path for `run --shards N`: one synthetic batch job per shard,
+/// each under its own tenant, routed through the front; prints the
+/// per-tenant stats table (the CI artifact) at the end.
+fn run_fleet_batch(cfg: &RunConfig) -> Result<()> {
+    let fleet = Fleet::from_config(cfg.clone())?;
+    let mut handles = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let (clip, _) = coordinator::synth_clip(cfg, 42 + i as u64);
+        handles.push(fleet.submit_batch(
+            Arc::new(clip),
+            Placement::tenant(format!("tenant-{i}")),
+            JobOptions::default(),
+        )?);
+    }
+    for h in handles {
+        let shard = h.shard();
+        let rep = h.wait()?;
+        println!("shard {shard}:\n{}", rep.metrics);
+    }
+    println!("{}", fleet.stats());
+    fleet.shutdown()
+}
+
+/// Fleet path for `serve --shards N`: one paced serve job per shard.
+fn serve_fleet(cfg: &RunConfig) -> Result<()> {
+    let fleet = Fleet::from_config(cfg.clone())?;
+    let mut handles = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let (clip, _) = coordinator::synth_clip(cfg, 42 + i as u64);
+        handles.push(fleet.submit_serve(
+            Arc::new(clip),
+            ServeOpts::from_config(cfg),
+            Placement::tenant(format!("tenant-{i}")),
+            JobOptions::default(),
+        )?);
+    }
+    for h in handles {
+        let shard = h.shard();
+        let rep = h.wait()?;
+        println!("shard {shard}:\n{rep}");
+    }
+    println!("{}", fleet.stats());
+    fleet.shutdown()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let (clip, _) = coordinator::synth_clip(&cfg, 42);
     println!(
         "serve: {} fps ingest | {} on {} | pipeline {} | {} frames | \
          planned on {} | ingest depth {} | queue policy {}",
@@ -347,6 +411,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.ingest_depth,
         cfg.queue_policy.name()
     );
+    cfg.validate()?;
+    if cfg.shards > 1 {
+        return serve_fleet(&cfg);
+    }
+    let (clip, _) = coordinator::synth_clip(&cfg, 42);
     let engine = Engine::builder().config(cfg.clone()).build()?;
     let rep = engine.serve(Arc::new(clip), ServeOpts::from_config(&cfg))?;
     println!("{rep}");
@@ -413,8 +482,11 @@ fn main() {
                  {}\n\
                  pipelines (--pipeline, planned + compiled by the \
                  derived executor): {}\n\
-                 multiplexing: --queue-policy fifo|rr|drr, --queue N \
-                 (per-job lane depth), --ingest-depth N (serve staging)\n\
+                 multiplexing: --queue-policy fifo|rr|drr|laxity (alias \
+                 --policy), --queue N (per-job lane depth), \
+                 --ingest-depth N (serve staging)\n\
+                 fleet: --shards N (route run/serve through a fleet \
+                 front over N engines; per-tenant stats table)\n\
                  vector layer: --isa auto|scalar|portable|sse2|avx2 \
                  (fused CPU lane backend; all bit-identical)\n\
                  chaos: --faults seed=S,all=P (or per-site \

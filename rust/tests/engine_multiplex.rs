@@ -209,6 +209,7 @@ fn all_queue_policies_produce_identical_results() {
         QueuePolicy::Fifo,
         QueuePolicy::RoundRobin,
         QueuePolicy::DeficitWeighted,
+        QueuePolicy::LeastLaxity,
     ] {
         let cfg = RunConfig {
             queue_policy: policy,

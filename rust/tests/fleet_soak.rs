@@ -1,0 +1,539 @@
+//! Fleet concurrency soak: the cross-engine front under load, faults,
+//! and deadline pressure.
+//!
+//! Everything runs on `Backend::Cpu` (offline, deterministic executors).
+//! The contracts under test:
+//!
+//! * **exact tenant accounting** — dozens of concurrent batch + serve
+//!   jobs across shards and tenants, under a seeded fault plan: the
+//!   per-tenant rows of [`Fleet::stats`] sum EXACTLY to the fleet
+//!   totals across every disposition column (boxes, dropped, failed,
+//!   quarantined, deadline-exceeded, retried-ok, retries, queue-wait
+//!   nanos, and the wait-histogram mass), and the per-shard stats
+//!   partition the same totals;
+//! * **no slow leaks** — a second identical wave allocates zero new
+//!   pool buffers (`pool_allocs` stays at its warm value);
+//! * **numbers don't move** — surviving fleet outputs are bit-identical
+//!   to a serialized single-engine faultless run;
+//! * **laxity beats static DRR** — on the same seeded deadline-heavy
+//!   workload, `QueuePolicy::LeastLaxity` sheds strictly fewer
+//!   past-deadline boxes than `QueuePolicy::DeficitWeighted` (which
+//!   must shed some, or the workload proves nothing);
+//! * **laxity is deterministic** — equal seeds replay bitwise-identical
+//!   disposition logs under the laxity policy;
+//! * **the guard holds** — a deadline-free job behind a large
+//!   deadline-tagged backlog still completes while the backlog runs
+//!   (`STARVATION_GUARD` bounds how long laxity may skip it).
+//!
+//! The CI `fleet-smoke` job wraps this binary in a timeout, so a hang
+//! in routing, draining, or shutdown fails loudly.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kfuse::config::{
+    Backend, FaultPlan, FusionMode, QueuePolicy, RunConfig,
+};
+use kfuse::coordinator::{synth_clip, Disposition};
+use kfuse::engine::{Engine, JobOptions, Policy, ServeOpts};
+use kfuse::fleet::{Fleet, FleetStats, Placement};
+use kfuse::fusion::halo::BoxDims;
+use kfuse::video::{cut_boxes, BoxTask, Video};
+
+/// Pinned chaos seed (same convention as `engine_chaos.rs`).
+const SEED: u64 = 2026;
+
+const TENANTS: [&str; 3] = ["alpha", "beta", "gamma"];
+
+fn fleet_cfg(shards: usize, faults: Option<FaultPlan>) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames: 32,
+        mode: FusionMode::Full,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers: 2,
+        markers: 1,
+        backend: Backend::Cpu,
+        queue_policy: QueuePolicy::LeastLaxity,
+        shards,
+        faults,
+        ..RunConfig::default()
+    }
+}
+
+fn clip(cfg: &RunConfig, seed: u64) -> Arc<Video> {
+    Arc::new(synth_clip(cfg, seed).0)
+}
+
+fn retrying() -> JobOptions {
+    JobOptions {
+        deadline: None,
+        max_retries: 3,
+        backoff: Duration::from_micros(100),
+    }
+}
+
+fn lossless() -> ServeOpts {
+    ServeOpts {
+        fps: 20_000.0, // pacing negligible: contention is the point
+        policy: Policy::Block,
+    }
+}
+
+/// One soak wave: 30 batch + 10 serve jobs admitted concurrently,
+/// round-robined across the named tenants, all waited to completion.
+fn soak_wave(fleet: &Fleet, cfg: &RunConfig, wave: u64) {
+    let serve_cfg = RunConfig {
+        frames: 16,
+        ..cfg.clone()
+    };
+    let mut batches = Vec::new();
+    let mut serves = Vec::new();
+    for i in 0..30u64 {
+        let place = Placement::tenant(TENANTS[(i % 3) as usize]);
+        let h = fleet
+            .submit_batch(clip(cfg, 1000 * wave + i), place, retrying())
+            .unwrap();
+        batches.push(h);
+    }
+    for i in 0..10u64 {
+        let place = Placement::tenant(TENANTS[(i % 3) as usize]);
+        let h = fleet
+            .submit_serve(
+                clip(&serve_cfg, 9000 * wave + i),
+                lossless(),
+                place,
+                retrying(),
+            )
+            .unwrap();
+        serves.push(h);
+    }
+    for h in batches {
+        h.wait().unwrap();
+    }
+    for h in serves {
+        h.wait().unwrap();
+    }
+}
+
+/// Every tenant column must sum exactly to the fleet total, and the
+/// per-shard stats must partition the same totals.
+fn assert_exact_partition(stats: &FleetStats, label: &str) {
+    let tsum = |f: fn(&kfuse::fleet::TenantStats) -> u64| {
+        stats.tenants.iter().map(f).sum::<u64>()
+    };
+    assert_eq!(stats.totals.jobs, tsum(|t| t.jobs), "{label}: jobs");
+    assert_eq!(stats.totals.boxes, tsum(|t| t.boxes), "{label}: boxes");
+    assert_eq!(stats.totals.dropped, tsum(|t| t.dropped), "{label}: drop");
+    assert_eq!(stats.totals.failed, tsum(|t| t.failed), "{label}: fail");
+    assert_eq!(
+        stats.totals.quarantined,
+        tsum(|t| t.quarantined),
+        "{label}: quarantined"
+    );
+    assert_eq!(
+        stats.totals.deadline_exceeded,
+        tsum(|t| t.deadline_exceeded),
+        "{label}: deadline_exceeded"
+    );
+    assert_eq!(
+        stats.totals.retried_ok,
+        tsum(|t| t.retried_ok),
+        "{label}: retried_ok"
+    );
+    assert_eq!(
+        stats.totals.retries,
+        tsum(|t| t.retries),
+        "{label}: retries"
+    );
+    assert_eq!(
+        stats.totals.queue_wait_nanos,
+        tsum(|t| t.queue_wait_nanos),
+        "{label}: queue_wait_nanos"
+    );
+    assert_eq!(
+        stats.totals.queue_wait_hist.total(),
+        tsum(|t| t.queue_wait_hist.total()),
+        "{label}: wait-histogram mass"
+    );
+    // Shard stats partition the same totals.
+    let ssum = |f: fn(&kfuse::engine::EngineStats) -> u64| {
+        stats.shards.iter().map(f).sum::<u64>()
+    };
+    assert_eq!(stats.totals.jobs, ssum(|s| s.jobs), "{label}: shard jobs");
+    assert_eq!(
+        stats.totals.boxes,
+        ssum(|s| s.boxes),
+        "{label}: shard boxes"
+    );
+    assert_eq!(
+        stats.totals.queue_wait_hist.total(),
+        ssum(|s| s.queue_wait_hist.total()),
+        "{label}: shard histogram mass"
+    );
+}
+
+/// Two waves of 40 concurrent faulted jobs across 2 shards and 3
+/// tenants: tenant rows partition the fleet totals across EVERY
+/// disposition column after each wave, and the second wave allocates
+/// no new pool buffers.
+#[test]
+fn fleet_soak_accounts_every_tenant_exactly() {
+    let cfg =
+        fleet_cfg(2, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let fleet = Fleet::from_config(cfg.clone()).unwrap();
+    assert_eq!(fleet.shards(), 2);
+
+    soak_wave(&fleet, &cfg, 1);
+    let after_one = fleet.stats();
+    assert_eq!(after_one.totals.jobs, 40);
+    assert_eq!(after_one.tenants.len(), 3);
+    assert_exact_partition(&after_one, "wave 1");
+    // ~2200 boxes at 5%-everywhere faults: the failure machinery
+    // provably fired, and the accounting above covered it.
+    assert!(after_one.totals.quarantined >= 1, "no injected panic fired");
+    assert!(after_one.totals.retried_ok >= 1, "no retry recovered");
+    assert!(after_one.totals.queue_wait_hist.total() >= 1);
+    let warm_allocs = after_one.totals.pool_allocs;
+
+    soak_wave(&fleet, &cfg, 2);
+    let after_two = fleet.stats();
+    assert_eq!(after_two.totals.jobs, 80);
+    assert_exact_partition(&after_two, "wave 2");
+    assert_eq!(
+        after_two.totals.pool_allocs, warm_allocs,
+        "a second identical wave must not allocate pool buffers \
+         ({} -> {})",
+        warm_allocs, after_two.totals.pool_allocs
+    );
+
+    // The rendered table carries one row per tenant.
+    let text = format!("{after_two}");
+    for tenant in TENANTS {
+        assert!(text.contains(tenant), "{text}");
+    }
+    fleet.shutdown().unwrap();
+}
+
+/// Read one box's region out of a single-channel reassembled clip.
+fn box_region(v: &Video, task: &BoxTask) -> Vec<f32> {
+    let plane = v.h * v.w;
+    let mut out = Vec::with_capacity(task.dims.pixels());
+    for dt in 0..task.dims.t {
+        for di in 0..task.dims.x {
+            let base =
+                (task.t0 + dt) * plane + (task.i0 + di) * v.w + task.j0;
+            out.extend_from_slice(&v.data[base..base + task.dims.y]);
+        }
+    }
+    out
+}
+
+/// The same clip, fleet-routed under faults vs a single engine run
+/// serialized and faultless: every surviving box is bit-identical,
+/// every terminally failed box leaves its region zeroed. Routing and
+/// retries move scheduling, never numbers.
+#[test]
+fn surviving_fleet_outputs_bit_identical_to_serialized_run() {
+    let cfg =
+        fleet_cfg(2, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let shared = clip(&cfg, 41);
+
+    // Serialized faultless reference on a plain single engine.
+    let clean_cfg = RunConfig {
+        faults: None,
+        shards: 1,
+        ..cfg.clone()
+    };
+    let clean = Engine::from_config(clean_cfg).unwrap();
+    let want = clean.batch(shared.clone()).unwrap();
+    clean.shutdown().unwrap();
+
+    let fleet = Fleet::from_config(cfg).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let place = Placement::tenant(TENANTS[i % 3]);
+            fleet
+                .submit_batch(shared.clone(), place, retrying())
+                .unwrap()
+        })
+        .collect();
+    let reports: Vec<_> =
+        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    fleet.shutdown().unwrap();
+
+    let tasks: HashMap<u64, BoxTask> =
+        cut_boxes(shared.h, shared.w, shared.t, BoxDims::new(16, 16, 8))
+            .into_iter()
+            .map(|t| (t.id as u64, t))
+            .collect();
+    for (i, got) in reports.iter().enumerate() {
+        for d in &got.metrics.dispositions {
+            let task = &tasks[&d.box_id];
+            let region = box_region(&got.binary, task);
+            match d.disposition {
+                Disposition::Ok | Disposition::RetriedOk => {
+                    assert_eq!(
+                        region,
+                        box_region(&want.binary, task),
+                        "job {i} box {} ({:?}) diverged from the \
+                         serialized run",
+                        d.box_id,
+                        d.disposition
+                    );
+                }
+                _ => {
+                    assert!(
+                        region.iter().all(|&v| v == 0.0),
+                        "job {i} box {} failed terminally but left \
+                         output",
+                        d.box_id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Deadline-heavy A/B config: ONE shard, ONE worker, so lane
+/// scheduling alone decides who gets the executor.
+fn ab_cfg(policy: QueuePolicy) -> RunConfig {
+    RunConfig {
+        frame_size: 64,
+        frames: 128, // 16 spatial boxes x 16 windows = 256 per job
+        mode: FusionMode::Full,
+        box_dims: BoxDims::new(16, 16, 8),
+        workers: 1,
+        markers: 1,
+        backend: Backend::Cpu,
+        queue_policy: policy,
+        shards: 1,
+        ..RunConfig::default()
+    }
+}
+
+/// Run the seeded deadline-heavy workload under `policy`: 12 background
+/// deadline-free batch jobs, then one deadline-tagged job. Returns the
+/// deadline job's shed count. A warm-up job equalizes pool/plan warmth
+/// across policies before the measured load.
+fn shed_under(
+    policy: QueuePolicy,
+    deadline: Duration,
+    shared: &Arc<Video>,
+) -> u64 {
+    let fleet = Fleet::from_config(ab_cfg(policy)).unwrap();
+    fleet
+        .submit_batch(
+            shared.clone(),
+            Placement::tenant("warmup"),
+            JobOptions::default(),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let background: Vec<_> = (0..12)
+        .map(|_| {
+            fleet
+                .submit_batch(
+                    shared.clone(),
+                    Placement::tenant("background"),
+                    JobOptions::default(),
+                )
+                .unwrap()
+        })
+        .collect();
+    let hot = fleet
+        .submit_batch(
+            shared.clone(),
+            Placement::tenant("deadline"),
+            JobOptions {
+                deadline: Some(deadline),
+                ..JobOptions::default()
+            },
+        )
+        .unwrap();
+    let report = hot.wait().unwrap();
+    for h in background {
+        h.wait().unwrap();
+    }
+    fleet.shutdown().unwrap();
+    report.metrics.deadline_exceeded
+}
+
+/// The tentpole's reason to exist: on the SAME deadline-heavy workload
+/// (12 deadline-free lanes + 1 lane whose deadline is 4x its solo
+/// wall), static DRR splits pops evenly — the deadline lane finishes
+/// ~13x solo and sheds most of its boxes — while least-laxity-first
+/// schedules the finite-laxity lane ahead of the `i128::MAX` ones and
+/// finishes within ~1.75x solo (the starvation guard still cedes 12 of
+/// every 28 pops to the background lanes). Strictly fewer sheds,
+/// asserted; the bench reports the same cell in `BENCH_fused_cpu.json`.
+#[test]
+fn laxity_sheds_strictly_fewer_deadline_boxes_than_drr() {
+    let cfg = ab_cfg(QueuePolicy::DeficitWeighted);
+    let shared = clip(&cfg, 7);
+
+    // Measure the job's solo wall on an idle, warm fleet: the deadline
+    // below is relative to THIS machine, so the A/B is about
+    // scheduling, not absolute speed.
+    let probe = Fleet::from_config(cfg).unwrap();
+    probe
+        .submit_batch(
+            shared.clone(),
+            Placement::default(),
+            JobOptions::default(),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let t0 = Instant::now();
+    probe
+        .submit_batch(
+            shared.clone(),
+            Placement::default(),
+            JobOptions::default(),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let solo = t0.elapsed();
+    probe.shutdown().unwrap();
+    let deadline = solo * 4 + Duration::from_millis(2);
+
+    let drr_shed =
+        shed_under(QueuePolicy::DeficitWeighted, deadline, &shared);
+    let laxity_shed =
+        shed_under(QueuePolicy::LeastLaxity, deadline, &shared);
+    println!(
+        "solo {:?} deadline {:?}: drr shed {drr_shed}, laxity shed \
+         {laxity_shed}",
+        solo, deadline
+    );
+    assert!(
+        drr_shed > 0,
+        "static DRR shed nothing — the workload is not deadline-heavy \
+         enough to discriminate"
+    );
+    assert!(
+        laxity_shed < drr_shed,
+        "laxity must shed strictly fewer boxes than static DRR \
+         (laxity {laxity_shed} vs drr {drr_shed})"
+    );
+}
+
+/// One deterministic laxity run: a 1-shard fleet (submission order
+/// fixes job ids), seeded faults, and deadlines generous enough to
+/// never fire — so dispositions depend on the seed, not on timing.
+fn laxity_run() -> Vec<Vec<kfuse::coordinator::BoxDisposition>> {
+    let cfg =
+        fleet_cfg(1, Some(FaultPlan::uniform(SEED, 0.05).unwrap()));
+    let serve_cfg = RunConfig {
+        frames: 16,
+        ..cfg.clone()
+    };
+    let far = JobOptions {
+        deadline: Some(Duration::from_secs(600)),
+        ..retrying()
+    };
+    let fleet = Fleet::from_config(cfg.clone()).unwrap();
+    let batches: Vec<_> = (0..4u64)
+        .map(|i| {
+            // Alternate finite-laxity and infinite-laxity lanes so the
+            // laxity comparator (not just round-robin) is exercised.
+            let opts = if i % 2 == 0 { far.clone() } else { retrying() };
+            fleet
+                .submit_batch(
+                    clip(&cfg, 100 + i),
+                    Placement::tenant(TENANTS[(i % 3) as usize]),
+                    opts,
+                )
+                .unwrap()
+        })
+        .collect();
+    let serve = fleet
+        .submit_serve(
+            clip(&serve_cfg, 900),
+            lossless(),
+            Placement::tenant("gamma"),
+            far,
+        )
+        .unwrap();
+    let mut logs: Vec<Vec<kfuse::coordinator::BoxDisposition>> = batches
+        .into_iter()
+        .map(|h| h.wait().unwrap().metrics.dispositions)
+        .collect();
+    logs.push(serve.wait().unwrap().dispositions);
+    fleet.shutdown().unwrap();
+    logs
+}
+
+/// Equal seeds ⇒ bitwise-identical per-job disposition logs under the
+/// laxity policy, regardless of worker interleaving: laxity reorders
+/// POPS, while fates stay keyed on (site, job, box, attempt).
+#[test]
+fn equal_seed_laxity_runs_replay_identical_dispositions() {
+    let first = laxity_run();
+    let second = laxity_run();
+    assert_eq!(first.len(), second.len());
+    for (i, (a, b)) in first.iter().zip(&second).enumerate() {
+        assert_eq!(a, b, "job {i} diverged between equal-seed runs");
+    }
+    // Deadlines were far: determinism must not come from shedding.
+    for log in &first {
+        assert!(log
+            .iter()
+            .all(|d| d.disposition != Disposition::DeadlineExceeded));
+    }
+}
+
+/// Starvation guard, end to end: a 512-box deadline-tagged batch lane
+/// outranks a deadline-free 16-box lane on every laxity comparison,
+/// yet the small job must complete while the big one still runs —
+/// `STARVATION_GUARD` caps consecutive skips, giving the small lane at
+/// least one pop per `GUARD + lanes`, i.e. completion within ~272 pops
+/// of a 528-box backlog.
+#[test]
+fn laxity_never_starves_a_deadline_free_job_beyond_the_guard() {
+    let cfg = RunConfig {
+        frames: 256, // 16 spatial boxes x 32 windows = 512
+        workers: 1,
+        ..fleet_cfg(1, None)
+    };
+    let small_cfg = RunConfig {
+        frames: 8, // one window: 16 boxes
+        ..cfg.clone()
+    };
+    let fleet = Fleet::from_config(cfg.clone()).unwrap();
+    let big = fleet
+        .submit_batch(
+            clip(&cfg, 5),
+            Placement::tenant("heavy"),
+            JobOptions {
+                // Far deadline: finite laxity, so this lane wins every
+                // straight comparison against the deadline-free lane.
+                deadline: Some(Duration::from_secs(600)),
+                ..JobOptions::default()
+            },
+        )
+        .unwrap();
+    let small = fleet
+        .submit_batch(
+            clip(&small_cfg, 6),
+            Placement::tenant("light"),
+            JobOptions::default(),
+        )
+        .unwrap();
+    let report = small.wait().unwrap();
+    assert_eq!(report.metrics.boxes, 16);
+    assert!(
+        !big.is_finished(),
+        "the 512-box deadline lane finished before the guarded \
+         16-box deadline-free lane — the starvation guard is not \
+         bounding laxity's preference"
+    );
+    let big_report = big.wait().unwrap();
+    assert_eq!(big_report.metrics.boxes, 512);
+    assert_eq!(big_report.metrics.deadline_exceeded, 0);
+    fleet.shutdown().unwrap();
+}
