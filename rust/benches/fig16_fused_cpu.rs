@@ -26,11 +26,14 @@
 //! fused pass — the fault-injection layer must cost ~nothing when
 //! disarmed), `speedup_calibrated` (the measured-optimal plan vs the
 //! static-table plan on one shared measured table; fitted device
-//! constants land in the `BENCH_calibration.json` sidecar), and this
-//! PR's `fleet` record (past-deadline sheds under static DRR vs
+//! constants land in the `BENCH_calibration.json` sidecar), the
+//! `fleet` record (past-deadline sheds under static DRR vs
 //! least-laxity lane scheduling through the fleet front; CI gates
-//! `laxity_shed <= drr_shed`) are additions only. See
-//! `docs/COST_MODEL.md` for how to read them.
+//! `laxity_shed <= drr_shed`), and the fleet resilience fields inside
+//! it (`failed_over` — the seeded shard-down failover ledger;
+//! `rejected_bounded` and the `p99_wait_us_*` pair — the admission
+//! A/B: p99 queue wait of accepted jobs, unbounded vs max-inflight 1)
+//! are additions only. See `docs/COST_MODEL.md` for how to read them.
 //!
 //! Headline numbers:
 //! * `speedup` — fused(1T, scalar) vs staged: the fusion win, isolated
@@ -60,7 +63,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kfuse::bench_util::{header, row, time_fn};
-use kfuse::config::{Backend, FusionMode, QueuePolicy, RunConfig};
+use kfuse::config::{
+    Backend, FaultPlan, FusionMode, QueuePolicy, RunConfig,
+};
 use kfuse::coordinator::scheduler::{execute_box, BoxJob};
 use kfuse::coordinator::{ExecutionPlan, JobId};
 use kfuse::engine::JobOptions;
@@ -554,6 +559,86 @@ fn main() {
         )
     };
 
+    // Fleet resilience arm: the seeded shard-down failover ledger and
+    // the admission A/B (p99 queue wait of ACCEPTED jobs, bounded vs
+    // unbounded inflight). Report-only here — tests/fleet_resilience.rs
+    // asserts the contracts; CI reads the JSON for trend lines.
+    let (fleet_failed_over, adm_p99_unbounded_us, adm_p99_bounded_us, adm_rejected) = {
+        let res_cfg = |max_inflight: usize| RunConfig {
+            frame_size: 64,
+            frames: 32, // 16 spatial boxes x 4 windows = 64 per job
+            mode: FusionMode::Full,
+            box_dims: BoxDims::new(16, 16, 8),
+            workers: 1,
+            markers: 1,
+            backend: Backend::Cpu,
+            shards: 1,
+            max_inflight,
+            ..RunConfig::default()
+        };
+        // Seeded shard-down over 2 shards: with seed 2 at p = 0.5 both
+        // submissions collapse at their first placement and fail over
+        // (the CI smoke trace), so the ledger reads exactly 2.
+        let chaos_cfg = RunConfig {
+            shards: 2,
+            faults: Some(FaultPlan {
+                shard_down: 0.5,
+                ..FaultPlan::new(2)
+            }),
+            ..res_cfg(0)
+        };
+        let cclip =
+            Arc::new(kfuse::coordinator::synth_clip(&chaos_cfg, 3).0);
+        let chaos = Fleet::from_config(chaos_cfg).unwrap();
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                chaos
+                    .submit_batch(
+                        cclip.clone(),
+                        Placement::tenant("chaos"),
+                        JobOptions::default(),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in hs {
+            h.wait().unwrap();
+        }
+        let failed_over = chaos.stats().total_failed_over();
+        chaos.shutdown().unwrap();
+
+        // Admission A/B: 8 jobs back-to-back at 1 worker.
+        let tail = |max_inflight: usize| -> (u64, u64) {
+            let cfg = res_cfg(max_inflight);
+            let aclip =
+                Arc::new(kfuse::coordinator::synth_clip(&cfg, 7).0);
+            let fleet = Fleet::from_config(cfg).unwrap();
+            let mut accepted = Vec::new();
+            for _ in 0..8 {
+                if let Ok(h) = fleet.submit_batch(
+                    aclip.clone(),
+                    Placement::tenant("load"),
+                    JobOptions::default(),
+                ) {
+                    accepted.push(h);
+                }
+            }
+            for h in accepted {
+                h.wait().unwrap();
+            }
+            let stats = fleet.stats();
+            let out = (
+                stats.totals.queue_wait_hist.quantile_us(0.99),
+                stats.rejected,
+            );
+            fleet.shutdown().unwrap();
+            out
+        };
+        let (unbounded_p99, _) = tail(0);
+        let (bounded_p99, rejected) = tail(1);
+        (failed_over, unbounded_p99, bounded_p99, rejected)
+    };
+
     header(
         "Fig 16 (measured, this host)",
         "CPU executor matrix: staged vs two-fused vs fused vs derived \
@@ -704,6 +789,12 @@ fn main() {
          {fleet_deadline_ms:.1} ms): drr {drr_shed}, laxity \
          {laxity_shed} (laxity <= drr CI-gated)"
     );
+    println!(
+        "fleet resilience: {fleet_failed_over} seeded failovers | \
+         accepted-job p99 queue wait {adm_p99_unbounded_us} us \
+         unbounded -> {adm_p99_bounded_us} us at max-inflight 1 \
+         ({adm_rejected} rejected at the door)"
+    );
 
     let cell_json: Vec<String> = cells
         .iter()
@@ -739,7 +830,11 @@ fn main() {
          \"fleet\": {{\"solo_ms\": {fleet_solo_ms:.2}, \
          \"deadline_ms\": {fleet_deadline_ms:.2}, \
          \"drr_shed\": {drr_shed}, \
-         \"laxity_shed\": {laxity_shed}}}\n}}\n",
+         \"laxity_shed\": {laxity_shed}, \
+         \"failed_over\": {fleet_failed_over}, \
+         \"rejected_bounded\": {adm_rejected}, \
+         \"p99_wait_us_unbounded\": {adm_p99_unbounded_us}, \
+         \"p99_wait_us_bounded\": {adm_p99_bounded_us}}}\n}}\n",
         bx.x,
         bx.y,
         bx.t,

@@ -6,6 +6,7 @@ use crate::{Error, Result};
 
 pub use crate::coordinator::faults::FaultPlan;
 pub use crate::exec::simd::Isa;
+pub use crate::fleet::health::BreakerConfig;
 
 /// Which fusion arm the coordinator executes (the paper's evaluation
 /// arms, plus `Auto` which lets the planner's DP solve pick the arm).
@@ -237,6 +238,27 @@ pub struct RunConfig {
     /// across (CLI `--shards`). A plain `Engine` ignores it; the CLI
     /// routes through a fleet when it is > 1. Must be ≥ 1.
     pub shards: usize,
+    /// Fleet admission bound (CLI `--max-inflight`): the most
+    /// outstanding fleet submissions any one shard may carry. When every
+    /// compatible shard is at the bound a new submission is rejected at
+    /// the front door with [`Error::Overloaded`](crate::Error) instead
+    /// of queuing into guaranteed lateness. `0` — the default — is
+    /// unbounded (the pre-admission-control behavior). A plain `Engine`
+    /// ignores it.
+    pub max_inflight: usize,
+    /// Cross-shard failover (CLI `--failover`, default on): when a
+    /// fleet job fails for shard-level reasons (worker-pool collapse,
+    /// engine teardown, injected shard-down) and its deadline budget
+    /// allows, the fleet resubmits it to a compatible shard the breaker
+    /// still admits; failovers are counted in
+    /// [`FleetStats`](crate::fleet::FleetStats). A plain `Engine`
+    /// ignores it.
+    pub failover: bool,
+    /// Per-shard circuit-breaker thresholds (CLI `--breaker`; see
+    /// [`BreakerConfig`]). Drives the Healthy → Degraded → Down health
+    /// machine that fleet routing consults. A plain `Engine` ignores
+    /// it.
+    pub breaker: BreakerConfig,
     /// Frames a serve job's async ingest thread may stage ahead of the
     /// admission loop. Decouples real-time frame pacing from box
     /// admission: a transient worker stall is absorbed by up to this many
@@ -295,6 +317,9 @@ impl Default for RunConfig {
             queue_policy: QueuePolicy::RoundRobin,
             drr_weights: DrrWeights::default(),
             shards: 1,
+            max_inflight: 0,
+            failover: true,
+            breaker: BreakerConfig::default(),
             ingest_depth: 16,
             device: "k20".into(),
             artifacts_dir: "artifacts".into(),
@@ -339,6 +364,7 @@ impl RunConfig {
                     .into(),
             ));
         }
+        self.breaker.validate()?;
         if self.intra_box_threads == 0 {
             return Err(Error::Config(
                 "intra_box_threads must be > 0 (1 = serial fused pass)"
@@ -598,6 +624,32 @@ mod tests {
             ..RunConfig::default()
         };
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn breaker_is_validated_with_the_config() {
+        let cfg = RunConfig {
+            breaker: BreakerConfig {
+                degrade_after: 0,
+                ..BreakerConfig::default()
+            },
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err(), "zero threshold rejected");
+        let cfg = RunConfig {
+            breaker: BreakerConfig {
+                degrade_after: 1,
+                down_after: 1,
+                probe_after_ms: 10,
+            },
+            max_inflight: 4,
+            failover: false,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        // max_inflight = 0 (unbounded) is the valid default.
+        assert_eq!(RunConfig::default().max_inflight, 0);
+        assert!(RunConfig::default().failover);
     }
 
     #[test]

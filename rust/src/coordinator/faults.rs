@@ -1,9 +1,12 @@
 //! Deterministic, seeded fault injection for the engine's chaos testing.
 //!
 //! A [`FaultPlan`] carries one probability per [`FaultSite`] — the five
-//! places a streaming box can die: ingest-side extraction and staging,
-//! executor panic, executor error, and result delivery. Whether a given
-//! (site, job, box, attempt) fires is a PURE FUNCTION of the plan's seed
+//! places a streaming box can die (ingest-side extraction and staging,
+//! executor panic, executor error, and result delivery) plus one
+//! shard-LEVEL site ([`FaultSite::ShardDown`]: a worker-pool collapse,
+//! injected at the fleet's submission front rather than per box).
+//! Whether a given (site, job, box, attempt) fires is a PURE FUNCTION
+//! of the plan's seed
 //! — a splitmix64 hash chain, no shared RNG state — so two runs with the
 //! same seed and the same submission order inject byte-for-byte the same
 //! faults, concurrency notwithstanding. That determinism is what makes
@@ -43,10 +46,19 @@ pub enum FaultSite {
     /// The finished result is lost in delivery to the job's collector.
     /// Retryable — the box re-executes.
     ResultRoute,
+    /// Shard-level: the target shard's worker pool collapses at
+    /// submission (the whole engine, not one box). Fired by the fleet
+    /// front with coordinates (submission seq, shard index, failover
+    /// attempt); the per-box engine path never consults it. With
+    /// failover enabled the fleet resubmits to another healthy shard.
+    ShardDown,
 }
 
 impl FaultSite {
-    /// Every site, in hash-tag order.
+    /// Every PER-BOX site, in hash-tag order. [`FaultSite::ShardDown`]
+    /// is deliberately excluded: it is a shard-level site that `all=`
+    /// and [`FaultPlan::uniform`] do not cover, which keeps seeded
+    /// engine chaos runs byte-identical across the site's addition.
     pub const ALL: [FaultSite; 5] = [
         FaultSite::Extract,
         FaultSite::Stage,
@@ -62,6 +74,7 @@ impl FaultSite {
             FaultSite::ExecutePanic => "exec-panic",
             FaultSite::ExecuteError => "exec-error",
             FaultSite::ResultRoute => "route",
+            FaultSite::ShardDown => "shard-down",
         }
     }
 
@@ -74,6 +87,7 @@ impl FaultSite {
             FaultSite::ExecutePanic => 3,
             FaultSite::ExecuteError => 4,
             FaultSite::ResultRoute => 5,
+            FaultSite::ShardDown => 6,
         }
     }
 }
@@ -95,6 +109,10 @@ pub struct FaultPlan {
     pub exec_error: f64,
     /// P(fire) at [`FaultSite::ResultRoute`].
     pub route: f64,
+    /// P(fire) at [`FaultSite::ShardDown`] — shard-level, consulted by
+    /// the fleet front only. NOT covered by `all=` /
+    /// [`FaultPlan::uniform`]; set it via the `shard-down` key.
+    pub shard_down: f64,
 }
 
 /// splitmix64 (Steele et al.) — the one-shot mixer under
@@ -117,10 +135,13 @@ impl FaultPlan {
             exec_panic: 0.0,
             exec_error: 0.0,
             route: 0.0,
+            shard_down: 0.0,
         }
     }
 
-    /// A plan firing with probability `p` at EVERY site.
+    /// A plan firing with probability `p` at every PER-BOX site
+    /// ([`FaultSite::ShardDown`] stays 0 — shard-level injection is
+    /// opt-in via the `shard-down` key or struct update).
     pub fn uniform(seed: u64, p: f64) -> Result<FaultPlan> {
         let plan = FaultPlan {
             seed,
@@ -129,6 +150,7 @@ impl FaultPlan {
             exec_panic: p,
             exec_error: p,
             route: p,
+            shard_down: 0.0,
         };
         plan.validate()?;
         Ok(plan)
@@ -142,6 +164,7 @@ impl FaultPlan {
             FaultSite::ExecutePanic => self.exec_panic,
             FaultSite::ExecuteError => self.exec_error,
             FaultSite::ResultRoute => self.route,
+            FaultSite::ShardDown => self.shard_down,
         }
     }
 
@@ -174,7 +197,10 @@ impl FaultPlan {
 
     /// Reject rates outside `[0, 1]` (or NaN).
     pub fn validate(&self) -> Result<()> {
-        for site in FaultSite::ALL {
+        let sites = FaultSite::ALL
+            .into_iter()
+            .chain(std::iter::once(FaultSite::ShardDown));
+        for site in sites {
             let p = self.rate(site);
             if !(0.0..=1.0).contains(&p) {
                 return Err(Error::Config(format!(
@@ -187,9 +213,11 @@ impl FaultPlan {
     }
 
     /// Parse `key=value` pairs separated by commas. Keys: `seed` (u64),
-    /// one per site (`extract`, `stage`, `exec-panic`, `exec-error`,
-    /// `route`), and `all` (sets every site). Later keys override
-    /// earlier ones, so `all=0.05,route=0` reads naturally.
+    /// one per per-box site (`extract`, `stage`, `exec-panic`,
+    /// `exec-error`, `route`), `shard-down` (the shard-level site —
+    /// NOT included in `all`), and `all` (sets every per-box site).
+    /// Later keys override earlier ones, so `all=0.05,route=0` reads
+    /// naturally.
     pub fn parse(s: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::new(0);
         for part in s.split(',') {
@@ -226,10 +254,12 @@ impl FaultPlan {
                 "exec-panic" => plan.exec_panic = p,
                 "exec-error" => plan.exec_error = p,
                 "route" => plan.route = p,
+                "shard-down" => plan.shard_down = p,
                 _ => {
                     return Err(Error::Config(format!(
                         "fault plan: unknown key '{key}' (expected seed|\
-                         all|extract|stage|exec-panic|exec-error|route)"
+                         all|extract|stage|exec-panic|exec-error|route|\
+                         shard-down)"
                     )))
                 }
             }
@@ -255,13 +285,14 @@ impl std::fmt::Display for FaultPlan {
         write!(
             f,
             "seed={},extract={},stage={},exec-panic={},exec-error={},\
-             route={}",
+             route={},shard-down={}",
             self.seed,
             self.extract,
             self.stage,
             self.exec_panic,
             self.exec_error,
-            self.route
+            self.route,
+            self.shard_down
         )
     }
 }
@@ -346,6 +377,31 @@ mod tests {
             let want = if site == FaultSite::ResultRoute { 0.0 } else { 0.05 };
             assert_eq!(plan.rate(site), want, "{}", site.name());
         }
+    }
+
+    #[test]
+    fn shard_down_is_opt_in_and_roundtrips() {
+        // Neither `uniform` nor `all=` touches the shard-level site —
+        // that invariant keeps pinned-seed engine chaos runs stable.
+        assert_eq!(FaultPlan::uniform(2026, 0.05).unwrap().shard_down, 0.0);
+        assert_eq!(
+            FaultPlan::parse("seed=3,all=0.5").unwrap().shard_down,
+            0.0
+        );
+        let plan =
+            FaultPlan::parse("seed=5,shard-down=0.25,route=0.1").unwrap();
+        assert_eq!(plan.shard_down, 0.25);
+        assert_eq!(plan.rate(FaultSite::ShardDown), 0.25);
+        assert_eq!(plan.route, 0.1);
+        let reparsed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(reparsed, plan);
+        // Same hash chain as the per-box sites, new domain tag: firing
+        // is deterministic and validated like any other rate.
+        assert_eq!(
+            plan.fires(FaultSite::ShardDown, 0, 1, 0),
+            plan.fires(FaultSite::ShardDown, 0, 1, 0)
+        );
+        assert!(FaultPlan::parse("shard-down=1.5").is_err());
     }
 
     #[test]

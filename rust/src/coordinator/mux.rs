@@ -194,6 +194,13 @@ impl<T> MuxQueue<T> {
         self.inner.svc_est_ns.store(new, Ordering::Relaxed);
     }
 
+    /// The current per-box service-time EWMA in nanoseconds (0 = no
+    /// observation yet). The fleet front reads this for deadline-aware
+    /// admission: estimated wait ≈ backlog × this estimate.
+    pub fn service_estimate_ns(&self) -> u64 {
+        self.inner.svc_est_ns.load(Ordering::Relaxed)
+    }
+
     /// Retire a job's lane, discarding anything still queued in it.
     /// Producers blocked on the lane wake and observe it gone (their push
     /// returns `false`).

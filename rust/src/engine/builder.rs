@@ -8,7 +8,8 @@
 
 use super::session::Engine;
 use crate::config::{
-    Backend, DrrWeights, FaultPlan, FusionMode, Isa, QueuePolicy, RunConfig,
+    Backend, BreakerConfig, DrrWeights, FaultPlan, FusionMode, Isa,
+    QueuePolicy, RunConfig,
 };
 use crate::fusion::halo::BoxDims;
 use crate::Result;
@@ -130,6 +131,29 @@ impl EngineBuilder {
         self
     }
 
+    /// Fleet admission bound: most outstanding fleet submissions per
+    /// shard, 0 = unbounded (see [`RunConfig::max_inflight`]). A plain
+    /// `Engine` ignores it.
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.cfg.max_inflight = n;
+        self
+    }
+
+    /// Cross-shard failover on terminal shard failures (see
+    /// [`RunConfig::failover`]). Default on; a plain `Engine` ignores
+    /// it.
+    pub fn failover(mut self, on: bool) -> Self {
+        self.cfg.failover = on;
+        self
+    }
+
+    /// Per-shard circuit-breaker thresholds (see [`BreakerConfig`]). A
+    /// plain `Engine` ignores it.
+    pub fn breaker(mut self, cfg: BreakerConfig) -> Self {
+        self.cfg.breaker = cfg;
+        self
+    }
+
     /// Frames a serve job's pacer may stage ahead of box admission (the
     /// async-ingest buffer; see [`RunConfig::ingest_depth`]).
     pub fn ingest_depth(mut self, depth: usize) -> Self {
@@ -232,6 +256,13 @@ mod tests {
                 serve: 5,
             })
             .shards(2)
+            .max_inflight(6)
+            .failover(false)
+            .breaker(BreakerConfig {
+                degrade_after: 1,
+                down_after: 2,
+                probe_after_ms: 10,
+            })
             .ingest_depth(5)
             .device("gtx750ti")
             .frame_size(64)
@@ -262,6 +293,16 @@ mod tests {
             }
         );
         assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.max_inflight, 6);
+        assert!(!cfg.failover);
+        assert_eq!(
+            cfg.breaker,
+            BreakerConfig {
+                degrade_after: 1,
+                down_after: 2,
+                probe_after_ms: 10,
+            }
+        );
         assert_eq!(cfg.ingest_depth, 5);
         assert_eq!(cfg.device, "gtx750ti");
         assert_eq!(cfg.frame_size, 64);

@@ -688,6 +688,21 @@ impl Engine {
         self.core.calib.lock().unwrap().key.clone()
     }
 
+    /// Executors rebuilt after caught panics so far — a cheap, lock-free
+    /// health signal (the fleet's breaker folds respawn DELTAS between
+    /// observations into shard-failure evidence).
+    pub fn respawns(&self) -> u64 {
+        self.core.respawns.load(Ordering::Relaxed)
+    }
+
+    /// The ready queue's per-box service-time EWMA in nanoseconds (0 =
+    /// nothing executed yet). With [`Engine::queued_boxes`] this prices
+    /// the fleet's deadline-aware admission check: estimated wait ≈
+    /// backlog × estimate.
+    pub fn service_estimate_ns(&self) -> u64 {
+        self.core.queue.service_estimate_ns()
+    }
+
     /// Orderly teardown: DRAIN every in-flight job to completion (the
     /// deterministic-shutdown contract — no submitted box is abandoned),
     /// then close the queue, join every worker, and surface the first

@@ -21,6 +21,10 @@ pub enum Error {
     Coordinator(String),
     /// Configuration parse errors (CLI or config file).
     Config(String),
+    /// Admission refused at submit time: every compatible shard is
+    /// saturated, down, or cannot meet the job's deadline. The job was
+    /// never queued — resubmit later or relax the deadline.
+    Overloaded(String),
     /// Filesystem errors (manifest / HLO text loading).
     Io(std::io::Error),
 }
@@ -34,6 +38,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Io(e) => e.fmt(f),
         }
     }
@@ -76,6 +81,10 @@ mod tests {
         assert_eq!(
             format!("{}", Error::Coordinator("pool died".into())),
             "coordinator error: pool died"
+        );
+        assert_eq!(
+            format!("{}", Error::Overloaded("every shard down".into())),
+            "overloaded: every shard down"
         );
     }
 

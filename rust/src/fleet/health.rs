@@ -1,0 +1,374 @@
+//! Per-shard health: a deterministic circuit breaker.
+//!
+//! The fleet front keeps one [`ShardBreaker`] per shard and folds in the
+//! signals the engines already emit — executor respawns (worker
+//! supervision rebuilding a panicked executor), terminal job failures
+//! (an `Err` from a fleet handle's wait, which by the engine's contract
+//! means infrastructure collapse, not a bad box), and injected
+//! shard-down faults. The derived [`Health`] drives routing:
+//!
+//! ```text
+//! Healthy ──failure×degrade_after──▶ Degraded ──failure×down_after──▶ Down
+//!    ▲                                   │                             │
+//!    └────────────── success ────────────┴──◀── half-open probe ───────┘
+//! ```
+//!
+//! * **Healthy** — routed normally.
+//! * **Degraded** — still admits work, but ranks behind every healthy
+//!   shard. Entered after `degrade_after` consecutive failures, or on
+//!   respawn evidence (the engine rebuilt an executor since the last
+//!   observation — suspicion, not proof, so it never drives Down).
+//! * **Down** — not routed. After `probe_after_ms` the breaker goes
+//!   half-open: exactly ONE probe job may route to the shard; success
+//!   restores Healthy, failure re-arms the window.
+//!
+//! Every method is a pure function of the call sequence and the
+//! timestamps passed in (`now: Instant` is a parameter, never sampled
+//! internally), so tests drive the clock and replay transitions
+//! bitwise.
+
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Health of one shard as seen by the fleet front. Ordered by routing
+/// preference: `Healthy < Degraded < Down`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Health {
+    /// No adverse evidence; routed normally.
+    Healthy,
+    /// Suspect (consecutive failures below the trip point, or respawn
+    /// evidence): admits work but ranks behind healthy shards.
+    Degraded,
+    /// Breaker tripped: not routed, except one half-open probe per
+    /// elapsed probe window.
+    Down,
+}
+
+impl Health {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+        }
+    }
+}
+
+impl std::fmt::Display for Health {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Circuit-breaker thresholds (`RunConfig::breaker`, CLI `--breaker`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive failures after which a shard ranks Degraded.
+    pub degrade_after: u32,
+    /// Consecutive failures after which the breaker trips (Down).
+    pub down_after: u32,
+    /// Milliseconds a tripped shard sits out before ONE half-open probe
+    /// is allowed through.
+    pub probe_after_ms: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            degrade_after: 2,
+            down_after: 4,
+            probe_after_ms: 250,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Reject degenerate thresholds: both counts must be ≥ 1 and a
+    /// shard must degrade no later than it trips.
+    pub fn validate(&self) -> Result<()> {
+        if self.degrade_after == 0 || self.down_after == 0 {
+            return Err(Error::Config(
+                "breaker: degrade/down thresholds must be >= 1".into(),
+            ));
+        }
+        if self.degrade_after > self.down_after {
+            return Err(Error::Config(format!(
+                "breaker: degrade={} must not exceed down={}",
+                self.degrade_after, self.down_after
+            )));
+        }
+        if self.probe_after_ms == 0 {
+            return Err(Error::Config(
+                "breaker: probe-ms must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse `key=value` pairs separated by commas. Keys: `degrade`,
+    /// `down` (consecutive-failure counts), `probe-ms` (half-open
+    /// window). Missing keys keep their defaults; later keys override.
+    pub fn parse(s: &str) -> Result<BreakerConfig> {
+        let mut cfg = BreakerConfig::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "breaker: expected key=value, got '{part}'"
+                ))
+            })?;
+            let n: u64 = value.parse().map_err(|_| {
+                Error::Config(format!(
+                    "breaker: bad value '{value}' for '{key}'"
+                ))
+            })?;
+            match key {
+                "degrade" => cfg.degrade_after = n as u32,
+                "down" => cfg.down_after = n as u32,
+                "probe-ms" => cfg.probe_after_ms = n,
+                _ => {
+                    return Err(Error::Config(format!(
+                        "breaker: unknown key '{key}' (expected \
+                         degrade|down|probe-ms)"
+                    )))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl std::fmt::Display for BreakerConfig {
+    /// Round-trips through [`BreakerConfig::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degrade={},down={},probe-ms={}",
+            self.degrade_after, self.down_after, self.probe_after_ms
+        )
+    }
+}
+
+/// The per-shard state machine. Deterministic: state is a pure function
+/// of the sequence of `record_*` / `observe_respawns` / `on_placed`
+/// calls and the `Instant`s handed to them.
+#[derive(Debug)]
+pub struct ShardBreaker {
+    cfg: BreakerConfig,
+    /// Consecutive terminal failures since the last success.
+    consecutive: u32,
+    /// Respawn evidence since the last success: the engine rebuilt an
+    /// executor. Degrades but never trips (supervision already healed).
+    respawn_suspect: bool,
+    /// Respawn counter value at the last observation (deltas are the
+    /// signal).
+    last_respawns: u64,
+    /// When the breaker (most recently) tripped; re-armed by a failed
+    /// probe.
+    down_since: Option<Instant>,
+    /// A half-open probe has been placed and has not yet reported.
+    probe_inflight: bool,
+}
+
+impl ShardBreaker {
+    pub fn new(cfg: BreakerConfig) -> ShardBreaker {
+        ShardBreaker {
+            cfg,
+            consecutive: 0,
+            respawn_suspect: false,
+            last_respawns: 0,
+            down_since: None,
+            probe_inflight: false,
+        }
+    }
+
+    /// Current health under the configured thresholds.
+    pub fn state(&self) -> Health {
+        if self.consecutive >= self.cfg.down_after {
+            Health::Down
+        } else if self.consecutive >= self.cfg.degrade_after
+            || self.respawn_suspect
+        {
+            Health::Degraded
+        } else {
+            Health::Healthy
+        }
+    }
+
+    /// Whether routing may place a job on this shard at `now`. Healthy
+    /// and Degraded always admit; Down admits only the one half-open
+    /// probe once `probe_after_ms` has elapsed since the trip.
+    pub fn allows(&self, now: Instant) -> bool {
+        if self.state() != Health::Down {
+            return true;
+        }
+        if self.probe_inflight {
+            return false;
+        }
+        match self.down_since {
+            Some(since) => {
+                now.duration_since(since)
+                    >= Duration::from_millis(self.cfg.probe_after_ms)
+            }
+            None => true,
+        }
+    }
+
+    /// Routing chose this shard. If it is Down, the placement is the
+    /// half-open probe — mark it so no second probe slips through
+    /// before this one reports.
+    pub fn on_placed(&mut self) {
+        if self.state() == Health::Down {
+            self.probe_inflight = true;
+        }
+    }
+
+    /// One terminal shard-level failure (wait returned `Err`, injected
+    /// shard-down, teardown error) observed at `now`.
+    pub fn record_failure(&mut self, now: Instant) {
+        self.consecutive = self.consecutive.saturating_add(1);
+        self.probe_inflight = false;
+        if self.consecutive >= self.cfg.down_after {
+            // First trip stamps the window; a failed probe re-arms it.
+            self.down_since = Some(now);
+        }
+    }
+
+    /// One job completed successfully on the shard: full reset (a
+    /// half-open probe succeeding lands here and restores Healthy).
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+        self.respawn_suspect = false;
+        self.down_since = None;
+        self.probe_inflight = false;
+    }
+
+    /// Fold the engine's monotonic respawn counter in: any delta since
+    /// the last observation is suspicion (Degraded), cleared by the
+    /// next success.
+    pub fn observe_respawns(&mut self, total: u64) {
+        if total > self.last_respawns {
+            self.last_respawns = total;
+            self.respawn_suspect = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clock() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn lifecycle_replays_bitwise_with_an_injected_clock() {
+        let t0 = clock();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let run = || {
+            let mut b = ShardBreaker::new(BreakerConfig::default());
+            let mut log = Vec::new();
+            let mut step = |h: Health, allowed: bool| {
+                log.push((h, allowed));
+            };
+            step(b.state(), b.allows(at(0)));
+            b.record_failure(at(1));
+            step(b.state(), b.allows(at(1)));
+            b.record_failure(at(2)); // 2 = degrade_after
+            step(b.state(), b.allows(at(2)));
+            b.record_failure(at(3));
+            b.record_failure(at(4)); // 4 = down_after → trips at t=4
+            step(b.state(), b.allows(at(5)));
+            // Half-open: 250 ms after the trip ONE probe is allowed.
+            step(b.state(), b.allows(at(254)));
+            step(b.state(), b.allows(at(255)));
+            b.on_placed(); // the probe routes
+            step(b.state(), b.allows(at(256)));
+            b.record_success(); // probe succeeded
+            step(b.state(), b.allows(at(257)));
+            log
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs, same transition log");
+        assert_eq!(
+            a,
+            vec![
+                (Health::Healthy, true),
+                (Health::Healthy, true),
+                (Health::Degraded, true),
+                (Health::Down, false),
+                (Health::Down, false), // 250 ms window not yet elapsed
+                (Health::Down, true),  // half-open
+                (Health::Down, false), // probe inflight: no second probe
+                (Health::Healthy, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn failed_probe_rearms_the_window() {
+        let t0 = clock();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut b = ShardBreaker::new(BreakerConfig::default());
+        for i in 0..4 {
+            b.record_failure(at(i));
+        }
+        assert_eq!(b.state(), Health::Down);
+        assert!(b.allows(at(253)));
+        b.on_placed();
+        b.record_failure(at(260)); // probe failed → window restarts
+        assert!(!b.allows(at(400)), "only 140 ms since the re-arm");
+        assert!(b.allows(at(510)), "a full window after the re-arm");
+    }
+
+    #[test]
+    fn respawn_evidence_degrades_but_never_trips() {
+        let mut b = ShardBreaker::new(BreakerConfig::default());
+        b.observe_respawns(3);
+        assert_eq!(b.state(), Health::Degraded);
+        b.observe_respawns(3); // no delta → no new evidence
+        b.observe_respawns(100); // any delta is still just suspicion
+        assert_eq!(b.state(), Health::Degraded);
+        assert!(b.allows(clock()), "degraded shards still admit work");
+        b.record_success();
+        assert_eq!(b.state(), Health::Healthy);
+        // The counter is monotonic: the reset does not replay old deltas.
+        b.observe_respawns(100);
+        assert_eq!(b.state(), Health::Healthy);
+        b.observe_respawns(101);
+        assert_eq!(b.state(), Health::Degraded);
+    }
+
+    #[test]
+    fn config_parse_display_roundtrip_and_validation() {
+        let cfg = BreakerConfig::parse("degrade=3,down=9,probe-ms=50")
+            .unwrap();
+        assert_eq!(cfg.degrade_after, 3);
+        assert_eq!(cfg.down_after, 9);
+        assert_eq!(cfg.probe_after_ms, 50);
+        assert_eq!(BreakerConfig::parse(&cfg.to_string()).unwrap(), cfg);
+        // Partial strings keep defaults for the rest.
+        let partial = BreakerConfig::parse("down=8").unwrap();
+        assert_eq!(partial.degrade_after, 2);
+        assert_eq!(partial.down_after, 8);
+        assert!(BreakerConfig::parse("degrade=0").is_err());
+        assert!(BreakerConfig::parse("degrade=5,down=2").is_err());
+        assert!(BreakerConfig::parse("probe-ms=0").is_err());
+        assert!(BreakerConfig::parse("warp=1").is_err());
+        assert!(BreakerConfig::parse("degrade").is_err());
+        assert!(BreakerConfig::parse("degrade=x").is_err());
+    }
+
+    #[test]
+    fn health_orders_by_routing_preference() {
+        assert!(Health::Healthy < Health::Degraded);
+        assert!(Health::Degraded < Health::Down);
+        assert_eq!(Health::Down.to_string(), "down");
+    }
+}

@@ -1,12 +1,19 @@
-//! `kfuse::fleet` — one submission front over N engines ("shards").
+//! `kfuse::fleet` — one resilient submission front over N engines
+//! ("shards").
 //!
 //! A [`Fleet`] owns a set of independently built [`Engine`]s and routes
-//! each submitted job to one of them. Routing weighs three inputs:
+//! each submitted job to one of them. Routing weighs four inputs:
 //!
 //! * **plan compatibility** — a placement may require a pipeline; only
 //!   shards whose [`PlanKey`] plans it are candidates (two engines with
 //!   equal keys execute compatible plans, so the check is a key match,
 //!   the same identity the plan cache uses);
+//! * **health** — each shard carries a deterministic circuit breaker
+//!   ([`health::ShardBreaker`]) fed by the signals its engine already
+//!   emits: executor respawns, terminal job failures, injected
+//!   shard-down faults. Healthy shards rank ahead of degraded ones;
+//!   a Down shard is skipped entirely except for one half-open probe
+//!   per elapsed window (see [`health`]);
 //! * **load** — a shard's staged boxes ([`Engine::queued_boxes`]) plus
 //!   its in-flight jobs ([`Engine::active_jobs`]);
 //! * **pressure** — fleet submissions handed out but not yet waited on
@@ -20,11 +27,32 @@
 //! a shard, `QueuePolicy::LeastLaxity` schedules lanes by deadline
 //! laxity (see [`crate::coordinator::mux`]).
 //!
+//! **Admission control** (`RunConfig::max_inflight` > 0 turns it on):
+//! a shard carrying `max_inflight` outstanding fleet submissions stops
+//! admitting, and when EVERY compatible shard is saturated — or a
+//! deadline job's estimated queue wait (shard backlog × the mux's
+//! measured per-box service EWMA) already exceeds its deadline on every
+//! admissible shard — the submission is rejected at the front door with
+//! [`Error::Overloaded`] instead of queuing into guaranteed shedding.
+//! Rejections are per-tenant counted in [`FleetStats`].
+//!
+//! **Cross-shard failover** (`RunConfig::failover`, default on): an
+//! `Err` from a fleet handle's wait means shard-level infrastructure
+//! collapse (the engine's contract — per-box failures land in
+//! disposition columns instead), so the fleet records the failure on
+//! the shard's breaker and, while the job's deadline budget allows,
+//! transparently resubmits the job to a compatible shard the breaker
+//! still admits. The seeded [`FaultSite::ShardDown`] site injects
+//! exactly this collapse at the submission front for deterministic
+//! chaos tests. Failovers are counted per source shard and per tenant.
+//!
 //! Accounting is exact, in the same sense the engine's per-job rows are:
 //! [`Fleet::stats`] returns per-shard [`EngineStats`], an additive
-//! `totals` roll-up, and per-tenant [`TenantStats`] rows built from the
+//! `totals` roll-up, per-tenant [`TenantStats`] rows built from the
 //! same per-job rows the totals are — so every tenant column sums to the
-//! corresponding fleet total, across ALL disposition columns.
+//! corresponding fleet total, across ALL disposition columns — and the
+//! resilience ledger (failovers per shard, rejections per tenant),
+//! which partitions the same way.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -36,6 +64,7 @@
 //! let cfg = RunConfig {
 //!     backend: Backend::Cpu,
 //!     shards: 2,
+//!     max_inflight: 8, // bound each shard; 0 = unbounded
 //!     ..RunConfig::default()
 //! };
 //! let fleet = Fleet::from_config(cfg)?;
@@ -53,11 +82,18 @@
 //! fleet.shutdown()
 //! # }
 //! ```
+//!
+//! [`FaultSite::ShardDown`]: crate::coordinator::faults::FaultSite::ShardDown
 
+pub mod health;
+
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::{Isa, RunConfig};
+use crate::coordinator::faults::FaultSite;
 use crate::coordinator::metrics::{MetricsReport, WaitHist};
 use crate::coordinator::mux::JobId;
 use crate::engine::{
@@ -66,6 +102,9 @@ use crate::engine::{
 use crate::fusion::calibrate::PlanKey;
 use crate::video::Video;
 use crate::{Error, Result};
+
+pub use health::{BreakerConfig, Health};
+use health::ShardBreaker;
 
 /// Per-shard overrides applied on top of the fleet's base [`RunConfig`].
 /// `None` keeps the base value, so `ShardSpec::default()` is a clone of
@@ -161,6 +200,7 @@ impl FleetBuilder {
             }
             vec![ShardSpec::default(); n]
         };
+        self.base.breaker.validate()?;
         let mut shards = Vec::with_capacity(specs.len());
         for spec in &specs {
             let engine = Engine::from_config(spec.apply(&self.base))?;
@@ -169,23 +209,32 @@ impl FleetBuilder {
                 engine,
                 key,
                 pressure: Arc::new(AtomicU64::new(0)),
+                breaker: Mutex::new(ShardBreaker::new(self.base.breaker)),
             });
         }
+        let n = shards.len();
         Ok(Fleet {
             shards,
             base: self.base,
             tenants: Mutex::new(Vec::new()),
+            ledger: Mutex::new(Ledger {
+                failed_over: vec![0; n],
+                tenant_failed_over: BTreeMap::new(),
+                tenant_rejected: BTreeMap::new(),
+            }),
+            seq: AtomicU64::new(0),
         })
     }
 }
 
 /// One engine behind the front, with its routing inputs: the plan-cache
-/// key it was built under (compatibility) and the count of fleet handles
-/// outstanding against it (pressure).
+/// key it was built under (compatibility), the count of fleet handles
+/// outstanding against it (pressure), and its circuit breaker (health).
 struct Shard {
     engine: Engine,
     key: PlanKey,
     pressure: Arc<AtomicU64>,
+    breaker: Mutex<ShardBreaker>,
 }
 
 /// Where a fleet submission should land and who it is accounted to.
@@ -225,7 +274,8 @@ impl Placement {
 
 /// Decrements its shard's pressure counter when dropped — which a
 /// [`FleetHandle`] does once `wait` has consumed it (or when the caller
-/// detaches by dropping the handle).
+/// detaches by dropping the handle: the slot is released even though the
+/// job still runs, so routing recovers the shard as a target).
 struct PressureGuard(Arc<AtomicU64>);
 
 impl PressureGuard {
@@ -241,20 +291,77 @@ impl Drop for PressureGuard {
     }
 }
 
+/// How a fleet handle resubmits its job to another engine on failover
+/// (plain `fn` so handles stay `Send` without boxing).
+type SubmitFn<T> = fn(
+    &Engine,
+    Arc<Video>,
+    JobOptions,
+    Option<ServeOpts>,
+) -> Result<crate::engine::JobHandle<T>>;
+
+fn do_submit_batch(
+    e: &Engine,
+    clip: Arc<Video>,
+    opts: JobOptions,
+    _serve: Option<ServeOpts>,
+) -> Result<crate::engine::JobHandle<RunReport>> {
+    e.submit_batch_with(clip, opts)
+}
+
+fn do_submit_serve(
+    e: &Engine,
+    clip: Arc<Video>,
+    jopts: JobOptions,
+    serve: Option<ServeOpts>,
+) -> Result<crate::engine::JobHandle<MetricsReport>> {
+    e.submit_serve_with(
+        clip,
+        serve.expect("serve submission carries ServeOpts"),
+        jopts,
+    )
+}
+
+fn do_submit_roi(
+    e: &Engine,
+    clip: Arc<Video>,
+    opts: JobOptions,
+    _serve: Option<ServeOpts>,
+) -> Result<crate::engine::JobHandle<(RunReport, f64)>> {
+    e.submit_roi_with(clip, opts)
+}
+
 /// A fleet-routed, in-flight job: the engine [`JobHandle`] plus which
 /// shard it landed on. Holds pressure against that shard until waited
 /// (or dropped — a detached job still runs and still lands in stats;
 /// the shard's own `active_jobs` keeps counting it for load routing).
 ///
+/// The handle borrows the fleet (`'f`): that back-reference is what
+/// lets [`FleetHandle::wait`] fail a collapsed shard over to a healthy
+/// one transparently. The borrow also guarantees every handle is
+/// resolved (waited or dropped) before [`Fleet::shutdown`] can consume
+/// the fleet.
+///
 /// [`JobHandle`]: crate::engine::JobHandle
-pub struct FleetHandle<T> {
+pub struct FleetHandle<'f, T> {
+    fleet: &'f Fleet,
     inner: crate::engine::JobHandle<T>,
     shard: usize,
     _pressure: PressureGuard,
+    /// Everything needed to resubmit on failover.
+    clip: Arc<Video>,
+    place: Placement,
+    opts: JobOptions,
+    serve: Option<ServeOpts>,
+    resubmit: SubmitFn<T>,
+    /// Absolute deadline fixed at FIRST submission — the failover
+    /// budget: a resubmission carries only the remaining slice.
+    deadline_at: Option<Instant>,
 }
 
-impl<T> FleetHandle<T> {
-    /// Index of the shard the job was routed to.
+impl<T> FleetHandle<'_, T> {
+    /// Index of the shard the job is currently placed on (failover can
+    /// move it between submission and completion).
     pub fn shard(&self) -> usize {
         self.shard
     }
@@ -271,9 +378,93 @@ impl<T> FleetHandle<T> {
     }
 
     /// Block until the job completes and return its report.
+    ///
+    /// An `Ok` feeds the shard's breaker a success. An `Err` means the
+    /// SHARD failed (engine teardown, worker-pool collapse — per-box
+    /// problems land in disposition columns, never here): the breaker
+    /// records the failure and, with `failover` on and deadline budget
+    /// remaining, the job is resubmitted to a compatible shard the
+    /// breaker still admits and waited again. When no alternative
+    /// exists the ORIGINAL error is returned.
     pub fn wait(self) -> Result<T> {
-        self.inner.wait()
+        let FleetHandle {
+            fleet,
+            mut inner,
+            mut shard,
+            // Held for its Drop (pressure release); swapped on each
+            // failover hop so pressure follows the job's live shard.
+            _pressure: mut _guard,
+            clip,
+            place,
+            opts,
+            serve,
+            resubmit,
+            deadline_at,
+        } = self;
+        let mut hops = 0usize;
+        loop {
+            match inner.wait() {
+                Ok(v) => {
+                    fleet.shards[shard]
+                        .breaker
+                        .lock()
+                        .unwrap()
+                        .record_success();
+                    return Ok(v);
+                }
+                Err(e) => {
+                    let now = Instant::now();
+                    fleet.shards[shard]
+                        .breaker
+                        .lock()
+                        .unwrap()
+                        .record_failure(now);
+                    // Bounded: at most one hop per shard in the fleet.
+                    if !fleet.base.failover || hops >= fleet.shards.len()
+                    {
+                        return Err(e);
+                    }
+                    // Remaining deadline budget; a job already past its
+                    // deadline is not worth moving.
+                    let budget = match deadline_at {
+                        Some(at) if at <= now => return Err(e),
+                        Some(at) => Some(at.duration_since(now)),
+                        None => None,
+                    };
+                    let retry = JobOptions {
+                        deadline: budget,
+                        ..opts
+                    };
+                    match fleet.place_failover(
+                        &clip, &place, retry, serve, resubmit, shard,
+                    ) {
+                        Ok((ninner, nshard, nguard)) => {
+                            fleet.note_failover(shard, &place.tenant);
+                            inner = ninner;
+                            shard = nshard;
+                            _guard = nguard;
+                            hops += 1;
+                        }
+                        // No admissible alternative: the original
+                        // failure is the story.
+                        Err(_) => return Err(e),
+                    }
+                }
+            }
+        }
     }
+}
+
+/// Fleet-level resilience events the shard engines cannot see: jobs
+/// moved off a collapsed shard and submissions rejected at the door.
+struct Ledger {
+    /// Failovers counted against the SOURCE shard, in shard order.
+    failed_over: Vec<u64>,
+    /// Failovers per tenant (partitions `failed_over`'s sum).
+    tenant_failed_over: BTreeMap<String, u64>,
+    /// Admission rejections per tenant (rejected submissions never
+    /// reach a shard, so there is no per-shard attribution).
+    tenant_rejected: BTreeMap<String, u64>,
 }
 
 /// The single submission front: routes jobs across its shard engines and
@@ -285,6 +476,11 @@ pub struct Fleet {
     /// routing time — the join key that turns per-shard per-job rows
     /// into per-tenant rows.
     tenants: Mutex<Vec<(usize, u64, String)>>,
+    ledger: Mutex<Ledger>,
+    /// Monotonic submission sequence — the `job` coordinate the seeded
+    /// shard-down site hashes on (engine job ids are per-shard, so they
+    /// cannot key a fleet-level fault).
+    seq: AtomicU64,
 }
 
 impl Fleet {
@@ -309,35 +505,83 @@ impl Fleet {
         &self.base
     }
 
-    /// Pick a shard: filter by pipeline compatibility, then take the
-    /// least (load, pressure) for deadline jobs or the least (pressure,
-    /// load) for deadline-free ones — ties fall to the lowest index,
-    /// keeping routing deterministic under equal signals.
+    /// Outstanding fleet submissions against `shard` (the pressure
+    /// counter: incremented at submission, released when the handle is
+    /// waited OR dropped).
+    pub fn shard_pressure(&self, shard: usize) -> u64 {
+        self.shards[shard].pressure.load(Ordering::Relaxed)
+    }
+
+    /// Current breaker state of `shard`.
+    pub fn shard_health(&self, shard: usize) -> Health {
+        self.shards[shard].breaker.lock().unwrap().state()
+    }
+
+    /// The admission estimate for `shard`, as [`Fleet::route`] would
+    /// compute it right now: staged backlog × measured per-box service
+    /// EWMA. Zero until the shard has both a backlog and at least one
+    /// executed box. Exposed so operators (and tests) can see the same
+    /// signal the deadline-feasibility gate uses.
+    pub fn shard_estimated_wait(&self, shard: usize) -> Duration {
+        self.estimated_wait(shard)
+    }
+
+    /// Estimated queue wait on shard `i`: staged backlog × the mux's
+    /// measured per-box service EWMA (0 until something has executed).
+    fn estimated_wait(&self, i: usize) -> Duration {
+        let s = &self.shards[i];
+        let ns = s.engine.queued_boxes() as u128
+            * s.engine.service_estimate_ns() as u128;
+        Duration::from_nanos(ns.min(u64::MAX as u128) as u64)
+    }
+
+    /// Pick a shard. Filters: pipeline compatibility (hard error when
+    /// nothing matches), breaker admission (Down shards sit out except
+    /// one half-open probe per window), then — when admission control
+    /// is on (`max_inflight` > 0) — the per-shard inflight bound and,
+    /// for deadline jobs, wait feasibility (estimated backlog wait must
+    /// not already exceed the deadline). Survivors are ranked health
+    /// first, then least (load, pressure) for deadline jobs or least
+    /// (pressure, load) for deadline-free ones — ties fall to the
+    /// lowest index, keeping routing deterministic under equal signals.
     fn route(
         &self,
         pipeline: Option<&str>,
-        has_deadline: bool,
+        deadline: Option<Duration>,
+        exclude: Option<usize>,
     ) -> Result<usize> {
-        let pick = self
-            .shards
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| {
-                pipeline.is_none_or(|p| s.key.pipeline == p)
-            })
-            .min_by_key(|(i, s)| {
-                let load = s.engine.queued_boxes() as u64
-                    + s.engine.active_jobs();
-                let pressure = s.pressure.load(Ordering::Relaxed);
-                if has_deadline {
-                    (load, pressure, *i)
-                } else {
-                    (pressure, load, *i)
+        let now = Instant::now();
+        let max = self.base.max_inflight as u64;
+        let mut compat = 0usize;
+        let mut tripped = 0usize;
+        let mut saturated = 0usize;
+        let mut admitted: Vec<(Health, usize)> = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            if !pipeline.is_none_or(|p| s.key.pipeline == p) {
+                continue;
+            }
+            compat += 1;
+            if exclude == Some(i) {
+                continue;
+            }
+            let health = {
+                let mut b = s.breaker.lock().unwrap();
+                // Fold respawn deltas in before consulting health.
+                b.observe_respawns(s.engine.respawns());
+                if !b.allows(now) {
+                    tripped += 1;
+                    continue;
                 }
-            });
-        match pick {
-            Some((i, _)) => Ok(i),
-            None => Err(Error::Config(format!(
+                b.state()
+            };
+            if max > 0 && s.pressure.load(Ordering::Relaxed) >= max {
+                saturated += 1;
+                continue;
+            }
+            admitted.push((health, i));
+        }
+        if compat == 0 {
+            return Err(Error::Config(format!(
                 "no shard plans pipeline '{}' (shards plan: {})",
                 pipeline.unwrap_or("<any>"),
                 self.shards
@@ -345,27 +589,177 @@ impl Fleet {
                     .map(|s| s.key.pipeline.as_str())
                     .collect::<Vec<_>>()
                     .join(", ")
-            ))),
+            )));
         }
+        if admitted.is_empty() {
+            return Err(Error::Overloaded(format!(
+                "no admissible shard for pipeline '{}': {tripped} \
+                 tripped breaker(s) inside their probe window, \
+                 {saturated} at the max-inflight bound ({max})",
+                pipeline.unwrap_or("<any>"),
+            )));
+        }
+        if let (Some(d), true) = (deadline, max > 0) {
+            admitted.retain(|&(_, i)| self.estimated_wait(i) <= d);
+            if admitted.is_empty() {
+                return Err(Error::Overloaded(format!(
+                    "deadline {:.3} ms is infeasible on every \
+                     admissible shard (estimated backlog wait already \
+                     exceeds it)",
+                    d.as_secs_f64() * 1e3
+                )));
+            }
+        }
+        let (_, pick) = admitted
+            .into_iter()
+            .min_by_key(|&(h, i)| {
+                let s = &self.shards[i];
+                let load = s.engine.queued_boxes() as u64
+                    + s.engine.active_jobs();
+                let pressure = s.pressure.load(Ordering::Relaxed);
+                if deadline.is_some() {
+                    (h, load, pressure, i)
+                } else {
+                    (h, pressure, load, i)
+                }
+            })
+            .unwrap();
+        // If the pick is Down this placement is its half-open probe.
+        self.shards[pick].breaker.lock().unwrap().on_placed();
+        Ok(pick)
     }
 
-    /// Record the routed job's tenant and wrap its handle.
-    fn dispatch<T>(
+    /// Count one failover from `from_shard` for `tenant`.
+    fn note_failover(&self, from_shard: usize, tenant: &str) {
+        let mut led = self.ledger.lock().unwrap();
+        led.failed_over[from_shard] += 1;
+        *led
+            .tenant_failed_over
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Count one admission rejection for `tenant`.
+    fn note_rejection(&self, tenant: &str) {
+        *self
+            .ledger
+            .lock()
+            .unwrap()
+            .tenant_rejected
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Failover placement: route AWAY from the failed shard and submit
+    /// there. Used by [`FleetHandle::wait`]; the caller records the
+    /// failover on success.
+    fn place_failover<T>(
         &self,
-        shard: usize,
-        tenant: &str,
-        guard: PressureGuard,
-        inner: crate::engine::JobHandle<T>,
-    ) -> FleetHandle<T> {
+        clip: &Arc<Video>,
+        place: &Placement,
+        opts: JobOptions,
+        serve: Option<ServeOpts>,
+        resubmit: SubmitFn<T>,
+        exclude: usize,
+    ) -> Result<(crate::engine::JobHandle<T>, usize, PressureGuard)>
+    {
+        let shard = self.route(
+            place.pipeline.as_deref(),
+            opts.deadline,
+            Some(exclude),
+        )?;
+        let s = &self.shards[shard];
+        let guard = PressureGuard::acquire(&s.pressure);
+        let inner = resubmit(&s.engine, clip.clone(), opts, serve)?;
         self.tenants.lock().unwrap().push((
             shard,
             inner.id().0,
-            tenant.to_string(),
+            place.tenant.clone(),
         ));
-        FleetHandle {
-            inner,
-            shard,
-            _pressure: guard,
+        Ok((inner, shard, guard))
+    }
+
+    /// Shared submission path: route (counting Overloaded rejections),
+    /// fire the seeded shard-down site if armed (failing over or
+    /// erroring out), then submit and wrap the handle.
+    fn submit_inner<T>(
+        &self,
+        clip: Arc<Video>,
+        place: Placement,
+        opts: JobOptions,
+        serve: Option<ServeOpts>,
+        resubmit: SubmitFn<T>,
+    ) -> Result<FleetHandle<'_, T>> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut attempt: u32 = 0;
+        let mut exclude: Option<usize> = None;
+        loop {
+            let shard = match self.route(
+                place.pipeline.as_deref(),
+                opts.deadline,
+                exclude,
+            ) {
+                Ok(i) => i,
+                Err(e) => {
+                    if matches!(e, Error::Overloaded(_)) {
+                        self.note_rejection(&place.tenant);
+                    }
+                    return Err(e);
+                }
+            };
+            // Seeded shard-level chaos: the target's worker pool
+            // collapses at submission. Keyed (seq, shard, attempt)
+            // under the plan's seed, so fleet chaos runs replay
+            // exactly; a failover rolls fresh coordinates.
+            if let Some(f) = &self.base.faults {
+                if f.fires(
+                    FaultSite::ShardDown,
+                    seq,
+                    shard as u64,
+                    attempt,
+                ) {
+                    let now = Instant::now();
+                    self.shards[shard]
+                        .breaker
+                        .lock()
+                        .unwrap()
+                        .record_failure(now);
+                    if self.base.failover
+                        && self.shards.len() > 1
+                        && (attempt as usize) < self.shards.len()
+                    {
+                        self.note_failover(shard, &place.tenant);
+                        attempt += 1;
+                        exclude = Some(shard);
+                        continue;
+                    }
+                    return Err(Error::Coordinator(format!(
+                        "injected shard-down on shard {shard} \
+                         (submission {seq}, attempt {attempt})"
+                    )));
+                }
+            }
+            let s = &self.shards[shard];
+            let guard = PressureGuard::acquire(&s.pressure);
+            let inner = resubmit(&s.engine, clip.clone(), opts, serve)?;
+            let deadline_at = opts.deadline.map(|d| Instant::now() + d);
+            self.tenants.lock().unwrap().push((
+                shard,
+                inner.id().0,
+                place.tenant.clone(),
+            ));
+            return Ok(FleetHandle {
+                fleet: self,
+                inner,
+                shard,
+                _pressure: guard,
+                clip,
+                place,
+                opts,
+                serve,
+                resubmit,
+                deadline_at,
+            });
         }
     }
 
@@ -375,13 +769,8 @@ impl Fleet {
         clip: Arc<Video>,
         place: Placement,
         opts: JobOptions,
-    ) -> Result<FleetHandle<RunReport>> {
-        let shard =
-            self.route(place.pipeline.as_deref(), opts.deadline.is_some())?;
-        let s = &self.shards[shard];
-        let guard = PressureGuard::acquire(&s.pressure);
-        let inner = s.engine.submit_batch_with(clip, opts)?;
-        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    ) -> Result<FleetHandle<'_, RunReport>> {
+        self.submit_inner(clip, place, opts, None, do_submit_batch)
     }
 
     /// Route and submit a paced streaming job.
@@ -391,13 +780,8 @@ impl Fleet {
         opts: ServeOpts,
         place: Placement,
         jopts: JobOptions,
-    ) -> Result<FleetHandle<MetricsReport>> {
-        let shard = self
-            .route(place.pipeline.as_deref(), jopts.deadline.is_some())?;
-        let s = &self.shards[shard];
-        let guard = PressureGuard::acquire(&s.pressure);
-        let inner = s.engine.submit_serve_with(clip, opts, jopts)?;
-        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    ) -> Result<FleetHandle<'_, MetricsReport>> {
+        self.submit_inner(clip, place, jopts, Some(opts), do_submit_serve)
     }
 
     /// Route and submit a tracker-driven ROI job.
@@ -406,21 +790,18 @@ impl Fleet {
         clip: Arc<Video>,
         place: Placement,
         opts: JobOptions,
-    ) -> Result<FleetHandle<(RunReport, f64)>> {
-        let shard =
-            self.route(place.pipeline.as_deref(), opts.deadline.is_some())?;
-        let s = &self.shards[shard];
-        let guard = PressureGuard::acquire(&s.pressure);
-        let inner = s.engine.submit_roi_with(clip, opts)?;
-        Ok(self.dispatch(shard, &place.tenant, guard, inner))
+    ) -> Result<FleetHandle<'_, (RunReport, f64)>> {
+        self.submit_inner(clip, place, opts, None, do_submit_roi)
     }
 
     /// Fleet-level accounting: per-shard [`EngineStats`], an additive
-    /// roll-up, and per-tenant rows. Tenant rows are built from the SAME
-    /// per-job rows the shard totals accumulate, so every tenant column
-    /// sums exactly to the corresponding `totals` column (completed jobs
-    /// only — an in-flight job has no per-job row yet and contributes to
-    /// neither side).
+    /// roll-up, per-tenant rows, per-shard health, and the resilience
+    /// ledger. Tenant rows are built from the SAME per-job rows the
+    /// shard totals accumulate, so every tenant column sums exactly to
+    /// the corresponding `totals` column (completed jobs only — an
+    /// in-flight job has no per-job row yet and contributes to neither
+    /// side); tenant `failed_over`/`rejected` partition the ledger the
+    /// same way.
     pub fn stats(&self) -> FleetStats {
         let shards: Vec<EngineStats> =
             self.shards.iter().map(|s| s.engine.stats()).collect();
@@ -445,56 +826,90 @@ impl Fleet {
             totals.pool_allocs += s.pool_allocs;
             totals.replans += s.replans;
         }
-        let recs = self.tenants.lock().unwrap().clone();
-        let mut by_name =
-            std::collections::BTreeMap::<String, TenantStats>::new();
-        for (si, s) in shards.iter().enumerate() {
-            for row in &s.per_job {
-                let tenant = recs
-                    .iter()
-                    .find(|(rs, rj, _)| *rs == si && *rj == row.job)
-                    .map(|(_, _, t)| t.as_str())
-                    // Unreachable for fleet-routed jobs; a row without a
-                    // record (someone submitted to the engine directly)
-                    // still partitions under a visible bucket.
-                    .unwrap_or("<direct>");
-                let t = by_name
-                    .entry(tenant.to_string())
-                    .or_insert_with(|| TenantStats {
-                        tenant: tenant.to_string(),
-                        ..TenantStats::default()
-                    });
-                t.jobs += 1;
-                t.boxes += row.boxes;
-                t.dropped += row.dropped;
-                t.failed += row.failed;
-                t.quarantined += row.quarantined;
-                t.deadline_exceeded += row.deadline_exceeded;
-                t.retried_ok += row.retried_ok;
-                t.retries += row.retries;
-                t.queue_wait_nanos += row.queue_wait_nanos;
-                t.queue_wait_hist.merge(&row.queue_wait_hist);
+        fn row<'m>(
+            map: &'m mut BTreeMap<String, TenantStats>,
+            name: &str,
+        ) -> &'m mut TenantStats {
+            map.entry(name.to_string()).or_insert_with(|| TenantStats {
+                tenant: name.to_string(),
+                ..TenantStats::default()
+            })
+        }
+        let mut by_name = BTreeMap::<String, TenantStats>::new();
+        {
+            // Index the (shard, job) → tenant join once; the per-job
+            // loop below then looks up in O(log n) instead of scanning
+            // every submission record per row.
+            let recs = self.tenants.lock().unwrap();
+            let index: BTreeMap<(usize, u64), &str> = recs
+                .iter()
+                .map(|(s, j, t)| ((*s, *j), t.as_str()))
+                .collect();
+            for (si, s) in shards.iter().enumerate() {
+                for r in &s.per_job {
+                    let tenant = index
+                        .get(&(si, r.job))
+                        .copied()
+                        // Unreachable for fleet-routed jobs; a row
+                        // without a record (someone submitted to the
+                        // engine directly) still partitions under a
+                        // visible bucket.
+                        .unwrap_or("<direct>");
+                    let t = row(&mut by_name, tenant);
+                    t.jobs += 1;
+                    t.boxes += r.boxes;
+                    t.dropped += r.dropped;
+                    t.failed += r.failed;
+                    t.quarantined += r.quarantined;
+                    t.deadline_exceeded += r.deadline_exceeded;
+                    t.retried_ok += r.retried_ok;
+                    t.retries += r.retries;
+                    t.queue_wait_nanos += r.queue_wait_nanos;
+                    t.queue_wait_hist.merge(&r.queue_wait_hist);
+                }
             }
         }
+        let ledger = self.ledger.lock().unwrap();
+        for (name, n) in &ledger.tenant_failed_over {
+            row(&mut by_name, name).failed_over += n;
+        }
+        for (name, n) in &ledger.tenant_rejected {
+            row(&mut by_name, name).rejected += n;
+        }
         FleetStats {
+            health: self
+                .shards
+                .iter()
+                .map(|s| s.breaker.lock().unwrap().state())
+                .collect(),
+            failed_over: ledger.failed_over.clone(),
+            rejected: ledger.tenant_rejected.values().sum(),
             shards,
             totals,
             tenants: by_name.into_values().collect(),
         }
     }
 
-    /// Orderly teardown: drain and shut every shard down (all of them,
-    /// even past the first failure — the first error is surfaced).
+    /// Orderly teardown: drain and shut EVERY shard down, even past the
+    /// first failure. Every failing shard's error is aggregated into
+    /// the returned message (shard index + cause each), so a
+    /// multi-shard teardown problem is never silently narrowed to its
+    /// first symptom.
     pub fn shutdown(self) -> Result<()> {
-        let mut first: Option<Error> = None;
-        for shard in self.shards {
+        let mut failures: Vec<String> = Vec::new();
+        for (i, shard) in self.shards.into_iter().enumerate() {
             if let Err(e) = shard.engine.shutdown() {
-                first.get_or_insert(e);
+                failures.push(format!("shard {i}: {e}"));
             }
         }
-        match first {
-            Some(e) => Err(e),
-            None => Ok(()),
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Coordinator(format!(
+                "fleet shutdown: {} shard(s) failed teardown: {}",
+                failures.len(),
+                failures.join("; ")
+            )))
         }
     }
 }
@@ -503,7 +918,10 @@ impl Fleet {
 /// per-job rows of every job submitted under that tenant name. The
 /// disposition columns mirror [`JobStats`](crate::engine::JobStats);
 /// queue-wait percentiles come from the merged [`WaitHist`] (within-2×
-/// upper bounds — see [`WaitHist::quantile_us`]).
+/// upper bounds — see [`WaitHist::quantile_us`]). `failed_over` and
+/// `rejected` come from the fleet's resilience ledger (the engines
+/// never see those events) and partition the fleet totals the same way
+/// the disposition columns do.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TenantStats {
     pub tenant: String,
@@ -515,6 +933,10 @@ pub struct TenantStats {
     pub deadline_exceeded: u64,
     pub retried_ok: u64,
     pub retries: u64,
+    /// Jobs moved off a collapsed shard onto a healthy one.
+    pub failed_over: u64,
+    /// Submissions rejected at the front door (`Error::Overloaded`).
+    pub rejected: u64,
     pub queue_wait_nanos: u64,
     pub queue_wait_hist: WaitHist,
 }
@@ -532,11 +954,13 @@ impl TenantStats {
 }
 
 /// Fleet-wide accounting snapshot: per-shard engine stats, their
-/// additive roll-up, and per-tenant rows (sorted by tenant name). The
-/// partition invariants — enforced by `tests/fleet_soak.rs` — are that
-/// each shard's per-job rows partition that shard's totals, the shard
-/// totals partition `totals`, and the tenant rows partition `totals`
-/// again along every disposition column.
+/// additive roll-up, per-tenant rows (sorted by tenant name), per-shard
+/// health, and the resilience ledger. The partition invariants —
+/// enforced by `tests/fleet_soak.rs` and `tests/fleet_resilience.rs` —
+/// are that each shard's per-job rows partition that shard's totals,
+/// the shard totals partition `totals`, the tenant rows partition
+/// `totals` again along every disposition column, and the tenant
+/// `failed_over`/`rejected` columns partition the ledger totals.
 #[derive(Debug, Clone)]
 pub struct FleetStats {
     /// One [`EngineStats`] per shard, in shard order.
@@ -548,6 +972,19 @@ pub struct FleetStats {
     pub totals: EngineStats,
     /// Per-tenant rows, sorted by tenant name.
     pub tenants: Vec<TenantStats>,
+    /// Breaker state per shard, in shard order, at snapshot time.
+    pub health: Vec<Health>,
+    /// Failovers per SOURCE shard, in shard order.
+    pub failed_over: Vec<u64>,
+    /// Submissions rejected at the front door, fleet-wide.
+    pub rejected: u64,
+}
+
+impl FleetStats {
+    /// Total failovers across all source shards.
+    pub fn total_failed_over(&self) -> u64 {
+        self.failed_over.iter().sum()
+    }
 }
 
 impl std::fmt::Display for FleetStats {
@@ -557,7 +994,7 @@ impl std::fmt::Display for FleetStats {
             f,
             "fleet: {} shards | {} jobs | {} boxes | {} dropped | \
              {} failed | {} quarantined | {} past deadline | \
-             queue wait {:.1} ms",
+             {} failed over | {} rejected | queue wait {:.1} ms",
             self.shards.len(),
             t.jobs,
             t.boxes,
@@ -565,12 +1002,14 @@ impl std::fmt::Display for FleetStats {
             t.failed,
             t.quarantined,
             t.deadline_exceeded,
+            self.total_failed_over(),
+            self.rejected,
             t.queue_wait_nanos as f64 / 1e6
         )?;
         writeln!(
             f,
             "{:<16} {:>5} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} \
-             {:>7} {:>7}",
+             {:>6} {:>6} {:>7} {:>7}",
             "tenant",
             "jobs",
             "boxes",
@@ -580,6 +1019,8 @@ impl std::fmt::Display for FleetStats {
             "dline",
             "retok",
             "retry",
+            "fover",
+            "rej",
             "p50us",
             "p99us"
         )?;
@@ -587,7 +1028,7 @@ impl std::fmt::Display for FleetStats {
             writeln!(
                 f,
                 "{:<16} {:>5} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} \
-                 {:>7} {:>7}",
+                 {:>6} {:>6} {:>7} {:>7}",
                 row.tenant,
                 row.jobs,
                 row.boxes,
@@ -597,6 +1038,8 @@ impl std::fmt::Display for FleetStats {
                 row.deadline_exceeded,
                 row.retried_ok,
                 row.retries,
+                row.failed_over,
+                row.rejected,
                 row.p50_wait_us(),
                 row.p99_wait_us()
             )?;
@@ -604,15 +1047,17 @@ impl std::fmt::Display for FleetStats {
         for (i, s) in self.shards.iter().enumerate() {
             writeln!(
                 f,
-                "shard {i}: {} jobs | {} boxes | {} dropped | {} failed \
-                 | {} quarantined | {} past deadline | queue wait \
-                 {:.1} ms",
+                "shard {i} [{}]: {} jobs | {} boxes | {} dropped | \
+                 {} failed | {} quarantined | {} past deadline | \
+                 {} failed over | queue wait {:.1} ms",
+                self.health.get(i).copied().unwrap_or(Health::Healthy),
                 s.jobs,
                 s.boxes,
                 s.dropped,
                 s.failed,
                 s.quarantined,
                 s.deadline_exceeded,
+                self.failed_over.get(i).copied().unwrap_or(0),
                 s.queue_wait_nanos as f64 / 1e6
             )?;
         }
@@ -702,10 +1147,15 @@ mod tests {
             stats.tenants.iter().map(|t| t.boxes).sum::<u64>(),
             stats.totals.boxes
         );
+        // No resilience events in a clean run.
+        assert_eq!(stats.total_failed_over(), 0);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.health, vec![Health::Healthy, Health::Healthy]);
         let text = format!("{stats}");
         assert!(text.contains("fleet: 2 shards"), "{text}");
         assert!(text.contains("alpha"), "{text}");
-        assert!(text.contains("shard 1:"), "{text}");
+        assert!(text.contains("shard 1 [healthy]:"), "{text}");
+        assert!(text.contains("0 failed over | 0 rejected"), "{text}");
         fleet.shutdown().unwrap();
     }
 
@@ -746,6 +1196,9 @@ mod tests {
         );
         let msg = format!("{}", err.err().unwrap());
         assert!(msg.contains("no shard plans pipeline 'anomaly'"), "{msg}");
+        // A pipeline mismatch is a configuration error, not an
+        // admission rejection: nothing lands in the rejected column.
+        assert_eq!(fleet.stats().rejected, 0);
         // The constraint is satisfiable when a shard does plan it.
         let ok = fleet.submit_batch(
             clip(&cfg, 1),
@@ -753,6 +1206,97 @@ mod tests {
             JobOptions::default(),
         );
         ok.unwrap().wait().unwrap();
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn saturated_fleet_rejects_at_the_front_door() {
+        let cfg = RunConfig {
+            max_inflight: 1,
+            ..tiny_cfg(1)
+        };
+        let fleet = Fleet::from_config(cfg.clone()).unwrap();
+        let a = fleet
+            .submit_batch(
+                clip(&cfg, 1),
+                Placement::tenant("greedy"),
+                JobOptions::default(),
+            )
+            .unwrap();
+        // One outstanding handle saturates the one-shard fleet.
+        let err = fleet
+            .submit_batch(
+                clip(&cfg, 2),
+                Placement::tenant("greedy"),
+                JobOptions::default(),
+            )
+            .err()
+            .unwrap();
+        assert!(
+            matches!(err, Error::Overloaded(_)),
+            "expected Overloaded, got {err}"
+        );
+        assert!(format!("{err}").contains("max-inflight"), "{err}");
+        a.wait().unwrap();
+        // The slot is free again once the handle resolves.
+        let b = fleet
+            .submit_batch(
+                clip(&cfg, 3),
+                Placement::tenant("greedy"),
+                JobOptions::default(),
+            )
+            .unwrap();
+        b.wait().unwrap();
+        let stats = fleet.stats();
+        assert_eq!(stats.rejected, 1);
+        let row =
+            stats.tenants.iter().find(|t| t.tenant == "greedy").unwrap();
+        assert_eq!(row.rejected, 1);
+        assert_eq!(row.jobs, 2, "rejected submission never became a job");
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dropped_handle_releases_its_pressure_slot() {
+        let cfg = tiny_cfg(2);
+        let fleet = Fleet::from_config(cfg.clone()).unwrap();
+        let a = fleet
+            .submit_batch(
+                clip(&cfg, 1),
+                Placement::default(),
+                JobOptions::default(),
+            )
+            .unwrap();
+        let a_shard = a.shard();
+        assert_eq!(fleet.shard_pressure(a_shard), 1);
+        // Detach WITHOUT waiting: the guard must release the slot even
+        // though the job is still running on the shard.
+        drop(a);
+        assert_eq!(fleet.shard_pressure(a_shard), 0);
+        assert_eq!(fleet.shard_pressure(1 - a_shard), 0);
+        // Routing recovers the shard as a target: a deadline-free
+        // submission ranks by pressure first, and with both shards at
+        // pressure 0 the tie falls to shard 0 = the detached shard or
+        // its sibling deterministically by index.
+        let b = fleet
+            .submit_batch(
+                clip(&cfg, 2),
+                Placement::default(),
+                JobOptions::default(),
+            )
+            .unwrap();
+        let c = fleet
+            .submit_batch(
+                clip(&cfg, 3),
+                Placement::default(),
+                JobOptions::default(),
+            )
+            .unwrap();
+        // With the dropped slot released, the two live submissions
+        // spread across BOTH shards (the detached one included).
+        assert_ne!(b.shard(), c.shard());
+        b.wait().unwrap();
+        c.wait().unwrap();
         fleet.shutdown().unwrap();
     }
 }

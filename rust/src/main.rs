@@ -8,7 +8,9 @@
 //!                [--size 256] [--frames 64] [--box 32x32x8] [--workers N]
 //!                [--intra-threads N] [--isa auto|scalar|portable|sse2|avx2]
 //!                [--markers M] [--queue-policy fifo|rr|drr|laxity]
-//!                [--queue N] [--shards N]
+//!                [--queue N] [--shards N] [--max-inflight N]
+//!                [--failover on|off]
+//!                [--breaker degrade=N,down=N,probe-ms=MS]
 //!                [--faults seed=S,all=P|site=P,...]
 //!                [--calibrate true [--calibration-out FILE]]
 //!                [--replan-margin M]
@@ -53,10 +55,11 @@
 //! `docs/COST_MODEL.md`.
 //!
 //! `--faults seed=S,all=P` (or per-site rates: `extract`, `stage`,
-//! `exec-panic`, `exec-error`, `route`) arms the seeded fault-injection
-//! harness for chaos testing: equal seeds inject the exact same faults.
-//! The `KFUSE_FAULTS` env var carries the same syntax and applies when
-//! the flag (and config) left the plan unset.
+//! `exec-panic`, `exec-error`, `route`; fleet-level `shard-down` is
+//! opt-in by name and NOT covered by `all=`) arms the seeded
+//! fault-injection harness for chaos testing: equal seeds inject the
+//! exact same faults. The `KFUSE_FAULTS` env var carries the same
+//! syntax and applies when the flag (and config) left the plan unset.
 //!
 //! `run` and `serve` build one persistent [`kfuse::engine::Engine`] from
 //! the parsed flags and submit the clip as a job against it: manifest
@@ -71,7 +74,13 @@
 //! `--shards N` (N > 1) routes `run`/`serve` through a
 //! [`kfuse::fleet::Fleet`] front over N engines — one synthetic job per
 //! shard, each under its own tenant — and prints the fleet's per-tenant
-//! stats table instead of a single session line. Each
+//! stats table instead of a single session line. The fleet's resilience
+//! knobs ride along: `--max-inflight N` bounds outstanding submissions
+//! per shard (0 = unbounded; a saturated or deadline-infeasible fleet
+//! rejects at submit with an `overloaded:` error), `--failover on|off`
+//! toggles transparent cross-shard resubmission of shard-level
+//! failures (default on), and `--breaker degrade=N,down=N,probe-ms=MS`
+//! tunes the per-shard health circuit breaker. Each
 //! command prints the session's cumulative `engine.stats()` line at the
 //! end (including per-job rows and the compile count that settles at
 //! build and must not grow per job).
@@ -168,6 +177,24 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.queue_depth = args.usize_or("queue", cfg.queue_depth)?;
     cfg.ingest_depth = args.usize_or("ingest-depth", cfg.ingest_depth)?;
     cfg.shards = args.usize_or("shards", cfg.shards)?;
+    cfg.max_inflight = args.usize_or("max-inflight", cfg.max_inflight)?;
+    if let Some(v) = args.get("failover") {
+        cfg.failover = match v {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => {
+                return Err(Error::Config(format!(
+                    "--failover: expected on|off, got '{v}'"
+                )))
+            }
+        };
+    }
+    if let Some(b) = args.get("breaker") {
+        // Per-shard health circuit breaker, e.g.
+        // --breaker degrade=2,down=4,probe-ms=250 (missing keys keep
+        // their defaults; validate() re-checks the thresholds).
+        cfg.breaker = kfuse::config::BreakerConfig::parse(b)?;
+    }
     // --policy is the short alias; an explicit --queue-policy wins.
     if let Some(p) = args.get("queue-policy").or_else(|| args.get("policy"))
     {
@@ -486,11 +513,16 @@ fn main() {
                  --policy), --queue N (per-job lane depth), \
                  --ingest-depth N (serve staging)\n\
                  fleet: --shards N (route run/serve through a fleet \
-                 front over N engines; per-tenant stats table)\n\
+                 front over N engines; per-tenant stats table), \
+                 --max-inflight N (admission bound per shard, 0 = \
+                 unbounded), --failover on|off (cross-shard retry of \
+                 shard failures), --breaker degrade=N,down=N,probe-ms=MS \
+                 (per-shard health circuit breaker)\n\
                  vector layer: --isa auto|scalar|portable|sse2|avx2 \
                  (fused CPU lane backend; all bit-identical)\n\
                  chaos: --faults seed=S,all=P (or per-site \
-                 extract|stage|exec-panic|exec-error|route=P; env \
+                 extract|stage|exec-panic|exec-error|route=P; \
+                 fleet-level shard-down=P is opt-in by name; env \
                  KFUSE_FAULTS)\n\
                  self-tuning: --calibrate true (probe + fit + replan at \
                  startup, cpu backend; --calibration-out FILE for the \

@@ -157,6 +157,18 @@ fn assert_exact_partition(stats: &FleetStats, label: &str) {
         tsum(|t| t.queue_wait_hist.total()),
         "{label}: wait-histogram mass"
     );
+    // The resilience ledger partitions the same way: tenant failover
+    // and rejection columns sum to the fleet-level counters.
+    assert_eq!(
+        stats.total_failed_over(),
+        tsum(|t| t.failed_over),
+        "{label}: failed_over"
+    );
+    assert_eq!(
+        stats.rejected,
+        tsum(|t| t.rejected),
+        "{label}: rejected"
+    );
     // Shard stats partition the same totals.
     let ssum = |f: fn(&kfuse::engine::EngineStats) -> u64| {
         stats.shards.iter().map(f).sum::<u64>()
